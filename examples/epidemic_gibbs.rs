@@ -1,0 +1,64 @@
+//! Epidemic inference: particle Gibbs on the vector-borne-disease model.
+//!
+//! Demonstrates the out-of-tree usage pattern the paper calls out for VBD:
+//! between Gibbs iterations a single reference trajectory is deep-copied
+//! **eagerly**, while within each conditional SMC sweep resampling uses
+//! lazy copies. Reports per-iteration evidence and the posterior reporting
+//! rate recovered from the marginalized gamma–Poisson accumulator.
+//!
+//! ```sh
+//! cargo run --release --example epidemic_gibbs
+//! ```
+
+use lazycow::bench::human_bytes;
+use lazycow::config::{Model, RunConfig, Task};
+use lazycow::heap::{CopyMode, Heap};
+use lazycow::models::{Vbd, DATA_SEED};
+use lazycow::pool::ThreadPool;
+use lazycow::smc::{run_particle_gibbs, StepCtx};
+
+fn main() {
+    let t = 120;
+    let model = Vbd::synthetic(t, DATA_SEED);
+    let peak_week = model
+        .obs
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, c)| **c)
+        .unwrap();
+    println!(
+        "synthetic dengue-like outbreak: {} weeks, peak {} cases in week {}",
+        t, peak_week.1, peak_week.0
+    );
+
+    let pool = ThreadPool::new(0);
+    let ctx = StepCtx {
+        pool: &pool,
+        kalman: None,
+    };
+    let mut cfg = RunConfig::for_model(Model::Vbd, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 256;
+    cfg.n_steps = t;
+    cfg.pg_iterations = 4;
+
+    let mut heap = Heap::new(CopyMode::LazySro);
+    let results = run_particle_gibbs(&model, &cfg, &mut heap, &ctx);
+    println!("\nparticle Gibbs ({} iterations, N={}):", results.len(), cfg.n_particles);
+    for (i, r) in results.iter().enumerate() {
+        println!(
+            "  iter {}: log-evidence {:.2}, E[I_h + rho] = {:.3}, wall {:.2}s, peak {}",
+            i,
+            r.log_evidence,
+            r.posterior_mean,
+            r.wall_s,
+            human_bytes(r.peak_bytes as f64)
+        );
+    }
+    println!(
+        "\nheap after run: {} (eager copies = the inter-iteration reference copies)",
+        heap.metrics.summary()
+    );
+    assert!(heap.metrics.eager_copies > 0);
+    assert_eq!(heap.live_objects(), 0);
+    println!("done.");
+}

@@ -1,0 +1,76 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Runs the Rao–Blackwellized particle filter (RBPF) at a realistic scale
+//! in all three copy configurations, with the batched Kalman generation
+//! executed through the AOT-compiled XLA artifact (the L1 Pallas kernel)
+//! when available. Proves the layers compose: Rust coordinator + lazy COW
+//! heap ↔ PJRT runtime ↔ jax/Pallas-lowered HLO — and reproduces the
+//! paper's headline contrast (lazy ≪ eager in time and peak memory, with
+//! identical inference output).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example rbpf_filter
+//! ```
+
+use lazycow::bench::human_bytes;
+use lazycow::config::{Model, RunConfig, Task};
+use lazycow::heap::{CopyMode, Heap};
+use lazycow::models::run_model;
+use lazycow::pool::ThreadPool;
+use lazycow::runtime::{BatchKalman, XlaRuntime};
+use lazycow::smc::StepCtx;
+
+fn main() {
+    let n = 512;
+    let t = 200;
+
+    let pool = ThreadPool::new(0);
+    let rt = XlaRuntime::cpu("artifacts").expect("PJRT CPU client");
+    let kalman = if rt.has_artifact("kalman3") {
+        println!(
+            "PJRT platform: {} — using compiled kalman3 artifact",
+            rt.platform()
+        );
+        Some(BatchKalman::load(&rt).expect("load kalman3"))
+    } else {
+        println!("artifacts not built (run `make artifacts`) — CPU oracle path");
+        None
+    };
+    let ctx = StepCtx {
+        pool: &pool,
+        kalman: kalman.as_ref(),
+    };
+
+    println!("\nRBPF, N={n}, T={t}, bootstrap filter, resampling every step\n");
+    println!(
+        "{:<10} {:>12} {:>14} {:>12} {:>10} {:>10}",
+        "mode", "wall(s)", "log-evidence", "peak mem", "copies", "objects@T"
+    );
+    let mut outputs = Vec::new();
+    for mode in CopyMode::ALL {
+        let mut cfg = RunConfig::for_model(Model::Rbpf, Task::Inference, mode);
+        cfg.n_particles = n;
+        cfg.n_steps = t;
+        cfg.seed = 20200401;
+        let mut heap = Heap::new(mode);
+        let r = run_model(&cfg, &mut heap, &ctx);
+        let copies = heap.metrics.lazy_copies + heap.metrics.eager_copies;
+        let last_objs = r.series.last().map(|s| s.live_objects).unwrap_or(0);
+        println!(
+            "{:<10} {:>12.3} {:>14.4} {:>12} {:>10} {:>10}",
+            mode.name(),
+            r.wall_s,
+            r.log_evidence,
+            human_bytes(r.peak_bytes as f64),
+            copies,
+            last_objs
+        );
+        outputs.push(r.log_evidence);
+        assert_eq!(heap.live_objects(), 0, "heap fully reclaimed");
+    }
+
+    // The paper's §4 output check: identical results in every mode.
+    assert_eq!(outputs[0].to_bits(), outputs[1].to_bits());
+    assert_eq!(outputs[1].to_bits(), outputs[2].to_bits());
+    println!("\noutput identical across configurations ✓ (log-evidence matches bitwise)");
+}

@@ -1,0 +1,68 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Run once at build time (`make artifacts`); the Rust binary is then
+self-contained. The interchange format is HLO **text**, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly.
+
+Artifacts (batch size BATCH must match `rust/src/runtime/mod.rs::BATCH`):
+  kalman3.hlo.txt — batched RBPF Kalman generation (3-tuple output)
+  logpdf.hlo.txt  — batched diagonal-Gaussian weighting (1-tuple output)
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH = 256  # keep in sync with rust/src/runtime/mod.rs
+DZ = 3
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_kalman3() -> str:
+    spec_m = jax.ShapeDtypeStruct((BATCH, DZ), jnp.float32)
+    spec_p = jax.ShapeDtypeStruct((BATCH, DZ, DZ), jnp.float32)
+    spec_y = jax.ShapeDtypeStruct((BATCH,), jnp.float32)
+    lowered = jax.jit(model.rbpf_generation).lower(spec_m, spec_p, spec_y)
+    return to_hlo_text(lowered)
+
+
+def lower_logpdf() -> str:
+    spec = jax.ShapeDtypeStruct((BATCH,), jnp.float32)
+    lowered = jax.jit(model.weight_generation).lower(spec, spec, spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+        help="artifact output directory",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, fn in [("kalman3", lower_kalman3), ("logpdf", lower_logpdf)]:
+        text = fn()
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

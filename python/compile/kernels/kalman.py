@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: batched 3-D Kalman predict+update+weight.
+
+The RBPF's per-generation numeric hot spot, tiled over the particle
+dimension. Each grid step loads a (BLOCK_N, DZ) block of means and a
+(BLOCK_N, DZ, DZ) block of covariances into VMEM, runs the full
+predict → gain → update → log-likelihood chain in registers/VMEM, and
+writes the three outputs — one HBM round trip per particle block.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the per-particle
+matrices are tiny (3×3), so the kernel batches them into (BLOCK_N, DZ*DZ)
+panels where the arithmetic is pure VPU elementwise work with DZ-unrolled
+contractions — the MXU is not the right unit at DZ=3; the win is VMEM
+residency of the whole chain. `interpret=True` is required for CPU PJRT
+execution (Mosaic custom-calls cannot run on the CPU plugin).
+
+Must match `ref.kalman3_ref` exactly (same constants, same order of
+operations up to float association).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DZ = ref.DZ
+BLOCK_N = 128
+
+
+def _kernel(m_ref, p_ref, y_ref, om_ref, op_ref, oll_ref):
+    # Pallas kernels may not capture array constants; at DZ=3 the natural
+    # formulation is the fully unrolled contraction with *scalar* model
+    # constants (Python floats trace as immediates).
+    a = [[float(ref.A[i, j]) for j in range(DZ)] for i in range(DZ)]
+    q = [[float(ref.Q[i, j]) for j in range(DZ)] for i in range(DZ)]
+    c = [float(ref.C[j]) for j in range(DZ)]
+    r = float(ref.R)
+
+    m = [m_ref[:, j] for j in range(DZ)]                  # DZ × [B]
+    p = [[p_ref[:, i, j] for j in range(DZ)] for i in range(DZ)]
+    y = y_ref[...]                                        # [B]
+
+    # Predict: mp = A m ; pp = A P A^T + Q.
+    mp = [sum(a[i][j] * m[j] for j in range(DZ)) for i in range(DZ)]
+    ap = [
+        [sum(a[i][j] * p[j][k] for j in range(DZ)) for k in range(DZ)]
+        for i in range(DZ)
+    ]
+    pp = [
+        [sum(ap[i][k] * a[l][k] for k in range(DZ)) + q[i][l] for l in range(DZ)]
+        for i in range(DZ)
+    ]
+
+    # Scalar-observation update.
+    pct = [sum(pp[i][j] * c[j] for j in range(DZ)) for i in range(DZ)]
+    s = sum(pct[i] * c[i] for i in range(DZ)) + r         # [B]
+    k = [pct[i] / s for i in range(DZ)]
+    cm = sum(c[i] * mp[i] for i in range(DZ))
+    innov = y - cm
+    for i in range(DZ):
+        om_ref[:, i] = mp[i] + k[i] * innov
+        for l in range(DZ):
+            op_ref[:, i, l] = pp[i][l] - s * k[i] * k[l]
+    oll_ref[...] = -0.5 * (innov * innov / s + jnp.log(s) + ref.LN_2PI)
+
+
+def kalman3(means, covs, y, block_n: int = BLOCK_N, interpret: bool = True):
+    """Batched Kalman step as a Pallas call. Shapes: [N,DZ], [N,DZ,DZ], [N]."""
+    n = means.shape[0]
+    assert n % block_n == 0, f"N={n} must be a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, DZ), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, DZ, DZ), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, DZ), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, DZ, DZ), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, DZ), jnp.float32),
+            jax.ShapeDtypeStruct((n, DZ, DZ), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(means, covs, y)
+
+
+def vmem_bytes(block_n: int = BLOCK_N) -> int:
+    """Estimated VMEM footprint of one grid step (f32): in + out blocks."""
+    per_particle = DZ + DZ * DZ + 1
+    return 2 * block_n * per_particle * 4

@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: batched diagonal-Gaussian log-density (weighting).
+
+Used by the MOT observation weighting path and as the minimal smoke
+artifact for the Rust runtime. Elementwise over the particle dimension,
+tiled for VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_N = 256
+
+
+def _kernel(x_ref, m_ref, sd_ref, o_ref):
+    x = x_ref[...]
+    m = m_ref[...]
+    sd = sd_ref[...]
+    z = (x - m) / sd
+    o_ref[...] = -0.5 * z * z - jnp.log(sd) - 0.5 * ref.LN_2PI
+
+
+def logpdf(x, mean, sd, block_n: int = BLOCK_N, interpret: bool = True):
+    """Elementwise normal log-pdf as a Pallas call. Shapes: [N] each."""
+    n = x.shape[0]
+    assert n % block_n == 0, f"N={n} must be a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    spec = pl.BlockSpec((block_n,), lambda i: (i,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(x, mean, sd)

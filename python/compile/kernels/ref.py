@@ -1,0 +1,53 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: the pytest suite asserts the Pallas
+kernels (interpret mode) match these to tight tolerance, and the Rust side
+checks its f64 CPU oracle against the compiled artifacts.
+
+Model constants MUST match `rust/src/runtime/kalman.rs::KalmanParams::
+rbpf_default()`.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+DZ = 3
+
+# The RBPF linear-substate parameters (keep in sync with the Rust side).
+A = np.array(
+    [[0.8, 0.1, 0.0], [-0.1, 0.8, 0.1], [0.0, -0.1, 0.8]], dtype=np.float32
+)
+Q = np.eye(DZ, dtype=np.float32) * 0.1
+C = np.array([1.0, 0.5, 0.25], dtype=np.float32)  # 1x3 observation row
+R = np.float32(0.5)
+
+LN_2PI = float(np.log(2.0 * np.pi))
+
+
+def kalman3_ref(means, covs, y):
+    """Batched predict + scalar-observation update + log-likelihood.
+
+    means: [N, DZ], covs: [N, DZ, DZ], y: [N] (same observation broadcast
+    by the caller). Returns (new_means, new_covs, ll).
+    """
+    a = jnp.asarray(A)
+    q = jnp.asarray(Q)
+    c = jnp.asarray(C)
+    # Predict.
+    mp = means @ a.T                                   # [N, DZ]
+    pp = jnp.einsum("ij,njk,lk->nil", a, covs, a) + q  # [N, DZ, DZ]
+    # Scalar-observation update.
+    pct = pp @ c                                       # [N, DZ]
+    s = pct @ c + R                                    # [N]
+    k = pct / s[:, None]                               # [N, DZ]
+    innov = y - mp @ c                                 # [N]
+    new_means = mp + k * innov[:, None]
+    new_covs = pp - s[:, None, None] * (k[:, :, None] * k[:, None, :])
+    ll = -0.5 * (innov * innov / s + jnp.log(s) + LN_2PI)
+    return new_means, new_covs, ll
+
+
+def logpdf_ref(x, mean, sd):
+    """Elementwise normal log-density."""
+    z = (x - mean) / sd
+    return -0.5 * z * z - jnp.log(sd) - 0.5 * LN_2PI

@@ -1,0 +1,34 @@
+"""L2: the JAX numeric step functions lowered for the Rust coordinator.
+
+These are the tensorizable portions of the paper's evaluation models: the
+RBPF's batched linear-substate generation (calling the L1 Pallas Kalman
+kernel) and the generic batched weighting density. The dynamic,
+pointer-rich portions (state chains, stacks, ragged track arrays, delayed
+sampling accumulators) live in the Rust heap; these functions see only the
+flat numeric views the coordinator extracts per generation.
+
+Lowered once by `aot.py`; never imported at inference time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import kalman as kalman_kernel
+from .kernels import logpdf as logpdf_kernel
+
+
+def rbpf_generation(means, covs, y):
+    """One RBPF generation over the particle batch: Kalman predict +
+    scalar-observation update + marginal log-likelihood (the particle
+    weight's linear-substate factor). `y` is the broadcast observation.
+
+    means: [N, 3] f32; covs: [N, 3, 3] f32; y: [N] f32.
+    Returns (new_means, new_covs, ll) — a stable output order for the
+    Rust runtime.
+    """
+    new_means, new_covs, ll = kalman_kernel.kalman3(means, covs, y)
+    return (new_means, new_covs, jnp.asarray(ll))
+
+
+def weight_generation(x, mean, sd):
+    """Batched diagonal-Gaussian weighting: [N] -> [N] log-densities."""
+    return (logpdf_kernel.logpdf(x, mean, sd),)

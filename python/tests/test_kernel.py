@@ -1,0 +1,131 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Sweeps shapes, block sizes, and value regimes (a hand-rolled
+hypothesis-style sweep — network-free environment), asserting the Pallas
+kernels in interpret mode match the pure-jnp oracles.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import kalman, logpdf, ref
+
+
+def _rand_spd(rng, n, dz, scale=1.0):
+    """Batch of well-conditioned SPD matrices."""
+    m = rng.standard_normal((n, dz, dz)).astype(np.float32) * scale
+    return (m @ np.transpose(m, (0, 2, 1)) + np.eye(dz, dtype=np.float32)).astype(
+        np.float32
+    )
+
+
+SHAPES = [128, 256, 512, 1024]
+BLOCKS = [64, 128, 256]
+SEEDS = [0, 1, 2]
+
+
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("block", BLOCKS)
+def test_kalman_matches_ref_shapes(n, block):
+    if n % block != 0:
+        pytest.skip("block must divide n")
+    rng = np.random.default_rng(7)
+    means = rng.standard_normal((n, ref.DZ)).astype(np.float32)
+    covs = _rand_spd(rng, n, ref.DZ)
+    y = rng.standard_normal(n).astype(np.float32)
+    got_m, got_p, got_ll = kalman.kalman3(means, covs, y, block_n=block)
+    want_m, want_p, want_ll = ref.kalman3_ref(means, covs, y)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_ll, want_ll, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("scale", [0.1, 1.0, 5.0])
+def test_kalman_value_regimes(seed, scale):
+    rng = np.random.default_rng(seed)
+    n = 256
+    means = (rng.standard_normal((n, ref.DZ)) * scale).astype(np.float32)
+    covs = _rand_spd(rng, n, ref.DZ, scale=scale)
+    y = (rng.standard_normal(n) * scale).astype(np.float32)
+    got_m, got_p, got_ll = kalman.kalman3(means, covs, y)
+    want_m, want_p, want_ll = ref.kalman3_ref(means, covs, y)
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_p, want_p, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_ll, want_ll, rtol=1e-4, atol=1e-4)
+
+
+def test_kalman_reduces_uncertainty_and_moves_mean():
+    # Semantic sanity on the kernel itself (not just agreement).
+    n = 128
+    means = np.zeros((n, ref.DZ), dtype=np.float32)
+    covs = np.tile(np.eye(ref.DZ, dtype=np.float32) * 4.0, (n, 1, 1))
+    y = np.full(n, 2.0, dtype=np.float32)
+    got_m, got_p, got_ll = kalman.kalman3(means, covs, y, block_n=128)
+    # Posterior mean moved toward the (positive) observation along C.
+    assert np.all(np.asarray(got_m)[:, 0] > 0.0)
+    # Trace shrank vs the predicted covariance trace.
+    pred_tr = np.trace(ref.A @ covs[0] @ ref.A.T + ref.Q)
+    post_tr = np.trace(np.asarray(got_p)[0])
+    assert post_tr < pred_tr
+    assert np.all(np.isfinite(np.asarray(got_ll)))
+
+
+@pytest.mark.parametrize("n", [256, 512, 2048])
+def test_logpdf_matches_ref(n):
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(n).astype(np.float32) * 3.0
+    mean = rng.standard_normal(n).astype(np.float32)
+    sd = (rng.random(n).astype(np.float32) + 0.1) * 2.0
+    got = logpdf.logpdf(x, mean, sd)
+    want = ref.logpdf_ref(x, mean, sd)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_logpdf_matches_scipy_style_closed_form():
+    # Independent closed-form check (not via ref.py).
+    x = np.array([0.0, 1.0, -2.0, 0.5] * 64, dtype=np.float32)
+    got = np.asarray(logpdf.logpdf(x, np.zeros_like(x), np.ones_like(x)))
+    want = -0.5 * x * x - 0.5 * np.log(2 * np.pi)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_kernels_jit_and_lower():
+    # The L2 functions must trace and lower (what aot.py relies on).
+    from compile import model
+
+    n, dz = 256, ref.DZ
+    lowered = jax.jit(model.rbpf_generation).lower(
+        jax.ShapeDtypeStruct((n, dz), jnp.float32),
+        jax.ShapeDtypeStruct((n, dz, dz), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    text = str(lowered.compiler_ir("stablehlo"))
+    assert "func" in text
+
+    lowered = jax.jit(model.weight_generation).lower(
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    assert "func" in str(lowered.compiler_ir("stablehlo"))
+
+
+def test_vmem_budget():
+    # The kernel's working set must fit comfortably in a 16 MiB VMEM.
+    assert kalman.vmem_bytes(128) < 16 * 1024 * 1024
+    assert kalman.vmem_bytes(1024) < 16 * 1024 * 1024
+
+
+def test_constants_match_rust_side():
+    """Guard the cross-language contract: these exact values are hardcoded
+    in rust/src/runtime/kalman.rs::KalmanParams::rbpf_default()."""
+    np.testing.assert_allclose(
+        ref.A, [[0.8, 0.1, 0.0], [-0.1, 0.8, 0.1], [0.0, -0.1, 0.8]]
+    )
+    np.testing.assert_allclose(ref.Q, np.eye(3) * 0.1)
+    np.testing.assert_allclose(ref.C, [1.0, 0.5, 0.25])
+    assert ref.R == np.float32(0.5)

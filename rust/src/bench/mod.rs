@@ -1,0 +1,182 @@
+//! Benchmark harness (criterion is unavailable offline — and the paper
+//! reports medians + interquartile ranges over repetitions, which this
+//! harness produces directly).
+//!
+//! [`Bench`] runs a closure for a number of repetitions, measuring wall
+//! time and the process peak RSS delta, and emits aligned tables and TSV
+//! for downstream plotting.
+
+use crate::stats::median_iqr;
+use std::time::Instant;
+
+/// One measured repetition.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub seconds: f64,
+    /// Peak heap footprint reported by the workload (bytes), if any.
+    pub peak_bytes: Option<f64>,
+}
+
+/// Aggregated result of a benchmark cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub name: String,
+    pub reps: usize,
+    pub time_median: f64,
+    pub time_q1: f64,
+    pub time_q3: f64,
+    pub mem_median: Option<f64>,
+    pub mem_q1: Option<f64>,
+    pub mem_q3: Option<f64>,
+}
+
+impl CellResult {
+    pub fn from_samples(name: &str, samples: &[Sample]) -> Self {
+        let times: Vec<f64> = samples.iter().map(|s| s.seconds).collect();
+        let (tm, t1, t3) = median_iqr(&times);
+        let mems: Vec<f64> = samples.iter().filter_map(|s| s.peak_bytes).collect();
+        let (mm, m1, m3) = if mems.len() == samples.len() && !mems.is_empty() {
+            let (a, b, c) = median_iqr(&mems);
+            (Some(a), Some(b), Some(c))
+        } else {
+            (None, None, None)
+        };
+        CellResult {
+            name: name.to_string(),
+            reps: samples.len(),
+            time_median: tm,
+            time_q1: t1,
+            time_q3: t3,
+            mem_median: mm,
+            mem_q1: m1,
+            mem_q3: m3,
+        }
+    }
+
+    pub fn tsv_header() -> &'static str {
+        "cell\treps\ttime_median_s\ttime_q1_s\ttime_q3_s\tmem_median_b\tmem_q1_b\tmem_q3_b"
+    }
+
+    pub fn tsv_row(&self) -> String {
+        format!(
+            "{}\t{}\t{:.6}\t{:.6}\t{:.6}\t{}\t{}\t{}",
+            self.name,
+            self.reps,
+            self.time_median,
+            self.time_q1,
+            self.time_q3,
+            self.mem_median.map(|v| format!("{v:.0}")).unwrap_or_default(),
+            self.mem_q1.map(|v| format!("{v:.0}")).unwrap_or_default(),
+            self.mem_q3.map(|v| format!("{v:.0}")).unwrap_or_default(),
+        )
+    }
+
+    pub fn pretty_row(&self) -> String {
+        let mem = match (self.mem_median, self.mem_q1, self.mem_q3) {
+            (Some(m), Some(a), Some(b)) => format!(
+                "{:>10} [{:>10}, {:>10}]",
+                human_bytes(m),
+                human_bytes(a),
+                human_bytes(b)
+            ),
+            _ => "         -".to_string(),
+        };
+        format!(
+            "{:<36} {:>9.3}s [{:>8.3}s, {:>8.3}s]   {}",
+            self.name, self.time_median, self.time_q1, self.time_q3, mem
+        )
+    }
+}
+
+/// Format bytes with binary units.
+pub fn human_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0}{}", UNITS[u])
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+/// Run `reps` repetitions of `work`, which returns an optional peak-bytes
+/// figure for the repetition (the heap's own high-water mark, matched to
+/// the paper's peak-memory plots).
+pub fn run_cell(name: &str, reps: usize, mut work: impl FnMut(usize) -> Option<f64>) -> CellResult {
+    let mut samples = Vec::with_capacity(reps);
+    for rep in 0..reps {
+        let start = Instant::now();
+        let peak = work(rep);
+        samples.push(Sample {
+            seconds: start.elapsed().as_secs_f64(),
+            peak_bytes: peak,
+        });
+    }
+    CellResult::from_samples(name, &samples)
+}
+
+/// Current process max RSS in bytes (Linux: /proc/self/status VmHWM), as a
+/// whole-process cross-check of the heap's own accounting.
+pub fn max_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_cell_collects_reps() {
+        let mut calls = 0;
+        let cell = run_cell("demo", 5, |rep| {
+            calls += 1;
+            Some((rep as f64 + 1.0) * 1000.0)
+        });
+        assert_eq!(calls, 5);
+        assert_eq!(cell.reps, 5);
+        assert_eq!(cell.mem_median, Some(3000.0));
+        assert!(cell.time_median >= 0.0);
+        assert!(cell.time_q1 <= cell.time_q3);
+    }
+
+    #[test]
+    fn tsv_and_pretty_rows() {
+        let cell = run_cell("x", 3, |_| Some(2048.0));
+        let tsv = cell.tsv_row();
+        assert!(tsv.starts_with("x\t3\t"));
+        assert!(CellResult::tsv_header().contains("time_median_s"));
+        assert!(cell.pretty_row().contains("x"));
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512.0), "512B");
+        assert_eq!(human_bytes(2048.0), "2.00KiB");
+        assert_eq!(human_bytes(3.0 * 1024.0 * 1024.0), "3.00MiB");
+    }
+
+    #[test]
+    fn rss_readable_on_linux() {
+        // Smoke: should parse on this platform.
+        assert!(max_rss_bytes().unwrap_or(0) > 0);
+    }
+
+    #[test]
+    fn missing_mem_leaves_none() {
+        let cell = run_cell("nomem", 3, |_| None);
+        assert!(cell.mem_median.is_none());
+        assert!(cell.pretty_row().contains("-"));
+    }
+}

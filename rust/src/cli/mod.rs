@@ -1,0 +1,238 @@
+//! Declarative command-line flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! subcommands, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_bool: bool,
+}
+
+/// Parsed arguments: subcommand + flag map.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    values: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+/// A command-line interface definition.
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<(&'static str, &'static str)>,
+    pub flags: Vec<FlagSpec>,
+}
+
+#[derive(Debug, PartialEq)]
+pub enum CliError {
+    UnknownFlag(String),
+    MissingValue(String),
+    HelpRequested,
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag(s) => write!(f, "unknown flag --{s}"),
+            CliError::MissingValue(s) => write!(f, "flag --{s} requires a value"),
+            CliError::HelpRequested => write!(f, "help requested"),
+        }
+    }
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli {
+            program,
+            about,
+            commands: Vec::new(),
+            flags: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, name: &'static str, help: &'static str) -> Self {
+        self.commands.push((name, help));
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    pub fn bool_flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.program, self.about);
+        let _ = writeln!(s, "USAGE: {} <command> [--flag value ...]\n", self.program);
+        if !self.commands.is_empty() {
+            let _ = writeln!(s, "COMMANDS:");
+            for (name, help) in &self.commands {
+                let _ = writeln!(s, "  {name:<14} {help}");
+            }
+            let _ = writeln!(s);
+        }
+        let _ = writeln!(s, "FLAGS:");
+        for f in &self.flags {
+            let d = f
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  --{:<14} {}{}", f.name, f.help, d);
+        }
+        s
+    }
+
+    /// Parse an argument vector (without argv[0]).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                args.values.insert(f.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::HelpRequested);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(name.clone()))?;
+                let value = if let Some(v) = inline {
+                    v
+                } else if spec.is_bool {
+                    "true".to_string()
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                };
+                args.values.insert(name, value);
+            } else if args.command.is_none() {
+                args.command = Some(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("lazycow", "test")
+            .command("run", "run a model")
+            .flag("model", "rbpf", "model name")
+            .flag("particles", "128", "N")
+            .bool_flag("verbose", "chatty")
+    }
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = cli()
+            .parse(&v(&["run", "--model", "vbd", "--particles=256", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("model"), Some("vbd"));
+        assert_eq!(a.get_usize("particles"), Some(256));
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&v(&["run"])).unwrap();
+        assert_eq!(a.get("model"), Some("rbpf"));
+        assert_eq!(a.get_usize("particles"), Some(128));
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(
+            cli().parse(&v(&["--nope", "x"])),
+            Err(CliError::UnknownFlag("nope".into()))
+        );
+        assert_eq!(
+            cli().parse(&v(&["--model"])),
+            Err(CliError::MissingValue("model".into()))
+        );
+        assert_eq!(cli().parse(&v(&["--help"])), Err(CliError::HelpRequested));
+    }
+
+    #[test]
+    fn help_text_lists_everything() {
+        let h = cli().help_text();
+        assert!(h.contains("--model"));
+        assert!(h.contains("run"));
+        assert!(h.contains("default: rbpf"));
+    }
+}
+
+impl PartialEq for Args {
+    fn eq(&self, other: &Self) -> bool {
+        self.command == other.command && self.values == other.values
+    }
+}

@@ -1,0 +1,283 @@
+//! Run configuration: the experiment matrix of the paper's §4.
+//!
+//! A [`RunConfig`] names a (problem, task, copy-mode) cell plus its scale
+//! parameters. Configs come from CLI flags and/or a TOML-subset file
+//! (`key = value` lines with `[section]` headers), CLI taking precedence —
+//! the launcher plumbing a deployment-grade framework needs.
+
+use crate::heap::CopyMode;
+use std::collections::BTreeMap;
+
+/// Which §4 problem to run.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Model {
+    Rbpf,
+    Pcfg,
+    Vbd,
+    Mot,
+    Crbd,
+    /// The Table 1/2 linked-list microbenchmark model.
+    List,
+}
+
+impl Model {
+    pub fn parse(s: &str) -> Option<Model> {
+        match s.to_ascii_lowercase().as_str() {
+            "rbpf" => Some(Model::Rbpf),
+            "pcfg" => Some(Model::Pcfg),
+            "vbd" => Some(Model::Vbd),
+            "mot" => Some(Model::Mot),
+            "crbd" => Some(Model::Crbd),
+            "list" => Some(Model::List),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Model::Rbpf => "rbpf",
+            Model::Pcfg => "pcfg",
+            Model::Vbd => "vbd",
+            Model::Mot => "mot",
+            Model::Crbd => "crbd",
+            Model::List => "list",
+        }
+    }
+
+    /// The five evaluation problems of §4 (excludes the microbenchmark).
+    pub const EVAL: [Model; 5] = [Model::Rbpf, Model::Pcfg, Model::Vbd, Model::Mot, Model::Crbd];
+
+    /// Paper-scale (N, T_inference, T_simulation) for each problem (§4).
+    pub fn paper_scale(self) -> (usize, usize, usize) {
+        match self {
+            Model::Rbpf => (2048, 500, 500),
+            Model::Pcfg => (16384, 3262, 2000),
+            Model::Vbd => (4096, 182, 400),
+            Model::Mot => (4096, 100, 300),
+            Model::Crbd => (5000, 173, 173),
+            Model::List => (256, 100, 100),
+        }
+    }
+
+    /// Reduced default scale so the full Figure 5–7 sweep completes in
+    /// minutes on a laptop-class machine (recorded in EXPERIMENTS.md).
+    pub fn default_scale(self) -> (usize, usize, usize) {
+        match self {
+            Model::Rbpf => (256, 150, 150),
+            Model::Pcfg => (512, 300, 200),
+            Model::Vbd => (256, 120, 200),
+            Model::Mot => (192, 60, 120),
+            Model::Crbd => (384, 120, 120),
+            Model::List => (128, 80, 80),
+        }
+    }
+}
+
+/// Inference vs simulation (the paper's two tasks; simulation performs no
+/// copies and isolates lazy-pointer overhead).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Task {
+    Inference,
+    Simulation,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Option<Task> {
+        match s.to_ascii_lowercase().as_str() {
+            "inference" | "infer" => Some(Task::Inference),
+            "simulation" | "simulate" | "sim" => Some(Task::Simulation),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Inference => "inference",
+            Task::Simulation => "simulation",
+        }
+    }
+}
+
+/// A fully-specified run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: Model,
+    pub task: Task,
+    pub mode: CopyMode,
+    /// Number of particles N.
+    pub n_particles: usize,
+    /// Number of generations T.
+    pub n_steps: usize,
+    /// PRNG seed (matched across configurations, §4).
+    pub seed: u64,
+    /// Worker threads for the numeric phase (0 = all cores).
+    pub threads: usize,
+    /// ESS-fraction resampling trigger (1.0 = always resample, the paper's
+    /// setting for the memory-pattern evaluation).
+    pub ess_threshold: f64,
+    /// Particle-Gibbs outer iterations (VBD; paper: 3).
+    pub pg_iterations: usize,
+    /// Use the PJRT-compiled artifacts for batched numeric work when
+    /// available (falls back to the CPU oracle path otherwise).
+    pub use_xla: bool,
+    /// Emit a per-generation metrics series (Figure 7).
+    pub series: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        let (n, t, _) = Model::Rbpf.default_scale();
+        RunConfig {
+            model: Model::Rbpf,
+            task: Task::Inference,
+            mode: CopyMode::LazySro,
+            n_particles: n,
+            n_steps: t,
+            seed: 20200401,
+            threads: 0,
+            ess_threshold: 1.0,
+            pg_iterations: 3,
+            use_xla: true,
+            series: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Construct for a given model/task, using its default scale.
+    pub fn for_model(model: Model, task: Task, mode: CopyMode) -> Self {
+        let (n, t_inf, t_sim) = model.default_scale();
+        RunConfig {
+            model,
+            task,
+            mode,
+            n_particles: n,
+            n_steps: match task {
+                Task::Inference => t_inf,
+                Task::Simulation => t_sim,
+            },
+            ..Default::default()
+        }
+    }
+
+    /// Apply `key = value` overrides (from file or CLI).
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
+        match key {
+            "model" => self.model = Model::parse(value).ok_or(format!("bad model {value}"))?,
+            "task" => self.task = Task::parse(value).ok_or(format!("bad task {value}"))?,
+            "mode" | "copy" => {
+                self.mode = CopyMode::parse(value).ok_or(format!("bad mode {value}"))?
+            }
+            "particles" | "n" => self.n_particles = value.parse().map_err(|e| format!("{e}"))?,
+            "steps" | "t" => self.n_steps = value.parse().map_err(|e| format!("{e}"))?,
+            "seed" => self.seed = value.parse().map_err(|e| format!("{e}"))?,
+            "threads" => self.threads = value.parse().map_err(|e| format!("{e}"))?,
+            "ess" => self.ess_threshold = value.parse().map_err(|e| format!("{e}"))?,
+            "pg-iterations" | "pg_iterations" => {
+                self.pg_iterations = value.parse().map_err(|e| format!("{e}"))?
+            }
+            "xla" => self.use_xla = matches!(value, "true" | "1" | "yes"),
+            "series" => self.series = matches!(value, "true" | "1" | "yes"),
+            _ => return Err(format!("unknown config key {key}")),
+        }
+        Ok(())
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{} N={} T={}",
+            self.model.name(),
+            self.task.name(),
+            self.mode.name(),
+            self.n_particles,
+            self.n_steps
+        )
+    }
+}
+
+/// Parse a TOML-subset config file: `key = value` lines, `#` comments,
+/// `[section]` headers flattened as `section.key`.
+pub fn parse_config_text(text: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(s) = line.strip_prefix('[') {
+            let s = s
+                .strip_suffix(']')
+                .ok_or(format!("line {}: bad section header", lineno + 1))?;
+            section = s.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or(format!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let v = v.trim().trim_matches('"').to_string();
+        out.insert(key, v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_and_task_parse() {
+        assert_eq!(Model::parse("RBPF"), Some(Model::Rbpf));
+        assert_eq!(Model::parse("nope"), None);
+        assert_eq!(Task::parse("sim"), Some(Task::Simulation));
+        for m in Model::EVAL {
+            assert_eq!(Model::parse(m.name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = RunConfig::default();
+        c.apply("model", "crbd").unwrap();
+        c.apply("particles", "64").unwrap();
+        c.apply("mode", "eager").unwrap();
+        c.apply("series", "true").unwrap();
+        assert_eq!(c.model, Model::Crbd);
+        assert_eq!(c.n_particles, 64);
+        assert_eq!(c.mode, CopyMode::Eager);
+        assert!(c.series);
+        assert!(c.apply("bogus", "1").is_err());
+        assert!(c.apply("model", "bogus").is_err());
+    }
+
+    #[test]
+    fn config_file_parsing() {
+        let text = r#"
+            # experiment config
+            model = "vbd"
+            particles = 128
+            [bench]
+            reps = 5
+        "#;
+        let map = parse_config_text(text).unwrap();
+        assert_eq!(map["model"], "vbd");
+        assert_eq!(map["particles"], "128");
+        assert_eq!(map["bench.reps"], "5");
+        assert!(parse_config_text("[oops").is_err());
+        assert!(parse_config_text("novalue").is_err());
+    }
+
+    #[test]
+    fn paper_scales_match_section4() {
+        assert_eq!(Model::Rbpf.paper_scale(), (2048, 500, 500));
+        assert_eq!(Model::Pcfg.paper_scale(), (16384, 3262, 2000));
+        assert_eq!(Model::Vbd.paper_scale(), (4096, 182, 400));
+        assert_eq!(Model::Mot.paper_scale(), (4096, 100, 300));
+        assert_eq!(Model::Crbd.paper_scale(), (5000, 173, 173));
+    }
+}

@@ -1,0 +1,309 @@
+//! Executable transliteration of the paper's §2 definitions.
+//!
+//! These small-graph structures exist to make the paper's semantics
+//! testable in isolation: Algorithm 1 restores F from G (expanding lazy
+//! copies on demand), Algorithm 2 restores G from H (expanding single edge
+//! labels into label lists via the label tree `a`). The unit tests replay
+//! Figure 4 and the Table 2 label-list argument.
+
+use std::collections::HashMap;
+
+pub type V = usize;
+pub type L = usize;
+
+/// An edge of G: source, target, and the label list `g(e)` — the deep-copy
+/// operations the target is yet to be propagated through (Def. 2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GEdge {
+    pub src: V,
+    pub tgt: V,
+    pub labels: Vec<L>,
+}
+
+/// The labeled multigraph G = (V, E, s, t, b, R, L, m, f, g) (Def. 2),
+/// with integer payloads standing in for `b`.
+#[derive(Clone, Default)]
+pub struct G {
+    /// Payload data b(v).
+    pub b: Vec<i64>,
+    /// Read-only set R (indexed by vertex).
+    pub read_only: Vec<bool>,
+    /// Creating label f(v).
+    pub f: Vec<L>,
+    /// Edges (vertex 0 is the root; its out-edges are the global scope).
+    pub edges: Vec<GEdge>,
+    /// Memo m : V × L → V.
+    pub memo: HashMap<(V, L), V>,
+    /// Number of labels minted.
+    pub n_labels: usize,
+}
+
+impl G {
+    pub fn new() -> Self {
+        let mut g = G::default();
+        g.b.push(0); // root vertex
+        g.read_only.push(false);
+        g.f.push(0);
+        g.n_labels = 1; // root label
+        g
+    }
+
+    pub fn add_vertex(&mut self, payload: i64, label: L) -> V {
+        self.b.push(payload);
+        self.read_only.push(false);
+        self.f.push(label);
+        self.b.len() - 1
+    }
+
+    pub fn add_edge(&mut self, src: V, tgt: V, labels: Vec<L>) -> usize {
+        self.edges.push(GEdge { src, tgt, labels });
+        self.edges.len() - 1
+    }
+
+    /// Condition 1: every memoized vertex is read-only.
+    pub fn check_condition1(&self) -> bool {
+        self.memo.keys().all(|(v, _)| self.read_only[*v])
+    }
+
+    /// One step of **Algorithm 1** applied to edge `e`: let `v = t(e)` and
+    /// `l = head g(e)`; redirect through the memo or copy `v`, then drop
+    /// the head label. Returns the vertex the edge now targets.
+    ///
+    /// Precondition (checked by the caller in tests): `e` is reachable from
+    /// the root through label-free edges.
+    pub fn expand_edge(&mut self, e: usize) -> V {
+        assert!(!self.edges[e].labels.is_empty(), "no labels to expand");
+        let v = self.edges[e].tgt;
+        let l = self.edges[e].labels[0];
+        let u = if let Some(&u) = self.memo.get(&(v, l)) {
+            u
+        } else {
+            // Copy v: payload and out-edges (a shallow copy in F terms).
+            let u = self.add_vertex(self.b[v], l);
+            let out: Vec<GEdge> = self
+                .edges
+                .iter()
+                .filter(|d| d.src == v)
+                .cloned()
+                .collect();
+            for mut d in out {
+                d.src = u;
+                self.edges.push(d);
+            }
+            self.memo.insert((v, l), u);
+            self.read_only[v] = true; // Condition 1
+            u
+        };
+        self.edges[e].tgt = u;
+        self.edges[e].labels.remove(0);
+        u
+    }
+
+    /// Apply Algorithm 1 until edge `e` has an empty label list (Condition
+    /// 2: the target is then readable/writable).
+    pub fn expand_fully(&mut self, e: usize) -> V {
+        while !self.edges[e].labels.is_empty() {
+            self.expand_edge(e);
+        }
+        self.edges[e].tgt
+    }
+}
+
+/// An edge of H: a single label `h(e)` (Def. 3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HEdge {
+    pub src: V,
+    pub tgt: V,
+    pub label: L,
+}
+
+/// The labeled multigraph H = (V, E, s, t, b, R, L, m, f, h, a) (Def. 3).
+#[derive(Clone, Default)]
+pub struct H {
+    pub b: Vec<i64>,
+    pub read_only: Vec<bool>,
+    pub f: Vec<L>,
+    pub edges: Vec<HEdge>,
+    /// Label tree: a(l) = parent of l (Def. 3); a[0] is the root label,
+    /// represented as its own parent.
+    pub a: Vec<L>,
+}
+
+impl H {
+    pub fn new() -> Self {
+        let mut h = H::default();
+        h.b.push(0);
+        h.read_only.push(false);
+        h.f.push(0);
+        h.a.push(0); // root label
+        h
+    }
+
+    pub fn add_vertex(&mut self, payload: i64, label: L) -> V {
+        self.b.push(payload);
+        self.read_only.push(false);
+        self.f.push(label);
+        self.b.len() - 1
+    }
+
+    pub fn new_label(&mut self, parent: L) -> L {
+        self.a.push(parent);
+        self.a.len() - 1
+    }
+
+    pub fn add_edge(&mut self, src: V, tgt: V, label: L) {
+        self.edges.push(HEdge { src, tgt, label });
+    }
+
+    /// Condition 3: for every edge there exists n ≥ 0 with
+    /// aⁿ(h(e)) = f(t(e)).
+    pub fn check_condition3(&self) -> bool {
+        self.edges.iter().all(|e| self.label_chain(e).is_some())
+    }
+
+    /// The chain [aⁿ⁻¹(h(e)), …, a(h(e)), h(e)] of **Algorithm 2**, or
+    /// `None` if Condition 3 fails (a cross reference not yet finished).
+    pub fn label_chain(&self, e: &HEdge) -> Option<Vec<L>> {
+        let target_label = self.f[e.tgt];
+        let mut chain = Vec::new();
+        let mut l = e.label;
+        loop {
+            if l == target_label {
+                chain.reverse();
+                return Some(chain);
+            }
+            chain.push(l);
+            let parent = self.a[l];
+            if parent == l {
+                return None; // hit the root without matching
+            }
+            l = parent;
+        }
+    }
+
+    /// **Algorithm 2**: restore G from H by expanding every single edge
+    /// label into its label list.
+    pub fn to_g(&self) -> G {
+        let mut g = G::new();
+        // Copy vertices 1.. (vertex 0 is the shared root convention).
+        for v in 1..self.b.len() {
+            let nv = g.add_vertex(self.b[v], self.f[v]);
+            debug_assert_eq!(nv, v);
+            g.read_only[v] = self.read_only[v];
+        }
+        g.n_labels = self.a.len();
+        for e in &self.edges {
+            let labels = self
+                .label_chain(e)
+                .expect("Condition 3 violated: unfinished cross reference");
+            g.add_edge(e.src, e.tgt, labels);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Figure 4 (left series): a root -> x edge carrying labels [1] over a
+    /// two-vertex chain; expansion copies x once and reuses the memo.
+    #[test]
+    fn algorithm1_expands_and_memoizes() {
+        let mut g = G::new();
+        let x = g.add_vertex(10, 0);
+        let y = g.add_vertex(20, 0);
+        g.add_edge(0, x, vec![1]); // root -> x, pending copy 1
+        g.add_edge(x, y, vec![]); // x -> y within original
+        g.n_labels = 2;
+
+        let e0 = 0;
+        let u = g.expand_fully(e0);
+        assert_ne!(u, x, "x was copied");
+        assert_eq!(g.b[u], 10);
+        assert!(g.read_only[x], "original frozen (Condition 1)");
+        assert!(g.check_condition1());
+        // The copy's out-edge still targets y (shallow copy).
+        let copied_edge = g.edges.iter().find(|d| d.src == u).unwrap();
+        assert_eq!(copied_edge.tgt, y);
+
+        // A second edge with the same pending label reuses the memo.
+        let e2 = g.add_edge(0, x, vec![1]);
+        let u2 = g.expand_fully(e2);
+        assert_eq!(u2, u, "memo m(x, 1) reused");
+    }
+
+    /// Nested labels: an edge with list [1, 2] expands through two copies.
+    #[test]
+    fn algorithm1_nested_labels() {
+        let mut g = G::new();
+        let x = g.add_vertex(5, 0);
+        let e = g.add_edge(0, x, vec![1, 2]);
+        g.n_labels = 3;
+        let u = g.expand_fully(e);
+        // Two successive copies: x -> m(x,1) -> m(m(x,1),2).
+        let u1 = g.memo[&(x, 1)];
+        let u2 = g.memo[&(u1, 2)];
+        assert_eq!(u, u2);
+        assert_eq!(g.b[u], 5);
+    }
+
+    /// Algorithm 2 on a tree of labels: root label 0, children 1 and 2,
+    /// grandchild 3 under 1.
+    #[test]
+    fn algorithm2_restores_label_lists() {
+        let mut h = H::new();
+        let l1 = h.new_label(0);
+        let l2 = h.new_label(0);
+        let l3 = h.new_label(l1);
+        assert_eq!((l1, l2, l3), (1, 2, 3));
+
+        let x = h.add_vertex(7, 0); // created under root label
+        h.add_edge(0, x, l3); // edge label 3: chain 0 -> 1 -> 3
+        h.add_edge(0, x, l2); // edge label 2: chain 0 -> 2
+        h.add_edge(0, x, 0); // plain edge
+
+        assert!(h.check_condition3());
+        let g = h.to_g();
+        assert_eq!(g.edges[0].labels, vec![l1, l3]);
+        assert_eq!(g.edges[1].labels, vec![l2]);
+        assert_eq!(g.edges[2].labels, Vec::<L>::new());
+    }
+
+    /// The Table 2 counterfactual: the edge x3 -> x1 with label 3 would
+    /// imply list [2, 3] under G (wrong view); Condition 3 detects that the
+    /// *correct* single-label encoding for the intended [3] view does not
+    /// exist, which is why Algorithm 6 must finish cross references eagerly.
+    #[test]
+    fn table2_label_list_argument() {
+        let mut h = H::new();
+        let l2 = h.new_label(0);
+        let l3 = h.new_label(l2);
+        let x1 = h.add_vertex(1, 0);
+        // x3 is the copy of x2 under label 3 (f = 3), its next field
+        // pointing at x1 with edge label 3:
+        let x3 = h.add_vertex(3, l3);
+        h.add_edge(x3, x1, l3);
+        let e = h.edges.last().unwrap();
+        // Chain from label 3 back to f(x1) = 0 passes through 2: the list
+        // is [2, 3], i.e. the x1 target would be propagated through copy 2
+        // *then* 3 — the incorrect behaviour shown in Table 2's last row.
+        assert_eq!(h.label_chain(e), Some(vec![l2, l3]));
+        // The correct view required list [3] alone, which no single-label
+        // edge can encode when a(3) = 2: hence the eager Finish.
+        let g = h.to_g();
+        assert_eq!(g.edges[0].labels, vec![l2, l3]);
+    }
+
+    /// Condition 3 violation: a cross reference whose label chain cannot
+    /// reach f(t(e)).
+    #[test]
+    fn condition3_detects_unfinished_cross_reference() {
+        let mut h = H::new();
+        let l1 = h.new_label(0);
+        let l2 = h.new_label(0); // sibling of l1, not ancestor
+        let x = h.add_vertex(1, l1);
+        h.add_edge(0, x, l2);
+        assert!(!h.check_condition3());
+    }
+}

@@ -1,0 +1,496 @@
+//! Differential property tests: random object-graph programs executed on
+//! the production [`Heap`] in all three copy modes must be observationally
+//! equivalent to the eager [`Oracle`] after every step, and the heap's
+//! reference counts must validate against a from-scratch recomputation.
+//!
+//! This is the machine-checked version of the paper's §4 validation
+//! ("the output is expected to match regardless of the configuration").
+
+use super::oracle::{OId, Oracle};
+use crate::heap::{CopyMode, Heap, Lazy, RawLazy};
+use crate::lazy_fields;
+use crate::prop::{self, CaseResult, Gen};
+
+#[derive(Clone, Default)]
+struct SNode {
+    value: i64,
+    children: Vec<Lazy<SNode>>,
+}
+lazy_fields!(SNode: children);
+
+/// One step of a generated object-graph program. Root indices refer to the
+/// live-roots vector (removals use swap_remove, deterministically).
+#[derive(Clone, Debug)]
+enum Op {
+    Alloc { value: i64 },
+    DeepCopy { root: usize },
+    Release { root: usize },
+    WriteValue { root: usize, path: Vec<usize>, value: i64 },
+    WriteValueAtRoot { root: usize, value: i64 },
+    PushNew { root: usize, path: Vec<usize>, value: i64, in_context: bool },
+    LinkExisting { root: usize, path: Vec<usize>, target: usize },
+    PopChild { root: usize, path: Vec<usize> },
+    /// Forced-eager deep copy (the particle-Gibbs reference pattern).
+    EagerCopy { root: usize },
+    /// Extra owning handle to the same object (clone_handle).
+    Retain { root: usize },
+}
+
+/// Generate a script, using a shadow oracle to keep indices/paths valid
+/// and to refuse cycle-creating links.
+fn gen_script(g: &mut Gen) -> Vec<Op> {
+    let mut ops = Vec::new();
+    let mut oracle = Oracle::new();
+    let mut roots: Vec<OId> = Vec::new();
+    let n_ops = 8 + g.size * 2;
+    for _ in 0..n_ops {
+        if g.spent() {
+            break;
+        }
+        if roots.is_empty() {
+            let value = g.i64(-100, 100);
+            roots.push(oracle.alloc(value));
+            ops.push(Op::Alloc { value });
+            continue;
+        }
+        let root = g.usize(0, roots.len() - 1);
+        // Random descent path within the chosen root's tree.
+        let mut path = Vec::new();
+        {
+            let mut v = roots[root];
+            while oracle.n_children(v) > 0 && g.bool(0.6) {
+                let i = g.usize(0, oracle.n_children(v) - 1);
+                path.push(i);
+                v = oracle.child(v, i);
+            }
+        }
+        let choice = g.weighted(&[2.0, 3.0, 1.5, 4.0, 1.0, 3.5, 1.0, 1.5, 1.0, 0.7]);
+        match choice {
+            0 => {
+                let value = g.i64(-100, 100);
+                roots.push(oracle.alloc(value));
+                ops.push(Op::Alloc { value });
+            }
+            1 => {
+                roots.push(oracle.deep_copy(roots[root]));
+                ops.push(Op::DeepCopy { root });
+            }
+            2 => {
+                if roots.len() > 1 {
+                    roots.swap_remove(root);
+                    ops.push(Op::Release { root });
+                }
+            }
+            3 => {
+                let value = g.i64(-100, 100);
+                let node = oracle.descend(roots[root], &path);
+                oracle.set_value(node, value);
+                ops.push(Op::WriteValue { root, path, value });
+            }
+            4 => {
+                let value = g.i64(-100, 100);
+                oracle.set_value(roots[root], value);
+                ops.push(Op::WriteValueAtRoot { root, value });
+            }
+            5 => {
+                let value = g.i64(-100, 100);
+                let in_context = g.bool(0.5);
+                let node = oracle.descend(roots[root], &path);
+                let c = oracle.alloc(value);
+                oracle.push_child(node, c);
+                ops.push(Op::PushNew { root, path, value, in_context });
+            }
+            6 => {
+                // Link an existing root as a child — cross references and
+                // DAG sharing — unless it would create a cycle.
+                let target = g.usize(0, roots.len() - 1);
+                let node = oracle.descend(roots[root], &path);
+                if !oracle.reachable(roots[target], node) {
+                    oracle.push_child(node, roots[target]);
+                    ops.push(Op::LinkExisting { root, path, target });
+                }
+            }
+            8 => {
+                roots.push(oracle.deep_copy(roots[root]));
+                ops.push(Op::EagerCopy { root });
+            }
+            9 => {
+                // Retained handles alias the same object: subsequent
+                // writes through either must stay visible to both.
+                roots.push(roots[root]);
+                ops.push(Op::Retain { root });
+            }
+            _ => {
+                let node = oracle.descend(roots[root], &path);
+                if oracle.n_children(node) > 0 && path.last() != Some(&(usize::MAX)) {
+                    // Only pop children that are not on the descent path of
+                    // any *other* pending op — safe since ops replay
+                    // sequentially against the same evolving structure.
+                    oracle.pop_child(node);
+                    ops.push(Op::PopChild { root, path });
+                }
+            }
+        }
+    }
+    ops
+}
+
+
+/// Descend a path for *writing*: get-chain from the root (the Table 1
+/// discipline), updating each stored edge in place. Updates the root
+/// handle too.
+fn descend_write(heap: &mut Heap, root: &mut Lazy<SNode>, path: &[usize]) -> Lazy<SNode> {
+    heap.mutate_root(root, |_| {});
+    let mut cur = *root;
+    for &i in path {
+        cur = heap.get_field(&cur, move |n| &mut n.children[i]);
+    }
+    cur
+}
+
+/// Structural comparison of a heap tree vs the oracle tree.
+fn compare(
+    heap: &mut Heap,
+    p: &Lazy<SNode>,
+    oracle: &Oracle,
+    o: OId,
+    where_: &str,
+) -> Result<(), String> {
+    let mut cur = *p;
+    let (v, n) = heap.read(&mut cur, |s| (s.value, s.children.len()));
+    if v != oracle.value(o) {
+        return Err(format!(
+            "{where_}: value mismatch heap={v} oracle={}",
+            oracle.value(o)
+        ));
+    }
+    if n != oracle.n_children(o) {
+        return Err(format!(
+            "{where_}: child count mismatch heap={n} oracle={}",
+            oracle.n_children(o)
+        ));
+    }
+    for i in 0..n {
+        let c = heap.read_ptr(&mut cur, |s| s.children[i]);
+        compare(heap, &c, oracle, oracle.child(o, i), where_)?;
+    }
+    Ok(())
+}
+
+/// Replay a script on a fresh heap (given mode) + fresh oracle, comparing
+/// observable state after every op and validating reference counts.
+fn replay(mode: CopyMode, ops: &[Op]) -> Result<(), String> {
+    let mut heap = Heap::new(mode);
+    let mut oracle = Oracle::new();
+    let mut h_roots: Vec<Lazy<SNode>> = Vec::new();
+    let mut o_roots: Vec<OId> = Vec::new();
+
+    for (step, op) in ops.iter().enumerate() {
+        match op {
+            Op::Alloc { value } => {
+                h_roots.push(heap.alloc(SNode {
+                    value: *value,
+                    children: Vec::new(),
+                }));
+                o_roots.push(oracle.alloc(*value));
+            }
+            Op::DeepCopy { root } => {
+                let c = heap.deep_copy(&h_roots[*root]);
+                h_roots.push(c);
+                o_roots.push(oracle.deep_copy(o_roots[*root]));
+            }
+            Op::Release { root } => {
+                let h = h_roots.swap_remove(*root);
+                heap.release(h);
+                o_roots.swap_remove(*root);
+            }
+            Op::WriteValue { root, path, value } => {
+                let mut h = h_roots[*root];
+                let mut node = descend_write(&mut heap, &mut h, path);
+                h_roots[*root] = h;
+                heap.mutate(&mut node, |n| n.value = *value);
+                let o = oracle.descend(o_roots[*root], path);
+                oracle.set_value(o, *value);
+            }
+            Op::WriteValueAtRoot { root, value } => {
+                // Owning mutate: exercises thaw + single-reference paths.
+                let mut h = h_roots[*root];
+                heap.mutate_root(&mut h, |n| n.value = *value);
+                h_roots[*root] = h;
+                oracle.set_value(o_roots[*root], *value);
+            }
+            Op::PushNew {
+                root,
+                path,
+                value,
+                in_context,
+            } => {
+                let mut h = h_roots[*root];
+                let mut node = descend_write(&mut heap, &mut h, path);
+                h_roots[*root] = h;
+                let child = if *in_context {
+                    let l = node.label();
+                    heap.with_context(l, |h| {
+                        h.alloc(SNode {
+                            value: *value,
+                            children: Vec::new(),
+                        })
+                    })
+                } else {
+                    heap.alloc(SNode {
+                        value: *value,
+                        children: Vec::new(),
+                    })
+                };
+                heap.mutate(&mut node, |n| n.children.push(child));
+                heap.release(child); // the stored edge owns its own count
+                let o = oracle.descend(o_roots[*root], path);
+                let c = oracle.alloc(*value);
+                oracle.push_child(o, c);
+            }
+            Op::LinkExisting { root, path, target } => {
+                let mut h = h_roots[*root];
+                let mut node = descend_write(&mut heap, &mut h, path);
+                h_roots[*root] = h;
+                let t = h_roots[*target];
+                heap.mutate(&mut node, |n| n.children.push(t));
+                let o = oracle.descend(o_roots[*root], path);
+                oracle.push_child(o, o_roots[*target]);
+            }
+            Op::PopChild { root, path } => {
+                let mut h = h_roots[*root];
+                let mut node = descend_write(&mut heap, &mut h, path);
+                h_roots[*root] = h;
+                heap.mutate(&mut node, |n| {
+                    n.children.pop();
+                });
+                let o = oracle.descend(o_roots[*root], path);
+                oracle.pop_child(o);
+            }
+            Op::EagerCopy { root } => {
+                let c = heap.deep_copy_eager(&h_roots[*root]);
+                h_roots.push(c);
+                o_roots.push(oracle.deep_copy(o_roots[*root]));
+            }
+            Op::Retain { root } => {
+                let c = heap.clone_handle(&h_roots[*root]);
+                h_roots.push(c);
+                o_roots.push(o_roots[*root]); // aliases in the oracle too
+            }
+        }
+        // Full observational comparison from every root.
+        for (i, (h, o)) in h_roots.iter().zip(&o_roots).enumerate() {
+            compare(
+                &mut heap,
+                h,
+                &oracle,
+                *o,
+                &format!("{:?} step {step} root {i} op {op:?}", mode),
+            )?;
+        }
+        // Reference-count invariants.
+        let raws: Vec<RawLazy> = h_roots.iter().map(|h| h.raw()).collect();
+        heap.validate(&raws);
+    }
+
+    // Teardown: everything must be reclaimed (after the precise sweep —
+    // the paper's cheap criterion tolerates memo-cycle leftovers, which
+    // deep_sweep collects).
+    for h in h_roots {
+        heap.release(h);
+    }
+    heap.sweep_memos();
+    heap.deep_sweep(&[]);
+    if heap.live_objects() != 0 {
+        return Err(format!(
+            "{mode:?}: {} objects leaked after full release; script: {ops:?}\n{}",
+            heap.live_objects(),
+            heap.dump_live()
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn heap_matches_eager_oracle_all_modes() {
+    prop::check(120, |g| -> CaseResult {
+        let ops = gen_script(g);
+        for mode in CopyMode::ALL {
+            if let Err(e) = replay(mode, &ops) {
+                return CaseResult::Fail(e);
+            }
+        }
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn all_modes_agree_with_each_other() {
+    // Beyond matching the oracle, the three modes must produce identical
+    // final structures for the same script (the paper's output check).
+    prop::check(60, |g| -> CaseResult {
+        let ops = gen_script(g);
+        // Collect final value-trees per mode.
+        let mut dumps: Vec<String> = Vec::new();
+        for mode in CopyMode::ALL {
+            let mut heap = Heap::new(mode);
+            let mut oracle = Oracle::new();
+            let mut h_roots: Vec<Lazy<SNode>> = Vec::new();
+            let mut o_roots: Vec<OId> = Vec::new();
+            for op in &ops {
+                apply_silent(&mut heap, &mut oracle, &mut h_roots, &mut o_roots, op);
+            }
+            let mut dump = String::new();
+            for h in &h_roots {
+                dump_tree(&mut heap, h, &mut dump);
+                dump.push('|');
+            }
+            dumps.push(dump);
+        }
+        if dumps.windows(2).all(|w| w[0] == w[1]) {
+            CaseResult::Pass
+        } else {
+            CaseResult::Fail(format!("mode dumps diverge: {dumps:?}"))
+        }
+    });
+}
+
+fn dump_tree(heap: &mut Heap, p: &Lazy<SNode>, out: &mut String) {
+    let mut cur = *p;
+    let (v, n) = heap.read(&mut cur, |s| (s.value, s.children.len()));
+    out.push_str(&format!("{v}("));
+    for i in 0..n {
+        let c = heap.read_ptr(&mut cur, |s| s.children[i]);
+        dump_tree(heap, &c, out);
+    }
+    out.push(')');
+}
+
+fn apply_silent(
+    heap: &mut Heap,
+    oracle: &mut Oracle,
+    h_roots: &mut Vec<Lazy<SNode>>,
+    o_roots: &mut Vec<OId>,
+    op: &Op,
+) {
+    match op {
+        Op::Alloc { value } => {
+            h_roots.push(heap.alloc(SNode {
+                value: *value,
+                children: Vec::new(),
+            }));
+            o_roots.push(oracle.alloc(*value));
+        }
+        Op::DeepCopy { root } => {
+            let c = heap.deep_copy(&h_roots[*root]);
+            h_roots.push(c);
+            o_roots.push(oracle.deep_copy(o_roots[*root]));
+        }
+        Op::Release { root } => {
+            let h = h_roots.swap_remove(*root);
+            heap.release(h);
+            o_roots.swap_remove(*root);
+        }
+        Op::WriteValue { root, path, value } => {
+            let mut h = h_roots[*root];
+            let mut node = descend_write(heap, &mut h, path);
+            h_roots[*root] = h;
+            heap.mutate(&mut node, |n| n.value = *value);
+            oracle.set_value(oracle.descend(o_roots[*root], path), *value);
+        }
+        Op::WriteValueAtRoot { root, value } => {
+            let mut h = h_roots[*root];
+            heap.mutate_root(&mut h, |n| n.value = *value);
+            h_roots[*root] = h;
+            oracle.set_value(o_roots[*root], *value);
+        }
+        Op::PushNew {
+            root, path, value, ..
+        } => {
+            let mut h = h_roots[*root];
+            let mut node = descend_write(heap, &mut h, path);
+            h_roots[*root] = h;
+            let child = heap.alloc(SNode {
+                value: *value,
+                children: Vec::new(),
+            });
+            heap.mutate(&mut node, |n| n.children.push(child));
+            heap.release(child);
+            let o = oracle.descend(o_roots[*root], path);
+            let c = oracle.alloc(*value);
+            oracle.push_child(o, c);
+        }
+        Op::LinkExisting { root, path, target } => {
+            let mut h = h_roots[*root];
+            let mut node = descend_write(heap, &mut h, path);
+            h_roots[*root] = h;
+            let t = h_roots[*target];
+            heap.mutate(&mut node, |n| n.children.push(t));
+            let o = oracle.descend(o_roots[*root], path);
+            oracle.push_child(o, o_roots[*target]);
+        }
+        Op::PopChild { root, path } => {
+            let mut h = h_roots[*root];
+            let mut node = descend_write(heap, &mut h, path);
+            h_roots[*root] = h;
+            heap.mutate(&mut node, |n| {
+                n.children.pop();
+            });
+            oracle.pop_child(oracle.descend(o_roots[*root], path));
+        }
+        Op::EagerCopy { root } => {
+            let c = heap.deep_copy_eager(&h_roots[*root]);
+            h_roots.push(c);
+            o_roots.push(oracle.deep_copy(o_roots[*root]));
+        }
+        Op::Retain { root } => {
+            let c = heap.clone_handle(&h_roots[*root]);
+            h_roots.push(c);
+            o_roots.push(o_roots[*root]);
+        }
+    }
+}
+
+#[test]
+fn retain_after_freeze_clears_sro_flag() {
+    // Regression (fuzzer-found): clone_handle created a second in-edge
+    // with the same label without clearing the Remark 1 flag; a later
+    // owning write skipped the memo and stranded the retained handle on
+    // the stale original.
+    let ops = vec![
+        Op::Alloc { value: 43 },
+        Op::DeepCopy { root: 0 },
+        Op::Retain { root: 1 },
+        Op::PushNew {
+            root: 1,
+            path: vec![],
+            value: -90,
+            in_context: true,
+        },
+    ];
+    for mode in CopyMode::ALL {
+        if let Err(e) = replay(mode, &ops) {
+            panic!("{e}");
+        }
+    }
+}
+
+#[test]
+fn leak_regression_linkexisting_deepcopy() {
+    // Shrunk from fuzz seed 0x2e2ac13ef828273c: link + deep copies + release
+    // left objects behind.
+    let ops = vec![
+        Op::Alloc { value: 63 },
+        Op::WriteValueAtRoot { root: 0, value: -78 },
+        Op::DeepCopy { root: 0 },
+        Op::LinkExisting { root: 0, path: vec![], target: 1 },
+        Op::DeepCopy { root: 1 },
+        Op::PushNew { root: 1, path: vec![], value: -36, in_context: true },
+        Op::WriteValue { root: 2, path: vec![], value: 8 },
+        Op::WriteValue { root: 1, path: vec![], value: -22 },
+        Op::Release { root: 2 },
+    ];
+    if let Err(e) = replay(CopyMode::Lazy, &ops) {
+        panic!("{e}");
+    }
+}

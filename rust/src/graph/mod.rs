@@ -1,0 +1,11 @@
+//! The paper's §2 formalism, executable: labeled directed multigraphs
+//! F (Definition 1), G (Definition 2, Algorithm 1) and H (Definition 3,
+//! Algorithm 2), plus an eager-copy [`oracle`] used as the reference
+//! semantics in differential property tests against the production
+//! [`Heap`](crate::heap::Heap).
+
+pub mod formal;
+pub mod oracle;
+
+#[cfg(test)]
+mod fuzz_tests;

@@ -1,0 +1,165 @@
+//! Eager-copy reference semantics (the F-graph view of `deep_copy`).
+//!
+//! The oracle implements object graphs with *immediate* recursive deep
+//! copies — the semantics the lazy platform must be observationally
+//! equivalent to (the paper validates its implementation the same way:
+//! "the output is expected to match regardless of the configuration").
+//! Nodes are never reclaimed (test-only structure), which keeps ids stable
+//! for differential comparison.
+
+use std::collections::HashMap;
+
+pub type OId = usize;
+
+#[derive(Clone, Default)]
+struct ONode {
+    value: i64,
+    children: Vec<OId>,
+}
+
+/// Reference object graph with integer payloads and child lists.
+#[derive(Clone, Default)]
+pub struct Oracle {
+    nodes: Vec<ONode>,
+}
+
+impl Oracle {
+    pub fn new() -> Self {
+        Oracle::default()
+    }
+
+    pub fn alloc(&mut self, value: i64) -> OId {
+        self.nodes.push(ONode {
+            value,
+            children: Vec::new(),
+        });
+        self.nodes.len() - 1
+    }
+
+    pub fn value(&self, id: OId) -> i64 {
+        self.nodes[id].value
+    }
+
+    pub fn set_value(&mut self, id: OId, v: i64) {
+        self.nodes[id].value = v;
+    }
+
+    pub fn children(&self, id: OId) -> &[OId] {
+        &self.nodes[id].children
+    }
+
+    pub fn n_children(&self, id: OId) -> usize {
+        self.nodes[id].children.len()
+    }
+
+    pub fn child(&self, id: OId, i: usize) -> OId {
+        self.nodes[id].children[i]
+    }
+
+    pub fn push_child(&mut self, id: OId, c: OId) {
+        self.nodes[id].children.push(c);
+    }
+
+    pub fn pop_child(&mut self, id: OId) -> Option<OId> {
+        self.nodes[id].children.pop()
+    }
+
+    /// Recursive deep copy preserving internal sharing (each reachable node
+    /// copied exactly once — the paper's §2.1 caveat).
+    pub fn deep_copy(&mut self, root: OId) -> OId {
+        let mut memo: HashMap<OId, OId> = HashMap::new();
+        self.copy_rec(root, &mut memo)
+    }
+
+    fn copy_rec(&mut self, v: OId, memo: &mut HashMap<OId, OId>) -> OId {
+        if let Some(&u) = memo.get(&v) {
+            return u;
+        }
+        let u = self.alloc(self.nodes[v].value);
+        memo.insert(v, u);
+        let kids = self.nodes[v].children.clone();
+        let copied: Vec<OId> = kids.into_iter().map(|c| self.copy_rec(c, memo)).collect();
+        self.nodes[u].children = copied;
+        u
+    }
+
+    /// Is `needle` reachable from `from`? (Used by fuzzers to avoid
+    /// creating reference cycles, which reference counting cannot collect
+    /// and the evaluation models do not create.)
+    pub fn reachable(&self, from: OId, needle: OId) -> bool {
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![from];
+        while let Some(v) = stack.pop() {
+            if v == needle {
+                return true;
+            }
+            if seen[v] {
+                continue;
+            }
+            seen[v] = true;
+            stack.extend_from_slice(&self.nodes[v].children);
+        }
+        false
+    }
+
+    /// Descend a child-index path from a root.
+    pub fn descend(&self, root: OId, path: &[usize]) -> OId {
+        let mut v = root;
+        for &i in path {
+            v = self.nodes[v].children[i];
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_mutate() {
+        let mut o = Oracle::new();
+        let a = o.alloc(1);
+        let b = o.alloc(2);
+        o.push_child(a, b);
+        o.set_value(b, 20);
+        assert_eq!(o.value(o.child(a, 0)), 20);
+    }
+
+    #[test]
+    fn deep_copy_is_independent() {
+        let mut o = Oracle::new();
+        let a = o.alloc(1);
+        let b = o.alloc(2);
+        o.push_child(a, b);
+        let c = o.deep_copy(a);
+        o.set_value(o.child(c, 0), 99);
+        assert_eq!(o.value(o.child(a, 0)), 2, "original untouched");
+        assert_eq!(o.value(o.child(c, 0)), 99);
+    }
+
+    #[test]
+    fn deep_copy_preserves_sharing() {
+        let mut o = Oracle::new();
+        let root = o.alloc(0);
+        let shared = o.alloc(7);
+        o.push_child(root, shared);
+        o.push_child(root, shared);
+        let c = o.deep_copy(root);
+        assert_eq!(o.child(c, 0), o.child(c, 1), "diamond stays a diamond");
+        assert_ne!(o.child(c, 0), shared);
+    }
+
+    #[test]
+    fn reachability() {
+        let mut o = Oracle::new();
+        let a = o.alloc(0);
+        let b = o.alloc(1);
+        let c = o.alloc(2);
+        o.push_child(a, b);
+        o.push_child(b, c);
+        assert!(o.reachable(a, c));
+        assert!(!o.reachable(c, a));
+        assert_eq!(o.descend(a, &[0, 0]), c);
+    }
+}

@@ -1,0 +1,138 @@
+//! Lazy pointers: the edge representation of the labeled multigraph H (§2.3).
+//!
+//! An edge `e` is a pair `(t(e), h(e))`: the target object and a single label
+//! identifying the deep-copy operation the target is yet to be propagated
+//! through. In the paper's C++ implementation this is a pair of smart
+//! pointers; here it is a pair of generation-tagged ids, with reference
+//! counts maintained explicitly by the [`Heap`](super::Heap) (which mediates
+//! every mutation).
+
+use std::marker::PhantomData;
+
+use super::ids::{LabelId, ObjId};
+
+/// Untyped lazy pointer: `(t(e), h(e))`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct RawLazy {
+    /// Target object `t(e)`.
+    pub obj: ObjId,
+    /// Single label `h(e)` (§2.3 Definition 3).
+    pub label: LabelId,
+}
+
+impl RawLazy {
+    pub const NULL: RawLazy = RawLazy {
+        obj: ObjId::NULL,
+        label: LabelId::NULL,
+    };
+
+    #[inline]
+    pub fn is_null(self) -> bool {
+        self.obj.is_null()
+    }
+}
+
+impl Default for RawLazy {
+    fn default() -> Self {
+        RawLazy::NULL
+    }
+}
+
+/// Typed lazy pointer to a payload of type `T`.
+///
+/// `Lazy<T>` is `Copy`: it does not own a reference count by itself. The
+/// ownership discipline is:
+///
+/// * handles returned by [`Heap::alloc`](super::Heap::alloc) and
+///   [`Heap::deep_copy`](super::Heap::deep_copy) are *owning* (shared count
+///   +1) and must be released with [`Heap::release`](super::Heap::release)
+///   (or stored into an object field, which transfers the count bookkeeping
+///   to the edge-diff machinery in `mutate`);
+/// * pointers read out of object fields are *borrowed* and must not outlive
+///   the owning edge. Generation tags turn violations into panics.
+pub struct Lazy<T> {
+    pub(crate) raw: RawLazy,
+    pub(crate) _ph: PhantomData<*const T>,
+}
+
+impl<T> Lazy<T> {
+    pub const NULL: Lazy<T> = Lazy {
+        raw: RawLazy::NULL,
+        _ph: PhantomData,
+    };
+
+    #[inline]
+    pub fn from_raw(raw: RawLazy) -> Self {
+        Lazy {
+            raw,
+            _ph: PhantomData,
+        }
+    }
+
+    #[inline]
+    pub fn raw(&self) -> RawLazy {
+        self.raw
+    }
+
+    #[inline]
+    pub fn is_null(&self) -> bool {
+        self.raw.is_null()
+    }
+
+    #[inline]
+    pub fn obj(&self) -> ObjId {
+        self.raw.obj
+    }
+
+    #[inline]
+    pub fn label(&self) -> LabelId {
+        self.raw.label
+    }
+}
+
+// Manual impls: `derive` would put bounds on `T`.
+impl<T> Clone for Lazy<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for Lazy<T> {}
+impl<T> PartialEq for Lazy<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.raw == other.raw
+    }
+}
+impl<T> Eq for Lazy<T> {}
+impl<T> std::fmt::Debug for Lazy<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Lazy({:?}, {:?})", self.raw.obj, self.raw.label)
+    }
+}
+impl<T> Default for Lazy<T> {
+    fn default() -> Self {
+        Lazy::NULL
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Foo;
+
+    #[test]
+    fn null_typed_pointer() {
+        let p: Lazy<Foo> = Lazy::NULL;
+        assert!(p.is_null());
+        assert!(p.raw().is_null());
+        let q = p; // Copy
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn lazy_pointer_is_two_ids() {
+        // The paper reports 8 extra bytes per pointer for the label.
+        assert_eq!(std::mem::size_of::<RawLazy>(), 16);
+        assert_eq!(std::mem::size_of::<Lazy<Foo>>(), 16);
+    }
+}

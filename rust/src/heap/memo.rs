@@ -1,0 +1,273 @@
+//! Memo tables: the per-label partial functions `m_l : V -> V` (§2.2 Def. 2,
+//! flattened per §2.4 Def. 5).
+//!
+//! A memo records which frozen object was copied to which fresh object under
+//! a given label, so that later `Pull`s through the same label are redirected
+//! to the copy. The paper implements these as hash tables and motivates the
+//! by-label partition with cache locality (§3): successive queries share the
+//! label with high probability, so a per-label open-addressing table keeps
+//! the probed region hot.
+//!
+//! This implementation is a linear-probing open-addressing table keyed by
+//! slot index (the memo reference count guarantees a keyed slot is not
+//! recycled, and generation tags catch violations), sized to a power of two,
+//! with Fibonacci hashing. There are no tombstones: deletion happens only
+//! wholesale during sweeps (rebuild) or when the label dies (drop).
+
+use super::ids::ObjId;
+
+const EMPTY: u32 = u32::MAX;
+
+/// Open-addressing hash map `ObjId -> ObjId` specialised for memo use.
+#[derive(Clone, Default)]
+pub struct MemoTable {
+    /// Parallel arrays: `keys[i] == EMPTY` marks an empty bucket.
+    keys: Vec<u32>,
+    key_gens: Vec<u32>,
+    vals: Vec<ObjId>,
+    len: usize,
+    mask: usize,
+}
+
+#[inline]
+fn hash(key: u32, mask: usize) -> usize {
+    // Fibonacci hashing: multiply by 2^32/phi, take high bits via mask after
+    // mixing. Good dispersion for sequential slot indices.
+    let h = key.wrapping_mul(0x9E37_79B9);
+    (h >> 16 ^ h) as usize & mask
+}
+
+impl MemoTable {
+    pub fn new() -> Self {
+        MemoTable {
+            keys: Vec::new(),
+            key_gens: Vec::new(),
+            vals: Vec::new(),
+            len: 0,
+            mask: 0,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Capacity in buckets (0 if unallocated).
+    pub fn capacity(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Approximate heap bytes used by this table.
+    pub fn size_bytes(&self) -> usize {
+        self.keys.len() * (4 + 4 + std::mem::size_of::<ObjId>())
+    }
+
+    /// Look up `m_l(v)`.
+    #[inline]
+    pub fn get(&self, key: ObjId) -> Option<ObjId> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut i = hash(key.key(), self.mask);
+        loop {
+            let k = self.keys[i];
+            if k == EMPTY {
+                return None;
+            }
+            if k == key.key() {
+                debug_assert_eq!(
+                    self.key_gens[i],
+                    key.gen,
+                    "memo key generation mismatch: slot recycled while keyed"
+                );
+                return Some(self.vals[i]);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Insert `m_l(key) <- val`, replacing any existing entry.
+    /// Returns the previous value if the key was present.
+    pub fn insert(&mut self, key: ObjId, val: ObjId) -> Option<ObjId> {
+        debug_assert!(!key.is_null() && !val.is_null());
+        if self.keys.is_empty() || self.len * 4 >= self.keys.len() * 3 {
+            self.grow();
+        }
+        let mut i = hash(key.key(), self.mask);
+        loop {
+            let k = self.keys[i];
+            if k == EMPTY {
+                self.keys[i] = key.key();
+                self.key_gens[i] = key.gen;
+                self.vals[i] = val;
+                self.len += 1;
+                return None;
+            }
+            if k == key.key() {
+                let old = self.vals[i];
+                self.vals[i] = val;
+                self.key_gens[i] = key.gen;
+                return Some(old);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    fn grow(&mut self) {
+        let new_cap = (self.keys.len() * 2).max(8);
+        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY; new_cap]);
+        let old_gens = std::mem::replace(&mut self.key_gens, vec![0; new_cap]);
+        let old_vals = std::mem::replace(&mut self.vals, vec![ObjId::NULL; new_cap]);
+        self.mask = new_cap - 1;
+        self.len = 0;
+        for (j, k) in old_keys.iter().enumerate() {
+            if *k != EMPTY {
+                self.insert(ObjId::new(*k, old_gens[j]), old_vals[j]);
+            }
+        }
+    }
+
+    /// Iterate over `(key, value)` entries.
+    pub fn iter(&self) -> impl Iterator<Item = (ObjId, ObjId)> + '_ {
+        self.keys
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| **k != EMPTY)
+            .map(move |(i, k)| (ObjId::new(*k, self.key_gens[i]), self.vals[i]))
+    }
+
+    /// Rebuild the table keeping only entries for which `keep(key)` holds.
+    /// This is the paper's sweep: entries whose key object has zero shared
+    /// and weak counts can never be pulled again and are dropped. Returns
+    /// the removed `(key, value)` pairs so the caller can adjust reference
+    /// counts.
+    pub fn sweep(&mut self, mut keep: impl FnMut(ObjId) -> bool) -> Vec<(ObjId, ObjId)> {
+        let mut removed = Vec::new();
+        if self.len == 0 {
+            return removed;
+        }
+        let old_keys = std::mem::take(&mut self.keys);
+        let old_gens = std::mem::take(&mut self.key_gens);
+        let old_vals = std::mem::take(&mut self.vals);
+        self.len = 0;
+        self.mask = 0;
+        for (j, k) in old_keys.iter().enumerate() {
+            if *k != EMPTY {
+                let key = ObjId::new(*k, old_gens[j]);
+                if keep(key) {
+                    self.insert(key, old_vals[j]);
+                } else {
+                    removed.push((key, old_vals[j]));
+                }
+            }
+        }
+        removed
+    }
+
+    /// Drain all entries, leaving the table empty.
+    pub fn drain_all(&mut self) -> Vec<(ObjId, ObjId)> {
+        let out: Vec<_> = self.iter().collect();
+        self.keys.clear();
+        self.key_gens.clear();
+        self.vals.clear();
+        self.len = 0;
+        self.mask = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn o(i: u32) -> ObjId {
+        ObjId::new(i, 0)
+    }
+
+    #[test]
+    fn empty_lookup() {
+        let t = MemoTable::new();
+        assert_eq!(t.get(o(3)), None);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn insert_get_replace() {
+        let mut t = MemoTable::new();
+        assert_eq!(t.insert(o(1), o(10)), None);
+        assert_eq!(t.insert(o(2), o(20)), None);
+        assert_eq!(t.get(o(1)), Some(o(10)));
+        assert_eq!(t.get(o(2)), Some(o(20)));
+        assert_eq!(t.get(o(3)), None);
+        assert_eq!(t.insert(o(1), o(11)), Some(o(10)));
+        assert_eq!(t.get(o(1)), Some(o(11)));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn many_inserts_grow() {
+        let mut t = MemoTable::new();
+        for i in 0..1000 {
+            t.insert(o(i), o(i + 100_000));
+        }
+        assert_eq!(t.len(), 1000);
+        for i in 0..1000 {
+            assert_eq!(t.get(o(i)), Some(o(i + 100_000)), "key {i}");
+        }
+        assert_eq!(t.get(o(5000)), None);
+    }
+
+    #[test]
+    fn sweep_removes_dead_keys() {
+        let mut t = MemoTable::new();
+        for i in 0..100 {
+            t.insert(o(i), o(i + 100));
+        }
+        let removed = t.sweep(|k| k.idx % 2 == 0);
+        assert_eq!(removed.len(), 50);
+        assert_eq!(t.len(), 50);
+        assert_eq!(t.get(o(2)), Some(o(102)));
+        assert_eq!(t.get(o(3)), None);
+    }
+
+    #[test]
+    fn clone_preserves_entries() {
+        let mut t = MemoTable::new();
+        for i in 0..37 {
+            t.insert(o(i * 3), o(i));
+        }
+        let u = t.clone();
+        for i in 0..37 {
+            assert_eq!(u.get(o(i * 3)), Some(o(i)));
+        }
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut t = MemoTable::new();
+        t.insert(o(1), o(2));
+        t.insert(o(3), o(4));
+        let all = t.drain_all();
+        assert_eq!(all.len(), 2);
+        assert!(t.is_empty());
+        assert_eq!(t.get(o(1)), None);
+    }
+
+    #[test]
+    fn colliding_keys_probe() {
+        // Keys engineered to collide under the initial mask are still found.
+        let mut t = MemoTable::new();
+        for i in 0..8u32 {
+            t.insert(o(i * 8), o(i));
+        }
+        for i in 0..8u32 {
+            assert_eq!(t.get(o(i * 8)), Some(o(i)));
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Heap instrumentation: allocation, copy, and memo counters.
+//!
+//! These counters drive the paper's evaluation: peak memory (Figures 5–6),
+//! per-generation memory series (Figure 7), and the copy/sharing behaviour
+//! that explains them (eager vs lazy vs lazy+SRO).
+
+/// Counters maintained by the [`Heap`](super::Heap). All sizes are in bytes.
+#[derive(Clone, Debug, Default)]
+pub struct HeapMetrics {
+    /// Objects currently live (payload not yet destroyed).
+    pub live_objects: usize,
+    /// Bytes in live payloads + per-object overhead.
+    pub live_bytes: usize,
+    /// High-water mark of `live_bytes` (+ label/memo bytes).
+    pub peak_bytes: usize,
+    /// Labels currently live.
+    pub live_labels: usize,
+    /// Bytes in live memo tables.
+    pub memo_bytes: usize,
+
+    /// Total objects ever allocated.
+    pub total_allocs: usize,
+    /// Shallow copies performed by `Copy` (Algorithm 6) — the lazy platform's
+    /// actual object copies.
+    pub lazy_copies: usize,
+    /// Objects copied by eager deep copies (eager mode, or `Finish` of cross
+    /// references in lazy mode).
+    pub eager_copies: usize,
+    /// `deep_copy` invocations.
+    pub deep_copies: usize,
+    /// Copies avoided by the in-place thaw optimization (sole-reference
+    /// recycling at copy time, §3).
+    pub thaws: usize,
+    /// Memo insertions skipped by the single-reference optimization
+    /// (Remark 1).
+    pub sro_skips: usize,
+
+    /// Memo lookups that hit / missed.
+    pub memo_hits: usize,
+    pub memo_misses: usize,
+    /// Entries removed by memo sweeps.
+    pub memo_swept: usize,
+
+    /// `Pull` / `Get` operation counts.
+    pub pulls: usize,
+    pub gets: usize,
+    /// Objects frozen by `Freeze` traversals.
+    pub freezes: usize,
+    /// Cross references encountered (edges outside the tree pattern).
+    pub cross_refs: usize,
+}
+
+impl HeapMetrics {
+    #[inline]
+    pub(crate) fn note_peak(&mut self) {
+        let now = self.live_bytes + self.memo_bytes;
+        if now > self.peak_bytes {
+            self.peak_bytes = now;
+        }
+    }
+
+    /// Current footprint (live payloads + memo tables).
+    pub fn current_bytes(&self) -> usize {
+        self.live_bytes + self.memo_bytes
+    }
+
+    /// Reset the peak to the current footprint (for per-phase measurement).
+    pub fn reset_peak(&mut self) {
+        self.peak_bytes = self.current_bytes();
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "live={} objs / {} B (peak {} B), labels={}, copies: lazy={} eager={} thaw={} sro_skips={}, memo: hits={} misses={} swept={}, cross_refs={}",
+            self.live_objects,
+            self.live_bytes,
+            self.peak_bytes,
+            self.live_labels,
+            self.lazy_copies,
+            self.eager_copies,
+            self.thaws,
+            self.sro_skips,
+            self.memo_hits,
+            self.memo_misses,
+            self.memo_swept,
+            self.cross_refs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut m = HeapMetrics::default();
+        m.live_bytes = 100;
+        m.note_peak();
+        assert_eq!(m.peak_bytes, 100);
+        m.live_bytes = 50;
+        m.note_peak();
+        assert_eq!(m.peak_bytes, 100);
+        m.memo_bytes = 80;
+        m.note_peak();
+        assert_eq!(m.peak_bytes, 130);
+        m.reset_peak();
+        assert_eq!(m.peak_bytes, 130);
+        m.live_bytes = 0;
+        m.memo_bytes = 0;
+        m.reset_peak();
+        assert_eq!(m.peak_bytes, 0);
+    }
+
+    #[test]
+    fn summary_contains_counts() {
+        let mut m = HeapMetrics::default();
+        m.lazy_copies = 3;
+        assert!(m.summary().contains("lazy=3"));
+    }
+}

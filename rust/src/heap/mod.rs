@@ -1,0 +1,1441 @@
+//! The lazy object copy-on-write platform — the paper's core contribution.
+//!
+//! Objects live in a slab [`Heap`]. Pointers between them are *lazy
+//! pointers* ([`Lazy`]): a pair of (object id, label id), the edge
+//! representation of the labeled multigraph H (§2.3). A
+//! [`deep_copy`](Heap::deep_copy) is O(1)+memo-clone: it freezes the
+//! reachable subgraph (Algorithm 7) and mints a new label whose memo is a
+//! (swept) clone of the source label's memo (Algorithm 3 + Definition 5).
+//! Objects are copied only when first written through a given label
+//! (Algorithms 4–6), with cross references — edges outside the
+//! tree-structured copy pattern — handled by eager `Finish` (Algorithm 8).
+//!
+//! Three run-time configurations mirror the paper's §4 compile-time ones:
+//! [`CopyMode::Eager`] (deep copies materialize immediately),
+//! [`CopyMode::Lazy`], and [`CopyMode::LazySro`] (lazy + the
+//! single-reference optimization of Remark 1).
+//!
+//! Threading: heap operations take `&mut Heap` and are serialized; the
+//! population coordinator parallelizes the *numeric* propagate/weight work
+//! (which does not touch the heap) across the thread pool, and batches
+//! tensorizable state through the PJRT runtime. Rust ownership replaces the
+//! paper's "judicious atomics".
+
+mod ids;
+mod lazy;
+mod memo;
+mod metrics;
+mod payload;
+mod slot;
+
+pub use ids::{LabelId, ObjId};
+pub use lazy::{Lazy, RawLazy};
+pub use memo::MemoTable;
+pub use metrics::HeapMetrics;
+pub use payload::{EdgeSlot, Payload};
+
+use slot::{Slot, OBJ_OVERHEAD};
+
+/// Copy strategy, corresponding to the paper's three evaluation
+/// configurations (§4).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CopyMode {
+    /// `deep_copy` performs an immediate recursive copy (the baseline).
+    Eager,
+    /// Lazy copy-on-write (labels + memos), without Remark 1.
+    Lazy,
+    /// Lazy copy-on-write with the single-reference optimization.
+    LazySro,
+}
+
+impl CopyMode {
+    pub fn is_lazy(self) -> bool {
+        !matches!(self, CopyMode::Eager)
+    }
+
+    pub fn parse(s: &str) -> Option<CopyMode> {
+        match s {
+            "eager" => Some(CopyMode::Eager),
+            "lazy" => Some(CopyMode::Lazy),
+            "lazy-sro" | "lazy_sro" | "sro" => Some(CopyMode::LazySro),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CopyMode::Eager => "eager",
+            CopyMode::Lazy => "lazy",
+            CopyMode::LazySro => "lazy-sro",
+        }
+    }
+
+    pub const ALL: [CopyMode; 3] = [CopyMode::Eager, CopyMode::Lazy, CopyMode::LazySro];
+}
+
+struct LabelSlot {
+    memo: MemoTable,
+    shared: u32,
+    gen: u32,
+    alive: bool,
+}
+
+/// The object heap: slab of objects, slab of labels, context stack, and
+/// reference-count machinery.
+pub struct Heap {
+    slots: Vec<Slot>,
+    free_slots: Vec<u32>,
+    labels: Vec<LabelSlot>,
+    free_labels: Vec<u32>,
+    mode: CopyMode,
+    context: Vec<LabelId>,
+    pub metrics: HeapMetrics,
+    // Deferred reference-count release queues (drained iteratively to avoid
+    // unbounded recursion on long death cascades).
+    obj_dec: Vec<ObjId>,
+    label_dec: Vec<LabelId>,
+    draining: bool,
+    // Reusable edge-diff scratch buffers (mutate hot path).
+    scratch_before: Vec<RawLazy>,
+    scratch_after: Vec<RawLazy>,
+    /// Live stored cross-reference edges. When zero (the tree-pattern fast
+    /// path — all five evaluation models), `deep_copy` skips the
+    /// cross-reference scan entirely.
+    live_cross_edges: usize,
+}
+
+/// The pinned root label (root context, §2.4 Def. 4).
+pub const ROOT_LABEL: LabelId = LabelId { idx: 0, gen: 0 };
+
+impl Heap {
+    pub fn new(mode: CopyMode) -> Self {
+        let mut h = Heap {
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            labels: Vec::new(),
+            free_labels: Vec::new(),
+            mode,
+            context: vec![ROOT_LABEL],
+            metrics: HeapMetrics::default(),
+            obj_dec: Vec::new(),
+            label_dec: Vec::new(),
+            draining: false,
+            scratch_before: Vec::new(),
+            scratch_after: Vec::new(),
+            live_cross_edges: 0,
+        };
+        // Pinned root label (never collected).
+        h.labels.push(LabelSlot {
+            memo: MemoTable::new(),
+            shared: 1,
+            gen: 0,
+            alive: true,
+        });
+        h.metrics.live_labels = 1;
+        h
+    }
+
+    #[inline]
+    pub fn mode(&self) -> CopyMode {
+        self.mode
+    }
+
+    /// Current context label (top of the context stack, Def. 4).
+    #[inline]
+    pub fn context(&self) -> LabelId {
+        *self.context.last().expect("context stack never empty")
+    }
+
+    pub fn push_context(&mut self, l: LabelId) {
+        self.context.push(l);
+    }
+
+    pub fn pop_context(&mut self) {
+        assert!(self.context.len() > 1, "cannot pop the root context");
+        self.context.pop();
+    }
+
+    /// Run `f` with `l` as the current context (Condition 4: objects
+    /// allocated inside get `f(v) = l`).
+    pub fn with_context<R>(&mut self, l: LabelId, f: impl FnOnce(&mut Heap) -> R) -> R {
+        self.push_context(l);
+        let r = f(self);
+        self.pop_context();
+        r
+    }
+
+    // ------------------------------------------------------------------
+    // Slot / label plumbing
+    // ------------------------------------------------------------------
+
+    #[inline]
+    fn slot(&self, o: ObjId) -> &Slot {
+        let s = &self.slots[o.idx as usize];
+        debug_assert_eq!(s.gen, o.gen, "stale ObjId: slot recycled");
+        s
+    }
+
+    #[inline]
+    fn slot_mut(&mut self, o: ObjId) -> &mut Slot {
+        let s = &mut self.slots[o.idx as usize];
+        debug_assert_eq!(s.gen, o.gen, "stale ObjId: slot recycled");
+        s
+    }
+
+    #[inline]
+    fn label_alive(&self, l: LabelId) -> bool {
+        let s = &self.labels[l.idx as usize];
+        s.alive && s.gen == l.gen
+    }
+
+    fn new_slot(&mut self, payload: Box<dyn Payload>, label: LabelId, shared: u32) -> ObjId {
+        let bytes = payload.size_bytes() as u32;
+        let idx = if let Some(idx) = self.free_slots.pop() {
+            let s = &mut self.slots[idx as usize];
+            debug_assert!(s.destroyed() && s.memo == 0);
+            let gen = s.gen;
+            *s = Slot::vacant(gen);
+            s.payload = Some(payload);
+            s.label = label;
+            s.shared = shared;
+            s.weak = 1;
+            s.memo = 1;
+            s.bytes = bytes;
+            idx
+        } else {
+            let mut s = Slot::vacant(0);
+            s.payload = Some(payload);
+            s.label = label;
+            s.shared = shared;
+            s.weak = 1;
+            s.memo = 1;
+            s.bytes = bytes;
+            self.slots.push(s);
+            (self.slots.len() - 1) as u32
+        };
+        let gen = self.slots[idx as usize].gen;
+        self.metrics.total_allocs += 1;
+        self.metrics.live_objects += 1;
+        self.metrics.live_bytes += bytes as usize + OBJ_OVERHEAD;
+        self.metrics.note_peak();
+        ObjId::new(idx, gen)
+    }
+
+    fn new_label(&mut self, memo: MemoTable) -> LabelId {
+        self.metrics.memo_bytes += memo.size_bytes();
+        self.metrics.live_labels += 1;
+        let id = if let Some(idx) = self.free_labels.pop() {
+            let s = &mut self.labels[idx as usize];
+            debug_assert!(!s.alive);
+            s.memo = memo;
+            s.shared = 0;
+            s.alive = true;
+            LabelId::new(idx, s.gen)
+        } else {
+            self.labels.push(LabelSlot {
+                memo,
+                shared: 0,
+                gen: 0,
+                alive: true,
+            });
+            LabelId::new((self.labels.len() - 1) as u32, 0)
+        };
+        self.metrics.note_peak();
+        id
+    }
+
+    // ------------------------------------------------------------------
+    // Reference counting (three counts: shared / weak / memo, §3)
+    // ------------------------------------------------------------------
+
+    #[inline]
+    fn inc_shared(&mut self, o: ObjId) {
+        self.slot_mut(o).shared += 1;
+    }
+
+    #[inline]
+    fn inc_label(&mut self, l: LabelId) {
+        let s = &mut self.labels[l.idx as usize];
+        debug_assert!(s.alive && s.gen == l.gen, "stale LabelId");
+        s.shared += 1;
+    }
+
+    fn dec_shared(&mut self, o: ObjId) {
+        self.obj_dec.push(o);
+        self.drain_rc();
+    }
+
+    fn dec_label(&mut self, l: LabelId) {
+        self.label_dec.push(l);
+        self.drain_rc();
+    }
+
+    /// Drain the deferred release queues. Destroying an object decrements
+    /// its out-edge targets (and cross-reference labels); killing a label
+    /// decrements its memo values — all cascades are processed iteratively.
+    fn drain_rc(&mut self) {
+        if self.draining {
+            return; // an outer drain_rc call will finish the queues
+        }
+        self.draining = true;
+        loop {
+            if let Some(o) = self.obj_dec.pop() {
+                let s = self.slot_mut(o);
+                debug_assert!(s.shared > 0, "shared count underflow");
+                s.shared -= 1;
+                if s.shared == 0 && !s.destroyed() {
+                    self.destroy(o);
+                }
+            } else if let Some(l) = self.label_dec.pop() {
+                let s = &mut self.labels[l.idx as usize];
+                debug_assert!(s.alive && s.gen == l.gen, "stale LabelId");
+                debug_assert!(s.shared > 0, "label count underflow");
+                s.shared -= 1;
+                if s.shared == 0 {
+                    self.kill_label(l);
+                }
+            } else {
+                break;
+            }
+        }
+        self.draining = false;
+    }
+
+    /// Destroy an object: drop the payload, release out-edges. The slot is
+    /// freed only when the memo count also reaches zero (§3: memo keys keep
+    /// the slot reserved so ids cannot alias).
+    fn destroy(&mut self, o: ObjId) {
+        let slot = self.slot_mut(o);
+        let payload = slot.payload.take().expect("destroy of destroyed object");
+        let f_v = slot.label;
+        let bytes = slot.bytes as usize;
+        let mut edges = Vec::new();
+        payload.edges(&mut edges);
+        drop(payload);
+        self.metrics.live_objects -= 1;
+        self.metrics.live_bytes -= bytes + OBJ_OVERHEAD;
+        for d in edges {
+            if d.label != f_v && self.mode.is_lazy() {
+                self.live_cross_edges -= 1;
+                self.label_dec.push(d.label); // cross reference held its label
+            }
+            self.obj_dec.push(d.obj);
+        }
+        // weak self-count drops with the payload; memo self-count drops with
+        // the weak count.
+        let slot = self.slot_mut(o);
+        slot.weak -= 1;
+        if slot.weak == 0 {
+            slot.memo -= 1;
+            if slot.memo == 0 {
+                self.free_slot(o);
+            }
+        }
+    }
+
+    #[inline]
+    fn dec_memo_count(&mut self, o: ObjId) {
+        let s = &mut self.slots[o.idx as usize];
+        debug_assert!(s.memo > 0, "memo count underflow");
+        s.memo -= 1;
+        if s.memo == 0 {
+            debug_assert!(s.destroyed() && s.weak == 0);
+            self.free_slot(o);
+        }
+    }
+
+    fn free_slot(&mut self, o: ObjId) {
+        let s = &mut self.slots[o.idx as usize];
+        debug_assert!(s.destroyed());
+        let gen = s.gen.wrapping_add(1);
+        *s = Slot::vacant(gen);
+        self.free_slots.push(o.idx);
+    }
+
+    fn kill_label(&mut self, l: LabelId) {
+        let s = &mut self.labels[l.idx as usize];
+        s.alive = false;
+        self.metrics.live_labels -= 1;
+        self.metrics.memo_bytes -= s.memo.size_bytes();
+        let entries = s.memo.drain_all();
+        let gen = s.gen.wrapping_add(1);
+        s.gen = gen;
+        self.free_labels.push(l.idx);
+        for (k, v) in entries {
+            self.dec_memo_count(k);
+            self.obj_dec.push(v);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Allocation and root handles
+    // ------------------------------------------------------------------
+
+    /// Allocate a new object under the current context. Returns an *owning*
+    /// handle (release with [`Heap::release`] or store into a field).
+    pub fn alloc<T: Payload>(&mut self, value: T) -> Lazy<T> {
+        let raw = self.alloc_raw(Box::new(value));
+        Lazy::from_raw(raw)
+    }
+
+    pub fn alloc_raw(&mut self, payload: Box<dyn Payload>) -> RawLazy {
+        let ctx = if self.mode.is_lazy() {
+            self.context()
+        } else {
+            ROOT_LABEL
+        };
+        // Edges already inside the payload become owning stored edges.
+        let mut edges = Vec::new();
+        payload.edges(&mut edges);
+        let o = self.new_slot(payload, ctx, 1);
+        for d in edges {
+            self.on_edge_added(d, ctx);
+        }
+        if self.mode.is_lazy() {
+            self.inc_label(ctx);
+        }
+        RawLazy { obj: o, label: ctx }
+    }
+
+    /// Account for a new owning stored edge `d` inside an object whose
+    /// creating label is `f_owner` (Condition 4 bookkeeping + the paper's
+    /// cross-reference label counting).
+    fn on_edge_added(&mut self, d: RawLazy, f_owner: LabelId) {
+        self.inc_shared(d.obj);
+        if self.mode.is_lazy() && d.label != f_owner {
+            self.metrics.cross_refs += 1;
+            self.live_cross_edges += 1;
+            self.inc_label(d.label);
+        }
+        // Remark 1, condition 2: a new in-edge may duplicate an existing
+        // in-edge's label, so the flag (set at freeze time) no longer
+        // guarantees distinct labels at copy time.
+        let s = self.slot_mut(d.obj);
+        if s.frozen && s.single_ref {
+            s.single_ref = false;
+        }
+    }
+
+    fn on_edge_removed(&mut self, d: RawLazy, f_owner: LabelId) {
+        if self.mode.is_lazy() && d.label != f_owner {
+            self.live_cross_edges -= 1;
+            self.label_dec.push(d.label);
+        }
+        self.obj_dec.push(d.obj);
+        self.drain_rc();
+    }
+
+    /// Does adding edge `d` require an eager Get to preserve correctness?
+    /// True when the target already skipped a memo update under `d.label`
+    /// (§3: "In this situation GET is triggered on the edge").
+    fn sro_hazard(&self, d: RawLazy) -> bool {
+        if !self.mode.is_lazy() || d.obj.is_null() {
+            return false;
+        }
+        let s = self.slot(d.obj);
+        s.frozen && s.copied_once && (s.skipped_many || s.skipped_label == d.label)
+    }
+
+    /// Retain an extra owning handle to the same object (shared +1).
+    pub fn clone_handle<T>(&mut self, e: &Lazy<T>) -> Lazy<T> {
+        if e.is_null() {
+            return Lazy::NULL;
+        }
+        self.inc_shared(e.raw.obj);
+        if self.mode.is_lazy() {
+            self.inc_label(e.raw.label);
+            // Remark 1, condition 2: the retained handle duplicates an
+            // in-edge label, so the single-reference flag (set at freeze
+            // with in-degree 1) no longer guarantees distinct labels at
+            // copy time — a skip now would strand this handle on the
+            // stale original.
+            let s = self.slot_mut(e.raw.obj);
+            if s.frozen && s.single_ref {
+                s.single_ref = false;
+            }
+        }
+        *e
+    }
+
+    /// Release an owning handle.
+    pub fn release<T>(&mut self, e: Lazy<T>) {
+        self.release_raw(e.raw);
+    }
+
+    pub fn release_raw(&mut self, e: RawLazy) {
+        if e.is_null() {
+            return;
+        }
+        if self.mode.is_lazy() {
+            self.label_dec.push(e.label);
+        }
+        self.dec_shared(e.obj);
+    }
+
+    // ------------------------------------------------------------------
+    // The lazy operations: Pull, Get, Copy, Freeze, Finish, DeepCopy
+    // ------------------------------------------------------------------
+
+    /// `Pull` (Algorithm 4): chase memo redirections so `t(e)` is correct
+    /// for reading. `owning` edges transfer their shared count to the new
+    /// target; borrowed locals do not.
+    fn pull_raw(&mut self, e: &mut RawLazy, owning: bool) {
+        if e.obj.is_null() || !self.mode.is_lazy() {
+            return;
+        }
+        self.metrics.pulls += 1;
+        if !self.label_alive(e.label) {
+            // The deep-copy lineage identified by this label has no owning
+            // references left; its memo (and private copies) are gone and no
+            // redirection applies.
+            return;
+        }
+        loop {
+            let memo = &self.labels[e.label.idx as usize].memo;
+            match memo.get(e.obj) {
+                Some(u) => {
+                    self.metrics.memo_hits += 1;
+                    if owning {
+                        self.inc_shared(u);
+                        let old = e.obj;
+                        e.obj = u;
+                        self.dec_shared(old);
+                    } else {
+                        e.obj = u;
+                    }
+                }
+                None => {
+                    self.metrics.memo_misses += 1;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// `Get` (Algorithm 5): pull, then copy-on-write if the target is
+    /// frozen. After this, `t(e)` is safe to mutate.
+    fn get_raw(&mut self, e: &mut RawLazy, owning: bool) {
+        self.pull_raw(e, owning);
+        if e.obj.is_null() || !self.mode.is_lazy() {
+            return;
+        }
+        self.metrics.gets += 1;
+        let v = e.obj;
+        if !self.slot(v).frozen {
+            return;
+        }
+        let l = e.label;
+        // Copy elimination (§3): a frozen object whose only reference is
+        // this edge can be thawed and reused in place.
+        {
+            let s = self.slot(v);
+            if owning && s.shared == 1 && !s.in_memo_ran && s.memo == 1 {
+                self.thaw(v, l);
+                return;
+            }
+        }
+        // A dead label (lineage with no owning references left) has no memo
+        // to record into and no other live edge that could pull through it:
+        // copy without a memo entry, like the single-reference optimization.
+        let flagged = (owning && self.mode == CopyMode::LazySro && self.slot(v).single_ref)
+            || !self.label_alive(l);
+        let u = self.copy_object(v, l);
+        {
+            let s = self.slot_mut(v);
+            s.copied_once = true;
+            if flagged {
+                if !s.skipped_label.is_null() && s.skipped_label != l {
+                    s.skipped_many = true;
+                }
+                s.skipped_label = l;
+            }
+        }
+        if flagged {
+            // Remark 1: single in-edge at freeze time, distinct labels at
+            // copy time — the memo will never be queried for v under l.
+            self.metrics.sro_skips += 1;
+        } else {
+            self.memo_insert(l, v, u);
+        }
+        // t(e) <- u
+        if owning {
+            self.inc_shared(u);
+            let old = e.obj;
+            e.obj = u;
+            self.dec_shared(old);
+        } else {
+            debug_assert!(
+                self.slot(u).shared > 0,
+                "borrowed get produced an unowned copy"
+            );
+            e.obj = u;
+        }
+    }
+
+    fn memo_insert(&mut self, l: LabelId, v: ObjId, u: ObjId) {
+        debug_assert!(self.label_alive(l));
+        let before = self.labels[l.idx as usize].memo.size_bytes();
+        let prev = self.labels[l.idx as usize].memo.insert(v, u);
+        debug_assert!(prev.is_none(), "double copy of {v:?} under {l:?}");
+        let after = self.labels[l.idx as usize].memo.size_bytes();
+        self.metrics.memo_bytes += after - before;
+        self.slot_mut(v).memo += 1; // key: memo count
+        self.inc_shared(u); // value: shared count
+        self.slot_mut(u).in_memo_ran = true;
+        self.metrics.note_peak();
+    }
+
+    /// `Copy` (Algorithm 6): shallow-copy the frozen object `v` for label
+    /// `l`. Cross references in `v` (edges whose label differs from `f(v)`)
+    /// are outside the tree pattern: they are eagerly `Finish`ed and frozen
+    /// first, then shared by the clone. Tree-pattern edges in the clone are
+    /// relabeled to `l`, enrolling the shared targets in the new lazy copy.
+    fn copy_object(&mut self, v: ObjId, l: LabelId) -> ObjId {
+        let f_v = self.slot(v).label;
+        // Phase 1: resolve cross references on the original.
+        let mut payload = self
+            .slot_mut(v)
+            .payload
+            .take()
+            .expect("copy of destroyed object");
+        let mut probe = std::mem::take(&mut self.scratch_before);
+        probe.clear();
+        payload.edges(&mut probe);
+        let has_cross = probe.iter().any(|d| d.label != f_v);
+        self.scratch_before = probe;
+        if has_cross {
+            self.metrics.cross_refs += 1;
+            payload.edges_mut(&mut |d: &mut RawLazy| {
+                if !d.is_null() && d.label != f_v {
+                    // Owning stored edge: Finish + Freeze (bookkeeping
+                    // writes on a read-only object are permitted).
+                    self.finish_edge(d);
+                    self.freeze_raw(*d);
+                }
+            });
+        }
+        // Phase 2: clone and fix up the clone's edges.
+        let mut clone = payload.clone_payload();
+        self.slot_mut(v).payload = Some(payload);
+        let mut incs: Vec<RawLazy> = Vec::new();
+        clone.edges_mut(&mut |d: &mut RawLazy| {
+            if d.is_null() {
+                return;
+            }
+            if d.label == f_v {
+                d.label = l; // adopt the new label (tree pattern)
+            }
+            incs.push(*d);
+        });
+        for d in &incs {
+            self.inc_shared(d.obj);
+            if d.label != l {
+                self.live_cross_edges += 1;
+                self.inc_label(d.label); // cross reference in the clone
+            }
+        }
+        self.metrics.lazy_copies += 1;
+        self.new_slot(clone, l, 0)
+    }
+
+    /// In-place copy elimination (§3): thaw a frozen object whose sole
+    /// reference is the writing edge, relabeling it to `l`.
+    fn thaw(&mut self, v: ObjId, l: LabelId) {
+        let f_v = self.slot(v).label;
+        self.metrics.thaws += 1;
+        let mut payload = self
+            .slot_mut(v)
+            .payload
+            .take()
+            .expect("thaw of destroyed object");
+        let mut label_decs: Vec<LabelId> = Vec::new();
+        payload.edges_mut(&mut |d: &mut RawLazy| {
+            if d.is_null() {
+                return;
+            }
+            if d.label == f_v {
+                // Tree-pattern edge: relabel. It was uncounted (non-cross)
+                // and stays uncounted iff the new label equals l.
+                d.label = l;
+            } else {
+                self.finish_edge(d);
+                self.freeze_raw(*d);
+                if d.label == l {
+                    // Was cross (counted), now non-cross: drop the count.
+                    self.live_cross_edges -= 1;
+                    label_decs.push(d.label);
+                }
+            }
+        });
+        let s = self.slot_mut(v);
+        s.payload = Some(payload);
+        s.frozen = false;
+        s.single_ref = false;
+        s.label = l;
+        for d in label_decs {
+            self.dec_label(d);
+        }
+    }
+
+    /// `Freeze` (Algorithm 7): mark the subgraph reachable from `e`
+    /// read-only; record the Remark 1 flag where it applies.
+    fn freeze_raw(&mut self, e: RawLazy) {
+        if e.obj.is_null() || !self.mode.is_lazy() {
+            return;
+        }
+        let sro = self.mode == CopyMode::LazySro;
+        let mut work = vec![e.obj];
+        let mut edges = Vec::new();
+        while let Some(v) = work.pop() {
+            let s = self.slot_mut(v);
+            if s.frozen || s.destroyed() {
+                continue;
+            }
+            s.frozen = true;
+            if sro && s.shared == 1 && !s.in_memo_ran {
+                s.single_ref = true;
+            }
+            self.metrics.freezes += 1;
+            edges.clear();
+            if let Some(p) = &self.slot(v).payload {
+                p.edges(&mut edges);
+            }
+            for d in &edges {
+                work.push(d.obj);
+            }
+        }
+    }
+
+    /// `Finish` (Algorithm 8): complete all pending lazy copies in the
+    /// subgraph reachable from `e` (eager deep copy of the out-of-tree
+    /// region). Mutates stored edges in place.
+    fn finish_edge(&mut self, e: &mut RawLazy) {
+        if e.obj.is_null() || !self.mode.is_lazy() {
+            return;
+        }
+        // Finish this edge: if its label has not propagated to the target,
+        // Get it (copying as needed).
+        self.pull_raw(e, true);
+        let needs = {
+            let s = self.slot(e.obj);
+            !s.destroyed() && e.label != s.label
+        };
+        if needs {
+            self.metrics.eager_copies += 1;
+            self.get_raw(e, true);
+        }
+        // Recurse into the target's stored edges.
+        let v = e.obj;
+        let mut payload = match self.slot_mut(v).payload.take() {
+            Some(p) => p,
+            None => return, // cycle back into an object being finished
+        };
+        payload.edges_mut(&mut |d: &mut RawLazy| {
+            if !d.is_null() {
+                self.finish_edge(d);
+            }
+        });
+        self.slot_mut(v).payload = Some(payload);
+    }
+
+    /// `DeepCopy` (Algorithm 3). In lazy modes: freeze the reachable
+    /// subgraph, mint a new label whose memo is a swept clone of the source
+    /// label's memo (flattened memos, Definition 5), and return a new
+    /// owning handle — O(reachable) only on first copy (freeze), O(memo)
+    /// afterwards, and no object payload is copied at all.
+    /// In eager mode: a full recursive copy, preserving internal sharing.
+    pub fn deep_copy<T>(&mut self, e: &Lazy<T>) -> Lazy<T> {
+        Lazy::from_raw(self.deep_copy_raw(e.raw))
+    }
+
+    pub fn deep_copy_raw(&mut self, e: RawLazy) -> RawLazy {
+        if e.obj.is_null() {
+            return RawLazy::NULL;
+        }
+        self.metrics.deep_copies += 1;
+        if !self.mode.is_lazy() {
+            return self.eager_deep_copy(e);
+        }
+        // §2.3: the single-label scheme is exact only for tree-structured
+        // copies. If the reachable *view* contains a cross reference —
+        // mutable aliasing with another lineage — "forego the lazy copy and
+        // trigger an eager deep copy". The global counter makes this check
+        // free for pure tree-pattern workloads.
+        if self.live_cross_edges > 0 && self.view_has_cross(e) {
+            return self.eager_fallback(e);
+        }
+        let mut e = e;
+        self.pull_raw(&mut e, false);
+        self.freeze_raw(e);
+        // Clone the source label's memo, sweeping entries whose key can no
+        // longer be pulled (zero shared count).
+        let memo = if self.label_alive(e.label) {
+            let src = &self.labels[e.label.idx as usize].memo;
+            let mut cloned = MemoTable::new();
+            let mut keep: Vec<(ObjId, ObjId)> = Vec::new();
+            let mut swept = 0usize;
+            for (k, v) in src.iter() {
+                if self.slots[k.idx as usize].shared > 0 {
+                    keep.push((k, v));
+                } else {
+                    swept += 1;
+                }
+            }
+            self.metrics.memo_swept += swept;
+            for (k, v) in &keep {
+                cloned.insert(*k, *v);
+            }
+            for (k, v) in keep {
+                self.slot_mut(k).memo += 1;
+                self.inc_shared(v);
+                // The value may be an unfrozen lineage-private copy that is
+                // only memo-reachable; the new label's reader can pull to
+                // it, so it must be frozen with the rest of the view.
+                self.freeze_raw(RawLazy {
+                    obj: v,
+                    label: e.label,
+                });
+            }
+            cloned
+        } else {
+            MemoTable::new()
+        };
+        let l = self.new_label(memo);
+        self.inc_label(l); // returned handle owns the label
+        self.inc_shared(e.obj);
+        RawLazy { obj: e.obj, label: l }
+    }
+
+    /// Walk the *pulled view* reachable from `e` (applying the label
+    /// propagation rule per edge, as reads would) looking for any cross
+    /// reference. Only called when `live_cross_edges > 0`.
+    fn view_has_cross(&mut self, e: RawLazy) -> bool {
+        use std::collections::HashSet;
+        let mut seen: HashSet<(ObjId, LabelId)> = HashSet::new();
+        let mut work: Vec<RawLazy> = vec![e];
+        let mut edges = Vec::new();
+        while let Some(mut cur) = work.pop() {
+            self.pull_raw(&mut cur, false);
+            if !seen.insert((cur.obj, cur.label)) {
+                continue;
+            }
+            let s = self.slot(cur.obj);
+            let f_v = s.label;
+            edges.clear();
+            if let Some(p) = &s.payload {
+                p.edges(&mut edges);
+            }
+            for d in &edges {
+                if d.label != f_v {
+                    return true; // cross reference in the view
+                }
+                // Tree-pattern edge: viewed under the reader's label.
+                work.push(RawLazy {
+                    obj: d.obj,
+                    label: cur.label,
+                });
+            }
+        }
+        false
+    }
+
+    /// Eager deep copy of a *lazy-mode* subgraph: copies the pulled view
+    /// (resolving memo redirections per edge), preserving internal sharing.
+    /// The result is a fresh private structure under a new label.
+    fn eager_fallback(&mut self, root: RawLazy) -> RawLazy {
+        use std::collections::HashMap;
+        let l = self.new_label(MemoTable::new());
+        // Map (viewed object, view label) -> clone.
+        let mut map: HashMap<(ObjId, LabelId), ObjId> = HashMap::new();
+        let mut order: Vec<(ObjId, LabelId, ObjId)> = Vec::new();
+        let mut work: Vec<RawLazy> = vec![root];
+        let mut edges = Vec::new();
+        while let Some(mut cur) = work.pop() {
+            self.pull_raw(&mut cur, false);
+            if map.contains_key(&(cur.obj, cur.label)) {
+                continue;
+            }
+            let clone = self
+                .slot(cur.obj)
+                .payload
+                .as_ref()
+                .expect("deep copy of destroyed object")
+                .clone_payload();
+            let u = self.new_slot(clone, l, 0);
+            self.metrics.eager_copies += 1;
+            map.insert((cur.obj, cur.label), u);
+            order.push((cur.obj, cur.label, u));
+            let f_v = self.slot(cur.obj).label;
+            edges.clear();
+            self.slot(cur.obj).payload.as_ref().unwrap().edges(&mut edges);
+            for d in &edges {
+                let view = if d.label == f_v { cur.label } else { d.label };
+                work.push(RawLazy {
+                    obj: d.obj,
+                    label: view,
+                });
+            }
+        }
+        // Rewire the clones' edges to the corresponding clones.
+        for (v, view, u) in order {
+            let f_v = self.slot(v).label;
+            let mut payload = self.slot_mut(u).payload.take().unwrap();
+            let mut incs: Vec<ObjId> = Vec::new();
+            payload.edges_mut(&mut |d: &mut RawLazy| {
+                if d.is_null() {
+                    return;
+                }
+                let child_view = if d.label == f_v { view } else { d.label };
+                // Resolve the edge the way the walk did.
+                let mut resolved = RawLazy {
+                    obj: d.obj,
+                    label: child_view,
+                };
+                self.pull_raw(&mut resolved, false);
+                let key = (resolved.obj, resolved.label);
+                d.obj = map[&key];
+                d.label = l; // fresh private structure: all tree-pattern
+                incs.push(d.obj);
+            });
+            self.slot_mut(u).payload = Some(payload);
+            for t in incs {
+                self.inc_shared(t);
+            }
+        }
+        let mut start = root;
+        self.pull_raw(&mut start, false);
+        let u = map[&(start.obj, start.label)];
+        self.inc_shared(u);
+        self.inc_label(l);
+        RawLazy { obj: u, label: l }
+    }
+
+    /// Force an *eager* deep copy regardless of mode — the paper's §4 VBD
+    /// note: "a deep copy of a single particle between iterations that must
+    /// be completed eagerly, as it is outside the tree pattern" (particle
+    /// Gibbs reference trajectories).
+    pub fn deep_copy_eager<T>(&mut self, e: &Lazy<T>) -> Lazy<T> {
+        if e.is_null() {
+            return Lazy::NULL;
+        }
+        self.metrics.deep_copies += 1;
+        if self.mode.is_lazy() {
+            Lazy::from_raw(self.eager_fallback(e.raw))
+        } else {
+            Lazy::from_raw(self.eager_deep_copy(e.raw))
+        }
+    }
+
+    fn eager_deep_copy(&mut self, root: RawLazy) -> RawLazy {
+        use std::collections::HashMap;
+        let mut map: HashMap<ObjId, ObjId> = HashMap::new();
+        let mut order: Vec<ObjId> = Vec::new();
+        let mut work = vec![root.obj];
+        let mut edges = Vec::new();
+        // Discover the reachable subgraph, cloning payloads.
+        while let Some(v) = work.pop() {
+            if map.contains_key(&v) {
+                continue;
+            }
+            let clone = self
+                .slot(v)
+                .payload
+                .as_ref()
+                .expect("deep copy of destroyed object")
+                .clone_payload();
+            let u = self.new_slot(clone, ROOT_LABEL, 0);
+            self.metrics.eager_copies += 1;
+            map.insert(v, u);
+            order.push(v);
+            edges.clear();
+            self.slot(v).payload.as_ref().unwrap().edges(&mut edges);
+            for d in &edges {
+                work.push(d.obj);
+            }
+        }
+        // Rewire each clone's edges to the corresponding copies.
+        for v in order {
+            let u = map[&v];
+            let mut payload = self.slot_mut(u).payload.take().unwrap();
+            let mut incs: Vec<ObjId> = Vec::new();
+            payload.edges_mut(&mut |d: &mut RawLazy| {
+                if !d.is_null() {
+                    d.obj = map[&d.obj];
+                    d.label = ROOT_LABEL;
+                    incs.push(d.obj);
+                }
+            });
+            self.slot_mut(u).payload = Some(payload);
+            for t in incs {
+                self.inc_shared(t);
+            }
+        }
+        let u = map[&root.obj];
+        self.inc_shared(u); // returned handle
+        RawLazy {
+            obj: u,
+            label: ROOT_LABEL,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Typed access
+    // ------------------------------------------------------------------
+
+    /// Read the target of `e` (pulls a borrowed local; `e` itself is
+    /// updated so later accesses skip the memo chase).
+    pub fn read<T: Payload, R>(&mut self, e: &mut Lazy<T>, f: impl FnOnce(&T) -> R) -> R {
+        self.pull_raw(&mut e.raw, false);
+        let s = self.slot(e.raw.obj);
+        let p = s
+            .payload
+            .as_ref()
+            .expect("read of destroyed object")
+            .as_any()
+            .downcast_ref::<T>()
+            .expect("payload type mismatch");
+        f(p)
+    }
+
+    /// Read a pointer field out of `parent`, applying the label propagation
+    /// rule: a tree-pattern field (stored label == `f(owner)`) is viewed
+    /// under the *reader's* label, so pulls deep inside shared frozen
+    /// regions consult the reader's flattened memo (Definition 5); a
+    /// cross-reference field keeps its own (finished) label.
+    pub fn read_ptr<P: Payload, T>(
+        &mut self,
+        parent: &mut Lazy<P>,
+        get: impl FnOnce(&P) -> Lazy<T>,
+    ) -> Lazy<T> {
+        self.pull_raw(&mut parent.raw, false);
+        let owner = self.slot(parent.raw.obj);
+        let f_owner = owner.label;
+        let p = owner
+            .payload
+            .as_ref()
+            .expect("read of destroyed object")
+            .as_any()
+            .downcast_ref::<P>()
+            .expect("payload type mismatch");
+        let mut child = get(p);
+        if !child.is_null() && child.raw.label == f_owner {
+            child.raw.label = parent.raw.label;
+        }
+        child
+    }
+
+    /// Make the target of a stored pointer field writable, updating the
+    /// stored edge in place (`t(e) ← u`, Algorithm 5 on an owning edge).
+    /// This is how writes descend into a structure — the paper's Table 1
+    /// pattern: "as each node in the list is accessed it must be copied, as
+    /// write access is potentially required". Requires a *writable* parent
+    /// (obtained from [`Heap::mutate_root`] or a previous `get_field`), so
+    /// stored edges along written paths never go stale and `Freeze` can
+    /// soundly early-exit on frozen subgraphs.
+    pub fn get_field<P: Payload, T>(
+        &mut self,
+        parent: &Lazy<P>,
+        sel: impl Fn(&mut P) -> &mut Lazy<T>,
+    ) -> Lazy<T> {
+        let v = parent.raw.obj;
+        debug_assert!(
+            !self.slot(v).frozen,
+            "get_field requires a writable parent (use mutate_root / get_field chain)"
+        );
+        let mut payload = self
+            .slot_mut(v)
+            .payload
+            .take()
+            .expect("get_field on destroyed object");
+        let p = payload
+            .as_any_mut()
+            .downcast_mut::<P>()
+            .expect("payload type mismatch");
+        let mut raw = sel(p).raw;
+        self.get_raw(&mut raw, true);
+        let p = payload
+            .as_any_mut()
+            .downcast_mut::<P>()
+            .expect("payload type mismatch");
+        sel(p).raw = raw;
+        self.slot_mut(v).payload = Some(payload);
+        Lazy::from_raw(raw)
+    }
+
+    /// Mutate through a pointer whose target is already writable (returned
+    /// by [`Heap::get_field`], or freshly allocated). Mutating a *frozen*
+    /// target through a borrowed pointer is rejected: it would memoize a
+    /// copy without updating the owning stored edge, leaving a stale edge
+    /// that a later `Freeze` traversal cannot see through.
+    pub fn mutate<T: Payload, R>(&mut self, e: &mut Lazy<T>, f: impl FnOnce(&mut T) -> R) -> R {
+        self.pull_raw(&mut e.raw, false);
+        assert!(
+            !self.mode.is_lazy() || !self.slot(e.raw.obj).frozen,
+            "mutate through a borrowed pointer to a frozen object; \
+             descend with get_field instead"
+        );
+        self.mutate_impl(&mut e.raw, false, f)
+    }
+
+    /// Mutate through an *owning* handle (root handles held by the
+    /// coordinator, or stored edges). Enables the single-reference and
+    /// thaw optimizations.
+    pub fn mutate_root<T: Payload, R>(
+        &mut self,
+        e: &mut Lazy<T>,
+        f: impl FnOnce(&mut T) -> R,
+    ) -> R {
+        self.mutate_impl(&mut e.raw, true, f)
+    }
+
+    fn mutate_impl<T: Payload, R>(
+        &mut self,
+        e: &mut RawLazy,
+        owning: bool,
+        f: impl FnOnce(&mut T) -> R,
+    ) -> R {
+        self.get_raw(e, owning);
+        let v = e.obj;
+        let f_owner = self.slot(v).label;
+        let mut payload = self
+            .slot_mut(v)
+            .payload
+            .take()
+            .expect("mutate of destroyed object");
+        let mut before = std::mem::take(&mut self.scratch_before);
+        before.clear();
+        payload.edges(&mut before);
+        let r = f(payload
+            .as_any_mut()
+            .downcast_mut::<T>()
+            .expect("payload type mismatch"));
+        let mut after = std::mem::take(&mut self.scratch_after);
+        after.clear();
+        payload.edges(&mut after);
+        // Update the size estimate (payloads with Vec fields grow/shrink).
+        let old_bytes = self.slot(v).bytes as usize;
+        let new_bytes = payload.size_bytes();
+        self.slot_mut(v).payload = Some(payload);
+        if new_bytes != old_bytes {
+            self.slot_mut(v).bytes = new_bytes as u32;
+            self.metrics.live_bytes = self.metrics.live_bytes + new_bytes - old_bytes;
+            self.metrics.note_peak();
+        }
+        self.edge_diff(v, f_owner, &before, &after);
+        self.scratch_before = before;
+        self.scratch_after = after;
+        r
+    }
+
+    /// Multiset diff of stored edges around a mutation; maintains shared
+    /// and cross-reference label counts, and repairs single-reference
+    /// hazards with an eager Get.
+    fn edge_diff(&mut self, v: ObjId, f_owner: LabelId, before: &[RawLazy], after: &[RawLazy]) {
+        if before == after {
+            return;
+        }
+        let mut removed: Vec<RawLazy> = Vec::new();
+        let mut added: Vec<Option<RawLazy>> = after.iter().copied().map(Some).collect();
+        'outer: for b in before {
+            for a in added.iter_mut() {
+                if *a == Some(*b) {
+                    *a = None;
+                    continue 'outer;
+                }
+            }
+            removed.push(*b);
+        }
+        let mut hazards: Vec<RawLazy> = Vec::new();
+        for a in added.into_iter().flatten() {
+            if self.sro_hazard(a) {
+                hazards.push(a);
+            }
+            self.on_edge_added(a, f_owner);
+        }
+        for b in removed {
+            self.on_edge_removed(b, f_owner);
+        }
+        // Repair hazards: eagerly Get the new edges in place (§3).
+        if !hazards.is_empty() {
+            let mut payload = self.slot_mut(v).payload.take().unwrap();
+            payload.edges_mut(&mut |d: &mut RawLazy| {
+                if hazards.contains(d) {
+                    self.get_raw(d, true);
+                }
+            });
+            self.slot_mut(v).payload = Some(payload);
+        }
+    }
+
+    /// Pull an owning root handle up to date (path shortening).
+    pub fn pull_root<T>(&mut self, e: &mut Lazy<T>) {
+        // The handle owns its label count; only the object count transfers.
+        self.pull_raw(&mut e.raw, true);
+    }
+
+    /// Sweep all live memo tables, removing entries whose key object has a
+    /// zero shared count (§3: "a sweep of a table can be performed at any
+    /// point to remove entries with zero shared and weak count, but nonzero
+    /// memo count"). Such keys can never be pulled again — a pull requires
+    /// a live edge targeting the key. Iterates to a fixpoint, since
+    /// releasing a value may kill further keys. The coordinator calls this
+    /// once per generation; it also runs implicitly when labels die and
+    /// when memos are cloned by `deep_copy`.
+    pub fn sweep_memos(&mut self) {
+        loop {
+            let mut removed_any = false;
+            for i in 0..self.labels.len() {
+                if !self.labels[i].alive || self.labels[i].memo.is_empty() {
+                    continue;
+                }
+                let before = self.labels[i].memo.size_bytes();
+                // Collect liveness of keys first (cannot borrow slots while
+                // sweeping the table in place).
+                let dead: Vec<(ObjId, ObjId)> = {
+                    let slots = &self.slots;
+                    self.labels[i]
+                        .memo
+                        .sweep(|k| slots[k.idx as usize].shared > 0)
+                };
+                let after = self.labels[i].memo.size_bytes();
+                self.metrics.memo_bytes = self.metrics.memo_bytes + after - before;
+                if !dead.is_empty() {
+                    removed_any = true;
+                    self.metrics.memo_swept += dead.len();
+                    for (k, v) in dead {
+                        self.dec_memo_count(k);
+                        self.obj_dec.push(v);
+                    }
+                    self.drain_rc();
+                }
+            }
+            if !removed_any {
+                break;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Introspection (tests, metrics, invariant checking)
+    // ------------------------------------------------------------------
+
+    pub fn is_frozen(&self, o: ObjId) -> bool {
+        self.slot(o).frozen
+    }
+
+    pub fn shared_count(&self, o: ObjId) -> u32 {
+        self.slot(o).shared
+    }
+
+    pub fn creator_label(&self, o: ObjId) -> LabelId {
+        self.slot(o).label
+    }
+
+    pub fn live_objects(&self) -> usize {
+        self.metrics.live_objects
+    }
+
+    pub fn live_labels(&self) -> usize {
+        self.metrics.live_labels
+    }
+
+    /// Number of *distinct* objects reachable from the given handles — the
+    /// quantity bounded by Jacob et al. (2015) for particle ancestry trees.
+    pub fn reachable_objects(&self, roots: &[RawLazy]) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        let mut work: Vec<ObjId> = roots
+            .iter()
+            .filter(|r| !r.is_null())
+            .map(|r| r.obj)
+            .collect();
+        let mut edges = Vec::new();
+        while let Some(v) = work.pop() {
+            if !seen.insert(v) {
+                continue;
+            }
+            if let Some(p) = &self.slot(v).payload {
+                edges.clear();
+                p.edges(&mut edges);
+                for d in &edges {
+                    work.push(d.obj);
+                }
+            }
+        }
+        seen.len()
+    }
+
+    /// Precise memo sweep by trial deletion: a memo entry `m_l(k) = v` is
+    /// only useful if some live edge *labeled l* targets `k` (pulls query
+    /// the edge's own label's table). The paper's cheap criterion (key has
+    /// zero shared and weak counts) cannot collect self-sustaining cycles
+    /// where the entry's value holds the only edge keeping the key alive —
+    /// e.g. a cross reference stored in a copy made under the pinned root
+    /// label. This pass computes the live (label, target) set from stored
+    /// edges plus the caller's `handles` and removes unpullable entries,
+    /// iterating to a fixpoint. O(heap) — an explicit GC pass, not part of
+    /// the hot path.
+    pub fn deep_sweep(&mut self, handles: &[RawLazy]) {
+        use std::collections::HashSet;
+        loop {
+            let mut live: HashSet<(u32, u32)> = HashSet::new();
+            for h in handles {
+                if !h.is_null() {
+                    live.insert((h.label.idx, h.obj.idx));
+                }
+            }
+            let mut edges = Vec::new();
+            for s in &self.slots {
+                if let Some(p) = &s.payload {
+                    edges.clear();
+                    p.edges(&mut edges);
+                    for d in &edges {
+                        live.insert((d.label.idx, d.obj.idx));
+                    }
+                }
+            }
+            // Close the live set under memo chains: a pull of (k, l) hops
+            // k -> m_l(k) -> m_l(m_l(k)) ... so each kept entry makes its
+            // value pullable under the same label.
+            loop {
+                let mut changed = false;
+                for (i, l) in self.labels.iter().enumerate() {
+                    if !l.alive {
+                        continue;
+                    }
+                    for (k, v) in l.memo.iter() {
+                        if live.contains(&(i as u32, k.idx)) && live.insert((i as u32, v.idx)) {
+                            changed = true;
+                        }
+                    }
+                }
+                if !changed {
+                    break;
+                }
+            }
+            let mut removed_any = false;
+            for i in 0..self.labels.len() {
+                if !self.labels[i].alive || self.labels[i].memo.is_empty() {
+                    continue;
+                }
+                let before = self.labels[i].memo.size_bytes();
+                let dead: Vec<(ObjId, ObjId)> = self.labels[i]
+                    .memo
+                    .sweep(|k| live.contains(&(i as u32, k.idx)));
+                let after = self.labels[i].memo.size_bytes();
+                self.metrics.memo_bytes = self.metrics.memo_bytes + after - before;
+                if !dead.is_empty() {
+                    removed_any = true;
+                    self.metrics.memo_swept += dead.len();
+                    for (k, v) in dead {
+                        self.dec_memo_count(k);
+                        self.obj_dec.push(v);
+                    }
+                    self.drain_rc();
+                }
+            }
+            if !removed_any {
+                break;
+            }
+        }
+    }
+
+    /// Debug description of all live objects and labels (tests/diagnosis).
+    pub fn dump_live(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        for (i, slot) in self.slots.iter().enumerate() {
+            if slot.destroyed() {
+                continue;
+            }
+            let mut edges = Vec::new();
+            slot.payload.as_ref().unwrap().edges(&mut edges);
+            let _ = writeln!(
+                s,
+                "obj {i} gen={} f={:?} frozen={} sro={} shared={} weak={} memo={} edges={:?}",
+                slot.gen, slot.label, slot.frozen, slot.single_ref, slot.shared, slot.weak,
+                slot.memo, edges
+            );
+        }
+        for (i, l) in self.labels.iter().enumerate() {
+            if !l.alive {
+                continue;
+            }
+            let entries: Vec<_> = l.memo.iter().collect();
+            let _ = writeln!(s, "label {i} gen={} shared={} memo={entries:?}", l.gen, l.shared);
+        }
+        s
+    }
+
+    /// Recompute all reference counts from scratch and compare with the
+    /// maintained ones. `handles` lists every owning handle held by the
+    /// caller. Panics (with a description) on the first inconsistency.
+    /// Used by the property-based tests.
+    pub fn validate(&self, handles: &[RawLazy]) {
+        use std::collections::HashMap;
+        let mut shared: HashMap<u32, u32> = HashMap::new();
+        let mut label_shared: HashMap<u32, u32> = HashMap::new();
+        for h in handles {
+            if h.is_null() {
+                continue;
+            }
+            *shared.entry(h.obj.idx).or_default() += 1;
+            if self.mode.is_lazy() {
+                *label_shared.entry(h.label.idx).or_default() += 1;
+            }
+        }
+        let mut edges = Vec::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            let Some(p) = &s.payload else { continue };
+            edges.clear();
+            p.edges(&mut edges);
+            for d in &edges {
+                *shared.entry(d.obj.idx).or_default() += 1;
+                if self.mode.is_lazy() && d.label != s.label {
+                    *label_shared.entry(d.label.idx).or_default() += 1;
+                }
+                // Frozen-subgraph invariant: out-targets of a frozen object
+                // are frozen.
+                if s.frozen {
+                    assert!(
+                        self.slots[d.obj.idx as usize].frozen,
+                        "frozen object {i} has unfrozen target {}",
+                        d.obj.idx
+                    );
+                }
+            }
+        }
+        for l in &self.labels {
+            if !l.alive {
+                continue;
+            }
+            for (_k, v) in l.memo.iter() {
+                *shared.entry(v.idx).or_default() += 1;
+            }
+        }
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.destroyed() {
+                continue;
+            }
+            let expect = shared.get(&(i as u32)).copied().unwrap_or(0);
+            assert_eq!(
+                s.shared, expect,
+                "slot {i}: maintained shared={} recomputed={}",
+                s.shared, expect
+            );
+        }
+        for (i, l) in self.labels.iter().enumerate() {
+            if i == 0 || !l.alive {
+                continue; // root label is pinned
+            }
+            let expect = label_shared.get(&(i as u32)).copied().unwrap_or(0);
+            assert_eq!(
+                l.shared, expect,
+                "label {i}: maintained shared={} recomputed={}",
+                l.shared, expect
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,196 @@
+//! Payload trait: what the heap requires of object data `b(v)` (§2.1 Def. 1).
+//!
+//! The heap needs three capabilities from a payload: (1) clone it bitwise
+//! (for the `Copy` operation, Algorithm 6), (2) enumerate its out-edges (for
+//! `Freeze`/`Finish` traversals and reference-count bookkeeping), and (3)
+//! rewrite its out-edge labels in place (the clone rule of Algorithm 6:
+//! non-cross edges in a fresh copy adopt the new label). Everything else
+//! about the payload is opaque.
+
+use std::any::Any;
+
+use super::lazy::RawLazy;
+
+/// Object payload data. Implement via [`crate::lazy_fields!`] for structs
+/// with a fixed set of lazy-pointer fields, or manually for containers of
+/// pointers (ragged arrays, stacks of references, ...).
+pub trait Payload: Any {
+    /// Clone the payload (shallow: pointer fields are copied bitwise).
+    fn clone_payload(&self) -> Box<dyn Payload>;
+
+    /// Append all (non-null) out-edges to `out`.
+    fn edges(&self, out: &mut Vec<RawLazy>);
+
+    /// Visit every out-edge slot mutably (including null slots is allowed
+    /// but not required; the heap skips nulls).
+    fn edges_mut(&mut self, f: &mut dyn FnMut(&mut RawLazy));
+
+    /// Approximate heap size of the payload in bytes, for memory metrics.
+    fn size_bytes(&self) -> usize;
+
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}
+
+/// Implement [`Payload`] for a struct, listing the fields that hold lazy
+/// pointers (each of type [`Lazy<T>`](super::Lazy), a `Vec<Lazy<T>>`, or an
+/// `Option<Lazy<T>>` — anything implementing [`EdgeSlot`]).
+///
+/// ```ignore
+/// struct Node { value: i64, next: Lazy<Node> }
+/// lazy_fields!(Node: next);
+/// ```
+#[macro_export]
+macro_rules! lazy_fields {
+    ($ty:ty) => {
+        $crate::lazy_fields!($ty:);
+    };
+    ($ty:ty : $($field:ident),* $(,)?) => {
+        impl $crate::heap::Payload for $ty
+        where
+            $ty: Clone + 'static,
+        {
+            fn clone_payload(&self) -> Box<dyn $crate::heap::Payload> {
+                Box::new(self.clone())
+            }
+            fn edges(&self, out: &mut Vec<$crate::heap::RawLazy>) {
+                $( $crate::heap::EdgeSlot::collect(&self.$field, out); )*
+                let _ = out;
+            }
+            fn edges_mut(
+                &mut self,
+                f: &mut dyn FnMut(&mut $crate::heap::RawLazy),
+            ) {
+                $( $crate::heap::EdgeSlot::visit_mut(&mut self.$field, f); )*
+                let _ = f;
+            }
+            fn size_bytes(&self) -> usize {
+                std::mem::size_of::<$ty>()
+            }
+            fn as_any(&self) -> &dyn std::any::Any { self }
+            fn as_any_mut(&mut self) -> &mut dyn std::any::Any { self }
+        }
+    };
+}
+
+/// A field that stores zero or more lazy pointers.
+pub trait EdgeSlot {
+    fn collect(&self, out: &mut Vec<RawLazy>);
+    fn visit_mut(&mut self, f: &mut dyn FnMut(&mut RawLazy));
+}
+
+impl<T: 'static> EdgeSlot for super::Lazy<T> {
+    fn collect(&self, out: &mut Vec<RawLazy>) {
+        if !self.is_null() {
+            out.push(self.raw);
+        }
+    }
+    fn visit_mut(&mut self, f: &mut dyn FnMut(&mut RawLazy)) {
+        f(&mut self.raw);
+    }
+}
+
+impl<T: 'static> EdgeSlot for Option<super::Lazy<T>> {
+    fn collect(&self, out: &mut Vec<RawLazy>) {
+        if let Some(p) = self {
+            EdgeSlot::collect(p, out);
+        }
+    }
+    fn visit_mut(&mut self, f: &mut dyn FnMut(&mut RawLazy)) {
+        if let Some(p) = self {
+            EdgeSlot::visit_mut(p, f);
+        }
+    }
+}
+
+impl<S: EdgeSlot> EdgeSlot for Vec<S> {
+    fn collect(&self, out: &mut Vec<RawLazy>) {
+        for s in self {
+            s.collect(out);
+        }
+    }
+    fn visit_mut(&mut self, f: &mut dyn FnMut(&mut RawLazy)) {
+        for s in self {
+            s.visit_mut(f);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Lazy, RawLazy};
+    use super::*;
+    use crate::heap::ids::{LabelId, ObjId};
+
+    #[derive(Clone)]
+    struct Node {
+        #[allow(dead_code)]
+        value: i64,
+        next: Lazy<Node>,
+    }
+    lazy_fields!(Node: next);
+
+    #[derive(Clone)]
+    struct Ragged {
+        items: Vec<Lazy<Node>>,
+        opt: Option<Lazy<Node>>,
+    }
+    lazy_fields!(Ragged: items, opt);
+
+    #[derive(Clone)]
+    struct Leaf {
+        #[allow(dead_code)]
+        x: f64,
+    }
+    lazy_fields!(Leaf);
+
+    fn ptr(i: u32) -> Lazy<Node> {
+        Lazy::from_raw(RawLazy {
+            obj: ObjId::new(i, 0),
+            label: LabelId::new(0, 0),
+        })
+    }
+
+    #[test]
+    fn collects_non_null_edges() {
+        let n = Node {
+            value: 1,
+            next: Lazy::NULL,
+        };
+        let mut out = Vec::new();
+        n.edges(&mut out);
+        assert!(out.is_empty());
+
+        let n = Node {
+            value: 1,
+            next: ptr(7),
+        };
+        n.edges(&mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].obj.idx, 7);
+    }
+
+    #[test]
+    fn ragged_and_optional_slots() {
+        let r = Ragged {
+            items: vec![ptr(1), Lazy::NULL, ptr(2)],
+            opt: Some(ptr(3)),
+        };
+        let mut out = Vec::new();
+        r.edges(&mut out);
+        assert_eq!(out.len(), 3); // nulls skipped
+        let mut r = r;
+        let mut count = 0;
+        r.edges_mut(&mut |_| count += 1);
+        assert_eq!(count, 4); // mutable visit includes the null slot
+    }
+
+    #[test]
+    fn leaf_has_no_edges() {
+        let l = Leaf { x: 0.0 };
+        let mut out = Vec::new();
+        l.edges(&mut out);
+        assert!(out.is_empty());
+        assert_eq!(l.size_bytes(), std::mem::size_of::<Leaf>());
+    }
+}

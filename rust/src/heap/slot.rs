@@ -1,0 +1,93 @@
+//! Object slots: the vertex records of the heap slab.
+
+use super::ids::LabelId;
+use super::payload::Payload;
+
+/// Per-object record. Holds the payload `b(v)`, the creating label `f(v)`
+/// (§2.2 Def. 2), the read-only flag (`v ∈ R`), the three reference counts
+/// of §3 (shared / weak / memo), and the single-reference-optimization
+/// bookkeeping of Remark 1.
+pub(crate) struct Slot {
+    /// Payload `b(v)`; `None` once destroyed (shared count reached zero).
+    pub payload: Option<Box<dyn Payload>>,
+    /// Creating label `f(v)`. Does not hold a reference count on the label
+    /// (the paper's cycle-breaking rule, §3).
+    pub label: LabelId,
+    /// `v ∈ R`: read-only (frozen by a deep copy).
+    pub frozen: bool,
+    /// Remark 1 flag: at freeze time the in-degree was 1 and `v ∉ ran m`,
+    /// so copies of this object may skip the memo update.
+    pub single_ref: bool,
+    /// `v ∈ ran m` (ever): this object is the value of some memo entry, so
+    /// its apparent in-degree under-counts expanded-graph in-edges and the
+    /// single-reference optimization must not apply (Remark 1, cond. 1).
+    pub in_memo_ran: bool,
+    /// The object has been shallow-copied at least once.
+    pub copied_once: bool,
+    /// Label under which a copy skipped the memo update (single-reference
+    /// optimization). Used to detect the paper's "identical in-edge"
+    /// violation: if a new in-edge with this label appears later, it must be
+    /// eagerly `Get`-ed to keep views consistent.
+    pub skipped_label: LabelId,
+    /// More than one label has skipped the memo for this object; treat any
+    /// new in-edge conservatively.
+    pub skipped_many: bool,
+
+    /// Shared count: owning edges (object fields + root handles) + memo
+    /// values. Destroy payload at zero.
+    pub shared: u32,
+    /// Weak count (starts at 1 for self; decremented on destroy).
+    pub weak: u32,
+    /// Memo count: memo table *keys* naming this slot. The slot index is not
+    /// recycled until this reaches zero.
+    pub memo: u32,
+    /// Generation tag: incremented when the slot is recycled.
+    pub gen: u32,
+    /// Cached payload size for metrics (bytes).
+    pub bytes: u32,
+}
+
+impl Slot {
+    pub fn vacant(gen: u32) -> Self {
+        Slot {
+            payload: None,
+            label: LabelId::NULL,
+            frozen: false,
+            single_ref: false,
+            in_memo_ran: false,
+            copied_once: false,
+            skipped_label: LabelId::NULL,
+            skipped_many: false,
+            shared: 0,
+            weak: 0,
+            memo: 0,
+            gen,
+            bytes: 0,
+        }
+    }
+
+    /// Payload destroyed (but slot possibly still reserved by memo keys)?
+    #[inline]
+    pub fn destroyed(&self) -> bool {
+        self.payload.is_none()
+    }
+}
+
+/// Per-object overhead in bytes, reported in memory metrics alongside the
+/// payload size. The paper reports 12 extra bytes per object for lazy-copy
+/// support; our slot record is the analogous bookkeeping.
+pub(crate) const OBJ_OVERHEAD: usize = 48;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vacant_slot_is_destroyed() {
+        let s = Slot::vacant(3);
+        assert!(s.destroyed());
+        assert_eq!(s.gen, 3);
+        assert_eq!(s.shared, 0);
+        assert!(!s.frozen);
+    }
+}

@@ -1,0 +1,481 @@
+//! Heap unit tests, including literal replays of the paper's Table 1
+//! (tree-pattern lazy copies) and Table 2 (cross-reference eager fallback).
+
+use super::*;
+use crate::lazy_fields;
+
+/// The paper's `class Node { value:Integer; next:Node; }`.
+#[derive(Clone)]
+struct Node {
+    value: i64,
+    next: Lazy<Node>,
+}
+lazy_fields!(Node: next);
+
+fn node(heap: &mut Heap, value: i64) -> Lazy<Node> {
+    heap.alloc(Node {
+        value,
+        next: Lazy::NULL,
+    })
+}
+
+/// Build the list x1 -> y1 -> z1 with values (1, 2, 3); returns the head
+/// handle (interior handles are stored, then released).
+fn build_list(heap: &mut Heap) -> Lazy<Node> {
+    let z1 = node(heap, 3);
+    let y1 = node(heap, 2);
+    let x1 = node(heap, 1);
+    let mut x = x1;
+    heap.mutate_root(&mut x, |n| n.next = y1);
+    let mut y = y1;
+    heap.mutate_root(&mut y, |n| n.next = z1);
+    // Stored edges now own them; release the stack handles.
+    heap.release(y1);
+    heap.release(z1);
+    x
+}
+
+fn list_values(heap: &mut Heap, head: &Lazy<Node>) -> Vec<i64> {
+    let mut out = Vec::new();
+    let mut cur = *head;
+    while !cur.is_null() {
+        out.push(heap.read(&mut cur, |n| n.value));
+        cur = heap.read_ptr(&mut cur, |n| n.next);
+    }
+    out
+}
+
+fn for_each_mode(f: impl Fn(CopyMode)) {
+    for mode in CopyMode::ALL {
+        f(mode);
+    }
+}
+
+#[test]
+fn alloc_read_release() {
+    for_each_mode(|mode| {
+        let mut heap = Heap::new(mode);
+        let mut x = node(&mut heap, 42);
+        assert_eq!(heap.read(&mut x, |n| n.value), 42);
+        assert_eq!(heap.live_objects(), 1);
+        heap.validate(&[x.raw()]);
+        heap.release(x);
+        assert_eq!(heap.live_objects(), 0, "mode {mode:?}");
+        heap.validate(&[]);
+    });
+}
+
+#[test]
+fn list_teardown_cascades() {
+    for_each_mode(|mode| {
+        let mut heap = Heap::new(mode);
+        let head = build_list(&mut heap);
+        assert_eq!(heap.live_objects(), 3);
+        heap.validate(&[head.raw()]);
+        heap.release(head);
+        assert_eq!(heap.live_objects(), 0, "mode {mode:?}");
+    });
+}
+
+#[test]
+fn table1_trace_lazy() {
+    // The paper's Table 1, replayed against the lazy heap. Assertions on
+    // object counts verify the exact copy/share structure at each row.
+    for mode in [CopyMode::Lazy, CopyMode::LazySro] {
+        let mut heap = Heap::new(mode);
+        let x1 = build_list(&mut heap);
+        assert_eq!(heap.live_objects(), 3);
+
+        // x2:Node <- deep_copy(x1): a new label and edge, no new vertex.
+        let mut x2 = heap.deep_copy(&x1);
+        assert_eq!(heap.live_objects(), 3, "deep copy allocates no objects");
+        assert_ne!(x2.label(), x1.label());
+        assert_eq!(x2.obj(), x1.obj(), "the handle shares the original");
+        assert!(heap.is_frozen(x1.obj()));
+
+        // value <- x2.value: read-only access, copy not required.
+        let v = heap.read(&mut x2, |n| n.value);
+        assert_eq!(v, 1);
+        assert_eq!(heap.live_objects(), 3, "reads never copy");
+
+        // x2.value <- value: write access, copy required (head only).
+        heap.mutate_root(&mut x2, |n| n.value = 10);
+        assert_eq!(heap.live_objects(), 4, "only the head was copied");
+        assert_ne!(x2.obj(), x1.obj());
+
+        // y2 <- x2.next; z2 <- y2.next: traversal with write access copies
+        // each node along the way (get-chain, per the Table 1 commentary).
+        let read_y2 = heap.read_ptr(&mut x2, |n| n.next);
+        assert_eq!(
+            read_y2.label(),
+            x2.label(),
+            "tree-pattern field adopts reader label"
+        );
+        let mut y2 = heap.get_field(&x2, |n| &mut n.next);
+        heap.mutate(&mut y2, |n| n.value = 20);
+        assert_eq!(heap.live_objects(), 5);
+
+        // value <- z2.value: read-only, no copy.
+        let mut z2r = heap.read_ptr(&mut y2, |n| n.next);
+        assert_eq!(heap.read(&mut z2r, |n| n.value), 3);
+        assert_eq!(heap.live_objects(), 5);
+
+        // z2.value <- value: copy required.
+        let mut z2 = heap.get_field(&y2, |n| &mut n.next);
+        heap.mutate(&mut z2, |n| n.value = 30);
+        assert_eq!(heap.live_objects(), 6);
+
+        // Both lists observe their own values; the original is intact.
+        let mut x1m = x1;
+        assert_eq!(list_values(&mut heap, &x1m), vec![1, 2, 3]);
+        assert_eq!(list_values(&mut heap, &x2), vec![10, 20, 30]);
+        let _ = &mut x1m;
+
+        heap.validate(&[x1.raw(), x2.raw()]);
+
+        // Releasing the copy frees exactly the copied nodes.
+        heap.release(x2);
+        assert_eq!(heap.live_objects(), 3, "mode {mode:?}");
+        assert_eq!(list_values(&mut heap, &x1), vec![1, 2, 3]);
+        heap.release(x1);
+        assert_eq!(heap.live_objects(), 0);
+        assert_eq!(heap.live_labels(), 1, "only the root label remains");
+    }
+}
+
+#[test]
+fn table1_trace_eager_equivalent() {
+    // Same program under eager copies: identical observable values,
+    // maximal object count.
+    let mut heap = Heap::new(CopyMode::Eager);
+    let x1 = build_list(&mut heap);
+    let mut x2 = heap.deep_copy(&x1);
+    assert_eq!(heap.live_objects(), 6, "eager deep copy copies everything");
+    heap.mutate_root(&mut x2, |n| n.value = 10);
+    let mut y2 = heap.read_ptr(&mut x2, |n| n.next);
+    heap.mutate(&mut y2, |n| n.value = 20);
+    let mut z2 = heap.read_ptr(&mut y2, |n| n.next);
+    heap.mutate(&mut z2, |n| n.value = 30);
+    assert_eq!(list_values(&mut heap, &x1), vec![1, 2, 3]);
+    assert_eq!(list_values(&mut heap, &x2), vec![10, 20, 30]);
+    heap.validate(&[x1.raw(), x2.raw()]);
+    heap.release(x1);
+    heap.release(x2);
+    assert_eq!(heap.live_objects(), 0);
+}
+
+#[test]
+fn table2_cross_reference() {
+    // The paper's Table 2: an assignment creates a cross reference; the
+    // eager Finish in Copy (Algorithm 6) preserves correctness. The final
+    // read must print 1 (the paper's "correct" row), not 2 (the
+    // counterfactual produced without cross-reference handling).
+    for mode in [CopyMode::Eager, CopyMode::Lazy, CopyMode::LazySro] {
+        let mut heap = Heap::new(mode);
+        let x1 = node(&mut heap, 1);
+
+        let mut x2 = heap.deep_copy(&x1);
+        heap.mutate_root(&mut x2, |n| n.value = 2);
+        assert_ne!(x2.obj(), x1.obj());
+
+        // x2.next <- x1: establishes a cross reference (lazy modes: the
+        // stored edge's label differs from f(x2)). Storing the pointer adds
+        // its own count; the stack handle x1 keeps its own.
+        heap.mutate_root(&mut x2, |n| n.next = x1);
+
+        let mut x3 = heap.deep_copy(&x2);
+        heap.mutate_root(&mut x3, |n| n.value = 3);
+
+        // y3 <- x3.next; print(y3.value): must print 1.
+        let mut y3 = heap.read_ptr(&mut x3, |n| n.next);
+        let printed = heap.read(&mut y3, |n| n.value);
+        assert_eq!(printed, 1, "mode {mode:?}: cross reference mishandled");
+
+        // And the x2 view is unperturbed.
+        let mut y2 = heap.read_ptr(&mut x2, |n| n.next);
+        assert_eq!(heap.read(&mut y2, |n| n.value), 1);
+        assert_eq!(heap.read(&mut x2, |n| n.value), 2);
+        assert_eq!(heap.read(&mut x3, |n| n.value), 3);
+
+        heap.validate(&[x1.raw(), x2.raw(), x3.raw()]);
+        heap.release(x3);
+        heap.release(x2);
+        heap.release(x1);
+        assert_eq!(heap.live_objects(), 0, "mode {mode:?}");
+    }
+}
+
+#[test]
+fn mutation_after_copy_is_private() {
+    for mode in [CopyMode::Lazy, CopyMode::LazySro] {
+        let mut heap = Heap::new(mode);
+        let x1 = build_list(&mut heap);
+        let mut a = heap.deep_copy(&x1);
+        let mut b = heap.deep_copy(&x1);
+        heap.mutate_root(&mut a, |n| n.value = 100);
+        heap.mutate_root(&mut b, |n| n.value = 200);
+        assert_eq!(list_values(&mut heap, &a), vec![100, 2, 3]);
+        assert_eq!(list_values(&mut heap, &b), vec![200, 2, 3]);
+        assert_eq!(list_values(&mut heap, &x1), vec![1, 2, 3]);
+        // Tails are shared: 3 originals + 2 copied heads.
+        assert_eq!(heap.live_objects(), 5);
+        heap.validate(&[x1.raw(), a.raw(), b.raw()]);
+        heap.release(a);
+        heap.release(b);
+        heap.release(x1);
+        assert_eq!(heap.live_objects(), 0);
+    }
+}
+
+#[test]
+fn chained_deep_copies_pull_through_memo_chain() {
+    // x -> copy under l2 (written) -> copy under l3 (written): pulls must
+    // chase the memo chain v <- m_l(v) repeatedly (Algorithm 4's while).
+    for mode in [CopyMode::Lazy, CopyMode::LazySro] {
+        let mut heap = Heap::new(mode);
+        let g1 = node(&mut heap, 1);
+        let mut g2 = heap.deep_copy(&g1);
+        heap.mutate_root(&mut g2, |n| n.value = 2);
+        let mut g3 = heap.deep_copy(&g2);
+        heap.mutate_root(&mut g3, |n| n.value = 3);
+        let mut g4 = heap.deep_copy(&g3);
+        heap.mutate_root(&mut g4, |n| n.value = 4);
+        assert_eq!(heap.read(&mut g1.clone(), |n| n.value), 1);
+        assert_eq!(heap.read(&mut g2, |n| n.value), 2);
+        assert_eq!(heap.read(&mut g3, |n| n.value), 3);
+        assert_eq!(heap.read(&mut g4, |n| n.value), 4);
+        heap.validate(&[g1.raw(), g2.raw(), g3.raw(), g4.raw()]);
+        for h in [g1, g2, g3, g4] {
+            heap.release(h);
+        }
+        assert_eq!(heap.live_objects(), 0, "mode {mode:?}");
+    }
+}
+
+#[test]
+fn resampling_pattern_shares_ancestors() {
+    // The motivating pattern (Figure 2): at each generation, deep-copy a
+    // surviving particle and extend it. The ancestry chain is shared, so
+    // live objects grow O(T + survivors), not O(N*T).
+    for mode in [CopyMode::Lazy, CopyMode::LazySro] {
+        let mut heap = Heap::new(mode);
+        let n = 8usize;
+        let t_max = 20usize;
+        // Each particle: a cons-list of states, newest first.
+        let mut particles: Vec<Lazy<Node>> = (0..n).map(|i| node(&mut heap, i as i64)).collect();
+        for t in 1..t_max {
+            // "Resample": all offspring from parent 0 (worst-case sharing).
+            let parent = particles[0];
+            let mut next: Vec<Lazy<Node>> = Vec::new();
+            for i in 0..n {
+                let child = heap.deep_copy(&parent);
+                // Extend with a new head node (the new state at time t),
+                // allocated *in the child's context* (Condition 4) so the
+                // tail edge is tree-pattern, not a cross reference. The
+                // stored edge owns its count; the stack handle is released.
+                let head = heap.with_context(child.label(), |h| {
+                    h.alloc(Node {
+                        value: (t * n + i) as i64,
+                        next: child,
+                    })
+                });
+                heap.release(child);
+                next.push(head);
+            }
+            for p in particles {
+                heap.release(p);
+            }
+            particles = next;
+        }
+        // Chain depth t_max; N distinct heads per generation but shared
+        // tails: far fewer than n * t_max live objects.
+        assert!(
+            heap.live_objects() < n * t_max / 2,
+            "mode {mode:?}: {} live objects, expected sharing",
+            heap.live_objects()
+        );
+        let roots: Vec<RawLazy> = particles.iter().map(|p| p.raw()).collect();
+        heap.validate(&roots);
+        for p in particles {
+            heap.release(p);
+        }
+        assert_eq!(heap.live_objects(), 0);
+    }
+}
+
+#[test]
+fn sro_reduces_memo_traffic() {
+    // The single-reference optimization must produce identical reads with
+    // fewer memo insertions.
+    let run = |mode: CopyMode| -> (Vec<i64>, usize) {
+        let mut heap = Heap::new(mode);
+        let x1 = build_list(&mut heap);
+        let mut x2 = heap.deep_copy(&x1);
+        heap.mutate_root(&mut x2, |n| n.value = 10);
+        let mut y2 = heap.get_field(&x2, |n| &mut n.next);
+        heap.mutate(&mut y2, |n| n.value = 20);
+        let vals = list_values(&mut heap, &x2);
+        let skips = heap.metrics.sro_skips;
+        heap.release(x1);
+        heap.release(x2);
+        (vals, skips)
+    };
+    let (lazy_vals, lazy_skips) = run(CopyMode::Lazy);
+    let (sro_vals, sro_skips) = run(CopyMode::LazySro);
+    assert_eq!(lazy_vals, sro_vals);
+    assert_eq!(lazy_skips, 0);
+    assert!(sro_skips > 0, "SRO should skip at least the head copy memo");
+}
+
+#[test]
+fn thaw_recycles_sole_reference() {
+    // deep_copy then immediately drop the copy: writing through the
+    // original handle thaws in place instead of copying.
+    for mode in [CopyMode::Lazy, CopyMode::LazySro] {
+        let mut heap = Heap::new(mode);
+        let mut x = node(&mut heap, 1);
+        let c = heap.deep_copy(&x);
+        heap.release(c); // label dies; x frozen with sole reference
+        heap.mutate_root(&mut x, |n| n.value = 2);
+        assert_eq!(heap.metrics.thaws, 1, "mode {mode:?}");
+        assert_eq!(heap.metrics.lazy_copies, 0);
+        assert_eq!(heap.live_objects(), 1);
+        assert_eq!(heap.read(&mut x, |n| n.value), 2);
+        assert!(!heap.is_frozen(x.obj()));
+        heap.release(x);
+        assert_eq!(heap.live_objects(), 0);
+    }
+}
+
+#[test]
+fn label_death_reclaims_private_copies() {
+    // Copies made under a label die with the label when nothing else
+    // references them (memo values hold the only count).
+    for mode in [CopyMode::Lazy, CopyMode::LazySro] {
+        let mut heap = Heap::new(mode);
+        let x1 = build_list(&mut heap);
+        let mut x2 = heap.deep_copy(&x1);
+        heap.mutate_root(&mut x2, |n| n.value = 10);
+        let mut y2 = heap.get_field(&x2, |n| &mut n.next);
+        heap.mutate(&mut y2, |n| n.value = 20);
+        assert_eq!(heap.live_objects(), 5);
+        heap.release(x2);
+        assert_eq!(
+            heap.live_objects(),
+            3,
+            "mode {mode:?}: label death should free private copies"
+        );
+        assert_eq!(list_values(&mut heap, &x1), vec![1, 2, 3]);
+        heap.validate(&[x1.raw()]);
+        heap.release(x1);
+        assert_eq!(heap.live_objects(), 0);
+    }
+}
+
+#[test]
+fn deep_copy_of_dag_preserves_sharing_eagerly() {
+    // A diamond: root -> (a, b) -> shared leaf. Eager deep copy must copy
+    // the leaf exactly once (the paper's Fig. 3 deep copy caveat).
+    #[derive(Clone)]
+    struct Pair {
+        a: Lazy<Node>,
+        b: Lazy<Node>,
+    }
+    lazy_fields!(Pair: a, b);
+
+    let mut heap = Heap::new(CopyMode::Eager);
+    let leaf = node(&mut heap, 7);
+    // Storing `leaf` into a payload adds an owning edge count each time;
+    // the stack handle keeps its own count until released.
+    let a = heap.alloc(Node {
+        value: 1,
+        next: leaf,
+    });
+    let b = heap.alloc(Node {
+        value: 2,
+        next: leaf,
+    });
+    heap.release(leaf);
+    let root = heap.alloc(Pair { a, b });
+    heap.release(a);
+    heap.release(b);
+    assert_eq!(heap.live_objects(), 4);
+
+    let copy = heap.deep_copy(&root);
+    assert_eq!(heap.live_objects(), 8, "diamond copied with sharing intact");
+    let mut ca = heap.read_ptr(&mut copy.clone(), |p| p.a);
+    let mut cb = heap.read_ptr(&mut copy.clone(), |p| p.b);
+    let la = heap.read_ptr(&mut ca, |n| n.next);
+    let lb = heap.read_ptr(&mut cb, |n| n.next);
+    assert_eq!(la.obj(), lb.obj(), "shared leaf stays shared in the copy");
+    heap.validate(&[root.raw(), copy.raw()]);
+    heap.release(root);
+    heap.release(copy);
+    assert_eq!(heap.live_objects(), 0);
+}
+
+#[test]
+fn ragged_array_payloads() {
+    // Vec<Lazy<_>> fields: growth and shrinkage through mutate keeps
+    // reference counts exact.
+    #[derive(Clone, Default)]
+    struct Bag {
+        items: Vec<Lazy<Node>>,
+    }
+    lazy_fields!(Bag: items);
+
+    for_each_mode(|mode| {
+        let mut heap = Heap::new(mode);
+        let mut bag = heap.alloc(Bag::default());
+        for i in 0..10 {
+            let item = node(&mut heap, i);
+            heap.mutate_root(&mut bag, |b| b.items.push(item));
+            heap.release(item);
+        }
+        assert_eq!(heap.live_objects(), 11);
+        // Drop half the items.
+        heap.mutate_root(&mut bag, |b| {
+            b.items.retain(|p| {
+                // keep even-indexed items by address parity of value: the
+                // closure has no heap access, so filter by position instead
+                true && !p.is_null()
+            });
+            b.items.truncate(5);
+        });
+        assert_eq!(heap.live_objects(), 6, "mode {mode:?}");
+        heap.validate(&[bag.raw()]);
+        // Deep copy the bag and mutate one branch.
+        let mut copy = heap.deep_copy(&bag);
+        heap.mutate_root(&mut copy, |b| b.items.truncate(2));
+        let n_bag = heap.read(&mut bag.clone(), |b| b.items.len());
+        let n_copy = heap.read(&mut copy, |b| b.items.len());
+        assert_eq!((n_bag, n_copy), (5, 2));
+        heap.validate(&[bag.raw(), copy.raw()]);
+        heap.release(copy);
+        heap.release(bag);
+        assert_eq!(heap.live_objects(), 0);
+    });
+}
+
+#[test]
+fn deep_copy_null_is_null() {
+    let mut heap = Heap::new(CopyMode::Lazy);
+    let p: Lazy<Node> = Lazy::NULL;
+    let q = heap.deep_copy(&p);
+    assert!(q.is_null());
+}
+
+#[test]
+fn metrics_track_copies() {
+    let mut heap = Heap::new(CopyMode::Lazy);
+    let x1 = build_list(&mut heap);
+    let mut x2 = heap.deep_copy(&x1);
+    assert_eq!(heap.metrics.deep_copies, 1);
+    assert_eq!(heap.metrics.lazy_copies, 0);
+    heap.mutate_root(&mut x2, |n| n.value = 9);
+    assert_eq!(heap.metrics.lazy_copies, 1);
+    assert!(heap.metrics.peak_bytes > 0);
+    assert!(heap.metrics.summary().contains("lazy=1"));
+    heap.release(x1);
+    heap.release(x2);
+}

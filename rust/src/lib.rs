@@ -1,0 +1,22 @@
+//! lazycow — lazy object copy-on-write platform for population-based
+//! probabilistic programming.
+//!
+//! A from-scratch reproduction of Murray (2020), "Lazy object copy as a
+//! platform for population-based probabilistic programming", as a
+//! three-layer Rust + JAX + Pallas stack. See DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for the paper-vs-measured record.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod graph;
+pub mod heap;
+pub mod linalg;
+pub mod models;
+pub mod pool;
+pub mod ppl;
+pub mod prop;
+pub mod rng;
+pub mod smc;
+pub mod runtime;
+pub mod stats;

@@ -1,0 +1,299 @@
+//! Small dense linear algebra for the CPU-side Kalman paths.
+//!
+//! Column-major `Mat` with the handful of operations the Rao–Blackwellized
+//! filters need: multiply, transpose, Cholesky, triangular solves, SPD
+//! inverse, quadratic forms, and the multivariate normal log-density.
+//! These serve as the oracle against the XLA-compiled batched kernels and
+//! as the fallback when artifacts are absent.
+
+/// Column-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            *m.at_mut(i, i) = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows[0].len();
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            for (j, v) in row.iter().enumerate() {
+                *m.at_mut(i, j) = *v;
+            }
+        }
+        m
+    }
+
+    pub fn col_vec(v: &[f64]) -> Self {
+        Mat {
+            rows: v.len(),
+            cols: 1,
+            data: v.to_vec(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[j * self.rows + i]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                *out.at_mut(j, i) = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for j in 0..other.cols {
+            for k in 0..self.cols {
+                let b = other.at(k, j);
+                if b == 0.0 {
+                    continue;
+                }
+                for i in 0..self.rows {
+                    *out.at_mut(i, j) += self.at(i, k) * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let mut out = self.clone();
+        for a in out.data.iter_mut() {
+            *a *= s;
+        }
+        out
+    }
+
+    /// Cholesky factor L (lower) of an SPD matrix: self = L Lᵀ.
+    pub fn cholesky(&self) -> Option<Mat> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut l = Mat::zeros(n, n);
+        for j in 0..n {
+            let mut d = self.at(j, j);
+            for k in 0..j {
+                d -= l.at(j, k) * l.at(j, k);
+            }
+            if d <= 0.0 {
+                return None;
+            }
+            let d = d.sqrt();
+            *l.at_mut(j, j) = d;
+            for i in (j + 1)..n {
+                let mut v = self.at(i, j);
+                for k in 0..j {
+                    v -= l.at(i, k) * l.at(j, k);
+                }
+                *l.at_mut(i, j) = v / d;
+            }
+        }
+        Some(l)
+    }
+
+    /// Solve L x = b (forward substitution), L lower-triangular.
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.rows;
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for i in 0..n {
+            for k in 0..i {
+                x[i] -= self.at(i, k) * x[k];
+            }
+            x[i] /= self.at(i, i);
+        }
+        x
+    }
+
+    /// Solve Lᵀ x = b (back substitution), L lower-triangular.
+    pub fn solve_lower_t(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.rows;
+        let mut x = b.to_vec();
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                x[i] -= self.at(k, i) * x[k];
+            }
+            x[i] /= self.at(i, i);
+        }
+        x
+    }
+
+    /// SPD solve: self · x = b via Cholesky.
+    pub fn solve_spd(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let l = self.cholesky()?;
+        Some(l.solve_lower_t(&l.solve_lower(b)))
+    }
+
+    /// SPD inverse via Cholesky (column-by-column solves).
+    pub fn inv_spd(&self) -> Option<Mat> {
+        let n = self.rows;
+        let l = self.cholesky()?;
+        let mut out = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e.iter_mut().for_each(|x| *x = 0.0);
+            e[j] = 1.0;
+            let col = l.solve_lower_t(&l.solve_lower(&e));
+            for i in 0..n {
+                *out.at_mut(i, j) = col[i];
+            }
+        }
+        Some(out)
+    }
+
+    /// log|det| of an SPD matrix via Cholesky.
+    pub fn ln_det_spd(&self) -> Option<f64> {
+        let l = self.cholesky()?;
+        let mut s = 0.0;
+        for i in 0..self.rows {
+            s += l.at(i, i).ln();
+        }
+        Some(2.0 * s)
+    }
+}
+
+/// Multivariate normal log-density log N(x; mean, cov).
+pub fn mvn_lpdf(x: &[f64], mean: &[f64], cov: &Mat) -> f64 {
+    let n = x.len();
+    let l = cov.cholesky().expect("covariance not SPD");
+    let diff: Vec<f64> = x.iter().zip(mean).map(|(a, b)| a - b).collect();
+    let z = l.solve_lower(&diff);
+    let maha: f64 = z.iter().map(|v| v * v).sum();
+    let ln_det: f64 = 2.0 * (0..n).map(|i| l.at(i, i).ln()).sum::<f64>();
+    -0.5 * (maha + ln_det + n as f64 * crate::rng::LN_2PI)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn matmul_and_transpose() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.at(0, 0), 19.0);
+        assert_eq!(c.at(0, 1), 22.0);
+        assert_eq!(c.at(1, 0), 43.0);
+        assert_eq!(c.at(1, 1), 50.0);
+        let at = a.t();
+        assert_eq!(at.at(0, 1), 3.0);
+    }
+
+    #[test]
+    fn cholesky_round_trip() {
+        let a = Mat::from_rows(&[&[4.0, 2.0, 0.5], &[2.0, 5.0, 1.0], &[0.5, 1.0, 3.0]]);
+        let l = a.cholesky().unwrap();
+        let re = l.matmul(&l.t());
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_close(re.at(i, j), a.at(i, j), 1e-12);
+            }
+        }
+        // Non-SPD rejected.
+        let bad = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]);
+        assert!(bad.cholesky().is_none());
+    }
+
+    #[test]
+    fn spd_solve_and_inverse() {
+        let a = Mat::from_rows(&[&[4.0, 1.0], &[1.0, 3.0]]);
+        let b = [1.0, 2.0];
+        let x = a.solve_spd(&b).unwrap();
+        // A x should be b.
+        let ax = a.matmul(&Mat::col_vec(&x));
+        assert_close(ax.at(0, 0), 1.0, 1e-12);
+        assert_close(ax.at(1, 0), 2.0, 1e-12);
+        let inv = a.inv_spd().unwrap();
+        let id = a.matmul(&inv);
+        assert_close(id.at(0, 0), 1.0, 1e-12);
+        assert_close(id.at(0, 1), 0.0, 1e-12);
+    }
+
+    #[test]
+    fn ln_det() {
+        let a = Mat::from_rows(&[&[2.0, 0.0], &[0.0, 8.0]]);
+        assert_close(a.ln_det_spd().unwrap(), (16f64).ln(), 1e-12);
+    }
+
+    #[test]
+    fn mvn_lpdf_matches_univariate() {
+        let cov = Mat::from_rows(&[&[2.25]]);
+        let got = mvn_lpdf(&[1.3], &[0.8], &cov);
+        let want = crate::rng::normal_lpdf(1.3, 0.8, 1.5);
+        assert_close(got, want, 1e-12);
+    }
+
+    #[test]
+    fn mvn_lpdf_integrates() {
+        // 2-D Riemann check on a correlated Gaussian.
+        let cov = Mat::from_rows(&[&[1.0, 0.4], &[0.4, 0.8]]);
+        let mean = [0.2, -0.3];
+        let d = 0.1;
+        let mut total = 0.0;
+        let mut x = -6.0;
+        while x < 6.0 {
+            let mut y = -6.0;
+            while y < 6.0 {
+                total += mvn_lpdf(&[x, y], &mean, &cov).exp() * d * d;
+                y += d;
+            }
+            x += d;
+        }
+        assert_close(total, 1.0, 1e-2);
+    }
+}

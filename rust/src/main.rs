@@ -1,0 +1,294 @@
+//! lazycow launcher: run experiment cells and regenerate the paper's
+//! figures from the command line.
+//!
+//! ```text
+//! lazycow run   --model rbpf --task inference --mode lazy-sro --particles 256 --steps 150
+//! lazycow fig5  [--reps 5] [--scale paper]     # §4 Figure 5 (inference)
+//! lazycow fig6  [--reps 5]                     # §4 Figure 6 (simulation)
+//! lazycow fig7  --model rbpf                   # §4 Figure 7 (series over t)
+//! lazycow tree-bound                           # Jacob et al. (2015) bound
+//! ```
+
+use lazycow::bench::{human_bytes, CellResult};
+use lazycow::cli::{Cli, CliError};
+use lazycow::config::{parse_config_text, Model, RunConfig, Task};
+use lazycow::heap::{CopyMode, Heap};
+use lazycow::models::run_model;
+use lazycow::pool::ThreadPool;
+use lazycow::runtime::{BatchKalman, XlaRuntime};
+use lazycow::smc::StepCtx;
+
+fn cli() -> Cli {
+    Cli::new(
+        "lazycow",
+        "lazy object copy-on-write platform for population-based probabilistic programming",
+    )
+    .command("run", "run one (model, task, mode) cell")
+    .command("fig5", "regenerate Figure 5 (inference: time + peak memory)")
+    .command("fig6", "regenerate Figure 6 (simulation: overhead isolation)")
+    .command("fig7", "regenerate Figure 7 (time/memory series over t)")
+    .command("tree-bound", "ancestry-tree reachability vs the Jacob et al. bound")
+    .flag("model", "rbpf", "model: rbpf|pcfg|vbd|mot|crbd|list")
+    .flag("task", "inference", "task: inference|simulation")
+    .flag("mode", "lazy-sro", "copy mode: eager|lazy|lazy-sro")
+    .flag("particles", "", "particle count N (default: model preset)")
+    .flag("steps", "", "generations T (default: model preset)")
+    .flag("seed", "20200401", "PRNG seed")
+    .flag("threads", "0", "worker threads (0 = all cores)")
+    .flag("reps", "5", "benchmark repetitions")
+    .flag("scale", "default", "scale preset: default|paper")
+    .flag("config", "", "config file (key = value lines)")
+    .flag("artifacts", "artifacts", "AOT artifact directory")
+    .bool_flag("no-xla", "disable the PJRT artifact path")
+    .bool_flag("series", "print the per-generation series")
+}
+
+fn build_config(args: &lazycow::cli::Args) -> Result<RunConfig, String> {
+    let model = Model::parse(args.get_or("model", "rbpf")).ok_or("bad --model")?;
+    let task = Task::parse(args.get_or("task", "inference")).ok_or("bad --task")?;
+    let mode = CopyMode::parse(args.get_or("mode", "lazy-sro")).ok_or("bad --mode")?;
+    let mut cfg = RunConfig::for_model(model, task, mode);
+    if args.get_or("scale", "default") == "paper" {
+        let (n, t_inf, t_sim) = model.paper_scale();
+        cfg.n_particles = n;
+        cfg.n_steps = if task == Task::Inference { t_inf } else { t_sim };
+    }
+    if let Some(f) = args.get("config") {
+        if !f.is_empty() {
+            let text = std::fs::read_to_string(f).map_err(|e| e.to_string())?;
+            for (k, v) in parse_config_text(&text)? {
+                cfg.apply(&k, &v)?;
+            }
+        }
+    }
+    if let Some(n) = args.get_usize("particles") {
+        cfg.n_particles = n;
+    }
+    if let Some(t) = args.get_usize("steps") {
+        cfg.n_steps = t;
+    }
+    if let Some(s) = args.get_u64("seed") {
+        cfg.seed = s;
+    }
+    if let Some(t) = args.get_usize("threads") {
+        cfg.threads = t;
+    }
+    cfg.use_xla = !args.get_bool("no-xla");
+    cfg.series = args.get_bool("series");
+    Ok(cfg)
+}
+
+struct Backend {
+    pool: ThreadPool,
+    kalman: Option<BatchKalman>,
+}
+
+impl Backend {
+    fn new(threads: usize, use_xla: bool, artifacts: &str) -> Self {
+        let kalman = if use_xla {
+            match XlaRuntime::cpu(artifacts) {
+                Ok(rt) if rt.has_artifact("kalman3") => match BatchKalman::load(&rt) {
+                    Ok(bk) => {
+                        eprintln!("[lazycow] PJRT {} + kalman3 artifact", rt.platform());
+                        Some(bk)
+                    }
+                    Err(e) => {
+                        eprintln!("[lazycow] artifact load failed ({e}); CPU fallback");
+                        None
+                    }
+                },
+                _ => {
+                    eprintln!("[lazycow] artifacts missing; CPU fallback (run `make artifacts`)");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        Backend {
+            pool: ThreadPool::new(threads),
+            kalman,
+        }
+    }
+
+    fn ctx(&self) -> StepCtx<'_> {
+        StepCtx {
+            pool: &self.pool,
+            kalman: self.kalman.as_ref(),
+        }
+    }
+}
+
+fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let backend = Backend::new(cfg.threads, cfg.use_xla, args.get_or("artifacts", "artifacts"));
+    let mut heap = Heap::new(cfg.mode);
+    println!("# {}", cfg.label());
+    let r = run_model(&cfg, &mut heap, &backend.ctx());
+    println!(
+        "log_evidence={:.4} posterior_mean={:.4} wall={:.3}s peak={} attempts={}",
+        r.log_evidence,
+        r.posterior_mean,
+        r.wall_s,
+        human_bytes(r.peak_bytes as f64),
+        r.attempts
+    );
+    println!("heap: {}", heap.metrics.summary());
+    if cfg.series {
+        println!("t\telapsed_s\tlive_bytes\tpeak_bytes\tlive_objects\tess");
+        for s in &r.series {
+            println!(
+                "{}\t{:.4}\t{}\t{}\t{}\t{:.1}",
+                s.t, s.elapsed_s, s.live_bytes, s.peak_bytes, s.live_objects, s.ess
+            );
+        }
+    }
+    Ok(())
+}
+
+fn figure_cells(task: Task, args: &lazycow::cli::Args) -> Result<Vec<CellResult>, String> {
+    let reps = args.get_usize("reps").unwrap_or(5);
+    let backend = Backend::new(
+        args.get_usize("threads").unwrap_or(0),
+        !args.get_bool("no-xla"),
+        args.get_or("artifacts", "artifacts"),
+    );
+    let paper = args.get_or("scale", "default") == "paper";
+    let base_seed = args.get_u64("seed").unwrap_or(20200401);
+    let mut cells = Vec::new();
+    for model in Model::EVAL {
+        for mode in CopyMode::ALL {
+            let mut cfg = RunConfig::for_model(model, task, mode);
+            if paper {
+                let (n, t_inf, t_sim) = model.paper_scale();
+                cfg.n_particles = n;
+                cfg.n_steps = if task == Task::Inference { t_inf } else { t_sim };
+            }
+            cfg.seed = base_seed;
+            let name = format!("{}/{}", model.name(), mode.name());
+            let backend_ref = &backend;
+            let cell = lazycow::bench::run_cell(&name, reps, |rep| {
+                let mut c = cfg.clone();
+                c.seed = base_seed.wrapping_add(rep as u64); // one seed per rep (§4)
+                let mut heap = Heap::new(c.mode);
+                let r = run_model(&c, &mut heap, &backend_ref.ctx());
+                Some(r.peak_bytes as f64)
+            });
+            eprintln!("{}", cell.pretty_row());
+            cells.push(cell);
+        }
+    }
+    Ok(cells)
+}
+
+fn cmd_figure(task: Task, args: &lazycow::cli::Args) -> Result<(), String> {
+    let which = if task == Task::Inference { 5 } else { 6 };
+    println!(
+        "# Figure {which}: {} task — median [Q1, Q3] over reps",
+        task.name()
+    );
+    let cells = figure_cells(task, args)?;
+    println!("{}", CellResult::tsv_header());
+    for c in &cells {
+        println!("{}", c.tsv_row());
+    }
+    Ok(())
+}
+
+fn cmd_fig7(args: &lazycow::cli::Args) -> Result<(), String> {
+    let backend = Backend::new(
+        args.get_usize("threads").unwrap_or(0),
+        !args.get_bool("no-xla"),
+        args.get_or("artifacts", "artifacts"),
+    );
+    let models: Vec<Model> = match args.get("model") {
+        Some(m) if !m.is_empty() => vec![Model::parse(m).ok_or("bad --model")?],
+        _ => Model::EVAL.to_vec(),
+    };
+    println!("# Figure 7: elapsed time and memory across t=1..T (inference)");
+    println!("model\tmode\tt\telapsed_s\tlive_bytes\tpeak_bytes\tlive_objects");
+    for model in models {
+        for mode in CopyMode::ALL {
+            let mut cfg = RunConfig::for_model(model, Task::Inference, mode);
+            if args.get_or("scale", "default") == "paper" {
+                let (n, t_inf, _) = model.paper_scale();
+                cfg.n_particles = n;
+                cfg.n_steps = t_inf;
+            }
+            let mut heap = Heap::new(mode);
+            let r = run_model(&cfg, &mut heap, &backend.ctx());
+            for s in &r.series {
+                println!(
+                    "{}\t{}\t{}\t{:.4}\t{}\t{}\t{}",
+                    model.name(),
+                    mode.name(),
+                    s.t,
+                    s.elapsed_s,
+                    s.live_bytes,
+                    s.peak_bytes,
+                    s.live_objects
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Figure 2 / Jacob et al. (2015): reachable ancestry objects stay below
+/// t + c·N·log N.
+fn cmd_tree_bound(args: &lazycow::cli::Args) -> Result<(), String> {
+    use lazycow::models::ListModel;
+    use lazycow::smc::{run_filter, Method};
+    let n = args.get_usize("particles").unwrap_or(256);
+    let t_max = args.get_usize("steps").unwrap_or(200);
+    let backend = Backend::new(1, false, "artifacts");
+    let model = ListModel::synthetic(t_max, lazycow::models::DATA_SEED);
+    let mut cfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = n;
+    cfg.n_steps = t_max;
+    let mut heap = Heap::new(CopyMode::LazySro);
+    let r = run_filter(&model, &cfg, &mut heap, &backend.ctx(), Method::Bootstrap);
+    let bound = |t: f64| t + 2.0 * (n as f64) * (n as f64).ln();
+    println!("# reachable live objects vs t + 2·N·ln N (N={n})");
+    println!("t\tlive_objects\tbound");
+    for s in r.series.iter().step_by((t_max / 20).max(1)) {
+        println!("{}\t{}\t{:.0}", s.t, s.live_objects, bound(s.t as f64));
+    }
+    let last = r.series.last().unwrap();
+    println!(
+        "# final: {} live objects, bound {:.0}, dense would be {}",
+        last.live_objects,
+        bound(t_max as f64),
+        n * t_max
+    );
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(CliError::HelpRequested) => {
+            print!("{}", cli.help_text());
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", cli.help_text());
+            std::process::exit(2);
+        }
+    };
+    let r = match args.command.as_deref() {
+        Some("run") | None => cmd_run(&args),
+        Some("fig5") => cmd_figure(Task::Inference, &args),
+        Some("fig6") => cmd_figure(Task::Simulation, &args),
+        Some("fig7") => cmd_fig7(&args),
+        Some("tree-bound") => cmd_tree_bound(&args),
+        Some(c) => Err(format!("unknown command {c}")),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

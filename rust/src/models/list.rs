@@ -1,0 +1,148 @@
+//! The linked-list microbenchmark model: a 1-D linear-Gaussian SSM whose
+//! particle state is a cons list (the paper's Table 1/2 `Node` class, with
+//! a float payload). Used by the quickstart example, the ancestry-tree
+//! bound bench (Jacob et al. 2015 / Figure 2), and as the simplest
+//! end-to-end exercise of the platform.
+
+use crate::heap::{Heap, Lazy};
+use crate::lazy_fields;
+use crate::rng::{normal_lpdf, Pcg64};
+use crate::smc::SmcModel;
+
+#[derive(Clone)]
+pub struct ListState {
+    pub x: f64,
+    pub prev: Lazy<ListState>,
+}
+lazy_fields!(ListState: prev);
+
+pub struct ListModel {
+    pub a: f64,
+    pub q: f64,
+    pub r: f64,
+    pub obs: Vec<f64>,
+}
+
+impl ListModel {
+    pub fn synthetic(t_max: usize, seed: u64) -> Self {
+        let (a, q, r) = (0.9f64, 0.5f64, 0.8f64);
+        let mut rng = Pcg64::stream(seed, 0x7157);
+        let mut x = rng.gaussian(0.0, 1.0);
+        let mut obs = Vec::with_capacity(t_max);
+        for _ in 0..t_max {
+            x = a * x + rng.gaussian(0.0, q.sqrt());
+            obs.push(x + rng.gaussian(0.0, r.sqrt()));
+        }
+        ListModel { a, q, r, obs }
+    }
+
+    /// Exact evidence by Kalman filtering (test oracle).
+    pub fn exact_evidence(&self) -> f64 {
+        let (mut mean, mut var) = (0.0f64, 1.0f64);
+        let mut lz = 0.0;
+        for &y in &self.obs {
+            mean *= self.a;
+            var = self.a * self.a * var + self.q;
+            let s = var + self.r;
+            lz += normal_lpdf(y, mean, s.sqrt());
+            let k = var / s;
+            mean += k * (y - mean);
+            var *= 1.0 - k;
+        }
+        lz
+    }
+}
+
+impl SmcModel for ListModel {
+    type State = ListState;
+
+    fn name(&self) -> &'static str {
+        "list"
+    }
+
+    fn horizon(&self) -> usize {
+        self.obs.len()
+    }
+
+    fn init(&self, heap: &mut Heap, rng: &mut Pcg64) -> Lazy<ListState> {
+        let x = rng.gaussian(0.0, 1.0);
+        heap.alloc(ListState {
+            x,
+            prev: Lazy::NULL,
+        })
+    }
+
+    fn step(
+        &self,
+        heap: &mut Heap,
+        state: &mut Lazy<ListState>,
+        t: usize,
+        rng: &mut Pcg64,
+        observe: bool,
+    ) -> f64 {
+        let x_prev = heap.read(state, |s| s.x);
+        let x = self.a * x_prev + rng.gaussian(0.0, self.q.sqrt());
+        let old = *state;
+        let new = heap.alloc(ListState { x, prev: old });
+        heap.release(old);
+        *state = new;
+        if observe {
+            normal_lpdf(self.obs[t - 1], x, self.r.sqrt())
+        } else {
+            0.0
+        }
+    }
+
+    fn summary(&self, heap: &mut Heap, state: &mut Lazy<ListState>) -> f64 {
+        heap.read(state, |s| s.x)
+    }
+
+    fn chain(&self, heap: &mut Heap, state: &Lazy<ListState>) -> Vec<Lazy<ListState>> {
+        let mut out = vec![heap.clone_handle(state)];
+        let mut cur = *state;
+        loop {
+            let prev = heap.read_ptr(&mut cur, |s| s.prev);
+            if prev.is_null() {
+                break;
+            }
+            out.push(heap.clone_handle(&prev));
+            cur = prev;
+        }
+        out
+    }
+
+    fn ref_weight(&self, heap: &mut Heap, state: &mut Lazy<ListState>, t: usize) -> f64 {
+        let x = heap.read(state, |s| s.x);
+        normal_lpdf(self.obs[t - 1], x, self.r.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Model, RunConfig, Task};
+    use crate::heap::CopyMode;
+    use crate::pool::ThreadPool;
+    use crate::smc::{run_filter, Method, StepCtx};
+
+    #[test]
+    fn evidence_close_to_exact() {
+        let model = ListModel::synthetic(50, 1);
+        let exact = model.exact_evidence();
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut c = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+        c.n_particles = 1024;
+        c.n_steps = 50;
+        let mut heap = crate::heap::Heap::new(CopyMode::LazySro);
+        let r = run_filter(&model, &c, &mut heap, &ctx, Method::Bootstrap);
+        assert!(
+            (r.log_evidence - exact).abs() < 2.0,
+            "{} vs {exact}",
+            r.log_evidence
+        );
+    }
+}

@@ -1,0 +1,361 @@
+//! MOT: multi-object tracking with an unknown number of objects and
+//! linear-Gaussian per-track dynamics (Murray & Schön 2018).
+//!
+//! Each particle holds a **ragged array** of track objects — separate heap
+//! allocations referenced from the particle state, so per-object
+//! granularity sharing applies (the platform's point versus page-level
+//! COW, §1). Track beliefs are *append-only*: a track node stores the
+//! Kalman belief at its last association time plus a back-pointer to its
+//! previous node; unassociated tracks are untouched (shared across the
+//! whole population and across generations), and catch-up prediction for
+//! association is recomputed deterministically from the node's timestamp.
+//! Only associated tracks allocate a new node per generation.
+//!
+//! Paper scale: N = 4096, T = 100 (inference) / 300 (simulation).
+//! Data: simulated (as in the paper).
+
+use crate::heap::{Heap, Lazy};
+use crate::lazy_fields;
+use crate::linalg::Mat;
+use crate::ppl::KalmanState;
+use crate::rng::Pcg64;
+use crate::smc::SmcModel;
+
+const P_DEATH: f64 = 0.03;
+const BIRTH_RATE: f64 = 0.25;
+const CLUTTER_RATE: f64 = 1.0;
+const P_DETECT: f64 = 0.9;
+const ARENA: f64 = 20.0;
+const OBS_VAR: f64 = 0.25;
+const Q_POS: f64 = 0.01;
+const Q_VEL: f64 = 0.05;
+/// Association gate (squared distance).
+const GATE: f64 = 9.0;
+
+#[derive(Clone)]
+pub struct Track {
+    /// Belief at generation `updated_t` (position/velocity, 4-D CV model).
+    pub kalman: KalmanState,
+    pub updated_t: u32,
+    /// Previous snapshot of this track (its history chain).
+    pub prev: Lazy<Track>,
+}
+lazy_fields!(Track: prev);
+
+#[derive(Clone, Default)]
+pub struct MotState {
+    pub tracks: Vec<Lazy<Track>>,
+    pub prev: Lazy<MotState>,
+}
+lazy_fields!(MotState: tracks, prev);
+
+pub struct Mot {
+    /// Observed 2-D points per generation.
+    pub obs: Vec<Vec<(f64, f64)>>,
+}
+
+fn cv_a() -> Mat {
+    Mat::from_rows(&[
+        &[1.0, 0.0, 1.0, 0.0],
+        &[0.0, 1.0, 0.0, 1.0],
+        &[0.0, 0.0, 1.0, 0.0],
+        &[0.0, 0.0, 0.0, 1.0],
+    ])
+}
+
+fn cv_q() -> Mat {
+    Mat::from_rows(&[
+        &[Q_POS, 0.0, 0.0, 0.0],
+        &[0.0, Q_POS, 0.0, 0.0],
+        &[0.0, 0.0, Q_VEL, 0.0],
+        &[0.0, 0.0, 0.0, Q_VEL],
+    ])
+}
+
+fn obs_c() -> Mat {
+    Mat::from_rows(&[&[1.0, 0.0, 0.0, 0.0], &[0.0, 1.0, 0.0, 0.0]])
+}
+
+fn obs_r() -> Mat {
+    Mat::from_rows(&[&[OBS_VAR, 0.0], &[0.0, OBS_VAR]])
+}
+
+fn new_track_belief(px: f64, py: f64) -> KalmanState {
+    let mut cov = Mat::eye(4);
+    *cov.at_mut(2, 2) = 0.5;
+    *cov.at_mut(3, 3) = 0.5;
+    KalmanState::new(vec![px, py, 0.0, 0.0], cov)
+}
+
+/// Deterministic catch-up prediction: advance a belief `k` generations.
+fn predict_k(mut ks: KalmanState, k: u32) -> KalmanState {
+    let a = cv_a();
+    let q = cv_q();
+    for _ in 0..k {
+        ks.predict(&a, &[0.0; 4], &q);
+    }
+    ks
+}
+
+/// log-pmf of the clutter configuration.
+fn clutter_ll(k: usize) -> f64 {
+    crate::rng::poisson_lpmf(k as u64, CLUTTER_RATE) - (k as f64) * (ARENA * ARENA).ln()
+}
+
+impl Mot {
+    /// Simulate ground-truth tracks + clutter into an observation set.
+    pub fn synthetic(t_max: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::stream(seed, 0x0707);
+        let mut truth: Vec<(f64, f64, f64, f64)> = Vec::new();
+        let mut obs = Vec::with_capacity(t_max);
+        for _ in 0..t_max {
+            for _ in 0..rng.poisson(BIRTH_RATE) {
+                truth.push((
+                    rng.uniform(-ARENA / 2.0, ARENA / 2.0),
+                    rng.uniform(-ARENA / 2.0, ARENA / 2.0),
+                    rng.gaussian(0.0, 0.3),
+                    rng.gaussian(0.0, 0.3),
+                ));
+            }
+            truth.retain(|_| rng.next_f64() > P_DEATH);
+            let mut pts = Vec::new();
+            for tr in truth.iter_mut() {
+                tr.0 += tr.2 + rng.gaussian(0.0, Q_POS.sqrt());
+                tr.1 += tr.3 + rng.gaussian(0.0, Q_POS.sqrt());
+                tr.2 += rng.gaussian(0.0, Q_VEL.sqrt());
+                tr.3 += rng.gaussian(0.0, Q_VEL.sqrt());
+                if rng.next_f64() < P_DETECT {
+                    pts.push((
+                        tr.0 + rng.gaussian(0.0, OBS_VAR.sqrt()),
+                        tr.1 + rng.gaussian(0.0, OBS_VAR.sqrt()),
+                    ));
+                }
+            }
+            for _ in 0..rng.poisson(CLUTTER_RATE) {
+                pts.push((
+                    rng.uniform(-ARENA / 2.0, ARENA / 2.0),
+                    rng.uniform(-ARENA / 2.0, ARENA / 2.0),
+                ));
+            }
+            obs.push(pts);
+        }
+        Mot { obs }
+    }
+}
+
+impl SmcModel for Mot {
+    type State = MotState;
+
+    fn name(&self) -> &'static str {
+        "mot"
+    }
+
+    fn horizon(&self) -> usize {
+        self.obs.len()
+    }
+
+    fn init(&self, heap: &mut Heap, _rng: &mut Pcg64) -> Lazy<MotState> {
+        heap.alloc(MotState::default())
+    }
+
+    fn step(
+        &self,
+        heap: &mut Heap,
+        state: &mut Lazy<MotState>,
+        t: usize,
+        rng: &mut Pcg64,
+        observe: bool,
+    ) -> f64 {
+        // Borrow the previous generation's track pointers (shared).
+        let n_prev = heap.read(state, |s| s.tracks.len());
+        let mut tracks: Vec<Lazy<Track>> = (0..n_prev)
+            .map(|i| heap.read_ptr(state, |s| s.tracks[i]))
+            .collect();
+        // Deaths.
+        tracks.retain(|_| rng.next_f64() > P_DEATH);
+        // Stack handles created this step (births + association updates),
+        // released once the new state node owns its stored edges.
+        let mut owned: Vec<Lazy<Track>> = Vec::new();
+        // Births (fresh nodes, no history).
+        for _ in 0..rng.poisson(BIRTH_RATE) {
+            let px = rng.uniform(-ARENA / 2.0, ARENA / 2.0);
+            let py = rng.uniform(-ARENA / 2.0, ARENA / 2.0);
+            let tr = heap.alloc(Track {
+                kalman: new_track_belief(px, py),
+                updated_t: t as u32,
+                prev: Lazy::NULL,
+            });
+            tracks.push(tr);
+            owned.push(tr);
+        }
+
+        let mut ll = 0.0;
+        if observe {
+            let points = &self.obs[t - 1];
+            let mut used = vec![false; points.len()];
+            let c = obs_c();
+            let r = obs_r();
+            for track in tracks.iter_mut() {
+                // Read-only catch-up prediction for gating.
+                let (belief, updated_t) =
+                    heap.read(track, |tr| (tr.kalman.clone(), tr.updated_t));
+                let stale = (t as u32).saturating_sub(updated_t);
+                let predicted = predict_k(belief, stale);
+                let (px, py) = (predicted.mean[0], predicted.mean[1]);
+                let mut best: Option<(usize, f64)> = None;
+                for (j, p) in points.iter().enumerate() {
+                    if used[j] {
+                        continue;
+                    }
+                    let d2 = (p.0 - px).powi(2) + (p.1 - py).powi(2);
+                    if best.map(|(_, b)| d2 < b).unwrap_or(true) {
+                        best = Some((j, d2));
+                    }
+                }
+                match best {
+                    Some((j, d2)) if d2 < GATE => {
+                        // Associated: update and append a new snapshot;
+                        // the old node stays shared with other particles.
+                        used[j] = true;
+                        let mut updated = predicted;
+                        let y = [points[j].0, points[j].1];
+                        ll += P_DETECT.ln();
+                        ll += updated.update(&c, &r, &y);
+                        let old = *track;
+                        let new = heap.alloc(Track {
+                            kalman: updated,
+                            updated_t: t as u32,
+                            prev: old,
+                        });
+                        *track = new;
+                        owned.push(new);
+                    }
+                    _ => ll += (1.0 - P_DETECT).ln(),
+                }
+            }
+            let n_clutter = used.iter().filter(|u| !**u).count();
+            ll += clutter_ll(n_clutter);
+        }
+
+        // New generation node referencing the (partly refreshed) tracks.
+        let old = *state;
+        let new = heap.alloc(MotState {
+            tracks: tracks.clone(),
+            prev: old,
+        });
+        heap.release(old);
+        *state = new;
+        // Stored edges own their counts; drop this step's stack handles.
+        // (Borrowed pointers to shared old tracks are not released.)
+        for h in owned {
+            heap.release(h);
+        }
+        if observe {
+            ll
+        } else {
+            0.0
+        }
+    }
+
+    fn summary(&self, heap: &mut Heap, state: &mut Lazy<MotState>) -> f64 {
+        heap.read(state, |s| s.tracks.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Model, RunConfig, Task};
+    use crate::heap::{CopyMode, Heap};
+    use crate::pool::ThreadPool;
+    use crate::smc::{run_filter, Method, StepCtx};
+
+    #[test]
+    fn synthetic_observations_reproducible() {
+        let a = Mot::synthetic(30, 1);
+        let b = Mot::synthetic(30, 1);
+        assert_eq!(a.obs.len(), 30);
+        for (x, y) in a.obs.iter().zip(&b.obs) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn predict_k_matches_iterated_predict() {
+        let ks = new_track_belief(1.0, -2.0);
+        let once = predict_k(ks.clone(), 3);
+        let mut manual = ks;
+        let (a, q) = (cv_a(), cv_q());
+        for _ in 0..3 {
+            manual.predict(&a, &[0.0; 4], &q);
+        }
+        assert_eq!(once, manual);
+    }
+
+    #[test]
+    fn filter_tracks_share_and_cleanup() {
+        let model = Mot::synthetic(15, 2);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut out = Vec::new();
+        for mode in CopyMode::ALL {
+            let mut c = RunConfig::for_model(Model::Mot, Task::Inference, mode);
+            c.n_particles = 32;
+            c.n_steps = 15;
+            c.seed = 9;
+            let mut heap = Heap::new(mode);
+            let r = run_filter(&model, &c, &mut heap, &ctx, Method::Bootstrap);
+            assert!(r.log_evidence.is_finite());
+            out.push((r.log_evidence, r.posterior_mean));
+            assert_eq!(heap.live_objects(), 0, "{mode:?} leaked");
+        }
+        assert_eq!(out[0].0.to_bits(), out[1].0.to_bits());
+        assert_eq!(out[1].0.to_bits(), out[2].0.to_bits());
+    }
+
+    #[test]
+    fn lazy_shares_untouched_tracks() {
+        // Append-only track nodes: lazy peak memory must undercut eager.
+        let model = Mot::synthetic(40, 3);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut peaks = Vec::new();
+        for mode in [CopyMode::Eager, CopyMode::LazySro] {
+            let mut c = RunConfig::for_model(Model::Mot, Task::Inference, mode);
+            c.n_particles = 64;
+            c.n_steps = 40;
+            c.seed = 4;
+            let mut heap = Heap::new(mode);
+            let r = run_filter(&model, &c, &mut heap, &ctx, Method::Bootstrap);
+            peaks.push(r.peak_bytes as f64);
+        }
+        assert!(
+            peaks[1] < peaks[0] * 0.6,
+            "lazy peak {} not well below eager peak {}",
+            peaks[1],
+            peaks[0]
+        );
+    }
+
+    #[test]
+    fn simulation_no_copies() {
+        let model = Mot::synthetic(20, 5);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut c = RunConfig::for_model(Model::Mot, Task::Simulation, CopyMode::LazySro);
+        c.n_particles = 16;
+        c.n_steps = 20;
+        let mut heap = Heap::new(CopyMode::LazySro);
+        let _ = run_filter(&model, &c, &mut heap, &ctx, Method::Bootstrap);
+        assert_eq!(heap.metrics.deep_copies, 0);
+    }
+}

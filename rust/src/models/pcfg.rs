@@ -1,0 +1,321 @@
+//! PCFG: probabilistic context-free grammar with an auxiliary particle
+//! filter and custom proposal (Pitt & Shephard 1999).
+//!
+//! Each particle carries a derivation **stack** of grammar symbols — a
+//! data structure of random, unbounded size (the paper's motivating §1
+//! list) — and *only the latest state* is kept (no history chain), so lazy
+//! copies are expected to yield a constant-factor improvement at most (the
+//! paper's own PCFG caveat in §4).
+//!
+//! Generative process per generation: pop symbols, expanding nonterminals
+//! by sampled rules, until a preterminal pops; it emits a terminal, which
+//! is conditioned on the observed symbol (weight = emission likelihood).
+//! The APF lookahead is the exact one-step-ahead probability of the next
+//! observed terminal given the stack top (precomputed first-terminal
+//! distributions). Rule probabilities use Dirichlet-style pseudocounts via
+//! beta–binomial style accumulators kept fixed here (known grammar).
+//!
+//! Paper scale: N = 16384, T = 3262 (inference) / 2000 (simulation).
+//! Data: unpublished model in the paper → a standard toy grammar here,
+//! corpus sampled from the grammar itself.
+
+use crate::heap::{Heap, Lazy};
+use crate::lazy_fields;
+use crate::rng::Pcg64;
+use crate::smc::SmcModel;
+
+pub const N_TERMINALS: usize = 3;
+
+/// Symbols: 0..N_NT are nonterminals, N_NT..N_NT+N_PT preterminals.
+const S: u8 = 0;
+const A: u8 = 1;
+const B: u8 = 2;
+const PX: u8 = 3;
+const PY: u8 = 4;
+const N_SYMBOLS: usize = 5;
+
+/// A production rule: probability + right-hand side (pushed reversed).
+struct Rule {
+    p: f64,
+    rhs: &'static [u8],
+}
+
+fn rules(nt: u8) -> &'static [Rule] {
+    match nt {
+        S => &[
+            Rule { p: 0.4, rhs: &[PX, A] },
+            Rule { p: 0.4, rhs: &[PY, B] },
+            Rule { p: 0.2, rhs: &[PX] },
+        ],
+        A => &[
+            Rule { p: 0.6, rhs: &[PY] },
+            Rule { p: 0.25, rhs: &[PX, A] },
+            Rule { p: 0.15, rhs: &[PY, S] },
+        ],
+        B => &[
+            Rule { p: 0.5, rhs: &[PX] },
+            Rule { p: 0.3, rhs: &[PY, B] },
+            Rule { p: 0.2, rhs: &[PX, S] },
+        ],
+        _ => unreachable!("not a nonterminal"),
+    }
+}
+
+/// Emission distributions for preterminals over terminals {x, y, z}.
+fn emissions(pt: u8) -> &'static [f64; N_TERMINALS] {
+    match pt {
+        PX => &[0.7, 0.0, 0.3],
+        PY => &[0.0, 0.8, 0.2],
+        _ => unreachable!("not a preterminal"),
+    }
+}
+
+#[derive(Clone, Default)]
+pub struct PcfgState {
+    /// Derivation stack, top at the end. Grows and shrinks in place —
+    /// exactly the mutation pattern whose copies the platform defers.
+    pub stack: Vec<u8>,
+    pub emitted: u64,
+    /// Dummy pointer field so the payload exercises the edge machinery
+    /// even though PCFG states don't chain.
+    pub prev: Lazy<PcfgState>,
+}
+lazy_fields!(PcfgState: prev);
+
+pub struct Pcfg {
+    pub obs: Vec<u8>,
+    /// first_term[sym][terminal]: probability that the next emitted
+    /// terminal is `terminal` given `sym` is on top (exact fixed point).
+    first_term: Vec<[f64; N_TERMINALS]>,
+}
+
+impl Pcfg {
+    pub fn new(obs: Vec<u8>) -> Self {
+        // Fixed-point computation of first-terminal distributions.
+        let mut first = vec![[0.0; N_TERMINALS]; N_SYMBOLS];
+        for pt in [PX, PY] {
+            first[pt as usize] = *emissions(pt);
+        }
+        for _ in 0..64 {
+            for nt in [S, A, B] {
+                let mut acc = [0.0; N_TERMINALS];
+                for r in rules(nt) {
+                    let head = r.rhs[0] as usize;
+                    for k in 0..N_TERMINALS {
+                        acc[k] += r.p * first[head][k];
+                    }
+                }
+                first[nt as usize] = acc;
+            }
+        }
+        Pcfg {
+            obs,
+            first_term: first,
+        }
+    }
+
+    /// Sample a corpus of `t_max` terminals from the grammar.
+    pub fn synthetic(t_max: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::stream(seed, 0x9CF6);
+        let mut stack = vec![S];
+        let mut obs = Vec::with_capacity(t_max);
+        while obs.len() < t_max {
+            match stack.pop() {
+                None => stack.push(S),
+                Some(sym) if sym >= PX => {
+                    let e = emissions(sym);
+                    obs.push(rng.categorical(e) as u8);
+                }
+                Some(nt) => {
+                    let rs = rules(nt);
+                    let probs: Vec<f64> = rs.iter().map(|r| r.p).collect();
+                    let k = rng.categorical(&probs);
+                    for &s in rs[k].rhs.iter().rev() {
+                        stack.push(s);
+                    }
+                }
+            }
+        }
+        Pcfg::new(obs)
+    }
+}
+
+impl SmcModel for Pcfg {
+    type State = PcfgState;
+
+    fn name(&self) -> &'static str {
+        "pcfg"
+    }
+
+    fn horizon(&self) -> usize {
+        self.obs.len()
+    }
+
+    fn init(&self, heap: &mut Heap, _rng: &mut Pcg64) -> Lazy<PcfgState> {
+        heap.alloc(PcfgState {
+            stack: vec![S],
+            emitted: 0,
+            prev: Lazy::NULL,
+        })
+    }
+
+    fn step(
+        &self,
+        heap: &mut Heap,
+        state: &mut Lazy<PcfgState>,
+        t: usize,
+        rng: &mut Pcg64,
+        observe: bool,
+    ) -> f64 {
+        // Make the state writable once (copy-on-write happens here), then
+        // run the expansion loop in place.
+        let y = if observe { Some(self.obs[t - 1]) } else { None };
+        let mut ll = 0.0;
+        heap.mutate_root(state, |s| {
+            loop {
+                let top = match s.stack.pop() {
+                    None => {
+                        s.stack.push(S);
+                        continue;
+                    }
+                    Some(sym) => sym,
+                };
+                if top >= PX {
+                    // Preterminal: emit, conditioning on the observation.
+                    let e = emissions(top);
+                    match y {
+                        Some(obs_sym) => {
+                            let p = e[obs_sym as usize];
+                            ll = if p > 0.0 { p.ln() } else { f64::NEG_INFINITY };
+                        }
+                        None => {
+                            let _ = rng.categorical(e);
+                        }
+                    }
+                    s.emitted += 1;
+                    break;
+                }
+                // Nonterminal: expand by a sampled rule.
+                let rs = rules(top);
+                let probs: Vec<f64> = rs.iter().map(|r| r.p).collect();
+                let k = rng.categorical(&probs);
+                for &sym in rs[k].rhs.iter().rev() {
+                    s.stack.push(sym);
+                }
+                // Safety valve against pathological stack growth.
+                if s.stack.len() > 10_000 {
+                    s.stack.truncate(1);
+                }
+            }
+        });
+        ll
+    }
+
+    /// Exact one-step lookahead: P(y_t | stack top) — the APF's custom
+    /// proposal score.
+    fn lookahead(&self, heap: &mut Heap, state: &mut Lazy<PcfgState>, t: usize) -> Option<f64> {
+        let y = self.obs[t - 1] as usize;
+        let top = heap.read(state, |s| s.stack.last().copied());
+        let sym = top.unwrap_or(S) as usize;
+        let p = self.first_term[sym][y];
+        Some(if p > 0.0 { p.ln() } else { -30.0 })
+    }
+
+    fn summary(&self, heap: &mut Heap, state: &mut Lazy<PcfgState>) -> f64 {
+        heap.read(state, |s| s.stack.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Model, RunConfig, Task};
+    use crate::heap::{CopyMode, Heap};
+    use crate::pool::ThreadPool;
+    use crate::smc::{run_filter, Method, StepCtx};
+
+    #[test]
+    fn first_terminal_distributions_normalize() {
+        let m = Pcfg::synthetic(10, 1);
+        for sym in 0..N_SYMBOLS {
+            let s: f64 = m.first_term[sym].iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "sym {sym}: {s}");
+        }
+    }
+
+    #[test]
+    fn corpus_reproducible_and_in_alphabet() {
+        let a = Pcfg::synthetic(200, 5);
+        let b = Pcfg::synthetic(200, 5);
+        assert_eq!(a.obs, b.obs);
+        assert!(a.obs.iter().all(|&s| (s as usize) < N_TERMINALS));
+    }
+
+    #[test]
+    fn apf_beats_or_matches_bootstrap_on_evidence_variance() {
+        let model = Pcfg::synthetic(30, 2);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let run = |method, seed| {
+            let mut c = RunConfig::for_model(Model::Pcfg, Task::Inference, CopyMode::LazySro);
+            c.n_particles = 256;
+            c.n_steps = 30;
+            c.seed = seed;
+            let mut heap = Heap::new(CopyMode::LazySro);
+            let r = run_filter(&model, &c, &mut heap, &ctx, method);
+            assert_eq!(heap.live_objects(), 0);
+            r.log_evidence
+        };
+        let boot: Vec<f64> = (0..5).map(|s| run(Method::Bootstrap, s)).collect();
+        let apf: Vec<f64> = (0..5).map(|s| run(Method::Auxiliary, s)).collect();
+        // Both must be finite and in the same ballpark.
+        for v in boot.iter().chain(&apf) {
+            assert!(v.is_finite(), "evidence estimates: {boot:?} {apf:?}");
+        }
+        let mb = crate::stats::mean(&boot);
+        let ma = crate::stats::mean(&apf);
+        assert!((mb - ma).abs() < 10.0, "bootstrap {mb} vs apf {ma}");
+    }
+
+    #[test]
+    fn modes_agree_bitwise() {
+        let model = Pcfg::synthetic(25, 3);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut out = Vec::new();
+        for mode in CopyMode::ALL {
+            let mut c = RunConfig::for_model(Model::Pcfg, Task::Inference, mode);
+            c.n_particles = 64;
+            c.n_steps = 25;
+            c.seed = 11;
+            let mut heap = Heap::new(mode);
+            let r = run_filter(&model, &c, &mut heap, &ctx, Method::Auxiliary);
+            out.push(r.log_evidence);
+        }
+        assert_eq!(out[0].to_bits(), out[1].to_bits());
+        assert_eq!(out[1].to_bits(), out[2].to_bits());
+    }
+
+    #[test]
+    fn simulation_emits_without_conditioning() {
+        let model = Pcfg::synthetic(40, 4);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut c = RunConfig::for_model(Model::Pcfg, Task::Simulation, CopyMode::Lazy);
+        c.n_particles = 16;
+        c.n_steps = 40;
+        let mut heap = Heap::new(CopyMode::Lazy);
+        let r = run_filter(&model, &c, &mut heap, &ctx, Method::Bootstrap);
+        assert!(r.log_evidence.is_nan());
+        assert_eq!(heap.metrics.deep_copies, 0);
+    }
+}

@@ -1,0 +1,330 @@
+//! RBPF: mixed linear/nonlinear state-space model (Lindsten & Schön 2010)
+//! with a Rao–Blackwellized particle filter via delayed sampling.
+//!
+//! Per particle: a nonlinear scalar state ξ (sampled) and a 3-dimensional
+//! linear substate z (marginalized as a per-particle Kalman belief — the
+//! delayed-sampling automatic Rao–Blackwellization):
+//!
+//!   ξ_t = 0.5 ξ + 25 ξ/(1+ξ²) + 8 cos(1.2 t) + v,  v ~ N(0, q_ξ)
+//!   z_t = A z_{t-1} + w,                            w ~ N(0, Q)
+//!   y1_t = ξ_t²/20 + e1,  e1 ~ N(0, r_ξ)
+//!   y2_t = C z_t + e2,    e2 ~ N(0, R)
+//!
+//! The per-generation Kalman update over the particle batch is the numeric
+//! hot spot: `step_population` splits each generation into a serial heap
+//! phase and a batched phase running the compiled XLA artifact (the L1
+//! Pallas kernel) or the CPU oracle.
+//!
+//! Paper scale: N = 2048, T = 500. Data: simulated (as in the paper).
+
+use crate::heap::{Heap, Lazy};
+use crate::lazy_fields;
+use crate::linalg::Mat;
+use crate::ppl::KalmanState;
+use crate::rng::{normal_lpdf, Pcg64};
+use crate::runtime::{batch_kalman_cpu, KalmanParams, DZ};
+use crate::smc::{particle_rng, SmcModel, StepCtx};
+
+const Q_XI: f64 = 0.5;
+const R_XI: f64 = 0.7;
+
+/// One generation of a particle's history (chained backwards).
+#[derive(Clone)]
+pub struct RbpfState {
+    pub xi: f64,
+    pub kalman: KalmanState,
+    pub prev: Lazy<RbpfState>,
+}
+lazy_fields!(RbpfState: prev);
+
+pub struct Rbpf {
+    pub params: KalmanParams,
+    /// Observations (y1, y2) per generation.
+    pub obs: Vec<(f64, f64)>,
+}
+
+fn xi_dynamics(xi: f64, t: usize) -> f64 {
+    0.5 * xi + 25.0 * xi / (1.0 + xi * xi) + 8.0 * (1.2 * t as f64).cos()
+}
+
+impl Rbpf {
+    /// Simulate `t_max` observations from the model (the paper's setup).
+    pub fn synthetic(t_max: usize, seed: u64) -> Self {
+        let params = KalmanParams::rbpf_default();
+        let mut rng = Pcg64::stream(seed, 0xDA7A);
+        let mut xi = rng.gaussian(0.0, 1.0);
+        let mut z = vec![0.0f64; DZ];
+        let mut obs = Vec::with_capacity(t_max);
+        for t in 1..=t_max {
+            xi = xi_dynamics(xi, t) + rng.gaussian(0.0, Q_XI.sqrt());
+            // z' = A z + w.
+            let az = params.a.matmul(&Mat::col_vec(&z));
+            for (d, zd) in z.iter_mut().enumerate() {
+                *zd = az.at(d, 0) + rng.gaussian(0.0, params.q.at(d, d).sqrt());
+            }
+            let y1 = xi * xi / 20.0 + rng.gaussian(0.0, R_XI.sqrt());
+            let cz: f64 = (0..DZ).map(|d| params.c.at(0, d) * z[d]).sum();
+            let y2 = cz + rng.gaussian(0.0, params.r.sqrt());
+            obs.push((y1, y2));
+        }
+        Rbpf { params, obs }
+    }
+
+    fn initial_state() -> RbpfState {
+        RbpfState {
+            xi: 0.0,
+            kalman: KalmanState::new(vec![0.0; DZ], Mat::eye(DZ)),
+            prev: Lazy::NULL,
+        }
+    }
+}
+
+impl SmcModel for Rbpf {
+    type State = RbpfState;
+
+    fn name(&self) -> &'static str {
+        "rbpf"
+    }
+
+    fn horizon(&self) -> usize {
+        self.obs.len()
+    }
+
+    fn init(&self, heap: &mut Heap, rng: &mut Pcg64) -> Lazy<RbpfState> {
+        let mut s = Self::initial_state();
+        s.xi = rng.gaussian(0.0, 1.0);
+        heap.alloc(s)
+    }
+
+    fn step(
+        &self,
+        heap: &mut Heap,
+        state: &mut Lazy<RbpfState>,
+        t: usize,
+        rng: &mut Pcg64,
+        observe: bool,
+    ) -> f64 {
+        let (xi_prev, mut ks) = heap.read(state, |s| (s.xi, s.kalman.clone()));
+        let xi = xi_dynamics(xi_prev, t) + rng.gaussian(0.0, Q_XI.sqrt());
+        let (y1, y2) = if observe {
+            self.obs[t - 1]
+        } else {
+            // Simulation: sample pseudo-observations, discard weights.
+            (xi * xi / 20.0 + rng.gaussian(0.0, R_XI.sqrt()), rng.gaussian(0.0, 1.0))
+        };
+        ks.predict(&self.params.a, &[0.0; DZ], &self.params.q);
+        let ll_z = ks.update(&self.params.c, &Mat::from_rows(&[&[self.params.r]]), &[y2]);
+        let ll_xi = normal_lpdf(y1, xi * xi / 20.0, R_XI.sqrt());
+        let old = *state;
+        let new = heap.alloc(RbpfState {
+            xi,
+            kalman: ks,
+            prev: old,
+        });
+        heap.release(old);
+        *state = new;
+        if observe {
+            ll_xi + ll_z
+        } else {
+            0.0
+        }
+    }
+
+    /// Batched generation: serial heap reads → batched Kalman (XLA artifact
+    /// or CPU oracle, parallelized by the pool) → serial heap writes.
+    fn step_population(
+        &self,
+        heap: &mut Heap,
+        states: &mut [Lazy<RbpfState>],
+        t: usize,
+        seed: u64,
+        observe: bool,
+        ctx: &StepCtx,
+    ) -> Vec<f64> {
+        let n = states.len();
+        // Phase 1 (serial, heap): read previous numeric state.
+        let mut xis = vec![0.0f64; n];
+        let mut means = vec![0.0f64; n * DZ];
+        let mut covs = vec![0.0f64; n * DZ * DZ];
+        for (i, s) in states.iter_mut().enumerate() {
+            heap.read(s, |st| {
+                xis[i] = st.xi;
+                means[i * DZ..(i + 1) * DZ].copy_from_slice(&st.kalman.mean);
+                for r in 0..DZ {
+                    for c in 0..DZ {
+                        covs[i * DZ * DZ + r * DZ + c] = st.kalman.cov.at(r, c);
+                    }
+                }
+            });
+        }
+        // Phase 2 (parallel, no heap): nonlinear propagation + y1 weights.
+        let mut ll_xi = vec![0.0f64; n];
+        let obs_pair = if observe { Some(self.obs[t - 1]) } else { None };
+        {
+            let xis_ptr = &mut xis;
+            let ll_ptr = &mut ll_xi;
+            // map_indexed writes disjoint slots; compute xi' and ll.
+            let xi_prev: Vec<f64> = xis_ptr.clone();
+            let results: &mut Vec<(f64, f64)> = &mut vec![(0.0, 0.0); n];
+            ctx.pool.map_indexed(results, |i| {
+                let mut rng = particle_rng(seed, t, i);
+                let xi = xi_dynamics(xi_prev[i], t) + rng.gaussian(0.0, Q_XI.sqrt());
+                let ll = match obs_pair {
+                    Some((y1, _)) => normal_lpdf(y1, xi * xi / 20.0, R_XI.sqrt()),
+                    None => 0.0,
+                };
+                (xi, ll)
+            });
+            for i in 0..n {
+                xis_ptr[i] = results[i].0;
+                ll_ptr[i] = results[i].1;
+            }
+        }
+        // Phase 3 (batched): Kalman predict+update+weight.
+        let y2 = obs_pair.map(|(_, y)| y).unwrap_or(0.0);
+        let ll_z = match ctx.kalman {
+            Some(bk) => bk
+                .run(&mut means, &mut covs, y2)
+                .expect("batched kalman artifact failed"),
+            None => batch_kalman_cpu(&self.params, &mut means, &mut covs, y2),
+        };
+        // Phase 4 (serial, heap): extend chains.
+        let mut out = Vec::with_capacity(n);
+        for (i, s) in states.iter_mut().enumerate() {
+            let mut cov = Mat::zeros(DZ, DZ);
+            for r in 0..DZ {
+                for c in 0..DZ {
+                    *cov.at_mut(r, c) = covs[i * DZ * DZ + r * DZ + c];
+                }
+            }
+            let ks = KalmanState::new(means[i * DZ..(i + 1) * DZ].to_vec(), cov);
+            let old = *s;
+            let label = s.label();
+            let new = heap.with_context(label, |h| {
+                h.alloc(RbpfState {
+                    xi: xis[i],
+                    kalman: ks,
+                    prev: old,
+                })
+            });
+            heap.release(old);
+            *s = new;
+            out.push(if observe { ll_xi[i] + ll_z[i] } else { 0.0 });
+        }
+        out
+    }
+
+    fn summary(&self, heap: &mut Heap, state: &mut Lazy<RbpfState>) -> f64 {
+        heap.read(state, |s| s.xi + s.kalman.mean[0])
+    }
+
+    fn chain(&self, heap: &mut Heap, state: &Lazy<RbpfState>) -> Vec<Lazy<RbpfState>> {
+        let mut out = vec![heap.clone_handle(state)];
+        let mut cur = *state;
+        loop {
+            let prev = heap.read_ptr(&mut cur, |s| s.prev);
+            if prev.is_null() {
+                break;
+            }
+            out.push(heap.clone_handle(&prev));
+            cur = prev;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Model, RunConfig, Task};
+    use crate::heap::CopyMode;
+    use crate::pool::ThreadPool;
+    use crate::smc::{run_filter, Method};
+
+    fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
+        StepCtx { pool, kalman: None }
+    }
+
+    fn cfg(n: usize, t: usize, mode: CopyMode) -> RunConfig {
+        let mut c = RunConfig::for_model(Model::Rbpf, Task::Inference, mode);
+        c.n_particles = n;
+        c.n_steps = t;
+        c.seed = 7;
+        c
+    }
+
+    #[test]
+    fn synthetic_data_reproducible() {
+        let a = Rbpf::synthetic(50, 1);
+        let b = Rbpf::synthetic(50, 1);
+        assert_eq!(a.obs, b.obs);
+        let c = Rbpf::synthetic(50, 2);
+        assert_ne!(a.obs, c.obs);
+    }
+
+    #[test]
+    fn batched_step_equals_sequential_step() {
+        // step_population (CPU batch path) must produce bit-identical
+        // weights and states to the per-particle step.
+        let model = Rbpf::synthetic(5, 3);
+        let pool = ThreadPool::new(2);
+        let n = 16;
+        let mut heap_a = crate::heap::Heap::new(CopyMode::LazySro);
+        let mut heap_b = crate::heap::Heap::new(CopyMode::LazySro);
+        let mut sa: Vec<_> = (0..n)
+            .map(|i| model.init(&mut heap_a, &mut particle_rng(7, 0, i)))
+            .collect();
+        let mut sb: Vec<_> = (0..n)
+            .map(|i| model.init(&mut heap_b, &mut particle_rng(7, 0, i)))
+            .collect();
+        for t in 1..=5 {
+            let wa = model.step_population(&mut heap_a, &mut sa, t, 7, true, &ctx(&pool));
+            let mut wb = Vec::new();
+            for (i, s) in sb.iter_mut().enumerate() {
+                let mut rng = particle_rng(7, t, i);
+                wb.push(model.step(&mut heap_b, s, t, &mut rng, true));
+            }
+            for i in 0..n {
+                assert!(
+                    (wa[i] - wb[i]).abs() < 1e-10,
+                    "t={t} i={i}: {} vs {}",
+                    wa[i],
+                    wb[i]
+                );
+            }
+        }
+        for s in sa {
+            heap_a.release(s);
+        }
+        for s in sb {
+            heap_b.release(s);
+        }
+    }
+
+    #[test]
+    fn filter_runs_and_cleans_up_all_modes() {
+        let model = Rbpf::synthetic(20, 3);
+        let pool = ThreadPool::new(2);
+        let mut evidences = Vec::new();
+        for mode in CopyMode::ALL {
+            let mut heap = crate::heap::Heap::new(mode);
+            let r = run_filter(&model, &cfg(64, 20, mode), &mut heap, &ctx(&pool), Method::Bootstrap);
+            assert!(r.log_evidence.is_finite());
+            assert_eq!(heap.live_objects(), 0, "{mode:?} leaked");
+            evidences.push(r.log_evidence);
+        }
+        assert_eq!(evidences[0].to_bits(), evidences[1].to_bits());
+        assert_eq!(evidences[1].to_bits(), evidences[2].to_bits());
+    }
+
+    #[test]
+    fn simulation_task_no_copies() {
+        let model = Rbpf::synthetic(15, 4);
+        let pool = ThreadPool::new(1);
+        let mut c = cfg(32, 15, CopyMode::LazySro);
+        c.task = Task::Simulation;
+        let mut heap = crate::heap::Heap::new(CopyMode::LazySro);
+        let _ = run_filter(&model, &c, &mut heap, &ctx(&pool), Method::Bootstrap);
+        assert_eq!(heap.metrics.deep_copies, 0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Parallel execution over index ranges with static scheduling.
+//!
+//! Substrate replacing OpenMP (the paper parallelizes particle propagation
+//! and weighting across threads with static scheduling, one bound per
+//! core). [`ThreadPool::for_ranges`] runs `f(start, end)` on contiguous
+//! chunks, one per worker, and joins — the numeric phase of each
+//! generation. Heap mutation phases remain serialized on the caller (see
+//! the threading note in [`crate::heap`]).
+//!
+//! Implementation: scoped threads (`std::thread::scope`) spawned per call.
+//! For the per-generation batch sizes of the evaluation models the spawn
+//! cost is noise next to the numeric work, and the scope keeps borrows
+//! safe without lifetime erasure.
+
+use std::thread;
+
+/// Static-scheduling parallel executor.
+pub struct ThreadPool {
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Create an executor with `n` workers (0 = available parallelism).
+    pub fn new(n: usize) -> Self {
+        let n_threads = if n == 0 {
+            thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            n
+        };
+        ThreadPool { n_threads }
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Split `0..n` into contiguous chunks (static scheduling, one per
+    /// worker) and run `f(start, end)` on each in parallel. Blocks until
+    /// all chunks complete.
+    pub fn for_ranges<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Send + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunks = self.n_threads.min(n);
+        if chunks == 1 {
+            f(0, n);
+            return;
+        }
+        let per = n.div_ceil(chunks);
+        thread::scope(|s| {
+            for c in 1..chunks {
+                let start = c * per;
+                let end = ((c + 1) * per).min(n);
+                if start < end {
+                    let f = &f;
+                    s.spawn(move || f(start, end));
+                }
+            }
+            // Run the first chunk on the calling thread.
+            f(0, per.min(n));
+        });
+    }
+
+    /// `out[i] = f(i)` in parallel over disjoint chunks.
+    pub fn map_indexed<T: Send, F>(&self, out: &mut [T], f: F)
+    where
+        F: Fn(usize) -> T + Send + Sync,
+    {
+        if out.is_empty() {
+            return;
+        }
+        let chunks = self.n_threads.min(out.len());
+        if chunks == 1 {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = f(i);
+            }
+            return;
+        }
+        let per = out.len().div_ceil(chunks);
+        thread::scope(|s| {
+            for (c, chunk) in out.chunks_mut(per).enumerate() {
+                let f = &f;
+                s.spawn(move || {
+                    for (j, o) in chunk.iter_mut().enumerate() {
+                        *o = f(c * per + j);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn for_ranges_covers_all_indices() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicUsize::new(0);
+        let sum = AtomicUsize::new(0);
+        pool.for_ranges(1000, |s, e| {
+            for i in s..e {
+                hits.fetch_add(1, Ordering::Relaxed);
+                sum.fetch_add(i, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn map_indexed_writes_all() {
+        let pool = ThreadPool::new(3);
+        let mut out = vec![0u64; 513];
+        pool.map_indexed(&mut out, |i| (i * i) as u64);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let pool = ThreadPool::new(1);
+        let mut out = vec![0u32; 10];
+        pool.map_indexed(&mut out, |i| i as u32 + 1);
+        assert_eq!(out[9], 10);
+    }
+
+    #[test]
+    fn zero_work_is_fine() {
+        let pool = ThreadPool::new(2);
+        pool.for_ranges(0, |_, _| panic!("should not run"));
+        let mut empty: Vec<u32> = Vec::new();
+        pool.map_indexed(&mut empty, |_| 1);
+    }
+
+    #[test]
+    fn default_parallelism_nonzero() {
+        let pool = ThreadPool::new(0);
+        assert!(pool.n_threads() >= 1);
+    }
+}

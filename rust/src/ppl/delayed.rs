@@ -1,0 +1,304 @@
+//! Scalar conjugate-pair delayed-sampling nodes.
+//!
+//! Each node is either `Marginalized` (posterior hyper-parameters) or
+//! `Realized` (a concrete value). `observe_*` updates the hyper-parameters
+//! and returns the marginal log-likelihood (the particle weight
+//! contribution); `realize` draws a value and pins it.
+
+use crate::rng::{
+    betabin_lpmf, gamma_lpdf, negbin_lpmf, normal_lpdf, Pcg64,
+};
+
+/// 1-D Gaussian with unknown mean (known observation variance):
+/// μ ~ N(m, v); y | μ ~ N(μ, s²).
+#[derive(Clone, Debug, PartialEq)]
+pub enum GaussianNode {
+    Marginalized { mean: f64, var: f64 },
+    Realized(f64),
+}
+
+impl GaussianNode {
+    pub fn new(mean: f64, var: f64) -> Self {
+        GaussianNode::Marginalized { mean, var }
+    }
+
+    /// Observe y ~ N(μ, obs_var): conjugate update; returns the marginal
+    /// log-likelihood log N(y; m, v + obs_var).
+    pub fn observe(&mut self, y: f64, obs_var: f64) -> f64 {
+        match self {
+            GaussianNode::Marginalized { mean, var } => {
+                let s = *var + obs_var;
+                let ll = normal_lpdf(y, *mean, s.sqrt());
+                let k = *var / s;
+                *mean += k * (y - *mean);
+                *var *= 1.0 - k;
+                ll
+            }
+            GaussianNode::Realized(mu) => normal_lpdf(y, *mu, obs_var.sqrt()),
+        }
+    }
+
+    /// Random-walk prediction: μ' = a·μ + b + N(0, q).
+    pub fn predict(&mut self, a: f64, b: f64, q: f64) {
+        if let GaussianNode::Marginalized { mean, var } = self {
+            *mean = a * *mean + b;
+            *var = a * a * *var + q;
+        }
+    }
+
+    /// Draw a value and pin it.
+    pub fn realize(&mut self, rng: &mut Pcg64) -> f64 {
+        match self {
+            GaussianNode::Marginalized { mean, var } => {
+                let x = rng.gaussian(*mean, var.sqrt());
+                *self = GaussianNode::Realized(x);
+                x
+            }
+            GaussianNode::Realized(x) => *x,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match self {
+            GaussianNode::Marginalized { mean, .. } => *mean,
+            GaussianNode::Realized(x) => *x,
+        }
+    }
+}
+
+/// Gamma–Poisson: λ ~ Gamma(shape k, rate β); y | λ ~ Poisson(c·λ).
+#[derive(Clone, Debug, PartialEq)]
+pub enum GammaPoissonNode {
+    Marginalized { shape: f64, rate: f64 },
+    Realized(f64),
+}
+
+impl GammaPoissonNode {
+    pub fn new(shape: f64, rate: f64) -> Self {
+        GammaPoissonNode::Marginalized { shape, rate }
+    }
+
+    /// Observe y ~ Poisson(c·λ): returns the negative-binomial marginal
+    /// log-pmf; posterior Gamma(k + y, β + c).
+    pub fn observe(&mut self, y: u64, c: f64) -> f64 {
+        match self {
+            GammaPoissonNode::Marginalized { shape, rate } => {
+                let p = *rate / (*rate + c);
+                let ll = negbin_lpmf(y, *shape, p);
+                *shape += y as f64;
+                *rate += c;
+                ll
+            }
+            GammaPoissonNode::Realized(lam) => crate::rng::poisson_lpmf(y, c * *lam),
+        }
+    }
+
+    pub fn realize(&mut self, rng: &mut Pcg64) -> f64 {
+        match self {
+            GammaPoissonNode::Marginalized { shape, rate } => {
+                let x = rng.gamma(*shape, 1.0 / *rate);
+                *self = GammaPoissonNode::Realized(x);
+                x
+            }
+            GammaPoissonNode::Realized(x) => *x,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match self {
+            GammaPoissonNode::Marginalized { shape, rate } => shape / rate,
+            GammaPoissonNode::Realized(x) => *x,
+        }
+    }
+
+    /// Log-density of a concrete rate value under the current marginal
+    /// (used by particle Gibbs acceptance diagnostics).
+    pub fn lpdf(&self, x: f64) -> f64 {
+        match self {
+            GammaPoissonNode::Marginalized { shape, rate } => gamma_lpdf(x, *shape, 1.0 / *rate),
+            GammaPoissonNode::Realized(v) => {
+                if (x - v).abs() < 1e-12 {
+                    0.0
+                } else {
+                    f64::NEG_INFINITY
+                }
+            }
+        }
+    }
+}
+
+/// Beta–Binomial: p ~ Beta(a, b); y | p ~ Binomial(n, p).
+#[derive(Clone, Debug, PartialEq)]
+pub enum BetaBinomialNode {
+    Marginalized { a: f64, b: f64 },
+    Realized(f64),
+}
+
+impl BetaBinomialNode {
+    pub fn new(a: f64, b: f64) -> Self {
+        BetaBinomialNode::Marginalized { a, b }
+    }
+
+    /// Observe y successes of n trials: beta-binomial marginal; posterior
+    /// Beta(a + y, b + n − y).
+    pub fn observe(&mut self, y: u64, n: u64) -> f64 {
+        match self {
+            BetaBinomialNode::Marginalized { a, b } => {
+                let ll = betabin_lpmf(y, n, *a, *b);
+                *a += y as f64;
+                *b += (n - y) as f64;
+                ll
+            }
+            BetaBinomialNode::Realized(p) => crate::rng::binomial_lpmf(y, n, *p),
+        }
+    }
+
+    pub fn realize(&mut self, rng: &mut Pcg64) -> f64 {
+        match self {
+            BetaBinomialNode::Marginalized { a, b } => {
+                let x = rng.beta(*a, *b);
+                *self = BetaBinomialNode::Realized(x);
+                x
+            }
+            BetaBinomialNode::Realized(x) => *x,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match self {
+            BetaBinomialNode::Marginalized { a, b } => a / (a + b),
+            BetaBinomialNode::Realized(x) => *x,
+        }
+    }
+}
+
+/// Beta–Bernoulli (convenience wrapper used by PCFG rule probabilities).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BetaBernoulli(pub BetaBinomialNode);
+
+impl BetaBernoulli {
+    pub fn new(a: f64, b: f64) -> Self {
+        BetaBernoulli(BetaBinomialNode::new(a, b))
+    }
+
+    pub fn observe(&mut self, y: bool) -> f64 {
+        self.0.observe(y as u64, 1)
+    }
+
+    pub fn sample_and_observe(&mut self, rng: &mut Pcg64) -> (bool, f64) {
+        let p = self.0.mean();
+        let y = rng.next_f64() < p;
+        let ll = self.observe(y);
+        (y, ll)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn gaussian_conjugate_update_matches_closed_form() {
+        // Prior N(0, 1), observe y = 2 with obs var 1: posterior N(1, 0.5).
+        let mut node = GaussianNode::new(0.0, 1.0);
+        let ll = node.observe(2.0, 1.0);
+        assert!((ll - normal_lpdf(2.0, 0.0, 2f64.sqrt())).abs() < 1e-12);
+        match node {
+            GaussianNode::Marginalized { mean, var } => {
+                assert!((mean - 1.0).abs() < 1e-12);
+                assert!((var - 0.5).abs() < 1e-12);
+            }
+            _ => panic!("still marginalized"),
+        }
+    }
+
+    #[test]
+    fn gaussian_sequential_equals_batch() {
+        // Two sequential observations must equal the joint likelihood.
+        let mut node = GaussianNode::new(0.5, 2.0);
+        let l1 = node.observe(1.0, 0.7);
+        let l2 = node.observe(-0.3, 0.7);
+        // Joint: y1 ~ N(m, v+s), y2 | y1 ~ N(m', v'+s) — chain rule already
+        // used; verify against a fine-grid numeric marginal instead.
+        let mut num = 0.0;
+        let d = 0.001;
+        let mut mu = -20.0;
+        while mu < 20.0 {
+            let prior = normal_lpdf(mu, 0.5, 2f64.sqrt()).exp();
+            let lik = normal_lpdf(1.0, mu, 0.7f64.sqrt()).exp()
+                * normal_lpdf(-0.3, mu, 0.7f64.sqrt()).exp();
+            num += prior * lik * d;
+            mu += d;
+        }
+        assert!((l1 + l2 - num.ln()).abs() < 1e-4, "{} vs {}", l1 + l2, num.ln());
+    }
+
+    #[test]
+    fn gaussian_predict_then_realize() {
+        let mut node = GaussianNode::new(1.0, 0.5);
+        node.predict(2.0, 0.1, 0.3);
+        assert!((node.mean() - 2.1).abs() < 1e-12);
+        let mut rng = Pcg64::new(5);
+        let x = node.realize(&mut rng);
+        assert_eq!(node.realize(&mut rng), x, "realized value is pinned");
+    }
+
+    #[test]
+    fn gamma_poisson_posterior_and_marginal() {
+        let mut node = GammaPoissonNode::new(2.0, 1.0);
+        let ll = node.observe(3, 1.0);
+        assert!((ll - negbin_lpmf(3, 2.0, 0.5)).abs() < 1e-12);
+        match node {
+            GammaPoissonNode::Marginalized { shape, rate } => {
+                assert_eq!(shape, 5.0);
+                assert_eq!(rate, 2.0);
+            }
+            _ => panic!(),
+        }
+        // Sequential observes sum to the joint marginal (numeric check).
+        let mut node = GammaPoissonNode::new(1.5, 2.0);
+        let tot = node.observe(1, 1.0) + node.observe(4, 1.0);
+        let mut num = 0.0;
+        let d = 0.001;
+        let mut lam = d;
+        while lam < 50.0 {
+            let prior = gamma_lpdf(lam, 1.5, 0.5).exp();
+            let lik = crate::rng::poisson_lpmf(1, lam).exp() * crate::rng::poisson_lpmf(4, lam).exp();
+            num += prior * lik * d;
+            lam += d;
+        }
+        assert!((tot - num.ln()).abs() < 1e-3, "{} vs {}", tot, num.ln());
+    }
+
+    #[test]
+    fn beta_binomial_posterior() {
+        let mut node = BetaBinomialNode::new(1.0, 1.0);
+        let ll = node.observe(7, 10);
+        assert!((ll - betabin_lpmf(7, 10, 1.0, 1.0)).abs() < 1e-12);
+        assert!((node.mean() - 8.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn beta_bernoulli_sequence() {
+        let mut rng = Pcg64::new(9);
+        let mut node = BetaBernoulli::new(2.0, 2.0);
+        let mut total = 0.0;
+        for _ in 0..50 {
+            let (_, ll) = node.sample_and_observe(&mut rng);
+            total += ll;
+            assert!(ll < 0.0);
+        }
+        assert!(total.is_finite());
+    }
+
+    #[test]
+    fn realized_nodes_score_directly() {
+        let mut node = GaussianNode::Realized(1.5);
+        let ll = node.observe(1.0, 0.25);
+        assert!((ll - normal_lpdf(1.0, 1.5, 0.5)).abs() < 1e-12);
+        let mut gp = GammaPoissonNode::Realized(2.0);
+        let ll = gp.observe(2, 1.5);
+        assert!((ll - crate::rng::poisson_lpmf(2, 3.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,161 @@
+//! Multivariate Kalman filtering: the marginalized linear substate of the
+//! Rao–Blackwellized particle filter (Lindsten & Schön 2010).
+//!
+//! Per particle: z ~ N(m, P) with linear-Gaussian dynamics
+//!   z' = A z + b + N(0, Q),   y = C z + N(0, R).
+//! `predict` and `update` carry (m, P) analytically; `update` returns the
+//! marginal log-likelihood used as the particle weight.
+//!
+//! This is the CPU oracle for (and fallback of) the L1 Pallas kernel
+//! `python/compile/kernels/kalman.py`, which performs the same algebra
+//! batched over the particle dimension; the pytest suite and the Rust
+//! runtime round-trip tests assert agreement.
+
+use crate::linalg::{mvn_lpdf, Mat};
+
+/// Gaussian belief over a linear substate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KalmanState {
+    pub mean: Vec<f64>,
+    pub cov: Mat,
+}
+
+impl KalmanState {
+    pub fn new(mean: Vec<f64>, cov: Mat) -> Self {
+        assert_eq!(mean.len(), cov.rows);
+        assert_eq!(cov.rows, cov.cols);
+        KalmanState { mean, cov }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Time update: m ← A m + b, P ← A P Aᵀ + Q.
+    pub fn predict(&mut self, a: &Mat, b: &[f64], q: &Mat) {
+        let m = a.matmul(&Mat::col_vec(&self.mean));
+        for i in 0..self.mean.len() {
+            self.mean[i] = m.at(i, 0) + b[i];
+        }
+        self.cov = a.matmul(&self.cov).matmul(&a.t()).add(q);
+    }
+
+    /// Measurement update with y = C z + N(0, R); returns the marginal
+    /// log-likelihood log N(y; C m, C P Cᵀ + R).
+    pub fn update(&mut self, c: &Mat, r: &Mat, y: &[f64]) -> f64 {
+        let d = y.len();
+        // Innovation.
+        let cm = c.matmul(&Mat::col_vec(&self.mean));
+        let innov: Vec<f64> = (0..d).map(|i| y[i] - cm.at(i, 0)).collect();
+        // S = C P Cᵀ + R.
+        let pct = self.cov.matmul(&c.t());
+        let s = c.matmul(&pct).add(r);
+        let predicted: Vec<f64> = (0..d).map(|i| cm.at(i, 0)).collect();
+        let ll = mvn_lpdf(y, &predicted, &s);
+        // K = P Cᵀ S⁻¹ (via SPD solve per column of (P Cᵀ)ᵀ).
+        let s_inv = s.inv_spd().expect("innovation covariance not SPD");
+        let k = pct.matmul(&s_inv);
+        // m ← m + K innov; P ← P − K S Kᵀ.
+        let kv = k.matmul(&Mat::col_vec(&innov));
+        for i in 0..self.mean.len() {
+            self.mean[i] += kv.at(i, 0);
+        }
+        let ksk = k.matmul(&s).matmul(&k.t());
+        self.cov = self.cov.sub(&ksk);
+        ll
+    }
+
+    /// Sample a concrete substate (used when a model collapses the
+    /// Rao–Blackwellization, e.g. at trajectory extraction).
+    pub fn sample(&self, rng: &mut crate::rng::Pcg64) -> Vec<f64> {
+        let l = self.cov.cholesky().expect("covariance not SPD");
+        let n = self.dim();
+        let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut out = self.mean.clone();
+        for i in 0..n {
+            for j in 0..=i {
+                out[i] += l.at(i, j) * z[j];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::normal_lpdf;
+
+    #[test]
+    fn scalar_kalman_matches_gaussian_node() {
+        // 1-D Kalman must agree with the scalar delayed-sampling node.
+        let mut ks = KalmanState::new(vec![0.0], Mat::from_rows(&[&[1.0]]));
+        let mut gn = crate::ppl::GaussianNode::new(0.0, 1.0);
+        let c = Mat::eye(1);
+        let r = Mat::from_rows(&[&[1.0]]);
+        let l1 = ks.update(&c, &r, &[2.0]);
+        let l2 = gn.observe(2.0, 1.0);
+        assert!((l1 - l2).abs() < 1e-12);
+        assert!((ks.mean[0] - gn.mean()).abs() < 1e-12);
+
+        // And predict agrees.
+        ks.predict(&Mat::from_rows(&[&[0.9]]), &[0.1], &Mat::from_rows(&[&[0.2]]));
+        gn.predict(0.9, 0.1, 0.2);
+        assert!((ks.mean[0] - gn.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn update_reduces_uncertainty() {
+        let mut ks = KalmanState::new(vec![0.0, 0.0], Mat::eye(2).scale(4.0));
+        let c = Mat::from_rows(&[&[1.0, 0.0]]);
+        let r = Mat::from_rows(&[&[0.5]]);
+        let tr_before = ks.cov.at(0, 0) + ks.cov.at(1, 1);
+        let ll = ks.update(&c, &r, &[1.0]);
+        let tr_after = ks.cov.at(0, 0) + ks.cov.at(1, 1);
+        assert!(tr_after < tr_before);
+        assert!(ll < 0.0);
+        // Observed dimension moved toward the observation.
+        assert!(ks.mean[0] > 0.5 && ks.mean[0] < 1.0);
+        // Unobserved dimension untouched (no correlation).
+        assert_eq!(ks.mean[1], 0.0);
+    }
+
+    #[test]
+    fn loglik_matches_direct_formula_1d() {
+        let mut ks = KalmanState::new(vec![0.3], Mat::from_rows(&[&[2.0]]));
+        let ll = ks.update(&Mat::eye(1), &Mat::from_rows(&[&[0.5]]), &[1.1]);
+        assert!((ll - normal_lpdf(1.1, 0.3, 2.5f64.sqrt())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn filtering_a_known_sequence() {
+        // Track a 2-D constant-velocity target; the filter must lock on.
+        let dt = 1.0;
+        let a = Mat::from_rows(&[&[1.0, dt], &[0.0, 1.0]]);
+        let q = Mat::from_rows(&[&[0.01, 0.0], &[0.0, 0.01]]);
+        let c = Mat::from_rows(&[&[1.0, 0.0]]);
+        let r = Mat::from_rows(&[&[0.1]]);
+        let mut ks = KalmanState::new(vec![0.0, 0.0], Mat::eye(2).scale(10.0));
+        // True: position = 2t, velocity 2.
+        for t in 1..=30 {
+            ks.predict(&a, &[0.0, 0.0], &q);
+            ks.update(&c, &r, &[2.0 * t as f64]);
+        }
+        assert!((ks.mean[1] - 2.0).abs() < 0.1, "velocity {}", ks.mean[1]);
+    }
+
+    #[test]
+    fn sample_has_right_moments() {
+        let ks = KalmanState::new(vec![1.0, -1.0], Mat::from_rows(&[&[0.5, 0.2], &[0.2, 0.3]]));
+        let mut rng = crate::rng::Pcg64::new(3);
+        let n = 20000;
+        let mut m = [0.0, 0.0];
+        for _ in 0..n {
+            let x = ks.sample(&mut rng);
+            m[0] += x[0];
+            m[1] += x[1];
+        }
+        assert!((m[0] / n as f64 - 1.0).abs() < 0.02);
+        assert!((m[1] / n as f64 + 1.0).abs() < 0.02);
+    }
+}

@@ -1,0 +1,15 @@
+//! PPL runtime: delayed sampling (automatic Rao–Blackwellization).
+//!
+//! Murray et al. (2018): a random variable is kept *marginalized* (its
+//! posterior parameters carried analytically) for as long as conjugacy
+//! permits; observations update the parameters and contribute the
+//! *marginal* likelihood; sampling (realization) collapses it to a value.
+//! These nodes live inside particle state payloads on the lazy heap, so
+//! their in-place parameter updates are exactly the mutation pattern the
+//! copy-on-write platform exists to support.
+
+pub mod delayed;
+pub mod kalman;
+
+pub use delayed::{BetaBernoulli, BetaBinomialNode, GammaPoissonNode, GaussianNode};
+pub use kalman::KalmanState;

@@ -1,0 +1,206 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! Provides seeded case sweeps with failure reporting and a lightweight
+//! shrinking strategy for integer-vector scripts: on failure, retry with
+//! progressively truncated prefixes of the generating choices to report a
+//! smaller reproduction seed/length.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(200, |g| {
+//!     let xs = g.vec(0..100, |g| g.i64(0..10));
+//!     my_invariant(&xs)
+//! });
+//! ```
+
+use crate::rng::Pcg64;
+
+/// Generation context handed to property closures.
+pub struct Gen {
+    rng: Pcg64,
+    /// Size hint: later cases generate larger structures.
+    pub size: usize,
+    /// Optional cap on generated script length (used for shrinking).
+    pub budget: Option<usize>,
+    consumed: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen {
+            rng: Pcg64::new(seed),
+            size,
+            budget: None,
+            consumed: 0,
+        }
+    }
+
+    /// Has the generation budget been exhausted (shrinking)?
+    pub fn spent(&mut self) -> bool {
+        self.consumed += 1;
+        match self.budget {
+            Some(b) => self.consumed > b,
+            None => false,
+        }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Pick an element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// Pick an index weighted by `w`.
+    pub fn weighted(&mut self, w: &[f64]) -> usize {
+        self.rng.categorical(w)
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a single property case.
+pub enum CaseResult {
+    Pass,
+    /// Property violated, with a description.
+    Fail(String),
+    /// Case discarded (preconditions unmet).
+    Discard,
+}
+
+impl From<bool> for CaseResult {
+    fn from(ok: bool) -> Self {
+        if ok {
+            CaseResult::Pass
+        } else {
+            CaseResult::Fail("property returned false".into())
+        }
+    }
+}
+
+impl From<Result<(), String>> for CaseResult {
+    fn from(r: Result<(), String>) -> Self {
+        match r {
+            Ok(()) => CaseResult::Pass,
+            Err(e) => CaseResult::Fail(e),
+        }
+    }
+}
+
+/// Run `cases` seeded cases of a property. Panics with the seed, case
+/// index, and (if the property is budget-aware) the smallest failing
+/// budget, so failures are reproducible.
+pub fn check<R: Into<CaseResult>>(cases: usize, mut prop: impl FnMut(&mut Gen) -> R) {
+    check_seeded(0xC0FFEE, cases, &mut prop)
+}
+
+pub fn check_seeded<R: Into<CaseResult>>(
+    base_seed: u64,
+    cases: usize,
+    prop: &mut impl FnMut(&mut Gen) -> R,
+) {
+    let mut discards = 0usize;
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 4 + case * 64 / cases.max(1); // grow sizes over the run
+        let mut g = Gen::new(seed, size);
+        match prop(&mut g).into() {
+            CaseResult::Pass => {}
+            CaseResult::Discard => {
+                discards += 1;
+                assert!(
+                    discards < cases * 10,
+                    "too many discarded cases ({discards})"
+                );
+            }
+            CaseResult::Fail(msg) => {
+                // Shrink: find the smallest budget that still fails.
+                let mut best: Option<(usize, String)> = None;
+                let mut budget = 1usize;
+                while budget < 4096 {
+                    let mut g = Gen::new(seed, size);
+                    g.budget = Some(budget);
+                    if let CaseResult::Fail(m) = prop(&mut g).into() {
+                        best = Some((budget, m));
+                        break;
+                    }
+                    budget *= 2;
+                }
+                match best {
+                    Some((b, m)) => panic!(
+                        "property failed (seed={seed:#x}, case={case}, size={size}); \
+                         shrunk to budget={b}: {m}"
+                    ),
+                    None => panic!(
+                        "property failed (seed={seed:#x}, case={case}, size={size}): {msg}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(50, |g| {
+            n += 1;
+            let x = g.i64(0, 100);
+            x >= 0 && x <= 100
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(50, |g| g.i64(0, 100) < 95);
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(1, 10);
+        for _ in 0..1000 {
+            assert!((3..=7).contains(&g.u64(3, 7)));
+            assert!((-5..=5).contains(&g.i64(-5, 5)));
+            let f = g.f64(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f));
+        }
+        let xs = [10, 20, 30];
+        assert!(xs.contains(g.pick(&xs)));
+    }
+
+    #[test]
+    fn budget_consumption() {
+        let mut g = Gen::new(2, 10);
+        g.budget = Some(3);
+        assert!(!g.spent());
+        assert!(!g.spent());
+        assert!(!g.spent());
+        assert!(g.spent());
+    }
+}

@@ -1,0 +1,485 @@
+//! Distribution samplers and log-densities.
+//!
+//! Everything the five evaluation models require, implemented against
+//! [`Pcg64`](super::Pcg64): gamma (Marsaglia–Tsang 2000), beta, binomial
+//! (inversion / BTPE-free split), Poisson (inversion / PTRS), categorical
+//! (linear and Walker alias), multinomial, Dirichlet, and the matching
+//! log-pdf/pmf functions used for particle weighting.
+
+use super::Pcg64;
+
+pub const LN_2PI: f64 = 1.8378770664093453;
+
+/// ln Γ(x) (Lanczos approximation, |err| < 1e-13 for x > 0).
+pub fn ln_gamma(x: f64) -> f64 {
+    // Lanczos g=7, n=9 coefficients.
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        pi.ln() - (pi * x).sin().ln() - ln_gamma(1.0 - x)
+    } else {
+        let x = x - 1.0;
+        let mut a = COEF[0];
+        let t = x + 7.5;
+        for (i, c) in COEF.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        0.5 * LN_2PI + (x + 0.5) * t.ln() - t + a.ln()
+    }
+}
+
+/// ln n! via ln Γ.
+#[inline]
+pub fn ln_factorial(n: u64) -> f64 {
+    ln_gamma(n as f64 + 1.0)
+}
+
+/// ln C(n, k).
+#[inline]
+pub fn ln_choose(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+// ----------------------------------------------------------------------
+// Log densities (weighting)
+// ----------------------------------------------------------------------
+
+/// Normal log-pdf.
+#[inline]
+pub fn normal_lpdf(x: f64, mean: f64, sd: f64) -> f64 {
+    let z = (x - mean) / sd;
+    -0.5 * z * z - sd.ln() - 0.5 * LN_2PI
+}
+
+/// Gamma(shape k, scale θ) log-pdf.
+pub fn gamma_lpdf(x: f64, shape: f64, scale: f64) -> f64 {
+    if x <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    (shape - 1.0) * x.ln() - x / scale - ln_gamma(shape) - shape * scale.ln()
+}
+
+/// Beta(a, b) log-pdf.
+pub fn beta_lpdf(x: f64, a: f64, b: f64) -> f64 {
+    if !(0.0..=1.0).contains(&x) {
+        return f64::NEG_INFINITY;
+    }
+    (a - 1.0) * x.ln() + (b - 1.0) * (1.0 - x).ln() + ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b)
+}
+
+/// Poisson(λ) log-pmf.
+pub fn poisson_lpmf(k: u64, lambda: f64) -> f64 {
+    if lambda <= 0.0 {
+        return if k == 0 { 0.0 } else { f64::NEG_INFINITY };
+    }
+    k as f64 * lambda.ln() - lambda - ln_factorial(k)
+}
+
+/// Binomial(n, p) log-pmf.
+pub fn binomial_lpmf(k: u64, n: u64, p: f64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    if p <= 0.0 {
+        return if k == 0 { 0.0 } else { f64::NEG_INFINITY };
+    }
+    if p >= 1.0 {
+        return if k == n { 0.0 } else { f64::NEG_INFINITY };
+    }
+    ln_choose(n, k) + k as f64 * p.ln() + (n - k) as f64 * (1.0 - p).ln()
+}
+
+/// Negative-binomial (r, p) log-pmf: the gamma–Poisson marginal used by
+/// delayed sampling.
+pub fn negbin_lpmf(k: u64, r: f64, p: f64) -> f64 {
+    ln_gamma(k as f64 + r) - ln_factorial(k) - ln_gamma(r) + r * p.ln()
+        + k as f64 * (1.0 - p).ln()
+}
+
+/// Beta-binomial(n, a, b) log-pmf: the beta–binomial marginal used by
+/// delayed sampling.
+pub fn betabin_lpmf(k: u64, n: u64, a: f64, b: f64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_choose(n, k) + ln_gamma(k as f64 + a) + ln_gamma((n - k) as f64 + b)
+        - ln_gamma(n as f64 + a + b)
+        + ln_gamma(a + b)
+        - ln_gamma(a)
+        - ln_gamma(b)
+}
+
+// ----------------------------------------------------------------------
+// Samplers
+// ----------------------------------------------------------------------
+
+impl Pcg64 {
+    /// Gamma(shape k, scale θ), Marsaglia–Tsang squeeze for k ≥ 1, with the
+    /// boost trick for k < 1.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            let u = self.next_f64_open();
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.next_f64_open();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v * scale;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v * scale;
+            }
+        }
+    }
+
+    /// Beta(a, b) via two gammas.
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a, 1.0);
+        let y = self.gamma(b, 1.0);
+        x / (x + y)
+    }
+
+    /// Exponential(rate λ).
+    #[inline]
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.next_f64_open().ln() / rate
+    }
+
+    /// Log-normal.
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Poisson(λ): inversion for small λ, PTRS-style normal cutover for
+    /// large λ (transformed rejection, Hörmann 1993 simplified).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            // Knuth inversion in log space for robustness.
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64_open();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        }
+        // Rejection from a discretized normal with a correction loop.
+        let sq = lambda.sqrt();
+        loop {
+            let x = self.gaussian(lambda, sq);
+            if x < 0.0 {
+                continue;
+            }
+            let k = x.floor() as u64;
+            // Accept with probability pmf(k)/envelope; use ratio test.
+            let lp = poisson_lpmf(k, lambda);
+            let lq = normal_lpdf(k as f64 + 0.5, lambda, sq);
+            if self.next_f64_open().ln() <= lp - lq - 0.1 {
+                return k;
+            }
+        }
+    }
+
+    /// Binomial(n, p): inversion for small n·p, otherwise split recursively
+    /// via the beta-median trick (BTRD-free, exact).
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        if n == 0 || p <= 0.0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        if n <= 64 {
+            // Direct Bernoulli sum.
+            let mut k = 0;
+            for _ in 0..n {
+                if self.next_f64() < p {
+                    k += 1;
+                }
+            }
+            return k;
+        }
+        // Recursive beta split: X ~ Bin(n,p) via the order-statistic
+        // decomposition with the median of n uniforms ~ Beta(m, n+1-m).
+        let m = n / 2 + 1;
+        let x = self.beta(m as f64, (n + 1 - m) as f64);
+        if x <= p {
+            m + self.binomial(n - m, (p - x) / (1.0 - x))
+        } else {
+            self.binomial(m - 1, p / x)
+        }
+    }
+
+    /// Categorical over unnormalized non-negative weights (linear scan).
+    pub fn categorical(&mut self, w: &[f64]) -> usize {
+        let total: f64 = w.iter().sum();
+        debug_assert!(total > 0.0, "categorical with zero total weight");
+        let mut u = self.next_f64() * total;
+        for (i, wi) in w.iter().enumerate() {
+            u -= wi;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        w.len() - 1
+    }
+
+    /// Categorical over *log* weights (log-sum-exp normalized).
+    pub fn categorical_log(&mut self, lw: &[f64]) -> usize {
+        let m = lw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let w: Vec<f64> = lw.iter().map(|x| (x - m).exp()).collect();
+        self.categorical(&w)
+    }
+
+    /// Dirichlet(α).
+    pub fn dirichlet(&mut self, alpha: &[f64]) -> Vec<f64> {
+        let xs: Vec<f64> = alpha.iter().map(|&a| self.gamma(a, 1.0)).collect();
+        let s: f64 = xs.iter().sum();
+        xs.into_iter().map(|x| x / s).collect()
+    }
+
+    /// Multinomial counts for `n` trials over unnormalized weights.
+    pub fn multinomial(&mut self, n: u64, w: &[f64]) -> Vec<u64> {
+        let mut counts = vec![0u64; w.len()];
+        let mut rest: f64 = w.iter().sum();
+        let mut left = n;
+        for i in 0..w.len() - 1 {
+            if left == 0 || rest <= 0.0 {
+                break;
+            }
+            let p = (w[i] / rest).clamp(0.0, 1.0);
+            let k = self.binomial(left, p);
+            counts[i] = k;
+            left -= k;
+            rest -= w[i];
+        }
+        *counts.last_mut().unwrap() += left;
+        counts
+    }
+}
+
+/// Walker alias table for O(1) categorical sampling (used by the PCFG
+/// proposal where the same weight vector is sampled many times).
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    pub fn new(w: &[f64]) -> Self {
+        let n = w.len();
+        let total: f64 = w.iter().sum();
+        assert!(total > 0.0 && n > 0);
+        let mut prob: Vec<f64> = w.iter().map(|x| x * n as f64 / total).collect();
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = (0..n).filter(|&i| prob[i] < 1.0).collect();
+        let mut large: Vec<usize> = (0..n).filter(|&i| prob[i] >= 1.0).collect();
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s] = l;
+            prob[l] = prob[l] + prob[s] - 1.0;
+            if prob[l] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        for i in large.into_iter().chain(small) {
+            prob[i] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let n = self.prob.len();
+        let i = rng.below(n as u64) as usize;
+        if rng.next_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn lpdfs_normalize_roughly() {
+        // Riemann check that densities integrate to ~1.
+        let dx = 0.001;
+        let total: f64 = (1..20_000)
+            .map(|i| normal_lpdf(-10.0 + i as f64 * dx, 0.0, 1.0).exp() * dx)
+            .sum();
+        assert!((total - 1.0).abs() < 1e-3, "normal integrates to {total}");
+        let total: f64 = (1..20_000)
+            .map(|i| gamma_lpdf(i as f64 * dx, 2.5, 0.7).exp() * dx)
+            .sum();
+        assert!((total - 1.0).abs() < 1e-2, "gamma integrates to {total}");
+        let total: f64 = (0..200).map(|k| poisson_lpmf(k, 12.0).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9, "poisson sums to {total}");
+        let total: f64 = (0..=50).map(|k| binomial_lpmf(k, 50, 0.3).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9, "binomial sums to {total}");
+        let total: f64 = (0..400).map(|k| negbin_lpmf(k, 5.0, 0.4).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6, "negbin sums to {total}");
+        let total: f64 = (0..=30).map(|k| betabin_lpmf(k, 30, 2.0, 5.0).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9, "betabin sums to {total}");
+    }
+
+    #[test]
+    fn gamma_sampler_moments() {
+        let mut r = Pcg64::new(10);
+        let (shape, scale) = (3.0, 2.0);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let x = r.gamma(shape, scale);
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!((mean - shape * scale).abs() < 0.05, "mean {mean}");
+        assert!((var - shape * scale * scale).abs() < 0.3, "var {var}");
+    }
+
+    #[test]
+    fn gamma_small_shape() {
+        let mut r = Pcg64::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.gamma(0.3, 1.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.3).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn beta_sampler_moments() {
+        let mut r = Pcg64::new(12);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.beta(2.0, 6.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_sampler_small_and_large() {
+        let mut r = Pcg64::new(13);
+        let n = 50_000;
+        for lambda in [0.5, 4.0, 80.0] {
+            let mean: f64 = (0..n).map(|_| r.poisson(lambda) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - lambda).abs() < lambda.max(1.0) * 0.05,
+                "lambda {lambda}: mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn binomial_sampler_small_and_large() {
+        let mut r = Pcg64::new(14);
+        let n = 30_000;
+        for (trials, p) in [(10u64, 0.3), (1000u64, 0.01), (5000u64, 0.6)] {
+            let mean: f64 = (0..n).map(|_| r.binomial(trials, p) as f64).sum::<f64>() / n as f64;
+            let expect = trials as f64 * p;
+            assert!(
+                (mean - expect).abs() < expect.max(1.0) * 0.05,
+                "Bin({trials},{p}): mean {mean} expect {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Pcg64::new(15);
+        let w = [1.0, 2.0, 7.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..50_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert!(counts[2] > counts[1] && counts[1] > counts[0]);
+        let frac = counts[2] as f64 / 50_000.0;
+        assert!((frac - 0.7).abs() < 0.02, "frac {frac}");
+    }
+
+    #[test]
+    fn categorical_log_matches_linear() {
+        let mut r1 = Pcg64::new(16);
+        let mut r2 = Pcg64::new(16);
+        let w = [0.1, 0.4, 0.5];
+        let lw: Vec<f64> = w.iter().map(|x: &f64| x.ln() + 100.0).collect(); // shifted
+        for _ in 0..1000 {
+            assert_eq!(r1.categorical(&w), r2.categorical_log(&lw));
+        }
+    }
+
+    #[test]
+    fn alias_table_matches_linear_distribution() {
+        let mut r = Pcg64::new(17);
+        let w = [0.5, 0.1, 0.2, 3.0, 1.2];
+        let table = AliasTable::new(&w);
+        let total: f64 = w.iter().sum();
+        let n = 200_000;
+        let mut counts = vec![0usize; w.len()];
+        for _ in 0..n {
+            counts[table.sample(&mut r)] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            let frac = *c as f64 / n as f64;
+            let expect = w[i] / total;
+            assert!((frac - expect).abs() < 0.01, "i={i} frac={frac} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Pcg64::new(18);
+        let x = r.dirichlet(&[1.0, 2.0, 3.0]);
+        assert!((x.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(x.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn multinomial_conserves_trials() {
+        let mut r = Pcg64::new(19);
+        let counts = r.multinomial(1000, &[0.2, 0.3, 0.5]);
+        assert_eq!(counts.iter().sum::<u64>(), 1000);
+        assert!(counts[2] > counts[0]);
+    }
+}

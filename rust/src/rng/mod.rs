@@ -1,0 +1,204 @@
+//! Pseudo-random number generation and sampling.
+//!
+//! Substrate module: no rand/distributions crates are available offline, so
+//! this implements PCG64 (O'Neill 2014) with SplitMix64 seeding, plus the
+//! samplers the five evaluation models need: uniform, normal, log-normal,
+//! gamma (Marsaglia–Tsang), beta, binomial, Poisson, categorical,
+//! multinomial, and Dirichlet.
+//!
+//! Streams: [`Pcg64::stream`] derives statistically independent generators
+//! from one seed — one per particle/thread, matching the paper's
+//! "random number seeds are matched across configurations" methodology
+//! (identical seeds → identical resampling decisions in all copy modes).
+
+mod dist;
+
+pub use dist::*;
+
+/// PCG XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// SplitMix64: seed expander (Steele et al. 2014).
+#[inline]
+pub fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Pcg64 {
+    /// Seed a generator. Equal seeds give equal streams.
+    pub fn new(seed: u64) -> Self {
+        let mut s = seed;
+        let a = splitmix64(&mut s) as u128;
+        let b = splitmix64(&mut s) as u128;
+        let c = splitmix64(&mut s) as u128;
+        let d = splitmix64(&mut s) as u128;
+        let mut rng = Pcg64 {
+            state: (a << 64) | b,
+            inc: (((c << 64) | d) << 1) | 1, // stream must be odd
+        };
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive the `i`-th independent stream from this generator's seed
+    /// lineage (distinct increment → distinct sequence).
+    pub fn stream(seed: u64, i: u64) -> Self {
+        let mut s = seed ^ (0xA076_1D64_78BD_642F_u64.wrapping_mul(i.wrapping_add(1)));
+        let mixed = splitmix64(&mut s);
+        Pcg64::new(mixed)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random bits into the mantissa.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] (safe for log()).
+    #[inline]
+    pub fn next_f64_open(&mut self) -> f64 {
+        1.0 - self.next_f64()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via the polar (Marsaglia) method.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal with mean and standard deviation.
+    #[inline]
+    pub fn gaussian(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn streams_are_distinct() {
+        let mut s0 = Pcg64::stream(7, 0);
+        let mut s1 = Pcg64::stream(7, 1);
+        let x: Vec<u64> = (0..8).map(|_| s0.next_u64()).collect();
+        let y: Vec<u64> = (0..8).map(|_| s1.next_u64()).collect();
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(1);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.next_f64_open();
+            assert!(y > 0.0 && y <= 1.0);
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut r = Pcg64::new(2);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for c in counts {
+            assert!((8_000..12_000).contains(&c), "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(3);
+        let n = 100_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Pcg64::new(4);
+        let mut xs: Vec<u32> = (0..10).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+    }
+}

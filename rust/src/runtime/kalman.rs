@@ -1,0 +1,217 @@
+//! Batched Kalman measurement/time update: the RBPF numeric hot spot.
+//!
+//! The L1 Pallas kernel (`python/compile/kernels/kalman.py`) performs, for
+//! a batch of particles, the 3-dimensional linear-substate update
+//!
+//!   m ← A m;  P ← A P Aᵀ + Q;                    (predict)
+//!   S = C P Cᵀ + R;  K = P Cᵀ / S;               (gain, scalar obs)
+//!   m ← m + K (y − C m);  P ← P − K S Kᵀ;        (update)
+//!   ll = log N(y; C m⁻, S)                        (weight)
+//!
+//! with the model matrices baked in at lowering time. [`BatchKalman`] runs
+//! the compiled artifact in padded chunks of [`BATCH`]; [`batch_kalman_cpu`]
+//! is the f64 oracle built on [`crate::ppl::KalmanState`], used as the
+//! fallback path and in differential tests.
+
+use super::{Artifact, XlaRuntime, BATCH};
+use crate::linalg::Mat;
+use crate::ppl::KalmanState;
+use anyhow::Result;
+
+/// Dimension of the linear substate (fixed by the artifact).
+pub const DZ: usize = 3;
+
+/// The linear-Gaussian parameters of the RBPF substate. The same constants
+/// are baked into the Python-lowered artifact; keep in sync with
+/// `python/compile/kernels/kalman.py`.
+#[derive(Clone, Debug)]
+pub struct KalmanParams {
+    pub a: Mat,
+    pub q: Mat,
+    pub c: Mat,
+    pub r: f64,
+}
+
+impl KalmanParams {
+    /// The mixed linear/nonlinear SSM of Lindsten & Schön (2010) — a
+    /// rotation-ish stable A, small process noise, scalar observation.
+    pub fn rbpf_default() -> Self {
+        KalmanParams {
+            a: Mat::from_rows(&[&[0.8, 0.1, 0.0], &[-0.1, 0.8, 0.1], &[0.0, -0.1, 0.8]]),
+            q: Mat::from_rows(&[&[0.1, 0.0, 0.0], &[0.0, 0.1, 0.0], &[0.0, 0.0, 0.1]]),
+            c: Mat::from_rows(&[&[1.0, 0.5, 0.25]]),
+            r: 0.5,
+        }
+    }
+}
+
+/// Predict + update + weight for a batch of particles on the CPU oracle
+/// path (f64, exact). `means`: N×DZ flattened; `covs`: N×DZ×DZ flattened
+/// row-major; `y`: the common observation. Returns per-particle log-liks.
+pub fn batch_kalman_cpu(
+    params: &KalmanParams,
+    means: &mut [f64],
+    covs: &mut [f64],
+    y: f64,
+) -> Vec<f64> {
+    let n = means.len() / DZ;
+    let mut lls = Vec::with_capacity(n);
+    for i in 0..n {
+        let mean = means[i * DZ..(i + 1) * DZ].to_vec();
+        let mut cov = Mat::zeros(DZ, DZ);
+        for r in 0..DZ {
+            for c in 0..DZ {
+                *cov.at_mut(r, c) = covs[i * DZ * DZ + r * DZ + c];
+            }
+        }
+        let mut ks = KalmanState::new(mean, cov);
+        ks.predict(&params.a, &[0.0; DZ], &params.q);
+        let ll = ks.update(&params.c, &Mat::from_rows(&[&[params.r]]), &[y]);
+        lls.push(ll);
+        means[i * DZ..(i + 1) * DZ].copy_from_slice(&ks.mean);
+        for r in 0..DZ {
+            for c in 0..DZ {
+                covs[i * DZ * DZ + r * DZ + c] = ks.cov.at(r, c);
+            }
+        }
+    }
+    lls
+}
+
+/// Chunked executor for the compiled batched-Kalman artifact.
+pub struct BatchKalman {
+    artifact: Artifact,
+}
+
+impl BatchKalman {
+    /// Load `kalman3.hlo.txt` from the runtime's artifact directory.
+    pub fn load(rt: &XlaRuntime) -> Result<Self> {
+        Ok(BatchKalman {
+            artifact: rt.load("kalman3")?,
+        })
+    }
+
+    /// Run predict+update+weight over all particles (padded chunks of
+    /// [`BATCH`]); mutates means/covs in place, returns log-liks.
+    pub fn run(&self, means: &mut [f64], covs: &mut [f64], y: f64) -> Result<Vec<f64>> {
+        let n = means.len() / DZ;
+        let mut lls = vec![0.0f64; n];
+        let mut m32 = vec![0.0f32; BATCH * DZ];
+        let mut p32 = vec![0.0f32; BATCH * DZ * DZ];
+        let y32 = vec![y as f32; BATCH];
+        let mut start = 0;
+        while start < n {
+            let end = (start + BATCH).min(n);
+            let len = end - start;
+            for i in 0..len {
+                for d in 0..DZ {
+                    m32[i * DZ + d] = means[(start + i) * DZ + d] as f32;
+                }
+                for d in 0..DZ * DZ {
+                    p32[i * DZ * DZ + d] = covs[(start + i) * DZ * DZ + d] as f32;
+                }
+            }
+            // Pad the tail with identity-ish state (results discarded).
+            for i in len..BATCH {
+                for d in 0..DZ {
+                    m32[i * DZ + d] = 0.0;
+                }
+                for d in 0..DZ * DZ {
+                    p32[i * DZ * DZ + d] = if d % (DZ + 1) == 0 { 1.0 } else { 0.0 };
+                }
+            }
+            let out = self.artifact.run_f32(&[
+                (&m32, &[BATCH as i64, DZ as i64]),
+                (&p32, &[BATCH as i64, DZ as i64, DZ as i64]),
+                (&y32, &[BATCH as i64]),
+            ])?;
+            let (new_m, new_p, ll) = (&out[0], &out[1], &out[2]);
+            for i in 0..len {
+                for d in 0..DZ {
+                    means[(start + i) * DZ + d] = new_m[i * DZ + d] as f64;
+                }
+                for d in 0..DZ * DZ {
+                    covs[(start + i) * DZ * DZ + d] = new_p[i * DZ * DZ + d] as f64;
+                }
+                lls[start + i] = ll[i] as f64;
+            }
+            start = end;
+        }
+        Ok(lls)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn init_batch(n: usize) -> (Vec<f64>, Vec<f64>) {
+        let mut means = vec![0.0; n * DZ];
+        let mut covs = vec![0.0; n * DZ * DZ];
+        for i in 0..n {
+            for d in 0..DZ {
+                means[i * DZ + d] = (i as f64 * 0.1) + d as f64 * 0.01;
+                covs[i * DZ * DZ + d * DZ + d] = 1.0 + 0.001 * i as f64;
+            }
+        }
+        (means, covs)
+    }
+
+    #[test]
+    fn cpu_batch_matches_single_state() {
+        let params = KalmanParams::rbpf_default();
+        let (mut means, mut covs) = init_batch(4);
+        let singles: Vec<KalmanState> = (0..4)
+            .map(|i| {
+                let mean = means[i * DZ..(i + 1) * DZ].to_vec();
+                let mut cov = Mat::zeros(DZ, DZ);
+                for r in 0..DZ {
+                    for c in 0..DZ {
+                        *cov.at_mut(r, c) = covs[i * DZ * DZ + r * DZ + c];
+                    }
+                }
+                KalmanState::new(mean, cov)
+            })
+            .collect();
+        let lls = batch_kalman_cpu(&params, &mut means, &mut covs, 0.7);
+        for (i, mut ks) in singles.into_iter().enumerate() {
+            ks.predict(&params.a, &[0.0; DZ], &params.q);
+            let ll = ks.update(&params.c, &Mat::from_rows(&[&[params.r]]), &[0.7]);
+            assert!((lls[i] - ll).abs() < 1e-12);
+            for d in 0..DZ {
+                assert!((means[i * DZ + d] - ks.mean[d]).abs() < 1e-12);
+            }
+        }
+    }
+
+    /// XLA artifact agrees with the CPU oracle (skips if not built).
+    #[test]
+    fn xla_matches_cpu_oracle() {
+        let rt = XlaRuntime::cpu(super::super::tests::artifacts_dir()).unwrap();
+        if !rt.has_artifact("kalman3") {
+            eprintln!("skipping: kalman3 artifact not built");
+            return;
+        }
+        let bk = BatchKalman::load(&rt).unwrap();
+        let params = KalmanParams::rbpf_default();
+        let n = BATCH + 37; // exercise padding
+        let (mut m_xla, mut p_xla) = init_batch(n);
+        let (mut m_cpu, mut p_cpu) = (m_xla.clone(), p_xla.clone());
+        let ll_xla = bk.run(&mut m_xla, &mut p_xla, 0.9).unwrap();
+        let ll_cpu = batch_kalman_cpu(&params, &mut m_cpu, &mut p_cpu, 0.9);
+        for i in 0..n {
+            assert!(
+                (ll_xla[i] - ll_cpu[i]).abs() < 1e-3,
+                "ll[{i}]: {} vs {}",
+                ll_xla[i],
+                ll_cpu[i]
+            );
+            for d in 0..DZ {
+                assert!(
+                    (m_xla[i * DZ + d] - m_cpu[i * DZ + d]).abs() < 1e-3,
+                    "mean[{i},{d}]"
+                );
+            }
+        }
+    }
+}

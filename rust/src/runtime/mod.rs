@@ -1,0 +1,157 @@
+//! PJRT runtime: load and execute AOT-compiled XLA artifacts.
+//!
+//! The build-time Python layer (`python/compile/aot.py`) lowers the JAX/
+//! Pallas numeric step functions to **HLO text** (the interchange format —
+//! xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos) into
+//! `artifacts/*.hlo.txt`. This module compiles them once on a PJRT CPU
+//! client and executes them from the coordinator's hot path. Python never
+//! runs at inference time.
+//!
+//! Artifacts are lowered for a fixed batch size [`BATCH`]; the runtime
+//! processes particle populations in padded chunks.
+
+mod kalman;
+
+pub use kalman::{batch_kalman_cpu, BatchKalman, KalmanParams, DZ};
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Batch size artifacts are lowered with (must match `python/compile/aot.py`).
+pub const BATCH: usize = 256;
+
+/// A compiled XLA executable loaded from HLO text.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// PJRT CPU client + artifact loader.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Create a CPU runtime reading artifacts from `dir`.
+    pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaRuntime {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Load and compile an artifact by name (`artifacts/<name>.hlo.txt`).
+    pub fn load(&self, name: &str) -> Result<Artifact> {
+        let path = self.artifact_path(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile artifact {name}"))?;
+        Ok(Artifact {
+            exe,
+            name: name.to_string(),
+        })
+    }
+}
+
+impl Artifact {
+    /// Execute with f32 inputs of the given shapes; returns the flattened
+    /// f32 outputs (the jax side lowers with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                lit
+            } else {
+                lit.reshape(dims)
+                    .with_context(|| format!("reshape input to {dims:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let parts = result.to_tuple().context("untuple result")?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().context("read f32 output")?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn artifacts_dir() -> std::path::PathBuf {
+        // Tests run from the crate root.
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn client_comes_up() {
+        let rt = XlaRuntime::cpu("artifacts").expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let rt = XlaRuntime::cpu("artifacts").unwrap();
+        assert!(!rt.has_artifact("definitely_not_there"));
+        assert!(rt.load("definitely_not_there").is_err());
+    }
+
+    /// Full round trip when the build has produced artifacts (skips
+    /// otherwise; `make artifacts` creates them).
+    #[test]
+    fn logpdf_artifact_round_trip() {
+        let rt = XlaRuntime::cpu(artifacts_dir()).unwrap();
+        if !rt.has_artifact("logpdf") {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let art = rt.load("logpdf").unwrap();
+        let n = BATCH;
+        let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+        let mean = vec![0.5f32; n];
+        let sd = vec![2.0f32; n];
+        let out = art
+            .run_f32(&[
+                (&x, &[n as i64]),
+                (&mean, &[n as i64]),
+                (&sd, &[n as i64]),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), n);
+        for i in 0..n {
+            let want = crate::rng::normal_lpdf(x[i] as f64, 0.5, 2.0);
+            assert!(
+                (out[0][i] as f64 - want).abs() < 1e-4,
+                "i={i}: {} vs {want}",
+                out[0][i]
+            );
+        }
+    }
+}

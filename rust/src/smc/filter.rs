@@ -1,0 +1,365 @@
+//! The population coordinator: particle filters over the lazy heap.
+//!
+//! Implements the paper's §1 bootstrap filter plus the method variants its
+//! evaluation uses — auxiliary PF (PCFG), alive PF (CRBD), and particle
+//! Gibbs with a reference trajectory (VBD). Resampling performs one
+//! `deep_copy` per offspring (O(1) in lazy modes, O(history) in eager mode
+//! — the paper's Figure 7 quadratic/linear time contrast), releases dead
+//! lineages, and sweeps memos once per generation.
+
+use super::model::{particle_rng, resample_rng, SmcModel, StepCtx};
+use super::resample::Resampler;
+use crate::config::{RunConfig, Task};
+use crate::heap::{Heap, Lazy};
+use crate::stats::{ess, log_sum_exp, normalize_log_weights};
+use std::time::Instant;
+
+/// Per-generation metrics snapshot (Figure 7 series).
+#[derive(Clone, Debug)]
+pub struct StepMetrics {
+    pub t: usize,
+    /// Cumulative wall time since filter start (seconds).
+    pub elapsed_s: f64,
+    /// Heap footprint after this generation (bytes).
+    pub live_bytes: usize,
+    /// High-water mark so far (bytes).
+    pub peak_bytes: usize,
+    pub live_objects: usize,
+    pub lazy_copies: usize,
+    pub eager_copies: usize,
+    pub ess: f64,
+}
+
+/// Filter output: evidence estimate, posterior summary, and metrics.
+#[derive(Clone, Debug)]
+pub struct FilterResult {
+    pub log_evidence: f64,
+    /// Weighted posterior mean of the model summary at the final
+    /// generation (the cross-configuration output check).
+    pub posterior_mean: f64,
+    pub wall_s: f64,
+    pub peak_bytes: usize,
+    pub series: Vec<StepMetrics>,
+    /// Alive PF: total propagation attempts (N·T when every particle
+    /// survives immediately).
+    pub attempts: usize,
+}
+
+/// Inference method, per §4.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Method {
+    Bootstrap,
+    Auxiliary,
+    Alive,
+}
+
+/// Run a particle filter (or forward simulation) for `cfg` over `model`.
+pub fn run_filter<M: SmcModel>(
+    model: &M,
+    cfg: &RunConfig,
+    heap: &mut Heap,
+    ctx: &StepCtx,
+    method: Method,
+) -> FilterResult {
+    let n = cfg.n_particles;
+    let t_max = cfg.n_steps.min(model.horizon());
+    let observe = cfg.task == Task::Inference;
+    let resampler = Resampler::Systematic;
+    let start = Instant::now();
+
+    // Initialize.
+    let mut states: Vec<Lazy<M::State>> = (0..n)
+        .map(|i| {
+            let mut rng = particle_rng(cfg.seed, 0, i);
+            model.init(heap, &mut rng)
+        })
+        .collect();
+    let mut lw = vec![0.0f64; n];
+    let mut log_z = 0.0f64;
+    let mut series = Vec::new();
+    let mut w = Vec::with_capacity(n);
+    let mut attempts = 0usize;
+
+    for t in 1..=t_max {
+        // --- Resample (inference only; simulation performs no copies). ---
+        if observe {
+            normalize_log_weights(&lw, &mut w);
+            let cur_ess = ess(&w);
+            if cur_ess < cfg.ess_threshold * n as f64 {
+                let mut rrng = resample_rng(cfg.seed, t);
+                // Auxiliary stage: bias resampling by lookahead scores.
+                let ancestors = if method == Method::Auxiliary {
+                    let mut aux = vec![0.0f64; n];
+                    let mut any = false;
+                    for (i, s) in states.iter_mut().enumerate() {
+                        if let Some(la) = model.lookahead(heap, s, t) {
+                            aux[i] = la;
+                            any = true;
+                        }
+                    }
+                    if any {
+                        let alw: Vec<f64> =
+                            lw.iter().zip(&aux).map(|(a, b)| a + b).collect();
+                        let mut aw = Vec::new();
+                        normalize_log_weights(&alw, &mut aw);
+                        let anc = resampler.ancestors(&mut rrng, &aw, n);
+                        // First-stage correction: w ∝ 1 / lookahead(a).
+                        log_z += log_sum_exp(&alw) - (n as f64).ln();
+                        for (i, &a) in anc.iter().enumerate() {
+                            let _ = i;
+                            let _ = a;
+                        }
+                        let mut new_states = Vec::with_capacity(n);
+                        for &a in &anc {
+                            new_states.push(heap.deep_copy(&states[a]));
+                        }
+                        for s in states.drain(..) {
+                            heap.release(s);
+                        }
+                        states = new_states;
+                        for (i, &a) in anc.iter().enumerate() {
+                            lw[i] = -aux[a];
+                        }
+                        heap.sweep_memos();
+                        None
+                    } else {
+                        Some(resampler.ancestors(&mut rrng, &w, n))
+                    }
+                } else {
+                    Some(resampler.ancestors(&mut rrng, &w, n))
+                };
+                if let Some(anc) = ancestors {
+                    log_z += log_sum_exp(&lw) - (n as f64).ln();
+                    let mut new_states = Vec::with_capacity(n);
+                    for &a in &anc {
+                        new_states.push(heap.deep_copy(&states[a]));
+                    }
+                    for s in states.drain(..) {
+                        heap.release(s);
+                    }
+                    states = new_states;
+                    lw.iter_mut().for_each(|x| *x = 0.0);
+                    heap.sweep_memos();
+                }
+            }
+        }
+
+        // --- Propagate + weight. ---
+        match method {
+            Method::Alive if observe => {
+                // Alive PF: re-propose each slot until it survives, drawing
+                // a fresh ancestor per attempt (Del Moral et al. 2015).
+                // Resampling above has already equalized weights.
+                let parents = states;
+                states = Vec::with_capacity(n);
+                for i in 0..n {
+                    let mut attempt = 0usize;
+                    loop {
+                        let mut rng = particle_rng(
+                            cfg.seed,
+                            t,
+                            i + attempt * n + attempts, // fresh stream per retry
+                        );
+                        let a = if attempt == 0 {
+                            i
+                        } else {
+                            rng.below(n as u64) as usize
+                        };
+                        let mut child = heap.deep_copy(&parents[a]);
+                        let label = child.label();
+                        let winc = heap
+                            .with_context(label, |h| model.step(h, &mut child, t, &mut rng, true));
+                        attempt += 1;
+                        if model.alive(winc) {
+                            lw[i] += winc;
+                            states.push(child);
+                            break;
+                        }
+                        heap.release(child);
+                        assert!(
+                            attempt < 10_000,
+                            "alive PF: no surviving particle after 10k attempts at t={t}"
+                        );
+                    }
+                    attempts += attempt;
+                }
+                for p in parents {
+                    heap.release(p);
+                }
+                heap.sweep_memos();
+            }
+            _ => {
+                let winc = model.step_population(heap, &mut states, t, cfg.seed, observe, ctx);
+                attempts += n;
+                for i in 0..n {
+                    lw[i] += winc[i];
+                }
+            }
+        }
+
+        // --- Metrics snapshot (Figure 7). ---
+        normalize_log_weights(&lw, &mut w);
+        series.push(StepMetrics {
+            t,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            live_bytes: heap.metrics.current_bytes(),
+            peak_bytes: heap.metrics.peak_bytes,
+            live_objects: heap.metrics.live_objects,
+            lazy_copies: heap.metrics.lazy_copies,
+            eager_copies: heap.metrics.eager_copies,
+            ess: ess(&w),
+        });
+    }
+
+    // Final-generation evidence contribution and posterior summary.
+    log_z += log_sum_exp(&lw) - (n as f64).ln();
+    normalize_log_weights(&lw, &mut w);
+    let mut post = 0.0;
+    for (i, s) in states.iter_mut().enumerate() {
+        post += w[i] * model.summary(heap, s);
+    }
+
+    let result = FilterResult {
+        log_evidence: if observe { log_z } else { f64::NAN },
+        posterior_mean: post,
+        wall_s: start.elapsed().as_secs_f64(),
+        peak_bytes: heap.metrics.peak_bytes,
+        series,
+        attempts,
+    };
+
+    for s in states {
+        heap.release(s);
+    }
+    heap.sweep_memos();
+    result
+}
+
+/// Particle Gibbs with reference trajectory (conditional SMC), VBD's
+/// method (Wigren et al. 2019, marginalized parameters live inside the
+/// state's sufficient-statistic accumulators). Returns per-iteration
+/// filter results. The inter-iteration single-particle copy is eager, per
+/// the paper's §4 note.
+pub fn run_particle_gibbs<M: SmcModel>(
+    model: &M,
+    cfg: &RunConfig,
+    heap: &mut Heap,
+    ctx: &StepCtx,
+) -> Vec<FilterResult> {
+    let n = cfg.n_particles;
+    let t_max = cfg.n_steps.min(model.horizon());
+    let resampler = Resampler::Systematic;
+    let mut results = Vec::new();
+    // Reference trajectory: handles for generations 0..=T (oldest first).
+    let mut reference: Option<Vec<Lazy<M::State>>> = None;
+
+    for iter in 0..cfg.pg_iterations {
+        let seed = cfg.seed.wrapping_add(iter as u64 * 0x9E37);
+        let start = Instant::now();
+        let mut states: Vec<Lazy<M::State>> = (0..n)
+            .map(|i| {
+                let mut rng = particle_rng(seed, 0, i);
+                model.init(heap, &mut rng)
+            })
+            .collect();
+        // Conditional slot n-1 follows the reference when present.
+        if let Some(r) = &reference {
+            heap.release(states[n - 1]);
+            states[n - 1] = heap.clone_handle(&r[0]);
+        }
+        let mut lw = vec![0.0f64; n];
+        let mut log_z = 0.0;
+        let mut w = Vec::new();
+        let mut series = Vec::new();
+
+        for t in 1..=t_max {
+            // Resample all but the conditional slot.
+            normalize_log_weights(&lw, &mut w);
+            let mut rrng = resample_rng(seed, t);
+            let mut anc = resampler.ancestors(&mut rrng, &w, n);
+            if reference.is_some() {
+                anc[n - 1] = n - 1;
+            }
+            log_z += log_sum_exp(&lw) - (n as f64).ln();
+            let mut new_states = Vec::with_capacity(n);
+            for &a in &anc {
+                new_states.push(heap.deep_copy(&states[a]));
+            }
+            for s in states.drain(..) {
+                heap.release(s);
+            }
+            states = new_states;
+            lw.iter_mut().for_each(|x| *x = 0.0);
+            heap.sweep_memos();
+
+            // Propagate free particles; pin + score the conditional one.
+            let split = if reference.is_some() { n - 1 } else { n };
+            let winc =
+                model.step_population(heap, &mut states[..split], t, seed, true, ctx);
+            for i in 0..split {
+                lw[i] += winc[i];
+            }
+            if let Some(r) = &reference {
+                heap.release(states[n - 1]);
+                states[n - 1] = heap.clone_handle(&r[t.min(r.len() - 1)]);
+                let mut pinned = states[n - 1];
+                lw[n - 1] += model.ref_weight(heap, &mut pinned, t);
+                states[n - 1] = pinned;
+            }
+
+            normalize_log_weights(&lw, &mut w);
+            series.push(StepMetrics {
+                t,
+                elapsed_s: start.elapsed().as_secs_f64(),
+                live_bytes: heap.metrics.current_bytes(),
+                peak_bytes: heap.metrics.peak_bytes,
+                live_objects: heap.metrics.live_objects,
+                lazy_copies: heap.metrics.lazy_copies,
+                eager_copies: heap.metrics.eager_copies,
+                ess: ess(&w),
+            });
+        }
+        log_z += log_sum_exp(&lw) - (n as f64).ln();
+
+        // Select the next reference trajectory and copy it out EAGERLY
+        // (outside the tree pattern — the paper's §4 VBD note).
+        normalize_log_weights(&lw, &mut w);
+        let mut srng = resample_rng(seed, t_max + 1);
+        let k = srng.categorical(&w);
+        let eager_ref = heap.deep_copy_eager(&states[k]);
+        let mut chain = model.chain(heap, &eager_ref);
+        heap.release(eager_ref);
+        chain.reverse(); // oldest first
+        if let Some(old) = reference.take() {
+            for h in old {
+                heap.release(h);
+            }
+        }
+        reference = Some(chain);
+
+        let mut post = 0.0;
+        for (i, s) in states.iter_mut().enumerate() {
+            post += w[i] * model.summary(heap, s);
+        }
+        for s in states {
+            heap.release(s);
+        }
+        heap.sweep_memos();
+
+        results.push(FilterResult {
+            log_evidence: log_z,
+            posterior_mean: post,
+            wall_s: start.elapsed().as_secs_f64(),
+            peak_bytes: heap.metrics.peak_bytes,
+            series,
+            attempts: n * t_max,
+        });
+    }
+    if let Some(old) = reference.take() {
+        for h in old {
+            heap.release(h);
+        }
+    }
+    heap.sweep_memos();
+    results
+}

@@ -1,0 +1,254 @@
+//! Sequential Monte Carlo: resamplers, the model interface, and the
+//! population coordinator (bootstrap / auxiliary / alive particle filters
+//! and particle Gibbs) over the lazy copy-on-write heap.
+
+pub mod filter;
+pub mod model;
+pub mod resample;
+
+pub use filter::{run_filter, run_particle_gibbs, FilterResult, Method, StepMetrics};
+pub use model::{particle_rng, resample_rng, SmcModel, StepCtx};
+pub use resample::Resampler;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Model, RunConfig, Task};
+    use crate::heap::{CopyMode, Heap, Lazy};
+    use crate::lazy_fields;
+    use crate::pool::ThreadPool;
+    use crate::rng::{normal_lpdf, Pcg64};
+
+    /// A 1-D linear-Gaussian SSM with known closed-form evidence (via a
+    /// Kalman filter oracle): x' = a x + N(0, q), y = x + N(0, r).
+    struct Lgss {
+        a: f64,
+        q: f64,
+        r: f64,
+        obs: Vec<f64>,
+    }
+
+    #[derive(Clone)]
+    struct LgState {
+        x: f64,
+        prev: Lazy<LgState>,
+    }
+    lazy_fields!(LgState: prev);
+
+    impl SmcModel for Lgss {
+        type State = LgState;
+        fn name(&self) -> &'static str {
+            "lgss-test"
+        }
+        fn horizon(&self) -> usize {
+            self.obs.len()
+        }
+        fn init(&self, heap: &mut Heap, rng: &mut Pcg64) -> Lazy<LgState> {
+            let x = rng.gaussian(0.0, 1.0);
+            heap.alloc(LgState {
+                x,
+                prev: Lazy::NULL,
+            })
+        }
+        fn step(
+            &self,
+            heap: &mut Heap,
+            state: &mut Lazy<LgState>,
+            t: usize,
+            rng: &mut Pcg64,
+            observe: bool,
+        ) -> f64 {
+            let x_prev = heap.read(state, |s| s.x);
+            let x = self.a * x_prev + rng.gaussian(0.0, self.q.sqrt());
+            let old = *state;
+            let new = heap.alloc(LgState { x, prev: old });
+            heap.release(old);
+            *state = new;
+            if observe {
+                normal_lpdf(self.obs[t - 1], x, self.r.sqrt())
+            } else {
+                0.0
+            }
+        }
+        fn summary(&self, heap: &mut Heap, state: &mut Lazy<LgState>) -> f64 {
+            heap.read(state, |s| s.x)
+        }
+        fn chain(&self, heap: &mut Heap, state: &Lazy<LgState>) -> Vec<Lazy<LgState>> {
+            let mut out = vec![heap.clone_handle(state)];
+            let mut cur = *state;
+            loop {
+                let prev = heap.read_ptr(&mut cur, |s| s.prev);
+                if prev.is_null() {
+                    break;
+                }
+                out.push(heap.clone_handle(&prev));
+                cur = prev;
+            }
+            out
+        }
+        fn ref_weight(&self, heap: &mut Heap, state: &mut Lazy<LgState>, t: usize) -> f64 {
+            let x = heap.read(state, |s| s.x);
+            normal_lpdf(self.obs[t - 1], x, self.r.sqrt())
+        }
+    }
+
+    /// Exact evidence by Kalman filtering.
+    fn kalman_evidence(m: &Lgss) -> f64 {
+        let (mut mean, mut var) = (0.0f64, 1.0f64);
+        let mut lz = 0.0;
+        for &y in &m.obs {
+            mean *= m.a;
+            var = m.a * m.a * var + m.q;
+            let s = var + m.r;
+            lz += normal_lpdf(y, mean, s.sqrt());
+            let k = var / s;
+            mean += k * (y - mean);
+            var *= 1.0 - k;
+        }
+        lz
+    }
+
+    fn test_model(t: usize) -> Lgss {
+        // Simulate observations from the model itself.
+        let mut rng = Pcg64::new(777);
+        let (a, q, r): (f64, f64, f64) = (0.9, 0.5, 0.8);
+        let mut x = rng.gaussian(0.0, 1.0);
+        let mut obs = Vec::with_capacity(t);
+        for _ in 0..t {
+            x = a * x + rng.gaussian(0.0, q.sqrt());
+            obs.push(x + rng.gaussian(0.0, r.sqrt()));
+        }
+        Lgss { a, q, r, obs }
+    }
+
+    fn cfg(n: usize, t: usize, mode: CopyMode) -> RunConfig {
+        let mut c = RunConfig::for_model(Model::List, Task::Inference, mode);
+        c.n_particles = n;
+        c.n_steps = t;
+        c.seed = 42;
+        c
+    }
+
+    #[test]
+    fn bootstrap_filter_estimates_evidence() {
+        let model = test_model(40);
+        let exact = kalman_evidence(&model);
+        let pool = ThreadPool::new(2);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut heap = Heap::new(CopyMode::LazySro);
+        let r = run_filter(&model, &cfg(512, 40, CopyMode::LazySro), &mut heap, &ctx, Method::Bootstrap);
+        assert!(
+            (r.log_evidence - exact).abs() < 3.0,
+            "estimate {} vs exact {exact}",
+            r.log_evidence
+        );
+        assert_eq!(heap.live_objects(), 0, "filter must release everything");
+        assert_eq!(r.series.len(), 40);
+    }
+
+    #[test]
+    fn all_copy_modes_identical_output() {
+        // The paper's §4 validation: outputs match across configurations
+        // given matched seeds.
+        let model = test_model(25);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut outs = Vec::new();
+        for mode in CopyMode::ALL {
+            let mut heap = Heap::new(mode);
+            let r = run_filter(&model, &cfg(128, 25, mode), &mut heap, &ctx, Method::Bootstrap);
+            outs.push((r.log_evidence, r.posterior_mean));
+            assert_eq!(heap.live_objects(), 0, "{mode:?} leaked");
+        }
+        for w in outs.windows(2) {
+            assert_eq!(w[0].0.to_bits(), w[1].0.to_bits(), "evidence differs: {outs:?}");
+            assert_eq!(w[0].1.to_bits(), w[1].1.to_bits(), "posterior differs");
+        }
+    }
+
+    #[test]
+    fn lazy_uses_less_memory_than_eager() {
+        let model = test_model(60);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut peaks = Vec::new();
+        for mode in [CopyMode::Eager, CopyMode::LazySro] {
+            let mut heap = Heap::new(mode);
+            let r = run_filter(&model, &cfg(128, 60, mode), &mut heap, &ctx, Method::Bootstrap);
+            peaks.push(r.peak_bytes as f64);
+        }
+        assert!(
+            peaks[1] < peaks[0] * 0.7,
+            "lazy peak {} not well below eager peak {}",
+            peaks[1],
+            peaks[0]
+        );
+    }
+
+    #[test]
+    fn simulation_task_performs_no_copies() {
+        let model = test_model(30);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut c = cfg(64, 30, CopyMode::LazySro);
+        c.task = Task::Simulation;
+        let mut heap = Heap::new(CopyMode::LazySro);
+        let _ = run_filter(&model, &c, &mut heap, &ctx, Method::Bootstrap);
+        assert_eq!(heap.metrics.lazy_copies, 0, "no copies in simulation");
+        assert_eq!(heap.metrics.eager_copies, 0);
+        assert_eq!(heap.metrics.deep_copies, 0);
+    }
+
+    #[test]
+    fn alive_filter_counts_attempts() {
+        let model = test_model(10);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut heap = Heap::new(CopyMode::LazySro);
+        let r = run_filter(&model, &cfg(64, 10, CopyMode::LazySro), &mut heap, &ctx, Method::Alive);
+        // Gaussian weights are always finite: exactly one attempt each.
+        assert_eq!(r.attempts, 64 * 10);
+        assert_eq!(heap.live_objects(), 0);
+    }
+
+    #[test]
+    fn particle_gibbs_runs_and_improves_nothing_broken() {
+        let model = test_model(15);
+        let exact = kalman_evidence(&model);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        let mut c = cfg(128, 15, CopyMode::LazySro);
+        c.pg_iterations = 3;
+        let mut heap = Heap::new(CopyMode::LazySro);
+        let rs = run_particle_gibbs(&model, &c, &mut heap, &ctx);
+        assert_eq!(rs.len(), 3);
+        for r in &rs {
+            assert!(
+                (r.log_evidence - exact).abs() < 5.0,
+                "PG evidence {} vs exact {exact}",
+                r.log_evidence
+            );
+        }
+        assert_eq!(heap.live_objects(), 0, "PG must release everything");
+        // The inter-iteration reference copies were eager.
+        assert!(heap.metrics.eager_copies > 0);
+    }
+}

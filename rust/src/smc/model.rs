@@ -1,0 +1,134 @@
+//! The model interface the population coordinator drives.
+
+use crate::heap::{Heap, Lazy, Payload};
+use crate::pool::ThreadPool;
+use crate::rng::Pcg64;
+use crate::runtime::BatchKalman;
+
+/// Shared numeric-phase resources handed to batched steps.
+pub struct StepCtx<'a> {
+    /// Static-scheduling executor for the parallel numeric phase.
+    pub pool: &'a ThreadPool,
+    /// Compiled batched-Kalman artifact, when `make artifacts` has run and
+    /// the config enables XLA. Models fall back to the CPU oracle path.
+    pub kalman: Option<&'a BatchKalman>,
+}
+
+/// A population-based probabilistic program.
+///
+/// State payloads live on the lazy heap and typically chain backwards in
+/// time (`prev` pointers), so the population's ancestry is exactly the
+/// Figure 2 tree and resampling's `deep_copy` exercises the platform.
+pub trait SmcModel {
+    type State: Payload;
+
+    fn name(&self) -> &'static str;
+
+    /// Number of generations (data length for inference).
+    fn horizon(&self) -> usize;
+
+    /// Draw an initial particle (under the coordinator's context).
+    fn init(&self, heap: &mut Heap, rng: &mut Pcg64) -> Lazy<Self::State>;
+
+    /// Propagate the particle to generation `t` (mutating through the
+    /// handle) and return the log-weight increment. With `observe = false`
+    /// (the paper's *simulation* task) the model samples forward without
+    /// conditioning and the return value is ignored.
+    fn step(
+        &self,
+        heap: &mut Heap,
+        state: &mut Lazy<Self::State>,
+        t: usize,
+        rng: &mut Pcg64,
+        observe: bool,
+    ) -> f64;
+
+    /// Batched propagate+weight across the population. The default loops
+    /// [`SmcModel::step`]; models with a tensorizable numeric core (RBPF)
+    /// override this to split the generation into a serial heap phase and
+    /// a batched XLA / parallel numeric phase.
+    fn step_population(
+        &self,
+        heap: &mut Heap,
+        states: &mut [Lazy<Self::State>],
+        t: usize,
+        seed: u64,
+        observe: bool,
+        _ctx: &StepCtx,
+    ) -> Vec<f64> {
+        let mut out = Vec::with_capacity(states.len());
+        for (i, s) in states.iter_mut().enumerate() {
+            let mut rng = particle_rng(seed, t, i);
+            let label = s.label();
+            let lw = heap.with_context(label, |h| self.step(h, s, t, &mut rng, observe));
+            out.push(lw);
+        }
+        out
+    }
+
+    /// Auxiliary-particle-filter lookahead score (Pitt & Shephard 1999):
+    /// an estimate of the next observation's likelihood used to bias
+    /// resampling; `None` disables the auxiliary stage.
+    fn lookahead(
+        &self,
+        _heap: &mut Heap,
+        _state: &mut Lazy<Self::State>,
+        _t: usize,
+    ) -> Option<f64> {
+        None
+    }
+
+    /// Alive-particle-filter acceptance (Del Moral et al. 2015): whether a
+    /// propagated particle survives. Default: finite weight.
+    fn alive(&self, lw: f64) -> bool {
+        lw > f64::NEG_INFINITY
+    }
+
+    /// A scalar summary of a particle (posterior-mean reporting and the
+    /// cross-configuration output equality check).
+    fn summary(&self, heap: &mut Heap, state: &mut Lazy<Self::State>) -> f64;
+
+    /// Walk a final particle's state chain backwards, returning owning
+    /// handles for generations T..0 (newest first). Used by particle Gibbs
+    /// for the reference trajectory. Models without a chain return just
+    /// the final state.
+    fn chain(&self, heap: &mut Heap, state: &Lazy<Self::State>) -> Vec<Lazy<Self::State>> {
+        vec![heap.clone_handle(state)]
+    }
+
+    /// Score the reference particle at generation `t` for conditional SMC
+    /// (particle Gibbs). Default: unsupported.
+    fn ref_weight(&self, _heap: &mut Heap, _state: &mut Lazy<Self::State>, _t: usize) -> f64 {
+        unimplemented!("model does not support conditional SMC")
+    }
+}
+
+/// Deterministic per-(generation, slot) RNG stream — identical across copy
+/// modes so resampling decisions and sampled trajectories match (§4: seeds
+/// matched across configurations).
+pub fn particle_rng(seed: u64, t: usize, i: usize) -> Pcg64 {
+    Pcg64::stream(seed, ((t as u64) << 24) ^ (i as u64))
+}
+
+/// Per-generation resampling RNG stream.
+pub fn resample_rng(seed: u64, t: usize) -> Pcg64 {
+    Pcg64::stream(seed, 0xFFFF_0000_0000_0000 | t as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_streams_distinct_and_deterministic() {
+        let mut a = particle_rng(1, 3, 5);
+        let mut b = particle_rng(1, 3, 5);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = particle_rng(1, 3, 6);
+        let mut d = particle_rng(1, 4, 5);
+        let x = particle_rng(1, 3, 5).next_u64();
+        assert_ne!(x, c.next_u64());
+        assert_ne!(x, d.next_u64());
+        assert_ne!(x, resample_rng(1, 3).next_u64());
+    }
+}

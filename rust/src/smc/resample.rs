@@ -1,0 +1,186 @@
+//! Resampling schemes: ancestor-index generation from particle weights.
+//!
+//! Multinomial, systematic, stratified, and residual resamplers, all over
+//! normalized weights, all deterministic given the generator — the paper
+//! matches seeds across configurations so resampling decisions (and hence
+//! the ancestry tree of Figure 2) are identical in all three copy modes.
+
+use crate::rng::Pcg64;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Resampler {
+    Multinomial,
+    Systematic,
+    Stratified,
+    Residual,
+}
+
+impl Resampler {
+    pub fn parse(s: &str) -> Option<Resampler> {
+        match s.to_ascii_lowercase().as_str() {
+            "multinomial" => Some(Resampler::Multinomial),
+            "systematic" => Some(Resampler::Systematic),
+            "stratified" => Some(Resampler::Stratified),
+            "residual" => Some(Resampler::Residual),
+            _ => None,
+        }
+    }
+
+    /// Draw `n` ancestor indices from normalized weights `w`.
+    pub fn ancestors(&self, rng: &mut Pcg64, w: &[f64], n: usize) -> Vec<usize> {
+        match self {
+            Resampler::Multinomial => multinomial(rng, w, n),
+            Resampler::Systematic => systematic(rng, w, n),
+            Resampler::Stratified => stratified(rng, w, n),
+            Resampler::Residual => residual(rng, w, n),
+        }
+    }
+}
+
+/// Multinomial: iid categorical draws (sorted for cache-friendly copying;
+/// ancestry statistics are exchangeable).
+pub fn multinomial(rng: &mut Pcg64, w: &[f64], n: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = (0..n).map(|_| rng.categorical(w)).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Systematic: single uniform offset, minimal variance.
+pub fn systematic(rng: &mut Pcg64, w: &[f64], n: usize) -> Vec<usize> {
+    let total: f64 = w.iter().sum();
+    let step = total / n as f64;
+    let mut u = rng.next_f64() * step;
+    let mut out = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    let mut i = 0;
+    for _ in 0..n {
+        while acc + w[i] < u && i + 1 < w.len() {
+            acc += w[i];
+            i += 1;
+        }
+        out.push(i);
+        u += step;
+    }
+    out
+}
+
+/// Stratified: one uniform per stratum.
+pub fn stratified(rng: &mut Pcg64, w: &[f64], n: usize) -> Vec<usize> {
+    let total: f64 = w.iter().sum();
+    let mut out = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    let mut i = 0;
+    for k in 0..n {
+        let u = (k as f64 + rng.next_f64()) * total / n as f64;
+        while acc + w[i] < u && i + 1 < w.len() {
+            acc += w[i];
+            i += 1;
+        }
+        out.push(i);
+    }
+    out
+}
+
+/// Residual: deterministic floor(n·wᵢ) copies + multinomial remainder.
+pub fn residual(rng: &mut Pcg64, w: &[f64], n: usize) -> Vec<usize> {
+    let total: f64 = w.iter().sum();
+    let mut out = Vec::with_capacity(n);
+    let mut residuals = Vec::with_capacity(w.len());
+    for (i, wi) in w.iter().enumerate() {
+        let expect = n as f64 * wi / total;
+        let k = expect.floor() as usize;
+        for _ in 0..k {
+            out.push(i);
+        }
+        residuals.push(expect - k as f64);
+    }
+    while out.len() < n {
+        out.push(rng.categorical(&residuals));
+    }
+    out.truncate(n);
+    out.sort_unstable();
+    out
+}
+
+/// Offspring counts from an ancestor vector.
+pub fn offspring_counts(ancestors: &[usize], n_parents: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; n_parents];
+    for &a in ancestors {
+        counts[a] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [Resampler; 4] = [
+        Resampler::Multinomial,
+        Resampler::Systematic,
+        Resampler::Stratified,
+        Resampler::Residual,
+    ];
+
+    #[test]
+    fn ancestors_are_valid_indices() {
+        let mut rng = Pcg64::new(1);
+        let w = [0.1, 0.2, 0.3, 0.4];
+        for r in ALL {
+            let a = r.ancestors(&mut rng, &w, 100);
+            assert_eq!(a.len(), 100);
+            assert!(a.iter().all(|&i| i < 4), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn proportions_match_weights() {
+        let mut rng = Pcg64::new(2);
+        let w = [1.0, 3.0, 6.0];
+        for r in ALL {
+            let a = r.ancestors(&mut rng, &w, 60_000);
+            let c = offspring_counts(&a, 3);
+            let f2 = c[2] as f64 / 60_000.0;
+            assert!((f2 - 0.6).abs() < 0.02, "{r:?}: {f2}");
+        }
+    }
+
+    #[test]
+    fn degenerate_weight_takes_all() {
+        let mut rng = Pcg64::new(3);
+        let w = [0.0, 1.0, 0.0];
+        for r in ALL {
+            let a = r.ancestors(&mut rng, &w, 50);
+            assert!(a.iter().all(|&i| i == 1), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn systematic_low_variance() {
+        // With uniform weights, systematic gives each parent exactly one
+        // offspring.
+        let mut rng = Pcg64::new(4);
+        let w = [0.25; 4];
+        let a = systematic(&mut rng, &w, 4);
+        let c = offspring_counts(&a, 4);
+        assert_eq!(c, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn residual_deterministic_part() {
+        let mut rng = Pcg64::new(5);
+        // Weights 0.5/0.25/0.25 with n=8: floors give 4/2/2 exactly.
+        let a = residual(&mut rng, &[0.5, 0.25, 0.25], 8);
+        assert_eq!(offspring_counts(&a, 3), vec![4, 2, 2]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        for r in ALL {
+            let w = [0.3, 0.7];
+            let a1 = r.ancestors(&mut Pcg64::new(9), &w, 32);
+            let a2 = r.ancestors(&mut Pcg64::new(9), &w, 32);
+            assert_eq!(a1, a2, "{r:?}");
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Numerical statistics utilities: log-sum-exp weight handling, effective
+//! sample size, weighted moments, and quantiles (median + IQR, the
+//! statistics reported in the paper's Figures 5–6).
+
+/// log(Σ exp(x_i)) computed stably.
+pub fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    let s: f64 = xs.iter().map(|x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Normalize log weights in place to plain weights summing to 1; returns
+/// the log of the mean weight (the incremental evidence contribution).
+pub fn normalize_log_weights(lw: &[f64], out: &mut Vec<f64>) -> f64 {
+    let lse = log_sum_exp(lw);
+    out.clear();
+    if lse == f64::NEG_INFINITY {
+        out.resize(lw.len(), 1.0 / lw.len() as f64);
+        return f64::NEG_INFINITY;
+    }
+    out.extend(lw.iter().map(|x| (x - lse).exp()));
+    lse - (lw.len() as f64).ln()
+}
+
+/// Effective sample size of normalized weights: 1 / Σ w².
+pub fn ess(w: &[f64]) -> f64 {
+    let s: f64 = w.iter().map(|x| x * x).sum();
+    if s > 0.0 {
+        1.0 / s
+    } else {
+        0.0
+    }
+}
+
+/// ESS directly from log weights.
+pub fn ess_log(lw: &[f64]) -> f64 {
+    let l1 = log_sum_exp(lw);
+    let l2 = log_sum_exp(&lw.iter().map(|x| 2.0 * x).collect::<Vec<_>>());
+    if l1 == f64::NEG_INFINITY {
+        0.0
+    } else {
+        (2.0 * l1 - l2).exp()
+    }
+}
+
+/// Weighted mean.
+pub fn weighted_mean(x: &[f64], w: &[f64]) -> f64 {
+    let sw: f64 = w.iter().sum();
+    x.iter().zip(w).map(|(a, b)| a * b).sum::<f64>() / sw
+}
+
+/// Weighted variance (biased, population form).
+pub fn weighted_var(x: &[f64], w: &[f64]) -> f64 {
+    let m = weighted_mean(x, w);
+    let sw: f64 = w.iter().sum();
+    x.iter().zip(w).map(|(a, b)| b * (a - m) * (a - m)).sum::<f64>() / sw
+}
+
+/// Quantile (linear interpolation) of an unsorted slice. `q` in [0,1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median and interquartile range — the summary the paper plots.
+pub fn median_iqr(xs: &[f64]) -> (f64, f64, f64) {
+    (quantile(xs, 0.5), quantile(xs, 0.25), quantile(xs, 0.75))
+}
+
+/// Simple mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn sd(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() as f64 - 1.0)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_sum_exp_stable() {
+        assert!((log_sum_exp(&[0.0, 0.0]) - 2f64.ln()).abs() < 1e-12);
+        // Huge offsets don't overflow.
+        let x = log_sum_exp(&[1000.0, 1000.0]);
+        assert!((x - (1000.0 + 2f64.ln())).abs() < 1e-9);
+        assert_eq!(log_sum_exp(&[f64::NEG_INFINITY; 3]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn normalize_and_ess() {
+        let lw = [0.0, 0.0, 0.0, 0.0];
+        let mut w = Vec::new();
+        let lmean = normalize_log_weights(&lw, &mut w);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((lmean - 0.0).abs() < 1e-12);
+        assert!((ess(&w) - 4.0).abs() < 1e-9);
+        // Degenerate weights: ESS 1.
+        let lw = [0.0, -1e9, -1e9];
+        let _ = normalize_log_weights(&lw, &mut w);
+        assert!((ess(&w) - 1.0).abs() < 1e-6);
+        assert!((ess_log(&lw) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.5), 3.0);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        let (med, q1, q3) = median_iqr(&xs);
+        assert_eq!(med, 3.0);
+        assert_eq!(q1, 2.0);
+        assert_eq!(q3, 4.0);
+    }
+
+    #[test]
+    fn weighted_moments() {
+        let x = [1.0, 3.0];
+        let w = [1.0, 1.0];
+        assert!((weighted_mean(&x, &w) - 2.0).abs() < 1e-12);
+        assert!((weighted_var(&x, &w) - 1.0).abs() < 1e-12);
+        let w = [3.0, 1.0];
+        assert!((weighted_mean(&x, &w) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,140 @@
+//! Whole-system integration tests: the §4 validation (identical output in
+//! every copy configuration, matched seeds), the theoretical memory
+//! shapes, and the PJRT artifact path against the CPU oracle inside a full
+//! filter run.
+
+use lazycow::config::{Model, RunConfig, Task};
+use lazycow::heap::{CopyMode, Heap};
+use lazycow::models::{run_model, Rbpf, DATA_SEED};
+use lazycow::pool::ThreadPool;
+use lazycow::runtime::{BatchKalman, XlaRuntime};
+use lazycow::smc::{run_filter, Method, StepCtx};
+
+fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
+    StepCtx { pool, kalman: None }
+}
+
+/// §4: "the output is expected to match regardless of the configuration;
+/// a comparison of output files confirms that this is the case."
+#[test]
+fn output_identical_across_configurations() {
+    let pool = ThreadPool::new(2);
+    for model in Model::EVAL {
+        let mut outs: Vec<(u64, u64)> = Vec::new();
+        for mode in CopyMode::ALL {
+            let mut cfg = RunConfig::for_model(model, Task::Inference, mode);
+            cfg.n_particles = 48;
+            cfg.n_steps = 20;
+            cfg.pg_iterations = 2;
+            cfg.seed = 123;
+            let mut heap = Heap::new(mode);
+            let r = run_model(&cfg, &mut heap, &ctx(&pool));
+            outs.push((r.log_evidence.to_bits(), r.posterior_mean.to_bits()));
+            assert_eq!(heap.live_objects(), 0, "{model:?}/{mode:?} leaked");
+        }
+        assert_eq!(outs[0], outs[1], "{model:?}: eager != lazy");
+        assert_eq!(outs[1], outs[2], "{model:?}: lazy != lazy-sro");
+    }
+}
+
+/// The dense-vs-sparse storage contrast: eager peak memory grows with N·T
+/// while lazy stays near O(T + N log N) (Jacob et al. 2015).
+#[test]
+fn memory_scaling_shapes() {
+    let pool = ThreadPool::new(1);
+    let run = |mode: CopyMode, t: usize| -> f64 {
+        let mut cfg = RunConfig::for_model(Model::List, Task::Inference, mode);
+        cfg.n_particles = 64;
+        cfg.n_steps = t;
+        let mut heap = Heap::new(mode);
+        let r = run_model(&cfg, &mut heap, &ctx(&pool));
+        r.peak_bytes as f64
+    };
+    // Eager peak grows roughly linearly in T; lazy roughly flat.
+    let (e1, e2) = (run(CopyMode::Eager, 50), run(CopyMode::Eager, 200));
+    let (l1, l2) = (run(CopyMode::LazySro, 50), run(CopyMode::LazySro, 200));
+    assert!(e2 > e1 * 2.5, "eager peak should scale with T: {e1} -> {e2}");
+    assert!(l2 < l1 * 2.0, "lazy peak should stay near-flat: {l1} -> {l2}");
+    assert!(l2 < e2 / 4.0, "lazy must undercut eager at T=200");
+}
+
+/// Eager execution time grows superlinearly with T (quadratic copying);
+/// lazy stays linear — the Figure 7 contrast.
+#[test]
+fn time_scaling_shapes() {
+    let pool = ThreadPool::new(1);
+    let run = |mode: CopyMode, t: usize| -> f64 {
+        let mut cfg = RunConfig::for_model(Model::List, Task::Inference, mode);
+        cfg.n_particles = 64;
+        cfg.n_steps = t;
+        let mut heap = Heap::new(mode);
+        run_model(&cfg, &mut heap, &ctx(&pool)).wall_s
+    };
+    // Warm up + measure.
+    let _ = run(CopyMode::Eager, 50);
+    let e_ratio = run(CopyMode::Eager, 400) / run(CopyMode::Eager, 100).max(1e-9);
+    let l_ratio = run(CopyMode::LazySro, 400) / run(CopyMode::LazySro, 100).max(1e-9);
+    // 4x more generations: eager should blow well past 4x (quadratic term),
+    // lazy should stay near 4x.
+    assert!(e_ratio > 6.0, "eager time ratio {e_ratio} not superlinear");
+    assert!(l_ratio < 8.0, "lazy time ratio {l_ratio} far from linear");
+}
+
+/// The XLA artifact path and CPU oracle path produce closely matching
+/// filter outputs (f32 vs f64 tolerance) within a full RBPF run.
+#[test]
+fn xla_and_cpu_paths_agree() {
+    let rt = match XlaRuntime::cpu("artifacts") {
+        Ok(rt) if rt.has_artifact("kalman3") => rt,
+        _ => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+    let bk = BatchKalman::load(&rt).expect("load artifact");
+    let pool = ThreadPool::new(2);
+    let model = Rbpf::synthetic(40, DATA_SEED);
+    let mut cfg = RunConfig::for_model(Model::Rbpf, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 256;
+    cfg.n_steps = 40;
+
+    let mut heap = Heap::new(CopyMode::LazySro);
+    let cpu_ctx = StepCtx {
+        pool: &pool,
+        kalman: None,
+    };
+    let r_cpu = run_filter(&model, &cfg, &mut heap, &cpu_ctx, Method::Bootstrap);
+
+    let mut heap = Heap::new(CopyMode::LazySro);
+    let xla_ctx = StepCtx {
+        pool: &pool,
+        kalman: Some(&bk),
+    };
+    let r_xla = run_filter(&model, &cfg, &mut heap, &xla_ctx, Method::Bootstrap);
+
+    let diff = (r_cpu.log_evidence - r_xla.log_evidence).abs();
+    let rel = diff / r_cpu.log_evidence.abs().max(1.0);
+    assert!(
+        rel < 1e-3,
+        "CPU {} vs XLA {} (rel {rel})",
+        r_cpu.log_evidence,
+        r_xla.log_evidence
+    );
+}
+
+/// Simulation task performs zero copies in every model (the paper's
+/// Figure 6 premise).
+#[test]
+fn simulation_never_copies() {
+    let pool = ThreadPool::new(1);
+    for model in Model::EVAL {
+        let mut cfg = RunConfig::for_model(model, Task::Simulation, CopyMode::LazySro);
+        cfg.n_particles = 16;
+        cfg.n_steps = 15;
+        let mut heap = Heap::new(CopyMode::LazySro);
+        let _ = run_model(&cfg, &mut heap, &ctx(&pool));
+        assert_eq!(heap.metrics.deep_copies, 0, "{model:?} copied in simulation");
+        assert_eq!(heap.metrics.lazy_copies, 0);
+        assert_eq!(heap.metrics.eager_copies, 0);
+    }
+}
