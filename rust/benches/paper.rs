@@ -9,12 +9,13 @@
 //!   ablation   single-reference optimization on/off (Remark 1)
 //!   treebound  ancestry reachability vs t + c·N·log N (Jacob et al. 2015)
 //!   micro      heap hot-path micro-benchmarks (deep_copy / pull / get)
+//!   shards     shard-count sweep (K = 1, 2, 4, 8) with per-K JSON records
 //!
 //! Environment: LAZYCOW_REPS (default 5), LAZYCOW_SCALE=default|paper.
 
 use lazycow::bench::{human_bytes, run_cell, CellResult};
 use lazycow::config::{Model, RunConfig, Task};
-use lazycow::heap::{CopyMode, Heap, Lazy};
+use lazycow::heap::{CopyMode, Heap, Lazy, ShardedHeap};
 use lazycow::lazy_fields;
 use lazycow::models::{run_model, ListModel, DATA_SEED};
 use lazycow::pool::ThreadPool;
@@ -33,6 +34,7 @@ fn sections() -> Vec<String> {
             "micro",
             "functional",
             "resamplers",
+            "shards",
         ]
             .iter()
             .map(|s| s.to_string())
@@ -95,7 +97,9 @@ fn figure_cells(task: Task, backend: &Backend) -> Vec<CellResult> {
             let cell = run_cell(&name, reps(), |rep| {
                 let mut c = cfg.clone();
                 c.seed = 20200401u64.wrapping_add(rep as u64);
-                let mut heap = Heap::new(c.mode);
+                // K = 1: the paper's serialized-heap baseline (the shard
+                // sweep section measures K > 1).
+                let mut heap = ShardedHeap::new(c.mode, 1);
                 let r = run_model(&c, &mut heap, &backend.ctx());
                 Some(r.peak_bytes as f64)
             });
@@ -140,7 +144,7 @@ fn bench_fig7(backend: &Backend) {
         println!("  mode       t=¼T        t=½T        t=¾T        t=T         (elapsed s | live bytes)");
         for mode in CopyMode::ALL {
             let cfg = RunConfig::for_model(model, Task::Inference, mode);
-            let mut heap = Heap::new(mode);
+            let mut heap = ShardedHeap::new(mode, 1);
             let r = run_model(&cfg, &mut heap, &backend.ctx());
             let quarter = |f: f64| {
                 let idx = ((r.series.len() as f64 * f) as usize).min(r.series.len() - 1);
@@ -167,17 +171,18 @@ fn bench_ablation(backend: &Backend) {
     for model in [Model::Pcfg, Model::Mot, Model::Rbpf] {
         for mode in [CopyMode::Lazy, CopyMode::LazySro] {
             let cfg = RunConfig::for_model(model, Task::Inference, mode);
-            let mut heap = Heap::new(mode);
+            let mut heap = ShardedHeap::new(mode, 1);
             let start = std::time::Instant::now();
             let r = run_model(&cfg, &mut heap, &backend.ctx());
+            let m = heap.metrics();
             println!(
                 "  {:<5} {:<9} wall {:.3}s  peak {:>10}  memo-inserts avoided {:>8}  memo bytes {:>10}",
                 model.name(),
                 mode.name(),
                 start.elapsed().as_secs_f64(),
                 human_bytes(r.peak_bytes as f64),
-                heap.metrics.sro_skips,
-                human_bytes(heap.metrics.memo_bytes as f64),
+                m.sro_skips,
+                human_bytes(m.memo_bytes as f64),
             );
         }
     }
@@ -342,6 +347,77 @@ fn bench_functional() {
     println!("  (lazy modes: thaw recycles the sole-referenced object in place)");
 }
 
+/// Shard-count sweep (the sharded-heap acceptance benchmark): wall time
+/// and peak bytes per K on the VBD (particle Gibbs, the heap-mutation-
+/// heavy workload) and RBPF (bootstrap + per-particle Kalman) models.
+/// Emits one JSON record per (model, K) so successive PRs have a
+/// machine-readable perf trajectory to beat. The K = 1 output is
+/// bit-identical to the single-heap platform; K > 1 only changes where
+/// heap work runs, never what is computed.
+fn bench_shards(backend: &Backend) {
+    println!("\n== Shard sweep: wall time / peak bytes vs K (JSON per cell) ==");
+    let threads = backend.pool.n_threads();
+    for model in [Model::Vbd, Model::Rbpf] {
+        let mut baseline_evidence: Option<u64> = None;
+        for k in [1usize, 2, 4, 8] {
+            let mut cfg = RunConfig::for_model(model, Task::Inference, CopyMode::LazySro);
+            if paper_scale() {
+                let (n, t_inf, _) = model.paper_scale();
+                cfg.n_particles = n;
+                cfg.n_steps = t_inf;
+            }
+            cfg.shards = k;
+            let n_particles = cfg.n_particles;
+            let t_steps = cfg.n_steps;
+            let mut transplants = 0usize;
+            let mut evidence_bits = 0u64;
+            let cell = {
+                let transplants = &mut transplants;
+                let evidence_bits = &mut evidence_bits;
+                run_cell(&format!("{}/K={k}", model.name()), reps(), move |rep| {
+                    let mut c = cfg.clone();
+                    c.seed = 20200401u64.wrapping_add(rep as u64);
+                    let mut heap = ShardedHeap::new(c.mode, k);
+                    let r = run_model(&c, &mut heap, &backend.ctx());
+                    if rep == 0 {
+                        *transplants = heap.metrics().transplants;
+                        *evidence_bits = r.log_evidence.to_bits();
+                    }
+                    Some(r.peak_bytes as f64)
+                })
+            };
+            // K-invariance holds on the CPU oracle path; with a compiled
+            // f32 artifact the K=1 cell runs it while K>1 shards use the
+            // f64 oracle, so skip the bitwise check there.
+            if backend.kalman.is_none() {
+                match baseline_evidence {
+                    None => baseline_evidence = Some(evidence_bits),
+                    Some(b) => assert_eq!(
+                        b, evidence_bits,
+                        "{}: K={k} output differs from K=1",
+                        model.name()
+                    ),
+                }
+            }
+            println!(
+                "{{\"section\":\"shards\",\"model\":\"{}\",\"shards\":{},\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"time_q1_s\":{:.6},\"time_q3_s\":{:.6},\"time_per_gen_s\":{:.6},\"peak_bytes_median\":{:.0},\"transplants\":{}}}",
+                model.name(),
+                k,
+                threads,
+                n_particles,
+                t_steps,
+                cell.reps,
+                cell.time_median,
+                cell.time_q1,
+                cell.time_q3,
+                cell.time_median / t_steps.max(1) as f64,
+                cell.mem_median.unwrap_or(0.0),
+                transplants,
+            );
+        }
+    }
+}
+
 /// Resampler ablation: the constant c in the t + cN·logN reachable-set
 /// bound depends on offspring variance — systematic < stratified <
 /// multinomial (Jacob et al. 2015's discussion).
@@ -400,6 +476,7 @@ fn main() {
             "micro" => bench_micro(),
             "functional" => bench_functional(),
             "resamplers" => bench_resamplers(),
+            "shards" => bench_shards(&backend),
             other => eprintln!("unknown section {other}"),
         }
     }

@@ -14,7 +14,7 @@
 
 use lazycow::bench::human_bytes;
 use lazycow::config::{Model, RunConfig, Task};
-use lazycow::heap::{CopyMode, Heap};
+use lazycow::heap::{CopyMode, ShardedHeap};
 use lazycow::models::run_model;
 use lazycow::pool::ThreadPool;
 use lazycow::runtime::{BatchKalman, XlaRuntime};
@@ -52,9 +52,12 @@ fn main() {
         cfg.n_particles = n;
         cfg.n_steps = t;
         cfg.seed = 20200401;
-        let mut heap = Heap::new(mode);
+        // Single shard: the serialized-heap baseline the paper measures
+        // (pass more shards to exercise the sharded engine).
+        let mut heap = ShardedHeap::new(mode, 1);
         let r = run_model(&cfg, &mut heap, &ctx);
-        let copies = heap.metrics.lazy_copies + heap.metrics.eager_copies;
+        let m = heap.metrics();
+        let copies = m.lazy_copies + m.eager_copies;
         let last_objs = r.series.last().map(|s| s.live_objects).unwrap_or(0);
         println!(
             "{:<10} {:>12.3} {:>14.4} {:>12} {:>10} {:>10}",

@@ -112,6 +112,13 @@ pub struct RunConfig {
     pub seed: u64,
     /// Worker threads for the numeric phase (0 = all cores).
     pub threads: usize,
+    /// Heap shards K for parallel particle propagation (0 = match the
+    /// worker thread count). On the CPU oracle path outputs are
+    /// bit-identical for every K; with a compiled f32 Kalman artifact
+    /// loaded, only K = 1 runs the artifact (K > 1 propagates per shard
+    /// on the f64 oracle), so the launcher's auto mode keeps K = 1 in
+    /// that case. K = 1 is the serialized single-heap platform.
+    pub shards: usize,
     /// ESS-fraction resampling trigger (1.0 = always resample, the paper's
     /// setting for the memory-pattern evaluation).
     pub ess_threshold: f64,
@@ -135,6 +142,7 @@ impl Default for RunConfig {
             n_steps: t,
             seed: 20200401,
             threads: 0,
+            shards: 0,
             ess_threshold: 1.0,
             pg_iterations: 3,
             use_xla: true,
@@ -172,6 +180,7 @@ impl RunConfig {
             "steps" | "t" => self.n_steps = value.parse().map_err(|e| format!("{e}"))?,
             "seed" => self.seed = value.parse().map_err(|e| format!("{e}"))?,
             "threads" => self.threads = value.parse().map_err(|e| format!("{e}"))?,
+            "shards" | "k" => self.shards = value.parse().map_err(|e| format!("{e}"))?,
             "ess" => self.ess_threshold = value.parse().map_err(|e| format!("{e}"))?,
             "pg-iterations" | "pg_iterations" => {
                 self.pg_iterations = value.parse().map_err(|e| format!("{e}"))?
@@ -181,6 +190,16 @@ impl RunConfig {
             _ => return Err(format!("unknown config key {key}")),
         }
         Ok(())
+    }
+
+    /// Resolve the shard count against the executor's worker count
+    /// (`shards = 0` means "one shard per worker thread").
+    pub fn resolved_shards(&self, n_threads: usize) -> usize {
+        if self.shards == 0 {
+            n_threads.max(1)
+        } else {
+            self.shards
+        }
     }
 
     pub fn label(&self) -> String {
@@ -247,10 +266,15 @@ mod tests {
         c.apply("particles", "64").unwrap();
         c.apply("mode", "eager").unwrap();
         c.apply("series", "true").unwrap();
+        c.apply("shards", "4").unwrap();
         assert_eq!(c.model, Model::Crbd);
         assert_eq!(c.n_particles, 64);
         assert_eq!(c.mode, CopyMode::Eager);
         assert!(c.series);
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.resolved_shards(8), 4);
+        c.apply("shards", "0").unwrap();
+        assert_eq!(c.resolved_shards(8), 8, "0 = match worker threads");
         assert!(c.apply("bogus", "1").is_err());
         assert!(c.apply("model", "bogus").is_err());
     }

@@ -40,6 +40,11 @@ impl Default for RawLazy {
 
 /// Typed lazy pointer to a payload of type `T`.
 ///
+/// `Lazy<T>` is a pair of plain ids, so it is `Send + Sync` regardless of
+/// `T` (the phantom uses a function-pointer position): shard workers move
+/// per-shard handle vectors across threads, while every dereference still
+/// requires `&mut Heap` of the owning shard.
+///
 /// `Lazy<T>` is `Copy`: it does not own a reference count by itself. The
 /// ownership discipline is:
 ///
@@ -52,7 +57,7 @@ impl Default for RawLazy {
 ///   the owning edge. Generation tags turn violations into panics.
 pub struct Lazy<T> {
     pub(crate) raw: RawLazy,
-    pub(crate) _ph: PhantomData<*const T>,
+    pub(crate) _ph: PhantomData<fn() -> T>,
 }
 
 impl<T> Lazy<T> {

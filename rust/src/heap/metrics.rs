@@ -5,7 +5,7 @@
 //! that explains them (eager vs lazy vs lazy+SRO).
 
 /// Counters maintained by the [`Heap`](super::Heap). All sizes are in bytes.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct HeapMetrics {
     /// Objects currently live (payload not yet destroyed).
     pub live_objects: usize,
@@ -20,6 +20,9 @@ pub struct HeapMetrics {
 
     /// Total objects ever allocated.
     pub total_allocs: usize,
+    /// Total objects ever destroyed. Invariant (checked by the sharded-heap
+    /// tests): `total_allocs == total_frees + live_objects`.
+    pub total_frees: usize,
     /// Shallow copies performed by `Copy` (Algorithm 6) — the lazy platform's
     /// actual object copies.
     pub lazy_copies: usize,
@@ -48,6 +51,9 @@ pub struct HeapMetrics {
     pub freezes: usize,
     /// Cross references encountered (edges outside the tree pattern).
     pub cross_refs: usize,
+    /// Cross-shard lineage transplants received (`Heap::extract_into`
+    /// calls that materialized a subgraph in this heap).
+    pub transplants: usize,
 }
 
 impl HeapMetrics {
@@ -69,10 +75,62 @@ impl HeapMetrics {
         self.peak_bytes = self.current_bytes();
     }
 
+    /// Accumulate another heap's counters into this one — the aggregation
+    /// used by [`ShardedHeap`](super::ShardedHeap). All counters (including
+    /// the live gauges) add; `peak_bytes` also adds, so the aggregate peak
+    /// is an upper bound on the true simultaneous global peak (per-shard
+    /// peaks need not coincide in time).
+    pub fn merge(&mut self, o: &HeapMetrics) {
+        // Exhaustive destructuring (no `..` rest pattern): adding a field
+        // to HeapMetrics without aggregating it here is a compile error.
+        let HeapMetrics {
+            live_objects,
+            live_bytes,
+            peak_bytes,
+            live_labels,
+            memo_bytes,
+            total_allocs,
+            total_frees,
+            lazy_copies,
+            eager_copies,
+            deep_copies,
+            thaws,
+            sro_skips,
+            memo_hits,
+            memo_misses,
+            memo_swept,
+            pulls,
+            gets,
+            freezes,
+            cross_refs,
+            transplants,
+        } = *o;
+        self.live_objects += live_objects;
+        self.live_bytes += live_bytes;
+        self.peak_bytes += peak_bytes;
+        self.live_labels += live_labels;
+        self.memo_bytes += memo_bytes;
+        self.total_allocs += total_allocs;
+        self.total_frees += total_frees;
+        self.lazy_copies += lazy_copies;
+        self.eager_copies += eager_copies;
+        self.deep_copies += deep_copies;
+        self.thaws += thaws;
+        self.sro_skips += sro_skips;
+        self.memo_hits += memo_hits;
+        self.memo_misses += memo_misses;
+        self.memo_swept += memo_swept;
+        self.pulls += pulls;
+        self.gets += gets;
+        self.freezes += freezes;
+        self.cross_refs += cross_refs;
+        self.transplants += transplants;
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "live={} objs / {} B (peak {} B), labels={}, copies: lazy={} eager={} thaw={} sro_skips={}, memo: hits={} misses={} swept={}, cross_refs={}",
+            "live={} objs / {} B (peak {} B), labels={}, copies: lazy={} eager={} thaw={} sro_skips={}, memo: hits={} misses={} swept={}, cross_refs={}, transplants={}",
             self.live_objects,
             self.live_bytes,
             self.peak_bytes,
@@ -85,6 +143,7 @@ impl HeapMetrics {
             self.memo_misses,
             self.memo_swept,
             self.cross_refs,
+            self.transplants,
         )
     }
 }
@@ -118,5 +177,33 @@ mod tests {
         let mut m = HeapMetrics::default();
         m.lazy_copies = 3;
         assert!(m.summary().contains("lazy=3"));
+    }
+
+    #[test]
+    fn merge_adds_counters() {
+        let mut a = HeapMetrics {
+            live_objects: 2,
+            total_allocs: 5,
+            total_frees: 3,
+            peak_bytes: 100,
+            transplants: 1,
+            ..Default::default()
+        };
+        let b = HeapMetrics {
+            live_objects: 1,
+            total_allocs: 4,
+            total_frees: 3,
+            peak_bytes: 50,
+            transplants: 2,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.live_objects, 3);
+        assert_eq!(a.total_allocs, 9);
+        assert_eq!(a.total_frees, 6);
+        assert_eq!(a.peak_bytes, 150);
+        assert_eq!(a.transplants, 3);
+        // The alloc/free/live balance survives aggregation.
+        assert_eq!(a.total_allocs, a.total_frees + a.live_objects);
     }
 }

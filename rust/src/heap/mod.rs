@@ -15,17 +15,26 @@
 //! [`CopyMode::Lazy`], and [`CopyMode::LazySro`] (lazy + the
 //! single-reference optimization of Remark 1).
 //!
-//! Threading: heap operations take `&mut Heap` and are serialized; the
-//! population coordinator parallelizes the *numeric* propagate/weight work
-//! (which does not touch the heap) across the thread pool, and batches
-//! tensorizable state through the PJRT runtime. Rust ownership replaces the
-//! paper's "judicious atomics".
+//! Threading: heap operations take `&mut Heap`, so a single heap is
+//! serialized by construction — Rust ownership replaces the paper's
+//! "judicious atomics". Scaling across cores comes from *sharding* instead
+//! of locking: a [`ShardedHeap`] holds K independent `Heap`s, particles are
+//! partitioned contiguously across shards, and per-generation propagation
+//! runs shard-parallel with each worker holding `&mut` to exactly one
+//! shard (no locks, no atomics on the allocate/copy/mutate hot path).
+//! When resampling assigns an offspring to a different shard than its
+//! ancestor, [`Heap::extract_into`] performs a cross-shard lineage
+//! transplant: it walks the frozen reachable subgraph (the Algorithm 7
+//! machinery) and materializes the pulled view in the destination shard,
+//! where it participates in that shard's lazy machinery from then on.
+//! See DESIGN.md for the full threading model.
 
 mod ids;
 mod lazy;
 mod memo;
 mod metrics;
 mod payload;
+mod shard;
 mod slot;
 
 pub use ids::{LabelId, ObjId};
@@ -33,6 +42,7 @@ pub use lazy::{Lazy, RawLazy};
 pub use memo::MemoTable;
 pub use metrics::HeapMetrics;
 pub use payload::{EdgeSlot, Payload};
+pub use shard::{aggregate_metrics, shard_of, shard_ranges, ShardedHeap};
 
 use slot::{Slot, OBJ_OVERHEAD};
 
@@ -313,6 +323,7 @@ impl Heap {
         payload.edges(&mut edges);
         drop(payload);
         self.metrics.live_objects -= 1;
+        self.metrics.total_frees += 1;
         self.metrics.live_bytes -= bytes + OBJ_OVERHEAD;
         for d in edges {
             if d.label != f_v && self.mode.is_lazy() {
@@ -976,6 +987,166 @@ impl Heap {
             obj: u,
             label: ROOT_LABEL,
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Freeze / extract: the cross-shard transplant APIs
+    // ------------------------------------------------------------------
+
+    /// Public `Freeze` entry (Algorithm 7): pull `e` up to date and mark
+    /// the subgraph reachable from it read-only. No-op in eager mode.
+    pub fn freeze_handle<T>(&mut self, e: &Lazy<T>) {
+        let mut raw = e.raw;
+        self.pull_raw(&mut raw, false);
+        self.freeze_raw(raw);
+    }
+
+    /// Cross-shard lineage transplant: materialize the subgraph reachable
+    /// from `e` (which lives in `self`) inside the independent heap `dst`,
+    /// returning a new owning handle valid in `dst`.
+    ///
+    /// In lazy modes the source view is first frozen (Algorithm 7 — so
+    /// later same-shard `deep_copy`s of the ancestor stay O(1)) and the
+    /// *pulled view* is walked, resolving memo redirections per edge
+    /// exactly as reads would; the copy lands in `dst` under a fresh label
+    /// with all tree-pattern edges, so it participates in `dst`'s lazy
+    /// copy-on-write machinery from then on. In eager mode this is a plain
+    /// cross-heap deep copy. Either way the transplant is completed
+    /// eagerly: the two heaps share no objects afterwards, which is what
+    /// makes shard workers lock-free.
+    pub fn extract_into<T>(&mut self, e: &Lazy<T>, dst: &mut Heap) -> Lazy<T> {
+        Lazy::from_raw(self.extract_into_raw(e.raw, dst))
+    }
+
+    pub fn extract_into_raw(&mut self, root: RawLazy, dst: &mut Heap) -> RawLazy {
+        use std::collections::HashMap;
+        if root.is_null() {
+            return RawLazy::NULL;
+        }
+        // Hard assert (pub API): a mode mismatch would corrupt label
+        // reference counting in the destination.
+        assert_eq!(
+            self.mode, dst.mode,
+            "transplant between heaps of different copy modes"
+        );
+        dst.metrics.transplants += 1;
+        if !self.mode.is_lazy() {
+            // Eager mode: the eager_deep_copy walk, allocating into dst.
+            let mut map: HashMap<ObjId, ObjId> = HashMap::new();
+            let mut order: Vec<ObjId> = Vec::new();
+            let mut work = vec![root.obj];
+            let mut edges = Vec::new();
+            while let Some(v) = work.pop() {
+                if map.contains_key(&v) {
+                    continue;
+                }
+                let clone = self
+                    .slot(v)
+                    .payload
+                    .as_ref()
+                    .expect("transplant of destroyed object")
+                    .clone_payload();
+                let u = dst.new_slot(clone, ROOT_LABEL, 0);
+                dst.metrics.eager_copies += 1;
+                map.insert(v, u);
+                order.push(v);
+                edges.clear();
+                self.slot(v).payload.as_ref().unwrap().edges(&mut edges);
+                for d in &edges {
+                    work.push(d.obj);
+                }
+            }
+            for v in order {
+                let u = map[&v];
+                let mut payload = dst.slot_mut(u).payload.take().unwrap();
+                let mut incs: Vec<ObjId> = Vec::new();
+                payload.edges_mut(&mut |d: &mut RawLazy| {
+                    if !d.is_null() {
+                        d.obj = map[&d.obj];
+                        d.label = ROOT_LABEL;
+                        incs.push(d.obj);
+                    }
+                });
+                dst.slot_mut(u).payload = Some(payload);
+                for t in incs {
+                    dst.inc_shared(t);
+                }
+            }
+            let u = map[&root.obj];
+            dst.inc_shared(u);
+            return RawLazy {
+                obj: u,
+                label: ROOT_LABEL,
+            };
+        }
+        // Lazy modes: freeze the source view, then walk the pulled view
+        // (label propagation rule per edge, as in the eager fallback) and
+        // materialize it in dst under a fresh label.
+        let mut e = root;
+        self.pull_raw(&mut e, false);
+        self.freeze_raw(e);
+        let l = dst.new_label(MemoTable::new());
+        let mut map: HashMap<(ObjId, LabelId), ObjId> = HashMap::new();
+        let mut order: Vec<(ObjId, LabelId, ObjId)> = Vec::new();
+        let mut work: Vec<RawLazy> = vec![e];
+        let mut edges = Vec::new();
+        while let Some(mut cur) = work.pop() {
+            self.pull_raw(&mut cur, false);
+            if map.contains_key(&(cur.obj, cur.label)) {
+                continue;
+            }
+            let clone = self
+                .slot(cur.obj)
+                .payload
+                .as_ref()
+                .expect("transplant of destroyed object")
+                .clone_payload();
+            let u = dst.new_slot(clone, l, 0);
+            dst.metrics.eager_copies += 1;
+            map.insert((cur.obj, cur.label), u);
+            order.push((cur.obj, cur.label, u));
+            let f_v = self.slot(cur.obj).label;
+            edges.clear();
+            self.slot(cur.obj).payload.as_ref().unwrap().edges(&mut edges);
+            for d in &edges {
+                let view = if d.label == f_v { cur.label } else { d.label };
+                work.push(RawLazy {
+                    obj: d.obj,
+                    label: view,
+                });
+            }
+        }
+        // Rewire the destination clones' edges to the corresponding
+        // clones; everything is tree-pattern under the fresh label.
+        for (v, view, u) in order {
+            let f_v = self.slot(v).label;
+            let mut payload = dst.slot_mut(u).payload.take().unwrap();
+            let mut incs: Vec<ObjId> = Vec::new();
+            payload.edges_mut(&mut |d: &mut RawLazy| {
+                if d.is_null() {
+                    return;
+                }
+                let child_view = if d.label == f_v { view } else { d.label };
+                let mut resolved = RawLazy {
+                    obj: d.obj,
+                    label: child_view,
+                };
+                self.pull_raw(&mut resolved, false);
+                d.obj = map[&(resolved.obj, resolved.label)];
+                d.label = l;
+                incs.push(d.obj);
+            });
+            dst.slot_mut(u).payload = Some(payload);
+            for t in incs {
+                dst.inc_shared(t);
+            }
+        }
+        let mut start = e;
+        self.pull_raw(&mut start, false);
+        let u = map[&(start.obj, start.label)];
+        dst.inc_shared(u);
+        dst.inc_label(l);
+        RawLazy { obj: u, label: l }
     }
 
     // ------------------------------------------------------------------

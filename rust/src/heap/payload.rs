@@ -14,7 +14,10 @@ use super::lazy::RawLazy;
 /// Object payload data. Implement via [`crate::lazy_fields!`] for structs
 /// with a fixed set of lazy-pointer fields, or manually for containers of
 /// pointers (ragged arrays, stacks of references, ...).
-pub trait Payload: Any {
+///
+/// `Send` is a supertrait so that whole [`Heap`](super::Heap) shards can be
+/// handed to worker threads (one `&mut Heap` per worker, no sharing).
+pub trait Payload: Any + Send {
     /// Clone the payload (shallow: pointer fields are copied bitwise).
     fn clone_payload(&self) -> Box<dyn Payload>;
 

@@ -1,0 +1,343 @@
+//! Sharded lazy-copy heap: K independent [`Heap`]s with a contiguous
+//! particle partition.
+//!
+//! The single-heap platform serializes all heap mutation behind `&mut
+//! Heap`. Sharding removes that bottleneck without introducing locks or
+//! atomics: each worker thread receives `&mut` to exactly one shard, so
+//! the allocate/copy/mutate hot path of particle propagation runs fully
+//! parallel. The only cross-shard traffic is the lineage transplant at
+//! resampling ([`Heap::extract_into`]), performed serially by the
+//! coordinator, and it is the *exception*: systematic resampling keeps
+//! most offspring on their ancestor's shard, where the O(1) lazy
+//! [`Heap::deep_copy`](Heap::deep_copy) applies unchanged.
+//!
+//! Partitioning is contiguous and balanced: with `n` particles over `k`
+//! shards, the first `n % k` shards hold `n/k + 1` particles and the rest
+//! hold `n/k`. With `k = 1` everything degenerates to the single-heap
+//! platform, which the seeded-equivalence tests pin down bit-for-bit.
+
+use super::metrics::HeapMetrics;
+use super::{CopyMode, Heap};
+use std::ops::Range;
+
+/// Contiguous balanced partition of `0..n` into `k` ranges (some possibly
+/// empty when `k > n`).
+pub fn shard_ranges(n: usize, k: usize) -> Vec<Range<usize>> {
+    assert!(k > 0, "at least one shard");
+    let base = n / k;
+    let rem = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for s in 0..k {
+        let len = base + usize::from(s < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Shard owning global particle index `i` under the [`shard_ranges`]
+/// partition of `n` particles over `k` shards.
+pub fn shard_of(n: usize, k: usize, i: usize) -> usize {
+    debug_assert!(i < n, "particle index {i} out of range 0..{n}");
+    let base = n / k;
+    let rem = n % k;
+    let cut = rem * (base + 1);
+    if i < cut {
+        i / (base + 1)
+    } else {
+        rem + (i - cut) / base.max(1)
+    }
+}
+
+/// Aggregate heap counters over any shard slice — shared by
+/// [`ShardedHeap::metrics`] and the SMC engine's per-generation
+/// snapshots (see [`HeapMetrics::merge`] for the peak-bytes caveat).
+pub fn aggregate_metrics(shards: &[Heap]) -> HeapMetrics {
+    let mut m = HeapMetrics::default();
+    for h in shards {
+        m.merge(&h.metrics);
+    }
+    m
+}
+
+/// K independent object heaps plus aggregated instrumentation. The
+/// coordinator owns it; propagation phases borrow the shard slice via
+/// [`ShardedHeap::shards_mut`] and fan it out one-`&mut`-per-worker.
+pub struct ShardedHeap {
+    shards: Vec<Heap>,
+    mode: CopyMode,
+}
+
+impl ShardedHeap {
+    /// Create `k` independent heaps (`k >= 1`) in the given copy mode.
+    pub fn new(mode: CopyMode, k: usize) -> Self {
+        assert!(k > 0, "at least one shard");
+        ShardedHeap {
+            shards: (0..k).map(|_| Heap::new(mode)).collect(),
+            mode,
+        }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    pub fn mode(&self) -> CopyMode {
+        self.mode
+    }
+
+    #[inline]
+    pub fn shards(&self) -> &[Heap] {
+        &self.shards
+    }
+
+    #[inline]
+    pub fn shards_mut(&mut self) -> &mut [Heap] {
+        &mut self.shards
+    }
+
+    #[inline]
+    pub fn shard(&self, s: usize) -> &Heap {
+        &self.shards[s]
+    }
+
+    #[inline]
+    pub fn shard_mut(&mut self, s: usize) -> &mut Heap {
+        &mut self.shards[s]
+    }
+
+    /// Aggregated counters across all shards (see
+    /// [`HeapMetrics::merge`] for the peak-bytes caveat).
+    pub fn metrics(&self) -> HeapMetrics {
+        aggregate_metrics(&self.shards)
+    }
+
+    /// Total live objects across shards.
+    pub fn live_objects(&self) -> usize {
+        self.shards.iter().map(|h| h.live_objects()).sum()
+    }
+
+    /// Sweep every shard's memo tables.
+    pub fn sweep_memos(&mut self) {
+        for h in &mut self.shards {
+            h.sweep_memos();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::heap::Lazy;
+    use crate::lazy_fields;
+
+    #[derive(Clone)]
+    struct Node {
+        value: i64,
+        next: Lazy<Node>,
+    }
+    lazy_fields!(Node: next);
+
+    fn build_chain(heap: &mut Heap, len: usize) -> Lazy<Node> {
+        let mut head = heap.alloc(Node {
+            value: 0,
+            next: Lazy::NULL,
+        });
+        for i in 1..len {
+            let new = heap.alloc(Node {
+                value: i as i64,
+                next: head,
+            });
+            heap.release(head);
+            head = new;
+        }
+        head
+    }
+
+    fn chain_values(heap: &mut Heap, head: Lazy<Node>) -> Vec<i64> {
+        let mut out = Vec::new();
+        let mut cur = head;
+        while !cur.is_null() {
+            out.push(heap.read(&mut cur, |n| n.value));
+            cur = heap.read_ptr(&mut cur, |n| n.next);
+        }
+        out
+    }
+
+    #[test]
+    fn partition_covers_and_balances() {
+        for n in [0usize, 1, 5, 7, 64, 97] {
+            for k in [1usize, 2, 3, 4, 9, 130] {
+                let ranges = shard_ranges(n, k);
+                assert_eq!(ranges.len(), k);
+                // Contiguous cover of 0..n.
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+                assert_eq!(next, n);
+                // Balance: sizes differ by at most one.
+                let sizes: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
+                let (mn, mx) = (
+                    *sizes.iter().min().unwrap(),
+                    *sizes.iter().max().unwrap(),
+                );
+                assert!(mx - mn <= 1, "n={n} k={k}: sizes {sizes:?}");
+                // shard_of agrees with the ranges.
+                for i in 0..n {
+                    let s = shard_of(n, k, i);
+                    assert!(
+                        ranges[s].contains(&i),
+                        "n={n} k={k} i={i}: shard_of says {s}, ranges {ranges:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_is_degenerate() {
+        assert_eq!(shard_ranges(10, 1), vec![0..10]);
+        for i in 0..10 {
+            assert_eq!(shard_of(10, 1, i), 0);
+        }
+    }
+
+    #[test]
+    fn transplant_chain_all_modes() {
+        for mode in CopyMode::ALL {
+            let mut src = Heap::new(mode);
+            let mut dst = Heap::new(mode);
+            let head = build_chain(&mut src, 20);
+            let want = chain_values(&mut src, head);
+
+            let moved = src.extract_into(&head, &mut dst);
+            assert_eq!(dst.metrics.transplants, 1);
+            assert_eq!(
+                chain_values(&mut dst, moved),
+                want,
+                "{mode:?}: transplanted values differ"
+            );
+            // Source untouched and still readable.
+            assert_eq!(chain_values(&mut src, head), want);
+
+            // The transplanted lineage participates in dst's lazy
+            // machinery: deep-copy it there and mutate the copy.
+            let mut copy = dst.deep_copy(&moved);
+            dst.mutate_root(&mut copy, |n| n.value = -1);
+            let mut expect = want.clone();
+            expect[0] = -1;
+            assert_eq!(chain_values(&mut dst, copy), expect);
+            assert_eq!(chain_values(&mut dst, moved), want, "original intact");
+
+            dst.release(copy);
+            dst.release(moved);
+            src.release(head);
+            src.sweep_memos();
+            dst.sweep_memos();
+            assert_eq!(src.live_objects(), 0, "{mode:?}: src leaked");
+            assert_eq!(dst.live_objects(), 0, "{mode:?}: dst leaked");
+            // Alloc/free balance on both sides of the transplant.
+            for h in [&src, &dst] {
+                assert_eq!(
+                    h.metrics.total_allocs,
+                    h.metrics.total_frees + h.metrics.live_objects
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transplant_resolves_pending_lazy_copies() {
+        // Mutate a lazy copy so the source label's memo holds
+        // redirections, then transplant the *copy*: the pulled view (with
+        // the mutation) must land in dst.
+        let mut src = Heap::new(CopyMode::LazySro);
+        let mut dst = Heap::new(CopyMode::LazySro);
+        let head = build_chain(&mut src, 10);
+        let mut copy = src.deep_copy(&head);
+        src.mutate_root(&mut copy, |n| n.value = 100);
+        // Descend one node so a memo redirection exists mid-chain.
+        let mut second = src.get_field(&copy, |n| &mut n.next);
+        src.mutate(&mut second, |n| n.value = 200);
+
+        let mut want = chain_values(&mut src, copy);
+        assert_eq!(want[0], 100);
+        assert_eq!(want[1], 200);
+
+        let moved = src.extract_into(&copy, &mut dst);
+        assert_eq!(chain_values(&mut dst, moved), want);
+
+        // Mutating the transplant does not touch the source.
+        let mut dst_head = moved;
+        dst.mutate_root(&mut dst_head, |n| n.value = -5);
+        want[0] = -5;
+        assert_eq!(chain_values(&mut dst, dst_head), want);
+        want[0] = 100;
+        assert_eq!(chain_values(&mut src, copy), want);
+
+        dst.release(dst_head);
+        src.release(copy);
+        src.release(head);
+        src.sweep_memos();
+        dst.sweep_memos();
+        assert_eq!(src.live_objects(), 0);
+        assert_eq!(dst.live_objects(), 0);
+    }
+
+    #[test]
+    fn transplant_preserves_internal_sharing() {
+        // A diamond: two fields of the root alias the same tail node. The
+        // transplant must keep one tail object, not duplicate it.
+        #[derive(Clone)]
+        struct Pair {
+            a: Lazy<Node>,
+            b: Lazy<Node>,
+        }
+        lazy_fields!(Pair: a, b);
+
+        let mut src = Heap::new(CopyMode::Eager);
+        let mut dst = Heap::new(CopyMode::Eager);
+        let tail = src.alloc(Node {
+            value: 7,
+            next: Lazy::NULL,
+        });
+        let tail2 = src.clone_handle(&tail);
+        let root = src.alloc(Pair { a: tail, b: tail2 });
+        // The stored edges own their counts; drop the stack handles.
+        src.release(tail);
+        src.release(tail2);
+        assert_eq!(src.live_objects(), 2);
+
+        let moved = src.extract_into(&root, &mut dst);
+        assert_eq!(dst.live_objects(), 2, "shared tail must stay shared");
+        dst.release(moved);
+        src.release(root);
+        assert_eq!(src.live_objects(), 0);
+        assert_eq!(dst.live_objects(), 0);
+    }
+
+    #[test]
+    fn sharded_heap_aggregates_metrics() {
+        let mut sh = ShardedHeap::new(CopyMode::LazySro, 3);
+        assert_eq!(sh.k(), 3);
+        let a = build_chain(sh.shard_mut(0), 4);
+        let b = build_chain(sh.shard_mut(2), 6);
+        let m = sh.metrics();
+        assert_eq!(m.live_objects, 10);
+        assert_eq!(m.total_allocs, 10);
+        assert_eq!(m.total_allocs, m.total_frees + m.live_objects);
+        assert_eq!(sh.live_objects(), 10);
+        sh.shard_mut(0).release(a);
+        sh.shard_mut(2).release(b);
+        sh.sweep_memos();
+        let m = sh.metrics();
+        assert_eq!(m.live_objects, 0);
+        assert_eq!(m.total_allocs, m.total_frees);
+    }
+}

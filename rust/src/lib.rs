@@ -3,8 +3,11 @@
 //!
 //! A from-scratch reproduction of Murray (2020), "Lazy object copy as a
 //! platform for population-based probabilistic programming", as a
-//! three-layer Rust + JAX + Pallas stack. See DESIGN.md for the system
-//! inventory and EXPERIMENTS.md for the paper-vs-measured record.
+//! three-layer Rust + JAX + Pallas stack, extended with a sharded heap
+//! ([`heap::ShardedHeap`]) that runs particle propagation shard-parallel
+//! with cross-shard lineage transplant at resampling. See `DESIGN.md`
+//! (this directory) for the system inventory, the shard/transplant
+//! architecture, and the threading model.
 
 pub mod bench;
 pub mod cli;

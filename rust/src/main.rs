@@ -12,7 +12,7 @@
 use lazycow::bench::{human_bytes, CellResult};
 use lazycow::cli::{Cli, CliError};
 use lazycow::config::{parse_config_text, Model, RunConfig, Task};
-use lazycow::heap::{CopyMode, Heap};
+use lazycow::heap::{CopyMode, Heap, ShardedHeap};
 use lazycow::models::run_model;
 use lazycow::pool::ThreadPool;
 use lazycow::runtime::{BatchKalman, XlaRuntime};
@@ -35,6 +35,7 @@ fn cli() -> Cli {
     .flag("steps", "", "generations T (default: model preset)")
     .flag("seed", "20200401", "PRNG seed")
     .flag("threads", "0", "worker threads (0 = all cores)")
+    .flag("shards", "0", "heap shards K for parallel propagation (0 = match threads)")
     .flag("reps", "5", "benchmark repetitions")
     .flag("scale", "default", "scale preset: default|paper")
     .flag("config", "", "config file (key = value lines)")
@@ -72,6 +73,9 @@ fn build_config(args: &lazycow::cli::Args) -> Result<RunConfig, String> {
     }
     if let Some(t) = args.get_usize("threads") {
         cfg.threads = t;
+    }
+    if let Some(s) = args.get_usize("shards") {
+        cfg.shards = s;
     }
     cfg.use_xla = !args.get_bool("no-xla");
     cfg.series = args.get_bool("series");
@@ -117,13 +121,33 @@ impl Backend {
             kalman: self.kalman.as_ref(),
         }
     }
+
+    /// Resolve the shard count K. Auto mode (`--shards 0`) matches the
+    /// worker thread count — except when a compiled Kalman artifact is
+    /// loaded: the batched XLA path only runs with a single shard (K > 1
+    /// propagates per shard on the CPU oracle), so auto keeps K = 1
+    /// rather than silently disabling the artifact. An explicit
+    /// `--shards K` always wins.
+    fn choose_shards(&self, cfg: &RunConfig) -> usize {
+        let k = cfg.resolved_shards(self.pool.n_threads());
+        if k > 1 && cfg.shards == 0 && self.kalman.is_some() {
+            eprintln!(
+                "[lazycow] kalman artifact active: auto shards -> K=1 \
+                 (pass --shards to shard; K>1 uses the CPU oracle per shard)"
+            );
+            1
+        } else {
+            k
+        }
+    }
 }
 
 fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
     let cfg = build_config(args)?;
     let backend = Backend::new(cfg.threads, cfg.use_xla, args.get_or("artifacts", "artifacts"));
-    let mut heap = Heap::new(cfg.mode);
-    println!("# {}", cfg.label());
+    let k = backend.choose_shards(&cfg);
+    let mut heap = ShardedHeap::new(cfg.mode, k);
+    println!("# {} K={k}", cfg.label());
     let r = run_model(&cfg, &mut heap, &backend.ctx());
     println!(
         "log_evidence={:.4} posterior_mean={:.4} wall={:.3}s peak={} attempts={}",
@@ -133,7 +157,7 @@ fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
         human_bytes(r.peak_bytes as f64),
         r.attempts
     );
-    println!("heap: {}", heap.metrics.summary());
+    println!("heap: {}", heap.metrics().summary());
     if cfg.series {
         println!("t\telapsed_s\tlive_bytes\tpeak_bytes\tlive_objects\tess");
         for s in &r.series {
@@ -165,12 +189,18 @@ fn figure_cells(task: Task, args: &lazycow::cli::Args) -> Result<Vec<CellResult>
                 cfg.n_steps = if task == Task::Inference { t_inf } else { t_sim };
             }
             cfg.seed = base_seed;
+            // Figures reproduce the paper's single-heap baselines, whose
+            // peak-memory numbers are exact only at K = 1 (the K > 1
+            // aggregate is a sum of per-shard peaks and would vary with
+            // the core count). An explicit --shards K opts in.
+            cfg.shards = args.get_usize("shards").unwrap_or(0);
+            let k = if cfg.shards == 0 { 1 } else { cfg.shards };
             let name = format!("{}/{}", model.name(), mode.name());
             let backend_ref = &backend;
             let cell = lazycow::bench::run_cell(&name, reps, |rep| {
                 let mut c = cfg.clone();
                 c.seed = base_seed.wrapping_add(rep as u64); // one seed per rep (§4)
-                let mut heap = Heap::new(c.mode);
+                let mut heap = ShardedHeap::new(c.mode, k);
                 let r = run_model(&c, &mut heap, &backend_ref.ctx());
                 Some(r.peak_bytes as f64)
             });
@@ -215,7 +245,11 @@ fn cmd_fig7(args: &lazycow::cli::Args) -> Result<(), String> {
                 cfg.n_particles = n;
                 cfg.n_steps = t_inf;
             }
-            let mut heap = Heap::new(mode);
+            // Single-heap baseline by default (exact peak memory); an
+            // explicit --shards K opts in to the sharded engine.
+            cfg.shards = args.get_usize("shards").unwrap_or(0);
+            let k = if cfg.shards == 0 { 1 } else { cfg.shards };
+            let mut heap = ShardedHeap::new(mode, k);
             let r = run_model(&cfg, &mut heap, &backend.ctx());
             for s in &r.series {
                 println!(

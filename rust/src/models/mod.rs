@@ -17,50 +17,61 @@ pub use rbpf::Rbpf;
 pub use vbd::Vbd;
 
 use crate::config::{Model, RunConfig};
-use crate::heap::Heap;
-use crate::smc::{run_filter, run_particle_gibbs, FilterResult, Method, StepCtx};
+use crate::heap::ShardedHeap;
+use crate::smc::{run_filter_shards, run_particle_gibbs_shards, FilterResult, Method, StepCtx};
 
 /// Seed for synthetic data generation — fixed so every run of a given
 /// problem sees the same data, independent of the inference seed.
 pub const DATA_SEED: u64 = 0xDA7A_5EED;
 
 /// Run the configured (problem, task, mode) cell with the method the
-/// paper's §4 pairs with that problem. Particle Gibbs (VBD) aggregates its
-/// iterations into one result (series concatenated, evidence = last
-/// iteration's).
-pub fn run_model(cfg: &RunConfig, heap: &mut Heap, ctx: &StepCtx) -> FilterResult {
+/// paper's §4 pairs with that problem, over the given sharded heap (the
+/// shard count is fixed by the caller when constructing the
+/// [`ShardedHeap`]; outputs are identical for every shard count).
+/// Particle Gibbs (VBD) aggregates its iterations into one result (series
+/// concatenated, evidence = last iteration's).
+pub fn run_model(cfg: &RunConfig, heap: &mut ShardedHeap, ctx: &StepCtx) -> FilterResult {
+    // A nonzero cfg.shards is authoritative: silently running a different
+    // K than the config names would make sweep records lie.
+    assert!(
+        cfg.shards == 0 || cfg.shards == heap.k(),
+        "RunConfig.shards = {} but the ShardedHeap has K = {}",
+        cfg.shards,
+        heap.k()
+    );
+    let shards = heap.shards_mut();
     match cfg.model {
         Model::Rbpf => {
             let m = Rbpf::synthetic(cfg.n_steps, DATA_SEED);
-            run_filter(&m, cfg, heap, ctx, Method::Bootstrap)
+            run_filter_shards(&m, cfg, shards, ctx, Method::Bootstrap)
         }
         Model::Pcfg => {
             let m = Pcfg::synthetic(cfg.n_steps, DATA_SEED);
-            run_filter(&m, cfg, heap, ctx, Method::Auxiliary)
+            run_filter_shards(&m, cfg, shards, ctx, Method::Auxiliary)
         }
         Model::Vbd => {
             let m = Vbd::synthetic(cfg.n_steps, DATA_SEED);
             if cfg.task == crate::config::Task::Inference {
-                let results = run_particle_gibbs(&m, cfg, heap, ctx);
+                let results = run_particle_gibbs_shards(&m, cfg, shards, ctx);
                 aggregate_pg(results)
             } else {
-                run_filter(&m, cfg, heap, ctx, Method::Bootstrap)
+                run_filter_shards(&m, cfg, shards, ctx, Method::Bootstrap)
             }
         }
         Model::Mot => {
             let m = Mot::synthetic(cfg.n_steps, DATA_SEED);
-            run_filter(&m, cfg, heap, ctx, Method::Bootstrap)
+            run_filter_shards(&m, cfg, shards, ctx, Method::Bootstrap)
         }
         Model::Crbd => {
             // CRBD's horizon is fixed by the tree: scale tips so that the
             // event count tracks the configured T (paper: 173 events).
             let tips = (cfg.n_steps + 1).max(3);
             let m = Crbd::synthetic(tips, DATA_SEED);
-            run_filter(&m, cfg, heap, ctx, Method::Alive)
+            run_filter_shards(&m, cfg, shards, ctx, Method::Alive)
         }
         Model::List => {
             let m = ListModel::synthetic(cfg.n_steps, DATA_SEED);
-            run_filter(&m, cfg, heap, ctx, Method::Bootstrap)
+            run_filter_shards(&m, cfg, shards, ctx, Method::Bootstrap)
         }
     }
 }
@@ -110,7 +121,7 @@ mod tests {
                     cfg.n_steps = 12;
                     cfg.pg_iterations = 2;
                     cfg.seed = 99;
-                    let mut heap = Heap::new(mode);
+                    let mut heap = ShardedHeap::new(mode, 1);
                     let r = run_model(&cfg, &mut heap, &ctx);
                     assert_eq!(
                         heap.live_objects(),
@@ -132,6 +143,50 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Shard-count invariance across the full model matrix: every
+    /// problem's dispatch path (bootstrap, auxiliary, alive, particle
+    /// Gibbs) must produce bit-identical inference output with K = 3
+    /// shards as with K = 1, with all shards cleaned up and the
+    /// alloc/free balance intact.
+    #[test]
+    fn full_experiment_matrix_shard_invariant() {
+        let pool = ThreadPool::new(3);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+        };
+        for model in Model::EVAL {
+            let mut outs = Vec::new();
+            for k in [1usize, 3] {
+                let mut cfg = RunConfig::for_model(model, Task::Inference, CopyMode::LazySro);
+                cfg.n_particles = 24;
+                cfg.n_steps = 12;
+                cfg.pg_iterations = 2;
+                cfg.seed = 99;
+                let mut heap = ShardedHeap::new(CopyMode::LazySro, k);
+                let r = run_model(&cfg, &mut heap, &ctx);
+                assert_eq!(heap.live_objects(), 0, "{model:?} K={k} leaked");
+                let m = heap.metrics();
+                assert_eq!(
+                    m.total_allocs,
+                    m.total_frees + m.live_objects,
+                    "{model:?} K={k}: alloc/free balance"
+                );
+                outs.push((r.log_evidence, r.posterior_mean));
+            }
+            assert_eq!(
+                outs[0].0.to_bits(),
+                outs[1].0.to_bits(),
+                "{model:?}: K=1 vs K=3 evidence"
+            );
+            assert_eq!(
+                outs[0].1.to_bits(),
+                outs[1].1.to_bits(),
+                "{model:?}: K=1 vs K=3 posterior mean"
+            );
         }
     }
 }

@@ -132,6 +132,7 @@ impl SmcModel for Rbpf {
 
     /// Batched generation: serial heap reads → batched Kalman (XLA artifact
     /// or CPU oracle, parallelized by the pool) → serial heap writes.
+    #[allow(clippy::too_many_arguments)]
     fn step_population(
         &self,
         heap: &mut Heap,
@@ -139,6 +140,7 @@ impl SmcModel for Rbpf {
         t: usize,
         seed: u64,
         observe: bool,
+        base: usize,
         ctx: &StepCtx,
     ) -> Vec<f64> {
         let n = states.len();
@@ -167,7 +169,7 @@ impl SmcModel for Rbpf {
             let xi_prev: Vec<f64> = xis_ptr.clone();
             let results: &mut Vec<(f64, f64)> = &mut vec![(0.0, 0.0); n];
             ctx.pool.map_indexed(results, |i| {
-                let mut rng = particle_rng(seed, t, i);
+                let mut rng = particle_rng(seed, t, base + i);
                 let xi = xi_dynamics(xi_prev[i], t) + rng.gaussian(0.0, Q_XI.sqrt());
                 let ll = match obs_pair {
                     Some((y1, _)) => normal_lpdf(y1, xi * xi / 20.0, R_XI.sqrt()),
@@ -278,7 +280,7 @@ mod tests {
             .map(|i| model.init(&mut heap_b, &mut particle_rng(7, 0, i)))
             .collect();
         for t in 1..=5 {
-            let wa = model.step_population(&mut heap_a, &mut sa, t, 7, true, &ctx(&pool));
+            let wa = model.step_population(&mut heap_a, &mut sa, t, 7, true, 0, &ctx(&pool));
             let mut wb = Vec::new();
             for (i, s) in sb.iter_mut().enumerate() {
                 let mut rng = particle_rng(7, t, i);

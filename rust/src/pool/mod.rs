@@ -4,13 +4,17 @@
 //! and weighting across threads with static scheduling, one bound per
 //! core). [`ThreadPool::for_ranges`] runs `f(start, end)` on contiguous
 //! chunks, one per worker, and joins — the numeric phase of each
-//! generation. Heap mutation phases remain serialized on the caller (see
-//! the threading note in [`crate::heap`]).
+//! generation. [`ThreadPool::for_shards`] is the scoped executor behind
+//! the sharded heap: it hands each worker exclusive `&mut` access to one
+//! element of a slice (e.g. one [`Heap`](crate::heap::Heap) shard plus its
+//! particle chunk), which is what makes the allocate/copy/mutate hot path
+//! run lock-free across cores (see the threading note in [`crate::heap`]).
 //!
 //! Implementation: scoped threads (`std::thread::scope`) spawned per call.
 //! For the per-generation batch sizes of the evaluation models the spawn
 //! cost is noise next to the numeric work, and the scope keeps borrows
-//! safe without lifetime erasure.
+//! safe without lifetime erasure. All three executors run chunk 0 on the
+//! calling thread, so exactly `chunks - 1` threads are spawned per call.
 
 use std::thread;
 
@@ -64,7 +68,9 @@ impl ThreadPool {
         });
     }
 
-    /// `out[i] = f(i)` in parallel over disjoint chunks.
+    /// `out[i] = f(i)` in parallel over disjoint chunks. Like
+    /// [`ThreadPool::for_ranges`], chunk 0 runs on the calling thread and
+    /// only `chunks - 1` threads are spawned.
     pub fn map_indexed<T: Send, F>(&self, out: &mut [T], f: F)
     where
         F: Fn(usize) -> T + Send + Sync,
@@ -81,13 +87,63 @@ impl ThreadPool {
         }
         let per = out.len().div_ceil(chunks);
         thread::scope(|s| {
-            for (c, chunk) in out.chunks_mut(per).enumerate() {
+            let mut iter = out.chunks_mut(per).enumerate();
+            let first = iter.next();
+            for (c, chunk) in iter {
                 let f = &f;
                 s.spawn(move || {
                     for (j, o) in chunk.iter_mut().enumerate() {
                         *o = f(c * per + j);
                     }
                 });
+            }
+            // Run the first chunk on the calling thread.
+            if let Some((_, chunk)) = first {
+                for (j, o) in chunk.iter_mut().enumerate() {
+                    *o = f(j);
+                }
+            }
+        });
+    }
+
+    /// Scoped shard executor: run `f(index, &mut item)` for every element
+    /// of `items`, with each element visited by exactly one worker —
+    /// exclusive `&mut` access, no locks. Elements are distributed in
+    /// contiguous chunks (static scheduling); chunk 0 runs on the calling
+    /// thread. This is how per-generation particle propagation fans out
+    /// over `&mut [Heap]` shards.
+    pub fn for_shards<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Send + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let workers = self.n_threads.min(n);
+        if workers == 1 {
+            for (i, it) in items.iter_mut().enumerate() {
+                f(i, it);
+            }
+            return;
+        }
+        let per = n.div_ceil(workers);
+        thread::scope(|s| {
+            let mut iter = items.chunks_mut(per).enumerate();
+            let first = iter.next();
+            for (c, chunk) in iter {
+                let f = &f;
+                s.spawn(move || {
+                    for (j, it) in chunk.iter_mut().enumerate() {
+                        f(c * per + j, it);
+                    }
+                });
+            }
+            if let Some((_, chunk)) = first {
+                for (j, it) in chunk.iter_mut().enumerate() {
+                    f(j, it);
+                }
             }
         });
     }
@@ -143,5 +199,81 @@ mod tests {
     fn default_parallelism_nonzero() {
         let pool = ThreadPool::new(0);
         assert!(pool.n_threads() >= 1);
+    }
+
+    /// Spawn-count assertion: with `chunks` chunks, exactly `chunks - 1`
+    /// threads are spawned — chunk 0 runs on the calling thread, for both
+    /// `for_ranges` and `map_indexed` (which used to spawn for chunk 0).
+    #[test]
+    fn chunk_zero_runs_on_calling_thread() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let main_id = thread::current().id();
+        let pool = ThreadPool::new(4);
+
+        // map_indexed: 4 items, 4 chunks of 1 — distinct thread per chunk.
+        let mut ids = vec![None; 4];
+        pool.map_indexed(&mut ids, |_| Some(thread::current().id()));
+        assert_eq!(ids[0], Some(main_id), "map_indexed chunk 0 not inline");
+        let distinct: HashSet<_> = ids.iter().flatten().collect();
+        assert_eq!(distinct.len(), 4, "one worker per chunk");
+        let spawned = ids.iter().flatten().filter(|id| **id != main_id).count();
+        assert_eq!(spawned, 3, "exactly chunks - 1 threads spawned");
+
+        // for_ranges: same contract.
+        let seen: Mutex<Vec<(usize, thread::ThreadId)>> = Mutex::new(Vec::new());
+        pool.for_ranges(4, |s, _| {
+            seen.lock().unwrap().push((s, thread::current().id()));
+        });
+        let seen = seen.into_inner().unwrap();
+        assert_eq!(seen.len(), 4);
+        let zero = seen.iter().find(|(s, _)| *s == 0).unwrap();
+        assert_eq!(zero.1, main_id, "for_ranges chunk 0 not inline");
+        let distinct: HashSet<_> = seen.iter().map(|(_, id)| id).collect();
+        assert_eq!(distinct.len(), 4);
+    }
+
+    #[test]
+    fn for_shards_exclusive_and_inline_first_chunk() {
+        use std::collections::HashSet;
+        let main_id = thread::current().id();
+        let pool = ThreadPool::new(2);
+        // 4 items over 2 workers: chunks of 2; items 0-1 on the caller.
+        let mut items: Vec<(usize, u64, Option<thread::ThreadId>)> =
+            (0..4).map(|i| (i, 0, None)).collect();
+        pool.for_shards(&mut items, |i, it| {
+            assert_eq!(it.0, i, "index/item alignment");
+            it.1 = (i as u64 + 1) * 10;
+            it.2 = Some(thread::current().id());
+        });
+        for (i, it) in items.iter().enumerate() {
+            assert_eq!(it.1, (i as u64 + 1) * 10);
+        }
+        assert_eq!(items[0].2, Some(main_id));
+        assert_eq!(items[1].2, Some(main_id));
+        assert_eq!(items[2].2, items[3].2);
+        assert_ne!(items[2].2, Some(main_id));
+        let distinct: HashSet<_> = items.iter().filter_map(|it| it.2).collect();
+        assert_eq!(distinct.len(), 2, "one worker per contiguous chunk");
+    }
+
+    #[test]
+    fn for_shards_single_worker_and_empty() {
+        let pool = ThreadPool::new(1);
+        let mut items = vec![0u32; 5];
+        pool.for_shards(&mut items, |i, it| *it = i as u32 + 1);
+        assert_eq!(items, vec![1, 2, 3, 4, 5]);
+        let mut empty: Vec<u32> = Vec::new();
+        ThreadPool::new(4).for_shards(&mut empty, |_, _| panic!("no items"));
+    }
+
+    #[test]
+    fn for_shards_more_items_than_workers() {
+        let pool = ThreadPool::new(3);
+        let mut items: Vec<usize> = vec![0; 10];
+        pool.for_shards(&mut items, |i, it| *it = i * i);
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
     }
 }

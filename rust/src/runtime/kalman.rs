@@ -13,10 +13,9 @@
 //! is the f64 oracle built on [`crate::ppl::KalmanState`], used as the
 //! fallback path and in differential tests.
 
-use super::{Artifact, XlaRuntime, BATCH};
+use super::{Artifact, Result, XlaRuntime, BATCH};
 use crate::linalg::Mat;
 use crate::ppl::KalmanState;
-use anyhow::Result;
 
 /// Dimension of the linear substate (fixed by the artifact).
 pub const DZ: usize = 3;

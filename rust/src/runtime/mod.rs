@@ -3,9 +3,15 @@
 //! The build-time Python layer (`python/compile/aot.py`) lowers the JAX/
 //! Pallas numeric step functions to **HLO text** (the interchange format —
 //! xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos) into
-//! `artifacts/*.hlo.txt`. This module compiles them once on a PJRT CPU
-//! client and executes them from the coordinator's hot path. Python never
-//! runs at inference time.
+//! `artifacts/*.hlo.txt`. With the `xla` cargo feature enabled (requires
+//! vendoring the `xla` crate and its `libxla_extension` runtime), this
+//! module compiles them once on a PJRT CPU client and executes them from
+//! the coordinator's hot path; Python never runs at inference time.
+//!
+//! The default build is **dependency-free**: a stub with the identical API
+//! reports no artifacts, so every caller falls back to the f64 CPU oracle
+//! path ([`batch_kalman_cpu`]) — which is also the reference the artifact
+//! is differentially tested against.
 //!
 //! Artifacts are lowered for a fixed batch size [`BATCH`]; the runtime
 //! processes particle populations in padded chunks.
@@ -14,96 +20,185 @@ mod kalman;
 
 pub use kalman::{batch_kalman_cpu, BatchKalman, KalmanParams, DZ};
 
-use anyhow::{anyhow, Context, Result};
-use std::path::{Path, PathBuf};
-
 /// Batch size artifacts are lowered with (must match `python/compile/aot.py`).
 pub const BATCH: usize = 256;
 
-/// A compiled XLA executable loaded from HLO text.
-pub struct Artifact {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+/// Runtime error type (local, so the crate stays dependency-free).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
 
-/// PJRT CPU client + artifact loader.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-}
-
-impl XlaRuntime {
-    /// Create a CPU runtime reading artifacts from `dir`.
-    pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(XlaRuntime {
-            client,
-            dir: dir.as_ref().to_path_buf(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn artifact_path(&self, name: &str) -> PathBuf {
-        self.dir.join(format!("{name}.hlo.txt"))
-    }
-
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.artifact_path(name).exists()
-    }
-
-    /// Load and compile an artifact by name (`artifacts/<name>.hlo.txt`).
-    pub fn load(&self, name: &str) -> Result<Artifact> {
-        let path = self.artifact_path(name);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile artifact {name}"))?;
-        Ok(Artifact {
-            exe,
-            name: name.to_string(),
-        })
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
     }
 }
 
-impl Artifact {
-    /// Execute with f32 inputs of the given shapes; returns the flattened
-    /// f32 outputs (the jax side lowers with `return_tuple=True`).
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let lit = xla::Literal::vec1(data);
-            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
-                lit
-            } else {
-                lit.reshape(dims)
-                    .with_context(|| format!("reshape input to {dims:?}"))?
-            };
-            literals.push(lit);
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    //! Real PJRT-backed implementation (feature `xla`).
+    use super::{Result, RuntimeError};
+    use std::path::{Path, PathBuf};
+
+    /// A compiled XLA executable loaded from HLO text.
+    pub struct Artifact {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    /// PJRT CPU client + artifact loader.
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+    }
+
+    impl XlaRuntime {
+        /// Create a CPU runtime reading artifacts from `dir`.
+        pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError(format!("create PJRT CPU client: {e}")))?;
+            Ok(XlaRuntime {
+                client,
+                dir: dir.as_ref().to_path_buf(),
+            })
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()
-            .context("fetch result")?;
-        let parts = result.to_tuple().context("untuple result")?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f32>().context("read f32 output")?);
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        Ok(out)
+
+        pub fn artifact_path(&self, name: &str) -> PathBuf {
+            self.dir.join(format!("{name}.hlo.txt"))
+        }
+
+        pub fn has_artifact(&self, name: &str) -> bool {
+            self.artifact_path(name).exists()
+        }
+
+        /// Load and compile an artifact by name (`artifacts/<name>.hlo.txt`).
+        pub fn load(&self, name: &str) -> Result<Artifact> {
+            let path = self.artifact_path(name);
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| RuntimeError("non-utf8 path".into()))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| RuntimeError(format!("parse HLO text {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| RuntimeError(format!("compile artifact {name}: {e}")))?;
+            Ok(Artifact {
+                exe,
+                name: name.to_string(),
+            })
+        }
+    }
+
+    impl Artifact {
+        /// Execute with f32 inputs of the given shapes; returns the
+        /// flattened f32 outputs (the jax side lowers with
+        /// `return_tuple=True`).
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let lit = xla::Literal::vec1(data);
+                let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                    lit
+                } else {
+                    lit.reshape(dims)
+                        .map_err(|e| RuntimeError(format!("reshape input to {dims:?}: {e}")))?
+                };
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| RuntimeError(format!("execute {}: {e}", self.name)))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| RuntimeError(format!("fetch result: {e}")))?;
+            let parts = result
+                .to_tuple()
+                .map_err(|e| RuntimeError(format!("untuple result: {e}")))?;
+            let mut out = Vec::with_capacity(parts.len());
+            for p in parts {
+                out.push(
+                    p.to_vec::<f32>()
+                        .map_err(|e| RuntimeError(format!("read f32 output: {e}")))?,
+                );
+            }
+            Ok(out)
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod pjrt {
+    //! Dependency-free stub (the default build). Same API surface;
+    //! reports no artifacts so every caller takes the CPU oracle path.
+    use super::{Result, RuntimeError};
+    use std::path::{Path, PathBuf};
+
+    /// Placeholder for a compiled executable; cannot be constructed
+    /// without the `xla` feature.
+    pub struct Artifact {
+        pub name: String,
+    }
+
+    /// Stub runtime: comes up, but exposes no artifacts.
+    pub struct XlaRuntime {
+        dir: PathBuf,
+    }
+
+    impl XlaRuntime {
+        pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
+            Ok(XlaRuntime {
+                dir: dir.as_ref().to_path_buf(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            "cpu-stub (xla feature disabled)".to_string()
+        }
+
+        pub fn artifact_path(&self, name: &str) -> PathBuf {
+            self.dir.join(format!("{name}.hlo.txt"))
+        }
+
+        /// Always false: without the `xla` feature an artifact on disk
+        /// cannot be executed, so it is reported as absent and callers
+        /// fall back to the CPU oracle.
+        pub fn has_artifact(&self, _name: &str) -> bool {
+            false
+        }
+
+        pub fn load(&self, name: &str) -> Result<Artifact> {
+            Err(RuntimeError(format!(
+                "XLA/PJRT support not compiled in (enable the `xla` feature); \
+                 cannot load artifact {name}"
+            )))
+        }
+    }
+
+    impl Artifact {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+            Err(RuntimeError(
+                "XLA/PJRT support not compiled in (enable the `xla` feature)".into(),
+            ))
+        }
+    }
+}
+
+pub use pjrt::{Artifact, XlaRuntime};
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    #[allow(dead_code)]
     pub(crate) fn artifacts_dir() -> std::path::PathBuf {
         // Tests run from the crate root.
         std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -111,7 +206,7 @@ mod tests {
 
     #[test]
     fn client_comes_up() {
-        let rt = XlaRuntime::cpu("artifacts").expect("PJRT CPU client");
+        let rt = XlaRuntime::cpu("artifacts").expect("runtime client");
         assert!(!rt.platform().is_empty());
     }
 
@@ -122,13 +217,14 @@ mod tests {
         assert!(rt.load("definitely_not_there").is_err());
     }
 
-    /// Full round trip when the build has produced artifacts (skips
-    /// otherwise; `make artifacts` creates them).
+    /// Full round trip when the build has produced artifacts and the
+    /// `xla` feature is enabled (skips otherwise; `make artifacts`
+    /// creates them).
     #[test]
     fn logpdf_artifact_round_trip() {
         let rt = XlaRuntime::cpu(artifacts_dir()).unwrap();
         if !rt.has_artifact("logpdf") {
-            eprintln!("skipping: artifacts not built");
+            eprintln!("skipping: artifacts not built or xla feature disabled");
             return;
         }
         let art = rt.load("logpdf").unwrap();

@@ -1,4 +1,4 @@
-//! The population coordinator: particle filters over the lazy heap.
+//! The population coordinator: particle filters over the sharded lazy heap.
 //!
 //! Implements the paper's §1 bootstrap filter plus the method variants its
 //! evaluation uses — auxiliary PF (PCFG), alive PF (CRBD), and particle
@@ -6,23 +6,52 @@
 //! `deep_copy` per offspring (O(1) in lazy modes, O(history) in eager mode
 //! — the paper's Figure 7 quadratic/linear time contrast), releases dead
 //! lineages, and sweeps memos once per generation.
+//!
+//! **Sharded execution.** The engine operates on `&mut [Heap]` — K
+//! independent heap shards with particles partitioned contiguously
+//! ([`shard_ranges`]). Per-generation propagation runs shard-parallel on
+//! the thread pool: each worker holds `&mut` to exactly one shard, so the
+//! allocate/copy/mutate hot path needs no locks and no atomics. At
+//! resampling, offspring whose ancestor lives on the same shard take the
+//! O(1) lazy [`Heap::deep_copy`]; offspring assigned across shards take a
+//! cross-shard lineage transplant ([`Heap::extract_into`]). All RNG
+//! streams are keyed by *global* particle index and all weight reductions
+//! run in global index order, so the numeric output (`log_evidence`,
+//! `posterior_mean`) is bit-identical for every K — and K = 1 reproduces
+//! the pre-sharding single-heap engine exactly.
+//!
+//! The alive PF remains coordinator-serial (its retry RNG stream depends
+//! on the cumulative attempt count across particles); since sharding
+//! would buy it no parallelism while making the O(history) transplant
+//! the common case on retries, its population is collapsed onto shard 0.
+//! With K > 1 the per-shard `step_population` runs with a serial pool and
+//! without the XLA batch artifact (the batched runtime is not
+//! shard-aware yet); K = 1 keeps the full batched path.
 
 use super::model::{particle_rng, resample_rng, SmcModel, StepCtx};
 use super::resample::Resampler;
 use crate::config::{RunConfig, Task};
-use crate::heap::{Heap, Lazy};
+use crate::heap::{aggregate_metrics, shard_of, shard_ranges, Heap, Lazy};
+use crate::pool::ThreadPool;
 use crate::stats::{ess, log_sum_exp, normalize_log_weights};
 use std::time::Instant;
 
-/// Per-generation metrics snapshot (Figure 7 series).
+/// Per-generation metrics snapshot (Figure 7 series), aggregated across
+/// shards.
 #[derive(Clone, Debug)]
 pub struct StepMetrics {
     pub t: usize,
     /// Cumulative wall time since filter start (seconds).
     pub elapsed_s: f64,
-    /// Heap footprint after this generation (bytes).
+    /// Heap footprint after this generation (bytes; exact — summed
+    /// per-shard gauges refer to the same instant).
     pub live_bytes: usize,
-    /// High-water mark so far (bytes).
+    /// High-water mark so far (bytes). With K > 1 shards this is the sum
+    /// of per-shard peaks — a conservative upper bound on the true
+    /// simultaneous peak, since shards need not peak at the same moment
+    /// (snapshot-based maxima would instead *miss* the intra-generation
+    /// resampling spikes that dominate eager-mode peaks). K = 1 — all
+    /// figure baselines — is exact.
     pub peak_bytes: usize,
     pub live_objects: usize,
     pub lazy_copies: usize,
@@ -38,6 +67,8 @@ pub struct FilterResult {
     /// generation (the cross-configuration output check).
     pub posterior_mean: f64,
     pub wall_s: f64,
+    /// Peak heap bytes; with K > 1 an upper bound (sum of per-shard
+    /// peaks — see [`StepMetrics::peak_bytes`]), exact at K = 1.
     pub peak_bytes: usize,
     pub series: Vec<StepMetrics>,
     /// Alive PF: total propagation attempts (N·T when every particle
@@ -53,27 +84,258 @@ pub enum Method {
     Alive,
 }
 
-/// Run a particle filter (or forward simulation) for `cfg` over `model`.
-pub fn run_filter<M: SmcModel>(
+/// One shard's slice of the propagation work: the heap, the shard's
+/// contiguous particle chunk, its log-weight chunk, and the global index
+/// of the chunk's first particle.
+struct ShardTask<'a, S> {
+    heap: &'a mut Heap,
+    states: &'a mut [Lazy<S>],
+    lw: &'a mut [f64],
+    base: usize,
+}
+
+/// Split (shards, states, lw) into per-shard [`ShardTask`]s following
+/// `ranges`. `ranges` must be contiguous from 0 and sum to the slice
+/// lengths.
+fn make_tasks<'a, S>(
+    shards: &'a mut [Heap],
+    states: &'a mut [Lazy<S>],
+    lw: &'a mut [f64],
+    ranges: &[std::ops::Range<usize>],
+) -> Vec<ShardTask<'a, S>> {
+    let mut tasks = Vec::with_capacity(ranges.len());
+    let mut shards = shards;
+    let mut states = states;
+    let mut lw = lw;
+    for r in ranges {
+        let (heap, shard_tail) = std::mem::take(&mut shards)
+            .split_first_mut()
+            .expect("more ranges than shards");
+        shards = shard_tail;
+        let len = r.end - r.start;
+        let (s_chunk, s_tail) = std::mem::take(&mut states).split_at_mut(len);
+        states = s_tail;
+        let (w_chunk, w_tail) = std::mem::take(&mut lw).split_at_mut(len);
+        lw = w_tail;
+        tasks.push(ShardTask {
+            heap,
+            states: s_chunk,
+            lw: w_chunk,
+            base: r.start,
+        });
+    }
+    tasks
+}
+
+fn step_snapshot(shards: &[Heap], t: usize, start: &Instant, w: &[f64]) -> StepMetrics {
+    let agg = aggregate_metrics(shards);
+    StepMetrics {
+        t,
+        elapsed_s: start.elapsed().as_secs_f64(),
+        live_bytes: agg.current_bytes(),
+        peak_bytes: agg.peak_bytes,
+        live_objects: agg.live_objects,
+        lazy_copies: agg.lazy_copies,
+        eager_copies: agg.eager_copies,
+        ess: ess(w),
+    }
+}
+
+/// Draw the initial population, shard-parallel (per-particle RNG streams
+/// make the draw order immaterial).
+fn init_population<M: SmcModel + Sync>(
+    model: &M,
+    shards: &mut [Heap],
+    pool: &ThreadPool,
+    n: usize,
+    seed: u64,
+) -> Vec<Lazy<M::State>> {
+    let mut states: Vec<Lazy<M::State>> = vec![Lazy::NULL; n];
+    let mut scratch = vec![0.0f64; n];
+    let ranges = shard_ranges(n, shards.len());
+    let mut tasks = make_tasks(shards, &mut states, &mut scratch, &ranges);
+    pool.for_shards(&mut tasks, |_, task| {
+        for (j, slot) in task.states.iter_mut().enumerate() {
+            let mut rng = particle_rng(seed, 0, task.base + j);
+            *slot = model.init(task.heap, &mut rng);
+        }
+    });
+    drop(tasks);
+    states
+}
+
+/// Propagate + weight a prefix (`states.len() <= full_n`) of the
+/// population, shard-parallel. Weight increments are added into `lw` in
+/// place. `full_n` fixes the partition so prefix propagation (particle
+/// Gibbs pins the last slot) stays shard-aligned.
+#[allow(clippy::too_many_arguments)]
+fn propagate_prefix<M: SmcModel + Sync>(
+    model: &M,
+    shards: &mut [Heap],
+    states: &mut [Lazy<M::State>],
+    lw: &mut [f64],
+    full_n: usize,
+    t: usize,
+    seed: u64,
+    observe: bool,
+    ctx: &StepCtx,
+) {
+    debug_assert_eq!(states.len(), lw.len());
+    if shards.len() == 1 {
+        // Single shard: the pre-sharding path, with the full batched
+        // context (XLA artifact + intra-generation numeric parallelism).
+        let winc = model.step_population(&mut shards[0], states, t, seed, observe, 0, ctx);
+        for (w, d) in lw.iter_mut().zip(winc) {
+            *w += d;
+        }
+        return;
+    }
+    let m = states.len();
+    let k = shards.len();
+    let ranges: Vec<std::ops::Range<usize>> = shard_ranges(full_n, k)
+        .into_iter()
+        .map(|r| r.start.min(m)..r.end.min(m))
+        .collect();
+    // Split the worker budget across shards so a shard count below the
+    // thread count does not shrink total numeric-phase parallelism
+    // (models like RBPF fan their numeric phase out on the given pool;
+    // per-particle RNG streams keep results invariant to the chunking).
+    let per_shard_threads = (ctx.pool.n_threads() / k).max(1);
+    let mut tasks = make_tasks(shards, states, lw, &ranges);
+    ctx.pool.for_shards(&mut tasks, |_, task| {
+        if task.states.is_empty() {
+            return;
+        }
+        // Each worker owns one shard outright; the shard's numeric phase
+        // gets its slice of the thread budget and runs on the CPU oracle
+        // path (the batched XLA runtime is not shard-aware).
+        let local = ThreadPool::new(per_shard_threads);
+        let shard_ctx = StepCtx {
+            pool: &local,
+            kalman: None,
+        };
+        let winc = model.step_population(
+            task.heap,
+            task.states,
+            t,
+            seed,
+            observe,
+            task.base,
+            &shard_ctx,
+        );
+        for (w, d) in task.lw.iter_mut().zip(winc) {
+            *w += d;
+        }
+    });
+}
+
+/// Disjoint `&mut` access to two different shards.
+fn pair_mut<T>(xs: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = xs.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = xs.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
+}
+
+/// Replace the population by the offspring given by `anc` (one O(1)
+/// `deep_copy` per same-shard offspring, one transplant per *distinct*
+/// (ancestor, destination-shard) pair), release the parent generation,
+/// and sweep memos.
+fn resample_population<S: crate::heap::Payload>(
+    shards: &mut [Heap],
+    states: &mut Vec<Lazy<S>>,
+    anc: &[usize],
+) {
+    let n = states.len();
+    let k = shards.len();
+    debug_assert_eq!(anc.len(), n);
+    // Systematic resampling hands out *runs* of duplicate offspring; an
+    // ancestor crossing a shard boundary is transplanted once per
+    // destination shard and the remaining duplicates take lazy O(1)
+    // copies of that transplant (sharing structure within the
+    // destination). BTreeMap keeps the release order deterministic.
+    let mut transplanted: std::collections::BTreeMap<(usize, usize), Lazy<S>> =
+        std::collections::BTreeMap::new();
+    let mut new_states: Vec<Lazy<S>> = Vec::with_capacity(n);
+    for (i, &a) in anc.iter().enumerate() {
+        let si = shard_of(n, k, i);
+        let sa = shard_of(n, k, a);
+        let child = if si == sa {
+            let parent = states[a];
+            shards[si].deep_copy(&parent)
+        } else if let Some(first) = transplanted.get(&(a, si)).copied() {
+            shards[si].deep_copy(&first)
+        } else {
+            let parent = states[a];
+            let (src, dst) = pair_mut(shards, sa, si);
+            let moved = src.extract_into(&parent, dst);
+            let child = dst.deep_copy(&moved);
+            transplanted.insert((a, si), moved);
+            child
+        };
+        new_states.push(child);
+    }
+    for ((_, si), h) in transplanted {
+        shards[si].release(h);
+    }
+    let old = std::mem::replace(states, new_states);
+    for (i, s) in old.into_iter().enumerate() {
+        shards[shard_of(n, k, i)].release(s);
+    }
+    for h in shards.iter_mut() {
+        h.sweep_memos();
+    }
+}
+
+/// Run a particle filter (or forward simulation) for `cfg` over `model`
+/// on a single heap — the K = 1 specialization of
+/// [`run_filter_shards`].
+pub fn run_filter<M: SmcModel + Sync>(
     model: &M,
     cfg: &RunConfig,
     heap: &mut Heap,
     ctx: &StepCtx,
     method: Method,
 ) -> FilterResult {
+    run_filter_shards(model, cfg, std::slice::from_mut(heap), ctx, method)
+}
+
+/// Run a particle filter (or forward simulation) over `shards.len()`
+/// heap shards. Output is seed-deterministic and identical for every
+/// shard count.
+pub fn run_filter_shards<M: SmcModel + Sync>(
+    model: &M,
+    cfg: &RunConfig,
+    shards: &mut [Heap],
+    ctx: &StepCtx,
+    method: Method,
+) -> FilterResult {
+    assert!(!shards.is_empty(), "at least one heap shard");
+    // The alive PF is coordinator-serial (its retry RNG stream depends on
+    // the cumulative attempt count), so sharding buys no parallelism there
+    // — and a sharded layout would make the O(history) cross-shard
+    // transplant the common case on retries (each retry draws a uniform
+    // ancestor, so (K-1)/K of draws would cross), reintroducing the eager
+    // copying cost the lazy platform exists to avoid. Keep its population
+    // on shard 0; outputs are K-invariant either way.
+    let shards = if method == Method::Alive {
+        &mut shards[..1]
+    } else {
+        shards
+    };
     let n = cfg.n_particles;
+    let k = shards.len();
     let t_max = cfg.n_steps.min(model.horizon());
     let observe = cfg.task == Task::Inference;
     let resampler = Resampler::Systematic;
     let start = Instant::now();
 
     // Initialize.
-    let mut states: Vec<Lazy<M::State>> = (0..n)
-        .map(|i| {
-            let mut rng = particle_rng(cfg.seed, 0, i);
-            model.init(heap, &mut rng)
-        })
-        .collect();
+    let mut states = init_population(model, shards, ctx.pool, n, cfg.seed);
     let mut lw = vec![0.0f64; n];
     let mut log_z = 0.0f64;
     let mut series = Vec::new();
@@ -91,11 +353,14 @@ pub fn run_filter<M: SmcModel>(
                 let ancestors = if method == Method::Auxiliary {
                     let mut aux = vec![0.0f64; n];
                     let mut any = false;
-                    for (i, s) in states.iter_mut().enumerate() {
-                        if let Some(la) = model.lookahead(heap, s, t) {
-                            aux[i] = la;
+                    for (i, aux_i) in aux.iter_mut().enumerate() {
+                        let si = shard_of(n, k, i);
+                        let mut s = states[i];
+                        if let Some(la) = model.lookahead(&mut shards[si], &mut s, t) {
+                            *aux_i = la;
                             any = true;
                         }
+                        states[i] = s;
                     }
                     if any {
                         let alw: Vec<f64> =
@@ -105,22 +370,10 @@ pub fn run_filter<M: SmcModel>(
                         let anc = resampler.ancestors(&mut rrng, &aw, n);
                         // First-stage correction: w ∝ 1 / lookahead(a).
                         log_z += log_sum_exp(&alw) - (n as f64).ln();
-                        for (i, &a) in anc.iter().enumerate() {
-                            let _ = i;
-                            let _ = a;
-                        }
-                        let mut new_states = Vec::with_capacity(n);
-                        for &a in &anc {
-                            new_states.push(heap.deep_copy(&states[a]));
-                        }
-                        for s in states.drain(..) {
-                            heap.release(s);
-                        }
-                        states = new_states;
+                        resample_population(shards, &mut states, &anc);
                         for (i, &a) in anc.iter().enumerate() {
                             lw[i] = -aux[a];
                         }
-                        heap.sweep_memos();
                         None
                     } else {
                         Some(resampler.ancestors(&mut rrng, &w, n))
@@ -130,16 +383,8 @@ pub fn run_filter<M: SmcModel>(
                 };
                 if let Some(anc) = ancestors {
                     log_z += log_sum_exp(&lw) - (n as f64).ln();
-                    let mut new_states = Vec::with_capacity(n);
-                    for &a in &anc {
-                        new_states.push(heap.deep_copy(&states[a]));
-                    }
-                    for s in states.drain(..) {
-                        heap.release(s);
-                    }
-                    states = new_states;
+                    resample_population(shards, &mut states, &anc);
                     lw.iter_mut().for_each(|x| *x = 0.0);
-                    heap.sweep_memos();
                 }
             }
         }
@@ -149,9 +394,13 @@ pub fn run_filter<M: SmcModel>(
             Method::Alive if observe => {
                 // Alive PF: re-propose each slot until it survives, drawing
                 // a fresh ancestor per attempt (Del Moral et al. 2015).
-                // Resampling above has already equalized weights.
-                let parents = states;
-                states = Vec::with_capacity(n);
+                // Resampling above has already equalized weights. The
+                // whole population lives on shard 0 (see the collapse at
+                // function entry), so every retry is an O(1) lazy copy.
+                debug_assert_eq!(k, 1);
+                let heap = &mut shards[0];
+                let parents = std::mem::take(&mut states);
+                let mut survivors = Vec::with_capacity(n);
                 for i in 0..n {
                     let mut attempt = 0usize;
                     loop {
@@ -167,12 +416,13 @@ pub fn run_filter<M: SmcModel>(
                         };
                         let mut child = heap.deep_copy(&parents[a]);
                         let label = child.label();
-                        let winc = heap
-                            .with_context(label, |h| model.step(h, &mut child, t, &mut rng, true));
+                        let winc = heap.with_context(label, |h| {
+                            model.step(h, &mut child, t, &mut rng, true)
+                        });
                         attempt += 1;
                         if model.alive(winc) {
                             lw[i] += winc;
-                            states.push(child);
+                            survivors.push(child);
                             break;
                         }
                         heap.release(child);
@@ -183,89 +433,99 @@ pub fn run_filter<M: SmcModel>(
                     }
                     attempts += attempt;
                 }
+                states = survivors;
                 for p in parents {
                     heap.release(p);
                 }
                 heap.sweep_memos();
             }
             _ => {
-                let winc = model.step_population(heap, &mut states, t, cfg.seed, observe, ctx);
+                propagate_prefix(
+                    model, shards, &mut states, &mut lw, n, t, cfg.seed, observe, ctx,
+                );
                 attempts += n;
-                for i in 0..n {
-                    lw[i] += winc[i];
-                }
             }
         }
 
         // --- Metrics snapshot (Figure 7). ---
         normalize_log_weights(&lw, &mut w);
-        series.push(StepMetrics {
-            t,
-            elapsed_s: start.elapsed().as_secs_f64(),
-            live_bytes: heap.metrics.current_bytes(),
-            peak_bytes: heap.metrics.peak_bytes,
-            live_objects: heap.metrics.live_objects,
-            lazy_copies: heap.metrics.lazy_copies,
-            eager_copies: heap.metrics.eager_copies,
-            ess: ess(&w),
-        });
+        series.push(step_snapshot(shards, t, &start, &w));
     }
 
     // Final-generation evidence contribution and posterior summary.
     log_z += log_sum_exp(&lw) - (n as f64).ln();
     normalize_log_weights(&lw, &mut w);
     let mut post = 0.0;
-    for (i, s) in states.iter_mut().enumerate() {
-        post += w[i] * model.summary(heap, s);
+    for i in 0..n {
+        let si = shard_of(n, k, i);
+        let mut s = states[i];
+        post += w[i] * model.summary(&mut shards[si], &mut s);
+        states[i] = s;
     }
 
+    let agg = aggregate_metrics(shards);
     let result = FilterResult {
         log_evidence: if observe { log_z } else { f64::NAN },
         posterior_mean: post,
         wall_s: start.elapsed().as_secs_f64(),
-        peak_bytes: heap.metrics.peak_bytes,
+        peak_bytes: agg.peak_bytes,
         series,
         attempts,
     };
 
-    for s in states {
-        heap.release(s);
+    for (i, s) in states.into_iter().enumerate() {
+        shards[shard_of(n, k, i)].release(s);
     }
-    heap.sweep_memos();
+    for h in shards.iter_mut() {
+        h.sweep_memos();
+    }
     result
+}
+
+/// Particle Gibbs with reference trajectory (conditional SMC) on a single
+/// heap — the K = 1 specialization of [`run_particle_gibbs_shards`].
+pub fn run_particle_gibbs<M: SmcModel + Sync>(
+    model: &M,
+    cfg: &RunConfig,
+    heap: &mut Heap,
+    ctx: &StepCtx,
+) -> Vec<FilterResult> {
+    run_particle_gibbs_shards(model, cfg, std::slice::from_mut(heap), ctx)
 }
 
 /// Particle Gibbs with reference trajectory (conditional SMC), VBD's
 /// method (Wigren et al. 2019, marginalized parameters live inside the
 /// state's sufficient-statistic accumulators). Returns per-iteration
 /// filter results. The inter-iteration single-particle copy is eager, per
-/// the paper's §4 note.
-pub fn run_particle_gibbs<M: SmcModel>(
+/// the paper's §4 note; the reference trajectory lives on the shard that
+/// owns the conditional slot `n - 1`, and a winner from another shard is
+/// transplanted there (the transplant is itself an eager copy).
+pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
     model: &M,
     cfg: &RunConfig,
-    heap: &mut Heap,
+    shards: &mut [Heap],
     ctx: &StepCtx,
 ) -> Vec<FilterResult> {
+    assert!(!shards.is_empty(), "at least one heap shard");
     let n = cfg.n_particles;
+    let k = shards.len();
     let t_max = cfg.n_steps.min(model.horizon());
     let resampler = Resampler::Systematic;
     let mut results = Vec::new();
-    // Reference trajectory: handles for generations 0..=T (oldest first).
+    // Shard holding the conditional slot — and the reference trajectory.
+    let s_ref = shard_of(n, k, n - 1);
+    // Reference trajectory: handles for generations 0..=T (oldest first),
+    // all owned by shard `s_ref`.
     let mut reference: Option<Vec<Lazy<M::State>>> = None;
 
     for iter in 0..cfg.pg_iterations {
         let seed = cfg.seed.wrapping_add(iter as u64 * 0x9E37);
         let start = Instant::now();
-        let mut states: Vec<Lazy<M::State>> = (0..n)
-            .map(|i| {
-                let mut rng = particle_rng(seed, 0, i);
-                model.init(heap, &mut rng)
-            })
-            .collect();
+        let mut states = init_population(model, shards, ctx.pool, n, seed);
         // Conditional slot n-1 follows the reference when present.
         if let Some(r) = &reference {
-            heap.release(states[n - 1]);
-            states[n - 1] = heap.clone_handle(&r[0]);
+            shards[s_ref].release(states[n - 1]);
+            states[n - 1] = shards[s_ref].clone_handle(&r[0]);
         }
         let mut lw = vec![0.0f64; n];
         let mut log_z = 0.0;
@@ -281,85 +541,90 @@ pub fn run_particle_gibbs<M: SmcModel>(
                 anc[n - 1] = n - 1;
             }
             log_z += log_sum_exp(&lw) - (n as f64).ln();
-            let mut new_states = Vec::with_capacity(n);
-            for &a in &anc {
-                new_states.push(heap.deep_copy(&states[a]));
-            }
-            for s in states.drain(..) {
-                heap.release(s);
-            }
-            states = new_states;
+            resample_population(shards, &mut states, &anc);
             lw.iter_mut().for_each(|x| *x = 0.0);
-            heap.sweep_memos();
 
             // Propagate free particles; pin + score the conditional one.
             let split = if reference.is_some() { n - 1 } else { n };
-            let winc =
-                model.step_population(heap, &mut states[..split], t, seed, true, ctx);
-            for i in 0..split {
-                lw[i] += winc[i];
-            }
+            propagate_prefix(
+                model,
+                shards,
+                &mut states[..split],
+                &mut lw[..split],
+                n,
+                t,
+                seed,
+                true,
+                ctx,
+            );
             if let Some(r) = &reference {
-                heap.release(states[n - 1]);
-                states[n - 1] = heap.clone_handle(&r[t.min(r.len() - 1)]);
+                shards[s_ref].release(states[n - 1]);
+                states[n - 1] = shards[s_ref].clone_handle(&r[t.min(r.len() - 1)]);
                 let mut pinned = states[n - 1];
-                lw[n - 1] += model.ref_weight(heap, &mut pinned, t);
+                lw[n - 1] += model.ref_weight(&mut shards[s_ref], &mut pinned, t);
                 states[n - 1] = pinned;
             }
 
             normalize_log_weights(&lw, &mut w);
-            series.push(StepMetrics {
-                t,
-                elapsed_s: start.elapsed().as_secs_f64(),
-                live_bytes: heap.metrics.current_bytes(),
-                peak_bytes: heap.metrics.peak_bytes,
-                live_objects: heap.metrics.live_objects,
-                lazy_copies: heap.metrics.lazy_copies,
-                eager_copies: heap.metrics.eager_copies,
-                ess: ess(&w),
-            });
+            series.push(step_snapshot(shards, t, &start, &w));
         }
         log_z += log_sum_exp(&lw) - (n as f64).ln();
 
         // Select the next reference trajectory and copy it out EAGERLY
-        // (outside the tree pattern — the paper's §4 VBD note).
+        // (outside the tree pattern — the paper's §4 VBD note). A winner
+        // on a foreign shard is transplanted to the reference shard,
+        // which is equally eager.
         normalize_log_weights(&lw, &mut w);
         let mut srng = resample_rng(seed, t_max + 1);
-        let k = srng.categorical(&w);
-        let eager_ref = heap.deep_copy_eager(&states[k]);
-        let mut chain = model.chain(heap, &eager_ref);
-        heap.release(eager_ref);
+        let winner = srng.categorical(&w);
+        let s_win = shard_of(n, k, winner);
+        let eager_ref = if s_win == s_ref {
+            shards[s_ref].deep_copy_eager(&states[winner])
+        } else {
+            let (src, dst) = pair_mut(shards, s_win, s_ref);
+            src.extract_into(&states[winner], dst)
+        };
+        let mut chain = model.chain(&mut shards[s_ref], &eager_ref);
+        shards[s_ref].release(eager_ref);
         chain.reverse(); // oldest first
         if let Some(old) = reference.take() {
             for h in old {
-                heap.release(h);
+                shards[s_ref].release(h);
             }
         }
         reference = Some(chain);
 
         let mut post = 0.0;
-        for (i, s) in states.iter_mut().enumerate() {
-            post += w[i] * model.summary(heap, s);
+        for i in 0..n {
+            let si = shard_of(n, k, i);
+            let mut s = states[i];
+            post += w[i] * model.summary(&mut shards[si], &mut s);
+            states[i] = s;
         }
-        for s in states {
-            heap.release(s);
+        for (i, s) in states.into_iter().enumerate() {
+            shards[shard_of(n, k, i)].release(s);
         }
-        heap.sweep_memos();
+        for h in shards.iter_mut() {
+            h.sweep_memos();
+        }
 
+        let agg = aggregate_metrics(shards);
         results.push(FilterResult {
             log_evidence: log_z,
             posterior_mean: post,
             wall_s: start.elapsed().as_secs_f64(),
-            peak_bytes: heap.metrics.peak_bytes,
+            peak_bytes: agg.peak_bytes,
             series,
             attempts: n * t_max,
         });
     }
     if let Some(old) = reference.take() {
         for h in old {
-            heap.release(h);
+            shards[s_ref].release(h);
         }
     }
-    heap.sweep_memos();
+    for h in shards.iter_mut() {
+        h.sweep_memos();
+    }
     results
 }

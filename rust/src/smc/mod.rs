@@ -1,12 +1,15 @@
 //! Sequential Monte Carlo: resamplers, the model interface, and the
 //! population coordinator (bootstrap / auxiliary / alive particle filters
-//! and particle Gibbs) over the lazy copy-on-write heap.
+//! and particle Gibbs) over the (sharded) lazy copy-on-write heap.
 
 pub mod filter;
 pub mod model;
 pub mod resample;
 
-pub use filter::{run_filter, run_particle_gibbs, FilterResult, Method, StepMetrics};
+pub use filter::{
+    run_filter, run_filter_shards, run_particle_gibbs, run_particle_gibbs_shards,
+    FilterResult, Method, StepMetrics,
+};
 pub use model::{particle_rng, resample_rng, SmcModel, StepCtx};
 pub use resample::Resampler;
 

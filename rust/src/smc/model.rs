@@ -43,10 +43,19 @@ pub trait SmcModel {
         observe: bool,
     ) -> f64;
 
-    /// Batched propagate+weight across the population. The default loops
-    /// [`SmcModel::step`]; models with a tensorizable numeric core (RBPF)
-    /// override this to split the generation into a serial heap phase and
-    /// a batched XLA / parallel numeric phase.
+    /// Batched propagate+weight across (a contiguous slice of) the
+    /// population. The default loops [`SmcModel::step`]; models with a
+    /// tensorizable numeric core (RBPF) override this to split the
+    /// generation into a serial heap phase and a batched XLA / parallel
+    /// numeric phase.
+    ///
+    /// `base` is the *global* index of `states[0]` in the population: the
+    /// sharded coordinator calls this once per heap shard with that
+    /// shard's slice, and slot `i` of the slice must draw from
+    /// `particle_rng(seed, t, base + i)` so that every particle's RNG
+    /// stream is identical regardless of the shard count (the seeded
+    /// K-equivalence guarantee). Single-heap callers pass `base = 0`.
+    #[allow(clippy::too_many_arguments)]
     fn step_population(
         &self,
         heap: &mut Heap,
@@ -54,11 +63,12 @@ pub trait SmcModel {
         t: usize,
         seed: u64,
         observe: bool,
+        base: usize,
         _ctx: &StepCtx,
     ) -> Vec<f64> {
         let mut out = Vec::with_capacity(states.len());
         for (i, s) in states.iter_mut().enumerate() {
-            let mut rng = particle_rng(seed, t, i);
+            let mut rng = particle_rng(seed, t, base + i);
             let label = s.label();
             let lw = heap.with_context(label, |h| self.step(h, s, t, &mut rng, observe));
             out.push(lw);

@@ -4,7 +4,7 @@
 //! filter run.
 
 use lazycow::config::{Model, RunConfig, Task};
-use lazycow::heap::{CopyMode, Heap};
+use lazycow::heap::{CopyMode, Heap, ShardedHeap};
 use lazycow::models::{run_model, Rbpf, DATA_SEED};
 use lazycow::pool::ThreadPool;
 use lazycow::runtime::{BatchKalman, XlaRuntime};
@@ -27,7 +27,7 @@ fn output_identical_across_configurations() {
             cfg.n_steps = 20;
             cfg.pg_iterations = 2;
             cfg.seed = 123;
-            let mut heap = Heap::new(mode);
+            let mut heap = ShardedHeap::new(mode, 1);
             let r = run_model(&cfg, &mut heap, &ctx(&pool));
             outs.push((r.log_evidence.to_bits(), r.posterior_mean.to_bits()));
             assert_eq!(heap.live_objects(), 0, "{model:?}/{mode:?} leaked");
@@ -46,7 +46,7 @@ fn memory_scaling_shapes() {
         let mut cfg = RunConfig::for_model(Model::List, Task::Inference, mode);
         cfg.n_particles = 64;
         cfg.n_steps = t;
-        let mut heap = Heap::new(mode);
+        let mut heap = ShardedHeap::new(mode, 1);
         let r = run_model(&cfg, &mut heap, &ctx(&pool));
         r.peak_bytes as f64
     };
@@ -67,7 +67,7 @@ fn time_scaling_shapes() {
         let mut cfg = RunConfig::for_model(Model::List, Task::Inference, mode);
         cfg.n_particles = 64;
         cfg.n_steps = t;
-        let mut heap = Heap::new(mode);
+        let mut heap = ShardedHeap::new(mode, 1);
         run_model(&cfg, &mut heap, &ctx(&pool)).wall_s
     };
     // Warm up + measure.
@@ -131,10 +131,12 @@ fn simulation_never_copies() {
         let mut cfg = RunConfig::for_model(model, Task::Simulation, CopyMode::LazySro);
         cfg.n_particles = 16;
         cfg.n_steps = 15;
-        let mut heap = Heap::new(CopyMode::LazySro);
+        let mut heap = ShardedHeap::new(CopyMode::LazySro, 2);
         let _ = run_model(&cfg, &mut heap, &ctx(&pool));
-        assert_eq!(heap.metrics.deep_copies, 0, "{model:?} copied in simulation");
-        assert_eq!(heap.metrics.lazy_copies, 0);
-        assert_eq!(heap.metrics.eager_copies, 0);
+        let m = heap.metrics();
+        assert_eq!(m.deep_copies, 0, "{model:?} copied in simulation");
+        assert_eq!(m.lazy_copies, 0);
+        assert_eq!(m.eager_copies, 0);
+        assert_eq!(m.transplants, 0, "{model:?} transplanted in simulation");
     }
 }

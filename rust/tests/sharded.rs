@@ -1,0 +1,214 @@
+//! Cross-shard lineage transplant: seeded equivalence across shard
+//! counts against the single-heap baseline and the closed-form LGSS
+//! oracle, plus heap-metrics balance after transplants.
+
+use lazycow::config::{Model, RunConfig, Task};
+use lazycow::heap::{shard_of, CopyMode, Heap, ShardedHeap};
+use lazycow::models::{Crbd, ListModel};
+use lazycow::pool::ThreadPool;
+use lazycow::smc::{
+    run_filter, run_filter_shards, run_particle_gibbs, run_particle_gibbs_shards, Method,
+    SmcModel, StepCtx,
+};
+
+fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
+    StepCtx { pool, kalman: None }
+}
+
+fn lgss_cfg(n: usize, t: usize) -> RunConfig {
+    let mut cfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = n;
+    cfg.n_steps = t;
+    cfg.seed = 2026_0730;
+    cfg
+}
+
+/// K ∈ {1, 2, 4} on the LGSS oracle model (a 1-D linear-Gaussian SSM with
+/// exact Kalman evidence): every shard count must reproduce the
+/// single-heap baseline bit-for-bit, in every copy mode, and stay close
+/// to the oracle.
+#[test]
+fn lgss_shard_counts_match_single_heap_bitwise() {
+    let model = ListModel::synthetic(40, 11);
+    let exact = model.exact_evidence();
+    let pool = ThreadPool::new(4);
+    let cfg = lgss_cfg(192, 40);
+
+    let mut baseline = Heap::new(CopyMode::LazySro);
+    let base = run_filter(&model, &cfg, &mut baseline, &ctx(&pool), Method::Bootstrap);
+    assert!(
+        (base.log_evidence - exact).abs() < 3.0,
+        "baseline {} vs oracle {exact}",
+        base.log_evidence
+    );
+    assert_eq!(baseline.live_objects(), 0);
+
+    for mode in CopyMode::ALL {
+        for k in [1usize, 2, 4] {
+            let mut sh = ShardedHeap::new(mode, k);
+            let r = run_filter_shards(
+                &model,
+                &cfg,
+                sh.shards_mut(),
+                &ctx(&pool),
+                Method::Bootstrap,
+            );
+            assert_eq!(
+                r.log_evidence.to_bits(),
+                base.log_evidence.to_bits(),
+                "{mode:?} K={k}: log_evidence differs from single-heap baseline"
+            );
+            assert_eq!(
+                r.posterior_mean.to_bits(),
+                base.posterior_mean.to_bits(),
+                "{mode:?} K={k}: posterior_mean differs from single-heap baseline"
+            );
+            assert_eq!(sh.live_objects(), 0, "{mode:?} K={k} leaked");
+            let m = sh.metrics();
+            assert_eq!(
+                m.total_allocs,
+                m.total_frees + m.live_objects,
+                "{mode:?} K={k}: alloc/free/live balance broken after transplants"
+            );
+            if k > 1 && mode.is_lazy() {
+                assert!(
+                    m.transplants > 0,
+                    "{mode:?} K={k}: resampling never crossed a shard boundary"
+                );
+            }
+        }
+    }
+}
+
+/// Per-shard metrics balance holds on every shard individually, not just
+/// in aggregate — a transplant allocates on the destination and frees on
+/// neither.
+#[test]
+fn per_shard_alloc_free_balance() {
+    let model = ListModel::synthetic(30, 5);
+    let pool = ThreadPool::new(2);
+    let cfg = lgss_cfg(100, 30);
+    let mut sh = ShardedHeap::new(CopyMode::LazySro, 4);
+    let _ = run_filter_shards(&model, &cfg, sh.shards_mut(), &ctx(&pool), Method::Bootstrap);
+    for (s, h) in sh.shards().iter().enumerate() {
+        assert_eq!(
+            h.metrics.total_allocs,
+            h.metrics.total_frees + h.metrics.live_objects,
+            "shard {s}: balance broken"
+        );
+        assert_eq!(h.live_objects(), 0, "shard {s} leaked");
+    }
+    let agg = sh.metrics();
+    assert_eq!(agg.total_allocs, agg.total_frees);
+}
+
+/// Particle Gibbs over shards: the reference trajectory lives on the
+/// conditional slot's shard and winners are transplanted there; per-
+/// iteration output must match the single-heap run bit-for-bit.
+#[test]
+fn particle_gibbs_shard_counts_match_single_heap() {
+    let model = ListModel::synthetic(20, 13);
+    let pool = ThreadPool::new(3);
+    let mut cfg = lgss_cfg(48, 20);
+    cfg.pg_iterations = 3;
+
+    let mut baseline = Heap::new(CopyMode::LazySro);
+    let base = run_particle_gibbs(&model, &cfg, &mut baseline, &ctx(&pool));
+    assert_eq!(baseline.live_objects(), 0);
+
+    for k in [2usize, 4] {
+        let mut sh = ShardedHeap::new(CopyMode::LazySro, k);
+        let rs = run_particle_gibbs_shards(&model, &cfg, sh.shards_mut(), &ctx(&pool));
+        assert_eq!(rs.len(), base.len());
+        for (i, (r, b)) in rs.iter().zip(&base).enumerate() {
+            assert_eq!(
+                r.log_evidence.to_bits(),
+                b.log_evidence.to_bits(),
+                "K={k} iter {i}: evidence differs"
+            );
+            assert_eq!(
+                r.posterior_mean.to_bits(),
+                b.posterior_mean.to_bits(),
+                "K={k} iter {i}: posterior differs"
+            );
+        }
+        assert_eq!(sh.live_objects(), 0, "K={k} leaked");
+        let m = sh.metrics();
+        assert_eq!(m.total_allocs, m.total_frees + m.live_objects);
+        assert!(m.eager_copies > 0, "reference copies must be eager");
+    }
+}
+
+/// The alive PF is coordinator-serial, so the engine collapses its
+/// population onto shard 0 (a sharded layout would make the O(history)
+/// transplant the common case on retries): results must match the
+/// single-heap run exactly — including the attempt count — with zero
+/// transplants.
+#[test]
+fn alive_filter_shard_counts_match_single_heap() {
+    let model = Crbd::synthetic(30, 2);
+    let pool = ThreadPool::new(2);
+    let mut cfg = RunConfig::for_model(Model::Crbd, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 64;
+    cfg.n_steps = model.horizon();
+    cfg.seed = 3;
+
+    let mut baseline = Heap::new(CopyMode::LazySro);
+    let base = run_filter(&model, &cfg, &mut baseline, &ctx(&pool), Method::Alive);
+
+    for k in [2usize, 3] {
+        let mut sh = ShardedHeap::new(CopyMode::LazySro, k);
+        let r = run_filter_shards(&model, &cfg, sh.shards_mut(), &ctx(&pool), Method::Alive);
+        assert_eq!(r.log_evidence.to_bits(), base.log_evidence.to_bits());
+        assert_eq!(r.posterior_mean.to_bits(), base.posterior_mean.to_bits());
+        assert_eq!(r.attempts, base.attempts, "K={k}: attempt counts differ");
+        assert_eq!(sh.live_objects(), 0, "K={k} leaked");
+        assert_eq!(
+            sh.metrics().transplants,
+            0,
+            "K={k}: alive PF must stay on one shard"
+        );
+    }
+}
+
+/// Degenerate partitions: more shards than particles, and K exactly N.
+#[test]
+fn more_shards_than_particles() {
+    let model = ListModel::synthetic(10, 17);
+    let pool = ThreadPool::new(2);
+    let mut cfg = lgss_cfg(6, 10);
+    cfg.seed = 5;
+
+    let mut baseline = Heap::new(CopyMode::LazySro);
+    let base = run_filter(&model, &cfg, &mut baseline, &ctx(&pool), Method::Bootstrap);
+
+    for k in [6usize, 9] {
+        let mut sh = ShardedHeap::new(CopyMode::LazySro, k);
+        let r = run_filter_shards(
+            &model,
+            &cfg,
+            sh.shards_mut(),
+            &ctx(&pool),
+            Method::Bootstrap,
+        );
+        assert_eq!(r.log_evidence.to_bits(), base.log_evidence.to_bits());
+        assert_eq!(sh.live_objects(), 0);
+    }
+}
+
+/// Sanity on the partition helper used throughout the engine: the
+/// contiguous layout means most systematic-resampling offspring stay on
+/// their ancestor's shard (boundary crossings are the exception the
+/// transplant handles).
+#[test]
+fn shard_of_is_consistent_with_contiguous_layout() {
+    for (n, k) in [(192usize, 4usize), (100, 3), (6, 9)] {
+        for i in 0..n {
+            let s = shard_of(n, k, i);
+            assert!(s < k);
+            if i > 0 {
+                assert!(s >= shard_of(n, k, i - 1), "shards must be monotone in i");
+            }
+        }
+    }
+}
