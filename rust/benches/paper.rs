@@ -10,6 +10,8 @@
 //!   treebound  ancestry reachability vs t + c·N·log N (Jacob et al. 2015)
 //!   micro      heap hot-path micro-benchmarks (deep_copy / pull / get)
 //!   shards     shard-count sweep (K = 1, 2, 4, 8) with per-K JSON records
+//!   rebalance  rebalance-policy sweep (off/greedy/budget, K = 4) on the
+//!              skewed PCFG workload, JSON per cell
 //!
 //! Environment: LAZYCOW_REPS (default 5), LAZYCOW_SCALE=default|paper.
 
@@ -35,6 +37,7 @@ fn sections() -> Vec<String> {
             "functional",
             "resamplers",
             "shards",
+            "rebalance",
         ]
             .iter()
             .map(|s| s.to_string())
@@ -371,9 +374,11 @@ fn bench_shards(backend: &Backend) {
             let t_steps = cfg.n_steps;
             let mut transplants = 0usize;
             let mut evidence_bits = 0u64;
+            let mut global_peak = 0usize;
             let cell = {
                 let transplants = &mut transplants;
                 let evidence_bits = &mut evidence_bits;
+                let global_peak = &mut global_peak;
                 run_cell(&format!("{}/K={k}", model.name()), reps(), move |rep| {
                     let mut c = cfg.clone();
                     c.seed = 20200401u64.wrapping_add(rep as u64);
@@ -382,8 +387,12 @@ fn bench_shards(backend: &Backend) {
                     if rep == 0 {
                         *transplants = heap.metrics().transplants;
                         *evidence_bits = r.log_evidence.to_bits();
+                        *global_peak = r.global_peak_bytes;
                     }
-                    Some(r.peak_bytes as f64)
+                    // The exact figure: continuous peak at K = 1, the
+                    // barrier-sampled global peak at K > 1 (never the
+                    // inflated sum of per-shard peaks).
+                    Some(r.global_peak_bytes as f64)
                 })
             };
             // K-invariance holds on the CPU oracle path; with a compiled
@@ -400,7 +409,7 @@ fn bench_shards(backend: &Backend) {
                 }
             }
             println!(
-                "{{\"section\":\"shards\",\"model\":\"{}\",\"shards\":{},\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"time_q1_s\":{:.6},\"time_q3_s\":{:.6},\"time_per_gen_s\":{:.6},\"peak_bytes_median\":{:.0},\"transplants\":{}}}",
+                "{{\"section\":\"shards\",\"model\":\"{}\",\"shards\":{},\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"time_q1_s\":{:.6},\"time_q3_s\":{:.6},\"time_per_gen_s\":{:.6},\"global_peak_bytes_median\":{:.0},\"global_peak_bytes\":{},\"transplants\":{}}}",
                 model.name(),
                 k,
                 threads,
@@ -412,9 +421,89 @@ fn bench_shards(backend: &Backend) {
                 cell.time_q3,
                 cell.time_median / t_steps.max(1) as f64,
                 cell.mem_median.unwrap_or(0.0),
+                global_peak,
                 transplants,
             );
         }
+    }
+}
+
+/// Rebalance-policy sweep (the cost-driven rebalancer's acceptance
+/// benchmark): wall time, exact global peak, migrations, and transplants
+/// per policy at K = 4 on the PCFG workload — whose per-particle
+/// derivation stacks are the heavy-tailed population the rebalancer
+/// targets (sentence lengths vary by orders of magnitude, so the static
+/// partition leaves shards idle while one grinds). Emits one JSON record
+/// per (policy, K) cell; outputs are asserted bit-identical across
+/// policies, so the sweep measures pure scheduling effect.
+fn bench_rebalance(backend: &Backend) {
+    use lazycow::smc::RebalancePolicy;
+    println!("\n== Rebalance sweep: policy × wall time on skewed PCFG (K = 4, JSON per cell) ==");
+    let threads = backend.pool.n_threads();
+    let k = 4usize;
+    let mut baseline_evidence: Option<u64> = None;
+    let mut off_median: Option<f64> = None;
+    for policy in RebalancePolicy::ALL {
+        let mut cfg = RunConfig::for_model(Model::Pcfg, Task::Inference, CopyMode::LazySro);
+        if paper_scale() {
+            let (n, t_inf, _) = Model::Pcfg.paper_scale();
+            cfg.n_particles = n;
+            cfg.n_steps = t_inf;
+        }
+        cfg.shards = k;
+        cfg.rebalance = policy;
+        let n_particles = cfg.n_particles;
+        let t_steps = cfg.n_steps;
+        let mut migrations = 0usize;
+        let mut transplants = 0usize;
+        let mut global_peak = 0usize;
+        let mut evidence_bits = 0u64;
+        let cell = {
+            let migrations = &mut migrations;
+            let transplants = &mut transplants;
+            let global_peak = &mut global_peak;
+            let evidence_bits = &mut evidence_bits;
+            run_cell(&format!("pcfg/{}", policy.name()), reps(), move |rep| {
+                let mut c = cfg.clone();
+                c.seed = 20200401u64.wrapping_add(rep as u64);
+                let mut heap = ShardedHeap::new(c.mode, k);
+                let r = run_model(&c, &mut heap, &backend.ctx());
+                if rep == 0 {
+                    *migrations = r.migrations;
+                    *transplants = heap.metrics().transplants;
+                    *global_peak = r.global_peak_bytes;
+                    *evidence_bits = r.log_evidence.to_bits();
+                }
+                Some(r.global_peak_bytes as f64)
+            })
+        };
+        match baseline_evidence {
+            None => baseline_evidence = Some(evidence_bits),
+            Some(b) => assert_eq!(
+                b, evidence_bits,
+                "rebalance policy {} changed the output",
+                policy.name()
+            ),
+        }
+        if policy == RebalancePolicy::Off {
+            off_median = Some(cell.time_median);
+        }
+        println!(
+            "{{\"section\":\"rebalance\",\"model\":\"pcfg\",\"policy\":\"{}\",\"shards\":{},\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"time_q1_s\":{:.6},\"time_q3_s\":{:.6},\"speedup_vs_off\":{:.4},\"global_peak_bytes\":{},\"migrations\":{},\"transplants\":{}}}",
+            policy.name(),
+            k,
+            threads,
+            n_particles,
+            t_steps,
+            cell.reps,
+            cell.time_median,
+            cell.time_q1,
+            cell.time_q3,
+            off_median.map(|o| o / cell.time_median.max(1e-9)).unwrap_or(1.0),
+            global_peak,
+            migrations,
+            transplants,
+        );
     }
 }
 
@@ -477,6 +566,7 @@ fn main() {
             "functional" => bench_functional(),
             "resamplers" => bench_resamplers(),
             "shards" => bench_shards(&backend),
+            "rebalance" => bench_rebalance(&backend),
             other => eprintln!("unknown section {other}"),
         }
     }

@@ -6,6 +6,7 @@
 //! the launcher plumbing a deployment-grade framework needs.
 
 use crate::heap::CopyMode;
+use crate::smc::rebalance::RebalancePolicy;
 use std::collections::BTreeMap;
 
 /// Which §4 problem to run.
@@ -119,6 +120,15 @@ pub struct RunConfig {
     /// on the f64 oracle), so the launcher's auto mode keeps K = 1 in
     /// that case. K = 1 is the serialized single-heap platform.
     pub shards: usize,
+    /// Offspring rebalancing policy applied at each resampling step when
+    /// K > 1 (outputs are bit-identical for every policy; only the shard
+    /// placement of heap work changes). See
+    /// [`RebalancePolicy`](crate::smc::rebalance::RebalancePolicy).
+    pub rebalance: RebalancePolicy,
+    /// Imbalance fraction (of the mean predicted shard load) that must be
+    /// exceeded before the rebalancer migrates an offspring off its
+    /// ancestor's shard.
+    pub rebalance_threshold: f64,
     /// ESS-fraction resampling trigger (1.0 = always resample, the paper's
     /// setting for the memory-pattern evaluation).
     pub ess_threshold: f64,
@@ -143,6 +153,8 @@ impl Default for RunConfig {
             seed: 20200401,
             threads: 0,
             shards: 0,
+            rebalance: RebalancePolicy::Greedy,
+            rebalance_threshold: 0.25,
             ess_threshold: 1.0,
             pg_iterations: 3,
             use_xla: true,
@@ -181,6 +193,13 @@ impl RunConfig {
             "seed" => self.seed = value.parse().map_err(|e| format!("{e}"))?,
             "threads" => self.threads = value.parse().map_err(|e| format!("{e}"))?,
             "shards" | "k" => self.shards = value.parse().map_err(|e| format!("{e}"))?,
+            "rebalance" => {
+                self.rebalance = RebalancePolicy::parse(value)
+                    .ok_or(format!("bad rebalance policy {value} (off|greedy|budget)"))?
+            }
+            "rebalance-threshold" | "rebalance_threshold" => {
+                self.rebalance_threshold = value.parse().map_err(|e| format!("{e}"))?
+            }
             "ess" => self.ess_threshold = value.parse().map_err(|e| format!("{e}"))?,
             "pg-iterations" | "pg_iterations" => {
                 self.pg_iterations = value.parse().map_err(|e| format!("{e}"))?
@@ -275,6 +294,11 @@ mod tests {
         assert_eq!(c.resolved_shards(8), 4);
         c.apply("shards", "0").unwrap();
         assert_eq!(c.resolved_shards(8), 8, "0 = match worker threads");
+        c.apply("rebalance", "budget").unwrap();
+        assert_eq!(c.rebalance, RebalancePolicy::Budget);
+        c.apply("rebalance-threshold", "0.5").unwrap();
+        assert!((c.rebalance_threshold - 0.5).abs() < 1e-12);
+        assert!(c.apply("rebalance", "bogus").is_err());
         assert!(c.apply("bogus", "1").is_err());
         assert!(c.apply("model", "bogus").is_err());
     }

@@ -54,6 +54,16 @@ pub struct HeapMetrics {
     /// Cross-shard lineage transplants received (`Heap::extract_into`
     /// calls that materialized a subgraph in this heap).
     pub transplants: usize,
+
+    /// Barrier-sampled *global* peak: the maximum over generation
+    /// barriers of the summed footprint of all shards at that instant
+    /// (see [`sample_global_peak`](super::sample_global_peak)). Unlike
+    /// the sum of per-shard `peak_bytes` — an upper bound, since shards
+    /// need not peak at the same moment — this is an exact simultaneous
+    /// figure at barrier resolution. The coordinator records it into
+    /// shard 0; [`merge`](HeapMetrics::merge) takes the max so the
+    /// aggregate carries it. Zero until the first sample.
+    pub global_peak_bytes: usize,
 }
 
 impl HeapMetrics {
@@ -104,6 +114,7 @@ impl HeapMetrics {
             freezes,
             cross_refs,
             transplants,
+            global_peak_bytes,
         } = *o;
         self.live_objects += live_objects;
         self.live_bytes += live_bytes;
@@ -125,6 +136,9 @@ impl HeapMetrics {
         self.freezes += freezes;
         self.cross_refs += cross_refs;
         self.transplants += transplants;
+        // Barrier samples are global figures, not per-shard counters: the
+        // aggregate carries the largest sample seen anywhere.
+        self.global_peak_bytes = self.global_peak_bytes.max(global_peak_bytes);
     }
 
     /// One-line summary for logs.
@@ -197,12 +211,15 @@ mod tests {
             transplants: 2,
             ..Default::default()
         };
+        a.global_peak_bytes = 90;
         a.merge(&b);
         assert_eq!(a.live_objects, 3);
         assert_eq!(a.total_allocs, 9);
         assert_eq!(a.total_frees, 6);
         assert_eq!(a.peak_bytes, 150);
         assert_eq!(a.transplants, 3);
+        // Global barrier samples max, not add.
+        assert_eq!(a.global_peak_bytes, 90);
         // The alloc/free/live balance survives aggregation.
         assert_eq!(a.total_allocs, a.total_frees + a.live_objects);
     }

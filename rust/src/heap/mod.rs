@@ -42,7 +42,7 @@ pub use lazy::{Lazy, RawLazy};
 pub use memo::MemoTable;
 pub use metrics::HeapMetrics;
 pub use payload::{EdgeSlot, Payload};
-pub use shard::{aggregate_metrics, shard_of, shard_ranges, ShardedHeap};
+pub use shard::{aggregate_metrics, sample_global_peak, shard_of, shard_ranges, ShardedHeap};
 
 use slot::{Slot, OBJ_OVERHEAD};
 

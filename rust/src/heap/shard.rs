@@ -62,6 +62,25 @@ pub fn aggregate_metrics(shards: &[Heap]) -> HeapMetrics {
     m
 }
 
+/// Barrier sample for the exact global peak: sum the *current* footprint
+/// of every shard at this instant and fold the sum into the running
+/// `global_peak_bytes` (recorded on shard 0; [`HeapMetrics::merge`]
+/// carries the max into aggregates). Called by the SMC coordinator at
+/// generation barriers — after initialization, at the resampling spike
+/// (offspring and parents both live), and after each propagation — where
+/// all shards are quiescent, so the summed gauges refer to the same
+/// moment. Returns the sampled sum.
+pub fn sample_global_peak(shards: &mut [Heap]) -> usize {
+    let now: usize = shards.iter().map(|h| h.metrics.current_bytes()).sum();
+    if let Some(first) = shards.first_mut() {
+        let m = &mut first.metrics;
+        if now > m.global_peak_bytes {
+            m.global_peak_bytes = now;
+        }
+    }
+    now
+}
+
 /// K independent object heaps plus aggregated instrumentation. The
 /// coordinator owns it; propagation phases borrow the shard slice via
 /// [`ShardedHeap::shards_mut`] and fan it out one-`&mut`-per-worker.
@@ -126,6 +145,12 @@ impl ShardedHeap {
         for h in &mut self.shards {
             h.sweep_memos();
         }
+    }
+
+    /// Barrier-sample the summed footprint into the running global peak
+    /// (see [`sample_global_peak`]).
+    pub fn sample_global_peak(&mut self) -> usize {
+        sample_global_peak(&mut self.shards)
     }
 }
 
@@ -320,6 +345,32 @@ mod tests {
         src.release(root);
         assert_eq!(src.live_objects(), 0);
         assert_eq!(dst.live_objects(), 0);
+    }
+
+    #[test]
+    fn global_peak_is_barrier_sampled_sum() {
+        let mut sh = ShardedHeap::new(CopyMode::LazySro, 2);
+        let a = build_chain(sh.shard_mut(0), 8);
+        let sum1 = sh.sample_global_peak();
+        assert_eq!(
+            sum1,
+            sh.shard(0).metrics.current_bytes() + sh.shard(1).metrics.current_bytes()
+        );
+        let b = build_chain(sh.shard_mut(1), 8);
+        let sum2 = sh.sample_global_peak();
+        assert!(sum2 > sum1);
+        assert_eq!(sh.metrics().global_peak_bytes, sum2);
+        // Releasing shard 0's chain lowers the current sum but not the peak.
+        sh.shard_mut(0).release(a);
+        sh.shard_mut(0).sweep_memos();
+        let sum3 = sh.sample_global_peak();
+        assert!(sum3 < sum2);
+        assert_eq!(sh.metrics().global_peak_bytes, sum2);
+        // The barrier-sampled global peak never exceeds the sum of
+        // per-shard continuous peaks (the documented upper bound).
+        let m = sh.metrics();
+        assert!(m.global_peak_bytes <= m.peak_bytes);
+        sh.shard_mut(1).release(b);
     }
 
     #[test]

@@ -36,6 +36,12 @@ fn cli() -> Cli {
     .flag("seed", "20200401", "PRNG seed")
     .flag("threads", "0", "worker threads (0 = all cores)")
     .flag("shards", "0", "heap shards K for parallel propagation (0 = match threads)")
+    .flag("rebalance", "", "offspring rebalancing at K>1: off|greedy|budget (default greedy)")
+    .flag(
+        "rebalance-threshold",
+        "",
+        "imbalance fraction of mean shard load that triggers migration (default 0.25)",
+    )
     .flag("reps", "5", "benchmark repetitions")
     .flag("scale", "default", "scale preset: default|paper")
     .flag("config", "", "config file (key = value lines)")
@@ -76,6 +82,15 @@ fn build_config(args: &lazycow::cli::Args) -> Result<RunConfig, String> {
     }
     if let Some(s) = args.get_usize("shards") {
         cfg.shards = s;
+    }
+    if let Some(p) = args.get("rebalance") {
+        if !p.is_empty() {
+            cfg.rebalance = lazycow::smc::RebalancePolicy::parse(p)
+                .ok_or("bad --rebalance (off|greedy|budget)")?;
+        }
+    }
+    if let Some(t) = args.get_f64("rebalance-threshold") {
+        cfg.rebalance_threshold = t;
     }
     cfg.use_xla = !args.get_bool("no-xla");
     cfg.series = args.get_bool("series");
@@ -147,14 +162,21 @@ fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
     let backend = Backend::new(cfg.threads, cfg.use_xla, args.get_or("artifacts", "artifacts"));
     let k = backend.choose_shards(&cfg);
     let mut heap = ShardedHeap::new(cfg.mode, k);
-    println!("# {} K={k}", cfg.label());
+    println!(
+        "# {} K={k} rebalance={}",
+        cfg.label(),
+        if k > 1 { cfg.rebalance.name() } else { "off" }
+    );
     let r = run_model(&cfg, &mut heap, &backend.ctx());
     println!(
-        "log_evidence={:.4} posterior_mean={:.4} wall={:.3}s peak={} attempts={}",
+        "log_evidence={:.4} posterior_mean={:.4} wall={:.3}s peak={} global_peak={} \
+         migrations={} attempts={}",
         r.log_evidence,
         r.posterior_mean,
         r.wall_s,
         human_bytes(r.peak_bytes as f64),
+        human_bytes(r.global_peak_bytes as f64),
+        r.migrations,
         r.attempts
     );
     println!("heap: {}", heap.metrics().summary());

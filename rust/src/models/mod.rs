@@ -85,6 +85,8 @@ fn aggregate_pg(results: Vec<FilterResult>) -> FilterResult {
         acc.posterior_mean = r.posterior_mean;
         acc.wall_s += r.wall_s;
         acc.peak_bytes = acc.peak_bytes.max(r.peak_bytes);
+        acc.global_peak_bytes = acc.global_peak_bytes.max(r.global_peak_bytes);
+        acc.migrations += r.migrations;
         acc.attempts += r.attempts;
         for mut s in r.series {
             s.t += t_off;

@@ -257,6 +257,13 @@ impl SmcModel for Mot {
         }
     }
 
+    /// Propagation cost tracks the ragged track-array length: every live
+    /// track is predicted and gated against each observation, so a
+    /// particle with many tracks dominates its shard's generation time.
+    fn cost_hint(&self, heap: &mut Heap, state: &mut Lazy<MotState>) -> f64 {
+        heap.read(state, |s| s.tracks.len() as f64 + 1.0)
+    }
+
     fn summary(&self, heap: &mut Heap, state: &mut Lazy<MotState>) -> f64 {
         heap.read(state, |s| s.tracks.len() as f64)
     }

@@ -221,6 +221,14 @@ impl SmcModel for Pcfg {
         Some(if p > 0.0 { p.ln() } else { -30.0 })
     }
 
+    /// Propagation cost tracks the derivation-stack depth: a deep stack
+    /// keeps expanding nonterminals (and copying on write) long after a
+    /// shallow one has emitted — the heavy-tailed per-particle cost the
+    /// shard rebalancer exists to even out.
+    fn cost_hint(&self, heap: &mut Heap, state: &mut Lazy<PcfgState>) -> f64 {
+        heap.read(state, |s| s.stack.len() as f64 + 1.0)
+    }
+
     fn summary(&self, heap: &mut Heap, state: &mut Lazy<PcfgState>) -> f64 {
         heap.read(state, |s| s.stack.len() as f64)
     }

@@ -106,6 +106,100 @@ impl ThreadPool {
         });
     }
 
+    /// Scoped pair executor: run `f(&mut op.2, &mut items[op.0], &mut
+    /// items[op.1])` for every op, where each op names a *pair* of
+    /// elements (e.g. a (source, destination) heap-shard pair for a
+    /// cross-shard transplant). Ops are scheduled into rounds: within a
+    /// round all pairs are disjoint, so each op holds exclusive `&mut`
+    /// access to both of its elements and the round runs concurrently on
+    /// scoped threads (the first op of each round on the calling
+    /// thread). The schedule is computed in one O(ops) pass — each op
+    /// lands in the round `max(next_free[a], next_free[b])`, booking
+    /// both endpoints past it — so scheduling is deterministic in op
+    /// order. Panics if an op names `a == b` or an out-of-range index.
+    pub fn for_pairs<T, U, F>(&self, items: &mut [T], ops: &mut [(usize, usize, U)], f: F)
+    where
+        T: Send,
+        U: Send,
+        F: Fn(&mut U, &mut T, &mut T) + Send + Sync,
+    {
+        if ops.is_empty() {
+            return;
+        }
+        // Schedule: one pass over the ops, no per-round rescans.
+        let mut next_free = vec![0usize; items.len()];
+        let mut n_rounds = 0usize;
+        let mut round_of = Vec::with_capacity(ops.len());
+        for op in ops.iter() {
+            let (a, b) = (op.0, op.1);
+            assert!(
+                a != b && a < items.len() && b < items.len(),
+                "for_pairs: bad pair ({a}, {b}) over {} items",
+                items.len()
+            );
+            let r = next_free[a].max(next_free[b]);
+            next_free[a] = r + 1;
+            next_free[b] = r + 1;
+            round_of.push(r);
+            n_rounds = n_rounds.max(r + 1);
+        }
+        let mut rounds: Vec<Vec<usize>> = vec![Vec::new(); n_rounds];
+        for (j, &r) in round_of.iter().enumerate() {
+            rounds[r].push(j); // members end up in increasing op order
+        }
+        for round in rounds {
+            // Hand out disjoint `&mut` endpoints for this round. Op refs
+            // come from a single forward walk of the slice (round members
+            // are in increasing index order), item refs from a take-once
+            // table of the (few) elements.
+            let mut item_refs: Vec<Option<&mut T>> = items.iter_mut().map(Some).collect();
+            let mut rest: &mut [(usize, usize, U)] = &mut ops[..];
+            let mut consumed = 0usize;
+            let mut units: Vec<(&mut U, &mut T, &mut T)> = Vec::with_capacity(round.len());
+            for &j in &round {
+                let tail = std::mem::take(&mut rest);
+                let (_, tail) = tail.split_at_mut(j - consumed);
+                let (op, tail) = tail.split_first_mut().expect("op index in range");
+                rest = tail;
+                consumed = j + 1;
+                let (a, b) = (op.0, op.1);
+                let ia = item_refs[a].take().expect("item handed out twice in a round");
+                let ib = item_refs[b].take().expect("item handed out twice in a round");
+                units.push((&mut op.2, ia, ib));
+            }
+            // Respect the pool's worker budget like the other executors:
+            // at most n_threads workers, each running a chunk of the
+            // round sequentially, chunk 0 on the calling thread.
+            let workers = self.n_threads.min(units.len());
+            if workers <= 1 {
+                for (u, a, b) in units {
+                    f(u, a, b);
+                }
+                continue;
+            }
+            let per = units.len().div_ceil(workers);
+            thread::scope(|s| {
+                let mut iter = units.into_iter();
+                let first: Vec<_> = iter.by_ref().take(per).collect();
+                loop {
+                    let chunk: Vec<_> = iter.by_ref().take(per).collect();
+                    if chunk.is_empty() {
+                        break;
+                    }
+                    let f = &f;
+                    s.spawn(move || {
+                        for (u, a, b) in chunk {
+                            f(u, a, b);
+                        }
+                    });
+                }
+                for (u, a, b) in first {
+                    f(u, a, b);
+                }
+            });
+        }
+    }
+
     /// Scoped shard executor: run `f(index, &mut item)` for every element
     /// of `items`, with each element visited by exactly one worker —
     /// exclusive `&mut` access, no locks. Elements are distributed in
@@ -265,6 +359,57 @@ mod tests {
         assert_eq!(items, vec![1, 2, 3, 4, 5]);
         let mut empty: Vec<u32> = Vec::new();
         ThreadPool::new(4).for_shards(&mut empty, |_, _| panic!("no items"));
+    }
+
+    #[test]
+    fn for_pairs_runs_every_op_with_both_endpoints() {
+        let pool = ThreadPool::new(4);
+        let mut items = vec![0i64; 6];
+        // Ops deliberately collide (0 appears three times) so several
+        // rounds are needed; each op moves 1 unit from a to b and records
+        // the observed sum in its payload slot.
+        let mut ops: Vec<(usize, usize, i64)> = vec![
+            (0, 1, 0),
+            (2, 3, 0),
+            (0, 2, 0),
+            (4, 5, 0),
+            (0, 5, 0),
+        ];
+        for it in items.iter_mut() {
+            *it = 10;
+        }
+        pool.for_pairs(&mut items, &mut ops, |slot, a, b| {
+            *a -= 1;
+            *b += 1;
+            *slot = *a + *b;
+        });
+        // Conservation: total unchanged, 0 lost 3 units.
+        assert_eq!(items.iter().sum::<i64>(), 60);
+        assert_eq!(items[0], 7);
+        assert!(ops.iter().all(|o| o.2 != 0), "every op ran: {ops:?}");
+    }
+
+    #[test]
+    fn for_pairs_single_thread_and_empty() {
+        let pool = ThreadPool::new(1);
+        let mut items = vec![1u32, 2, 3];
+        let mut ops: Vec<(usize, usize, u32)> = vec![(0, 2, 0), (1, 0, 0)];
+        pool.for_pairs(&mut items, &mut ops, |slot, a, b| {
+            *slot = *a + *b;
+        });
+        assert_eq!(ops[0].2, 4);
+        assert_eq!(ops[1].2, 3);
+        let mut none: Vec<(usize, usize, u32)> = Vec::new();
+        pool.for_pairs(&mut items, &mut none, |_, _, _| panic!("no ops"));
+    }
+
+    #[test]
+    #[should_panic(expected = "bad pair")]
+    fn for_pairs_rejects_self_pair() {
+        let pool = ThreadPool::new(2);
+        let mut items = vec![0u8; 3];
+        let mut ops = vec![(1usize, 1usize, ())];
+        pool.for_pairs(&mut items, &mut ops, |_, _, _| {});
     }
 
     #[test]

@@ -8,17 +8,27 @@
 //! lineages, and sweeps memos once per generation.
 //!
 //! **Sharded execution.** The engine operates on `&mut [Heap]` — K
-//! independent heap shards with particles partitioned contiguously
-//! ([`shard_ranges`]). Per-generation propagation runs shard-parallel on
-//! the thread pool: each worker holds `&mut` to exactly one shard, so the
+//! independent heap shards — with an explicit particle → shard assignment
+//! vector. Per-generation propagation runs shard-parallel on the thread
+//! pool: each worker holds `&mut` to exactly one shard, so the
 //! allocate/copy/mutate hot path needs no locks and no atomics. At
-//! resampling, offspring whose ancestor lives on the same shard take the
-//! O(1) lazy [`Heap::deep_copy`]; offspring assigned across shards take a
-//! cross-shard lineage transplant ([`Heap::extract_into`]). All RNG
+//! resampling, offspring on their ancestor's shard take the O(1) lazy
+//! [`Heap::deep_copy`]; offspring assigned across shards take a
+//! cross-shard lineage transplant ([`Heap::extract_into`]), one per
+//! distinct (ancestor, destination) pair, executed *concurrently* for
+//! pairwise-disjoint (src, dst) shard pairs
+//! ([`ThreadPool::for_pairs`](crate::pool::ThreadPool::for_pairs)).
+//!
+//! **Rebalancing.** The assignment starts as the contiguous
+//! [`shard_ranges`] partition and is re-planned at every resampling step
+//! by the cost-driven rebalancer (see [`super::rebalance`]): a greedy LPT
+//! pass over per-particle cost estimates, sticky to the ancestor's shard,
+//! migrating only past a configurable imbalance threshold. All RNG
 //! streams are keyed by *global* particle index and all weight reductions
 //! run in global index order, so the numeric output (`log_evidence`,
-//! `posterior_mean`) is bit-identical for every K — and K = 1 reproduces
-//! the pre-sharding single-heap engine exactly.
+//! `posterior_mean`) is bit-identical for every K and every rebalance
+//! policy — and K = 1 reproduces the pre-sharding single-heap engine
+//! exactly.
 //!
 //! The alive PF remains coordinator-serial (its retry RNG stream depends
 //! on the cumulative attempt count across particles); since sharding
@@ -29,9 +39,15 @@
 //! shard-aware yet); K = 1 keeps the full batched path.
 
 use super::model::{particle_rng, resample_rng, SmcModel, StepCtx};
+use super::rebalance::{
+    plan_offspring, CostTracker, RebalancePolicy, OP_COST_S, TRANSPLANT_COST_S,
+};
 use super::resample::Resampler;
 use crate::config::{RunConfig, Task};
-use crate::heap::{aggregate_metrics, shard_of, shard_ranges, Heap, Lazy};
+use crate::heap::{
+    aggregate_metrics, sample_global_peak, shard_of, shard_ranges, Heap, HeapMetrics, Lazy,
+    Payload,
+};
 use crate::pool::ThreadPool;
 use crate::stats::{ess, log_sum_exp, normalize_log_weights};
 use std::time::Instant;
@@ -48,11 +64,14 @@ pub struct StepMetrics {
     pub live_bytes: usize,
     /// High-water mark so far (bytes). With K > 1 shards this is the sum
     /// of per-shard peaks — a conservative upper bound on the true
-    /// simultaneous peak, since shards need not peak at the same moment
-    /// (snapshot-based maxima would instead *miss* the intra-generation
-    /// resampling spikes that dominate eager-mode peaks). K = 1 — all
-    /// figure baselines — is exact.
+    /// simultaneous peak, since shards need not peak at the same moment.
+    /// K = 1 — all figure baselines — is exact.
     pub peak_bytes: usize,
+    /// Barrier-sampled global peak so far: the maximum over generation
+    /// barriers (including the resampling spike) of the *summed* shard
+    /// footprint — exact at barrier resolution, never above
+    /// `peak_bytes`. The figure to quote for K > 1 runs.
+    pub global_peak_bytes: usize,
     pub live_objects: usize,
     pub lazy_copies: usize,
     pub eager_copies: usize,
@@ -70,6 +89,17 @@ pub struct FilterResult {
     /// Peak heap bytes; with K > 1 an upper bound (sum of per-shard
     /// peaks — see [`StepMetrics::peak_bytes`]), exact at K = 1.
     pub peak_bytes: usize,
+    /// Exact peak heap bytes: the continuous high-water mark at K = 1,
+    /// the barrier-sampled global peak (peak of per-barrier sums) at
+    /// K > 1. Always `<= peak_bytes`.
+    pub global_peak_bytes: usize,
+    /// Migrations: cross-shard transplant operations *executed* while a
+    /// rebalancing policy was active (distinct (ancestor, destination)
+    /// pairs per resampling step, including any the particle-Gibbs
+    /// reference pin forces). Always 0 for policy `off`, whose boundary
+    /// crossings are the static partition's inherent transplants — those
+    /// are counted by `HeapMetrics::transplants` instead.
+    pub migrations: usize,
     pub series: Vec<StepMetrics>,
     /// Alive PF: total propagation attempts (N·T when every particle
     /// survives immediately).
@@ -84,9 +114,9 @@ pub enum Method {
     Alive,
 }
 
-/// One shard's slice of the propagation work: the heap, the shard's
-/// contiguous particle chunk, its log-weight chunk, and the global index
-/// of the chunk's first particle.
+/// One shard's borrowed slice of contiguous population work: the heap,
+/// the shard's contiguous particle chunk, its log-weight chunk, and the
+/// global index of the chunk's first particle.
 struct ShardTask<'a, S> {
     heap: &'a mut Heap,
     states: &'a mut [Lazy<S>],
@@ -127,6 +157,13 @@ fn make_tasks<'a, S>(
     tasks
 }
 
+#[inline]
+fn heap_ops(m: &HeapMetrics) -> usize {
+    // The rebalancer's op charge: allocations + actual object copies +
+    // memo-chase pulls (the lazy platform's hot-path operations).
+    m.total_allocs + m.lazy_copies + m.eager_copies + m.pulls
+}
+
 fn step_snapshot(shards: &[Heap], t: usize, start: &Instant, w: &[f64]) -> StepMetrics {
     let agg = aggregate_metrics(shards);
     StepMetrics {
@@ -134,6 +171,14 @@ fn step_snapshot(shards: &[Heap], t: usize, start: &Instant, w: &[f64]) -> StepM
         elapsed_s: start.elapsed().as_secs_f64(),
         live_bytes: agg.current_bytes(),
         peak_bytes: agg.peak_bytes,
+        // K = 1: the continuous high-water mark *is* the global peak (it
+        // sees intra-generation transients no barrier sample can), so the
+        // series agrees with FilterResult's K = 1 substitution.
+        global_peak_bytes: if shards.len() == 1 {
+            agg.peak_bytes
+        } else {
+            agg.global_peak_bytes
+        },
         live_objects: agg.live_objects,
         lazy_copies: agg.lazy_copies,
         eager_copies: agg.eager_copies,
@@ -141,8 +186,9 @@ fn step_snapshot(shards: &[Heap], t: usize, start: &Instant, w: &[f64]) -> StepM
     }
 }
 
-/// Draw the initial population, shard-parallel (per-particle RNG streams
-/// make the draw order immaterial).
+/// Draw the initial population, shard-parallel over the contiguous
+/// starting partition (per-particle RNG streams make the draw order
+/// immaterial).
 fn init_population<M: SmcModel + Sync>(
     model: &M,
     shards: &mut [Heap],
@@ -164,23 +210,49 @@ fn init_population<M: SmcModel + Sync>(
     states
 }
 
-/// Propagate + weight a prefix (`states.len() <= full_n`) of the
-/// population, shard-parallel. Weight increments are added into `lw` in
-/// place. `full_n` fixes the partition so prefix propagation (particle
-/// Gibbs pins the last slot) stays shard-aligned.
+/// One maximal run of consecutive global particle indices owned by a
+/// shard under the current assignment.
+struct ShardRun<S> {
+    base: usize,
+    states: Vec<Lazy<S>>,
+    winc: Vec<f64>,
+    hints: Vec<f64>,
+}
+
+/// One shard's propagation work under an arbitrary assignment.
+struct AssignedTask<'a, S> {
+    heap: &'a mut Heap,
+    runs: Vec<ShardRun<S>>,
+    /// Measured generation cost: wall seconds + op charge (out).
+    cost: f64,
+}
+
+/// Propagate + weight a (prefix of the) population under the current
+/// particle → shard assignment, shard-parallel. Weight increments are
+/// added into `lw` in place. `assign` must have the same length as
+/// `states` (particle Gibbs propagates the prefix that excludes the
+/// pinned conditional slot). When `shard_cost` / `hints` are given they
+/// receive the measured per-shard generation cost and the model's
+/// per-particle cost hints (the rebalancer's inputs). Each shard splits
+/// its work into maximal runs of consecutive global indices, so
+/// `step_population`'s `base` argument keeps every particle's RNG stream
+/// identical regardless of assignment — the seeded equivalence guarantee.
 #[allow(clippy::too_many_arguments)]
-fn propagate_prefix<M: SmcModel + Sync>(
+fn propagate_assigned<M: SmcModel + Sync>(
     model: &M,
     shards: &mut [Heap],
     states: &mut [Lazy<M::State>],
     lw: &mut [f64],
-    full_n: usize,
+    assign: &[usize],
     t: usize,
     seed: u64,
     observe: bool,
     ctx: &StepCtx,
+    mut shard_cost: Option<&mut [f64]>,
+    mut hints: Option<&mut [f64]>,
 ) {
     debug_assert_eq!(states.len(), lw.len());
+    debug_assert_eq!(states.len(), assign.len());
     if shards.len() == 1 {
         // Single shard: the pre-sharding path, with the full batched
         // context (XLA artifact + intra-generation numeric parallelism).
@@ -190,22 +262,53 @@ fn propagate_prefix<M: SmcModel + Sync>(
         }
         return;
     }
-    let m = states.len();
     let k = shards.len();
-    let ranges: Vec<std::ops::Range<usize>> = shard_ranges(full_n, k)
-        .into_iter()
-        .map(|r| r.start.min(m)..r.end.min(m))
+    let want_hints = hints.is_some();
+    // Zero-copy fast path: a monotone assignment is a contiguous
+    // partition (always true for policy `off`, and for rebalanced runs
+    // until the first migration), so per-shard work is a plain
+    // `split_at_mut` of the state/weight slices — no gather/scatter of
+    // handles or weights, exactly the pre-rebalancing layout.
+    if assign.windows(2).all(|p| p[0] <= p[1]) {
+        propagate_contiguous(
+            model, shards, states, lw, assign, t, seed, observe, ctx, shard_cost, hints,
+        );
+        return;
+    }
+    // Gather each shard's particles as runs of consecutive indices.
+    let mut runs_by_shard: Vec<Vec<ShardRun<M::State>>> = (0..k).map(|_| Vec::new()).collect();
+    for (i, &s) in assign.iter().enumerate() {
+        debug_assert!(s < k, "assignment names shard {s} of {k}");
+        match runs_by_shard[s].last_mut() {
+            Some(run) if run.base + run.states.len() == i => run.states.push(states[i]),
+            _ => runs_by_shard[s].push(ShardRun {
+                base: i,
+                states: vec![states[i]],
+                winc: Vec::new(),
+                hints: Vec::new(),
+            }),
+        }
+    }
+    let mut tasks: Vec<AssignedTask<'_, M::State>> = shards
+        .iter_mut()
+        .zip(runs_by_shard)
+        .map(|(heap, runs)| AssignedTask {
+            heap,
+            runs,
+            cost: 0.0,
+        })
         .collect();
     // Split the worker budget across shards so a shard count below the
     // thread count does not shrink total numeric-phase parallelism
     // (models like RBPF fan their numeric phase out on the given pool;
     // per-particle RNG streams keep results invariant to the chunking).
     let per_shard_threads = (ctx.pool.n_threads() / k).max(1);
-    let mut tasks = make_tasks(shards, states, lw, &ranges);
     ctx.pool.for_shards(&mut tasks, |_, task| {
-        if task.states.is_empty() {
+        if task.runs.is_empty() {
             return;
         }
+        let t0 = Instant::now();
+        let ops0 = heap_ops(&task.heap.metrics);
         // Each worker owns one shard outright; the shard's numeric phase
         // gets its slice of the thread budget and runs on the CPU oracle
         // path (the batched XLA runtime is not shard-aware).
@@ -214,80 +317,272 @@ fn propagate_prefix<M: SmcModel + Sync>(
             pool: &local,
             kalman: None,
         };
-        let winc = model.step_population(
-            task.heap,
-            task.states,
-            t,
-            seed,
-            observe,
-            task.base,
-            &shard_ctx,
-        );
-        for (w, d) in task.lw.iter_mut().zip(winc) {
-            *w += d;
+        for run in task.runs.iter_mut() {
+            run.winc = model.step_population(
+                task.heap,
+                &mut run.states,
+                t,
+                seed,
+                observe,
+                run.base,
+                &shard_ctx,
+            );
+            if want_hints {
+                run.hints = run
+                    .states
+                    .iter_mut()
+                    .map(|st| model.cost_hint(task.heap, st))
+                    .collect();
+            }
         }
+        let ops1 = heap_ops(&task.heap.metrics);
+        task.cost = t0.elapsed().as_secs_f64() + (ops1 - ops0) as f64 * OP_COST_S;
     });
-}
-
-/// Disjoint `&mut` access to two different shards.
-fn pair_mut<T>(xs: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
-    debug_assert_ne!(a, b);
-    if a < b {
-        let (lo, hi) = xs.split_at_mut(b);
-        (&mut lo[a], &mut hi[0])
-    } else {
-        let (lo, hi) = xs.split_at_mut(a);
-        (&mut hi[0], &mut lo[b])
+    // Scatter results back in global index order.
+    for (s, task) in tasks.into_iter().enumerate() {
+        if let Some(sc) = shard_cost.as_deref_mut() {
+            sc[s] = task.cost;
+        }
+        for run in task.runs {
+            let base = run.base;
+            for (j, st) in run.states.into_iter().enumerate() {
+                states[base + j] = st;
+            }
+            for (j, w) in run.winc.into_iter().enumerate() {
+                lw[base + j] += w;
+            }
+            if let Some(h) = hints.as_deref_mut() {
+                for (j, v) in run.hints.into_iter().enumerate() {
+                    h[base + j] = v;
+                }
+            }
+        }
     }
 }
 
-/// Replace the population by the offspring given by `anc` (one O(1)
-/// `deep_copy` per same-shard offspring, one transplant per *distinct*
-/// (ancestor, destination-shard) pair), release the parent generation,
-/// and sweep memos.
-fn resample_population<S: crate::heap::Payload>(
+/// One shard's chunk of a *contiguous* (monotone-assignment) propagation:
+/// the borrowed [`ShardTask`] slices plus the rebalancer's outputs.
+struct ContigTask<'a, S> {
+    chunk: ShardTask<'a, S>,
+    /// Measured generation cost (out).
+    cost: f64,
+    /// Per-particle cost hints for this chunk (out; empty unless asked).
+    hints: Vec<f64>,
+}
+
+/// The zero-copy specialization of [`propagate_assigned`] for monotone
+/// assignments: derive each shard's contiguous range directly from
+/// `assign` and hand out disjoint sub-slice borrows via [`make_tasks`].
+#[allow(clippy::too_many_arguments)]
+fn propagate_contiguous<M: SmcModel + Sync>(
+    model: &M,
     shards: &mut [Heap],
+    states: &mut [Lazy<M::State>],
+    lw: &mut [f64],
+    assign: &[usize],
+    t: usize,
+    seed: u64,
+    observe: bool,
+    ctx: &StepCtx,
+    mut shard_cost: Option<&mut [f64]>,
+    mut hints: Option<&mut [f64]>,
+) {
+    let k = shards.len();
+    let want_hints = hints.is_some();
+    let m = assign.len();
+    // Per-shard contiguous ranges straight from the monotone assignment
+    // (a shard may own an empty range after migrations elsewhere).
+    let mut ranges: Vec<std::ops::Range<usize>> = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for s in 0..k {
+        let mut end = start;
+        while end < m && assign[end] == s {
+            end += 1;
+        }
+        ranges.push(start..end);
+        start = end;
+    }
+    debug_assert_eq!(start, m, "monotone assignment must cover the prefix");
+    let mut tasks: Vec<ContigTask<'_, M::State>> = make_tasks(shards, states, lw, &ranges)
+        .into_iter()
+        .map(|chunk| ContigTask {
+            chunk,
+            cost: 0.0,
+            hints: Vec::new(),
+        })
+        .collect();
+    let per_shard_threads = (ctx.pool.n_threads() / k).max(1);
+    ctx.pool.for_shards(&mut tasks, |_, task| {
+        let chunk = &mut task.chunk;
+        if chunk.states.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        let ops0 = heap_ops(&chunk.heap.metrics);
+        let local = ThreadPool::new(per_shard_threads);
+        let shard_ctx = StepCtx {
+            pool: &local,
+            kalman: None,
+        };
+        let winc = model.step_population(
+            chunk.heap, chunk.states, t, seed, observe, chunk.base, &shard_ctx,
+        );
+        for (w, d) in chunk.lw.iter_mut().zip(winc) {
+            *w += d;
+        }
+        if want_hints {
+            task.hints = chunk
+                .states
+                .iter_mut()
+                .map(|st| model.cost_hint(chunk.heap, st))
+                .collect();
+        }
+        let ops1 = heap_ops(&chunk.heap.metrics);
+        task.cost = t0.elapsed().as_secs_f64() + (ops1 - ops0) as f64 * OP_COST_S;
+    });
+    for (s, task) in tasks.into_iter().enumerate() {
+        if let Some(sc) = shard_cost.as_deref_mut() {
+            sc[s] = task.cost;
+        }
+        if let Some(h) = hints.as_deref_mut() {
+            let base = task.chunk.base;
+            for (j, v) in task.hints.into_iter().enumerate() {
+                h[base + j] = v;
+            }
+        }
+    }
+}
+
+/// A transplant operation for [`ThreadPool::for_pairs`]: (source shard,
+/// destination shard, (ancestor index, transplanted handle — filled by
+/// the executor)).
+type TransplantOp<S> = (usize, usize, (usize, Lazy<S>));
+
+/// Replace the population by the offspring given by `anc`, landing each
+/// offspring on the shard named by `new_assign` (one O(1) `deep_copy`
+/// per same-shard offspring; one transplant per *distinct* (ancestor,
+/// destination-shard) pair, executed concurrently for disjoint (src,
+/// dst) pairs), release the parent generation, and sweep memos. Updates
+/// `assign` to `new_assign` and returns the number of transplant
+/// operations executed.
+fn resample_population<S: Payload>(
+    shards: &mut [Heap],
+    pool: &ThreadPool,
     states: &mut Vec<Lazy<S>>,
     anc: &[usize],
-) {
+    assign: &mut Vec<usize>,
+    new_assign: Vec<usize>,
+) -> usize {
     let n = states.len();
-    let k = shards.len();
     debug_assert_eq!(anc.len(), n);
-    // Systematic resampling hands out *runs* of duplicate offspring; an
-    // ancestor crossing a shard boundary is transplanted once per
-    // destination shard and the remaining duplicates take lazy O(1)
-    // copies of that transplant (sharing structure within the
-    // destination). BTreeMap keeps the release order deterministic.
-    let mut transplanted: std::collections::BTreeMap<(usize, usize), Lazy<S>> =
-        std::collections::BTreeMap::new();
+    debug_assert_eq!(new_assign.len(), n);
+    // Transplant plan: one op per distinct (ancestor, destination) pair
+    // whose destination differs from the ancestor's home shard. All
+    // duplicate offspring of that ancestor on that destination share the
+    // single transplanted lineage via O(1) lazy copies. BTreeSet keeps
+    // op order deterministic.
+    let pair_set: std::collections::BTreeSet<(usize, usize)> = anc
+        .iter()
+        .zip(&new_assign)
+        .filter(|&(&a, &dst)| dst != assign[a])
+        .map(|(&a, &dst)| (a, dst))
+        .collect();
+    let mut ops: Vec<TransplantOp<S>> = pair_set
+        .into_iter()
+        .map(|(a, dst)| (assign[a], dst, (a, Lazy::NULL)))
+        .collect();
+    let n_ops = ops.len();
+    {
+        let states_ref: &[Lazy<S>] = states.as_slice();
+        pool.for_pairs(shards, &mut ops, |op, src, dst| {
+            let parent = states_ref[op.0];
+            op.1 = src.extract_into(&parent, dst);
+        });
+    }
+    let transplanted: std::collections::BTreeMap<(usize, usize), Lazy<S>> = ops
+        .into_iter()
+        .map(|(_, dst, (a, h))| ((a, dst), h))
+        .collect();
     let mut new_states: Vec<Lazy<S>> = Vec::with_capacity(n);
     for (i, &a) in anc.iter().enumerate() {
-        let si = shard_of(n, k, i);
-        let sa = shard_of(n, k, a);
-        let child = if si == sa {
+        let dst = new_assign[i];
+        let child = if dst == assign[a] {
             let parent = states[a];
-            shards[si].deep_copy(&parent)
-        } else if let Some(first) = transplanted.get(&(a, si)).copied() {
-            shards[si].deep_copy(&first)
+            shards[dst].deep_copy(&parent)
         } else {
-            let parent = states[a];
-            let (src, dst) = pair_mut(shards, sa, si);
-            let moved = src.extract_into(&parent, dst);
-            let child = dst.deep_copy(&moved);
-            transplanted.insert((a, si), moved);
-            child
+            let moved = transplanted[&(a, dst)];
+            shards[dst].deep_copy(&moved)
         };
         new_states.push(child);
     }
-    for ((_, si), h) in transplanted {
-        shards[si].release(h);
+    // Barrier sample at the resampling spike: parents, transplants, and
+    // offspring are all simultaneously live right here.
+    sample_global_peak(shards);
+    for ((_, dst), h) in transplanted {
+        shards[dst].release(h);
     }
     let old = std::mem::replace(states, new_states);
     for (i, s) in old.into_iter().enumerate() {
-        shards[shard_of(n, k, i)].release(s);
+        shards[assign[i]].release(s);
     }
+    *assign = new_assign;
     for h in shards.iter_mut() {
         h.sweep_memos();
+    }
+    n_ops
+}
+
+/// Plan the offspring → shard assignment for this resampling step and
+/// execute it: the rebalancer entry point. `pin_last` forces the final
+/// slot onto a fixed shard (particle Gibbs keeps the reference
+/// trajectory on the conditional slot's shard) — applied *after*
+/// planning, so the migration count reflects what actually executed.
+/// Returns the executed transplant-op count under an active rebalancing
+/// policy, and 0 for policy `off` (whose boundary crossings are the
+/// static partition's inherent transplants, counted by
+/// `HeapMetrics::transplants`).
+#[allow(clippy::too_many_arguments)]
+fn plan_and_resample<S: Payload>(
+    policy: RebalancePolicy,
+    threshold: f64,
+    shards: &mut [Heap],
+    pool: &ThreadPool,
+    states: &mut Vec<Lazy<S>>,
+    anc: &[usize],
+    assign: &mut Vec<usize>,
+    tracker: &mut CostTracker,
+    pin_last: Option<usize>,
+) -> usize {
+    let k = shards.len();
+    let plan = {
+        // Migration cost model: the ancestor's reachable-subgraph size —
+        // the very set `extract_into` would walk — times a per-object
+        // transplant cost. Consulted lazily (Budget policy only).
+        let migration_cost = |a: usize| {
+            shards[assign[a]].reachable_objects(&[states[a].raw()]) as f64 * TRANSPLANT_COST_S
+        };
+        plan_offspring(
+            policy,
+            threshold,
+            anc,
+            assign.as_slice(),
+            tracker.costs(),
+            k,
+            migration_cost,
+        )
+    };
+    let mut new_assign = plan.assign;
+    if let Some(s_ref) = pin_last {
+        if let Some(last) = new_assign.last_mut() {
+            *last = s_ref;
+        }
+    }
+    tracker.inherit(anc);
+    let executed = resample_population(shards, pool, states, anc, assign, new_assign);
+    if policy == RebalancePolicy::Off {
+        0
+    } else {
+        executed
     }
 }
 
@@ -306,7 +601,7 @@ pub fn run_filter<M: SmcModel + Sync>(
 
 /// Run a particle filter (or forward simulation) over `shards.len()`
 /// heap shards. Output is seed-deterministic and identical for every
-/// shard count.
+/// shard count and every rebalance policy.
 pub fn run_filter_shards<M: SmcModel + Sync>(
     model: &M,
     cfg: &RunConfig,
@@ -332,15 +627,23 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
     let t_max = cfg.n_steps.min(model.horizon());
     let observe = cfg.task == Task::Inference;
     let resampler = Resampler::Systematic;
+    let policy = if k > 1 { cfg.rebalance } else { RebalancePolicy::Off };
+    let balancing = policy != RebalancePolicy::Off;
     let start = Instant::now();
 
-    // Initialize.
+    // Initialize: contiguous starting assignment.
     let mut states = init_population(model, shards, ctx.pool, n, cfg.seed);
+    let mut assign: Vec<usize> = (0..n).map(|i| shard_of(n, k, i)).collect();
+    let mut tracker = CostTracker::new(n);
+    let mut shard_cost = vec![0.0f64; k];
+    let mut hints = vec![1.0f64; n];
+    let mut migrations = 0usize;
     let mut lw = vec![0.0f64; n];
     let mut log_z = 0.0f64;
     let mut series = Vec::new();
     let mut w = Vec::with_capacity(n);
     let mut attempts = 0usize;
+    sample_global_peak(shards);
 
     for t in 1..=t_max {
         // --- Resample (inference only; simulation performs no copies). ---
@@ -354,9 +657,8 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
                     let mut aux = vec![0.0f64; n];
                     let mut any = false;
                     for (i, aux_i) in aux.iter_mut().enumerate() {
-                        let si = shard_of(n, k, i);
                         let mut s = states[i];
-                        if let Some(la) = model.lookahead(&mut shards[si], &mut s, t) {
+                        if let Some(la) = model.lookahead(&mut shards[assign[i]], &mut s, t) {
                             *aux_i = la;
                             any = true;
                         }
@@ -370,7 +672,17 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
                         let anc = resampler.ancestors(&mut rrng, &aw, n);
                         // First-stage correction: w ∝ 1 / lookahead(a).
                         log_z += log_sum_exp(&alw) - (n as f64).ln();
-                        resample_population(shards, &mut states, &anc);
+                        migrations += plan_and_resample(
+                            policy,
+                            cfg.rebalance_threshold,
+                            shards,
+                            ctx.pool,
+                            &mut states,
+                            &anc,
+                            &mut assign,
+                            &mut tracker,
+                            None,
+                        );
                         for (i, &a) in anc.iter().enumerate() {
                             lw[i] = -aux[a];
                         }
@@ -383,7 +695,17 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
                 };
                 if let Some(anc) = ancestors {
                     log_z += log_sum_exp(&lw) - (n as f64).ln();
-                    resample_population(shards, &mut states, &anc);
+                    migrations += plan_and_resample(
+                        policy,
+                        cfg.rebalance_threshold,
+                        shards,
+                        ctx.pool,
+                        &mut states,
+                        &anc,
+                        &mut assign,
+                        &mut tracker,
+                        None,
+                    );
                     lw.iter_mut().for_each(|x| *x = 0.0);
                 }
             }
@@ -440,14 +762,28 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
                 heap.sweep_memos();
             }
             _ => {
-                propagate_prefix(
-                    model, shards, &mut states, &mut lw, n, t, cfg.seed, observe, ctx,
+                propagate_assigned(
+                    model,
+                    shards,
+                    &mut states,
+                    &mut lw,
+                    &assign,
+                    t,
+                    cfg.seed,
+                    observe,
+                    ctx,
+                    balancing.then_some(&mut shard_cost[..]),
+                    balancing.then_some(&mut hints[..]),
                 );
+                if balancing {
+                    tracker.update(&assign, &shard_cost, &hints);
+                }
                 attempts += n;
             }
         }
 
         // --- Metrics snapshot (Figure 7). ---
+        sample_global_peak(shards);
         normalize_log_weights(&lw, &mut w);
         series.push(step_snapshot(shards, t, &start, &w));
     }
@@ -457,9 +793,8 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
     normalize_log_weights(&lw, &mut w);
     let mut post = 0.0;
     for i in 0..n {
-        let si = shard_of(n, k, i);
         let mut s = states[i];
-        post += w[i] * model.summary(&mut shards[si], &mut s);
+        post += w[i] * model.summary(&mut shards[assign[i]], &mut s);
         states[i] = s;
     }
 
@@ -469,12 +804,19 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
         posterior_mean: post,
         wall_s: start.elapsed().as_secs_f64(),
         peak_bytes: agg.peak_bytes,
+        // K = 1: the continuous high-water mark is the exact global peak.
+        global_peak_bytes: if k == 1 {
+            agg.peak_bytes
+        } else {
+            agg.global_peak_bytes
+        },
+        migrations,
         series,
         attempts,
     };
 
     for (i, s) in states.into_iter().enumerate() {
-        shards[shard_of(n, k, i)].release(s);
+        shards[assign[i]].release(s);
     }
     for h in shards.iter_mut() {
         h.sweep_memos();
@@ -498,8 +840,9 @@ pub fn run_particle_gibbs<M: SmcModel + Sync>(
 /// state's sufficient-statistic accumulators). Returns per-iteration
 /// filter results. The inter-iteration single-particle copy is eager, per
 /// the paper's §4 note; the reference trajectory lives on the shard that
-/// owns the conditional slot `n - 1`, and a winner from another shard is
-/// transplanted there (the transplant is itself an eager copy).
+/// owns the conditional slot `n - 1` — the rebalancer pins that slot
+/// there — and a winner from another shard is transplanted there (the
+/// transplant is itself an eager copy).
 pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
     model: &M,
     cfg: &RunConfig,
@@ -511,17 +854,27 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
     let k = shards.len();
     let t_max = cfg.n_steps.min(model.horizon());
     let resampler = Resampler::Systematic;
+    let policy = if k > 1 { cfg.rebalance } else { RebalancePolicy::Off };
+    let balancing = policy != RebalancePolicy::Off;
     let mut results = Vec::new();
     // Shard holding the conditional slot — and the reference trajectory.
     let s_ref = shard_of(n, k, n - 1);
     // Reference trajectory: handles for generations 0..=T (oldest first),
     // all owned by shard `s_ref`.
     let mut reference: Option<Vec<Lazy<M::State>>> = None;
+    let mut shard_cost = vec![0.0f64; k];
+    let mut hints = vec![1.0f64; n];
 
     for iter in 0..cfg.pg_iterations {
         let seed = cfg.seed.wrapping_add(iter as u64 * 0x9E37);
         let start = Instant::now();
         let mut states = init_population(model, shards, ctx.pool, n, seed);
+        let mut assign: Vec<usize> = (0..n).map(|i| shard_of(n, k, i)).collect();
+        // A fresh population every iteration: slot-indexed cost estimates
+        // from the previous iteration's particles are garbage here.
+        let mut tracker = CostTracker::new(n);
+        let mut migrations = 0usize;
+        sample_global_peak(shards);
         // Conditional slot n-1 follows the reference when present.
         if let Some(r) = &reference {
             shards[s_ref].release(states[n - 1]);
@@ -541,22 +894,37 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
                 anc[n - 1] = n - 1;
             }
             log_z += log_sum_exp(&lw) - (n as f64).ln();
-            resample_population(shards, &mut states, &anc);
+            migrations += plan_and_resample(
+                policy,
+                cfg.rebalance_threshold,
+                shards,
+                ctx.pool,
+                &mut states,
+                &anc,
+                &mut assign,
+                &mut tracker,
+                Some(s_ref),
+            );
             lw.iter_mut().for_each(|x| *x = 0.0);
 
             // Propagate free particles; pin + score the conditional one.
             let split = if reference.is_some() { n - 1 } else { n };
-            propagate_prefix(
+            propagate_assigned(
                 model,
                 shards,
                 &mut states[..split],
                 &mut lw[..split],
-                n,
+                &assign[..split],
                 t,
                 seed,
                 true,
                 ctx,
+                balancing.then_some(&mut shard_cost[..]),
+                balancing.then_some(&mut hints[..split]),
             );
+            if balancing {
+                tracker.update(&assign[..split], &shard_cost, &hints[..split]);
+            }
             if let Some(r) = &reference {
                 shards[s_ref].release(states[n - 1]);
                 states[n - 1] = shards[s_ref].clone_handle(&r[t.min(r.len() - 1)]);
@@ -565,6 +933,7 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
                 states[n - 1] = pinned;
             }
 
+            sample_global_peak(shards);
             normalize_log_weights(&lw, &mut w);
             series.push(step_snapshot(shards, t, &start, &w));
         }
@@ -577,7 +946,7 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
         normalize_log_weights(&lw, &mut w);
         let mut srng = resample_rng(seed, t_max + 1);
         let winner = srng.categorical(&w);
-        let s_win = shard_of(n, k, winner);
+        let s_win = assign[winner];
         let eager_ref = if s_win == s_ref {
             shards[s_ref].deep_copy_eager(&states[winner])
         } else {
@@ -596,13 +965,12 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
 
         let mut post = 0.0;
         for i in 0..n {
-            let si = shard_of(n, k, i);
             let mut s = states[i];
-            post += w[i] * model.summary(&mut shards[si], &mut s);
+            post += w[i] * model.summary(&mut shards[assign[i]], &mut s);
             states[i] = s;
         }
         for (i, s) in states.into_iter().enumerate() {
-            shards[shard_of(n, k, i)].release(s);
+            shards[assign[i]].release(s);
         }
         for h in shards.iter_mut() {
             h.sweep_memos();
@@ -614,6 +982,12 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
             posterior_mean: post,
             wall_s: start.elapsed().as_secs_f64(),
             peak_bytes: agg.peak_bytes,
+            global_peak_bytes: if k == 1 {
+                agg.peak_bytes
+            } else {
+                agg.global_peak_bytes
+            },
+            migrations,
             series,
             attempts: n * t_max,
         });
@@ -627,4 +1001,16 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
         h.sweep_memos();
     }
     results
+}
+
+/// Disjoint `&mut` access to two different shards.
+fn pair_mut<T>(xs: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = xs.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = xs.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
 }

@@ -4,6 +4,7 @@
 
 pub mod filter;
 pub mod model;
+pub mod rebalance;
 pub mod resample;
 
 pub use filter::{
@@ -11,6 +12,7 @@ pub use filter::{
     FilterResult, Method, StepMetrics,
 };
 pub use model::{particle_rng, resample_rng, SmcModel, StepCtx};
+pub use rebalance::{plan_offspring, CostTracker, OffspringPlan, RebalancePolicy};
 pub use resample::Resampler;
 
 #[cfg(test)]

@@ -94,6 +94,17 @@ pub trait SmcModel {
         lw > f64::NEG_INFINITY
     }
 
+    /// Relative per-particle propagation-cost hint used by the shard
+    /// rebalancer to apportion a shard's measured generation cost among
+    /// its particles (larger = more expensive to propagate). Models with
+    /// unbounded per-particle structure override this with a cheap size
+    /// probe (PCFG: derivation-stack depth; MOT: track count). The
+    /// default treats all particles as equal. Never affects filter
+    /// output — only where heap work is scheduled.
+    fn cost_hint(&self, _heap: &mut Heap, _state: &mut Lazy<Self::State>) -> f64 {
+        1.0
+    }
+
     /// A scalar summary of a particle (posterior-mean reporting and the
     /// cross-configuration output equality check).
     fn summary(&self, heap: &mut Heap, state: &mut Lazy<Self::State>) -> f64;

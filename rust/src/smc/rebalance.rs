@@ -1,0 +1,368 @@
+//! Cost-driven particle rebalancing over heap shards.
+//!
+//! The paper's motivating workloads carry populations of objects of
+//! *random, possibly unbounded* size (derivation stacks, track arrays,
+//! trees), so per-particle propagation cost is heavy-tailed and a static
+//! contiguous partition of particles over shards leaves some shards idle
+//! while others grind. This module closes that gap with three pieces:
+//!
+//! 1. **Cost accounting** ([`CostTracker`]): a per-particle EWMA cost
+//!    estimate fed by the measured per-shard generation cost (wall time
+//!    plus a charge per heap operation — allocs, copies, pulls — from the
+//!    [`HeapMetrics`](crate::heap::HeapMetrics) deltas), apportioned
+//!    within a shard by the model's [`cost_hint`]
+//!    (crate::smc::SmcModel::cost_hint) (e.g. PCFG stack depth, MOT track
+//!    count). Offspring inherit their ancestor's estimate at resampling.
+//! 2. **Planning** ([`plan_offspring`]): at each resampling step a greedy
+//!    longest-processing-time pass assigns offspring to shards, biased to
+//!    keep offspring on their ancestor's shard and migrating only when
+//!    the predicted imbalance exceeds a configurable threshold. The
+//!    `Budget` policy additionally requires the predicted gain to exceed
+//!    a migration cost modeled from the ancestor's reachable-subgraph
+//!    size (the same subgraph `extract_into` traverses).
+//! 3. **Execution** (in `smc::filter`): the plan groups all cross-shard
+//!    offspring of one ancestor per destination into a single transplant,
+//!    and pairwise-disjoint (src, dst) transplants run concurrently via
+//!    [`ThreadPool::for_pairs`](crate::pool::ThreadPool::for_pairs).
+//!
+//! **Determinism.** Rebalancing only moves *where* heap work runs, never
+//! what is computed: RNG streams are keyed by global particle index and
+//! all weight reductions run in global index order, so the filter output
+//! is bit-identical for every shard count and every policy — including
+//! `Off`, which reproduces the static contiguous partition exactly.
+
+use crate::heap::shard_of;
+use std::collections::{BTreeSet, HashMap};
+
+/// Estimated seconds charged per heap operation (alloc / copy / pull) on
+/// top of the measured wall time, so op-heavy generations register even
+/// when the clock resolution is coarse.
+pub const OP_COST_S: f64 = 2e-8;
+
+/// Estimated seconds per transplanted object (the per-object cost of the
+/// `extract_into` walk + allocation in the destination shard), used by
+/// the `Budget` policy's migration-cost model.
+pub const TRANSPLANT_COST_S: f64 = 2e-7;
+
+/// Offspring-to-shard assignment policy applied at each resampling step.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RebalancePolicy {
+    /// Static contiguous partition (the pre-rebalancing behaviour).
+    Off,
+    /// Greedy LPT with ancestor-shard stickiness: migrate whenever the
+    /// predicted imbalance exceeds the threshold.
+    Greedy,
+    /// Greedy LPT that additionally charges each new transplant its
+    /// modeled migration cost: migrate only when the predicted gain
+    /// exceeds the cost of moving the ancestor's reachable subgraph.
+    Budget,
+}
+
+impl RebalancePolicy {
+    pub fn parse(s: &str) -> Option<RebalancePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "static" | "none" => Some(RebalancePolicy::Off),
+            "greedy" => Some(RebalancePolicy::Greedy),
+            "budget" => Some(RebalancePolicy::Budget),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RebalancePolicy::Off => "off",
+            RebalancePolicy::Greedy => "greedy",
+            RebalancePolicy::Budget => "budget",
+        }
+    }
+
+    pub const ALL: [RebalancePolicy; 3] = [
+        RebalancePolicy::Off,
+        RebalancePolicy::Greedy,
+        RebalancePolicy::Budget,
+    ];
+}
+
+/// Per-particle propagation-cost estimates (EWMA over generations).
+///
+/// Costs start at zero, so the first resampling step plans the static
+/// sticky assignment; estimates sharpen as measured generations arrive.
+pub struct CostTracker {
+    costs: Vec<f64>,
+    alpha: f64,
+}
+
+impl CostTracker {
+    pub fn new(n: usize) -> Self {
+        CostTracker {
+            costs: vec![0.0; n],
+            alpha: 0.5,
+        }
+    }
+
+    /// Current per-particle cost estimates (indexed by global particle
+    /// slot).
+    pub fn costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// Resampling: offspring slot `i` inherits ancestor `anc[i]`'s cost.
+    pub fn inherit(&mut self, anc: &[usize]) {
+        let new: Vec<f64> = anc.iter().map(|&a| self.costs[a]).collect();
+        for (c, v) in self.costs.iter_mut().zip(new) {
+            *c = v;
+        }
+    }
+
+    /// Fold one measured generation back into the estimates. `assign[i]`
+    /// is particle `i`'s shard, `shard_cost[s]` the measured cost of
+    /// shard `s`'s generation (seconds + op charge), and `hints[i]` the
+    /// model's relative per-particle weight used to apportion a shard's
+    /// cost among its particles. Slices may cover a prefix of the
+    /// population (particle Gibbs pins the last slot); untouched slots
+    /// keep their previous estimate.
+    pub fn update(&mut self, assign: &[usize], shard_cost: &[f64], hints: &[f64]) {
+        debug_assert_eq!(assign.len(), hints.len());
+        let k = shard_cost.len();
+        let mut hint_sum = vec![0.0f64; k];
+        for (i, &s) in assign.iter().enumerate() {
+            hint_sum[s] += hints[i].max(1e-12);
+        }
+        for (i, &s) in assign.iter().enumerate() {
+            if hint_sum[s] <= 0.0 || !shard_cost[s].is_finite() {
+                continue;
+            }
+            let raw = shard_cost[s] * hints[i].max(1e-12) / hint_sum[s];
+            self.costs[i] = (1.0 - self.alpha) * self.costs[i] + self.alpha * raw;
+        }
+    }
+}
+
+/// Result of [`plan_offspring`]: the shard each offspring lands on, and
+/// the number of distinct (ancestor, destination) transplants the plan
+/// requires beyond the static stickiness baseline.
+pub struct OffspringPlan {
+    pub assign: Vec<usize>,
+    pub transplant_pairs: usize,
+}
+
+/// Plan the offspring → shard assignment for one resampling step.
+///
+/// `anc[i]` is offspring `i`'s ancestor, `parent_shard[a]` the shard the
+/// ancestor currently lives on, `cost[a]` the predicted cost of one of
+/// its offspring (the ancestor's [`CostTracker`] estimate), and
+/// `migration_cost(a)` the modeled one-off cost of transplanting the
+/// ancestor's lineage to a new shard (consulted lazily, `Budget` only).
+///
+/// The pass walks offspring in descending predicted cost (LPT) and
+/// assigns each to its ancestor's shard unless the load gap to the
+/// least-loaded shard exceeds `threshold` × mean shard load — in which
+/// case it migrates (for `Budget`, only if the gap also exceeds the
+/// migration cost, unless a transplant of the same ancestor to the same
+/// destination is already planned and the marginal cost is zero). Fully
+/// deterministic given its inputs: ties break on the lowest shard index
+/// and the stable offspring order.
+pub fn plan_offspring(
+    policy: RebalancePolicy,
+    threshold: f64,
+    anc: &[usize],
+    parent_shard: &[usize],
+    cost: &[f64],
+    k: usize,
+    mut migration_cost: impl FnMut(usize) -> f64,
+) -> OffspringPlan {
+    let n = anc.len();
+    if k <= 1 || policy == RebalancePolicy::Off {
+        return OffspringPlan {
+            assign: (0..n).map(|i| shard_of(n, k, i)).collect(),
+            transplant_pairs: 0,
+        };
+    }
+    // LPT order: offspring by descending predicted cost, stable on index.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        cost[anc[b]]
+            .partial_cmp(&cost[anc[a]])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let total: f64 = anc.iter().map(|&a| cost[a].max(0.0)).sum();
+    let mean_load = total / k as f64;
+    let mut loads = vec![0.0f64; k];
+    let mut assign = vec![0usize; n];
+    let mut planned: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut mig_cache: HashMap<usize, f64> = HashMap::new();
+    for i in order {
+        let a = anc[i];
+        let home = parent_shard[a];
+        let c = cost[a].max(0.0);
+        let best = (0..k)
+            .min_by(|&x, &y| {
+                loads[x]
+                    .partial_cmp(&loads[y])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap_or(0);
+        let gap = loads[home] - loads[best];
+        let migrate = best != home
+            && gap > threshold * mean_load
+            && match policy {
+                RebalancePolicy::Greedy => true,
+                RebalancePolicy::Budget => {
+                    // A transplant already planned for (a, best) makes this
+                    // offspring's migration marginally free (it reuses the
+                    // transplanted lineage with an O(1) lazy copy).
+                    planned.contains(&(a, best)) || {
+                        let mc = *mig_cache
+                            .entry(a)
+                            .or_insert_with(|| migration_cost(a));
+                        gap > mc
+                    }
+                }
+                RebalancePolicy::Off => unreachable!(),
+            };
+        let dst = if migrate { best } else { home };
+        if dst != home {
+            planned.insert((a, dst));
+        }
+        assign[i] = dst;
+        loads[dst] += c;
+    }
+    OffspringPlan {
+        transplant_pairs: planned.len(),
+        assign,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in RebalancePolicy::ALL {
+            assert_eq!(RebalancePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RebalancePolicy::parse("static"), Some(RebalancePolicy::Off));
+        assert_eq!(RebalancePolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn off_policy_is_static_partition() {
+        let anc = vec![0usize, 0, 1, 2, 3, 3];
+        let parent_shard = vec![0usize, 0, 0, 1, 1, 1];
+        let cost = vec![1.0; 6];
+        let plan = plan_offspring(
+            RebalancePolicy::Off,
+            0.25,
+            &anc,
+            &parent_shard,
+            &cost,
+            2,
+            |_| 0.0,
+        );
+        assert_eq!(plan.transplant_pairs, 0);
+        for (i, &s) in plan.assign.iter().enumerate() {
+            assert_eq!(s, shard_of(6, 2, i));
+        }
+    }
+
+    #[test]
+    fn zero_costs_stay_sticky() {
+        // Before any measurement (all costs zero) nothing migrates.
+        let anc = vec![0usize, 0, 0, 0, 3, 3];
+        let parent_shard = vec![0usize, 0, 0, 1, 1, 1];
+        let cost = vec![0.0; 6];
+        let plan = plan_offspring(
+            RebalancePolicy::Greedy,
+            0.25,
+            &anc,
+            &parent_shard,
+            &cost,
+            2,
+            |_| 0.0,
+        );
+        assert_eq!(plan.transplant_pairs, 0);
+        assert!(plan.assign.iter().take(4).all(|&s| s == 0));
+        assert!(plan.assign.iter().skip(4).all(|&s| s == 1));
+    }
+
+    #[test]
+    fn greedy_migrates_under_skew() {
+        // One heavy ancestor on shard 0 spawns every offspring; greedy
+        // must spread the load across both shards.
+        let n = 8;
+        let anc = vec![0usize; n];
+        let parent_shard = vec![0usize; n];
+        let mut cost = vec![0.0; n];
+        cost[0] = 1.0;
+        let plan = plan_offspring(
+            RebalancePolicy::Greedy,
+            0.1,
+            &anc,
+            &parent_shard,
+            &cost,
+            2,
+            |_| 0.0,
+        );
+        let on0 = plan.assign.iter().filter(|&&s| s == 0).count();
+        let on1 = n - on0;
+        assert_eq!(on0, on1, "load must split evenly: {:?}", plan.assign);
+        assert_eq!(plan.transplant_pairs, 1, "one (ancestor, dst) pair");
+    }
+
+    #[test]
+    fn budget_blocks_expensive_migrations() {
+        let n = 8;
+        let anc = vec![0usize; n];
+        let parent_shard = vec![0usize; n];
+        let mut cost = vec![0.0; n];
+        cost[0] = 1.0;
+        // Migration cost dwarfs any gap: everything stays home.
+        let plan = plan_offspring(
+            RebalancePolicy::Budget,
+            0.1,
+            &anc,
+            &parent_shard,
+            &cost,
+            2,
+            |_| 1e9,
+        );
+        assert!(plan.assign.iter().all(|&s| s == 0));
+        assert_eq!(plan.transplant_pairs, 0);
+        // Free migration behaves like greedy.
+        let plan = plan_offspring(
+            RebalancePolicy::Budget,
+            0.1,
+            &anc,
+            &parent_shard,
+            &cost,
+            2,
+            |_| 0.0,
+        );
+        assert_eq!(plan.transplant_pairs, 1);
+    }
+
+    #[test]
+    fn tracker_inherits_and_updates() {
+        let mut t = CostTracker::new(4);
+        t.update(&[0, 0, 1, 1], &[4.0, 8.0], &[1.0, 3.0, 1.0, 1.0]);
+        // Shard 0's cost 4.0 splits 1:3; shard 1's cost 8.0 splits 1:1.
+        let c = t.costs().to_vec();
+        assert!((c[0] - 0.5).abs() < 1e-12, "{c:?}");
+        assert!((c[1] - 1.5).abs() < 1e-12, "{c:?}");
+        assert!((c[2] - 2.0).abs() < 1e-12, "{c:?}");
+        assert!((c[3] - 2.0).abs() < 1e-12, "{c:?}");
+        // Offspring of particle 1 everywhere.
+        t.inherit(&[1, 1, 1, 1]);
+        assert!(t.costs().iter().all(|&x| (x - 1.5).abs() < 1e-12));
+    }
+
+    #[test]
+    fn tracker_ignores_non_finite_measurements() {
+        let mut t = CostTracker::new(2);
+        t.update(&[0, 1], &[f64::NAN, 2.0], &[1.0, 1.0]);
+        assert_eq!(t.costs()[0], 0.0);
+        assert!((t.costs()[1] - 1.0).abs() < 1e-12);
+    }
+}

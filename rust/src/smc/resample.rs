@@ -26,8 +26,22 @@ impl Resampler {
         }
     }
 
-    /// Draw `n` ancestor indices from normalized weights `w`.
+    /// Draw `n` ancestor indices from (unnormalized) weights `w`.
+    ///
+    /// Degenerate weight vectors are repaired first (see
+    /// [`sanitize_weights`]): non-finite or negative entries are zeroed,
+    /// and an all-zero / non-finite total falls back to uniform weights —
+    /// so every scheme upholds its contract (exactly `n` ancestors, all
+    /// `< w.len()`) instead of panicking or silently biasing toward
+    /// index 0. Well-formed inputs are passed through untouched, with no
+    /// extra RNG draws, so seeded runs are unaffected.
     pub fn ancestors(&self, rng: &mut Pcg64, w: &[f64], n: usize) -> Vec<usize> {
+        assert!(!w.is_empty() || n == 0, "resampling from an empty population");
+        if n == 0 {
+            return Vec::new();
+        }
+        let cleaned = sanitize_weights(w);
+        let w = cleaned.as_deref().unwrap_or(w);
         match self {
             Resampler::Multinomial => multinomial(rng, w, n),
             Resampler::Systematic => systematic(rng, w, n),
@@ -35,6 +49,52 @@ impl Resampler {
             Resampler::Residual => residual(rng, w, n),
         }
     }
+}
+
+/// Repair a degenerate weight vector, honoring the input's intent as
+/// far as it is expressible:
+///
+/// - any `+inf` entry dominates every finite one, so infinite entries
+///   become the support (uniform among themselves, zero elsewhere);
+/// - otherwise NaN and negative entries become zero;
+/// - a finite vector whose *sum* overflows to infinity is rescaled by
+///   its maximum entry (preserving every relative weight);
+/// - only when the total is still zero or non-finite (all particles
+///   "impossible") does every particle get equal weight — the only
+///   unbiased choice consistent with resampling's contract.
+///
+/// Returns `None` when `w` is already well-formed (the hot path: no
+/// allocation, no change).
+pub fn sanitize_weights(w: &[f64]) -> Option<Vec<f64>> {
+    let ok = |x: f64| x.is_finite() && x >= 0.0;
+    let total: f64 = w.iter().sum();
+    if w.iter().all(|&x| ok(x)) && total.is_finite() && total > 0.0 {
+        return None;
+    }
+    let mut v: Vec<f64> = if w.iter().any(|&x| x == f64::INFINITY) {
+        // An infinite weight marks a particle infinitely more likely
+        // than any finite peer: the infinite set takes everything.
+        w.iter()
+            .map(|&x| if x == f64::INFINITY { 1.0 } else { 0.0 })
+            .collect()
+    } else {
+        w.iter().map(|&x| if ok(x) { x } else { 0.0 }).collect()
+    };
+    let total: f64 = v.iter().sum();
+    if !total.is_finite() {
+        // Finite entries, infinite sum: rescale by the max instead of
+        // flattening — relative weights (and hence offspring counts)
+        // survive the overflow.
+        let max = v.iter().cloned().fold(0.0f64, f64::max);
+        if max > 0.0 {
+            v.iter_mut().for_each(|x| *x /= max);
+        }
+    }
+    let total: f64 = v.iter().sum();
+    if !(total.is_finite() && total > 0.0) {
+        v.iter_mut().for_each(|x| *x = 1.0);
+    }
+    Some(v)
 }
 
 /// Multinomial: iid categorical draws (sorted for cache-friendly copying;
@@ -94,8 +154,20 @@ pub fn residual(rng: &mut Pcg64, w: &[f64], n: usize) -> Vec<usize> {
         }
         residuals.push(expect - k as f64);
     }
-    while out.len() < n {
-        out.push(rng.categorical(&residuals));
+    // The residual total is n - Σ floors in exact arithmetic, but float
+    // rounding can leave it at zero while floors still undercount n;
+    // categorical over an all-zero vector would be undefined, so fall
+    // back to the largest original weight for the missing slots.
+    let residual_total: f64 = residuals.iter().sum();
+    if residual_total > 0.0 {
+        while out.len() < n {
+            out.push(rng.categorical(&residuals));
+        }
+    } else if out.len() < n {
+        let top = (0..w.len())
+            .max_by(|&a, &b| w[a].partial_cmp(&w[b]).unwrap_or(std::cmp::Ordering::Equal))
+            .unwrap_or(0);
+        out.resize(n, top);
     }
     out.truncate(n);
     out.sort_unstable();
@@ -182,5 +254,129 @@ mod tests {
             let a2 = r.ancestors(&mut Pcg64::new(9), &w, 32);
             assert_eq!(a1, a2, "{r:?}");
         }
+    }
+
+    /// The resampling contract — exactly `n` ancestors, all in range,
+    /// offspring counts summing to `n` — holds for every scheme across
+    /// well-formed, skewed, and degenerate weight vectors.
+    #[test]
+    fn contract_holds_for_all_schemes_and_weights() {
+        let cases: Vec<Vec<f64>> = vec![
+            vec![0.25, 0.25, 0.25, 0.25],
+            vec![1.0, 3.0, 6.0],
+            vec![1e-300, 1.0, 1e-300],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 0.0],              // all-zero: uniform fallback
+            vec![f64::NAN, 1.0, 2.0],         // NaN entry zeroed
+            vec![f64::NAN, f64::NAN],         // all-NaN: uniform fallback
+            vec![-1.0, 2.0, -3.0],            // negatives zeroed
+            vec![f64::INFINITY, 1.0],         // +inf dominates
+            vec![1.0],                        // single parent
+        ];
+        for (ci, w) in cases.iter().enumerate() {
+            for r in ALL {
+                for n in [0usize, 1, 7, 64] {
+                    let mut rng = Pcg64::new(1000 + ci as u64);
+                    let a = r.ancestors(&mut rng, w, n);
+                    assert_eq!(a.len(), n, "{r:?} case {ci} n={n}: wrong count");
+                    assert!(
+                        a.iter().all(|&i| i < w.len()),
+                        "{r:?} case {ci} n={n}: ancestor out of range: {a:?}"
+                    );
+                    let counts = offspring_counts(&a, w.len());
+                    assert_eq!(
+                        counts.iter().sum::<usize>(),
+                        n,
+                        "{r:?} case {ci} n={n}: counts must sum to n"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Zeroed entries (NaN, negative) never receive offspring while a
+    /// valid positive weight exists.
+    #[test]
+    fn repaired_entries_get_no_offspring() {
+        for r in ALL {
+            let mut rng = Pcg64::new(77);
+            let a = r.ancestors(&mut rng, &[f64::NAN, 1.0, -5.0], 40);
+            assert!(a.iter().all(|&i| i == 1), "{r:?}: {a:?}");
+        }
+    }
+
+    /// An infinite weight dominates every finite one — repair must not
+    /// invert the bias by zeroing it.
+    #[test]
+    fn infinite_weight_takes_all() {
+        assert_eq!(
+            sanitize_weights(&[f64::INFINITY, 1.0]).unwrap(),
+            vec![1.0, 0.0]
+        );
+        assert_eq!(
+            sanitize_weights(&[f64::INFINITY, 1e300, f64::INFINITY]).unwrap(),
+            vec![1.0, 0.0, 1.0]
+        );
+        for r in ALL {
+            let mut rng = Pcg64::new(88);
+            let a = r.ancestors(&mut rng, &[1e-300, f64::INFINITY, 5.0], 40);
+            assert!(a.iter().all(|&i| i == 1), "{r:?}: {a:?}");
+        }
+    }
+
+    /// All-zero weights fall back to uniform resampling: every parent is
+    /// reachable and low-variance schemes spread offspring evenly.
+    #[test]
+    fn all_zero_weights_resample_uniformly() {
+        let mut rng = Pcg64::new(5);
+        let a = systematic(&mut rng, &[1.0, 1.0, 1.0, 1.0], 4);
+        assert_eq!(offspring_counts(&a, 4), vec![1, 1, 1, 1]);
+        let mut rng = Pcg64::new(5);
+        let a = Resampler::Systematic.ancestors(&mut rng, &[0.0; 4], 4);
+        assert_eq!(
+            offspring_counts(&a, 4),
+            vec![1, 1, 1, 1],
+            "uniform fallback must match explicit uniform weights"
+        );
+    }
+
+    /// Sanitize passes well-formed vectors through untouched (no
+    /// allocation, so seeded streams cannot shift).
+    #[test]
+    fn sanitize_is_identity_on_valid_weights() {
+        assert!(sanitize_weights(&[0.2, 0.8]).is_none());
+        assert!(sanitize_weights(&[1e-300, 1.0]).is_none());
+        let repaired = sanitize_weights(&[f64::NAN, 2.0]).unwrap();
+        assert_eq!(repaired, vec![0.0, 2.0]);
+        let uniform = sanitize_weights(&[0.0, 0.0]).unwrap();
+        assert_eq!(uniform, vec![1.0, 1.0]);
+        // An overflowing total rescales by the max, preserving relative
+        // weights rather than flattening them.
+        let overflow = sanitize_weights(&[f64::MAX, f64::MAX]).unwrap();
+        assert_eq!(overflow, vec![1.0, 1.0]);
+        let skewed = sanitize_weights(&[f64::MAX, f64::MAX, 1.0]).unwrap();
+        assert_eq!(skewed[0], 1.0);
+        assert_eq!(skewed[1], 1.0);
+        assert!(skewed[2] < 1e-300, "tiny relative weight preserved: {skewed:?}");
+    }
+
+    /// A negligible particle keeps negligible offspring counts through
+    /// the overflow repair (the repair must not flatten to uniform).
+    #[test]
+    fn overflow_repair_preserves_offspring_ratios() {
+        for r in ALL {
+            let mut rng = Pcg64::new(321);
+            let a = r.ancestors(&mut rng, &[f64::MAX, f64::MAX, 1.0], 60);
+            let counts = offspring_counts(&a, 3);
+            assert_eq!(counts[2], 0, "{r:?}: negligible particle got offspring: {counts:?}");
+            assert_eq!(counts[0] + counts[1], 60);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty population")]
+    fn empty_weights_with_offspring_panics() {
+        let mut rng = Pcg64::new(1);
+        let _ = Resampler::Systematic.ancestors(&mut rng, &[], 4);
     }
 }

@@ -1,6 +1,7 @@
-//! Cross-shard lineage transplant: seeded equivalence across shard
-//! counts against the single-heap baseline and the closed-form LGSS
-//! oracle, plus heap-metrics balance after transplants.
+//! Cross-shard lineage transplant and rebalancing: seeded equivalence
+//! across shard counts *and rebalance policies* against the single-heap
+//! baseline and the closed-form LGSS oracle, plus heap-metrics balance
+//! after transplants/migrations and the exact global-peak invariants.
 
 use lazycow::config::{Model, RunConfig, Task};
 use lazycow::heap::{shard_of, CopyMode, Heap, ShardedHeap};
@@ -8,7 +9,7 @@ use lazycow::models::{Crbd, ListModel};
 use lazycow::pool::ThreadPool;
 use lazycow::smc::{
     run_filter, run_filter_shards, run_particle_gibbs, run_particle_gibbs_shards, Method,
-    SmcModel, StepCtx,
+    RebalancePolicy, SmcModel, StepCtx,
 };
 
 fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
@@ -23,12 +24,13 @@ fn lgss_cfg(n: usize, t: usize) -> RunConfig {
     cfg
 }
 
-/// K ∈ {1, 2, 4} on the LGSS oracle model (a 1-D linear-Gaussian SSM with
-/// exact Kalman evidence): every shard count must reproduce the
-/// single-heap baseline bit-for-bit, in every copy mode, and stay close
-/// to the oracle.
+/// The full equivalence matrix: rebalance policy × K ∈ {1, 2, 4} × copy
+/// mode on the LGSS oracle model (a 1-D linear-Gaussian SSM with exact
+/// Kalman evidence). Every cell must reproduce the single-heap baseline
+/// bit-for-bit — rebalancing moves heap work between shards, never what
+/// is computed — and stay close to the oracle.
 #[test]
-fn lgss_shard_counts_match_single_heap_bitwise() {
+fn lgss_policy_shard_mode_matrix_bitwise() {
     let model = ListModel::synthetic(40, 11);
     let exact = model.exact_evidence();
     let pool = ThreadPool::new(4);
@@ -43,40 +45,93 @@ fn lgss_shard_counts_match_single_heap_bitwise() {
     );
     assert_eq!(baseline.live_objects(), 0);
 
-    for mode in CopyMode::ALL {
-        for k in [1usize, 2, 4] {
-            let mut sh = ShardedHeap::new(mode, k);
-            let r = run_filter_shards(
-                &model,
-                &cfg,
-                sh.shards_mut(),
-                &ctx(&pool),
-                Method::Bootstrap,
-            );
-            assert_eq!(
-                r.log_evidence.to_bits(),
-                base.log_evidence.to_bits(),
-                "{mode:?} K={k}: log_evidence differs from single-heap baseline"
-            );
-            assert_eq!(
-                r.posterior_mean.to_bits(),
-                base.posterior_mean.to_bits(),
-                "{mode:?} K={k}: posterior_mean differs from single-heap baseline"
-            );
-            assert_eq!(sh.live_objects(), 0, "{mode:?} K={k} leaked");
-            let m = sh.metrics();
-            assert_eq!(
-                m.total_allocs,
-                m.total_frees + m.live_objects,
-                "{mode:?} K={k}: alloc/free/live balance broken after transplants"
-            );
-            if k > 1 && mode.is_lazy() {
-                assert!(
-                    m.transplants > 0,
-                    "{mode:?} K={k}: resampling never crossed a shard boundary"
+    for policy in RebalancePolicy::ALL {
+        for mode in CopyMode::ALL {
+            for k in [1usize, 2, 4] {
+                let mut cfg = cfg.clone();
+                cfg.mode = mode;
+                cfg.rebalance = policy;
+                let mut sh = ShardedHeap::new(mode, k);
+                let r = run_filter_shards(
+                    &model,
+                    &cfg,
+                    sh.shards_mut(),
+                    &ctx(&pool),
+                    Method::Bootstrap,
                 );
+                assert_eq!(
+                    r.log_evidence.to_bits(),
+                    base.log_evidence.to_bits(),
+                    "{policy:?}/{mode:?}/K={k}: log_evidence differs from baseline"
+                );
+                assert_eq!(
+                    r.posterior_mean.to_bits(),
+                    base.posterior_mean.to_bits(),
+                    "{policy:?}/{mode:?}/K={k}: posterior_mean differs from baseline"
+                );
+                assert_eq!(sh.live_objects(), 0, "{policy:?}/{mode:?}/K={k} leaked");
+                let m = sh.metrics();
+                assert_eq!(
+                    m.total_allocs,
+                    m.total_frees + m.live_objects,
+                    "{policy:?}/{mode:?}/K={k}: alloc/free/live balance broken"
+                );
+                // Exact global peak never exceeds the sum-of-peaks bound,
+                // and both are reported.
+                assert!(
+                    r.global_peak_bytes <= r.peak_bytes,
+                    "{policy:?}/{mode:?}/K={k}: global peak {} above sum-of-peaks {}",
+                    r.global_peak_bytes,
+                    r.peak_bytes
+                );
+                assert!(r.global_peak_bytes > 0);
+                if k == 1 {
+                    assert_eq!(
+                        r.global_peak_bytes, r.peak_bytes,
+                        "K=1: the continuous peak is the exact global peak"
+                    );
+                    assert_eq!(r.migrations, 0, "K=1 can never migrate");
+                }
+                if k > 1 && mode.is_lazy() && policy == RebalancePolicy::Off {
+                    assert!(
+                        m.transplants > 0,
+                        "{mode:?} K={k}: static partition never crossed a shard boundary"
+                    );
+                }
             }
         }
+    }
+}
+
+/// With a zero imbalance threshold and skewed per-particle costs the
+/// greedy planner must actually migrate — and the per-shard alloc/free
+/// balance and bitwise output equivalence must survive those migrations.
+#[test]
+fn forced_migrations_keep_balance_and_output() {
+    let model = ListModel::synthetic(30, 19);
+    let pool = ThreadPool::new(4);
+    let mut cfg = lgss_cfg(96, 30);
+
+    let mut baseline = Heap::new(CopyMode::LazySro);
+    let base = run_filter(&model, &cfg, &mut baseline, &ctx(&pool), Method::Bootstrap);
+
+    cfg.rebalance = RebalancePolicy::Greedy;
+    cfg.rebalance_threshold = 0.0; // any imbalance migrates
+    let mut sh = ShardedHeap::new(CopyMode::LazySro, 4);
+    let r = run_filter_shards(&model, &cfg, sh.shards_mut(), &ctx(&pool), Method::Bootstrap);
+    assert_eq!(r.log_evidence.to_bits(), base.log_evidence.to_bits());
+    assert_eq!(r.posterior_mean.to_bits(), base.posterior_mean.to_bits());
+    assert!(
+        r.migrations > 0,
+        "zero threshold over 30 resampling steps must migrate at least once"
+    );
+    assert_eq!(sh.live_objects(), 0, "migrations leaked");
+    for (s, h) in sh.shards().iter().enumerate() {
+        assert_eq!(
+            h.metrics.total_allocs,
+            h.metrics.total_frees + h.metrics.live_objects,
+            "shard {s}: balance broken after migrations"
+        );
     }
 }
 
