@@ -428,82 +428,117 @@ fn bench_shards(backend: &Backend) {
     }
 }
 
-/// Rebalance-policy sweep (the cost-driven rebalancer's acceptance
-/// benchmark): wall time, exact global peak, migrations, and transplants
-/// per policy at K = 4 on the PCFG workload — whose per-particle
-/// derivation stacks are the heavy-tailed population the rebalancer
-/// targets (sentence lengths vary by orders of magnitude, so the static
-/// partition leaves shards idle while one grinds). Emits one JSON record
-/// per (policy, K) cell; outputs are asserted bit-identical across
-/// policies, so the sweep measures pure scheduling effect.
+/// Rebalance + steal sweep (the scheduling layer's acceptance benchmark):
+/// wall time, exact global peak, migrations, transplants, and steals per
+/// cell at K = 4, on *both* skewed workloads. PCFG (auxiliary PF — the
+/// propagation paths work stealing applies to) sweeps policy × steal
+/// on/off, so steal-on vs steal-off regressions and any output
+/// divergence show up directly in CI logs. CRBD (alive PF, whose
+/// per-particle cost tracks the inferred birth rate via retry-heavy
+/// hidden-subtree simulation) sweeps policy only: its rounds executor
+/// self-balances within a generation, so the steal flag is inert there
+/// by design — what varies is the rebalancer acting on the rounds'
+/// measured costs. Emits one JSON record per cell; outputs are asserted
+/// bit-identical across every cell of a model, so the sweep measures
+/// pure scheduling effect.
 fn bench_rebalance(backend: &Backend) {
     use lazycow::smc::RebalancePolicy;
-    println!("\n== Rebalance sweep: policy × wall time on skewed PCFG (K = 4, JSON per cell) ==");
+    println!(
+        "\n== Rebalance sweep: policy × steal on skewed PCFG + CRBD (K = 4, JSON per cell) =="
+    );
     let threads = backend.pool.n_threads();
     let k = 4usize;
-    let mut baseline_evidence: Option<u64> = None;
-    let mut off_median: Option<f64> = None;
-    for policy in RebalancePolicy::ALL {
-        let mut cfg = RunConfig::for_model(Model::Pcfg, Task::Inference, CopyMode::LazySro);
-        if paper_scale() {
-            let (n, t_inf, _) = Model::Pcfg.paper_scale();
-            cfg.n_particles = n;
-            cfg.n_steps = t_inf;
-        }
-        cfg.shards = k;
-        cfg.rebalance = policy;
-        let n_particles = cfg.n_particles;
-        let t_steps = cfg.n_steps;
-        let mut migrations = 0usize;
-        let mut transplants = 0usize;
-        let mut global_peak = 0usize;
-        let mut evidence_bits = 0u64;
-        let cell = {
-            let migrations = &mut migrations;
-            let transplants = &mut transplants;
-            let global_peak = &mut global_peak;
-            let evidence_bits = &mut evidence_bits;
-            run_cell(&format!("pcfg/{}", policy.name()), reps(), move |rep| {
-                let mut c = cfg.clone();
-                c.seed = 20200401u64.wrapping_add(rep as u64);
-                let mut heap = ShardedHeap::new(c.mode, k);
-                let r = run_model(&c, &mut heap, &backend.ctx());
-                if rep == 0 {
-                    *migrations = r.migrations;
-                    *transplants = heap.metrics().transplants;
-                    *global_peak = r.global_peak_bytes;
-                    *evidence_bits = r.log_evidence.to_bits();
-                }
-                Some(r.global_peak_bytes as f64)
-            })
+    for model in [Model::Pcfg, Model::Crbd] {
+        // The steal axis only exists on the stealing propagation paths;
+        // the alive PF's rounds executor ignores it (see above).
+        let steal_axis: &[bool] = if model == Model::Pcfg {
+            &[false, true]
+        } else {
+            &[true]
         };
-        match baseline_evidence {
-            None => baseline_evidence = Some(evidence_bits),
-            Some(b) => assert_eq!(
-                b, evidence_bits,
-                "rebalance policy {} changed the output",
-                policy.name()
-            ),
+        let mut baseline_evidence: Option<u64> = None;
+        let mut off_median: Option<f64> = None;
+        for policy in RebalancePolicy::ALL {
+            for &steal in steal_axis {
+                let mut cfg = RunConfig::for_model(model, Task::Inference, CopyMode::LazySro);
+                if paper_scale() {
+                    let (n, t_inf, _) = model.paper_scale();
+                    cfg.n_particles = n;
+                    cfg.n_steps = t_inf;
+                }
+                cfg.shards = k;
+                cfg.rebalance = policy;
+                cfg.steal = steal;
+                let n_particles = cfg.n_particles;
+                let t_steps = cfg.n_steps;
+                let mut migrations = 0usize;
+                let mut steals = 0usize;
+                let mut transplants = 0usize;
+                let mut global_peak = 0usize;
+                let mut evidence_bits = 0u64;
+                let steal_name = if steal { "on" } else { "off" };
+                let cell = {
+                    let migrations = &mut migrations;
+                    let steals = &mut steals;
+                    let transplants = &mut transplants;
+                    let global_peak = &mut global_peak;
+                    let evidence_bits = &mut evidence_bits;
+                    run_cell(
+                        &format!("{}/{}/steal-{}", model.name(), policy.name(), steal_name),
+                        reps(),
+                        move |rep| {
+                            let mut c = cfg.clone();
+                            c.seed = 20200401u64.wrapping_add(rep as u64);
+                            let mut heap = ShardedHeap::new(c.mode, k);
+                            let r = run_model(&c, &mut heap, &backend.ctx());
+                            if rep == 0 {
+                                *migrations = r.migrations;
+                                *steals = r.steals;
+                                *transplants = heap.metrics().transplants;
+                                *global_peak = r.global_peak_bytes;
+                                *evidence_bits = r.log_evidence.to_bits();
+                            }
+                            Some(r.global_peak_bytes as f64)
+                        },
+                    )
+                };
+                match baseline_evidence {
+                    None => baseline_evidence = Some(evidence_bits),
+                    Some(b) => assert_eq!(
+                        b,
+                        evidence_bits,
+                        "{}: policy {} / steal {} changed the output",
+                        model.name(),
+                        policy.name(),
+                        steal_name
+                    ),
+                }
+                // Baseline cell: policy off at the model's first steal
+                // setting (steal-off for PCFG; CRBD has only one).
+                if policy == RebalancePolicy::Off && steal == steal_axis[0] {
+                    off_median = Some(cell.time_median);
+                }
+                println!(
+                    "{{\"section\":\"rebalance\",\"model\":\"{}\",\"policy\":\"{}\",\"steal\":\"{}\",\"shards\":{},\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"time_q1_s\":{:.6},\"time_q3_s\":{:.6},\"speedup_vs_off\":{:.4},\"global_peak_bytes\":{},\"migrations\":{},\"steals\":{},\"transplants\":{}}}",
+                    model.name(),
+                    policy.name(),
+                    steal_name,
+                    k,
+                    threads,
+                    n_particles,
+                    t_steps,
+                    cell.reps,
+                    cell.time_median,
+                    cell.time_q1,
+                    cell.time_q3,
+                    off_median.map(|o| o / cell.time_median.max(1e-9)).unwrap_or(1.0),
+                    global_peak,
+                    migrations,
+                    steals,
+                    transplants,
+                );
+            }
         }
-        if policy == RebalancePolicy::Off {
-            off_median = Some(cell.time_median);
-        }
-        println!(
-            "{{\"section\":\"rebalance\",\"model\":\"pcfg\",\"policy\":\"{}\",\"shards\":{},\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"time_q1_s\":{:.6},\"time_q3_s\":{:.6},\"speedup_vs_off\":{:.4},\"global_peak_bytes\":{},\"migrations\":{},\"transplants\":{}}}",
-            policy.name(),
-            k,
-            threads,
-            n_particles,
-            t_steps,
-            cell.reps,
-            cell.time_median,
-            cell.time_q1,
-            cell.time_q3,
-            off_median.map(|o| o / cell.time_median.max(1e-9)).unwrap_or(1.0),
-            global_peak,
-            migrations,
-            transplants,
-        );
     }
 }
 

@@ -129,6 +129,18 @@ pub struct RunConfig {
     /// exceeded before the rebalancer migrates an offspring off its
     /// ancestor's shard.
     pub rebalance_threshold: f64,
+    /// Intra-generation work stealing (K > 1, inference only — the
+    /// simulation task keeps its zero-copy contract by construction): a
+    /// shard worker that drains its run queue steals tail particles from
+    /// the heaviest remaining queue — stolen particles propagate in a
+    /// scratch heap and are transplanted back. Outputs are bit-identical
+    /// with stealing on or off (RNG streams stay keyed by global particle
+    /// index); only where heap work runs changes.
+    pub steal: bool,
+    /// Minimum pending particles a victim queue must hold before it
+    /// donates (about half of) its tail to an idle worker. Guards against
+    /// transplant overhead dominating near the end of a generation.
+    pub steal_min: usize,
     /// ESS-fraction resampling trigger (1.0 = always resample, the paper's
     /// setting for the memory-pattern evaluation).
     pub ess_threshold: f64,
@@ -155,6 +167,8 @@ impl Default for RunConfig {
             shards: 0,
             rebalance: RebalancePolicy::Greedy,
             rebalance_threshold: 0.25,
+            steal: true,
+            steal_min: 4,
             ess_threshold: 1.0,
             pg_iterations: 3,
             use_xla: true,
@@ -199,6 +213,16 @@ impl RunConfig {
             }
             "rebalance-threshold" | "rebalance_threshold" => {
                 self.rebalance_threshold = value.parse().map_err(|e| format!("{e}"))?
+            }
+            "steal" => {
+                self.steal = match value.to_ascii_lowercase().as_str() {
+                    "on" | "true" | "1" | "yes" => true,
+                    "off" | "false" | "0" | "no" => false,
+                    _ => return Err(format!("bad steal value {value} (on|off)")),
+                }
+            }
+            "steal-threshold" | "steal_threshold" | "steal-min" | "steal_min" => {
+                self.steal_min = value.parse().map_err(|e| format!("{e}"))?
             }
             "ess" => self.ess_threshold = value.parse().map_err(|e| format!("{e}"))?,
             "pg-iterations" | "pg_iterations" => {
@@ -298,6 +322,16 @@ mod tests {
         assert_eq!(c.rebalance, RebalancePolicy::Budget);
         c.apply("rebalance-threshold", "0.5").unwrap();
         assert!((c.rebalance_threshold - 0.5).abs() < 1e-12);
+        assert!(c.steal, "stealing defaults on");
+        c.apply("steal", "off").unwrap();
+        assert!(!c.steal);
+        c.apply("steal", "on").unwrap();
+        assert!(c.steal);
+        c.apply("steal-threshold", "16").unwrap();
+        assert_eq!(c.steal_min, 16);
+        c.apply("steal_min", "2").unwrap();
+        assert_eq!(c.steal_min, 2);
+        assert!(c.apply("steal", "maybe").is_err());
         assert!(c.apply("rebalance", "bogus").is_err());
         assert!(c.apply("bogus", "1").is_err());
         assert!(c.apply("model", "bogus").is_err());

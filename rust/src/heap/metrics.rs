@@ -141,6 +141,60 @@ impl HeapMetrics {
         self.global_peak_bytes = self.global_peak_bytes.max(global_peak_bytes);
     }
 
+    /// Fold the *monotone operation counters* of a drained scratch heap
+    /// into this heap's metrics — the bookkeeping half of the scratch-heap
+    /// transplant-back path (work stealing): a stolen particle's allocs,
+    /// copies, and pulls happened in a transient scratch heap that is about
+    /// to be dropped, and would otherwise vanish from the op accounting the
+    /// rebalancer's cost model feeds on. Gauges (live objects/bytes, peaks,
+    /// labels, memo bytes) are deliberately left untouched: the scratch
+    /// heap is fully drained when reclaimed (allocs == frees there, so the
+    /// alloc/free/live balance of the absorbing shard survives), and its
+    /// transient footprint is not part of this shard's footprint history.
+    pub fn merge_counters(&mut self, o: &HeapMetrics) {
+        // Exhaustive destructuring, as in `merge`: a new field must be
+        // explicitly classified counter-vs-gauge here or this fails to
+        // compile.
+        let HeapMetrics {
+            live_objects: _,
+            live_bytes: _,
+            peak_bytes: _,
+            live_labels: _,
+            memo_bytes: _,
+            total_allocs,
+            total_frees,
+            lazy_copies,
+            eager_copies,
+            deep_copies,
+            thaws,
+            sro_skips,
+            memo_hits,
+            memo_misses,
+            memo_swept,
+            pulls,
+            gets,
+            freezes,
+            cross_refs,
+            transplants,
+            global_peak_bytes: _,
+        } = *o;
+        self.total_allocs += total_allocs;
+        self.total_frees += total_frees;
+        self.lazy_copies += lazy_copies;
+        self.eager_copies += eager_copies;
+        self.deep_copies += deep_copies;
+        self.thaws += thaws;
+        self.sro_skips += sro_skips;
+        self.memo_hits += memo_hits;
+        self.memo_misses += memo_misses;
+        self.memo_swept += memo_swept;
+        self.pulls += pulls;
+        self.gets += gets;
+        self.freezes += freezes;
+        self.cross_refs += cross_refs;
+        self.transplants += transplants;
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
@@ -191,6 +245,45 @@ mod tests {
         let mut m = HeapMetrics::default();
         m.lazy_copies = 3;
         assert!(m.summary().contains("lazy=3"));
+    }
+
+    #[test]
+    fn merge_counters_skips_gauges_and_keeps_balance() {
+        let mut shard = HeapMetrics {
+            live_objects: 4,
+            live_bytes: 400,
+            peak_bytes: 500,
+            total_allocs: 10,
+            total_frees: 6,
+            pulls: 3,
+            ..Default::default()
+        };
+        // A drained scratch heap: everything allocated was freed.
+        let scratch = HeapMetrics {
+            live_objects: 0,
+            live_bytes: 0,
+            peak_bytes: 999,
+            total_allocs: 7,
+            total_frees: 7,
+            lazy_copies: 2,
+            eager_copies: 5,
+            pulls: 4,
+            transplants: 1,
+            ..Default::default()
+        };
+        shard.merge_counters(&scratch);
+        assert_eq!(shard.total_allocs, 17);
+        assert_eq!(shard.total_frees, 13);
+        assert_eq!(shard.lazy_copies, 2);
+        assert_eq!(shard.eager_copies, 5);
+        assert_eq!(shard.pulls, 7);
+        assert_eq!(shard.transplants, 1);
+        // Gauges untouched.
+        assert_eq!(shard.live_objects, 4);
+        assert_eq!(shard.live_bytes, 400);
+        assert_eq!(shard.peak_bytes, 500);
+        // The per-shard invariant survives absorption.
+        assert_eq!(shard.total_allocs, shard.total_frees + shard.live_objects);
     }
 
     #[test]

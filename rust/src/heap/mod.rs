@@ -1001,6 +1001,27 @@ impl Heap {
         self.freeze_raw(raw);
     }
 
+    /// A fresh empty heap in the same copy mode — the scratch heap a work-
+    /// stealing thief propagates stolen particles in. The scratch heap is
+    /// a full peer: lineages are moved in and out with
+    /// [`Heap::extract_into`] and its op counters are folded back into the
+    /// home shard with [`Heap::absorb_counters`] when it is reclaimed.
+    pub fn scratch(&self) -> Heap {
+        Heap::new(self.mode)
+    }
+
+    /// Fold a drained scratch heap's monotone op counters into this heap's
+    /// metrics (see [`HeapMetrics::merge_counters`]). Call after every
+    /// lineage has been transplanted back and released, so the scratch is
+    /// empty and the alloc/free/live balance of this shard is preserved.
+    pub fn absorb_counters(&mut self, scratch: &Heap) {
+        debug_assert_eq!(
+            scratch.metrics.live_objects, 0,
+            "absorb_counters on a scratch heap that is not drained"
+        );
+        self.metrics.merge_counters(&scratch.metrics);
+    }
+
     /// Cross-shard lineage transplant: materialize the subgraph reachable
     /// from `e` (which lives in `self`) inside the independent heap `dst`,
     /// returning a new owning handle valid in `dst`.
@@ -1610,3 +1631,6 @@ impl Heap {
 
 #[cfg(test)]
 mod tests;
+
+#[cfg(test)]
+mod transplant_tests;

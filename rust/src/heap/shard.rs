@@ -373,6 +373,59 @@ mod tests {
         sh.shard_mut(1).release(b);
     }
 
+    /// The work-stealing scratch-heap round trip: home → scratch (victim
+    /// donation), propagate-like mutation in the scratch, scratch → home
+    /// (transplant-back), then counter absorption. Values survive, the
+    /// home shard's alloc/free balance holds, and the scratch's op work is
+    /// not lost from the accounting.
+    #[test]
+    fn scratch_roundtrip_preserves_values_and_balance() {
+        for mode in CopyMode::ALL {
+            let mut home = Heap::new(mode);
+            let head = build_chain(&mut home, 12);
+            let want = chain_values(&mut home, head);
+
+            // Victim side: extract the particle into a scratch heap and
+            // release the home handle (the particle now lives elsewhere).
+            let mut scratch = home.scratch();
+            assert_eq!(scratch.mode(), mode);
+            let mut stolen = home.extract_into(&head, &mut scratch);
+            home.release(head);
+            home.sweep_memos();
+
+            // Thief side: mutate in the scratch heap (a propagation step).
+            scratch.mutate_root(&mut stolen, |n| n.value += 1000);
+            let mut want_after = want.clone();
+            want_after[0] += 1000;
+            assert_eq!(chain_values(&mut scratch, stolen), want_after);
+
+            // Transplant back, drain and absorb the scratch.
+            let back = scratch.extract_into(&stolen, &mut home);
+            scratch.release(stolen);
+            scratch.sweep_memos();
+            assert_eq!(scratch.live_objects(), 0, "{mode:?}: scratch not drained");
+            let scratch_allocs = scratch.metrics.total_allocs;
+            assert!(scratch_allocs > 0);
+            let before = home.metrics.total_allocs;
+            home.absorb_counters(&scratch);
+            assert_eq!(
+                home.metrics.total_allocs,
+                before + scratch_allocs,
+                "{mode:?}: scratch op work lost from the accounting"
+            );
+
+            assert_eq!(chain_values(&mut home, back), want_after);
+            home.release(back);
+            home.sweep_memos();
+            assert_eq!(home.live_objects(), 0, "{mode:?}: home leaked");
+            assert_eq!(
+                home.metrics.total_allocs,
+                home.metrics.total_frees + home.metrics.live_objects,
+                "{mode:?}: home balance broken after absorption"
+            );
+        }
+    }
+
     #[test]
     fn sharded_heap_aggregates_metrics() {
         let mut sh = ShardedHeap::new(CopyMode::LazySro, 3);

@@ -1,0 +1,258 @@
+//! Property/fuzz tests for [`Heap::extract_into`] round trips — the
+//! foundation both the cross-shard migration path and the work-stealing
+//! scratch-heap path stand on.
+//!
+//! Random object graphs (chain "stacks", ragged fan-out arrays, shared
+//! substructure via back-edges, optional pending lazy copies with memo
+//! redirections) are transplanted src → scratch → back. The result must be
+//! *isomorphic* to the source view — same canonical signature as a direct
+//! eager deep copy, with internal sharing preserved — and every heap
+//! involved must end balanced (allocs == frees + live) with validated
+//! reference counts.
+
+use super::ids::{LabelId, ObjId};
+use super::{CopyMode, Heap, Lazy};
+use crate::lazy_fields;
+use crate::rng::Pcg64;
+use std::collections::HashMap;
+
+#[derive(Clone)]
+struct FuzzNode {
+    tag: i64,
+    kids: Vec<Lazy<FuzzNode>>,
+    extra: Option<Lazy<FuzzNode>>,
+}
+lazy_fields!(FuzzNode: kids, extra);
+
+/// Build a random DAG rooted at the returned handle: a chain backbone
+/// (every node links its predecessor, so the root reaches everything)
+/// decorated with random fan-out edges and an optional `extra` back-edge —
+/// ragged arrays and shared substructure in one shape family. Interior
+/// stack handles are released; stored edges own the structure.
+fn build_graph(heap: &mut Heap, rng: &mut Pcg64, max_nodes: usize) -> Lazy<FuzzNode> {
+    let n = 2 + rng.below(max_nodes as u64 - 1) as usize;
+    let mut handles: Vec<Lazy<FuzzNode>> = Vec::with_capacity(n);
+    for idx in 0..n {
+        let mut kids = Vec::new();
+        if let Some(&prev) = handles.last() {
+            kids.push(prev); // chain backbone
+            let fan = rng.below(3) as usize;
+            for _ in 0..fan {
+                kids.push(handles[rng.below(handles.len() as u64) as usize]);
+            }
+        }
+        let extra = if !handles.is_empty() && rng.below(4) == 0 {
+            Some(handles[rng.below(handles.len() as u64) as usize])
+        } else {
+            None
+        };
+        let node = heap.alloc(FuzzNode {
+            tag: idx as i64 * 17 + 1,
+            kids,
+            extra,
+        });
+        handles.push(node);
+    }
+    let root = handles.pop().expect("at least two nodes");
+    for h in handles {
+        heap.release(h);
+    }
+    root
+}
+
+/// Canonical form of the *view* reachable from `root`: DFS preorder ids,
+/// each node recorded as (tag, kid ids, extra id, -1 for none). Nodes are
+/// identified by their pulled (object, label) pair, so internal sharing
+/// shows up as repeated ids and the form is isomorphism-invariant across
+/// heaps.
+type Sig = Vec<(i64, Vec<isize>, isize)>;
+
+fn signature(heap: &mut Heap, root: Lazy<FuzzNode>) -> Sig {
+    fn walk(
+        heap: &mut Heap,
+        mut cur: Lazy<FuzzNode>,
+        seen: &mut HashMap<(ObjId, LabelId), usize>,
+        order: &mut Sig,
+    ) -> usize {
+        // `read` pulls `cur` in place, so its raw pair is the resolved
+        // view identity.
+        let tag = heap.read(&mut cur, |n| n.tag);
+        let key = (cur.raw().obj, cur.raw().label);
+        if let Some(&id) = seen.get(&key) {
+            return id;
+        }
+        let id = order.len();
+        order.push((tag, Vec::new(), -1));
+        seen.insert(key, id);
+        let kid_count = heap.read(&mut cur, |n| n.kids.len());
+        let mut kid_ids = Vec::with_capacity(kid_count);
+        for j in 0..kid_count {
+            let kid = heap.read_ptr(&mut cur, |n| n.kids[j]);
+            kid_ids.push(if kid.is_null() {
+                -1
+            } else {
+                walk(heap, kid, seen, order) as isize
+            });
+        }
+        let extra = heap.read_ptr(&mut cur, |n| n.extra.unwrap_or(Lazy::NULL));
+        let extra_id = if extra.is_null() {
+            -1
+        } else {
+            walk(heap, extra, seen, order) as isize
+        };
+        order[id].1 = kid_ids;
+        order[id].2 = extra_id;
+        id
+    }
+    let mut order = Sig::new();
+    let mut seen = HashMap::new();
+    walk(heap, root, &mut seen, &mut order);
+    order
+}
+
+/// One round-trip property case.
+fn roundtrip_case(seed: u64, mode: CopyMode) {
+    let mut rng = Pcg64::new(seed);
+    let mut src = Heap::new(mode);
+    let root = build_graph(&mut src, &mut rng, 24);
+
+    // Half the lazy cases transplant a *mutated lazy copy* instead of the
+    // original, so the source label's memo holds redirections mid-graph
+    // and the transplant must materialize the pulled view, not the stale
+    // objects.
+    let mut copies: Vec<Lazy<FuzzNode>> = Vec::new();
+    let target = if mode.is_lazy() && rng.below(2) == 0 {
+        let mut c = src.deep_copy(&root);
+        src.mutate_root(&mut c, |n| n.tag += 100_000);
+        let has_kid = src.read(&mut c, |n| !n.kids.is_empty());
+        if has_kid {
+            // Descend one stored edge: a memo entry below the root.
+            let mut k = src.get_field(&c, |n| &mut n.kids[0]);
+            src.mutate(&mut k, |n| n.tag += 500_000);
+        }
+        copies.push(c);
+        c
+    } else {
+        root
+    };
+    let want = signature(&mut src, target);
+    assert!(want.len() >= 2, "degenerate graph");
+
+    // src → scratch.
+    let mut scratch = src.scratch();
+    let moved = src.extract_into(&target, &mut scratch);
+    assert_eq!(
+        signature(&mut scratch, moved),
+        want,
+        "seed {seed} {mode:?}: scratch view differs from source"
+    );
+    // A transplant materializes the pulled view, so the stored graph in
+    // the scratch must have exactly one object per distinct view node —
+    // shared substructure stays shared, nothing is duplicated.
+    assert_eq!(
+        scratch.reachable_objects(&[moved.raw()]),
+        want.len(),
+        "seed {seed} {mode:?}: sharing not preserved in scratch"
+    );
+
+    // scratch → back, then drain the scratch completely.
+    let back = scratch.extract_into(&moved, &mut src);
+    scratch.release(moved);
+    scratch.sweep_memos();
+    assert_eq!(scratch.live_objects(), 0, "seed {seed} {mode:?}: scratch leaked");
+    assert_eq!(
+        scratch.metrics.total_allocs, scratch.metrics.total_frees,
+        "seed {seed} {mode:?}: scratch alloc/free balance broken"
+    );
+    scratch.validate(&[]);
+
+    assert_eq!(
+        signature(&mut src, back),
+        want,
+        "seed {seed} {mode:?}: round trip not isomorphic to the source view"
+    );
+    assert_eq!(
+        src.reachable_objects(&[back.raw()]),
+        want.len(),
+        "seed {seed} {mode:?}: sharing not preserved through the round trip"
+    );
+
+    // The round trip is isomorphic to a *direct* eager deep copy, and the
+    // source view itself is untouched.
+    let direct = src.deep_copy_eager(&target);
+    assert_eq!(
+        signature(&mut src, direct),
+        want,
+        "seed {seed} {mode:?}: direct deep copy disagrees"
+    );
+    assert_eq!(signature(&mut src, target), want, "source view disturbed");
+
+    // Cleanup: everything released, per-heap balance restored.
+    src.release(back);
+    src.release(direct);
+    for c in copies {
+        src.release(c);
+    }
+    src.release(root);
+    src.sweep_memos();
+    assert_eq!(src.live_objects(), 0, "seed {seed} {mode:?}: src leaked");
+    assert_eq!(
+        src.metrics.total_allocs,
+        src.metrics.total_frees + src.metrics.live_objects,
+        "seed {seed} {mode:?}: src alloc/free/live balance broken"
+    );
+    src.validate(&[]);
+}
+
+#[test]
+fn extract_into_roundtrip_fuzz() {
+    for mode in CopyMode::ALL {
+        for seed in 0..30u64 {
+            roundtrip_case(seed ^ 0xF022, mode);
+        }
+    }
+}
+
+/// A directed shape case the fuzz loop hits only occasionally: a deep
+/// chain ("stack") plus a wide ragged node sharing a tail — transplanted
+/// twice over, with the second hop into a heap that already holds other
+/// structure (offsets all ids, catching absolute-id assumptions).
+#[test]
+fn extract_into_roundtrip_with_preexisting_structure() {
+    for mode in CopyMode::ALL {
+        let mut rng = Pcg64::new(99);
+        let mut src = Heap::new(mode);
+        let root = build_graph(&mut src, &mut rng, 20);
+        let want = signature(&mut src, root);
+
+        let mut dst = Heap::new(mode);
+        // Pre-populate the destination so transplanted ids don't align.
+        let resident = build_graph(&mut dst, &mut rng, 10);
+        let resident_sig = signature(&mut dst, resident);
+
+        let mut scratch = src.scratch();
+        let moved = src.extract_into(&root, &mut scratch);
+        let landed = scratch.extract_into(&moved, &mut dst);
+        scratch.release(moved);
+        scratch.sweep_memos();
+        assert_eq!(scratch.live_objects(), 0);
+
+        assert_eq!(signature(&mut dst, landed), want, "{mode:?}: landed view differs");
+        assert_eq!(
+            signature(&mut dst, resident),
+            resident_sig,
+            "{mode:?}: transplant disturbed resident structure"
+        );
+
+        dst.release(landed);
+        dst.release(resident);
+        src.release(root);
+        src.sweep_memos();
+        dst.sweep_memos();
+        assert_eq!(src.live_objects(), 0);
+        assert_eq!(dst.live_objects(), 0);
+        for h in [&src, &dst] {
+            assert_eq!(h.metrics.total_allocs, h.metrics.total_frees + h.metrics.live_objects);
+        }
+    }
+}

@@ -42,6 +42,16 @@ fn cli() -> Cli {
         "",
         "imbalance fraction of mean shard load that triggers migration (default 0.25)",
     )
+    .flag(
+        "steal",
+        "",
+        "intra-generation work stealing at K>1: on|off (default on; output identical either way)",
+    )
+    .flag(
+        "steal-threshold",
+        "",
+        "min pending particles before a busy shard donates its tail (default 4)",
+    )
     .flag("reps", "5", "benchmark repetitions")
     .flag("scale", "default", "scale preset: default|paper")
     .flag("config", "", "config file (key = value lines)")
@@ -91,6 +101,14 @@ fn build_config(args: &lazycow::cli::Args) -> Result<RunConfig, String> {
     }
     if let Some(t) = args.get_f64("rebalance-threshold") {
         cfg.rebalance_threshold = t;
+    }
+    if let Some(s) = args.get("steal") {
+        if !s.is_empty() {
+            cfg.apply("steal", s)?;
+        }
+    }
+    if let Some(m) = args.get_usize("steal-threshold") {
+        cfg.steal_min = m;
     }
     cfg.use_xla = !args.get_bool("no-xla");
     cfg.series = args.get_bool("series");
@@ -163,20 +181,22 @@ fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
     let k = backend.choose_shards(&cfg);
     let mut heap = ShardedHeap::new(cfg.mode, k);
     println!(
-        "# {} K={k} rebalance={}",
+        "# {} K={k} rebalance={} steal={}",
         cfg.label(),
-        if k > 1 { cfg.rebalance.name() } else { "off" }
+        if k > 1 { cfg.rebalance.name() } else { "off" },
+        if k > 1 && cfg.steal { "on" } else { "off" }
     );
     let r = run_model(&cfg, &mut heap, &backend.ctx());
     println!(
         "log_evidence={:.4} posterior_mean={:.4} wall={:.3}s peak={} global_peak={} \
-         migrations={} attempts={}",
+         migrations={} steals={} attempts={}",
         r.log_evidence,
         r.posterior_mean,
         r.wall_s,
         human_bytes(r.peak_bytes as f64),
         human_bytes(r.global_peak_bytes as f64),
         r.migrations,
+        r.steals,
         r.attempts
     );
     println!("heap: {}", heap.metrics().summary());

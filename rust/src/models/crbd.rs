@@ -155,6 +155,15 @@ impl SmcModel for Crbd {
     fn summary(&self, heap: &mut Heap, state: &mut Lazy<CrbdState>) -> f64 {
         heap.read(state, |s| s.lambda.mean())
     }
+
+    /// Per-particle cost skew: the dominant step cost is simulating hidden
+    /// side-speciations, whose expected count is the posterior-predictive
+    /// rate λ̂ times the interval exposure — so particles carrying a high
+    /// inferred birth rate are proportionally more expensive. A cheap O(1)
+    /// read of the marginal mean; the offset keeps hints positive.
+    fn cost_hint(&self, heap: &mut Heap, state: &mut Lazy<CrbdState>) -> f64 {
+        1.0 + heap.read(state, |s| s.lambda.mean())
+    }
 }
 
 #[cfg(test)]

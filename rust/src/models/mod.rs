@@ -87,6 +87,7 @@ fn aggregate_pg(results: Vec<FilterResult>) -> FilterResult {
         acc.peak_bytes = acc.peak_bytes.max(r.peak_bytes);
         acc.global_peak_bytes = acc.global_peak_bytes.max(r.global_peak_bytes);
         acc.migrations += r.migrations;
+        acc.steals += r.steals;
         acc.attempts += r.attempts;
         for mut s in r.series {
             s.t += t_off;

@@ -13,14 +13,150 @@
 //! Implementation: scoped threads (`std::thread::scope`) spawned per call.
 //! For the per-generation batch sizes of the evaluation models the spawn
 //! cost is noise next to the numeric work, and the scope keeps borrows
-//! safe without lifetime erasure. All three executors run chunk 0 on the
+//! safe without lifetime erasure. All the executors run chunk 0 on the
 //! calling thread, so exactly `chunks - 1` threads are spawned per call.
+//!
+//! [`StealYard`] complements the shard executor with intra-generation work
+//! stealing: workers that drain their queue park in the yard, and busy
+//! workers donate tail particles (packaged with a scratch heap) to them —
+//! see the work-stealing section of `DESIGN.md`.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 use std::thread;
 
 /// Static-scheduling parallel executor.
 pub struct ThreadPool {
     n_threads: usize,
+}
+
+/// Work-stealing coordination for shard workers — the donation half of the
+/// intra-generation work-stealing executor (see `smc::filter`).
+///
+/// The sharded engine gives every worker exclusive `&mut` access to its
+/// heap shard, so a thief can never reach into a victim's queue directly:
+/// instead, a worker that drains its own queue parks in [`StealYard::take`]
+/// and a *victim* — noticing [`StealYard::wanted`] between particles —
+/// extracts tail particles of its own queue into a scratch heap and
+/// [`StealYard::donate`]s the package. All heap operations stay under the
+/// owner's `&mut`; the yard itself synchronizes only the package handoff
+/// (one mutex-guarded queue plus two advisory atomics), never the
+/// allocate/copy/mutate hot path.
+///
+/// Termination: `take` returns `None` once every worker is parked and no
+/// donation is queued — at that point no future donation can arrive, since
+/// donors are by definition not parked.
+pub struct StealYard<B> {
+    inner: Mutex<YardInner<B>>,
+    cv: Condvar,
+    workers: usize,
+    /// Workers currently parked in [`StealYard::take`] (advisory mirror of
+    /// the mutex-guarded count, readable without the lock).
+    idle: AtomicUsize,
+    /// Donated batches queued but not yet taken (advisory mirror).
+    pending: AtomicUsize,
+}
+
+struct YardInner<B> {
+    queue: VecDeque<B>,
+    idle: usize,
+    done: bool,
+}
+
+/// See [`StealYard::panic_guard`].
+pub struct YardPanicGuard<'a, B: Send> {
+    yard: &'a StealYard<B>,
+}
+
+impl<B: Send> Drop for YardPanicGuard<'_, B> {
+    fn drop(&mut self) {
+        if thread::panicking() {
+            self.yard.abort();
+        }
+    }
+}
+
+impl<B: Send> StealYard<B> {
+    /// A yard for `workers` cooperating shard workers. Every worker must
+    /// eventually call [`StealYard::take`] (in a loop, until `None`) or the
+    /// generation cannot terminate.
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0, "at least one worker");
+        StealYard {
+            inner: Mutex::new(YardInner {
+                queue: VecDeque::new(),
+                idle: 0,
+                done: false,
+            }),
+            cv: Condvar::new(),
+            workers,
+            idle: AtomicUsize::new(0),
+            pending: AtomicUsize::new(0),
+        }
+    }
+
+    /// Victim-side cue: `true` when more workers are parked hungry than
+    /// donations are queued. Lock-free (two relaxed loads) so it can run
+    /// between every particle; advisory only — a stale answer costs one
+    /// extra or one deferred donation, never correctness.
+    #[inline]
+    pub fn wanted(&self) -> bool {
+        self.idle.load(Ordering::Relaxed) > self.pending.load(Ordering::Relaxed)
+    }
+
+    /// Queue a donated batch and wake one parked thief.
+    pub fn donate(&self, batch: B) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue.push_back(batch);
+        self.pending.fetch_add(1, Ordering::Relaxed);
+        self.cv.notify_one();
+    }
+
+    /// Unblock every parked worker and mark the generation complete
+    /// regardless of outstanding work — the panic-safety hatch. A worker
+    /// that panics never parks, so without this the surviving workers
+    /// would wait for `idle == workers` forever; call it from a drop
+    /// guard ([`StealYard::panic_guard`]) so unwinding wakes the yard.
+    pub fn abort(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.done = true;
+        self.cv.notify_all();
+    }
+
+    /// An RAII guard for one worker: if the worker unwinds (panics) while
+    /// the guard is live, the yard is aborted so parked siblings return
+    /// `None` instead of hanging, letting the scope join and propagate
+    /// the panic.
+    pub fn panic_guard(&self) -> YardPanicGuard<'_, B> {
+        YardPanicGuard { yard: self }
+    }
+
+    /// Park until a donated batch arrives (`Some`) or the generation is
+    /// complete — every worker parked and the queue empty (`None`).
+    pub fn take(&self) -> Option<B> {
+        let mut g = self.inner.lock().unwrap();
+        g.idle += 1;
+        self.idle.fetch_add(1, Ordering::Relaxed);
+        loop {
+            if let Some(b) = g.queue.pop_front() {
+                g.idle -= 1;
+                self.idle.fetch_sub(1, Ordering::Relaxed);
+                self.pending.fetch_sub(1, Ordering::Relaxed);
+                return Some(b);
+            }
+            if g.done || g.idle == self.workers {
+                g.done = true;
+                // The worker is leaving for good: drop it from the
+                // advisory hungry count so `wanted` goes quiet. (The
+                // mutex-guarded count is terminal once `done` is set.)
+                self.idle.fetch_sub(1, Ordering::Relaxed);
+                self.cv.notify_all();
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
 }
 
 impl ThreadPool {
@@ -420,5 +556,90 @@ mod tests {
         for (i, v) in items.iter().enumerate() {
             assert_eq!(*v, i * i);
         }
+    }
+
+    #[test]
+    fn steal_yard_single_worker_terminates() {
+        let yard: StealYard<u32> = StealYard::new(1);
+        assert!(!yard.wanted());
+        // The only worker parks with nothing queued: generation complete.
+        assert_eq!(yard.take(), None);
+        // Idempotent after done.
+        assert_eq!(yard.take(), None);
+    }
+
+    #[test]
+    fn steal_yard_hands_batches_to_thieves() {
+        // Worker 0 donates 3 batches then parks; worker 1 starts parked and
+        // must receive every batch, then both observe termination.
+        let yard: StealYard<u64> = StealYard::new(2);
+        let got = Mutex::new(Vec::new());
+        thread::scope(|s| {
+            let yard = &yard;
+            let got = &got;
+            s.spawn(move || {
+                while let Some(b) = yard.take() {
+                    got.lock().unwrap().push(b);
+                }
+            });
+            // Victim: wait until the thief actually parks, donate, finish.
+            while !yard.wanted() {
+                thread::yield_now();
+            }
+            for b in [10u64, 20, 30] {
+                yard.donate(b);
+            }
+            while let Some(b) = yard.take() {
+                got.lock().unwrap().push(b);
+            }
+        });
+        let mut got = got.into_inner().unwrap();
+        got.sort();
+        assert_eq!(got, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn steal_yard_abort_unblocks_parked_workers() {
+        // A panicking worker never parks; abort() is the hatch that lets
+        // parked siblings return instead of waiting for idle == workers.
+        let yard: StealYard<u8> = StealYard::new(3);
+        thread::scope(|s| {
+            let yard = &yard;
+            let h = s.spawn(move || yard.take());
+            while !yard.wanted() {
+                thread::yield_now();
+            }
+            // Simulate the panicking worker's drop guard firing.
+            yard.abort();
+            assert_eq!(h.join().unwrap(), None);
+        });
+        // Guard without a panic is inert.
+        {
+            let _g = yard.panic_guard();
+        }
+        assert_eq!(yard.take(), None, "aborted yard stays done");
+    }
+
+    #[test]
+    fn steal_yard_wanted_tracks_parked_thieves() {
+        let yard: StealYard<()> = StealYard::new(2);
+        assert!(!yard.wanted(), "nobody parked yet");
+        thread::scope(|s| {
+            let yard = &yard;
+            s.spawn(move || {
+                // Thief parks; it will be released by the donation below
+                // and then by termination.
+                while yard.take().is_some() {}
+            });
+            while !yard.wanted() {
+                thread::yield_now();
+            }
+            yard.donate(());
+            // Queued donation satisfies the parked thief: no more wanted
+            // until it re-parks. (The thief may re-park quickly, so only
+            // check the donation was consumed eventually.)
+            while yard.take().is_some() {}
+        });
+        assert!(!yard.wanted(), "terminated yard wants nothing");
     }
 }

@@ -30,17 +30,37 @@
 //! policy — and K = 1 reproduces the pre-sharding single-heap engine
 //! exactly.
 //!
-//! The alive PF remains coordinator-serial (its retry RNG stream depends
-//! on the cumulative attempt count across particles); since sharding
-//! would buy it no parallelism while making the O(history) transplant
-//! the common case on retries, its population is collapsed onto shard 0.
+//! **Work stealing.** The rebalancer only moves work at resampling
+//! barriers; a long tail *inside* one generation would still idle sibling
+//! shards. With `RunConfig::steal` on (the default) and K > 1,
+//! propagation runs on the work-stealing executor instead of fixed
+//! chunk-per-shard: each worker drains its own per-shard run queue in
+//! small chunks, and a worker that finishes parks in a
+//! [`StealYard`](crate::pool::StealYard). Busy workers notice, extract
+//! tail particles of their queue into a *scratch heap*
+//! ([`Heap::extract_into`]) and donate the package; the thief propagates
+//! the stolen particles there (RNG streams stay keyed by global particle
+//! index) and the results are transplanted back to the home shard at the
+//! generation barrier, with the scratch's op counters absorbed into the
+//! home metrics. Heap ownership stays one `&mut` per worker throughout —
+//! the yard synchronizes only package handoff, never heap operations —
+//! and the output is bit-identical with stealing on or off.
+//!
+//! The alive PF (contract v2) runs shard-parallel in *rounds*: per-slot
+//! retry RNG streams ([`alive_retry_rng`]) make every slot's attempt
+//! sequence independent of the others, so each round draws all pending
+//! slots' streams on the coordinator, imports foreign retry ancestors
+//! once per distinct (ancestor, destination) pair, and propagates the
+//! attempts shard-parallel. Output and total attempt count are identical
+//! for every K. (Contract v1 chained all slots through one cumulative
+//! attempt counter, which collapsed the population onto shard 0.)
 //! With K > 1 the per-shard `step_population` runs with a serial pool and
 //! without the XLA batch artifact (the batched runtime is not
 //! shard-aware yet); K = 1 keeps the full batched path.
 
-use super::model::{particle_rng, resample_rng, SmcModel, StepCtx};
+use super::model::{alive_retry_rng, particle_rng, resample_rng, SmcModel, StepCtx};
 use super::rebalance::{
-    plan_offspring, CostTracker, RebalancePolicy, OP_COST_S, TRANSPLANT_COST_S,
+    plan_offspring, CostTracker, RebalancePolicy, HINT_FLOOR, OP_COST_S, TRANSPLANT_COST_S,
 };
 use super::resample::Resampler;
 use crate::config::{RunConfig, Task};
@@ -48,8 +68,10 @@ use crate::heap::{
     aggregate_metrics, sample_global_peak, shard_of, shard_ranges, Heap, HeapMetrics, Lazy,
     Payload,
 };
-use crate::pool::ThreadPool;
+use crate::pool::{StealYard, ThreadPool};
+use crate::rng::Pcg64;
 use crate::stats::{ess, log_sum_exp, normalize_log_weights};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Per-generation metrics snapshot (Figure 7 series), aggregated across
@@ -100,9 +122,18 @@ pub struct FilterResult {
     /// crossings are the static partition's inherent transplants — those
     /// are counted by `HeapMetrics::transplants` instead.
     pub migrations: usize,
+    /// Particles donated to the work-stealing yard this run (0 with
+    /// `steal` off or K = 1). Each counted particle paid the scratch-heap
+    /// round trip and was propagated by whichever worker took the batch —
+    /// usually, though not necessarily, a non-home worker (a donor that
+    /// runs dry can take back its own donation). Like `migrations`, a
+    /// pure scheduling statistic: output is bit-identical whatever this
+    /// counts.
+    pub steals: usize,
     pub series: Vec<StepMetrics>,
     /// Alive PF: total propagation attempts (N·T when every particle
-    /// survives immediately).
+    /// survives immediately). Invariant in K under the per-slot retry
+    /// stream contract.
     pub attempts: usize,
 }
 
@@ -164,6 +195,26 @@ fn heap_ops(m: &HeapMetrics) -> usize {
     m.total_allocs + m.lazy_copies + m.eager_copies + m.pulls
 }
 
+/// Sum of hint weights under the cost model's [`HINT_FLOOR`] clamp — the
+/// shared denominator for apportioning one measured cost.
+fn clamped_hint_sum<'a>(hints: impl IntoIterator<Item = &'a f64>) -> f64 {
+    hints.into_iter().map(|h| h.max(HINT_FLOOR)).sum()
+}
+
+/// Apportion one measured `cost` over a contiguous run of slots by
+/// clamped hint weight, writing per-particle costs into `out[base..]`.
+/// `hint_sum` is the denominator shared by every run charged against the
+/// same measurement (e.g. all of one shard's home-processed runs). No-op
+/// when the measurement is unusable.
+fn apportion_cost(out: &mut [f64], base: usize, cost: f64, hints: &[f64], hint_sum: f64) {
+    if hint_sum <= 0.0 || !cost.is_finite() {
+        return;
+    }
+    for (j, h) in hints.iter().enumerate() {
+        out[base + j] = cost * h.max(HINT_FLOOR) / hint_sum;
+    }
+}
+
 fn step_snapshot(shards: &[Heap], t: usize, start: &Instant, w: &[f64]) -> StepMetrics {
     let agg = aggregate_metrics(shards);
     StepMetrics {
@@ -217,6 +268,29 @@ struct ShardRun<S> {
     states: Vec<Lazy<S>>,
     winc: Vec<f64>,
     hints: Vec<f64>,
+}
+
+/// Decompose an assignment into per-shard maximal runs of consecutive
+/// global indices, moving the state handles into the runs. Both the
+/// assigned and the work-stealing executors use this one decomposition —
+/// the steal-on/off bit-identity contract depends on the two paths
+/// slicing the population identically (`step_population` receives each
+/// run's global base, so RNG streams stay keyed by global index).
+fn gather_runs<S>(states: &[Lazy<S>], assign: &[usize], k: usize) -> Vec<Vec<ShardRun<S>>> {
+    let mut runs_by_shard: Vec<Vec<ShardRun<S>>> = (0..k).map(|_| Vec::new()).collect();
+    for (i, &s) in assign.iter().enumerate() {
+        debug_assert!(s < k, "assignment names shard {s} of {k}");
+        match runs_by_shard[s].last_mut() {
+            Some(run) if run.base + run.states.len() == i => run.states.push(states[i]),
+            _ => runs_by_shard[s].push(ShardRun {
+                base: i,
+                states: vec![states[i]],
+                winc: Vec::new(),
+                hints: Vec::new(),
+            }),
+        }
+    }
+    runs_by_shard
 }
 
 /// One shard's propagation work under an arbitrary assignment.
@@ -276,19 +350,7 @@ fn propagate_assigned<M: SmcModel + Sync>(
         return;
     }
     // Gather each shard's particles as runs of consecutive indices.
-    let mut runs_by_shard: Vec<Vec<ShardRun<M::State>>> = (0..k).map(|_| Vec::new()).collect();
-    for (i, &s) in assign.iter().enumerate() {
-        debug_assert!(s < k, "assignment names shard {s} of {k}");
-        match runs_by_shard[s].last_mut() {
-            Some(run) if run.base + run.states.len() == i => run.states.push(states[i]),
-            _ => runs_by_shard[s].push(ShardRun {
-                base: i,
-                states: vec![states[i]],
-                winc: Vec::new(),
-                hints: Vec::new(),
-            }),
-        }
-    }
+    let runs_by_shard = gather_runs(states, assign, k);
     let mut tasks: Vec<AssignedTask<'_, M::State>> = shards
         .iter_mut()
         .zip(runs_by_shard)
@@ -453,6 +515,394 @@ fn propagate_contiguous<M: SmcModel + Sync>(
     }
 }
 
+/// Particles a worker propagates between donation checks under the
+/// work-stealing executor. Small enough that a tail worker notices hungry
+/// siblings quickly; large enough that the `wanted` check (two relaxed
+/// atomic loads) is noise.
+const STEAL_CHUNK: usize = 8;
+
+/// One shard's work under the work-stealing executor.
+struct StealWork<'a, S> {
+    shard: usize,
+    heap: &'a mut Heap,
+    runs: Vec<ShardRun<S>>,
+    /// Measured cost of the home-processed particles, including any
+    /// donation extractions (out).
+    cost: f64,
+}
+
+/// A donated package: tail particles extracted into a scratch heap by the
+/// victim (who holds the home shard's `&mut`), propagated by whichever
+/// worker takes it from the yard.
+struct StolenBatch<S: Payload> {
+    home: usize,
+    /// Global index of `states[0]` (the segment is contiguous).
+    base: usize,
+    states: Vec<Lazy<S>>,
+    heap: Heap,
+}
+
+/// A stolen batch the thief finished propagating, awaiting transplant-back.
+struct FinishedBatch<S: Payload> {
+    home: usize,
+    base: usize,
+    states: Vec<Lazy<S>>,
+    winc: Vec<f64>,
+    hints: Vec<f64>,
+    /// Thief-measured cost (wall seconds + scratch-heap op charge).
+    cost: f64,
+    heap: Heap,
+}
+
+/// Extract a contiguous tail segment into a fresh scratch heap and donate
+/// it. The victim performs the extraction under its own `&mut` — the only
+/// way particles can leave a shard — and releases the home handles; the
+/// segment now lives entirely in the scratch heap.
+fn donate_segment<S: Payload>(
+    heap: &mut Heap,
+    home: usize,
+    base: usize,
+    seg: Vec<Lazy<S>>,
+    yard: &StealYard<StolenBatch<S>>,
+) {
+    debug_assert!(!seg.is_empty());
+    let mut scratch = heap.scratch();
+    let moved: Vec<Lazy<S>> = seg.iter().map(|st| heap.extract_into(st, &mut scratch)).collect();
+    for st in seg {
+        heap.release(st);
+    }
+    yard.donate(StolenBatch {
+        home,
+        base,
+        states: moved,
+        heap: scratch,
+    });
+}
+
+/// Donate about half of this shard's pending particles, taken from the
+/// very tail of the queue (whole trailing runs first, then the tail of
+/// the farthest run that has spare particles). `r_idx`/`i` locate the
+/// worker's cursor; everything at or before it is already processed and
+/// never donated. The current run always keeps at least one unprocessed
+/// particle so the owner cannot be left spinning on an empty run.
+fn donate_tail<S: Payload>(
+    heap: &mut Heap,
+    runs: &mut Vec<ShardRun<S>>,
+    r_idx: usize,
+    i: usize,
+    steal_min: usize,
+    shard: usize,
+    yard: &StealYard<StolenBatch<S>>,
+) {
+    let here = runs[r_idx].states.len() - i;
+    let later: usize = runs[r_idx + 1..].iter().map(|r| r.states.len()).sum();
+    let pending = here + later;
+    if pending < steal_min {
+        return;
+    }
+    let mut remaining = pending / 2;
+    while remaining > 0 {
+        let last = runs.len() - 1;
+        if last == r_idx {
+            // Split the current run's own tail, keeping one for the owner.
+            let spare = (runs[r_idx].states.len() - i).saturating_sub(1);
+            let take = remaining.min(spare);
+            if take > 0 {
+                let run = &mut runs[r_idx];
+                let at = run.states.len() - take;
+                let seg = run.states.split_off(at);
+                donate_segment(heap, shard, run.base + at, seg, yard);
+            }
+            return;
+        }
+        let tail_len = runs[last].states.len();
+        if tail_len <= remaining {
+            let run = runs.pop().expect("checked non-empty");
+            remaining -= tail_len;
+            donate_segment(heap, shard, run.base, run.states, yard);
+        } else {
+            let run = &mut runs[last];
+            let at = tail_len - remaining;
+            let seg = run.states.split_off(at);
+            donate_segment(heap, shard, run.base + at, seg, yard);
+            return;
+        }
+    }
+}
+
+/// Drain one shard's run queue in [`STEAL_CHUNK`]-sized slices, donating
+/// tail particles whenever the yard reports hungry workers. Returns the
+/// measured generation cost for the particles this worker kept.
+#[allow(clippy::too_many_arguments)]
+fn drain_own_queue<M: SmcModel + Sync>(
+    model: &M,
+    shard: usize,
+    heap: &mut Heap,
+    runs: &mut Vec<ShardRun<M::State>>,
+    yard: &StealYard<StolenBatch<M::State>>,
+    steal_min: usize,
+    t: usize,
+    seed: u64,
+    observe: bool,
+    shard_ctx: &StepCtx,
+    want_costs: bool,
+) -> f64 {
+    if runs.is_empty() {
+        return 0.0;
+    }
+    let t0 = Instant::now();
+    let ops0 = heap_ops(&heap.metrics);
+    let mut r_idx = 0;
+    // Sticky steal-demand flag: until some worker goes hungry, process in
+    // geometrically shrinking half-run slices (amortizing per-call batch
+    // overhead back toward the whole-run call); once demand appears —
+    // which means the generation is in its tail — drop to [`STEAL_CHUNK`]
+    // so donations stay responsive.
+    let mut hungry = false;
+    while r_idx < runs.len() {
+        let mut i = 0;
+        loop {
+            if yard.wanted() {
+                hungry = true;
+                donate_tail(heap, runs, r_idx, i, steal_min, shard, yard);
+            }
+            let len_now = runs[r_idx].states.len();
+            if i >= len_now {
+                break;
+            }
+            let rem = len_now - i;
+            let len = if hungry {
+                STEAL_CHUNK.min(rem)
+            } else {
+                (rem.div_ceil(2)).max(STEAL_CHUNK).min(rem)
+            };
+            let run = &mut runs[r_idx];
+            // Per-particle RNG streams (keyed by `run.base + global
+            // offset`) make the chunked calls produce exactly the
+            // single-call results.
+            let winc = model.step_population(
+                heap,
+                &mut run.states[i..i + len],
+                t,
+                seed,
+                observe,
+                run.base + i,
+                shard_ctx,
+            );
+            run.winc.extend(winc);
+            if want_costs {
+                for j in i..i + len {
+                    run.hints.push(model.cost_hint(heap, &mut run.states[j]));
+                }
+            }
+            i += len;
+        }
+        r_idx += 1;
+    }
+    let ops1 = heap_ops(&heap.metrics);
+    t0.elapsed().as_secs_f64() + (ops1 - ops0) as f64 * OP_COST_S
+}
+
+/// Propagate + weight the population under the current assignment on the
+/// **work-stealing executor** (K > 1): per-shard run queues drained by one
+/// worker each, idle workers stealing tail particles from the heaviest
+/// remaining queues via scratch-heap donation (see the module docs).
+/// Results land exactly where [`propagate_assigned`] would put them —
+/// stolen particles are transplanted back to their home shard at the
+/// barrier — so `assign` is unchanged and output is bit-identical with
+/// stealing on or off. When `raw_cost` is given, it receives per-particle
+/// measured costs (NAN where the caller's slice prefix excludes a slot):
+/// home-shard cost apportioned by `cost_hint` over the particles the home
+/// worker kept, thief-measured cost over each stolen batch. Returns the
+/// global indices of stolen particles.
+#[allow(clippy::too_many_arguments)]
+fn propagate_stealing<M: SmcModel + Sync>(
+    model: &M,
+    shards: &mut [Heap],
+    states: &mut [Lazy<M::State>],
+    lw: &mut [f64],
+    assign: &[usize],
+    t: usize,
+    seed: u64,
+    observe: bool,
+    ctx: &StepCtx,
+    steal_min: usize,
+    mut raw_cost: Option<&mut [f64]>,
+) -> Vec<usize> {
+    let k = shards.len();
+    debug_assert!(k > 1, "stealing requires multiple shards");
+    debug_assert_eq!(states.len(), lw.len());
+    debug_assert_eq!(states.len(), assign.len());
+    let want_costs = raw_cost.is_some();
+    let steal_min = steal_min.max(2);
+    // Gather each shard's particles as maximal runs of consecutive global
+    // indices (the same decomposition as `propagate_assigned`).
+    let runs_by_shard = gather_runs(states, assign, k);
+    // One yard worker per OS worker: group shards contiguously so each
+    // group is drained by exactly one worker, which then turns thief.
+    let w = ctx.pool.n_threads().min(k).max(1);
+    let mut flat: Vec<StealWork<'_, M::State>> = shards
+        .iter_mut()
+        .zip(runs_by_shard)
+        .enumerate()
+        .map(|(s, (heap, runs))| StealWork {
+            shard: s,
+            heap,
+            runs,
+            cost: 0.0,
+        })
+        .collect();
+    let per = flat.len().div_ceil(w);
+    let mut groups: Vec<Vec<StealWork<'_, M::State>>> = Vec::with_capacity(w);
+    while !flat.is_empty() {
+        let rest = flat.split_off(per.min(flat.len()));
+        groups.push(std::mem::replace(&mut flat, rest));
+    }
+    let n_workers = groups.len();
+    let yard: StealYard<StolenBatch<M::State>> = StealYard::new(n_workers);
+    let done: Mutex<Vec<FinishedBatch<M::State>>> = Mutex::new(Vec::new());
+    let per_worker_threads = (ctx.pool.n_threads() / n_workers).max(1);
+    ctx.pool.for_shards(&mut groups, |_, group| {
+        // Unwind safety: a panicking worker never parks, so without this
+        // guard a model panic here would leave parked siblings waiting
+        // for `idle == workers` forever instead of propagating.
+        let _abort_on_panic = yard.panic_guard();
+        let local = ThreadPool::new(per_worker_threads);
+        let shard_ctx = StepCtx {
+            pool: &local,
+            kalman: None,
+        };
+        for work in group.iter_mut() {
+            work.cost = drain_own_queue(
+                model, work.shard, work.heap, &mut work.runs, &yard, steal_min, t, seed,
+                observe, &shard_ctx, want_costs,
+            );
+        }
+        // Own queues drained: turn thief until the generation completes.
+        while let Some(b) = yard.take() {
+            let StolenBatch {
+                home,
+                base,
+                mut states,
+                mut heap,
+            } = b;
+            let t0 = Instant::now();
+            let ops0 = heap_ops(&heap.metrics);
+            let winc =
+                model.step_population(&mut heap, &mut states, t, seed, observe, base, &shard_ctx);
+            let hints: Vec<f64> = if want_costs {
+                states.iter_mut().map(|st| model.cost_hint(&mut heap, st)).collect()
+            } else {
+                Vec::new()
+            };
+            let ops1 = heap_ops(&heap.metrics);
+            let cost = t0.elapsed().as_secs_f64() + (ops1 - ops0) as f64 * OP_COST_S;
+            done.lock().unwrap().push(FinishedBatch {
+                home,
+                base,
+                states,
+                winc,
+                hints,
+                cost,
+                heap,
+            });
+        }
+    });
+    // Collect home-side results; this also drops the shard borrows.
+    let mut home_cost = vec![0.0f64; k];
+    let mut home_runs: Vec<Vec<ShardRun<M::State>>> = (0..k).map(|_| Vec::new()).collect();
+    for group in groups {
+        for work in group {
+            home_cost[work.shard] = work.cost;
+            home_runs[work.shard].extend(work.runs);
+        }
+    }
+    // Transplant stolen results back into their home shards — one
+    // reclaimer per home shard, exclusive `&mut`, deterministic batch
+    // order — draining and absorbing each scratch heap.
+    // (base, home-shard states, winc, hints, thief-measured cost).
+    type ReclaimedBatch<S> = (usize, Vec<Lazy<S>>, Vec<f64>, Vec<f64>, f64);
+    struct Reclaim<'a, S: Payload> {
+        heap: &'a mut Heap,
+        batches: Vec<FinishedBatch<S>>,
+        back: Vec<ReclaimedBatch<S>>,
+    }
+    let mut finished = done.into_inner().unwrap();
+    finished.sort_by_key(|b| (b.home, b.base));
+    let mut by_home: Vec<Vec<FinishedBatch<M::State>>> = (0..k).map(|_| Vec::new()).collect();
+    for b in finished {
+        by_home[b.home].push(b);
+    }
+    let mut reclaims: Vec<Reclaim<'_, M::State>> = shards
+        .iter_mut()
+        .zip(by_home)
+        .map(|(heap, batches)| Reclaim {
+            heap,
+            batches,
+            back: Vec::new(),
+        })
+        .collect();
+    ctx.pool.for_shards(&mut reclaims, |_, rc| {
+        for b in std::mem::take(&mut rc.batches) {
+            let FinishedBatch {
+                base,
+                states: stolen,
+                winc,
+                hints,
+                cost,
+                heap: mut scratch,
+                ..
+            } = b;
+            let mut back: Vec<Lazy<M::State>> = Vec::with_capacity(stolen.len());
+            for st in &stolen {
+                back.push(scratch.extract_into(st, rc.heap));
+            }
+            for st in stolen {
+                scratch.release(st);
+            }
+            scratch.sweep_memos();
+            rc.heap.absorb_counters(&scratch);
+            rc.back.push((base, back, winc, hints, cost));
+        }
+    });
+    // Scatter everything in global index order and apportion costs.
+    let mut stolen_idx: Vec<usize> = Vec::new();
+    for (s, runs) in home_runs.into_iter().enumerate() {
+        // One measured cost per home shard, shared across all its runs.
+        let hint_sum = clamped_hint_sum(runs.iter().flat_map(|r| r.hints.iter()));
+        for run in runs {
+            debug_assert_eq!(run.states.len(), run.winc.len());
+            let base = run.base;
+            for (j, w) in run.winc.iter().enumerate() {
+                lw[base + j] += w;
+            }
+            if let Some(rc) = raw_cost.as_deref_mut() {
+                apportion_cost(rc, base, home_cost[s], &run.hints, hint_sum);
+            }
+            for (j, st) in run.states.into_iter().enumerate() {
+                states[base + j] = st;
+            }
+        }
+    }
+    for rc_item in reclaims {
+        for (base, back, winc, hints, cost) in rc_item.back {
+            let hint_sum = clamped_hint_sum(hints.iter());
+            for (j, w) in winc.iter().enumerate() {
+                lw[base + j] += w;
+            }
+            if let Some(rc) = raw_cost.as_deref_mut() {
+                apportion_cost(rc, base, cost, &hints, hint_sum);
+            }
+            for (j, st) in back.into_iter().enumerate() {
+                states[base + j] = st;
+                stolen_idx.push(base + j);
+            }
+        }
+    }
+    stolen_idx.sort_unstable();
+    stolen_idx
+}
+
 /// A transplant operation for [`ThreadPool::for_pairs`]: (source shard,
 /// destination shard, (ancestor index, transplanted handle — filled by
 /// the executor)).
@@ -586,6 +1036,214 @@ fn plan_and_resample<S: Payload>(
     }
 }
 
+/// One alive-PF generation under the per-slot retry-stream contract
+/// ([`alive_retry_rng`], contract v2): re-propose each slot until it
+/// survives, drawing a fresh uniform ancestor per retry (Del Moral et al.
+/// 2015). Runs in *rounds*: the coordinator draws every pending slot's
+/// stream (the ancestor redraw is the stream's first draw, so the plan is
+/// deterministic and needs no heap access), imports each foreign retry
+/// ancestor once per distinct (ancestor, destination-shard) pair —
+/// concurrently for disjoint pairs — and the attempts themselves run
+/// shard-parallel, one `&mut Heap` per worker. Because every slot's
+/// attempt sequence depends only on its own streams and the (K-invariant)
+/// parent values, the surviving states, weights, and the *total attempt
+/// count* are bit-identical for every K. Same-shard retries keep the O(1)
+/// lazy `deep_copy`; only cross-shard retry ancestors pay the transplant,
+/// and duplicates share one per round.
+///
+/// Replaces `states` with the survivors (slot → shard assignment is
+/// unchanged), adds weight increments into `lw` in slot order, sweeps the
+/// shards, and returns the attempts made. Panics (deterministically, on
+/// the lowest slot) when a slot exhausts 10k attempts.
+///
+/// When `raw_cost` is given, the per-shard generation cost (wall seconds
+/// + op charge, summed over rounds — retries included) is apportioned
+/// over the shard's slots by `cost_hint`, so the rebalancer's
+/// [`CostTracker`] learns CRBD-style retry skew and can migrate the
+/// expensive lineages at the next resampling barrier.
+#[allow(clippy::too_many_arguments)]
+fn alive_generation<M: SmcModel + Sync>(
+    model: &M,
+    shards: &mut [Heap],
+    pool: &ThreadPool,
+    states: &mut [Lazy<M::State>],
+    lw: &mut [f64],
+    assign: &[usize],
+    t: usize,
+    seed: u64,
+    mut raw_cost: Option<&mut [f64]>,
+) -> usize {
+    let n = states.len();
+    let k = shards.len();
+    let mut attempt = vec![0usize; n];
+    let mut survivors: Vec<Lazy<M::State>> = vec![Lazy::NULL; n];
+    let mut winc_out = vec![0.0f64; n];
+    let mut shard_cost = vec![0.0f64; k];
+    let mut total_attempts = 0usize;
+    struct AliveJob<S> {
+        slot: usize,
+        parent: Lazy<S>,
+        rng: Pcg64,
+        winc: f64,
+        survived: bool,
+        child: Lazy<S>,
+    }
+    struct AliveTask<'a, S> {
+        shard: usize,
+        heap: &'a mut Heap,
+        jobs: Vec<AliveJob<S>>,
+        /// Measured round cost (out).
+        cost: f64,
+    }
+    // The pending set shrinks in place across rounds, so a long retry
+    // tail costs O(pending) per round, not O(n).
+    let mut pending: Vec<usize> = (0..n).collect();
+    while !pending.is_empty() {
+        // 1. Per-slot streams: ancestor redraw + the attempt's RNG state.
+        let mut draws: Vec<(usize, usize, Pcg64)> = Vec::with_capacity(pending.len());
+        for &i in &pending {
+            let mut rng = alive_retry_rng(seed, t, i, attempt[i]);
+            let a = if attempt[i] == 0 {
+                i
+            } else {
+                rng.below(n as u64) as usize
+            };
+            draws.push((i, a, rng));
+        }
+        // 2. Import foreign retry ancestors: one transplant per distinct
+        //    (ancestor, destination) pair (BTreeSet: deterministic op
+        //    order), disjoint pairs concurrently.
+        let pair_set: std::collections::BTreeSet<(usize, usize)> = draws
+            .iter()
+            .filter(|(i, a, _)| assign[*a] != assign[*i])
+            .map(|(i, a, _)| (*a, assign[*i]))
+            .collect();
+        let mut ops: Vec<TransplantOp<M::State>> = pair_set
+            .into_iter()
+            .map(|(a, dst)| (assign[a], dst, (a, Lazy::NULL)))
+            .collect();
+        {
+            let states_ref: &[Lazy<M::State>] = states;
+            pool.for_pairs(shards, &mut ops, |op, src, dst| {
+                let parent = states_ref[op.0];
+                op.1 = src.extract_into(&parent, dst);
+            });
+        }
+        let imported: std::collections::BTreeMap<(usize, usize), Lazy<M::State>> =
+            ops.into_iter().map(|(_, dst, (a, h))| ((a, dst), h)).collect();
+        // 3. Shard-parallel attempts.
+        let mut jobs_by_shard: Vec<Vec<AliveJob<M::State>>> = (0..k).map(|_| Vec::new()).collect();
+        for (i, a, rng) in draws {
+            let dst = assign[i];
+            let parent = if assign[a] == dst {
+                states[a]
+            } else {
+                imported[&(a, dst)]
+            };
+            jobs_by_shard[dst].push(AliveJob {
+                slot: i,
+                parent,
+                rng,
+                winc: 0.0,
+                survived: false,
+                child: Lazy::NULL,
+            });
+        }
+        // Only shards with work get a task (and a worker): a retry tail
+        // concentrated on one shard runs inline, without fanning scoped
+        // threads over k - 1 idle shards.
+        let mut tasks: Vec<AliveTask<'_, M::State>> = shards
+            .iter_mut()
+            .zip(jobs_by_shard)
+            .enumerate()
+            .filter(|(_, (_, jobs))| !jobs.is_empty())
+            .map(|(s, (heap, jobs))| AliveTask {
+                shard: s,
+                heap,
+                jobs,
+                cost: 0.0,
+            })
+            .collect();
+        pool.for_shards(&mut tasks, |_, task| {
+            let t0 = Instant::now();
+            let ops0 = heap_ops(&task.heap.metrics);
+            for job in task.jobs.iter_mut() {
+                let mut child = task.heap.deep_copy(&job.parent);
+                let label = child.label();
+                let winc = task
+                    .heap
+                    .with_context(label, |h| model.step(h, &mut child, t, &mut job.rng, true));
+                if model.alive(winc) {
+                    job.survived = true;
+                    job.winc = winc;
+                    job.child = child;
+                } else {
+                    task.heap.release(child);
+                }
+            }
+            let ops1 = heap_ops(&task.heap.metrics);
+            task.cost = t0.elapsed().as_secs_f64() + (ops1 - ops0) as f64 * OP_COST_S;
+        });
+        // 4. Apply results in slot order (deterministic 10k bailout).
+        let mut round: Vec<AliveJob<M::State>> = Vec::new();
+        for task in tasks {
+            shard_cost[task.shard] += task.cost;
+            round.extend(task.jobs);
+        }
+        round.sort_by_key(|job| job.slot);
+        for job in round {
+            let i = job.slot;
+            total_attempts += 1;
+            attempt[i] += 1;
+            if job.survived {
+                survivors[i] = job.child;
+                winc_out[i] = job.winc;
+            } else {
+                assert!(
+                    attempt[i] < 10_000,
+                    "alive PF: no surviving particle after 10k attempts at t={t} (slot {i})"
+                );
+            }
+        }
+        pending.retain(|&i| survivors[i].is_null());
+        // Imported parent copies were only needed for this round.
+        for ((_, dst), h) in imported {
+            shards[dst].release(h);
+        }
+    }
+    // Replace the population: install survivors (same assignment), release
+    // parents on their shards, accumulate weights in slot order.
+    for i in 0..n {
+        lw[i] += winc_out[i];
+        let parent = std::mem::replace(&mut states[i], survivors[i]);
+        shards[assign[i]].release(parent);
+    }
+    // Cost feedback: apportion each shard's measured generation cost
+    // (rounds + retries) over its slots by cost hint. Slots are not
+    // contiguous per shard in general, so this is the per-slot form of
+    // [`apportion_cost`] with the same [`HINT_FLOOR`] convention.
+    if let Some(rc) = raw_cost.as_deref_mut() {
+        let mut hint = vec![0.0f64; n];
+        let mut hint_sum = vec![0.0f64; k];
+        for i in 0..n {
+            let mut s = states[i];
+            hint[i] = model.cost_hint(&mut shards[assign[i]], &mut s).max(HINT_FLOOR);
+            states[i] = s;
+            hint_sum[assign[i]] += hint[i];
+        }
+        for i in 0..n {
+            let s = assign[i];
+            if hint_sum[s] > 0.0 && shard_cost[s].is_finite() {
+                rc[i] = shard_cost[s] * hint[i] / hint_sum[s];
+            }
+        }
+    }
+    for h in shards.iter_mut() {
+        h.sweep_memos();
+    }
+    total_attempts
+}
+
 /// Run a particle filter (or forward simulation) for `cfg` over `model`
 /// on a single heap — the K = 1 specialization of
 /// [`run_filter_shards`].
@@ -610,18 +1268,6 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
     method: Method,
 ) -> FilterResult {
     assert!(!shards.is_empty(), "at least one heap shard");
-    // The alive PF is coordinator-serial (its retry RNG stream depends on
-    // the cumulative attempt count), so sharding buys no parallelism there
-    // — and a sharded layout would make the O(history) cross-shard
-    // transplant the common case on retries (each retry draws a uniform
-    // ancestor, so (K-1)/K of draws would cross), reintroducing the eager
-    // copying cost the lazy platform exists to avoid. Keep its population
-    // on shard 0; outputs are K-invariant either way.
-    let shards = if method == Method::Alive {
-        &mut shards[..1]
-    } else {
-        shards
-    };
     let n = cfg.n_particles;
     let k = shards.len();
     let t_max = cfg.n_steps.min(model.horizon());
@@ -629,6 +1275,10 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
     let resampler = Resampler::Systematic;
     let policy = if k > 1 { cfg.rebalance } else { RebalancePolicy::Off };
     let balancing = policy != RebalancePolicy::Off;
+    // Stealing applies to inference only: the simulation task's contract
+    // (Figure 6 — zero copies, pure lazy-pointer overhead) must hold by
+    // construction, and a donation's scratch round trip is copy traffic.
+    let stealing = cfg.steal && k > 1 && observe;
     let start = Instant::now();
 
     // Initialize: contiguous starting assignment.
@@ -637,7 +1287,9 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
     let mut tracker = CostTracker::new(n);
     let mut shard_cost = vec![0.0f64; k];
     let mut hints = vec![1.0f64; n];
+    let mut raw_cost = vec![f64::NAN; n];
     let mut migrations = 0usize;
+    let mut steals = 0usize;
     let mut lw = vec![0.0f64; n];
     let mut log_z = 0.0f64;
     let mut series = Vec::new();
@@ -714,52 +1366,54 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
         // --- Propagate + weight. ---
         match method {
             Method::Alive if observe => {
-                // Alive PF: re-propose each slot until it survives, drawing
-                // a fresh ancestor per attempt (Del Moral et al. 2015).
-                // Resampling above has already equalized weights. The
-                // whole population lives on shard 0 (see the collapse at
-                // function entry), so every retry is an O(1) lazy copy.
-                debug_assert_eq!(k, 1);
-                let heap = &mut shards[0];
-                let parents = std::mem::take(&mut states);
-                let mut survivors = Vec::with_capacity(n);
-                for i in 0..n {
-                    let mut attempt = 0usize;
-                    loop {
-                        let mut rng = particle_rng(
-                            cfg.seed,
-                            t,
-                            i + attempt * n + attempts, // fresh stream per retry
-                        );
-                        let a = if attempt == 0 {
-                            i
-                        } else {
-                            rng.below(n as u64) as usize
-                        };
-                        let mut child = heap.deep_copy(&parents[a]);
-                        let label = child.label();
-                        let winc = heap.with_context(label, |h| {
-                            model.step(h, &mut child, t, &mut rng, true)
-                        });
-                        attempt += 1;
-                        if model.alive(winc) {
-                            lw[i] += winc;
-                            survivors.push(child);
-                            break;
-                        }
-                        heap.release(child);
-                        assert!(
-                            attempt < 10_000,
-                            "alive PF: no surviving particle after 10k attempts at t={t}"
-                        );
+                // Alive PF (contract v2): per-slot retry streams, rounds
+                // of shard-parallel attempts. Resampling above has already
+                // equalized weights. With rebalancing active the rounds'
+                // measured costs feed the tracker, so retry-heavy
+                // lineages migrate at the next barrier.
+                if balancing {
+                    raw_cost.iter_mut().for_each(|c| *c = f64::NAN);
+                }
+                attempts += alive_generation(
+                    model,
+                    shards,
+                    ctx.pool,
+                    &mut states,
+                    &mut lw,
+                    &assign,
+                    t,
+                    cfg.seed,
+                    balancing.then_some(&mut raw_cost[..]),
+                );
+                if balancing {
+                    tracker.fold(&raw_cost);
+                }
+            }
+            _ if stealing => {
+                if balancing {
+                    raw_cost.iter_mut().for_each(|c| *c = f64::NAN);
+                }
+                let stolen = propagate_stealing(
+                    model,
+                    shards,
+                    &mut states,
+                    &mut lw,
+                    &assign,
+                    t,
+                    cfg.seed,
+                    observe,
+                    ctx,
+                    cfg.steal_min,
+                    balancing.then_some(&mut raw_cost[..]),
+                );
+                if balancing {
+                    for &i in &stolen {
+                        tracker.note_stolen(i);
                     }
-                    attempts += attempt;
+                    tracker.fold(&raw_cost);
                 }
-                states = survivors;
-                for p in parents {
-                    heap.release(p);
-                }
-                heap.sweep_memos();
+                steals += stolen.len();
+                attempts += n;
             }
             _ => {
                 propagate_assigned(
@@ -811,6 +1465,7 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
             agg.global_peak_bytes
         },
         migrations,
+        steals,
         series,
         attempts,
     };
@@ -856,6 +1511,7 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
     let resampler = Resampler::Systematic;
     let policy = if k > 1 { cfg.rebalance } else { RebalancePolicy::Off };
     let balancing = policy != RebalancePolicy::Off;
+    let stealing = cfg.steal && k > 1;
     let mut results = Vec::new();
     // Shard holding the conditional slot — and the reference trajectory.
     let s_ref = shard_of(n, k, n - 1);
@@ -864,6 +1520,7 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
     let mut reference: Option<Vec<Lazy<M::State>>> = None;
     let mut shard_cost = vec![0.0f64; k];
     let mut hints = vec![1.0f64; n];
+    let mut raw_cost = vec![f64::NAN; n];
 
     for iter in 0..cfg.pg_iterations {
         let seed = cfg.seed.wrapping_add(iter as u64 * 0x9E37);
@@ -874,6 +1531,7 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
         // from the previous iteration's particles are garbage here.
         let mut tracker = CostTracker::new(n);
         let mut migrations = 0usize;
+        let mut steals = 0usize;
         sample_global_peak(shards);
         // Conditional slot n-1 follows the reference when present.
         if let Some(r) = &reference {
@@ -909,21 +1567,47 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
 
             // Propagate free particles; pin + score the conditional one.
             let split = if reference.is_some() { n - 1 } else { n };
-            propagate_assigned(
-                model,
-                shards,
-                &mut states[..split],
-                &mut lw[..split],
-                &assign[..split],
-                t,
-                seed,
-                true,
-                ctx,
-                balancing.then_some(&mut shard_cost[..]),
-                balancing.then_some(&mut hints[..split]),
-            );
-            if balancing {
-                tracker.update(&assign[..split], &shard_cost, &hints[..split]);
+            if stealing {
+                if balancing {
+                    raw_cost[..split].iter_mut().for_each(|c| *c = f64::NAN);
+                }
+                let stolen = propagate_stealing(
+                    model,
+                    shards,
+                    &mut states[..split],
+                    &mut lw[..split],
+                    &assign[..split],
+                    t,
+                    seed,
+                    true,
+                    ctx,
+                    cfg.steal_min,
+                    balancing.then_some(&mut raw_cost[..split]),
+                );
+                if balancing {
+                    for &i in &stolen {
+                        tracker.note_stolen(i);
+                    }
+                    tracker.fold(&raw_cost[..split]);
+                }
+                steals += stolen.len();
+            } else {
+                propagate_assigned(
+                    model,
+                    shards,
+                    &mut states[..split],
+                    &mut lw[..split],
+                    &assign[..split],
+                    t,
+                    seed,
+                    true,
+                    ctx,
+                    balancing.then_some(&mut shard_cost[..]),
+                    balancing.then_some(&mut hints[..split]),
+                );
+                if balancing {
+                    tracker.update(&assign[..split], &shard_cost, &hints[..split]);
+                }
             }
             if let Some(r) = &reference {
                 shards[s_ref].release(states[n - 1]);
@@ -988,6 +1672,7 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
                 agg.global_peak_bytes
             },
             migrations,
+            steals,
             series,
             attempts: n * t_max,
         });

@@ -11,7 +11,7 @@ pub use filter::{
     run_filter, run_filter_shards, run_particle_gibbs, run_particle_gibbs_shards,
     FilterResult, Method, StepMetrics,
 };
-pub use model::{particle_rng, resample_rng, SmcModel, StepCtx};
+pub use model::{alive_retry_rng, particle_rng, resample_rng, SmcModel, StepCtx};
 pub use rebalance::{plan_offspring, CostTracker, OffspringPlan, RebalancePolicy};
 pub use resample::Resampler;
 

@@ -136,6 +136,34 @@ pub fn resample_rng(seed: u64, t: usize) -> Pcg64 {
     Pcg64::stream(seed, 0xFFFF_0000_0000_0000 | t as u64)
 }
 
+/// Alive-PF per-slot retry stream — the versioned stream contract (v2)
+/// that makes the alive PF shard-parallel. Attempt `attempt` of slot `i`
+/// at generation `t` draws from a substream independent of every other
+/// slot's retries, so slot outcomes (ancestor redraws, propagation
+/// randomness, acceptance) do not depend on how attempts interleave
+/// across shards — output and the total attempt count are identical for
+/// every K. (Contract v1 chained all slots through one cumulative-attempt
+/// counter, which pinned the whole population to one coordinator-serial
+/// stream.)
+///
+/// For `attempt > 0` the first draw from the returned stream is the
+/// uniform ancestor redraw (`below(n)`); the propagation step consumes
+/// the stream from there. The stream id keeps bit 62 set and bits 48..62
+/// sparse, disjoint from [`particle_rng`] (`< 2^33`) and [`resample_rng`]
+/// (bits 48..63 all set) for every reachable `t`, `i`, and `attempt`
+/// (attempts are capped at 10k).
+pub fn alive_retry_rng(seed: u64, t: usize, i: usize, attempt: usize) -> Pcg64 {
+    // The packing is collision-free only inside these bounds (fields land
+    // in disjoint bit ranges); outside them streams would silently alias.
+    debug_assert!(i < (1 << 24), "alive stream space supports < 2^24 slots");
+    debug_assert!(attempt < (1 << 16), "alive stream space supports < 2^16 attempts");
+    debug_assert!(t < (1 << 22), "alive stream space supports < 2^22 generations");
+    Pcg64::stream(
+        seed,
+        (1u64 << 62) ^ ((t as u64) << 40) ^ ((attempt as u64) << 24) ^ (i as u64),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,5 +179,27 @@ mod tests {
         assert_ne!(x, c.next_u64());
         assert_ne!(x, d.next_u64());
         assert_ne!(x, resample_rng(1, 3).next_u64());
+    }
+
+    #[test]
+    fn alive_retry_streams_distinct_per_slot_and_attempt() {
+        let x = alive_retry_rng(1, 3, 5, 0).next_u64();
+        // Deterministic.
+        assert_eq!(x, alive_retry_rng(1, 3, 5, 0).next_u64());
+        // Distinct across slot, attempt, generation, and from the other
+        // stream families.
+        assert_ne!(x, alive_retry_rng(1, 3, 6, 0).next_u64());
+        assert_ne!(x, alive_retry_rng(1, 3, 5, 1).next_u64());
+        assert_ne!(x, alive_retry_rng(1, 4, 5, 0).next_u64());
+        assert_ne!(x, particle_rng(1, 3, 5).next_u64());
+        assert_ne!(x, resample_rng(1, 3).next_u64());
+        // The stream-id spaces are disjoint by construction: alive ids set
+        // bit 62 with bits 52..62 clear; particle ids stay below 2^33;
+        // resample ids set all of bits 48..63.
+        for (t, i, a) in [(1usize, 0usize, 0usize), (3262, 16383, 9999)] {
+            let id = (1u64 << 62) ^ ((t as u64) << 40) ^ ((a as u64) << 24) ^ (i as u64);
+            assert!(id & (1 << 62) != 0);
+            assert_eq!((id >> 52) & 0x3FF, 0, "bits 52..62 clear for t={t}");
+        }
     }
 }

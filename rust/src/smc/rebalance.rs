@@ -44,6 +44,12 @@ pub const OP_COST_S: f64 = 2e-8;
 /// the `Budget` policy's migration-cost model.
 pub const TRANSPLANT_COST_S: f64 = 2e-7;
 
+/// Floor applied to model cost hints wherever a measured cost is
+/// apportioned among particles, so zero/negative hints cannot zero a
+/// denominator or erase a particle's share. One constant, shared by every
+/// apportionment site (tracker update, steal-path scatter, alive rounds).
+pub const HINT_FLOOR: f64 = 1e-12;
+
 /// Offspring-to-shard assignment policy applied at each resampling step.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum RebalancePolicy {
@@ -83,20 +89,35 @@ impl RebalancePolicy {
     ];
 }
 
+/// EWMA weight applied to a particle's fresh measurement when the particle
+/// was stolen this generation: a steal is direct evidence the planner's
+/// estimate for it (or its shard) was off, so the tracker adapts faster.
+pub const STEAL_ALPHA: f64 = 0.8;
+
 /// Per-particle propagation-cost estimates (EWMA over generations).
 ///
 /// Costs start at zero, so the first resampling step plans the static
 /// sticky assignment; estimates sharpen as measured generations arrive.
+///
+/// The tracker also learns from the work-stealing executor: particles
+/// flagged stolen ([`CostTracker::note_stolen`]) fold their next
+/// measurement in with the boosted [`STEAL_ALPHA`] — a steal means the
+/// current estimate under-predicted the particle's (or its shard's) load,
+/// so the fresh, thief-measured cost should dominate the stale prior.
 pub struct CostTracker {
     costs: Vec<f64>,
+    stolen: Vec<bool>,
     alpha: f64,
+    steal_events: usize,
 }
 
 impl CostTracker {
     pub fn new(n: usize) -> Self {
         CostTracker {
             costs: vec![0.0; n],
+            stolen: vec![false; n],
             alpha: 0.5,
+            steal_events: 0,
         }
     }
 
@@ -106,11 +127,44 @@ impl CostTracker {
         &self.costs
     }
 
+    /// Total particles stolen over the tracker's lifetime (one event per
+    /// stolen particle per generation).
+    pub fn steal_events(&self) -> usize {
+        self.steal_events
+    }
+
     /// Resampling: offspring slot `i` inherits ancestor `anc[i]`'s cost.
+    /// Steal flags are per-generation signals and reset.
     pub fn inherit(&mut self, anc: &[usize]) {
         let new: Vec<f64> = anc.iter().map(|&a| self.costs[a]).collect();
         for (c, v) in self.costs.iter_mut().zip(new) {
             *c = v;
+        }
+        self.stolen.iter_mut().for_each(|s| *s = false);
+    }
+
+    /// Record that slot `i` was stolen this generation: its next folded
+    /// measurement uses [`STEAL_ALPHA`].
+    pub fn note_stolen(&mut self, i: usize) {
+        self.stolen[i] = true;
+        self.steal_events += 1;
+    }
+
+    /// Fold direct per-particle cost measurements (the work-stealing
+    /// executor's output: home-shard costs apportioned over the particles
+    /// the home worker actually processed, thief-measured costs for stolen
+    /// batches). Non-finite or negative entries mean "no measurement for
+    /// this slot" and leave the estimate untouched. Consumes (and clears)
+    /// the stolen flags.
+    pub fn fold(&mut self, raw: &[f64]) {
+        debug_assert!(raw.len() <= self.costs.len());
+        for (i, &r) in raw.iter().enumerate() {
+            if !r.is_finite() || r < 0.0 {
+                continue;
+            }
+            let a = if self.stolen[i] { STEAL_ALPHA } else { self.alpha };
+            self.costs[i] = (1.0 - a) * self.costs[i] + a * r;
+            self.stolen[i] = false;
         }
     }
 
@@ -126,13 +180,13 @@ impl CostTracker {
         let k = shard_cost.len();
         let mut hint_sum = vec![0.0f64; k];
         for (i, &s) in assign.iter().enumerate() {
-            hint_sum[s] += hints[i].max(1e-12);
+            hint_sum[s] += hints[i].max(HINT_FLOOR);
         }
         for (i, &s) in assign.iter().enumerate() {
             if hint_sum[s] <= 0.0 || !shard_cost[s].is_finite() {
                 continue;
             }
-            let raw = shard_cost[s] * hints[i].max(1e-12) / hint_sum[s];
+            let raw = shard_cost[s] * hints[i].max(HINT_FLOOR) / hint_sum[s];
             self.costs[i] = (1.0 - self.alpha) * self.costs[i] + self.alpha * raw;
         }
     }
@@ -364,5 +418,41 @@ mod tests {
         t.update(&[0, 1], &[f64::NAN, 2.0], &[1.0, 1.0]);
         assert_eq!(t.costs()[0], 0.0);
         assert!((t.costs()[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fold_applies_direct_measurements_and_skips_unmeasured() {
+        let mut t = CostTracker::new(3);
+        t.fold(&[2.0, f64::NAN, -1.0]);
+        assert!((t.costs()[0] - 1.0).abs() < 1e-12, "alpha 0.5 of 2.0");
+        assert_eq!(t.costs()[1], 0.0, "NAN = no measurement");
+        assert_eq!(t.costs()[2], 0.0, "negative = no measurement");
+        // A shorter (prefix) slice is allowed — particle Gibbs measures
+        // only the free slots.
+        t.fold(&[2.0]);
+        assert!((t.costs()[0] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stolen_particles_adapt_faster_then_reset() {
+        let mut t = CostTracker::new(2);
+        t.note_stolen(0);
+        assert_eq!(t.steal_events(), 1);
+        t.fold(&[1.0, 1.0]);
+        // Slot 0 folded with STEAL_ALPHA, slot 1 with the default alpha.
+        assert!((t.costs()[0] - STEAL_ALPHA).abs() < 1e-12, "{:?}", t.costs());
+        assert!((t.costs()[1] - 0.5).abs() < 1e-12);
+        // The flag is consumed: a second fold uses the default alpha again.
+        let c0 = t.costs()[0];
+        t.fold(&[c0, f64::NAN]);
+        assert!((t.costs()[0] - c0).abs() < 1e-12, "steady state at default alpha");
+        // inherit clears pending flags too.
+        t.note_stolen(1);
+        t.inherit(&[0, 0]);
+        t.fold(&[f64::NAN, 1.0]);
+        assert!(
+            (t.costs()[1] - (0.5 * c0 + 0.5)).abs() < 1e-12,
+            "flag cleared by inherit: default alpha applies"
+        );
     }
 }

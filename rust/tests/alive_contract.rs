@@ -1,0 +1,243 @@
+//! Alive-PF stream-contract tests (contract v2: per-slot retry streams).
+//!
+//! The contract: attempt `a` of slot `i` at generation `t` consumes
+//! `alive_retry_rng(seed, t, i, a)`, whose *first* draw (for `a > 0`) is
+//! the uniform ancestor redraw and whose remainder feeds the propagation
+//! step. Slot outcomes therefore depend only on their own streams and on
+//! parent values — never on how attempts interleave across shards — which
+//! is what makes the alive PF shard-parallel with K-invariant output.
+//!
+//! The oracle here is an *independent reimplementation* of that contract:
+//! a model whose acceptance is a pure function of the stream lets the test
+//! replay every draw with `alive_retry_rng` directly and predict the
+//! engine's evidence, posterior mean, and total attempt count bit for bit.
+//! If the engine's stream discipline drifts (an extra draw, a reordered
+//! draw, a cumulative counter sneaking back in), these tests fail.
+
+use lazycow::config::{Model, RunConfig, Task};
+use lazycow::heap::{CopyMode, Heap, Lazy, ShardedHeap};
+use lazycow::lazy_fields;
+use lazycow::models::Crbd;
+use lazycow::pool::ThreadPool;
+use lazycow::rng::Pcg64;
+use lazycow::smc::{alive_retry_rng, run_filter, run_filter_shards, Method, SmcModel, StepCtx};
+use lazycow::stats::{log_sum_exp, normalize_log_weights};
+
+fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
+    StepCtx { pool, kalman: None }
+}
+
+/// A model whose alive-PF behaviour is a pure function of the retry
+/// stream: each step draws one uniform `u`; the particle dies iff
+/// `u < p_die`, otherwise gains weight `ln(1 + u)` and accumulates `u`
+/// into its state (chained through the heap, so retries still exercise
+/// deep-copy/release on real lineages).
+struct RetryModel {
+    t_max: usize,
+    p_die: f64,
+}
+
+#[derive(Clone)]
+struct RState {
+    acc: f64,
+    prev: Lazy<RState>,
+}
+lazy_fields!(RState: prev);
+
+impl SmcModel for RetryModel {
+    type State = RState;
+
+    fn name(&self) -> &'static str {
+        "retry-oracle"
+    }
+
+    fn horizon(&self) -> usize {
+        self.t_max
+    }
+
+    fn init(&self, heap: &mut Heap, _rng: &mut Pcg64) -> Lazy<RState> {
+        heap.alloc(RState {
+            acc: 0.0,
+            prev: Lazy::NULL,
+        })
+    }
+
+    fn step(
+        &self,
+        heap: &mut Heap,
+        state: &mut Lazy<RState>,
+        _t: usize,
+        rng: &mut Pcg64,
+        observe: bool,
+    ) -> f64 {
+        let u = rng.next_f64();
+        let acc = heap.read(state, |s| s.acc);
+        let old = *state;
+        let new = heap.alloc(RState {
+            acc: acc + u,
+            prev: old,
+        });
+        heap.release(old);
+        *state = new;
+        if observe && u < self.p_die {
+            f64::NEG_INFINITY
+        } else {
+            (1.0 + u).ln()
+        }
+    }
+
+    fn summary(&self, heap: &mut Heap, state: &mut Lazy<RState>) -> f64 {
+        heap.read(state, |s| s.acc)
+    }
+}
+
+/// Replay the stream contract directly: the expected attempts, evidence,
+/// and posterior mean for `RetryModel` under an alive PF with resampling
+/// disabled (`ess_threshold = 0`), using the same stats primitives in the
+/// same order as the engine — so the comparison can be bitwise.
+fn reference_alive(seed: u64, n: usize, t_max: usize, p_die: f64) -> (usize, u64, u64) {
+    let mut accs = vec![0.0f64; n];
+    let mut lw = vec![0.0f64; n];
+    let mut attempts = 0usize;
+    for t in 1..=t_max {
+        let mut new_accs = vec![0.0f64; n];
+        let mut winc_out = vec![0.0f64; n];
+        for i in 0..n {
+            let mut attempt = 0usize;
+            loop {
+                let mut rng = alive_retry_rng(seed, t, i, attempt);
+                let a = if attempt == 0 {
+                    i
+                } else {
+                    rng.below(n as u64) as usize
+                };
+                let u = rng.next_f64();
+                attempts += 1;
+                attempt += 1;
+                if u >= p_die {
+                    new_accs[i] = accs[a] + u;
+                    winc_out[i] = (1.0 + u).ln();
+                    break;
+                }
+                assert!(attempt < 10_000, "reference bailout");
+            }
+        }
+        accs = new_accs;
+        for i in 0..n {
+            lw[i] += winc_out[i];
+        }
+    }
+    // Final evidence + posterior exactly as the engine computes them.
+    let log_z = log_sum_exp(&lw) - (n as f64).ln();
+    let mut w = Vec::new();
+    normalize_log_weights(&lw, &mut w);
+    let mut post = 0.0;
+    for i in 0..n {
+        post += w[i] * accs[i];
+    }
+    (attempts, log_z.to_bits(), post.to_bits())
+}
+
+/// The engine reproduces the independently-replayed stream contract bit
+/// for bit, for K ∈ {1, 2, 4} — pinning the per-slot-stream oracle values
+/// and the attempts-invariant-in-K guarantee in one shot.
+#[test]
+fn engine_matches_reference_stream_oracle() {
+    let (seed, n, t_max, p_die) = (0xA11CE, 32, 12, 0.35);
+    let model = RetryModel { t_max, p_die };
+    let (want_attempts, want_lz, want_post) = reference_alive(seed, n, t_max, p_die);
+    assert!(
+        want_attempts > n * t_max,
+        "test is vacuous unless some retries happen (got {want_attempts})"
+    );
+    let pool = ThreadPool::new(3);
+    let mut cfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = n;
+    cfg.n_steps = t_max;
+    cfg.seed = seed;
+    cfg.ess_threshold = 0.0; // never resample: the pure stream contract
+    for k in [1usize, 2, 4] {
+        for mode in CopyMode::ALL {
+            let mut cfg = cfg.clone();
+            cfg.mode = mode;
+            let mut sh = ShardedHeap::new(mode, k);
+            let r = run_filter_shards(&model, &cfg, sh.shards_mut(), &ctx(&pool), Method::Alive);
+            assert_eq!(
+                r.attempts, want_attempts,
+                "K={k}/{mode:?}: attempts diverge from the stream contract"
+            );
+            assert_eq!(
+                r.log_evidence.to_bits(),
+                want_lz,
+                "K={k}/{mode:?}: evidence diverges from the stream contract"
+            );
+            assert_eq!(
+                r.posterior_mean.to_bits(),
+                want_post,
+                "K={k}/{mode:?}: posterior diverges from the stream contract"
+            );
+            assert_eq!(sh.live_objects(), 0, "K={k}/{mode:?} leaked");
+        }
+    }
+}
+
+/// Real-model coverage: CRBD under the alive PF is bitwise K-invariant
+/// with exactly equal attempt counts, the population spread over all
+/// shards (the v1 contract collapsed it onto shard 0), and clean shards.
+#[test]
+fn crbd_alive_bitwise_and_attempts_invariant_in_k() {
+    let model = Crbd::synthetic(30, 2);
+    let pool = ThreadPool::new(2);
+    let mut cfg = RunConfig::for_model(Model::Crbd, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 64;
+    cfg.n_steps = model.horizon();
+    cfg.seed = 3;
+
+    let mut baseline = Heap::new(CopyMode::LazySro);
+    let base = run_filter(&model, &cfg, &mut baseline, &ctx(&pool), Method::Alive);
+    assert!(base.log_evidence.is_finite());
+    assert!(
+        base.attempts >= 64 * model.horizon(),
+        "attempt count includes retries"
+    );
+    assert_eq!(baseline.live_objects(), 0);
+
+    for k in [2usize, 4] {
+        let mut sh = ShardedHeap::new(CopyMode::LazySro, k);
+        let r = run_filter_shards(&model, &cfg, sh.shards_mut(), &ctx(&pool), Method::Alive);
+        assert_eq!(r.log_evidence.to_bits(), base.log_evidence.to_bits());
+        assert_eq!(r.posterior_mean.to_bits(), base.posterior_mean.to_bits());
+        assert_eq!(r.attempts, base.attempts, "K={k}: attempts not invariant");
+        assert_eq!(sh.live_objects(), 0, "K={k} leaked");
+        for (s, h) in sh.shards().iter().enumerate() {
+            assert_eq!(
+                h.metrics.total_allocs,
+                h.metrics.total_frees + h.metrics.live_objects,
+                "K={k}: shard {s} balance broken"
+            );
+            assert!(
+                h.metrics.total_allocs > 0,
+                "K={k}: shard {s} idle — the alive population no longer spreads"
+            );
+        }
+    }
+}
+
+/// The 10k-attempt bailout fires deterministically — on the lowest slot,
+/// at the first generation — when no particle can ever survive.
+#[test]
+#[should_panic(expected = "alive PF: no surviving particle after 10k attempts at t=1 (slot 0)")]
+fn bailout_after_10k_attempts_is_deterministic() {
+    let model = RetryModel {
+        t_max: 1,
+        p_die: 1.1, // u < 1.1 always: every attempt dies
+    };
+    let pool = ThreadPool::new(1);
+    let mut cfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 2;
+    cfg.n_steps = 1;
+    cfg.seed = 1;
+    cfg.ess_threshold = 0.0;
+    let mut heap = Heap::new(CopyMode::LazySro);
+    let _ = run_filter(&model, &cfg, &mut heap, &ctx(&pool), Method::Alive);
+}

@@ -1,0 +1,223 @@
+//! Differential test harness: the engine's determinism contract, pinned.
+//!
+//! [`assert_bitwise_equiv`] is a reusable runner that sweeps the full
+//! scheduling matrix — K ∈ {1, 2, 4} × rebalance policy × steal on/off ×
+//! copy mode — against the K = 1 / steal-off / policy-off oracle and
+//! demands *bitwise* equality of `log_evidence` and `posterior_mean`
+//! (plus equal attempt counts, zero leaks, per-shard alloc/free balance,
+//! and the global-peak ≤ sum-of-peaks invariant) in every cell. It
+//! replaces the ad-hoc matrix that used to live in `tests/sharded.rs`.
+//!
+//! Three workloads cover every propagation path: LGSS (bootstrap, the
+//! exact-Kalman oracle model), PCFG (auxiliary PF with lookahead
+//! resampling and heavy-tailed derivation stacks), and CRBD (alive PF
+//! under the per-slot retry-stream contract v2).
+
+use lazycow::config::{Model, RunConfig, Task};
+use lazycow::heap::{CopyMode, ShardedHeap};
+use lazycow::models::{Crbd, ListModel, Pcfg};
+use lazycow::pool::ThreadPool;
+use lazycow::smc::{run_filter_shards, Method, RebalancePolicy, SmcModel, StepCtx};
+
+fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
+    StepCtx { pool, kalman: None }
+}
+
+/// One matrix cell's identity-relevant output.
+#[derive(Clone, Copy, PartialEq, Debug)]
+struct Fingerprint {
+    log_evidence: u64,
+    posterior_mean: u64,
+    attempts: usize,
+}
+
+fn run_cell<M: SmcModel + Sync>(
+    model: &M,
+    cfg: &RunConfig,
+    method: Method,
+    pool: &ThreadPool,
+    k: usize,
+    label: &str,
+) -> Fingerprint {
+    let mut sh = ShardedHeap::new(cfg.mode, k);
+    let r = run_filter_shards(model, cfg, sh.shards_mut(), &ctx(pool), method);
+    // Structural invariants hold in every cell, not just the oracle.
+    assert_eq!(sh.live_objects(), 0, "{label}: leaked live objects");
+    for (s, h) in sh.shards().iter().enumerate() {
+        assert_eq!(
+            h.metrics.total_allocs,
+            h.metrics.total_frees + h.metrics.live_objects,
+            "{label}: shard {s} alloc/free/live balance broken"
+        );
+    }
+    assert!(
+        r.global_peak_bytes <= r.peak_bytes,
+        "{label}: global peak {} above sum-of-peaks {}",
+        r.global_peak_bytes,
+        r.peak_bytes
+    );
+    assert!(r.global_peak_bytes > 0, "{label}: no peak recorded");
+    if k == 1 {
+        assert_eq!(
+            r.global_peak_bytes, r.peak_bytes,
+            "{label}: K=1 continuous peak is the exact global peak"
+        );
+        assert_eq!(r.migrations, 0, "{label}: K=1 cannot migrate");
+        assert_eq!(r.steals, 0, "{label}: K=1 cannot steal");
+    }
+    Fingerprint {
+        log_evidence: r.log_evidence.to_bits(),
+        posterior_mean: r.posterior_mean.to_bits(),
+        attempts: r.attempts,
+    }
+}
+
+/// Sweep K ∈ {1, 2, 4} × policy × steal on/off × copy mode for one model
+/// and assert every cell reproduces the per-mode oracle (K = 1, steal
+/// off, rebalancing off) bit for bit — and that the oracle itself is
+/// identical across copy modes (the paper's §4 matched-seed contract).
+fn assert_bitwise_equiv<M: SmcModel + Sync>(
+    name: &str,
+    model: &M,
+    base_cfg: &RunConfig,
+    method: Method,
+) {
+    let pool = ThreadPool::new(4);
+    let mut cross_mode: Option<Fingerprint> = None;
+    for mode in CopyMode::ALL {
+        let mut oracle_cfg = base_cfg.clone();
+        oracle_cfg.mode = mode;
+        oracle_cfg.steal = false;
+        oracle_cfg.rebalance = RebalancePolicy::Off;
+        let oracle = run_cell(
+            model,
+            &oracle_cfg,
+            method,
+            &pool,
+            1,
+            &format!("{name}/{mode:?}/oracle"),
+        );
+        match cross_mode {
+            None => cross_mode = Some(oracle),
+            Some(first) => assert_eq!(
+                first, oracle,
+                "{name}: oracle differs between copy modes at {mode:?}"
+            ),
+        }
+        for k in [1usize, 2, 4] {
+            for policy in RebalancePolicy::ALL {
+                for steal in [false, true] {
+                    let mut cfg = base_cfg.clone();
+                    cfg.mode = mode;
+                    cfg.rebalance = policy;
+                    cfg.steal = steal;
+                    // Force stealing to actually trigger when enabled:
+                    // with the tiny test populations, the default
+                    // threshold rarely leaves enough tail to donate.
+                    cfg.steal_min = 2;
+                    let label = format!(
+                        "{name}/{mode:?}/K={k}/{policy:?}/steal={}",
+                        if steal { "on" } else { "off" }
+                    );
+                    let got = run_cell(model, &cfg, method, &pool, k, &label);
+                    assert_eq!(got, oracle, "{label}: output diverged from oracle");
+                }
+            }
+        }
+    }
+    // Thread-count invariance: the same matrix cell on a different pool
+    // (chunked propagation + stealing schedule both change) must still
+    // reproduce the oracle.
+    let pool2 = ThreadPool::new(2);
+    let mut cfg = base_cfg.clone();
+    cfg.rebalance = RebalancePolicy::Greedy;
+    cfg.steal = true;
+    cfg.steal_min = 2;
+    let mut sh = ShardedHeap::new(cfg.mode, 4);
+    let r = run_filter_shards(model, &cfg, sh.shards_mut(), &ctx(&pool2), method);
+    let oracle = cross_mode.expect("oracle recorded");
+    // base_cfg.mode is the first CopyMode::ALL entry's oracle only if the
+    // modes agree — which the loop above asserted — so any mode works.
+    assert_eq!(
+        r.log_evidence.to_bits(),
+        oracle.log_evidence,
+        "{name}: output depends on worker-thread count"
+    );
+    assert_eq!(r.attempts, oracle.attempts, "{name}: attempts depend on threads");
+}
+
+#[test]
+fn lgss_matrix_bitwise() {
+    let model = ListModel::synthetic(25, 11);
+    let exact = model.exact_evidence();
+    let mut cfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 96;
+    cfg.n_steps = 25;
+    cfg.seed = 2026_0730;
+    // Statistical sanity against the closed-form Kalman evidence, so the
+    // matrix isn't pinning a degenerate filter.
+    let pool = ThreadPool::new(4);
+    let mut sh = ShardedHeap::new(CopyMode::LazySro, 1);
+    let mut oracle_cfg = cfg.clone();
+    oracle_cfg.steal = false;
+    oracle_cfg.rebalance = RebalancePolicy::Off;
+    let r = run_filter_shards(&model, &oracle_cfg, sh.shards_mut(), &ctx(&pool), Method::Bootstrap);
+    assert!(
+        (r.log_evidence - exact).abs() < 3.0,
+        "baseline {} vs oracle {exact}",
+        r.log_evidence
+    );
+    assert_bitwise_equiv("lgss", &model, &cfg, Method::Bootstrap);
+}
+
+#[test]
+fn pcfg_matrix_bitwise() {
+    let model = Pcfg::synthetic(16, 7);
+    let mut cfg = RunConfig::for_model(Model::Pcfg, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 48;
+    cfg.n_steps = 16;
+    cfg.seed = 42;
+    assert_bitwise_equiv("pcfg", &model, &cfg, Method::Auxiliary);
+}
+
+#[test]
+fn crbd_matrix_bitwise() {
+    let model = Crbd::synthetic(25, 2);
+    let mut cfg = RunConfig::for_model(Model::Crbd, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 48;
+    cfg.n_steps = model.horizon();
+    cfg.seed = 3;
+    assert_bitwise_equiv("crbd", &model, &cfg, Method::Alive);
+}
+
+/// Simulation (no observations, no resampling, no copies): the engine
+/// gates stealing to inference, so even with `steal = true` the
+/// simulation task stays bit-identical *and* copy-free — the Figure 6
+/// contract holds with default configuration.
+#[test]
+fn simulation_matrix_bitwise() {
+    let model = ListModel::synthetic(30, 5);
+    let mut cfg = RunConfig::for_model(Model::List, Task::Simulation, CopyMode::LazySro);
+    cfg.n_particles = 64;
+    cfg.n_steps = 30;
+    cfg.seed = 9;
+    let pool = ThreadPool::new(4);
+    let mut oracle_cfg = cfg.clone();
+    oracle_cfg.steal = false;
+    let mut sh = ShardedHeap::new(CopyMode::LazySro, 1);
+    let base = run_filter_shards(&model, &oracle_cfg, sh.shards_mut(), &ctx(&pool), Method::Bootstrap);
+    for steal in [false, true] {
+        let mut c = cfg.clone();
+        c.steal = steal;
+        c.steal_min = 2;
+        let mut sh = ShardedHeap::new(CopyMode::LazySro, 4);
+        let r = run_filter_shards(&model, &c, sh.shards_mut(), &ctx(&pool), Method::Bootstrap);
+        assert_eq!(r.posterior_mean.to_bits(), base.posterior_mean.to_bits());
+        assert_eq!(sh.live_objects(), 0);
+        assert_eq!(r.steals, 0, "stealing is gated to inference");
+        let m = sh.metrics();
+        assert_eq!(m.deep_copies, 0, "simulation never deep-copies");
+        assert_eq!(m.eager_copies, 0, "simulation never copies");
+        assert_eq!(m.transplants, 0, "simulation never transplants");
+    }
+}

@@ -131,6 +131,9 @@ fn simulation_never_copies() {
         let mut cfg = RunConfig::for_model(model, Task::Simulation, CopyMode::LazySro);
         cfg.n_particles = 16;
         cfg.n_steps = 15;
+        // steal stays at its default (on): the engine gates stealing to
+        // inference, so the simulation task's zero-copy contract must
+        // hold without any opt-out.
         let mut heap = ShardedHeap::new(CopyMode::LazySro, 2);
         let _ = run_model(&cfg, &mut heap, &ctx(&pool));
         let m = heap.metrics();
