@@ -12,6 +12,8 @@
 //!   shards     shard-count sweep (K = 1, 2, 4, 8) with per-K JSON records
 //!   rebalance  rebalance-policy sweep (off/greedy/budget, K = 4) on the
 //!              skewed PCFG workload, JSON per cell
+//!   alloc      payload-allocator sweep (system vs slab) on the
+//!              resampling-churn workloads (VBD, PCFG), JSON per cell
 //!
 //! Environment: LAZYCOW_REPS (default 5), LAZYCOW_SCALE=default|paper.
 
@@ -38,6 +40,7 @@ fn sections() -> Vec<String> {
             "resamplers",
             "shards",
             "rebalance",
+            "alloc",
         ]
             .iter()
             .map(|s| s.to_string())
@@ -475,6 +478,7 @@ fn bench_rebalance(backend: &Backend) {
                 let mut steals = 0usize;
                 let mut transplants = 0usize;
                 let mut global_peak = 0usize;
+                let mut scratch_peak = 0usize;
                 let mut evidence_bits = 0u64;
                 let steal_name = if steal { "on" } else { "off" };
                 let cell = {
@@ -482,6 +486,7 @@ fn bench_rebalance(backend: &Backend) {
                     let steals = &mut steals;
                     let transplants = &mut transplants;
                     let global_peak = &mut global_peak;
+                    let scratch_peak = &mut scratch_peak;
                     let evidence_bits = &mut evidence_bits;
                     run_cell(
                         &format!("{}/{}/steal-{}", model.name(), policy.name(), steal_name),
@@ -496,6 +501,7 @@ fn bench_rebalance(backend: &Backend) {
                                 *steals = r.steals;
                                 *transplants = heap.metrics().transplants;
                                 *global_peak = r.global_peak_bytes;
+                                *scratch_peak = r.scratch_peak_bytes;
                                 *evidence_bits = r.log_evidence.to_bits();
                             }
                             Some(r.global_peak_bytes as f64)
@@ -519,7 +525,7 @@ fn bench_rebalance(backend: &Backend) {
                     off_median = Some(cell.time_median);
                 }
                 println!(
-                    "{{\"section\":\"rebalance\",\"model\":\"{}\",\"policy\":\"{}\",\"steal\":\"{}\",\"shards\":{},\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"time_q1_s\":{:.6},\"time_q3_s\":{:.6},\"speedup_vs_off\":{:.4},\"global_peak_bytes\":{},\"migrations\":{},\"steals\":{},\"transplants\":{}}}",
+                    "{{\"section\":\"rebalance\",\"model\":\"{}\",\"policy\":\"{}\",\"steal\":\"{}\",\"shards\":{},\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"time_q1_s\":{:.6},\"time_q3_s\":{:.6},\"speedup_vs_off\":{:.4},\"global_peak_bytes\":{},\"scratch_peak_bytes\":{},\"migrations\":{},\"steals\":{},\"transplants\":{}}}",
                     model.name(),
                     policy.name(),
                     steal_name,
@@ -533,11 +539,115 @@ fn bench_rebalance(backend: &Backend) {
                     cell.time_q3,
                     off_median.map(|o| o / cell.time_median.max(1e-9)).unwrap_or(1.0),
                     global_peak,
+                    scratch_peak,
                     migrations,
                     steals,
                     transplants,
                 );
             }
+        }
+    }
+}
+
+/// Payload-allocator sweep (the slab subsystem's acceptance benchmark):
+/// system vs slab on the two resampling-churn workloads — VBD (particle
+/// Gibbs: per-generation offspring copies + lineage releases) and PCFG
+/// (auxiliary PF with `ess = 1.0`, resampling every generation). K = 1 so
+/// the peak figure is exact and the allocator is the only variable.
+/// Emits one JSON record per cell with allocation throughput, peak
+/// bytes, and the slab gauges (free-list hit rate, chunks, committed
+/// bytes, fragmentation at the fullest moment). Asserts the outputs are
+/// bit-identical across backends and that the slab's free-list hit rate
+/// is nonzero — resampling churn *must* recycle blocks, or the subsystem
+/// is not doing its job.
+fn bench_alloc(backend: &Backend) {
+    use lazycow::heap::AllocatorKind;
+    println!("\n== Allocator sweep: system vs slab on resampling churn (K = 1, JSON per cell) ==");
+    let threads = backend.pool.n_threads();
+    for model in [Model::Vbd, Model::Pcfg] {
+        let mut baseline_evidence: Option<u64> = None;
+        let mut system_median: Option<f64> = None;
+        for kind in AllocatorKind::ALL {
+            let mut cfg = RunConfig::for_model(model, Task::Inference, CopyMode::LazySro);
+            if paper_scale() {
+                let (n, t_inf, _) = model.paper_scale();
+                cfg.n_particles = n;
+                cfg.n_steps = t_inf;
+            }
+            cfg.shards = 1;
+            cfg.allocator = kind;
+            let n_particles = cfg.n_particles;
+            let t_steps = cfg.n_steps;
+            let mut evidence_bits = 0u64;
+            let mut metrics = lazycow::heap::HeapMetrics::default();
+            let mut peak = 0usize;
+            let cell = {
+                let evidence_bits = &mut evidence_bits;
+                let metrics = &mut metrics;
+                let peak = &mut peak;
+                run_cell(
+                    &format!("{}/alloc-{}", model.name(), kind.name()),
+                    reps(),
+                    move |rep| {
+                        let mut c = cfg.clone();
+                        c.seed = 20200401u64.wrapping_add(rep as u64);
+                        let mut heap = ShardedHeap::with_allocator(c.mode, 1, kind);
+                        let r = run_model(&c, &mut heap, &backend.ctx());
+                        if rep == 0 {
+                            *evidence_bits = r.log_evidence.to_bits();
+                            *metrics = heap.metrics();
+                            *peak = r.peak_bytes;
+                        }
+                        Some(r.peak_bytes as f64)
+                    },
+                )
+            };
+            match baseline_evidence {
+                None => baseline_evidence = Some(evidence_bits),
+                Some(b) => assert_eq!(
+                    b,
+                    evidence_bits,
+                    "{}: allocator {} changed the output",
+                    model.name(),
+                    kind.name()
+                ),
+            }
+            if kind == AllocatorKind::System {
+                system_median = Some(cell.time_median);
+            }
+            if kind == AllocatorKind::Slab {
+                assert!(
+                    metrics.slab_freelist_hits > 0,
+                    "{}: resampling churn produced no free-list reuse",
+                    model.name()
+                );
+            }
+            let allocs_per_s = metrics.total_allocs as f64 / cell.time_median.max(1e-9);
+            println!(
+                "{{\"section\":\"alloc\",\"model\":\"{}\",\"allocator\":\"{}\",\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"time_q1_s\":{:.6},\"time_q3_s\":{:.6},\"speedup_vs_system\":{:.4},\"total_allocs\":{},\"allocs_per_s\":{:.0},\"peak_bytes\":{},\"freelist_hits\":{},\"fresh_bumps\":{},\"large_allocs\":{},\"hit_rate\":{:.4},\"chunks\":{},\"committed_bytes\":{},\"fragmentation\":{:.4}}}",
+                model.name(),
+                kind.name(),
+                threads,
+                n_particles,
+                t_steps,
+                cell.reps,
+                cell.time_median,
+                cell.time_q1,
+                cell.time_q3,
+                system_median
+                    .map(|s| s / cell.time_median.max(1e-9))
+                    .unwrap_or(1.0),
+                metrics.total_allocs,
+                allocs_per_s,
+                peak,
+                metrics.slab_freelist_hits,
+                metrics.slab_fresh_bumps,
+                metrics.slab_large_allocs,
+                metrics.slab_hit_rate(),
+                metrics.slab_chunks,
+                metrics.slab_committed_bytes,
+                metrics.slab_fragmentation(),
+            );
         }
     }
 }
@@ -602,6 +712,7 @@ fn main() {
             "resamplers" => bench_resamplers(),
             "shards" => bench_shards(&backend),
             "rebalance" => bench_rebalance(&backend),
+            "alloc" => bench_alloc(&backend),
             other => eprintln!("unknown section {other}"),
         }
     }

@@ -5,7 +5,7 @@
 //! (`key = value` lines with `[section]` headers), CLI taking precedence —
 //! the launcher plumbing a deployment-grade framework needs.
 
-use crate::heap::CopyMode;
+use crate::heap::{AllocatorKind, CopyMode};
 use crate::smc::rebalance::RebalancePolicy;
 use std::collections::BTreeMap;
 
@@ -141,6 +141,12 @@ pub struct RunConfig {
     /// donates (about half of) its tail to an idle worker. Guards against
     /// transplant overhead dominating near the end of a generation.
     pub steal_min: usize,
+    /// Payload-storage backend for every heap (and scratch heap) of the
+    /// run: `slab` (size-class slabs with free-list reuse, the default)
+    /// or `system` (one exact-layout system allocation per payload — the
+    /// differential baseline). Outputs are bit-identical either way; only
+    /// where payload bytes live changes.
+    pub allocator: AllocatorKind,
     /// ESS-fraction resampling trigger (1.0 = always resample, the paper's
     /// setting for the memory-pattern evaluation).
     pub ess_threshold: f64,
@@ -169,6 +175,7 @@ impl Default for RunConfig {
             rebalance_threshold: 0.25,
             steal: true,
             steal_min: 4,
+            allocator: AllocatorKind::Slab,
             ess_threshold: 1.0,
             pg_iterations: 3,
             use_xla: true,
@@ -223,6 +230,10 @@ impl RunConfig {
             }
             "steal-threshold" | "steal_threshold" | "steal-min" | "steal_min" => {
                 self.steal_min = value.parse().map_err(|e| format!("{e}"))?
+            }
+            "allocator" | "alloc" => {
+                self.allocator = AllocatorKind::parse(value)
+                    .ok_or(format!("bad allocator {value} (system|slab)"))?
             }
             "ess" => self.ess_threshold = value.parse().map_err(|e| format!("{e}"))?,
             "pg-iterations" | "pg_iterations" => {
@@ -331,6 +342,12 @@ mod tests {
         assert_eq!(c.steal_min, 16);
         c.apply("steal_min", "2").unwrap();
         assert_eq!(c.steal_min, 2);
+        assert_eq!(c.allocator, AllocatorKind::Slab, "slab is the default");
+        c.apply("allocator", "system").unwrap();
+        assert_eq!(c.allocator, AllocatorKind::System);
+        c.apply("alloc", "slab").unwrap();
+        assert_eq!(c.allocator, AllocatorKind::Slab);
+        assert!(c.apply("allocator", "arena").is_err());
         assert!(c.apply("steal", "maybe").is_err());
         assert!(c.apply("rebalance", "bogus").is_err());
         assert!(c.apply("bogus", "1").is_err());

@@ -1,0 +1,479 @@
+//! Payload storage: the size-class slab allocator behind every [`Heap`].
+//!
+//! The paper's contribution is dynamic memory management for the
+//! allocate/copy/mutate/free churn of particle populations, yet a naive
+//! heap pays one system-allocator round trip per object payload — the
+//! hottest allocation path in the platform. Resampling makes that churn
+//! pathological in a very exploitable way: every generation frees and
+//! reallocates objects of the *same few size classes* (each model has one
+//! or two payload structs), so freed blocks are immediately reusable at
+//! exactly the size the next generation asks for.
+//!
+//! [`SlabAlloc`] exploits that: payload storage is segregated into size
+//! classes; each class bump-allocates out of fixed 64 KiB chunks and
+//! recycles freed blocks through an intrusive free list (the freed block's
+//! first word is the list link, so free blocks cost no side storage).
+//! Payloads whose layout does not fit a class (over 2 KiB, or
+//! over-aligned) fall back to the system allocator with their exact
+//! layout. The `System` backend ([`AllocatorKind::System`]) bypasses the
+//! slabs entirely — every payload takes the exact-layout path — which is
+//! the differential baseline: the allocator must never change what is
+//! computed, only where payload bytes live.
+//!
+//! **Ownership.** A payload lives in slab (or system) memory as its
+//! concrete type, reached through a [`PBox`]: a fat `*mut dyn Payload`
+//! plus the block's location tag. The heap's `Slot` stores `Option<PBox>`
+//! where it used to store `Option<Box<dyn Payload>>`; the vtable travels
+//! in the fat pointer, slot metadata is unchanged. All allocation goes
+//! through the owning heap's `SlabAlloc` (placement-clone, placement-move
+//! from a `Box`, or direct placement-write of a typed value — see the
+//! [`Payload`] trait's placement methods), and all deallocation returns
+//! through [`SlabAlloc::dealloc`], which runs the payload's destructor in
+//! place and pushes the block onto its class's free list. Dropping a
+//! `PBox` outside the allocator (heap teardown) still runs the destructor
+//! and frees exact-layout memory; a slab block simply stays with its
+//! chunk, which the allocator frees wholesale on drop.
+//!
+//! **Scratch heaps** (work-stealing donations) get a *bump-only*
+//! allocator ([`SlabAlloc::scratch`]): they drain completely at every
+//! generation barrier, so maintaining free lists for blocks that are
+//! about to be released en masse is wasted work — frees only run the
+//! destructor, and the storage is reclaimed in bulk when the scratch heap
+//! drops (or recycled with [`SlabAlloc::reset`], which rewinds every
+//! class's bump cursor while keeping the chunks).
+
+use std::alloc::Layout;
+use std::ops::{Deref, DerefMut};
+
+use super::payload::Payload;
+
+#[cfg(test)]
+mod tests;
+
+/// Payload-storage backend selector (`--allocator`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AllocatorKind {
+    /// Every payload through the system allocator with its exact layout
+    /// (the pre-slab behaviour; the differential baseline).
+    System,
+    /// Size-class slabs with free-list reuse (the default).
+    Slab,
+}
+
+impl AllocatorKind {
+    pub fn parse(s: &str) -> Option<AllocatorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "system" | "sys" | "malloc" => Some(AllocatorKind::System),
+            "slab" => Some(AllocatorKind::Slab),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AllocatorKind::System => "system",
+            AllocatorKind::Slab => "slab",
+        }
+    }
+
+    pub const ALL: [AllocatorKind; 2] = [AllocatorKind::System, AllocatorKind::Slab];
+}
+
+/// Block sizes served from slabs. Multiples of [`BLOCK_ALIGN`]; requests
+/// above the last class (or over-aligned) take the exact-layout path.
+/// The classes are dense at the bottom — every evaluation model's payload
+/// struct lands in 16..384 — and quarter-spaced above.
+pub(crate) const SIZE_CLASSES: [usize; 14] = [
+    16, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024, 1536, 2048,
+];
+
+/// Alignment of every slab block (and chunk). Payloads needing more fall
+/// back to the exact-layout path.
+pub(crate) const BLOCK_ALIGN: usize = 16;
+
+/// Bytes per slab chunk. Small enough that a scratch heap costs little,
+/// large enough that the smallest class amortizes 4096 blocks per system
+/// allocation.
+pub const CHUNK_BYTES: usize = 64 * 1024;
+
+/// Smallest class index whose block fits `size`, or `None` for the
+/// exact-layout path.
+#[inline]
+fn class_for(layout: Layout) -> Option<usize> {
+    if layout.align() > BLOCK_ALIGN || layout.size() > SIZE_CLASSES[SIZE_CLASSES.len() - 1] {
+        return None;
+    }
+    // Linear scan: 14 entries, branch-predicted cold tail (real payloads
+    // hit within the first few classes).
+    SIZE_CLASSES.iter().position(|&b| layout.size() <= b)
+}
+
+fn chunk_layout() -> Layout {
+    Layout::from_size_align(CHUNK_BYTES, BLOCK_ALIGN).expect("chunk layout")
+}
+
+/// One 64 KiB slab chunk: raw memory so block pointers have plain
+/// provenance (no `Box` aliasing contract to violate while `PBox`es point
+/// into the chunk long-term).
+struct Chunk {
+    ptr: *mut u8,
+}
+
+impl Chunk {
+    fn new() -> Chunk {
+        let l = chunk_layout();
+        // SAFETY: `l` has nonzero size.
+        let ptr = unsafe { std::alloc::alloc(l) };
+        if ptr.is_null() {
+            std::alloc::handle_alloc_error(l);
+        }
+        Chunk { ptr }
+    }
+}
+
+impl Drop for Chunk {
+    fn drop(&mut self) {
+        // SAFETY: allocated in `Chunk::new` with the same layout.
+        unsafe { std::alloc::dealloc(self.ptr, chunk_layout()) };
+    }
+}
+
+/// Where a payload's block came from — what [`SlabAlloc::dealloc`] (or a
+/// teardown `Drop`) must do with the memory.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum BlockLoc {
+    /// A slab block of the given size class.
+    Slab(u8),
+    /// Exact-layout system allocation (large/over-aligned payloads, and
+    /// everything under the `System` backend).
+    Sys,
+    /// Zero-sized payload: no storage at all.
+    Zst,
+}
+
+/// Owning handle to a payload stored in a [`SlabAlloc`] (or system
+/// memory). Behaves like `Box<dyn Payload>` for access (`Deref`), but
+/// deallocation belongs to the allocator: return it through
+/// [`SlabAlloc::dealloc`] so the block re-enters its free list. Dropping
+/// a `PBox` directly (heap teardown, unwind paths) is safe — the payload
+/// destructor runs and exact-layout memory is freed — but a slab block
+/// then stays with its chunk until the allocator drops.
+pub struct PBox {
+    ptr: *mut dyn Payload,
+    loc: BlockLoc,
+}
+
+// SAFETY: a PBox uniquely owns its payload (`Payload: Send` is a
+// supertrait), and it only ever moves between threads together with the
+// Heap that owns both the slot holding it and the SlabAlloc holding its
+// storage — the same whole-heap transfer discipline the old
+// `Box<dyn Payload>` payloads relied on.
+unsafe impl Send for PBox {}
+
+impl PBox {
+    /// Disassemble without running `Drop` (the allocator's dealloc path).
+    fn into_parts(self) -> (*mut dyn Payload, BlockLoc) {
+        let m = std::mem::ManuallyDrop::new(self);
+        (m.ptr, m.loc)
+    }
+}
+
+impl Deref for PBox {
+    type Target = dyn Payload;
+    #[inline]
+    fn deref(&self) -> &dyn Payload {
+        // SAFETY: `ptr` points at a live payload owned by this PBox.
+        unsafe { &*self.ptr }
+    }
+}
+
+impl DerefMut for PBox {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut dyn Payload {
+        // SAFETY: as above; `&mut self` gives exclusive access.
+        unsafe { &mut *self.ptr }
+    }
+}
+
+impl Drop for PBox {
+    fn drop(&mut self) {
+        // Teardown fallback only: the accounted path is
+        // `SlabAlloc::dealloc`. SAFETY: the payload is live and uniquely
+        // owned; the layout is read from the vtable before the value is
+        // destroyed.
+        unsafe {
+            let layout = Layout::for_value(&*self.ptr);
+            std::ptr::drop_in_place(self.ptr);
+            if self.loc == BlockLoc::Sys && layout.size() > 0 {
+                std::alloc::dealloc(self.ptr as *mut u8, layout);
+            }
+            // Slab blocks stay with their chunk (freed when the
+            // SlabAlloc drops); Zst owns no memory.
+        }
+    }
+}
+
+/// What one allocation did — the heap mirrors this into `HeapMetrics`.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct AllocReceipt {
+    /// Served from a class free list (reuse — the whole point).
+    pub reused: bool,
+    /// Exact-layout path (large/over-aligned payload or System backend).
+    pub large: bool,
+    /// Slab block size handed out (0 on the exact-layout/ZST paths).
+    pub block_bytes: usize,
+    /// The allocation grew the slab by one chunk.
+    pub new_chunk: bool,
+}
+
+/// What one deallocation returned.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct FreeReceipt {
+    /// Slab block size returned (0 on the exact-layout/ZST paths).
+    pub block_bytes: usize,
+}
+
+/// Per-size-class state: chunks, a bump cursor, and the intrusive free
+/// list.
+struct ClassState {
+    block: usize,
+    chunks: Vec<Chunk>,
+    /// Chunk currently being bumped (`== chunks.len()` only when empty).
+    cur: usize,
+    /// Bump offset within `chunks[cur]`.
+    offset: usize,
+    /// Intrusive free-list head (null = empty). Each free block's first
+    /// word links to the next free block of the class.
+    free: *mut u8,
+}
+
+impl ClassState {
+    fn new(block: usize) -> ClassState {
+        ClassState {
+            block,
+            chunks: Vec::new(),
+            cur: 0,
+            offset: 0,
+            free: std::ptr::null_mut(),
+        }
+    }
+}
+
+/// The size-class slab allocator owning one heap's payload storage. See
+/// the module docs for the design; see `HeapMetrics`' `slab_*` fields for
+/// the gauges the owning heap maintains from the receipts.
+pub struct SlabAlloc {
+    kind: AllocatorKind,
+    /// Scratch mode: frees run destructors but build no free lists; the
+    /// storage is reclaimed in bulk by [`SlabAlloc::reset`] or drop.
+    bump_only: bool,
+    classes: Vec<ClassState>,
+    /// Slab blocks currently handed out (the reset-safety gauge).
+    live_blocks: usize,
+}
+
+// SAFETY: the raw free-list pointers and chunk pointers all point into
+// memory owned by this SlabAlloc; it is only ever used through `&mut`
+// from the single thread that owns the enclosing Heap.
+unsafe impl Send for SlabAlloc {}
+
+impl SlabAlloc {
+    /// A reuse-mode allocator (the shard-heap default).
+    pub fn new(kind: AllocatorKind) -> SlabAlloc {
+        SlabAlloc {
+            kind,
+            bump_only: false,
+            classes: SIZE_CLASSES.iter().map(|&b| ClassState::new(b)).collect(),
+            live_blocks: 0,
+        }
+    }
+
+    /// A bump-only allocator for scratch heaps: pure bump allocation, no
+    /// free-list maintenance, bulk [`SlabAlloc::reset`]. (Inert under the
+    /// `System` backend, which has no slab storage to bump.)
+    pub fn scratch(kind: AllocatorKind) -> SlabAlloc {
+        SlabAlloc {
+            bump_only: true,
+            ..SlabAlloc::new(kind)
+        }
+    }
+
+    #[inline]
+    pub fn kind(&self) -> AllocatorKind {
+        self.kind
+    }
+
+    #[inline]
+    pub fn is_bump_only(&self) -> bool {
+        self.bump_only
+    }
+
+    /// Slab blocks currently handed out.
+    #[inline]
+    pub fn live_blocks(&self) -> usize {
+        self.live_blocks
+    }
+
+    /// Rewind every class to empty — the scratch heap's bulk reclaim.
+    /// Chunks are kept, so a recycled scratch allocates without touching
+    /// the system allocator at all. Every block must have been freed
+    /// (destructors run on free in bump-only mode too); resetting with
+    /// live blocks would hand their storage out again.
+    pub fn reset(&mut self) {
+        assert_eq!(self.live_blocks, 0, "reset with live slab blocks");
+        for c in &mut self.classes {
+            c.cur = 0;
+            c.offset = 0;
+            c.free = std::ptr::null_mut();
+        }
+    }
+
+    /// Place `value` (placement-write; the typed hot path — no `Box`).
+    pub(crate) fn alloc_value<T: Payload>(&mut self, value: T) -> (PBox, AllocReceipt) {
+        let (mem, loc, r) = self.alloc_block(Layout::new::<T>());
+        // SAFETY: `mem` has the size/align of `T` and is uniquely ours.
+        let ptr = unsafe {
+            std::ptr::write(mem as *mut T, value);
+            mem as *mut T as *mut dyn Payload
+        };
+        (PBox { ptr, loc }, r)
+    }
+
+    /// Placement-clone `src` (the `Copy`/transplant hot path — no
+    /// intermediate `Box`).
+    pub(crate) fn alloc_clone(&mut self, src: &dyn Payload) -> (PBox, AllocReceipt) {
+        let (mem, loc, r) = self.alloc_block(src.layout());
+        // SAFETY: `mem` matches `src.layout()` and is uniquely ours.
+        let ptr = unsafe { src.clone_into(mem) };
+        (PBox { ptr, loc }, r)
+    }
+
+    /// Move a boxed payload into owned storage, freeing the box's
+    /// allocation without running the destructor.
+    pub(crate) fn adopt_box(&mut self, payload: Box<dyn Payload>) -> (PBox, AllocReceipt) {
+        let (mem, loc, r) = self.alloc_block(Layout::for_value(&*payload));
+        // SAFETY: `mem` matches the payload's concrete layout.
+        let ptr = unsafe { payload.move_into(mem) };
+        (PBox { ptr, loc }, r)
+    }
+
+    /// Destroy a payload and return its block: destructor in place, then
+    /// the block re-enters its class free list (reuse mode) or merely
+    /// stops counting as live (bump-only mode); exact-layout memory goes
+    /// back to the system allocator.
+    pub(crate) fn dealloc(&mut self, payload: PBox) -> FreeReceipt {
+        let (ptr, loc) = payload.into_parts();
+        // SAFETY: live uniquely-owned payload; layout read before drop.
+        let layout = unsafe { Layout::for_value(&*ptr) };
+        unsafe { std::ptr::drop_in_place(ptr) };
+        match loc {
+            BlockLoc::Zst => FreeReceipt { block_bytes: 0 },
+            BlockLoc::Sys => {
+                // SAFETY: allocated by `alloc_block`'s exact-layout path
+                // with this layout.
+                unsafe { std::alloc::dealloc(ptr as *mut u8, layout) };
+                FreeReceipt { block_bytes: 0 }
+            }
+            BlockLoc::Slab(ci) => {
+                self.live_blocks -= 1;
+                let c = &mut self.classes[ci as usize];
+                if !self.bump_only {
+                    let p = ptr as *mut u8;
+                    // SAFETY: the block is ≥ 16 bytes, 16-aligned, and
+                    // dead — its first word becomes the free-list link.
+                    unsafe { *(p as *mut *mut u8) = c.free };
+                    c.free = p;
+                }
+                FreeReceipt {
+                    block_bytes: c.block,
+                }
+            }
+        }
+    }
+
+    fn alloc_block(&mut self, layout: Layout) -> (*mut u8, BlockLoc, AllocReceipt) {
+        if layout.size() == 0 {
+            return (
+                layout.align() as *mut u8,
+                BlockLoc::Zst,
+                AllocReceipt {
+                    reused: false,
+                    large: false,
+                    block_bytes: 0,
+                    new_chunk: false,
+                },
+            );
+        }
+        let class = if self.kind == AllocatorKind::Slab {
+            class_for(layout)
+        } else {
+            None
+        };
+        let Some(ci) = class else {
+            // SAFETY: nonzero size.
+            let p = unsafe { std::alloc::alloc(layout) };
+            if p.is_null() {
+                std::alloc::handle_alloc_error(layout);
+            }
+            return (
+                p,
+                BlockLoc::Sys,
+                AllocReceipt {
+                    reused: false,
+                    large: true,
+                    block_bytes: 0,
+                    new_chunk: false,
+                },
+            );
+        };
+        let c = &mut self.classes[ci];
+        self.live_blocks += 1;
+        if !c.free.is_null() {
+            let p = c.free;
+            // SAFETY: `p` is a free block whose first word is the link.
+            c.free = unsafe { *(p as *const *mut u8) };
+            return (
+                p,
+                BlockLoc::Slab(ci as u8),
+                AllocReceipt {
+                    reused: true,
+                    large: false,
+                    block_bytes: c.block,
+                    new_chunk: false,
+                },
+            );
+        }
+        // Bump, advancing through retained chunks (a reset scratch walks
+        // its old chunks again) and growing by one chunk when all are
+        // full.
+        let mut new_chunk = false;
+        let p = loop {
+            if c.cur < c.chunks.len() && c.offset + c.block <= CHUNK_BYTES {
+                // SAFETY: offset + block ≤ CHUNK_BYTES keeps the pointer
+                // inside the chunk allocation.
+                let p = unsafe { c.chunks[c.cur].ptr.add(c.offset) };
+                c.offset += c.block;
+                break p;
+            }
+            if c.cur + 1 < c.chunks.len() {
+                c.cur += 1;
+                c.offset = 0;
+                continue;
+            }
+            c.chunks.push(Chunk::new());
+            new_chunk = true;
+            c.cur = c.chunks.len() - 1;
+            c.offset = 0;
+        };
+        (
+            p,
+            BlockLoc::Slab(ci as u8),
+            AllocReceipt {
+                reused: false,
+                large: false,
+                block_bytes: c.block,
+                new_chunk,
+            },
+        )
+    }
+}

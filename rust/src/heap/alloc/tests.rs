@@ -1,0 +1,367 @@
+//! Allocator unit + property tests: class math, free-list reuse, the
+//! exact-layout fallback, scratch bump/reset, and heap-level fuzz runs
+//! proving random alloc/free/copy/transplant sequences balance to zero
+//! live storage with gauges consistent, on both backends.
+
+use super::*;
+use crate::heap::{CopyMode, Heap, Lazy};
+use crate::lazy_fields;
+use crate::rng::Pcg64;
+
+#[derive(Clone)]
+struct Small {
+    a: u64,
+}
+lazy_fields!(Small);
+
+#[derive(Clone)]
+struct Mid {
+    a: [u64; 12],
+}
+lazy_fields!(Mid);
+
+#[derive(Clone)]
+struct Huge {
+    a: [u64; 300], // 2400 B > largest class: exact-layout path
+}
+lazy_fields!(Huge);
+
+#[derive(Clone)]
+struct Unit;
+lazy_fields!(Unit);
+
+#[test]
+fn class_for_rounds_up_and_rejects_misfits() {
+    let l = |s: usize, a: usize| Layout::from_size_align(s, a).unwrap();
+    assert_eq!(class_for(l(1, 1)), Some(0));
+    assert_eq!(class_for(l(16, 8)), Some(0));
+    assert_eq!(class_for(l(17, 8)), Some(1));
+    assert_eq!(class_for(l(96, 16)), Some(4));
+    assert_eq!(class_for(l(2048, 16)), Some(SIZE_CLASSES.len() - 1));
+    assert_eq!(class_for(l(2049, 16)), None, "over the largest class");
+    assert_eq!(class_for(l(64, 32)), None, "over-aligned");
+    for (i, b) in SIZE_CLASSES.iter().enumerate() {
+        assert_eq!(b % BLOCK_ALIGN, 0, "class {i} not block-aligned");
+        assert_eq!(class_for(l(*b, BLOCK_ALIGN)), Some(i));
+    }
+}
+
+#[test]
+fn freelist_reuses_the_freed_block() {
+    let mut a = SlabAlloc::new(AllocatorKind::Slab);
+    let (p1, r1) = a.alloc_value(Small { a: 7 });
+    assert!(!r1.reused && !r1.large && r1.new_chunk);
+    assert_eq!(r1.block_bytes, 16);
+    let addr1 = &*p1 as *const dyn Payload as *const u8 as usize;
+    let fr = a.dealloc(p1);
+    assert_eq!(fr.block_bytes, 16);
+    assert_eq!(a.live_blocks(), 0);
+    // Same class: the freed block comes straight back.
+    let (p2, r2) = a.alloc_value(Small { a: 8 });
+    assert!(r2.reused && !r2.new_chunk);
+    let addr2 = &*p2 as *const dyn Payload as *const u8 as usize;
+    assert_eq!(addr1, addr2, "free list must hand the block back");
+    // A different class bumps fresh storage instead.
+    let (p3, r3) = a.alloc_value(Mid { a: [0; 12] });
+    assert!(!r3.reused && r3.new_chunk, "first Mid alloc opens its class");
+    assert_eq!(r3.block_bytes, 96);
+    a.dealloc(p2);
+    a.dealloc(p3);
+    assert_eq!(a.live_blocks(), 0);
+}
+
+#[test]
+fn bump_fills_chunks_then_grows() {
+    let mut a = SlabAlloc::new(AllocatorKind::Slab);
+    let per_chunk = CHUNK_BYTES / 16;
+    let mut held = Vec::new();
+    let mut chunks = 0;
+    for i in 0..per_chunk + 1 {
+        let (p, r) = a.alloc_value(Small { a: i as u64 });
+        assert!(!r.reused);
+        chunks += usize::from(r.new_chunk);
+        held.push(p);
+    }
+    assert_eq!(chunks, 2, "one chunk filled exactly, a second opened");
+    for p in held {
+        a.dealloc(p);
+    }
+    assert_eq!(a.live_blocks(), 0);
+}
+
+#[test]
+fn exact_layout_paths() {
+    // Large payloads bypass the slabs on both backends; the System
+    // backend sends everything that way.
+    for kind in AllocatorKind::ALL {
+        let mut a = SlabAlloc::new(kind);
+        let (h, rh) = a.alloc_value(Huge { a: [1; 300] });
+        assert!(rh.large && !rh.reused && rh.block_bytes == 0);
+        let (s, rs) = a.alloc_value(Small { a: 2 });
+        assert_eq!(rs.large, kind == AllocatorKind::System);
+        assert_eq!(a.dealloc(h).block_bytes, 0);
+        let fs = a.dealloc(s);
+        assert_eq!(fs.block_bytes != 0, kind == AllocatorKind::Slab);
+        assert_eq!(a.live_blocks(), 0);
+    }
+}
+
+#[test]
+fn zero_sized_payloads_own_no_storage() {
+    let mut a = SlabAlloc::new(AllocatorKind::Slab);
+    let (p, r) = a.alloc_value(Unit);
+    assert!(!r.reused && !r.large && r.block_bytes == 0 && !r.new_chunk);
+    assert_eq!(a.live_blocks(), 0);
+    assert_eq!(a.dealloc(p).block_bytes, 0);
+}
+
+#[test]
+fn clone_and_adopt_preserve_values() {
+    let mut a = SlabAlloc::new(AllocatorKind::Slab);
+    let (orig, _) = a.alloc_value(Mid { a: [3; 12] });
+    let (copy, _) = a.alloc_clone(&*orig);
+    let got = copy.as_any().downcast_ref::<Mid>().unwrap().a;
+    assert_eq!(got, [3; 12]);
+    let boxed: Box<dyn Payload> = Box::new(Small { a: 99 });
+    let (adopted, r) = a.adopt_box(boxed);
+    assert!(!r.large);
+    assert_eq!(adopted.as_any().downcast_ref::<Small>().unwrap().a, 99);
+    a.dealloc(orig);
+    a.dealloc(copy);
+    a.dealloc(adopted);
+    assert_eq!(a.live_blocks(), 0);
+}
+
+#[test]
+fn scratch_is_bump_only_and_resets_keeping_chunks() {
+    let mut a = SlabAlloc::scratch(AllocatorKind::Slab);
+    assert!(a.is_bump_only());
+    let mut grew = 0;
+    for round in 0..3 {
+        let mut held = Vec::new();
+        for i in 0..100u64 {
+            let (p, r) = a.alloc_value(Mid { a: [i; 12] });
+            assert!(!r.reused, "bump-only never builds a free list");
+            grew += usize::from(r.new_chunk);
+            held.push(p);
+        }
+        for p in held {
+            assert_eq!(a.dealloc(p).block_bytes, 96);
+        }
+        assert_eq!(a.live_blocks(), 0);
+        a.reset();
+        assert_eq!(grew, 1, "round {round}: reset must retain the chunk");
+    }
+}
+
+#[test]
+#[should_panic(expected = "reset with live slab blocks")]
+fn reset_rejects_live_blocks() {
+    let mut a = SlabAlloc::scratch(AllocatorKind::Slab);
+    let (_p, _) = a.alloc_value(Small { a: 1 });
+    a.reset();
+}
+
+#[derive(Clone)]
+struct Node {
+    value: i64,
+    pad: [u64; 6],
+    next: Lazy<Node>,
+}
+lazy_fields!(Node: next);
+
+fn build_chain(heap: &mut Heap, len: usize, tag: i64) -> Lazy<Node> {
+    let mut head = heap.alloc(Node {
+        value: tag,
+        pad: [tag as u64; 6],
+        next: Lazy::NULL,
+    });
+    for i in 1..len {
+        let new = heap.alloc(Node {
+            value: tag + i as i64,
+            pad: [0; 6],
+            next: head,
+        });
+        heap.release(head);
+        head = new;
+    }
+    head
+}
+
+fn chain_values(heap: &mut Heap, head: Lazy<Node>) -> Vec<i64> {
+    let mut out = Vec::new();
+    let mut cur = head;
+    while !cur.is_null() {
+        out.push(heap.read(&mut cur, |n| n.value));
+        cur = heap.read_ptr(&mut cur, |n| n.next);
+    }
+    out
+}
+
+/// The slab-gauge consistency contract every balanced heap must satisfy.
+fn assert_gauges_balanced(h: &Heap, label: &str) {
+    let m = &h.metrics;
+    assert_eq!(
+        m.slab_freelist_hits + m.slab_fresh_bumps + m.slab_large_allocs,
+        m.total_allocs,
+        "{label}: every payload alloc takes exactly one source"
+    );
+    if m.live_objects == 0 {
+        assert_eq!(m.slab_live_block_bytes, 0, "{label}: blocks outlive objects");
+    }
+    assert!(m.slab_live_block_bytes <= m.slab_committed_bytes, "{label}");
+    assert_eq!(m.slab_committed_bytes, m.slab_chunks * CHUNK_BYTES, "{label}");
+}
+
+/// Random alloc/release/deep-copy/mutate/transplant churn on both
+/// backends: values identical, everything balances to zero live bytes,
+/// gauges consistent, and the slab backend demonstrably reuses blocks.
+#[test]
+fn fuzz_churn_balances_on_both_backends() {
+    for kind in AllocatorKind::ALL {
+        for seed in 0..6u64 {
+            let mode = CopyMode::ALL[(seed % 3) as usize];
+            let mut heap = Heap::with_allocator(mode, kind);
+            let mut other = Heap::with_allocator(mode, kind);
+            let mut rng = Pcg64::new(0xA110C ^ seed);
+            let mut roots: Vec<Lazy<Node>> = Vec::new();
+            let mut trace = 0i64;
+            for step in 0..200i64 {
+                match rng.below(6) {
+                    0 | 1 => roots.push(build_chain(&mut heap, 1 + rng.below(8) as usize, step)),
+                    2 => {
+                        if let Some(i) = pick(&mut rng, roots.len()) {
+                            let c = heap.deep_copy(&roots[i]);
+                            roots.push(c);
+                        }
+                    }
+                    3 => {
+                        if let Some(i) = pick(&mut rng, roots.len()) {
+                            heap.mutate_root(&mut roots[i], |n| n.value += 1000);
+                        }
+                    }
+                    4 => {
+                        if let Some(i) = pick(&mut rng, roots.len()) {
+                            let moved = heap.extract_into(&roots[i], &mut other);
+                            trace += chain_values(&mut other, moved).iter().sum::<i64>();
+                            other.release(moved);
+                            other.sweep_memos();
+                        }
+                    }
+                    _ => {
+                        if let Some(i) = pick(&mut rng, roots.len()) {
+                            let r = roots.swap_remove(i);
+                            trace += chain_values(&mut heap, r).iter().sum::<i64>();
+                            heap.release(r);
+                        }
+                    }
+                }
+            }
+            for r in roots.drain(..) {
+                trace += chain_values(&mut heap, r).iter().sum::<i64>();
+                heap.release(r);
+            }
+            heap.sweep_memos();
+            for (h, label) in [(&heap, "home"), (&other, "other")] {
+                assert_eq!(h.live_objects(), 0, "{kind:?}/{label}: leaked");
+                assert_eq!(
+                    h.metrics.total_allocs,
+                    h.metrics.total_frees + h.metrics.live_objects,
+                    "{kind:?}/{label}: alloc/free balance"
+                );
+                assert_gauges_balanced(h, &format!("{kind:?}/{label}"));
+            }
+            match kind {
+                AllocatorKind::Slab => assert!(
+                    heap.metrics.slab_freelist_hits > 0,
+                    "churn must reuse freed blocks"
+                ),
+                AllocatorKind::System => {
+                    assert_eq!(heap.metrics.slab_freelist_hits, 0);
+                    assert_eq!(heap.metrics.slab_chunks, 0);
+                }
+            }
+            std::hint::black_box(trace);
+        }
+    }
+    // Cross-backend value identity: identical sequences, identical sums.
+    let run = |kind: AllocatorKind| -> i64 {
+        let mut heap = Heap::with_allocator(CopyMode::LazySro, kind);
+        let mut rng = Pcg64::new(77);
+        let mut sum = 0i64;
+        let mut roots = Vec::new();
+        for step in 0..120i64 {
+            if rng.below(2) == 0 || roots.is_empty() {
+                roots.push(build_chain(&mut heap, 1 + rng.below(6) as usize, step));
+            } else {
+                let i = rng.below(roots.len() as u64) as usize;
+                let mut c = heap.deep_copy(&roots[i]);
+                heap.mutate_root(&mut c, |n| n.value *= 3);
+                sum += chain_values(&mut heap, c).iter().sum::<i64>();
+                heap.release(c);
+            }
+        }
+        for r in roots {
+            sum += chain_values(&mut heap, r).iter().sum::<i64>();
+            heap.release(r);
+        }
+        sum
+    };
+    assert_eq!(
+        run(AllocatorKind::System),
+        run(AllocatorKind::Slab),
+        "backend changed computed values"
+    );
+}
+
+fn pick(rng: &mut Pcg64, len: usize) -> Option<usize> {
+    if len == 0 {
+        None
+    } else {
+        Some(rng.below(len as u64) as usize)
+    }
+}
+
+/// The scratch-heap contract end-to-end, following the engine's pooling
+/// protocol: a `Heap::scratch` uses a bump-only allocator; each donation
+/// round trip drains it, absorbs its counters into the home shard, and
+/// `recycle_scratch` rewinds it (keeping chunks and zeroing per-use
+/// metrics) for the next round. Both sides stay balanced with
+/// consistent gauges and no fresh chunk after the first round.
+#[test]
+fn scratch_heap_roundtrip_with_recycling() {
+    let mut home = Heap::new(CopyMode::LazySro);
+    let mut scratch = home.scratch();
+    assert!(scratch.allocator_is_bump_only());
+    for round in 0..3i64 {
+        let head = build_chain(&mut home, 10, round);
+        let moved = home.extract_into(&head, &mut scratch);
+        home.release(head);
+        let want: Vec<i64> = (0..10).map(|i| round + 9 - i).collect();
+        assert_eq!(chain_values(&mut scratch, moved), want);
+        let back = scratch.extract_into(&moved, &mut home);
+        scratch.release(moved);
+        scratch.sweep_memos();
+        assert_eq!(scratch.live_objects(), 0);
+        assert!(scratch.metrics.peak_bytes > 0, "per-use peak measured");
+        home.absorb_counters(&scratch);
+        scratch.recycle_scratch();
+        assert_eq!(scratch.metrics.peak_bytes, 0, "per-use metrics zeroed");
+        assert_eq!(scratch.metrics.total_allocs, 0);
+        assert_eq!(chain_values(&mut home, back), want);
+        home.release(back);
+        home.sweep_memos();
+        assert_gauges_balanced(&home, "home");
+    }
+    assert_eq!(home.live_objects(), 0);
+    assert!(
+        scratch.metrics.slab_chunks <= 1,
+        "recycling must retain (not re-commit) the scratch chunk"
+    );
+    assert_eq!(
+        home.metrics.slab_freelist_hits + home.metrics.slab_fresh_bumps
+            + home.metrics.slab_large_allocs,
+        home.metrics.total_allocs,
+        "absorbed per-use counters keep the source invariant"
+    );
+}

@@ -64,6 +64,42 @@ pub struct HeapMetrics {
     /// shard 0; [`merge`](HeapMetrics::merge) takes the max so the
     /// aggregate carries it. Zero until the first sample.
     pub global_peak_bytes: usize,
+
+    /// Work-stealing scratch residency: the maximum over generations of
+    /// the summed per-scratch-heap peaks of that generation's donation
+    /// batches. Each scratch measures its own peak exactly; the
+    /// per-generation sum bounds the transient bytes that live in *no*
+    /// shard's `peak_bytes` between donation and reclaim, so
+    /// `peak_bytes + scratch_peak_bytes` bounds the true steal-on peak.
+    /// Recorded on shard 0 at the reclaim barrier
+    /// ([`note_scratch_peak`](HeapMetrics::note_scratch_peak));
+    /// [`merge`](HeapMetrics::merge) carries the max. Zero with stealing
+    /// off — which is what makes steal-on vs steal-off peak comparisons
+    /// exact.
+    pub scratch_peak_bytes: usize,
+
+    // --- Slab-allocator gauges and counters (see `heap::alloc`). ---
+    /// Slab chunks committed (gauge).
+    pub slab_chunks: usize,
+    /// Bytes committed in slab chunks (gauge; `slab_chunks` ×
+    /// [`CHUNK_BYTES`](super::CHUNK_BYTES)).
+    pub slab_committed_bytes: usize,
+    /// Bytes in slab blocks currently handed out, at block granularity
+    /// (gauge). Occupancy = this / `slab_committed_bytes`.
+    pub slab_live_block_bytes: usize,
+    /// High-water mark of `slab_live_block_bytes` (gauge). Fragmentation
+    /// at the allocator's fullest moment =
+    /// `1 - slab_block_peak_bytes / slab_committed_bytes`.
+    pub slab_block_peak_bytes: usize,
+    /// Payload allocations served from a class free list — reuse, the
+    /// slab's whole point on resampling churn (counter).
+    pub slab_freelist_hits: usize,
+    /// Payload allocations served by bumping fresh chunk space (counter).
+    pub slab_fresh_bumps: usize,
+    /// Payload allocations on the exact-layout path: payloads too large
+    /// or over-aligned for any class, and *every* allocation under the
+    /// `system` backend (counter).
+    pub slab_large_allocs: usize,
 }
 
 impl HeapMetrics {
@@ -83,6 +119,95 @@ impl HeapMetrics {
     /// Reset the peak to the current footprint (for per-phase measurement).
     pub fn reset_peak(&mut self) {
         self.peak_bytes = self.current_bytes();
+    }
+
+    /// The rebalancer's operation charge for a metrics delta: allocations
+    /// + actual object copies + memo-chase pulls, the lazy platform's
+    /// hot-path operations.
+    pub fn op_charge(&self) -> usize {
+        self.total_allocs + self.lazy_copies + self.eager_copies + self.pulls
+    }
+
+    /// Fold one generation's summed scratch-heap residency into the
+    /// running `scratch_peak_bytes` high-water mark (the work-stealing
+    /// reclaim barrier calls this on shard 0).
+    pub fn note_scratch_peak(&mut self, bytes: usize) {
+        if bytes > self.scratch_peak_bytes {
+            self.scratch_peak_bytes = bytes;
+        }
+    }
+
+    /// Exact delta since `earlier` (a [`MetricsScope`] snapshot of the
+    /// same heap): monotone counters subtract; gauges (live/peak/memo
+    /// footprints, slab occupancy, barrier samples) carry their *current*
+    /// values, since a point-in-time gauge has no meaningful difference.
+    pub fn delta_since(&self, earlier: &HeapMetrics) -> HeapMetrics {
+        // Exhaustive destructuring, as in `merge`: adding a field without
+        // classifying it counter-vs-gauge here is a compile error.
+        let HeapMetrics {
+            live_objects,
+            live_bytes,
+            peak_bytes,
+            live_labels,
+            memo_bytes,
+            total_allocs,
+            total_frees,
+            lazy_copies,
+            eager_copies,
+            deep_copies,
+            thaws,
+            sro_skips,
+            memo_hits,
+            memo_misses,
+            memo_swept,
+            pulls,
+            gets,
+            freezes,
+            cross_refs,
+            transplants,
+            global_peak_bytes,
+            scratch_peak_bytes,
+            slab_chunks,
+            slab_committed_bytes,
+            slab_live_block_bytes,
+            slab_block_peak_bytes,
+            slab_freelist_hits,
+            slab_fresh_bumps,
+            slab_large_allocs,
+        } = *self;
+        HeapMetrics {
+            // Gauges: current values.
+            live_objects,
+            live_bytes,
+            peak_bytes,
+            live_labels,
+            memo_bytes,
+            global_peak_bytes,
+            scratch_peak_bytes,
+            slab_chunks,
+            slab_committed_bytes,
+            slab_live_block_bytes,
+            slab_block_peak_bytes,
+            // Counters: exact in-scope deltas.
+            total_allocs: total_allocs - earlier.total_allocs,
+            total_frees: total_frees - earlier.total_frees,
+            lazy_copies: lazy_copies - earlier.lazy_copies,
+            eager_copies: eager_copies - earlier.eager_copies,
+            deep_copies: deep_copies - earlier.deep_copies,
+            thaws: thaws - earlier.thaws,
+            sro_skips: sro_skips - earlier.sro_skips,
+            memo_hits: memo_hits - earlier.memo_hits,
+            memo_misses: memo_misses - earlier.memo_misses,
+            memo_swept: memo_swept - earlier.memo_swept,
+            pulls: pulls - earlier.pulls,
+            gets: gets - earlier.gets,
+            freezes: freezes - earlier.freezes,
+            cross_refs: cross_refs - earlier.cross_refs,
+            transplants: transplants - earlier.transplants,
+            slab_freelist_hits: slab_freelist_hits - earlier.slab_freelist_hits,
+            slab_fresh_bumps: slab_fresh_bumps - earlier.slab_fresh_bumps,
+            slab_large_allocs: slab_large_allocs - earlier.slab_large_allocs,
+        }
     }
 
     /// Accumulate another heap's counters into this one — the aggregation
@@ -115,6 +240,14 @@ impl HeapMetrics {
             cross_refs,
             transplants,
             global_peak_bytes,
+            scratch_peak_bytes,
+            slab_chunks,
+            slab_committed_bytes,
+            slab_live_block_bytes,
+            slab_block_peak_bytes,
+            slab_freelist_hits,
+            slab_fresh_bumps,
+            slab_large_allocs,
         } = *o;
         self.live_objects += live_objects;
         self.live_bytes += live_bytes;
@@ -136,9 +269,17 @@ impl HeapMetrics {
         self.freezes += freezes;
         self.cross_refs += cross_refs;
         self.transplants += transplants;
+        self.slab_chunks += slab_chunks;
+        self.slab_committed_bytes += slab_committed_bytes;
+        self.slab_live_block_bytes += slab_live_block_bytes;
+        self.slab_block_peak_bytes += slab_block_peak_bytes;
+        self.slab_freelist_hits += slab_freelist_hits;
+        self.slab_fresh_bumps += slab_fresh_bumps;
+        self.slab_large_allocs += slab_large_allocs;
         // Barrier samples are global figures, not per-shard counters: the
         // aggregate carries the largest sample seen anywhere.
         self.global_peak_bytes = self.global_peak_bytes.max(global_peak_bytes);
+        self.scratch_peak_bytes = self.scratch_peak_bytes.max(scratch_peak_bytes);
     }
 
     /// Fold the *monotone operation counters* of a drained scratch heap
@@ -177,6 +318,16 @@ impl HeapMetrics {
             cross_refs,
             transplants,
             global_peak_bytes: _,
+            scratch_peak_bytes: _,
+            // Slab gauges die with the scratch heap's own storage; its
+            // residency is accounted by `scratch_peak_bytes` instead.
+            slab_chunks: _,
+            slab_committed_bytes: _,
+            slab_live_block_bytes: _,
+            slab_block_peak_bytes: _,
+            slab_freelist_hits,
+            slab_fresh_bumps,
+            slab_large_allocs,
         } = *o;
         self.total_allocs += total_allocs;
         self.total_frees += total_frees;
@@ -193,12 +344,36 @@ impl HeapMetrics {
         self.freezes += freezes;
         self.cross_refs += cross_refs;
         self.transplants += transplants;
+        self.slab_freelist_hits += slab_freelist_hits;
+        self.slab_fresh_bumps += slab_fresh_bumps;
+        self.slab_large_allocs += slab_large_allocs;
+    }
+
+    /// Free-list hit rate of the slab allocator (0.0 when no slab
+    /// allocation happened — e.g. the `system` backend).
+    pub fn slab_hit_rate(&self) -> f64 {
+        let tried = self.slab_freelist_hits + self.slab_fresh_bumps;
+        if tried == 0 {
+            0.0
+        } else {
+            self.slab_freelist_hits as f64 / tried as f64
+        }
+    }
+
+    /// Unused committed-slab fraction at the allocator's fullest moment
+    /// (0.0 when nothing was committed).
+    pub fn slab_fragmentation(&self) -> f64 {
+        if self.slab_committed_bytes == 0 {
+            0.0
+        } else {
+            1.0 - self.slab_block_peak_bytes as f64 / self.slab_committed_bytes as f64
+        }
     }
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "live={} objs / {} B (peak {} B), labels={}, copies: lazy={} eager={} thaw={} sro_skips={}, memo: hits={} misses={} swept={}, cross_refs={}, transplants={}",
+            "live={} objs / {} B (peak {} B), labels={}, copies: lazy={} eager={} thaw={} sro_skips={}, memo: hits={} misses={} swept={}, cross_refs={}, transplants={}, slab: chunks={} hits={} bumps={} large={}",
             self.live_objects,
             self.live_bytes,
             self.peak_bytes,
@@ -212,7 +387,32 @@ impl HeapMetrics {
             self.memo_swept,
             self.cross_refs,
             self.transplants,
+            self.slab_chunks,
+            self.slab_freelist_hits,
+            self.slab_fresh_bumps,
+            self.slab_large_allocs,
         )
+    }
+}
+
+/// An open metrics scope (see [`Heap::begin_scope`](super::Heap::begin_scope)):
+/// the snapshot against which [`HeapMetrics::delta_since`] computes the
+/// exact operation delta of a bracketed region. One-shot by construction
+/// (closing consumes it); scopes on the same heap may nest freely, since
+/// each holds an independent snapshot.
+pub struct MetricsScope {
+    start: HeapMetrics,
+}
+
+impl MetricsScope {
+    #[inline]
+    pub(crate) fn open(at: &HeapMetrics) -> MetricsScope {
+        MetricsScope { start: *at }
+    }
+
+    #[inline]
+    pub(crate) fn close(self, now: &HeapMetrics) -> HeapMetrics {
+        now.delta_since(&self.start)
     }
 }
 
@@ -284,6 +484,96 @@ mod tests {
         assert_eq!(shard.peak_bytes, 500);
         // The per-shard invariant survives absorption.
         assert_eq!(shard.total_allocs, shard.total_frees + shard.live_objects);
+    }
+
+    #[test]
+    fn delta_since_subtracts_counters_and_carries_gauges() {
+        let mut m = HeapMetrics {
+            total_allocs: 10,
+            pulls: 4,
+            lazy_copies: 2,
+            live_objects: 5,
+            live_bytes: 500,
+            slab_freelist_hits: 3,
+            ..Default::default()
+        };
+        let scope = MetricsScope::open(&m);
+        m.total_allocs += 7;
+        m.pulls += 2;
+        m.eager_copies += 1;
+        m.slab_freelist_hits += 4;
+        m.live_objects = 9;
+        let d = scope.close(&m);
+        assert_eq!(d.total_allocs, 7);
+        assert_eq!(d.pulls, 2);
+        assert_eq!(d.eager_copies, 1);
+        assert_eq!(d.lazy_copies, 0);
+        assert_eq!(d.slab_freelist_hits, 4);
+        // op_charge over the delta = allocs + copies + pulls in scope.
+        assert_eq!(d.op_charge(), 7 + 0 + 1 + 2);
+        // Gauges carry the current values.
+        assert_eq!(d.live_objects, 9);
+        assert_eq!(d.live_bytes, 500);
+    }
+
+    #[test]
+    fn scratch_peak_folds_as_max_and_merges_as_max() {
+        let mut m = HeapMetrics::default();
+        m.note_scratch_peak(100);
+        m.note_scratch_peak(60);
+        assert_eq!(m.scratch_peak_bytes, 100);
+        let mut a = HeapMetrics::default();
+        a.merge(&m);
+        assert_eq!(a.scratch_peak_bytes, 100);
+        // merge_counters treats it as a gauge (skipped).
+        let mut b = HeapMetrics::default();
+        b.merge_counters(&m);
+        assert_eq!(b.scratch_peak_bytes, 0);
+    }
+
+    #[test]
+    fn slab_rates() {
+        let m = HeapMetrics {
+            slab_freelist_hits: 30,
+            slab_fresh_bumps: 10,
+            slab_committed_bytes: 1000,
+            slab_block_peak_bytes: 600,
+            ..Default::default()
+        };
+        assert!((m.slab_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((m.slab_fragmentation() - 0.4).abs() < 1e-12);
+        let z = HeapMetrics::default();
+        assert_eq!(z.slab_hit_rate(), 0.0);
+        assert_eq!(z.slab_fragmentation(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_slab_counters_and_gauges() {
+        let mut a = HeapMetrics {
+            slab_chunks: 1,
+            slab_committed_bytes: 100,
+            slab_freelist_hits: 2,
+            ..Default::default()
+        };
+        let b = HeapMetrics {
+            slab_chunks: 2,
+            slab_committed_bytes: 200,
+            slab_freelist_hits: 3,
+            slab_large_allocs: 1,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.slab_chunks, 3);
+        assert_eq!(a.slab_committed_bytes, 300);
+        assert_eq!(a.slab_freelist_hits, 5);
+        assert_eq!(a.slab_large_allocs, 1);
+        // merge_counters folds the counters but not the storage gauges.
+        let mut c = HeapMetrics::default();
+        c.merge_counters(&b);
+        assert_eq!(c.slab_freelist_hits, 3);
+        assert_eq!(c.slab_large_allocs, 1);
+        assert_eq!(c.slab_chunks, 0);
+        assert_eq!(c.slab_committed_bytes, 0);
     }
 
     #[test]

@@ -29,6 +29,7 @@
 //! where it participates in that shard's lazy machinery from then on.
 //! See DESIGN.md for the full threading model.
 
+pub mod alloc;
 mod ids;
 mod lazy;
 mod memo;
@@ -37,13 +38,15 @@ mod payload;
 mod shard;
 mod slot;
 
+pub use self::alloc::{AllocatorKind, PBox, SlabAlloc, CHUNK_BYTES};
 pub use ids::{LabelId, ObjId};
 pub use lazy::{Lazy, RawLazy};
 pub use memo::MemoTable;
-pub use metrics::HeapMetrics;
+pub use metrics::{HeapMetrics, MetricsScope};
 pub use payload::{EdgeSlot, Payload};
 pub use shard::{aggregate_metrics, sample_global_peak, shard_of, shard_ranges, ShardedHeap};
 
+use self::alloc::{AllocReceipt, FreeReceipt};
 use slot::{Slot, OBJ_OVERHEAD};
 
 /// Copy strategy, corresponding to the paper's three evaluation
@@ -112,13 +115,31 @@ pub struct Heap {
     /// path — all five evaluation models), `deep_copy` skips the
     /// cross-reference scan entirely.
     live_cross_edges: usize,
+    /// Payload storage: every payload block is handed out and reclaimed
+    /// here. Declared *after* `slots` on purpose — fields drop in
+    /// declaration order, so at teardown the slots' [`PBox`] handles run
+    /// their payload destructors while the slab chunks they point into
+    /// are still allocated.
+    alloc: SlabAlloc,
 }
 
 /// The pinned root label (root context, §2.4 Def. 4).
 pub const ROOT_LABEL: LabelId = LabelId { idx: 0, gen: 0 };
 
 impl Heap {
+    /// A heap on the default payload allocator
+    /// ([`AllocatorKind::Slab`]).
     pub fn new(mode: CopyMode) -> Self {
+        Heap::with_allocator(mode, AllocatorKind::Slab)
+    }
+
+    /// A heap whose payload storage uses the given backend
+    /// (`--allocator system|slab`).
+    pub fn with_allocator(mode: CopyMode, kind: AllocatorKind) -> Self {
+        Heap::build(mode, SlabAlloc::new(kind))
+    }
+
+    fn build(mode: CopyMode, alloc: SlabAlloc) -> Self {
         let mut h = Heap {
             slots: Vec::new(),
             free_slots: Vec::new(),
@@ -133,6 +154,7 @@ impl Heap {
             scratch_before: Vec::new(),
             scratch_after: Vec::new(),
             live_cross_edges: 0,
+            alloc,
         };
         // Pinned root label (never collected).
         h.labels.push(LabelSlot {
@@ -148,6 +170,101 @@ impl Heap {
     #[inline]
     pub fn mode(&self) -> CopyMode {
         self.mode
+    }
+
+    /// Payload-storage backend this heap was built with.
+    #[inline]
+    pub fn allocator_kind(&self) -> AllocatorKind {
+        self.alloc.kind()
+    }
+
+    /// Whether the payload allocator is the scratch-heap bump-only
+    /// variant (no free lists; bulk reset/drop reclaim).
+    #[inline]
+    pub fn allocator_is_bump_only(&self) -> bool {
+        self.alloc.is_bump_only()
+    }
+
+    /// Rewind a *drained* scratch heap's payload storage so its chunks
+    /// can be reused without touching the system allocator. Requires
+    /// zero live objects.
+    pub fn reset_storage(&mut self) {
+        assert_eq!(
+            self.metrics.live_objects, 0,
+            "reset_storage on a heap with live objects"
+        );
+        self.alloc.reset();
+    }
+
+    /// Prepare a drained scratch heap for its next donation: rewind the
+    /// payload storage (keeping the chunks — a pooled scratch's next use
+    /// costs no system-allocator traffic) and zero the metrics history,
+    /// so the next use's `peak_bytes` and op counters describe that use
+    /// alone. Call *after* [`Heap::absorb_counters`] (recycling discards
+    /// the counters) and after the scratch's own peak has been folded
+    /// into the scratch-residency gauge. Slot and label slabs keep their
+    /// capacity, which the next use reuses too.
+    pub fn recycle_scratch(&mut self) {
+        debug_assert_eq!(
+            self.metrics.live_labels, 1,
+            "recycle of a scratch heap with live non-root labels"
+        );
+        self.reset_storage();
+        self.metrics = HeapMetrics {
+            live_labels: 1,
+            // Retained storage carries over; everything else starts over.
+            slab_chunks: self.metrics.slab_chunks,
+            slab_committed_bytes: self.metrics.slab_committed_bytes,
+            ..HeapMetrics::default()
+        };
+    }
+
+    // ------------------------------------------------------------------
+    // Metrics scopes: exact operation deltas for a bracketed region
+    // ------------------------------------------------------------------
+
+    /// Open a metrics scope: a snapshot against which
+    /// [`Heap::end_scope`] computes the *exact* operation delta of
+    /// everything this heap did in between. The engine brackets one
+    /// particle's propagation this way to feed the rebalancer exact
+    /// per-particle costs (no `cost_hint` apportioning).
+    #[inline]
+    pub fn begin_scope(&self) -> MetricsScope {
+        MetricsScope::open(&self.metrics)
+    }
+
+    /// Close a scope: monotone counters in the result are the exact
+    /// in-scope deltas; gauges carry their current values (see
+    /// [`HeapMetrics::delta_since`]).
+    #[inline]
+    pub fn end_scope(&self, scope: MetricsScope) -> HeapMetrics {
+        scope.close(&self.metrics)
+    }
+
+    /// Mirror one allocation receipt into the slab gauges/counters.
+    #[inline]
+    fn note_alloc(&mut self, r: AllocReceipt) {
+        let m = &mut self.metrics;
+        if r.large {
+            m.slab_large_allocs += 1;
+        } else if r.reused {
+            m.slab_freelist_hits += 1;
+        } else {
+            m.slab_fresh_bumps += 1;
+            if r.new_chunk {
+                m.slab_chunks += 1;
+                m.slab_committed_bytes += CHUNK_BYTES;
+            }
+        }
+        m.slab_live_block_bytes += r.block_bytes;
+        if m.slab_live_block_bytes > m.slab_block_peak_bytes {
+            m.slab_block_peak_bytes = m.slab_live_block_bytes;
+        }
+    }
+
+    #[inline]
+    fn note_free(&mut self, r: FreeReceipt) {
+        self.metrics.slab_live_block_bytes -= r.block_bytes;
     }
 
     /// Current context label (top of the context stack, Def. 4).
@@ -198,7 +315,7 @@ impl Heap {
         s.alive && s.gen == l.gen
     }
 
-    fn new_slot(&mut self, payload: Box<dyn Payload>, label: LabelId, shared: u32) -> ObjId {
+    fn new_slot(&mut self, payload: PBox, label: LabelId, shared: u32) -> ObjId {
         let bytes = payload.size_bytes() as u32;
         let idx = if let Some(idx) = self.free_slots.pop() {
             let s = &mut self.slots[idx as usize];
@@ -252,6 +369,28 @@ impl Heap {
         };
         self.metrics.note_peak();
         id
+    }
+
+    /// Placement-clone the live payload of `v` into *this* heap's slab
+    /// (the same-heap eager-copy path). Split-borrow helper: the source
+    /// bytes are read out of `slots` while `alloc` hands out storage.
+    fn clone_payload_of(&mut self, v: ObjId) -> PBox {
+        let slots = &self.slots;
+        let s = &slots[v.idx as usize];
+        debug_assert_eq!(s.gen, v.gen, "stale ObjId: slot recycled");
+        let src = s.payload.as_deref().expect("deep copy of destroyed object");
+        let (clone, receipt) = self.alloc.alloc_clone(src);
+        self.note_alloc(receipt);
+        clone
+    }
+
+    /// Placement-clone a *foreign* payload into this heap and install it
+    /// in a fresh slot (the transplant path: `src` lives in another
+    /// heap's storage).
+    fn new_slot_cloned(&mut self, src: &dyn Payload, label: LabelId, shared: u32) -> ObjId {
+        let (clone, receipt) = self.alloc.alloc_clone(src);
+        self.note_alloc(receipt);
+        self.new_slot(clone, label, shared)
     }
 
     // ------------------------------------------------------------------
@@ -321,7 +460,11 @@ impl Heap {
         let bytes = slot.bytes as usize;
         let mut edges = Vec::new();
         payload.edges(&mut edges);
-        drop(payload);
+        // Return the payload block to the slab (destructor runs there;
+        // the block re-enters its class free list for the next
+        // generation's allocations).
+        let freed = self.alloc.dealloc(payload);
+        self.note_free(freed);
         self.metrics.live_objects -= 1;
         self.metrics.total_frees += 1;
         self.metrics.live_bytes -= bytes + OBJ_OVERHEAD;
@@ -383,13 +526,28 @@ impl Heap {
     // ------------------------------------------------------------------
 
     /// Allocate a new object under the current context. Returns an *owning*
-    /// handle (release with [`Heap::release`] or store into a field).
+    /// handle (release with [`Heap::release`] or store into a field). The
+    /// value is placement-written straight into the slab — the typed hot
+    /// path never touches the system allocator once its size class is
+    /// warm.
     pub fn alloc<T: Payload>(&mut self, value: T) -> Lazy<T> {
-        let raw = self.alloc_raw(Box::new(value));
-        Lazy::from_raw(raw)
+        let (payload, receipt) = self.alloc.alloc_value(value);
+        self.note_alloc(receipt);
+        Lazy::from_raw(self.install_new(payload))
     }
 
+    /// Allocate from an already-boxed payload (the untyped entry point):
+    /// the value moves into slab storage and the box allocation is
+    /// released without running the destructor.
     pub fn alloc_raw(&mut self, payload: Box<dyn Payload>) -> RawLazy {
+        let (payload, receipt) = self.alloc.adopt_box(payload);
+        self.note_alloc(receipt);
+        self.install_new(payload)
+    }
+
+    /// Shared tail of the allocation paths: slot bookkeeping for a
+    /// freshly placed payload.
+    fn install_new(&mut self, payload: PBox) -> RawLazy {
         let ctx = if self.mode.is_lazy() {
             self.context()
         } else {
@@ -625,9 +783,11 @@ impl Heap {
                 }
             });
         }
-        // Phase 2: clone and fix up the clone's edges.
-        let mut clone = payload.clone_payload();
+        // Phase 2: placement-clone into the slab and fix up the clone's
+        // edges.
+        let (mut clone, receipt) = self.alloc.alloc_clone(&*payload);
         self.slot_mut(v).payload = Some(payload);
+        self.note_alloc(receipt);
         let mut incs: Vec<RawLazy> = Vec::new();
         clone.edges_mut(&mut |d: &mut RawLazy| {
             if d.is_null() {
@@ -866,12 +1026,7 @@ impl Heap {
             if map.contains_key(&(cur.obj, cur.label)) {
                 continue;
             }
-            let clone = self
-                .slot(cur.obj)
-                .payload
-                .as_ref()
-                .expect("deep copy of destroyed object")
-                .clone_payload();
+            let clone = self.clone_payload_of(cur.obj);
             let u = self.new_slot(clone, l, 0);
             self.metrics.eager_copies += 1;
             map.insert((cur.obj, cur.label), u);
@@ -948,12 +1103,7 @@ impl Heap {
             if map.contains_key(&v) {
                 continue;
             }
-            let clone = self
-                .slot(v)
-                .payload
-                .as_ref()
-                .expect("deep copy of destroyed object")
-                .clone_payload();
+            let clone = self.clone_payload_of(v);
             let u = self.new_slot(clone, ROOT_LABEL, 0);
             self.metrics.eager_copies += 1;
             map.insert(v, u);
@@ -1006,8 +1156,16 @@ impl Heap {
     /// a full peer: lineages are moved in and out with
     /// [`Heap::extract_into`] and its op counters are folded back into the
     /// home shard with [`Heap::absorb_counters`] when it is reclaimed.
+    ///
+    /// Its payload allocator is the *bump-only* variant
+    /// ([`SlabAlloc::scratch`]): a scratch drains completely at the
+    /// generation barrier, so frees skip free-list maintenance and the
+    /// storage is reclaimed in bulk when the scratch drops — or reused:
+    /// the steal path pools drained scratches per shard via
+    /// [`Heap::recycle_scratch`], so repeat donations recycle chunks
+    /// instead of allocating fresh ones.
     pub fn scratch(&self) -> Heap {
-        Heap::new(self.mode)
+        Heap::build(self.mode, SlabAlloc::scratch(self.alloc.kind()))
     }
 
     /// Fold a drained scratch heap's monotone op counters into this heap's
@@ -1061,13 +1219,12 @@ impl Heap {
                 if map.contains_key(&v) {
                     continue;
                 }
-                let clone = self
+                let src = self
                     .slot(v)
                     .payload
-                    .as_ref()
-                    .expect("transplant of destroyed object")
-                    .clone_payload();
-                let u = dst.new_slot(clone, ROOT_LABEL, 0);
+                    .as_deref()
+                    .expect("transplant of destroyed object");
+                let u = dst.new_slot_cloned(src, ROOT_LABEL, 0);
                 dst.metrics.eager_copies += 1;
                 map.insert(v, u);
                 order.push(v);
@@ -1116,13 +1273,12 @@ impl Heap {
             if map.contains_key(&(cur.obj, cur.label)) {
                 continue;
             }
-            let clone = self
+            let src = self
                 .slot(cur.obj)
                 .payload
-                .as_ref()
-                .expect("transplant of destroyed object")
-                .clone_payload();
-            let u = dst.new_slot(clone, l, 0);
+                .as_deref()
+                .expect("transplant of destroyed object");
+            let u = dst.new_slot_cloned(src, l, 0);
             dst.metrics.eager_copies += 1;
             map.insert((cur.obj, cur.label), u);
             order.push((cur.obj, cur.label, u));

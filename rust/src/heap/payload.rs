@@ -6,21 +6,31 @@
 //! rewrite its out-edge labels in place (the clone rule of Algorithm 6:
 //! non-cross edges in a fresh copy adopt the new label). Everything else
 //! about the payload is opaque.
+//!
+//! Payload *storage* belongs to the owning heap's slab allocator
+//! ([`SlabAlloc`](super::alloc::SlabAlloc)), so cloning is *placement*
+//! cloning: the allocator hands out a block of [`Payload::layout`] bytes
+//! and [`Payload::clone_into`] / [`Payload::move_into`] construct the
+//! concrete value there, returning the fat pointer the allocator wraps in
+//! a [`PBox`](super::alloc::PBox). The [`crate::lazy_fields!`] macro
+//! derives all of this; the placement methods exist because a trait
+//! object cannot otherwise be cloned or moved into caller-provided
+//! storage (the vtable knows the concrete type; stable Rust offers no way
+//! to re-point a fat pointer at new storage from outside).
 
+use std::alloc::Layout;
 use std::any::Any;
 
 use super::lazy::RawLazy;
 
 /// Object payload data. Implement via [`crate::lazy_fields!`] for structs
-/// with a fixed set of lazy-pointer fields, or manually for containers of
-/// pointers (ragged arrays, stacks of references, ...).
+/// with a fixed set of lazy-pointer fields (each a [`Lazy<T>`](super::Lazy),
+/// `Vec<Lazy<T>>`, or `Option<Lazy<T>>` — anything implementing
+/// [`EdgeSlot`]).
 ///
 /// `Send` is a supertrait so that whole [`Heap`](super::Heap) shards can be
 /// handed to worker threads (one `&mut Heap` per worker, no sharing).
 pub trait Payload: Any + Send {
-    /// Clone the payload (shallow: pointer fields are copied bitwise).
-    fn clone_payload(&self) -> Box<dyn Payload>;
-
     /// Append all (non-null) out-edges to `out`.
     fn edges(&self, out: &mut Vec<RawLazy>);
 
@@ -30,6 +40,27 @@ pub trait Payload: Any + Send {
 
     /// Approximate heap size of the payload in bytes, for memory metrics.
     fn size_bytes(&self) -> usize;
+
+    /// Size/alignment of the *concrete* payload type — what the slab
+    /// allocator must reserve for a clone.
+    fn layout(&self) -> Layout;
+
+    /// Placement-clone: construct a clone of `self` at `dst` and return
+    /// the fat pointer to it (shallow: lazy-pointer fields copy bitwise).
+    ///
+    /// # Safety
+    /// `dst` must be valid for writes of [`Payload::layout`] bytes at
+    /// that layout's alignment, and must not overlap `self`.
+    unsafe fn clone_into(&self, dst: *mut u8) -> *mut dyn Payload;
+
+    /// Placement-move: move the boxed value to `dst` (bitwise), free the
+    /// box's allocation *without* running the destructor, and return the
+    /// fat pointer to the moved value.
+    ///
+    /// # Safety
+    /// `dst` must be valid for writes of [`Payload::layout`] bytes at
+    /// that layout's alignment.
+    unsafe fn move_into(self: Box<Self>, dst: *mut u8) -> *mut dyn Payload;
 
     fn as_any(&self) -> &dyn Any;
     fn as_any_mut(&mut self) -> &mut dyn Any;
@@ -53,9 +84,6 @@ macro_rules! lazy_fields {
         where
             $ty: Clone + 'static,
         {
-            fn clone_payload(&self) -> Box<dyn $crate::heap::Payload> {
-                Box::new(self.clone())
-            }
             fn edges(&self, out: &mut Vec<$crate::heap::RawLazy>) {
                 $( $crate::heap::EdgeSlot::collect(&self.$field, out); )*
                 let _ = out;
@@ -69,6 +97,39 @@ macro_rules! lazy_fields {
             }
             fn size_bytes(&self) -> usize {
                 std::mem::size_of::<$ty>()
+            }
+            fn layout(&self) -> std::alloc::Layout {
+                std::alloc::Layout::new::<$ty>()
+            }
+            unsafe fn clone_into(&self, dst: *mut u8) -> *mut dyn $crate::heap::Payload {
+                let value: $ty = self.clone();
+                // SAFETY: caller provides `layout()`-sized, -aligned,
+                // non-overlapping storage.
+                unsafe { std::ptr::write(dst as *mut $ty, value) };
+                dst as *mut $ty as *mut dyn $crate::heap::Payload
+            }
+            unsafe fn move_into(
+                self: Box<Self>,
+                dst: *mut u8,
+            ) -> *mut dyn $crate::heap::Payload {
+                let src = Box::into_raw(self);
+                // SAFETY: `src` is a live box of `$ty`; `dst` has its
+                // layout; the bitwise move transfers ownership, so the
+                // box allocation is released without dropping the value.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        src as *const u8,
+                        dst,
+                        std::mem::size_of::<$ty>(),
+                    );
+                    if std::mem::size_of::<$ty>() != 0 {
+                        std::alloc::dealloc(
+                            src as *mut u8,
+                            std::alloc::Layout::new::<$ty>(),
+                        );
+                    }
+                }
+                dst as *mut $ty as *mut dyn $crate::heap::Payload
             }
             fn as_any(&self) -> &dyn std::any::Any { self }
             fn as_any_mut(&mut self) -> &mut dyn std::any::Any { self }

@@ -17,7 +17,7 @@
 //! platform, which the seeded-equivalence tests pin down bit-for-bit.
 
 use super::metrics::HeapMetrics;
-use super::{CopyMode, Heap};
+use super::{AllocatorKind, CopyMode, Heap};
 use std::ops::Range;
 
 /// Contiguous balanced partition of `0..n` into `k` ranges (some possibly
@@ -90,11 +90,19 @@ pub struct ShardedHeap {
 }
 
 impl ShardedHeap {
-    /// Create `k` independent heaps (`k >= 1`) in the given copy mode.
+    /// Create `k` independent heaps (`k >= 1`) in the given copy mode, on
+    /// the default payload allocator ([`AllocatorKind::Slab`]).
     pub fn new(mode: CopyMode, k: usize) -> Self {
+        ShardedHeap::with_allocator(mode, k, AllocatorKind::Slab)
+    }
+
+    /// Create `k` independent heaps whose payload storage uses the given
+    /// backend (`--allocator system|slab`). Scratch heaps spawned from
+    /// any shard inherit the backend.
+    pub fn with_allocator(mode: CopyMode, k: usize, kind: AllocatorKind) -> Self {
         assert!(k > 0, "at least one shard");
         ShardedHeap {
-            shards: (0..k).map(|_| Heap::new(mode)).collect(),
+            shards: (0..k).map(|_| Heap::with_allocator(mode, kind)).collect(),
             mode,
         }
     }
@@ -102,6 +110,12 @@ impl ShardedHeap {
     #[inline]
     pub fn k(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Payload-storage backend of the shards.
+    #[inline]
+    pub fn allocator_kind(&self) -> AllocatorKind {
+        self.shards[0].allocator_kind()
     }
 
     #[inline]

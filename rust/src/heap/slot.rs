@@ -1,15 +1,21 @@
 //! Object slots: the vertex records of the heap slab.
 
+use super::alloc::PBox;
 use super::ids::LabelId;
-use super::payload::Payload;
 
-/// Per-object record. Holds the payload `b(v)`, the creating label `f(v)`
-/// (§2.2 Def. 2), the read-only flag (`v ∈ R`), the three reference counts
-/// of §3 (shared / weak / memo), and the single-reference-optimization
-/// bookkeeping of Remark 1.
+/// Per-object record. Holds the payload `b(v)` (a [`PBox`] handle into
+/// the heap's slab allocator — the vtable rides in the handle's fat
+/// pointer, the bytes live in a size-class slab), the creating label
+/// `f(v)` (§2.2 Def. 2), the read-only flag (`v ∈ R`), the three
+/// reference counts of §3 (shared / weak / memo), and the
+/// single-reference-optimization bookkeeping of Remark 1.
 pub(crate) struct Slot {
     /// Payload `b(v)`; `None` once destroyed (shared count reached zero).
-    pub payload: Option<Box<dyn Payload>>,
+    /// Destruction must return the handle through the owning heap's
+    /// allocator (`Heap::destroy` → `SlabAlloc::dealloc`) so the block
+    /// re-enters its free list; a bare drop (heap teardown) is safe but
+    /// unaccounted.
+    pub payload: Option<PBox>,
     /// Creating label `f(v)`. Does not hold a reference count on the label
     /// (the paper's cycle-breaking rule, §3).
     pub label: LabelId,

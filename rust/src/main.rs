@@ -12,7 +12,7 @@
 use lazycow::bench::{human_bytes, CellResult};
 use lazycow::cli::{Cli, CliError};
 use lazycow::config::{parse_config_text, Model, RunConfig, Task};
-use lazycow::heap::{CopyMode, Heap, ShardedHeap};
+use lazycow::heap::{AllocatorKind, CopyMode, Heap, ShardedHeap};
 use lazycow::models::run_model;
 use lazycow::pool::ThreadPool;
 use lazycow::runtime::{BatchKalman, XlaRuntime};
@@ -52,12 +52,28 @@ fn cli() -> Cli {
         "",
         "min pending particles before a busy shard donates its tail (default 4)",
     )
+    .flag(
+        "allocator",
+        "",
+        "payload storage backend: system|slab (default slab; output identical either way)",
+    )
     .flag("reps", "5", "benchmark repetitions")
     .flag("scale", "default", "scale preset: default|paper")
     .flag("config", "", "config file (key = value lines)")
     .flag("artifacts", "artifacts", "AOT artifact directory")
     .bool_flag("no-xla", "disable the PJRT artifact path")
     .bool_flag("series", "print the per-generation series")
+}
+
+/// `--allocator` value, when one was given (shared by `run` and the
+/// figure commands).
+fn parse_allocator(args: &lazycow::cli::Args) -> Result<Option<AllocatorKind>, String> {
+    match args.get("allocator") {
+        Some(a) if !a.is_empty() => Ok(Some(
+            AllocatorKind::parse(a).ok_or("bad --allocator (system|slab)")?,
+        )),
+        _ => Ok(None),
+    }
 }
 
 fn build_config(args: &lazycow::cli::Args) -> Result<RunConfig, String> {
@@ -109,6 +125,9 @@ fn build_config(args: &lazycow::cli::Args) -> Result<RunConfig, String> {
     }
     if let Some(m) = args.get_usize("steal-threshold") {
         cfg.steal_min = m;
+    }
+    if let Some(kind) = parse_allocator(args)? {
+        cfg.allocator = kind;
     }
     cfg.use_xla = !args.get_bool("no-xla");
     cfg.series = args.get_bool("series");
@@ -179,27 +198,38 @@ fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
     let cfg = build_config(args)?;
     let backend = Backend::new(cfg.threads, cfg.use_xla, args.get_or("artifacts", "artifacts"));
     let k = backend.choose_shards(&cfg);
-    let mut heap = ShardedHeap::new(cfg.mode, k);
+    let mut heap = ShardedHeap::with_allocator(cfg.mode, k, cfg.allocator);
     println!(
-        "# {} K={k} rebalance={} steal={}",
+        "# {} K={k} rebalance={} steal={} allocator={}",
         cfg.label(),
         if k > 1 { cfg.rebalance.name() } else { "off" },
-        if k > 1 && cfg.steal { "on" } else { "off" }
+        if k > 1 && cfg.steal { "on" } else { "off" },
+        cfg.allocator.name()
     );
     let r = run_model(&cfg, &mut heap, &backend.ctx());
     println!(
         "log_evidence={:.4} posterior_mean={:.4} wall={:.3}s peak={} global_peak={} \
-         migrations={} steals={} attempts={}",
+         scratch_peak={} migrations={} steals={} attempts={}",
         r.log_evidence,
         r.posterior_mean,
         r.wall_s,
         human_bytes(r.peak_bytes as f64),
         human_bytes(r.global_peak_bytes as f64),
+        human_bytes(r.scratch_peak_bytes as f64),
         r.migrations,
         r.steals,
         r.attempts
     );
-    println!("heap: {}", heap.metrics().summary());
+    let m = heap.metrics();
+    println!("heap: {}", m.summary());
+    if cfg.allocator == AllocatorKind::Slab {
+        println!(
+            "slab: hit_rate={:.3} fragmentation={:.3} committed={}",
+            m.slab_hit_rate(),
+            m.slab_fragmentation(),
+            human_bytes(m.slab_committed_bytes as f64)
+        );
+    }
     if cfg.series {
         println!("t\telapsed_s\tlive_bytes\tpeak_bytes\tlive_objects\tess");
         for s in &r.series {
@@ -236,13 +266,16 @@ fn figure_cells(task: Task, args: &lazycow::cli::Args) -> Result<Vec<CellResult>
             // aggregate is a sum of per-shard peaks and would vary with
             // the core count). An explicit --shards K opts in.
             cfg.shards = args.get_usize("shards").unwrap_or(0);
+            if let Some(kind) = parse_allocator(args)? {
+                cfg.allocator = kind;
+            }
             let k = if cfg.shards == 0 { 1 } else { cfg.shards };
             let name = format!("{}/{}", model.name(), mode.name());
             let backend_ref = &backend;
             let cell = lazycow::bench::run_cell(&name, reps, |rep| {
                 let mut c = cfg.clone();
                 c.seed = base_seed.wrapping_add(rep as u64); // one seed per rep (§4)
-                let mut heap = ShardedHeap::new(c.mode, k);
+                let mut heap = ShardedHeap::with_allocator(c.mode, k, c.allocator);
                 let r = run_model(&c, &mut heap, &backend_ref.ctx());
                 Some(r.peak_bytes as f64)
             });
@@ -290,8 +323,11 @@ fn cmd_fig7(args: &lazycow::cli::Args) -> Result<(), String> {
             // Single-heap baseline by default (exact peak memory); an
             // explicit --shards K opts in to the sharded engine.
             cfg.shards = args.get_usize("shards").unwrap_or(0);
+            if let Some(kind) = parse_allocator(args)? {
+                cfg.allocator = kind;
+            }
             let k = if cfg.shards == 0 { 1 } else { cfg.shards };
-            let mut heap = ShardedHeap::new(mode, k);
+            let mut heap = ShardedHeap::with_allocator(mode, k, cfg.allocator);
             let r = run_model(&cfg, &mut heap, &backend.ctx());
             for s in &r.series {
                 println!(

@@ -86,6 +86,7 @@ fn aggregate_pg(results: Vec<FilterResult>) -> FilterResult {
         acc.wall_s += r.wall_s;
         acc.peak_bytes = acc.peak_bytes.max(r.peak_bytes);
         acc.global_peak_bytes = acc.global_peak_bytes.max(r.global_peak_bytes);
+        acc.scratch_peak_bytes = acc.scratch_peak_bytes.max(r.scratch_peak_bytes);
         acc.migrations += r.migrations;
         acc.steals += r.steals;
         acc.attempts += r.attempts;

@@ -115,6 +115,13 @@ pub struct FilterResult {
     /// the barrier-sampled global peak (peak of per-barrier sums) at
     /// K > 1. Always `<= peak_bytes`.
     pub global_peak_bytes: usize,
+    /// Transient work-stealing scratch residency: the maximum over
+    /// generations of the summed per-scratch-heap peaks (exact per
+    /// scratch; bytes that live in no shard's `peak_bytes` between
+    /// donation and reclaim). Zero with stealing off, so steal-on vs
+    /// steal-off peak comparisons are exact:
+    /// `peak_bytes + scratch_peak_bytes` bounds the steal-on footprint.
+    pub scratch_peak_bytes: usize,
     /// Migrations: cross-shard transplant operations *executed* while a
     /// rebalancing policy was active (distinct (ancestor, destination)
     /// pairs per resampling step, including any the particle-Gibbs
@@ -188,30 +195,69 @@ fn make_tasks<'a, S>(
     tasks
 }
 
-#[inline]
-fn heap_ops(m: &HeapMetrics) -> usize {
-    // The rebalancer's op charge: allocations + actual object copies +
-    // memo-chase pulls (the lazy platform's hot-path operations).
-    m.total_allocs + m.lazy_copies + m.eager_copies + m.pulls
-}
-
 /// Sum of hint weights under the cost model's [`HINT_FLOOR`] clamp — the
-/// shared denominator for apportioning one measured cost.
+/// shared denominator for apportioning one measured cost. (The hint
+/// fallback: used only where a single measurement covers several
+/// particles, i.e. a thief's stolen batch; everywhere else the engine now
+/// measures per particle with metrics scopes.)
 fn clamped_hint_sum<'a>(hints: impl IntoIterator<Item = &'a f64>) -> f64 {
     hints.into_iter().map(|h| h.max(HINT_FLOOR)).sum()
 }
 
 /// Apportion one measured `cost` over a contiguous run of slots by
 /// clamped hint weight, writing per-particle costs into `out[base..]`.
-/// `hint_sum` is the denominator shared by every run charged against the
-/// same measurement (e.g. all of one shard's home-processed runs). No-op
-/// when the measurement is unusable.
+/// No-op when the measurement is unusable.
 fn apportion_cost(out: &mut [f64], base: usize, cost: f64, hints: &[f64], hint_sum: f64) {
     if hint_sum <= 0.0 || !cost.is_finite() {
         return;
     }
     for (j, h) in hints.iter().enumerate() {
         out[base + j] = cost * h.max(HINT_FLOOR) / hint_sum;
+    }
+}
+
+/// One particle's *exact* measured propagation cost: the wall seconds of
+/// its scoped region plus the heap-operation charge of the scope's exact
+/// [`HeapMetrics`] delta ([`Heap::begin_scope`] / [`Heap::end_scope`]).
+/// This is what the rebalancer's [`CostTracker`] now feeds on wherever a
+/// scope is active — `cost_hint` apportioning remains only as the
+/// fallback for batch-granular measurements (stolen batches).
+#[inline]
+fn scoped_cost(wall_s: f64, delta: &HeapMetrics) -> f64 {
+    wall_s + delta.op_charge() as f64 * OP_COST_S
+}
+
+/// The exact-cost propagation core shared by every scoped path (assigned
+/// runs, contiguous chunks, steal queues): step `states` one scoped
+/// single-particle `step_population` call at a time — bit-identical to
+/// the batched call by the per-particle RNG stream contract — and hand
+/// `sink` each slot's offset, weight increment, and [`scoped_cost`].
+#[allow(clippy::too_many_arguments)]
+fn step_scoped<M: SmcModel + Sync>(
+    model: &M,
+    heap: &mut Heap,
+    states: &mut [Lazy<M::State>],
+    base: usize,
+    t: usize,
+    seed: u64,
+    observe: bool,
+    shard_ctx: &StepCtx,
+    mut sink: impl FnMut(usize, f64, f64),
+) {
+    for j in 0..states.len() {
+        let t0 = Instant::now();
+        let scope = heap.begin_scope();
+        let winc = model.step_population(
+            heap,
+            &mut states[j..j + 1],
+            t,
+            seed,
+            observe,
+            base + j,
+            shard_ctx,
+        );
+        let delta = heap.end_scope(scope);
+        sink(j, winc[0], scoped_cost(t0.elapsed().as_secs_f64(), &delta));
     }
 }
 
@@ -267,7 +313,9 @@ struct ShardRun<S> {
     base: usize,
     states: Vec<Lazy<S>>,
     winc: Vec<f64>,
-    hints: Vec<f64>,
+    /// Exact per-particle measured costs (scoped; filled only when the
+    /// rebalancer is active).
+    costs: Vec<f64>,
 }
 
 /// Decompose an assignment into per-shard maximal runs of consecutive
@@ -286,7 +334,7 @@ fn gather_runs<S>(states: &[Lazy<S>], assign: &[usize], k: usize) -> Vec<Vec<Sha
                 base: i,
                 states: vec![states[i]],
                 winc: Vec::new(),
-                hints: Vec::new(),
+                costs: Vec::new(),
             }),
         }
     }
@@ -297,20 +345,66 @@ fn gather_runs<S>(states: &[Lazy<S>], assign: &[usize], k: usize) -> Vec<Vec<Sha
 struct AssignedTask<'a, S> {
     heap: &'a mut Heap,
     runs: Vec<ShardRun<S>>,
-    /// Measured generation cost: wall seconds + op charge (out).
-    cost: f64,
+}
+
+/// Propagate one run of particles on its shard, appending weight
+/// increments to `run.winc`. When `want_costs`, every particle is
+/// propagated in its own metrics scope — a single-particle
+/// `step_population` call, bit-identical to the batched call by the
+/// per-particle RNG stream contract — and the exact measured cost lands
+/// in `run.costs`.
+#[allow(clippy::too_many_arguments)]
+fn propagate_run<M: SmcModel + Sync>(
+    model: &M,
+    heap: &mut Heap,
+    run: &mut ShardRun<M::State>,
+    t: usize,
+    seed: u64,
+    observe: bool,
+    shard_ctx: &StepCtx,
+    want_costs: bool,
+) {
+    if want_costs {
+        run.costs.reserve(run.states.len());
+        let (winc, costs) = (&mut run.winc, &mut run.costs);
+        step_scoped(
+            model,
+            heap,
+            &mut run.states,
+            run.base,
+            t,
+            seed,
+            observe,
+            shard_ctx,
+            |_, w, c| {
+                winc.push(w);
+                costs.push(c);
+            },
+        );
+    } else {
+        run.winc = model.step_population(
+            heap,
+            &mut run.states,
+            t,
+            seed,
+            observe,
+            run.base,
+            shard_ctx,
+        );
+    }
 }
 
 /// Propagate + weight a (prefix of the) population under the current
 /// particle → shard assignment, shard-parallel. Weight increments are
 /// added into `lw` in place. `assign` must have the same length as
 /// `states` (particle Gibbs propagates the prefix that excludes the
-/// pinned conditional slot). When `shard_cost` / `hints` are given they
-/// receive the measured per-shard generation cost and the model's
-/// per-particle cost hints (the rebalancer's inputs). Each shard splits
-/// its work into maximal runs of consecutive global indices, so
-/// `step_population`'s `base` argument keeps every particle's RNG stream
-/// identical regardless of assignment — the seeded equivalence guarantee.
+/// pinned conditional slot). When `raw_cost` is given it receives the
+/// *exact* per-particle measured cost of every propagated slot (scoped
+/// wall time + heap-op charge — the rebalancer's input; see
+/// [`scoped_cost`]). Each shard splits its work into maximal runs of
+/// consecutive global indices, so `step_population`'s `base` argument
+/// keeps every particle's RNG stream identical regardless of assignment —
+/// the seeded equivalence guarantee.
 #[allow(clippy::too_many_arguments)]
 fn propagate_assigned<M: SmcModel + Sync>(
     model: &M,
@@ -322,14 +416,14 @@ fn propagate_assigned<M: SmcModel + Sync>(
     seed: u64,
     observe: bool,
     ctx: &StepCtx,
-    mut shard_cost: Option<&mut [f64]>,
-    mut hints: Option<&mut [f64]>,
+    mut raw_cost: Option<&mut [f64]>,
 ) {
     debug_assert_eq!(states.len(), lw.len());
     debug_assert_eq!(states.len(), assign.len());
     if shards.len() == 1 {
         // Single shard: the pre-sharding path, with the full batched
         // context (XLA artifact + intra-generation numeric parallelism).
+        // The rebalancer never runs at K = 1, so no costs are measured.
         let winc = model.step_population(&mut shards[0], states, t, seed, observe, 0, ctx);
         for (w, d) in lw.iter_mut().zip(winc) {
             *w += d;
@@ -337,16 +431,14 @@ fn propagate_assigned<M: SmcModel + Sync>(
         return;
     }
     let k = shards.len();
-    let want_hints = hints.is_some();
+    let want_costs = raw_cost.is_some();
     // Zero-copy fast path: a monotone assignment is a contiguous
     // partition (always true for policy `off`, and for rebalanced runs
     // until the first migration), so per-shard work is a plain
     // `split_at_mut` of the state/weight slices — no gather/scatter of
     // handles or weights, exactly the pre-rebalancing layout.
     if assign.windows(2).all(|p| p[0] <= p[1]) {
-        propagate_contiguous(
-            model, shards, states, lw, assign, t, seed, observe, ctx, shard_cost, hints,
-        );
+        propagate_contiguous(model, shards, states, lw, assign, t, seed, observe, ctx, raw_cost);
         return;
     }
     // Gather each shard's particles as runs of consecutive indices.
@@ -354,11 +446,7 @@ fn propagate_assigned<M: SmcModel + Sync>(
     let mut tasks: Vec<AssignedTask<'_, M::State>> = shards
         .iter_mut()
         .zip(runs_by_shard)
-        .map(|(heap, runs)| AssignedTask {
-            heap,
-            runs,
-            cost: 0.0,
-        })
+        .map(|(heap, runs)| AssignedTask { heap, runs })
         .collect();
     // Split the worker budget across shards so a shard count below the
     // thread count does not shrink total numeric-phase parallelism
@@ -369,8 +457,6 @@ fn propagate_assigned<M: SmcModel + Sync>(
         if task.runs.is_empty() {
             return;
         }
-        let t0 = Instant::now();
-        let ops0 = heap_ops(&task.heap.metrics);
         // Each worker owns one shard outright; the shard's numeric phase
         // gets its slice of the thread budget and runs on the CPU oracle
         // path (the batched XLA runtime is not shard-aware).
@@ -380,43 +466,23 @@ fn propagate_assigned<M: SmcModel + Sync>(
             kalman: None,
         };
         for run in task.runs.iter_mut() {
-            run.winc = model.step_population(
-                task.heap,
-                &mut run.states,
-                t,
-                seed,
-                observe,
-                run.base,
-                &shard_ctx,
-            );
-            if want_hints {
-                run.hints = run
-                    .states
-                    .iter_mut()
-                    .map(|st| model.cost_hint(task.heap, st))
-                    .collect();
-            }
+            propagate_run(model, task.heap, run, t, seed, observe, &shard_ctx, want_costs);
         }
-        let ops1 = heap_ops(&task.heap.metrics);
-        task.cost = t0.elapsed().as_secs_f64() + (ops1 - ops0) as f64 * OP_COST_S;
     });
     // Scatter results back in global index order.
-    for (s, task) in tasks.into_iter().enumerate() {
-        if let Some(sc) = shard_cost.as_deref_mut() {
-            sc[s] = task.cost;
-        }
+    for task in tasks {
         for run in task.runs {
             let base = run.base;
-            for (j, st) in run.states.into_iter().enumerate() {
-                states[base + j] = st;
-            }
-            for (j, w) in run.winc.into_iter().enumerate() {
+            for (j, w) in run.winc.iter().enumerate() {
                 lw[base + j] += w;
             }
-            if let Some(h) = hints.as_deref_mut() {
-                for (j, v) in run.hints.into_iter().enumerate() {
-                    h[base + j] = v;
+            if let Some(rc) = raw_cost.as_deref_mut() {
+                for (j, c) in run.costs.iter().enumerate() {
+                    rc[base + j] = *c;
                 }
+            }
+            for (j, st) in run.states.into_iter().enumerate() {
+                states[base + j] = st;
             }
         }
     }
@@ -426,10 +492,8 @@ fn propagate_assigned<M: SmcModel + Sync>(
 /// the borrowed [`ShardTask`] slices plus the rebalancer's outputs.
 struct ContigTask<'a, S> {
     chunk: ShardTask<'a, S>,
-    /// Measured generation cost (out).
-    cost: f64,
-    /// Per-particle cost hints for this chunk (out; empty unless asked).
-    hints: Vec<f64>,
+    /// Exact per-particle measured costs (out; empty unless asked).
+    costs: Vec<f64>,
 }
 
 /// The zero-copy specialization of [`propagate_assigned`] for monotone
@@ -446,11 +510,10 @@ fn propagate_contiguous<M: SmcModel + Sync>(
     seed: u64,
     observe: bool,
     ctx: &StepCtx,
-    mut shard_cost: Option<&mut [f64]>,
-    mut hints: Option<&mut [f64]>,
+    mut raw_cost: Option<&mut [f64]>,
 ) {
     let k = shards.len();
-    let want_hints = hints.is_some();
+    let want_costs = raw_cost.is_some();
     let m = assign.len();
     // Per-shard contiguous ranges straight from the monotone assignment
     // (a shard may own an empty range after migrations elsewhere).
@@ -469,8 +532,7 @@ fn propagate_contiguous<M: SmcModel + Sync>(
         .into_iter()
         .map(|chunk| ContigTask {
             chunk,
-            cost: 0.0,
-            hints: Vec::new(),
+            costs: Vec::new(),
         })
         .collect();
     let per_shard_threads = (ctx.pool.n_threads() / k).max(1);
@@ -479,37 +541,43 @@ fn propagate_contiguous<M: SmcModel + Sync>(
         if chunk.states.is_empty() {
             return;
         }
-        let t0 = Instant::now();
-        let ops0 = heap_ops(&chunk.heap.metrics);
         let local = ThreadPool::new(per_shard_threads);
         let shard_ctx = StepCtx {
             pool: &local,
             kalman: None,
         };
-        let winc = model.step_population(
-            chunk.heap, chunk.states, t, seed, observe, chunk.base, &shard_ctx,
-        );
-        for (w, d) in chunk.lw.iter_mut().zip(winc) {
-            *w += d;
+        if want_costs {
+            // Exact per-particle costs via the shared scoped core.
+            task.costs.reserve(chunk.states.len());
+            let (lw, costs) = (&mut chunk.lw, &mut task.costs);
+            step_scoped(
+                model,
+                chunk.heap,
+                chunk.states,
+                chunk.base,
+                t,
+                seed,
+                observe,
+                &shard_ctx,
+                |j, w, c| {
+                    lw[j] += w;
+                    costs.push(c);
+                },
+            );
+        } else {
+            let winc = model.step_population(
+                chunk.heap, chunk.states, t, seed, observe, chunk.base, &shard_ctx,
+            );
+            for (w, d) in chunk.lw.iter_mut().zip(winc) {
+                *w += d;
+            }
         }
-        if want_hints {
-            task.hints = chunk
-                .states
-                .iter_mut()
-                .map(|st| model.cost_hint(chunk.heap, st))
-                .collect();
-        }
-        let ops1 = heap_ops(&chunk.heap.metrics);
-        task.cost = t0.elapsed().as_secs_f64() + (ops1 - ops0) as f64 * OP_COST_S;
     });
-    for (s, task) in tasks.into_iter().enumerate() {
-        if let Some(sc) = shard_cost.as_deref_mut() {
-            sc[s] = task.cost;
-        }
-        if let Some(h) = hints.as_deref_mut() {
+    if let Some(rc) = raw_cost.as_deref_mut() {
+        for task in tasks {
             let base = task.chunk.base;
-            for (j, v) in task.hints.into_iter().enumerate() {
-                h[base + j] = v;
+            for (j, c) in task.costs.into_iter().enumerate() {
+                rc[base + j] = c;
             }
         }
     }
@@ -526,9 +594,9 @@ struct StealWork<'a, S> {
     shard: usize,
     heap: &'a mut Heap,
     runs: Vec<ShardRun<S>>,
-    /// Measured cost of the home-processed particles, including any
-    /// donation extractions (out).
-    cost: f64,
+    /// Recycled scratch heaps available for this shard's donations
+    /// (chunks, slots, and labels retained from earlier generations).
+    spares: Vec<Heap>,
 }
 
 /// A donated package: tail particles extracted into a scratch heap by the
@@ -554,7 +622,8 @@ struct FinishedBatch<S: Payload> {
     heap: Heap,
 }
 
-/// Extract a contiguous tail segment into a fresh scratch heap and donate
+/// Extract a contiguous tail segment into a scratch heap (a recycled
+/// spare when the pool has one, else a fresh bump-only heap) and donate
 /// it. The victim performs the extraction under its own `&mut` — the only
 /// way particles can leave a shard — and releases the home handles; the
 /// segment now lives entirely in the scratch heap.
@@ -564,9 +633,10 @@ fn donate_segment<S: Payload>(
     base: usize,
     seg: Vec<Lazy<S>>,
     yard: &StealYard<StolenBatch<S>>,
+    spares: &mut Vec<Heap>,
 ) {
     debug_assert!(!seg.is_empty());
-    let mut scratch = heap.scratch();
+    let mut scratch = spares.pop().unwrap_or_else(|| heap.scratch());
     let moved: Vec<Lazy<S>> = seg.iter().map(|st| heap.extract_into(st, &mut scratch)).collect();
     for st in seg {
         heap.release(st);
@@ -585,6 +655,7 @@ fn donate_segment<S: Payload>(
 /// worker's cursor; everything at or before it is already processed and
 /// never donated. The current run always keeps at least one unprocessed
 /// particle so the owner cannot be left spinning on an empty run.
+#[allow(clippy::too_many_arguments)]
 fn donate_tail<S: Payload>(
     heap: &mut Heap,
     runs: &mut Vec<ShardRun<S>>,
@@ -593,6 +664,7 @@ fn donate_tail<S: Payload>(
     steal_min: usize,
     shard: usize,
     yard: &StealYard<StolenBatch<S>>,
+    spares: &mut Vec<Heap>,
 ) {
     let here = runs[r_idx].states.len() - i;
     let later: usize = runs[r_idx + 1..].iter().map(|r| r.states.len()).sum();
@@ -611,7 +683,7 @@ fn donate_tail<S: Payload>(
                 let run = &mut runs[r_idx];
                 let at = run.states.len() - take;
                 let seg = run.states.split_off(at);
-                donate_segment(heap, shard, run.base + at, seg, yard);
+                donate_segment(heap, shard, run.base + at, seg, yard, spares);
             }
             return;
         }
@@ -619,20 +691,23 @@ fn donate_tail<S: Payload>(
         if tail_len <= remaining {
             let run = runs.pop().expect("checked non-empty");
             remaining -= tail_len;
-            donate_segment(heap, shard, run.base, run.states, yard);
+            donate_segment(heap, shard, run.base, run.states, yard, spares);
         } else {
             let run = &mut runs[last];
             let at = tail_len - remaining;
             let seg = run.states.split_off(at);
-            donate_segment(heap, shard, run.base + at, seg, yard);
+            donate_segment(heap, shard, run.base + at, seg, yard, spares);
             return;
         }
     }
 }
 
 /// Drain one shard's run queue in [`STEAL_CHUNK`]-sized slices, donating
-/// tail particles whenever the yard reports hungry workers. Returns the
-/// measured generation cost for the particles this worker kept.
+/// tail particles whenever the yard reports hungry workers. With
+/// `want_costs`, particles are propagated one scoped call at a time so
+/// every kept particle gets an *exact* measured cost in `run.costs`
+/// (donation extractions are scheduling overhead and deliberately
+/// excluded from any particle's cost).
 #[allow(clippy::too_many_arguments)]
 fn drain_own_queue<M: SmcModel + Sync>(
     model: &M,
@@ -646,32 +721,34 @@ fn drain_own_queue<M: SmcModel + Sync>(
     observe: bool,
     shard_ctx: &StepCtx,
     want_costs: bool,
-) -> f64 {
+    spares: &mut Vec<Heap>,
+) {
     if runs.is_empty() {
-        return 0.0;
+        return;
     }
-    let t0 = Instant::now();
-    let ops0 = heap_ops(&heap.metrics);
     let mut r_idx = 0;
     // Sticky steal-demand flag: until some worker goes hungry, process in
     // geometrically shrinking half-run slices (amortizing per-call batch
     // overhead back toward the whole-run call); once demand appears —
     // which means the generation is in its tail — drop to [`STEAL_CHUNK`]
-    // so donations stay responsive.
+    // so donations stay responsive. (Cost scoping forces single-particle
+    // slices; the chunking never changes output, only call granularity.)
     let mut hungry = false;
     while r_idx < runs.len() {
         let mut i = 0;
         loop {
             if yard.wanted() {
                 hungry = true;
-                donate_tail(heap, runs, r_idx, i, steal_min, shard, yard);
+                donate_tail(heap, runs, r_idx, i, steal_min, shard, yard, spares);
             }
             let len_now = runs[r_idx].states.len();
             if i >= len_now {
                 break;
             }
             let rem = len_now - i;
-            let len = if hungry {
+            let len = if want_costs {
+                1
+            } else if hungry {
                 STEAL_CHUNK.min(rem)
             } else {
                 (rem.div_ceil(2)).max(STEAL_CHUNK).min(rem)
@@ -680,27 +757,40 @@ fn drain_own_queue<M: SmcModel + Sync>(
             // Per-particle RNG streams (keyed by `run.base + global
             // offset`) make the chunked calls produce exactly the
             // single-call results.
-            let winc = model.step_population(
-                heap,
-                &mut run.states[i..i + len],
-                t,
-                seed,
-                observe,
-                run.base + i,
-                shard_ctx,
-            );
-            run.winc.extend(winc);
             if want_costs {
-                for j in i..i + len {
-                    run.hints.push(model.cost_hint(heap, &mut run.states[j]));
-                }
+                // One particle through the shared scoped core, so the
+                // donation poll above still runs between particles.
+                let (winc, costs) = (&mut run.winc, &mut run.costs);
+                step_scoped(
+                    model,
+                    heap,
+                    &mut run.states[i..i + 1],
+                    run.base + i,
+                    t,
+                    seed,
+                    observe,
+                    shard_ctx,
+                    |_, w, c| {
+                        winc.push(w);
+                        costs.push(c);
+                    },
+                );
+            } else {
+                let winc = model.step_population(
+                    heap,
+                    &mut run.states[i..i + len],
+                    t,
+                    seed,
+                    observe,
+                    run.base + i,
+                    shard_ctx,
+                );
+                run.winc.extend(winc);
             }
             i += len;
         }
         r_idx += 1;
     }
-    let ops1 = heap_ops(&heap.metrics);
-    t0.elapsed().as_secs_f64() + (ops1 - ops0) as f64 * OP_COST_S
 }
 
 /// Propagate + weight the population under the current assignment on the
@@ -712,9 +802,16 @@ fn drain_own_queue<M: SmcModel + Sync>(
 /// barrier — so `assign` is unchanged and output is bit-identical with
 /// stealing on or off. When `raw_cost` is given, it receives per-particle
 /// measured costs (NAN where the caller's slice prefix excludes a slot):
-/// home-shard cost apportioned by `cost_hint` over the particles the home
-/// worker kept, thief-measured cost over each stolen batch. Returns the
-/// global indices of stolen particles.
+/// *exact* scoped measurements for every home-kept particle, and the
+/// thief-measured batch cost apportioned by `cost_hint` within each
+/// stolen batch (the hint fallback — a batch is one measurement). Each
+/// reclaimed scratch heap's own peak is summed into the generation's
+/// scratch residency and folded into `scratch_peak_bytes` on shard 0, so
+/// steal-on transient bytes are accounted exactly. Reclaimed scratches
+/// are recycled into `scratch_pools` (one pool per home shard —
+/// `Heap::recycle_scratch` keeps chunks, slots, and labels), so repeat
+/// donations reuse storage instead of paying fresh system allocations.
+/// Returns the global indices of stolen particles.
 #[allow(clippy::too_many_arguments)]
 fn propagate_stealing<M: SmcModel + Sync>(
     model: &M,
@@ -728,6 +825,7 @@ fn propagate_stealing<M: SmcModel + Sync>(
     ctx: &StepCtx,
     steal_min: usize,
     mut raw_cost: Option<&mut [f64]>,
+    scratch_pools: &mut [Vec<Heap>],
 ) -> Vec<usize> {
     let k = shards.len();
     debug_assert!(k > 1, "stealing requires multiple shards");
@@ -741,6 +839,7 @@ fn propagate_stealing<M: SmcModel + Sync>(
     // One yard worker per OS worker: group shards contiguously so each
     // group is drained by exactly one worker, which then turns thief.
     let w = ctx.pool.n_threads().min(k).max(1);
+    debug_assert_eq!(scratch_pools.len(), k);
     let mut flat: Vec<StealWork<'_, M::State>> = shards
         .iter_mut()
         .zip(runs_by_shard)
@@ -749,7 +848,7 @@ fn propagate_stealing<M: SmcModel + Sync>(
             shard: s,
             heap,
             runs,
-            cost: 0.0,
+            spares: std::mem::take(&mut scratch_pools[s]),
         })
         .collect();
     let per = flat.len().div_ceil(w);
@@ -773,9 +872,9 @@ fn propagate_stealing<M: SmcModel + Sync>(
             kalman: None,
         };
         for work in group.iter_mut() {
-            work.cost = drain_own_queue(
+            drain_own_queue(
                 model, work.shard, work.heap, &mut work.runs, &yard, steal_min, t, seed,
-                observe, &shard_ctx, want_costs,
+                observe, &shard_ctx, want_costs, &mut work.spares,
             );
         }
         // Own queues drained: turn thief until the generation completes.
@@ -787,7 +886,7 @@ fn propagate_stealing<M: SmcModel + Sync>(
                 mut heap,
             } = b;
             let t0 = Instant::now();
-            let ops0 = heap_ops(&heap.metrics);
+            let scope = heap.begin_scope();
             let winc =
                 model.step_population(&mut heap, &mut states, t, seed, observe, base, &shard_ctx);
             let hints: Vec<f64> = if want_costs {
@@ -795,8 +894,8 @@ fn propagate_stealing<M: SmcModel + Sync>(
             } else {
                 Vec::new()
             };
-            let ops1 = heap_ops(&heap.metrics);
-            let cost = t0.elapsed().as_secs_f64() + (ops1 - ops0) as f64 * OP_COST_S;
+            let delta = heap.end_scope(scope);
+            let cost = scoped_cost(t0.elapsed().as_secs_f64(), &delta);
             done.lock().unwrap().push(FinishedBatch {
                 home,
                 base,
@@ -808,13 +907,13 @@ fn propagate_stealing<M: SmcModel + Sync>(
             });
         }
     });
-    // Collect home-side results; this also drops the shard borrows.
-    let mut home_cost = vec![0.0f64; k];
+    // Collect home-side results (and return unused spares to the pools);
+    // this also drops the shard borrows.
     let mut home_runs: Vec<Vec<ShardRun<M::State>>> = (0..k).map(|_| Vec::new()).collect();
     for group in groups {
-        for work in group {
-            home_cost[work.shard] = work.cost;
+        for mut work in group {
             home_runs[work.shard].extend(work.runs);
+            scratch_pools[work.shard].append(&mut work.spares);
         }
     }
     // Transplant stolen results back into their home shards — one
@@ -826,6 +925,12 @@ fn propagate_stealing<M: SmcModel + Sync>(
         heap: &'a mut Heap,
         batches: Vec<FinishedBatch<S>>,
         back: Vec<ReclaimedBatch<S>>,
+        /// Summed peak residency of the scratch heaps this shard
+        /// reclaimed (exact per scratch; see `scratch_peak_bytes`).
+        scratch_peak_sum: usize,
+        /// Drained scratch heaps, recycled for the shard's next
+        /// donations.
+        recycled: Vec<Heap>,
     }
     let mut finished = done.into_inner().unwrap();
     finished.sort_by_key(|b| (b.home, b.base));
@@ -840,6 +945,8 @@ fn propagate_stealing<M: SmcModel + Sync>(
             heap,
             batches,
             back: Vec::new(),
+            scratch_peak_sum: 0,
+            recycled: Vec::new(),
         })
         .collect();
     ctx.pool.for_shards(&mut reclaims, |_, rc| {
@@ -861,15 +968,19 @@ fn propagate_stealing<M: SmcModel + Sync>(
                 scratch.release(st);
             }
             scratch.sweep_memos();
+            rc.scratch_peak_sum += scratch.metrics.peak_bytes;
             rc.heap.absorb_counters(&scratch);
+            scratch.recycle_scratch();
+            rc.recycled.push(scratch);
             rc.back.push((base, back, winc, hints, cost));
         }
     });
-    // Scatter everything in global index order and apportion costs.
+    // Scatter everything in global index order; home-kept particles carry
+    // exact scoped costs, stolen batches apportion the thief's batch
+    // measurement by hint.
     let mut stolen_idx: Vec<usize> = Vec::new();
-    for (s, runs) in home_runs.into_iter().enumerate() {
-        // One measured cost per home shard, shared across all its runs.
-        let hint_sum = clamped_hint_sum(runs.iter().flat_map(|r| r.hints.iter()));
+    let mut gen_scratch = 0usize;
+    for runs in home_runs {
         for run in runs {
             debug_assert_eq!(run.states.len(), run.winc.len());
             let base = run.base;
@@ -877,14 +988,19 @@ fn propagate_stealing<M: SmcModel + Sync>(
                 lw[base + j] += w;
             }
             if let Some(rc) = raw_cost.as_deref_mut() {
-                apportion_cost(rc, base, home_cost[s], &run.hints, hint_sum);
+                debug_assert_eq!(run.costs.len(), run.states.len());
+                for (j, c) in run.costs.iter().enumerate() {
+                    rc[base + j] = *c;
+                }
             }
             for (j, st) in run.states.into_iter().enumerate() {
                 states[base + j] = st;
             }
         }
     }
-    for rc_item in reclaims {
+    for (s, mut rc_item) in reclaims.into_iter().enumerate() {
+        gen_scratch += rc_item.scratch_peak_sum;
+        scratch_pools[s].append(&mut rc_item.recycled);
         for (base, back, winc, hints, cost) in rc_item.back {
             let hint_sum = clamped_hint_sum(hints.iter());
             for (j, w) in winc.iter().enumerate() {
@@ -898,6 +1014,13 @@ fn propagate_stealing<M: SmcModel + Sync>(
                 stolen_idx.push(base + j);
             }
         }
+    }
+    // Fold this generation's summed scratch residency into the dedicated
+    // gauge (recorded on shard 0, like the barrier peak samples) — the
+    // bytes that lived in no shard's `peak_bytes` between donation and
+    // reclaim.
+    if gen_scratch > 0 {
+        shards[0].metrics.note_scratch_peak(gen_scratch);
     }
     stolen_idx.sort_unstable();
     stolen_idx
@@ -1056,11 +1179,12 @@ fn plan_and_resample<S: Payload>(
 /// shards, and returns the attempts made. Panics (deterministically, on
 /// the lowest slot) when a slot exhausts 10k attempts.
 ///
-/// When `raw_cost` is given, the per-shard generation cost (wall seconds
-/// + op charge, summed over rounds — retries included) is apportioned
-/// over the shard's slots by `cost_hint`, so the rebalancer's
-/// [`CostTracker`] learns CRBD-style retry skew and can migrate the
-/// expensive lineages at the next resampling barrier.
+/// When `raw_cost` is given, every *attempt* (retries included) is
+/// propagated in its own metrics scope, and each slot accumulates the
+/// exact measured cost of all its attempts this generation — so the
+/// rebalancer's [`CostTracker`] learns CRBD-style retry skew from exact
+/// per-particle measurements and can migrate the expensive lineages at
+/// the next resampling barrier.
 #[allow(clippy::too_many_arguments)]
 fn alive_generation<M: SmcModel + Sync>(
     model: &M,
@@ -1075,10 +1199,10 @@ fn alive_generation<M: SmcModel + Sync>(
 ) -> usize {
     let n = states.len();
     let k = shards.len();
+    let want_costs = raw_cost.is_some();
     let mut attempt = vec![0usize; n];
     let mut survivors: Vec<Lazy<M::State>> = vec![Lazy::NULL; n];
     let mut winc_out = vec![0.0f64; n];
-    let mut shard_cost = vec![0.0f64; k];
     let mut total_attempts = 0usize;
     struct AliveJob<S> {
         slot: usize,
@@ -1087,13 +1211,12 @@ fn alive_generation<M: SmcModel + Sync>(
         winc: f64,
         survived: bool,
         child: Lazy<S>,
+        /// Exact measured cost of this attempt (scoped; 0 unless asked).
+        cost: f64,
     }
     struct AliveTask<'a, S> {
-        shard: usize,
         heap: &'a mut Heap,
         jobs: Vec<AliveJob<S>>,
-        /// Measured round cost (out).
-        cost: f64,
     }
     // The pending set shrinks in place across rounds, so a long retry
     // tail costs O(pending) per round, not O(n).
@@ -1147,6 +1270,7 @@ fn alive_generation<M: SmcModel + Sync>(
                 winc: 0.0,
                 survived: false,
                 child: Lazy::NULL,
+                cost: 0.0,
             });
         }
         // Only shards with work get a task (and a worker): a retry tail
@@ -1155,19 +1279,12 @@ fn alive_generation<M: SmcModel + Sync>(
         let mut tasks: Vec<AliveTask<'_, M::State>> = shards
             .iter_mut()
             .zip(jobs_by_shard)
-            .enumerate()
-            .filter(|(_, (_, jobs))| !jobs.is_empty())
-            .map(|(s, (heap, jobs))| AliveTask {
-                shard: s,
-                heap,
-                jobs,
-                cost: 0.0,
-            })
+            .filter(|(_, jobs)| !jobs.is_empty())
+            .map(|(heap, jobs)| AliveTask { heap, jobs })
             .collect();
         pool.for_shards(&mut tasks, |_, task| {
-            let t0 = Instant::now();
-            let ops0 = heap_ops(&task.heap.metrics);
             for job in task.jobs.iter_mut() {
+                let scope = want_costs.then(|| (Instant::now(), task.heap.begin_scope()));
                 let mut child = task.heap.deep_copy(&job.parent);
                 let label = child.label();
                 let winc = task
@@ -1180,14 +1297,16 @@ fn alive_generation<M: SmcModel + Sync>(
                 } else {
                     task.heap.release(child);
                 }
+                if let Some((t0, scope)) = scope {
+                    let delta = task.heap.end_scope(scope);
+                    job.cost = scoped_cost(t0.elapsed().as_secs_f64(), &delta);
+                }
             }
-            let ops1 = heap_ops(&task.heap.metrics);
-            task.cost = t0.elapsed().as_secs_f64() + (ops1 - ops0) as f64 * OP_COST_S;
         });
-        // 4. Apply results in slot order (deterministic 10k bailout).
+        // 4. Apply results in slot order (deterministic 10k bailout);
+        //    every attempt's exact cost accumulates on its slot.
         let mut round: Vec<AliveJob<M::State>> = Vec::new();
         for task in tasks {
-            shard_cost[task.shard] += task.cost;
             round.extend(task.jobs);
         }
         round.sort_by_key(|job| job.slot);
@@ -1195,6 +1314,13 @@ fn alive_generation<M: SmcModel + Sync>(
             let i = job.slot;
             total_attempts += 1;
             attempt[i] += 1;
+            if let Some(rc) = raw_cost.as_deref_mut() {
+                if rc[i].is_nan() {
+                    rc[i] = job.cost;
+                } else {
+                    rc[i] += job.cost;
+                }
+            }
             if job.survived {
                 survivors[i] = job.child;
                 winc_out[i] = job.winc;
@@ -1217,26 +1343,6 @@ fn alive_generation<M: SmcModel + Sync>(
         lw[i] += winc_out[i];
         let parent = std::mem::replace(&mut states[i], survivors[i]);
         shards[assign[i]].release(parent);
-    }
-    // Cost feedback: apportion each shard's measured generation cost
-    // (rounds + retries) over its slots by cost hint. Slots are not
-    // contiguous per shard in general, so this is the per-slot form of
-    // [`apportion_cost`] with the same [`HINT_FLOOR`] convention.
-    if let Some(rc) = raw_cost.as_deref_mut() {
-        let mut hint = vec![0.0f64; n];
-        let mut hint_sum = vec![0.0f64; k];
-        for i in 0..n {
-            let mut s = states[i];
-            hint[i] = model.cost_hint(&mut shards[assign[i]], &mut s).max(HINT_FLOOR);
-            states[i] = s;
-            hint_sum[assign[i]] += hint[i];
-        }
-        for i in 0..n {
-            let s = assign[i];
-            if hint_sum[s] > 0.0 && shard_cost[s].is_finite() {
-                rc[i] = shard_cost[s] * hint[i] / hint_sum[s];
-            }
-        }
     }
     for h in shards.iter_mut() {
         h.sweep_memos();
@@ -1285,9 +1391,11 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
     let mut states = init_population(model, shards, ctx.pool, n, cfg.seed);
     let mut assign: Vec<usize> = (0..n).map(|i| shard_of(n, k, i)).collect();
     let mut tracker = CostTracker::new(n);
-    let mut shard_cost = vec![0.0f64; k];
-    let mut hints = vec![1.0f64; n];
     let mut raw_cost = vec![f64::NAN; n];
+    // Per-shard pools of recycled scratch heaps (work stealing): a
+    // reclaimed scratch keeps its chunks, so repeat donations reuse
+    // storage across generations.
+    let mut scratch_pools: Vec<Vec<Heap>> = (0..k).map(|_| Vec::new()).collect();
     let mut migrations = 0usize;
     let mut steals = 0usize;
     let mut lw = vec![0.0f64; n];
@@ -1405,6 +1513,7 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
                     ctx,
                     cfg.steal_min,
                     balancing.then_some(&mut raw_cost[..]),
+                    &mut scratch_pools,
                 );
                 if balancing {
                     for &i in &stolen {
@@ -1416,6 +1525,9 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
                 attempts += n;
             }
             _ => {
+                if balancing {
+                    raw_cost.iter_mut().for_each(|c| *c = f64::NAN);
+                }
                 propagate_assigned(
                     model,
                     shards,
@@ -1426,11 +1538,10 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
                     cfg.seed,
                     observe,
                     ctx,
-                    balancing.then_some(&mut shard_cost[..]),
-                    balancing.then_some(&mut hints[..]),
+                    balancing.then_some(&mut raw_cost[..]),
                 );
                 if balancing {
-                    tracker.update(&assign, &shard_cost, &hints);
+                    tracker.fold(&raw_cost);
                 }
                 attempts += n;
             }
@@ -1464,6 +1575,7 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
         } else {
             agg.global_peak_bytes
         },
+        scratch_peak_bytes: agg.scratch_peak_bytes,
         migrations,
         steals,
         series,
@@ -1518,9 +1630,10 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
     // Reference trajectory: handles for generations 0..=T (oldest first),
     // all owned by shard `s_ref`.
     let mut reference: Option<Vec<Lazy<M::State>>> = None;
-    let mut shard_cost = vec![0.0f64; k];
-    let mut hints = vec![1.0f64; n];
     let mut raw_cost = vec![f64::NAN; n];
+    // Recycled-scratch pools shared across the Gibbs iterations (the
+    // shards — and so the pooled scratches' mode/backend — are fixed).
+    let mut scratch_pools: Vec<Vec<Heap>> = (0..k).map(|_| Vec::new()).collect();
 
     for iter in 0..cfg.pg_iterations {
         let seed = cfg.seed.wrapping_add(iter as u64 * 0x9E37);
@@ -1583,6 +1696,7 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
                     ctx,
                     cfg.steal_min,
                     balancing.then_some(&mut raw_cost[..split]),
+                    &mut scratch_pools,
                 );
                 if balancing {
                     for &i in &stolen {
@@ -1592,6 +1706,9 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
                 }
                 steals += stolen.len();
             } else {
+                if balancing {
+                    raw_cost[..split].iter_mut().for_each(|c| *c = f64::NAN);
+                }
                 propagate_assigned(
                     model,
                     shards,
@@ -1602,11 +1719,10 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
                     seed,
                     true,
                     ctx,
-                    balancing.then_some(&mut shard_cost[..]),
-                    balancing.then_some(&mut hints[..split]),
+                    balancing.then_some(&mut raw_cost[..split]),
                 );
                 if balancing {
-                    tracker.update(&assign[..split], &shard_cost, &hints[..split]);
+                    tracker.fold(&raw_cost[..split]);
                 }
             }
             if let Some(r) = &reference {
@@ -1671,6 +1787,7 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
             } else {
                 agg.global_peak_bytes
             },
+            scratch_peak_bytes: agg.scratch_peak_bytes,
             migrations,
             steals,
             series,

@@ -7,12 +7,17 @@
 //! while others grind. This module closes that gap with three pieces:
 //!
 //! 1. **Cost accounting** ([`CostTracker`]): a per-particle EWMA cost
-//!    estimate fed by the measured per-shard generation cost (wall time
-//!    plus a charge per heap operation — allocs, copies, pulls — from the
-//!    [`HeapMetrics`](crate::heap::HeapMetrics) deltas), apportioned
-//!    within a shard by the model's [`cost_hint`]
-//!    (crate::smc::SmcModel::cost_hint) (e.g. PCFG stack depth, MOT track
-//!    count). Offspring inherit their ancestor's estimate at resampling.
+//!    estimate fed by *exact* per-particle measurements — each particle's
+//!    propagation is bracketed in a heap metrics scope
+//!    ([`Heap::begin_scope`](crate::heap::Heap::begin_scope)), yielding
+//!    its wall time plus a charge per heap operation (allocs, copies,
+//!    pulls) from the exact
+//!    [`HeapMetrics`](crate::heap::HeapMetrics) delta. Where only a
+//!    batch-granular measurement exists (a thief's stolen batch), the
+//!    cost is apportioned within the batch by the model's
+//!    [`cost_hint`](crate::smc::SmcModel::cost_hint) (e.g. PCFG stack
+//!    depth, MOT track count) — the hint fallback. Offspring inherit
+//!    their ancestor's estimate at resampling.
 //! 2. **Planning** ([`plan_offspring`]): at each resampling step a greedy
 //!    longest-processing-time pass assigns offspring to shards, biased to
 //!    keep offspring on their ancestor's shard and migrating only when
@@ -168,13 +173,19 @@ impl CostTracker {
         }
     }
 
-    /// Fold one measured generation back into the estimates. `assign[i]`
-    /// is particle `i`'s shard, `shard_cost[s]` the measured cost of
-    /// shard `s`'s generation (seconds + op charge), and `hints[i]` the
-    /// model's relative per-particle weight used to apportion a shard's
-    /// cost among its particles. Slices may cover a prefix of the
-    /// population (particle Gibbs pins the last slot); untouched slots
-    /// keep their previous estimate.
+    /// Fold one measured generation back into the estimates by
+    /// *hint apportioning* — the fallback cost feed for callers that only
+    /// have shard-granular measurements. (The engine's propagation paths
+    /// now measure per particle with heap metrics scopes and use
+    /// [`CostTracker::fold`] directly; hint apportioning remains for
+    /// batch-granular measurements such as stolen batches, and for
+    /// external callers without scopes.) `assign[i]` is particle `i`'s
+    /// shard, `shard_cost[s]` the measured cost of shard `s`'s generation
+    /// (seconds + op charge), and `hints[i]` the model's relative
+    /// per-particle weight used to apportion a shard's cost among its
+    /// particles. Slices may cover a prefix of the population (particle
+    /// Gibbs pins the last slot); untouched slots keep their previous
+    /// estimate.
     pub fn update(&mut self, assign: &[usize], shard_cost: &[f64], hints: &[f64]) {
         debug_assert_eq!(assign.len(), hints.len());
         let k = shard_cost.len();

@@ -2,11 +2,13 @@
 //!
 //! [`assert_bitwise_equiv`] is a reusable runner that sweeps the full
 //! scheduling matrix — K ∈ {1, 2, 4} × rebalance policy × steal on/off ×
-//! copy mode — against the K = 1 / steal-off / policy-off oracle and
+//! copy mode, plus the payload-allocator axis (`system` vs the default
+//! `slab`) — against the K = 1 / steal-off / policy-off oracle and
 //! demands *bitwise* equality of `log_evidence` and `posterior_mean`
 //! (plus equal attempt counts, zero leaks, per-shard alloc/free balance,
-//! and the global-peak ≤ sum-of-peaks invariant) in every cell. It
-//! replaces the ad-hoc matrix that used to live in `tests/sharded.rs`.
+//! slab-gauge consistency, and the global-peak ≤ sum-of-peaks invariant)
+//! in every cell. It replaces the ad-hoc matrix that used to live in
+//! `tests/sharded.rs`.
 //!
 //! Three workloads cover every propagation path: LGSS (bootstrap, the
 //! exact-Kalman oracle model), PCFG (auxiliary PF with lookahead
@@ -14,7 +16,7 @@
 //! under the per-slot retry-stream contract v2).
 
 use lazycow::config::{Model, RunConfig, Task};
-use lazycow::heap::{CopyMode, ShardedHeap};
+use lazycow::heap::{AllocatorKind, CopyMode, ShardedHeap, CHUNK_BYTES};
 use lazycow::models::{Crbd, ListModel, Pcfg};
 use lazycow::pool::ThreadPool;
 use lazycow::smc::{run_filter_shards, Method, RebalancePolicy, SmcModel, StepCtx};
@@ -39,16 +41,46 @@ fn run_cell<M: SmcModel + Sync>(
     k: usize,
     label: &str,
 ) -> Fingerprint {
-    let mut sh = ShardedHeap::new(cfg.mode, k);
+    let mut sh = ShardedHeap::with_allocator(cfg.mode, k, cfg.allocator);
     let r = run_filter_shards(model, cfg, sh.shards_mut(), &ctx(pool), method);
     // Structural invariants hold in every cell, not just the oracle.
     assert_eq!(sh.live_objects(), 0, "{label}: leaked live objects");
     for (s, h) in sh.shards().iter().enumerate() {
+        let m = &h.metrics;
         assert_eq!(
-            h.metrics.total_allocs,
-            h.metrics.total_frees + h.metrics.live_objects,
+            m.total_allocs,
+            m.total_frees + m.live_objects,
             "{label}: shard {s} alloc/free/live balance broken"
         );
+        // Slab-gauge consistency: every payload allocation takes exactly
+        // one source, freed blocks stop counting as live, and committed
+        // bytes track the chunk count.
+        assert_eq!(
+            m.slab_freelist_hits + m.slab_fresh_bumps + m.slab_large_allocs,
+            m.total_allocs,
+            "{label}: shard {s} slab alloc sources do not cover total_allocs"
+        );
+        assert_eq!(
+            m.slab_live_block_bytes, 0,
+            "{label}: shard {s} slab blocks outlive their objects"
+        );
+        assert_eq!(
+            m.slab_committed_bytes,
+            m.slab_chunks * CHUNK_BYTES,
+            "{label}: shard {s} committed bytes disagree with chunk count"
+        );
+        match cfg.allocator {
+            AllocatorKind::System => {
+                assert_eq!(m.slab_chunks, 0, "{label}: system backend committed chunks");
+                assert_eq!(m.slab_freelist_hits, 0, "{label}: system backend hit a free list");
+            }
+            AllocatorKind::Slab => {
+                assert_eq!(
+                    m.slab_large_allocs, 0,
+                    "{label}: shard {s} model payloads must fit the size classes"
+                );
+            }
+        }
     }
     assert!(
         r.global_peak_bytes <= r.peak_bytes,
@@ -121,6 +153,30 @@ fn assert_bitwise_equiv<M: SmcModel + Sync>(
                     );
                     let got = run_cell(model, &cfg, method, &pool, k, &label);
                     assert_eq!(got, oracle, "{label}: output diverged from oracle");
+                }
+            }
+        }
+        // Payload-allocator axis: the matrix above runs on the default
+        // `slab` backend; sweep `system` over K × steal on/off (policy
+        // greedy) in one copy mode and demand the same oracle — the
+        // allocator must never change what is computed. One mode
+        // suffices: the allocator sits below the copy machinery, and the
+        // cross-mode oracle equality above covers the rest.
+        if mode == CopyMode::LazySro {
+            for k in [1usize, 2, 4] {
+                for steal in [false, true] {
+                    let mut cfg = base_cfg.clone();
+                    cfg.mode = mode;
+                    cfg.allocator = AllocatorKind::System;
+                    cfg.rebalance = RebalancePolicy::Greedy;
+                    cfg.steal = steal;
+                    cfg.steal_min = 2;
+                    let label = format!(
+                        "{name}/{mode:?}/system-alloc/K={k}/steal={}",
+                        if steal { "on" } else { "off" }
+                    );
+                    let got = run_cell(model, &cfg, method, &pool, k, &label);
+                    assert_eq!(got, oracle, "{label}: allocator changed the output");
                 }
             }
         }
