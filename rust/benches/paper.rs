@@ -13,7 +13,10 @@
 //!   rebalance  rebalance-policy sweep (off/greedy/budget, K = 4) on the
 //!              skewed PCFG workload, JSON per cell
 //!   alloc      payload-allocator sweep (system vs slab) on the
-//!              resampling-churn workloads (VBD, PCFG), JSON per cell
+//!              resampling-churn workloads (VBD, PCFG), JSON per cell,
+//!              plus the long-run churn cell asserting committed
+//!              residency stays bounded with decommit on (and monotone
+//!              with it off)
 //!
 //! Environment: LAZYCOW_REPS (default 5), LAZYCOW_SCALE=default|paper.
 
@@ -578,6 +581,7 @@ fn bench_alloc(backend: &Backend) {
             cfg.allocator = kind;
             let n_particles = cfg.n_particles;
             let t_steps = cfg.n_steps;
+            let cfg_decommit_off = cfg.clone();
             let mut evidence_bits = 0u64;
             let mut metrics = lazycow::heap::HeapMetrics::default();
             let mut peak = 0usize;
@@ -621,10 +625,25 @@ fn bench_alloc(backend: &Backend) {
                     "{}: resampling churn produced no free-list reuse",
                     model.name()
                 );
+                // Decommit bit-identity: the same slab cell with the
+                // watermark off must compute the same evidence — decommit
+                // only changes where chunk memory lives.
+                let mut c_off = cfg_decommit_off.clone();
+                c_off.seed = 20200401u64;
+                c_off.decommit_watermark = None;
+                let mut heap = ShardedHeap::with_allocator(c_off.mode, 1, kind);
+                let r_off = run_model(&c_off, &mut heap, &backend.ctx());
+                assert_eq!(
+                    r_off.log_evidence.to_bits(),
+                    evidence_bits,
+                    "{}: decommit-off changed the output",
+                    model.name()
+                );
+                assert_eq!(heap.metrics().decommitted_chunks, 0);
             }
             let allocs_per_s = metrics.total_allocs as f64 / cell.time_median.max(1e-9);
             println!(
-                "{{\"section\":\"alloc\",\"model\":\"{}\",\"allocator\":\"{}\",\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"time_q1_s\":{:.6},\"time_q3_s\":{:.6},\"speedup_vs_system\":{:.4},\"total_allocs\":{},\"allocs_per_s\":{:.0},\"peak_bytes\":{},\"freelist_hits\":{},\"fresh_bumps\":{},\"large_allocs\":{},\"hit_rate\":{:.4},\"chunks\":{},\"committed_bytes\":{},\"fragmentation\":{:.4}}}",
+                "{{\"section\":\"alloc\",\"model\":\"{}\",\"allocator\":\"{}\",\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"time_q1_s\":{:.6},\"time_q3_s\":{:.6},\"speedup_vs_system\":{:.4},\"total_allocs\":{},\"allocs_per_s\":{:.0},\"peak_bytes\":{},\"freelist_hits\":{},\"fresh_bumps\":{},\"large_allocs\":{},\"hit_rate\":{:.4},\"chunks\":{},\"committed_bytes\":{},\"fragmentation\":{:.4},\"raw_allocs\":{},\"raw_frees\":{},\"decommitted_chunks\":{},\"decommitted_bytes\":{}}}",
                 model.name(),
                 kind.name(),
                 threads,
@@ -647,8 +666,95 @@ fn bench_alloc(backend: &Backend) {
                 metrics.slab_chunks,
                 metrics.slab_committed_bytes,
                 metrics.slab_fragmentation(),
+                metrics.slab_raw_allocs,
+                metrics.slab_raw_frees,
+                metrics.decommitted_chunks,
+                metrics.decommitted_bytes,
             );
         }
+    }
+}
+
+/// Long-run churn cell of the `alloc` section: alternating allocation
+/// spikes and low-residency phases on one heap, decommit on (the default
+/// keep-2 watermark) vs off. Asserts the decommit run's committed bytes
+/// stay *bounded* — spike chunks are returned at the barriers, with
+/// `decommitted_chunks > 0` — while the off run's committed bytes are
+/// *monotone* (they equal the high-water mark forever). Emits one JSON
+/// record per setting so the residency trajectory is machine-readable.
+fn bench_alloc_churn() {
+    use lazycow::heap::DEFAULT_DECOMMIT_WATERMARK;
+    println!("\n== Allocator long-run churn: committed residency, decommit on vs off ==");
+    let rounds = 40usize;
+    for watermark in [Some(DEFAULT_DECOMMIT_WATERMARK), None] {
+        let mut heap = Heap::new(CopyMode::LazySro);
+        let mut peak_committed = 0usize;
+        let mut final_committed = 0usize;
+        let start = std::time::Instant::now();
+        for round in 0..rounds {
+            // A spike every 8 rounds commits an order of magnitude more
+            // chunks than the steady state needs.
+            let spike = if round % 8 == 0 { 3000 } else { 100 };
+            let mut roots = Vec::new();
+            for i in 0..spike {
+                let mut head = heap.alloc(Node {
+                    value: i as i64,
+                    next: Lazy::NULL,
+                });
+                for j in 1..8 {
+                    let new = heap.alloc(Node {
+                        value: j,
+                        next: head,
+                    });
+                    heap.release(head);
+                    head = new;
+                }
+                roots.push(head);
+            }
+            for r in roots {
+                heap.release(r);
+            }
+            heap.sweep_memos();
+            if let Some(w) = watermark {
+                heap.trim(w);
+            }
+            peak_committed = peak_committed.max(heap.metrics.slab_committed_bytes);
+            final_committed = heap.metrics.slab_committed_bytes;
+        }
+        let m = heap.metrics;
+        let name = if watermark.is_some() { "on" } else { "off" };
+        match watermark {
+            Some(_) => {
+                assert!(
+                    m.decommitted_chunks > 0,
+                    "spiky churn past the watermark must decommit chunks"
+                );
+                assert!(
+                    final_committed < peak_committed,
+                    "decommit on: committed bytes must drop back after spikes \
+                     ({final_committed} vs peak {peak_committed})"
+                );
+            }
+            None => {
+                assert_eq!(m.decommitted_chunks, 0);
+                assert_eq!(
+                    final_committed, peak_committed,
+                    "decommit off: committed bytes are monotone"
+                );
+            }
+        }
+        println!(
+            "{{\"section\":\"alloc\",\"cell\":\"churn\",\"decommit\":\"{}\",\"rounds\":{},\"wall_s\":{:.4},\"peak_committed_bytes\":{},\"final_committed_bytes\":{},\"decommitted_chunks\":{},\"decommitted_bytes\":{},\"freelist_hits\":{},\"raw_allocs\":{}}}",
+            name,
+            rounds,
+            start.elapsed().as_secs_f64(),
+            peak_committed,
+            final_committed,
+            m.decommitted_chunks,
+            m.decommitted_bytes,
+            m.slab_freelist_hits,
+            m.slab_raw_allocs,
+        );
     }
 }
 
@@ -712,7 +818,10 @@ fn main() {
             "resamplers" => bench_resamplers(),
             "shards" => bench_shards(&backend),
             "rebalance" => bench_rebalance(&backend),
-            "alloc" => bench_alloc(&backend),
+            "alloc" => {
+                bench_alloc(&backend);
+                bench_alloc_churn();
+            }
             other => eprintln!("unknown section {other}"),
         }
     }

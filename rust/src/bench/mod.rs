@@ -2,7 +2,7 @@
 //! reports medians + interquartile ranges over repetitions, which this
 //! harness produces directly).
 //!
-//! [`Bench`] runs a closure for a number of repetitions, measuring wall
+//! [`run_cell`] runs a closure for a number of repetitions, measuring wall
 //! time and the process peak RSS delta, and emits aligned tables and TSV
 //! for downstream plotting.
 
@@ -12,6 +12,7 @@ use std::time::Instant;
 /// One measured repetition.
 #[derive(Clone, Debug)]
 pub struct Sample {
+    /// Wall seconds of the repetition.
     pub seconds: f64,
     /// Peak heap footprint reported by the workload (bytes), if any.
     pub peak_bytes: Option<f64>,
@@ -20,17 +21,26 @@ pub struct Sample {
 /// Aggregated result of a benchmark cell.
 #[derive(Clone, Debug)]
 pub struct CellResult {
+    /// Cell label (e.g. `rbpf/lazy-sro`).
     pub name: String,
+    /// Repetitions measured.
     pub reps: usize,
+    /// Median wall seconds.
     pub time_median: f64,
+    /// First-quartile wall seconds.
     pub time_q1: f64,
+    /// Third-quartile wall seconds.
     pub time_q3: f64,
+    /// Median peak bytes (when every rep reported one).
     pub mem_median: Option<f64>,
+    /// First-quartile peak bytes.
     pub mem_q1: Option<f64>,
+    /// Third-quartile peak bytes.
     pub mem_q3: Option<f64>,
 }
 
 impl CellResult {
+    /// Aggregate raw samples into medians and quartiles.
     pub fn from_samples(name: &str, samples: &[Sample]) -> Self {
         let times: Vec<f64> = samples.iter().map(|s| s.seconds).collect();
         let (tm, t1, t3) = median_iqr(&times);
@@ -53,10 +63,12 @@ impl CellResult {
         }
     }
 
+    /// Header row matching [`CellResult::tsv_row`].
     pub fn tsv_header() -> &'static str {
         "cell\treps\ttime_median_s\ttime_q1_s\ttime_q3_s\tmem_median_b\tmem_q1_b\tmem_q3_b"
     }
 
+    /// One TSV row for downstream plotting.
     pub fn tsv_row(&self) -> String {
         format!(
             "{}\t{}\t{:.6}\t{:.6}\t{:.6}\t{}\t{}\t{}",
@@ -71,6 +83,7 @@ impl CellResult {
         )
     }
 
+    /// Human-readable aligned row for terminal output.
     pub fn pretty_row(&self) -> String {
         let mem = match (self.mem_median, self.mem_q1, self.mem_q3) {
             (Some(m), Some(a), Some(b)) => format!(

@@ -5,42 +5,55 @@
 
 use std::collections::BTreeMap;
 
+/// One declared flag: name, help text, optional default, and whether it
+/// is boolean (present = true, no value consumed).
 #[derive(Clone, Debug)]
 pub struct FlagSpec {
+    /// Flag name without the leading `--`.
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Default value applied when the flag is absent (`None` for bools).
     pub default: Option<String>,
+    /// Boolean flag: presence alone sets it to `"true"`.
     pub is_bool: bool,
 }
 
 /// Parsed arguments: subcommand + flag map.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// The positional subcommand, if one was given.
     pub command: Option<String>,
     values: BTreeMap<String, String>,
 }
 
 impl Args {
+    /// Value of a flag (default-filled), if set.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Value of a flag, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Flag value parsed as `usize` (None if absent or unparsable).
     pub fn get_usize(&self, name: &str) -> Option<usize> {
         self.get(name).and_then(|v| v.parse().ok())
     }
 
+    /// Flag value parsed as `u64` (None if absent or unparsable).
     pub fn get_u64(&self, name: &str) -> Option<u64> {
         self.get(name).and_then(|v| v.parse().ok())
     }
 
+    /// Flag value parsed as `f64` (None if absent or unparsable).
     pub fn get_f64(&self, name: &str) -> Option<f64> {
         self.get(name).and_then(|v| v.parse().ok())
     }
 
+    /// Boolean flag state (`true`/`1`/`yes` count as set).
     pub fn get_bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
@@ -48,16 +61,24 @@ impl Args {
 
 /// A command-line interface definition.
 pub struct Cli {
+    /// Program name shown in help.
     pub program: &'static str,
+    /// One-line program description.
     pub about: &'static str,
+    /// Declared subcommands as (name, help) pairs.
     pub commands: Vec<(&'static str, &'static str)>,
+    /// Declared flags.
     pub flags: Vec<FlagSpec>,
 }
 
+/// Why parsing an argument vector failed.
 #[derive(Debug, PartialEq)]
 pub enum CliError {
+    /// A `--flag` that was never declared.
     UnknownFlag(String),
+    /// A non-boolean flag at the end of the argument list.
     MissingValue(String),
+    /// `--help`/`-h` was given; print the help text and exit.
     HelpRequested,
 }
 
@@ -72,6 +93,7 @@ impl std::fmt::Display for CliError {
 }
 
 impl Cli {
+    /// An interface with no commands or flags yet (builder style).
     pub fn new(program: &'static str, about: &'static str) -> Self {
         Cli {
             program,
@@ -81,11 +103,13 @@ impl Cli {
         }
     }
 
+    /// Declare a subcommand.
     pub fn command(mut self, name: &'static str, help: &'static str) -> Self {
         self.commands.push((name, help));
         self
     }
 
+    /// Declare a value flag with a default.
     pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
         self.flags.push(FlagSpec {
             name,
@@ -96,6 +120,7 @@ impl Cli {
         self
     }
 
+    /// Declare a boolean flag (presence = true).
     pub fn bool_flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.flags.push(FlagSpec {
             name,
@@ -106,6 +131,7 @@ impl Cli {
         self
     }
 
+    /// Generated `--help` text: usage, commands, and flags with defaults.
     pub fn help_text(&self) -> String {
         use std::fmt::Write;
         let mut s = String::new();

@@ -12,16 +12,22 @@ use std::collections::BTreeMap;
 /// Which §4 problem to run.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Model {
+    /// Rao-Blackwellized particle filter (mixed linear/nonlinear SSM).
     Rbpf,
+    /// Probabilistic context-free grammar (auxiliary PF, ragged stacks).
     Pcfg,
+    /// Vector-borne disease compartment model (particle Gibbs).
     Vbd,
+    /// Multi-object tracking (variable track sets).
     Mot,
+    /// Constant-rate birth-death phylogenetics (alive PF).
     Crbd,
     /// The Table 1/2 linked-list microbenchmark model.
     List,
 }
 
 impl Model {
+    /// Parse a model name as accepted by `--model`.
     pub fn parse(s: &str) -> Option<Model> {
         match s.to_ascii_lowercase().as_str() {
             "rbpf" => Some(Model::Rbpf),
@@ -34,6 +40,7 @@ impl Model {
         }
     }
 
+    /// Canonical lowercase name (CLI/bench labels).
     pub fn name(self) -> &'static str {
         match self {
             Model::Rbpf => "rbpf",
@@ -78,11 +85,14 @@ impl Model {
 /// copies and isolates lazy-pointer overhead).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Task {
+    /// Condition on observations; resample (the copy-heavy task).
     Inference,
+    /// Sample forward without conditioning (no copies; Figure 6).
     Simulation,
 }
 
 impl Task {
+    /// Parse a task name as accepted by `--task`.
     pub fn parse(s: &str) -> Option<Task> {
         match s.to_ascii_lowercase().as_str() {
             "inference" | "infer" => Some(Task::Inference),
@@ -91,6 +101,7 @@ impl Task {
         }
     }
 
+    /// Canonical lowercase name (CLI/bench labels).
     pub fn name(self) -> &'static str {
         match self {
             Task::Inference => "inference",
@@ -102,8 +113,11 @@ impl Task {
 /// A fully-specified run.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// Which evaluation problem to run.
     pub model: Model,
+    /// Inference or simulation.
     pub task: Task,
+    /// Copy mode of every heap in the run.
     pub mode: CopyMode,
     /// Number of particles N.
     pub n_particles: usize,
@@ -147,6 +161,17 @@ pub struct RunConfig {
     /// differential baseline). Outputs are bit-identical either way; only
     /// where payload bytes live changes.
     pub allocator: AllocatorKind,
+    /// Slab decommit watermark (`--decommit-watermark`): at each
+    /// generation barrier, fully-empty slab chunks beyond this many per
+    /// size class are returned to the system allocator
+    /// ([`Heap::trim`](crate::heap::Heap::trim)), bounding long-run
+    /// committed residency. `None` (flag value `off`) disables decommit —
+    /// committed bytes then track the high-water mark for the life of
+    /// the heap. Outputs are bit-identical either way; only where chunk
+    /// memory lives changes. Default: keep
+    /// [`DEFAULT_DECOMMIT_WATERMARK`](crate::heap::DEFAULT_DECOMMIT_WATERMARK)
+    /// chunks.
+    pub decommit_watermark: Option<usize>,
     /// ESS-fraction resampling trigger (1.0 = always resample, the paper's
     /// setting for the memory-pattern evaluation).
     pub ess_threshold: f64,
@@ -176,6 +201,7 @@ impl Default for RunConfig {
             steal: true,
             steal_min: 4,
             allocator: AllocatorKind::Slab,
+            decommit_watermark: Some(crate::heap::DEFAULT_DECOMMIT_WATERMARK),
             ess_threshold: 1.0,
             pg_iterations: 3,
             use_xla: true,
@@ -235,6 +261,14 @@ impl RunConfig {
                 self.allocator = AllocatorKind::parse(value)
                     .ok_or(format!("bad allocator {value} (system|slab)"))?
             }
+            "decommit-watermark" | "decommit_watermark" => {
+                self.decommit_watermark = match value.to_ascii_lowercase().as_str() {
+                    "off" | "none" | "never" => None,
+                    v => Some(v.parse().map_err(|e| {
+                        format!("bad decommit watermark {value} (integer or off): {e}")
+                    })?),
+                }
+            }
             "ess" => self.ess_threshold = value.parse().map_err(|e| format!("{e}"))?,
             "pg-iterations" | "pg_iterations" => {
                 self.pg_iterations = value.parse().map_err(|e| format!("{e}"))?
@@ -256,6 +290,7 @@ impl RunConfig {
         }
     }
 
+    /// Human-readable cell label, e.g. `rbpf/inference/lazy-sro N=256 T=150`.
     pub fn label(&self) -> String {
         format!(
             "{}/{}/{} N={} T={}",
@@ -347,6 +382,16 @@ mod tests {
         assert_eq!(c.allocator, AllocatorKind::System);
         c.apply("alloc", "slab").unwrap();
         assert_eq!(c.allocator, AllocatorKind::Slab);
+        assert_eq!(
+            c.decommit_watermark,
+            Some(crate::heap::DEFAULT_DECOMMIT_WATERMARK),
+            "decommit defaults on at the keep-2 watermark"
+        );
+        c.apply("decommit-watermark", "off").unwrap();
+        assert_eq!(c.decommit_watermark, None);
+        c.apply("decommit_watermark", "5").unwrap();
+        assert_eq!(c.decommit_watermark, Some(5));
+        assert!(c.apply("decommit-watermark", "many").is_err());
         assert!(c.apply("allocator", "arena").is_err());
         assert!(c.apply("steal", "maybe").is_err());
         assert!(c.apply("rebalance", "bogus").is_err());

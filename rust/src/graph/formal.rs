@@ -8,15 +8,20 @@
 
 use std::collections::HashMap;
 
+/// Vertex id of the small formal graphs.
 pub type V = usize;
+/// Label id of the small formal graphs.
 pub type L = usize;
 
 /// An edge of G: source, target, and the label list `g(e)` — the deep-copy
 /// operations the target is yet to be propagated through (Def. 2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct GEdge {
+    /// Source vertex `s(e)`.
     pub src: V,
+    /// Target vertex `t(e)`.
     pub tgt: V,
+    /// Label list `g(e)`, outermost copy first.
     pub labels: Vec<L>,
 }
 
@@ -39,6 +44,7 @@ pub struct G {
 }
 
 impl G {
+    /// A graph with just the root vertex and root label.
     pub fn new() -> Self {
         let mut g = G::default();
         g.b.push(0); // root vertex
@@ -48,6 +54,7 @@ impl G {
         g
     }
 
+    /// Add a vertex with payload `b(v)` and creating label `f(v)`.
     pub fn add_vertex(&mut self, payload: i64, label: L) -> V {
         self.b.push(payload);
         self.read_only.push(false);
@@ -55,6 +62,7 @@ impl G {
         self.b.len() - 1
     }
 
+    /// Add an edge with label list `g(e)`; returns its index.
     pub fn add_edge(&mut self, src: V, tgt: V, labels: Vec<L>) -> usize {
         self.edges.push(GEdge { src, tgt, labels });
         self.edges.len() - 1
@@ -112,17 +120,24 @@ impl G {
 /// An edge of H: a single label `h(e)` (Def. 3).
 #[derive(Clone, Debug, PartialEq)]
 pub struct HEdge {
+    /// Source vertex `s(e)`.
     pub src: V,
+    /// Target vertex `t(e)`.
     pub tgt: V,
+    /// The single label `h(e)`.
     pub label: L,
 }
 
 /// The labeled multigraph H = (V, E, s, t, b, R, L, m, f, h, a) (Def. 3).
 #[derive(Clone, Default)]
 pub struct H {
+    /// Payload data b(v).
     pub b: Vec<i64>,
+    /// Read-only set R (indexed by vertex).
     pub read_only: Vec<bool>,
+    /// Creating label f(v).
     pub f: Vec<L>,
+    /// Edges (vertex 0 is the root).
     pub edges: Vec<HEdge>,
     /// Label tree: a(l) = parent of l (Def. 3); a[0] is the root label,
     /// represented as its own parent.
@@ -130,6 +145,7 @@ pub struct H {
 }
 
 impl H {
+    /// A graph with just the root vertex and root label.
     pub fn new() -> Self {
         let mut h = H::default();
         h.b.push(0);
@@ -139,6 +155,7 @@ impl H {
         h
     }
 
+    /// Add a vertex with payload `b(v)` and creating label `f(v)`.
     pub fn add_vertex(&mut self, payload: i64, label: L) -> V {
         self.b.push(payload);
         self.read_only.push(false);
@@ -146,11 +163,13 @@ impl H {
         self.b.len() - 1
     }
 
+    /// Mint a fresh label as a child of `parent` in the label tree `a`.
     pub fn new_label(&mut self, parent: L) -> L {
         self.a.push(parent);
         self.a.len() - 1
     }
 
+    /// Add an edge with single label `h(e)`.
     pub fn add_edge(&mut self, src: V, tgt: V, label: L) {
         self.edges.push(HEdge { src, tgt, label });
     }

@@ -9,6 +9,7 @@
 
 use std::collections::HashMap;
 
+/// Oracle node id (stable; nodes are never reclaimed).
 pub type OId = usize;
 
 #[derive(Clone, Default)]
@@ -24,10 +25,12 @@ pub struct Oracle {
 }
 
 impl Oracle {
+    /// An empty oracle graph.
     pub fn new() -> Self {
         Oracle::default()
     }
 
+    /// Allocate a node with the given payload and no children.
     pub fn alloc(&mut self, value: i64) -> OId {
         self.nodes.push(ONode {
             value,
@@ -36,30 +39,37 @@ impl Oracle {
         self.nodes.len() - 1
     }
 
+    /// The node's payload.
     pub fn value(&self, id: OId) -> i64 {
         self.nodes[id].value
     }
 
+    /// Overwrite the node's payload.
     pub fn set_value(&mut self, id: OId, v: i64) {
         self.nodes[id].value = v;
     }
 
+    /// The node's child list.
     pub fn children(&self, id: OId) -> &[OId] {
         &self.nodes[id].children
     }
 
+    /// Number of children.
     pub fn n_children(&self, id: OId) -> usize {
         self.nodes[id].children.len()
     }
 
+    /// The `i`-th child.
     pub fn child(&self, id: OId, i: usize) -> OId {
         self.nodes[id].children[i]
     }
 
+    /// Append a child edge.
     pub fn push_child(&mut self, id: OId, c: OId) {
         self.nodes[id].children.push(c);
     }
 
+    /// Remove and return the last child edge.
     pub fn pop_child(&mut self, id: OId) -> Option<OId> {
         self.nodes[id].children.pop()
     }

@@ -1,4 +1,5 @@
-//! Payload storage: the size-class slab allocator behind every [`Heap`].
+//! Payload storage: the size-class slab allocator behind every
+//! [`Heap`](super::Heap).
 //!
 //! The paper's contribution is dynamic memory management for the
 //! allocate/copy/mutate/free churn of particle populations, yet a naive
@@ -28,11 +29,26 @@
 //! through the owning heap's `SlabAlloc` (placement-clone, placement-move
 //! from a `Box`, or direct placement-write of a typed value — see the
 //! [`Payload`] trait's placement methods), and all deallocation returns
-//! through [`SlabAlloc::dealloc`], which runs the payload's destructor in
+//! through `SlabAlloc::dealloc`, which runs the payload's destructor in
 //! place and pushes the block onto its class's free list. Dropping a
 //! `PBox` outside the allocator (heap teardown) still runs the destructor
 //! and frees exact-layout memory; a slab block simply stays with its
 //! chunk, which the allocator frees wholesale on drop.
+//!
+//! **Raw (metadata) storage.** Payloads are not the only per-heap
+//! structures that churn every generation: memo-table bucket arrays
+//! rehash on growth and are freed wholesale on label death, and the label
+//! slot vector grows with the lineage population. `SlabAlloc::alloc_raw`
+//! / `SlabAlloc::free_raw` serve plain byte blocks from the *same* size
+//! classes (exact-layout fallback for buckets over the largest class), and
+//! `SlabVec` plus the memo module's bucket store route those structures
+//! through them — so a memo rehash frees a 1 KiB block and the next 1 KiB
+//! rehash anywhere in the heap reuses it, closing the last per-generation
+//! system-allocator traffic. Raw allocations are accounted separately from
+//! payload allocations (see the `slab_raw_*` fields of
+//! [`HeapMetrics`](super::HeapMetrics)), through the crate-internal
+//! `RawCtx` handle that pairs the allocator with the owning heap's
+//! metrics.
 //!
 //! **Scratch heaps** (work-stealing donations) get a *bump-only*
 //! allocator ([`SlabAlloc::scratch`]): they drain completely at every
@@ -40,11 +56,27 @@
 //! about to be released en masse is wasted work — frees only run the
 //! destructor, and the storage is reclaimed in bulk when the scratch heap
 //! drops (or recycled with [`SlabAlloc::reset`], which rewinds every
-//! class's bump cursor while keeping the chunks).
+//! class's bump cursor while keeping the chunks). Raw allocations in a
+//! bump-only allocator take the exact-layout path regardless of size:
+//! metadata blocks must survive `reset` (which rewinds every bump
+//! cursor), so they cannot live in the rewindable chunks.
+//!
+//! **Decommit.** A reuse-mode allocator never shrinks on its own: chunks
+//! committed for one load spike stay committed for the life of the heap.
+//! `SlabAlloc::trim` (surfaced as [`Heap::trim`](super::Heap::trim)) is
+//! the watermark decommit pass for long-running
+//! servers: at a generation barrier it finds fully-empty chunks (every
+//! handed-out block returned to the free list) per size class and returns
+//! the ones beyond a configurable watermark to the system allocator,
+//! rebuilding the class free list without the dropped chunks' blocks.
+//! Live blocks pin their chunk by definition, so decommit never moves or
+//! invalidates storage — outputs are bit-identical with decommit on or
+//! off.
 
 use std::alloc::Layout;
 use std::ops::{Deref, DerefMut};
 
+use super::metrics::HeapMetrics;
 use super::payload::Payload;
 
 #[cfg(test)]
@@ -61,6 +93,7 @@ pub enum AllocatorKind {
 }
 
 impl AllocatorKind {
+    /// Parse a backend name as accepted by `--allocator`.
     pub fn parse(s: &str) -> Option<AllocatorKind> {
         match s.to_ascii_lowercase().as_str() {
             "system" | "sys" | "malloc" => Some(AllocatorKind::System),
@@ -69,6 +102,7 @@ impl AllocatorKind {
         }
     }
 
+    /// Canonical name (CLI/bench labels).
     pub fn name(self) -> &'static str {
         match self {
             AllocatorKind::System => "system",
@@ -76,6 +110,7 @@ impl AllocatorKind {
         }
     }
 
+    /// Both backends (test sweeps).
     pub const ALL: [AllocatorKind; 2] = [AllocatorKind::System, AllocatorKind::Slab];
 }
 
@@ -95,6 +130,14 @@ pub(crate) const BLOCK_ALIGN: usize = 16;
 /// large enough that the smallest class amortizes 4096 blocks per system
 /// allocation.
 pub const CHUNK_BYTES: usize = 64 * 1024;
+
+/// Default decommit watermark: fully-empty chunks kept per size class at
+/// a [`Heap::trim`](super::Heap::trim) barrier before the rest are
+/// returned to the system allocator (`--decommit-watermark`, config key
+/// `decommit_watermark`). Two chunks absorb the steady-state churn of a
+/// generation without re-committing, while anything beyond is spike
+/// residue worth returning.
+pub const DEFAULT_DECOMMIT_WATERMARK: usize = 2;
 
 /// Smallest class index whose block fits `size`, or `None` for the
 /// exact-layout path.
@@ -138,10 +181,12 @@ impl Drop for Chunk {
     }
 }
 
-/// Where a payload's block came from — what [`SlabAlloc::dealloc`] (or a
-/// teardown `Drop`) must do with the memory.
+/// Where a block came from — what [`SlabAlloc::dealloc`] /
+/// [`SlabAlloc::free_raw`] (or a teardown `Drop`) must do with the
+/// memory. Carried by [`PBox`] for payloads and by the slab-resident
+/// containers ([`SlabVec`], the memo bucket store) for raw blocks.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
-enum BlockLoc {
+pub(crate) enum BlockLoc {
     /// A slab block of the given size class.
     Slab(u8),
     /// Exact-layout system allocation (large/over-aligned payloads, and
@@ -154,7 +199,7 @@ enum BlockLoc {
 /// Owning handle to a payload stored in a [`SlabAlloc`] (or system
 /// memory). Behaves like `Box<dyn Payload>` for access (`Deref`), but
 /// deallocation belongs to the allocator: return it through
-/// [`SlabAlloc::dealloc`] so the block re-enters its free list. Dropping
+/// `SlabAlloc::dealloc` so the block re-enters its free list. Dropping
 /// a `PBox` directly (heap teardown, unwind paths) is safe — the payload
 /// destructor runs and exact-layout memory is freed — but a slab block
 /// then stays with its chunk until the allocator drops.
@@ -298,11 +343,13 @@ impl SlabAlloc {
         }
     }
 
+    /// The backend this allocator serves payloads with.
     #[inline]
     pub fn kind(&self) -> AllocatorKind {
         self.kind
     }
 
+    /// Whether this is the scratch-heap bump-only variant.
     #[inline]
     pub fn is_bump_only(&self) -> bool {
         self.bump_only
@@ -366,23 +413,47 @@ impl SlabAlloc {
         // SAFETY: live uniquely-owned payload; layout read before drop.
         let layout = unsafe { Layout::for_value(&*ptr) };
         unsafe { std::ptr::drop_in_place(ptr) };
+        self.free_raw(ptr as *mut u8, layout, loc)
+    }
+
+    /// Raw-bytes allocation over the same size classes as payloads — the
+    /// storage path of memo bucket arrays and label slot vectors. Three
+    /// deviations from the payload path: bump-only (scratch) allocators
+    /// route *every* raw request through the exact-layout path, because
+    /// metadata must survive [`SlabAlloc::reset`]'s bump rewind; the
+    /// `System` backend likewise takes exact layout (its contract — no
+    /// slab storage at all); oversized/over-aligned requests fall back to
+    /// exact layout just like large payloads. Callers go through
+    /// [`RawCtx`] so the receipt lands in the owning heap's metrics.
+    pub(crate) fn alloc_raw(&mut self, layout: Layout) -> (*mut u8, BlockLoc, AllocReceipt) {
+        if self.bump_only {
+            return Self::alloc_exact(layout);
+        }
+        self.alloc_block(layout)
+    }
+
+    /// Return a raw block obtained from [`SlabAlloc::alloc_raw`]. No
+    /// destructor runs — the caller owns the contents; slab blocks
+    /// re-enter their class free list, exact-layout memory goes back to
+    /// the system allocator.
+    pub(crate) fn free_raw(&mut self, ptr: *mut u8, layout: Layout, loc: BlockLoc) -> FreeReceipt {
         match loc {
             BlockLoc::Zst => FreeReceipt { block_bytes: 0 },
             BlockLoc::Sys => {
-                // SAFETY: allocated by `alloc_block`'s exact-layout path
-                // with this layout.
-                unsafe { std::alloc::dealloc(ptr as *mut u8, layout) };
+                debug_assert!(layout.size() > 0);
+                // SAFETY: allocated by the exact-layout path with this
+                // layout.
+                unsafe { std::alloc::dealloc(ptr, layout) };
                 FreeReceipt { block_bytes: 0 }
             }
             BlockLoc::Slab(ci) => {
                 self.live_blocks -= 1;
                 let c = &mut self.classes[ci as usize];
                 if !self.bump_only {
-                    let p = ptr as *mut u8;
                     // SAFETY: the block is ≥ 16 bytes, 16-aligned, and
                     // dead — its first word becomes the free-list link.
-                    unsafe { *(p as *mut *mut u8) = c.free };
-                    c.free = p;
+                    unsafe { *(ptr as *mut *mut u8) = c.free };
+                    c.free = ptr;
                 }
                 FreeReceipt {
                     block_bytes: c.block,
@@ -391,7 +462,9 @@ impl SlabAlloc {
         }
     }
 
-    fn alloc_block(&mut self, layout: Layout) -> (*mut u8, BlockLoc, AllocReceipt) {
+    /// The exact-layout path shared by large payloads, the `System`
+    /// backend, and bump-only raw allocations.
+    fn alloc_exact(layout: Layout) -> (*mut u8, BlockLoc, AllocReceipt) {
         if layout.size() == 0 {
             return (
                 layout.align() as *mut u8,
@@ -404,27 +477,34 @@ impl SlabAlloc {
                 },
             );
         }
+        // SAFETY: nonzero size.
+        let p = unsafe { std::alloc::alloc(layout) };
+        if p.is_null() {
+            std::alloc::handle_alloc_error(layout);
+        }
+        (
+            p,
+            BlockLoc::Sys,
+            AllocReceipt {
+                reused: false,
+                large: true,
+                block_bytes: 0,
+                new_chunk: false,
+            },
+        )
+    }
+
+    fn alloc_block(&mut self, layout: Layout) -> (*mut u8, BlockLoc, AllocReceipt) {
+        if layout.size() == 0 {
+            return Self::alloc_exact(layout);
+        }
         let class = if self.kind == AllocatorKind::Slab {
             class_for(layout)
         } else {
             None
         };
         let Some(ci) = class else {
-            // SAFETY: nonzero size.
-            let p = unsafe { std::alloc::alloc(layout) };
-            if p.is_null() {
-                std::alloc::handle_alloc_error(layout);
-            }
-            return (
-                p,
-                BlockLoc::Sys,
-                AllocReceipt {
-                    reused: false,
-                    large: true,
-                    block_bytes: 0,
-                    new_chunk: false,
-                },
-            );
+            return Self::alloc_exact(layout);
         };
         let c = &mut self.classes[ci];
         self.live_blocks += 1;
@@ -475,5 +555,303 @@ impl SlabAlloc {
                 new_chunk,
             },
         )
+    }
+
+    /// Watermark decommit pass (`Heap::trim` calls this at generation
+    /// barriers): per size class, find *fully-empty* chunks — every block
+    /// ever bumped out of the chunk is back on the free list — and return
+    /// the ones beyond `keep` to the system allocator, rebuilding the
+    /// free list without their blocks. Chunks holding any live block are
+    /// never touched, so no pointer is invalidated. The current bump
+    /// chunk is kept preferentially (it holds the class's only virgin
+    /// space). O(free blocks + chunks·log chunks) — a cold barrier pass,
+    /// not hot-path work. No-op for bump-only (scratch) allocators, whose
+    /// retain-everything pooling contract this deliberately preserves,
+    /// and for the `System` backend (no chunks exist).
+    pub(crate) fn trim(&mut self, keep: usize) -> TrimStats {
+        let mut stats = TrimStats {
+            chunks: 0,
+            bytes: 0,
+        };
+        if self.bump_only || self.kind != AllocatorKind::Slab {
+            return stats;
+        }
+        for c in &mut self.classes {
+            // Fewer chunks than the watermark keeps: nothing can be
+            // freed, so skip the free-list walk entirely — this is what
+            // keeps the per-generation barrier cheap in steady state.
+            if c.chunks.len() <= keep {
+                continue;
+            }
+            let blocks_per_chunk = CHUNK_BYTES / c.block;
+            // Locate each free block's chunk by address (chunks are not
+            // address-ordered, so sort the bases once).
+            let mut bases: Vec<(usize, usize)> = c
+                .chunks
+                .iter()
+                .enumerate()
+                .map(|(j, ch)| (ch.ptr as usize, j))
+                .collect();
+            bases.sort_unstable();
+            let chunk_of = |addr: usize| -> usize {
+                let i = match bases.binary_search_by(|&(b, _)| b.cmp(&addr)) {
+                    Ok(i) => i,
+                    Err(i) => i - 1,
+                };
+                debug_assert!(addr >= bases[i].0 && addr - bases[i].0 < CHUNK_BYTES);
+                bases[i].1
+            };
+            let mut free_in = vec![0usize; c.chunks.len()];
+            let mut p = c.free;
+            while !p.is_null() {
+                free_in[chunk_of(p as usize)] += 1;
+                // SAFETY: `p` is a free block; its first word is the link.
+                p = unsafe { *(p as *const *mut u8) };
+            }
+            // Blocks ever bumped out of chunk j. Reuse mode keeps `cur`
+            // at the last chunk: earlier chunks are fully bumped, later
+            // ones do not exist.
+            debug_assert_eq!(c.cur, c.chunks.len() - 1, "reuse-mode bump invariant");
+            let bumped = |j: usize| {
+                if j < c.cur {
+                    blocks_per_chunk
+                } else {
+                    c.offset / c.block
+                }
+            };
+            let empty: Vec<bool> = (0..c.chunks.len())
+                .map(|j| free_in[j] == bumped(j))
+                .collect();
+            let n_empty = empty.iter().filter(|e| **e).count();
+            if n_empty <= keep {
+                continue;
+            }
+            // Choose victims: lowest-index empties first, the bump chunk
+            // last (its virgin space is the cheapest storage the class
+            // has).
+            let mut to_free = n_empty - keep;
+            let mut dropf = vec![false; c.chunks.len()];
+            for j in 0..c.chunks.len() {
+                if to_free == 0 {
+                    break;
+                }
+                if empty[j] && j != c.cur {
+                    dropf[j] = true;
+                    to_free -= 1;
+                }
+            }
+            if to_free > 0 && empty[c.cur] {
+                dropf[c.cur] = true;
+                to_free -= 1;
+            }
+            debug_assert_eq!(to_free, 0);
+            // Rebuild the free list without blocks in dropped chunks
+            // (order preserved — decommit must not perturb reuse order).
+            let mut head: *mut u8 = std::ptr::null_mut();
+            let mut tail: *mut u8 = std::ptr::null_mut();
+            let mut p = c.free;
+            while !p.is_null() {
+                // SAFETY: free-list walk as above.
+                let next = unsafe { *(p as *const *mut u8) };
+                if !dropf[chunk_of(p as usize)] {
+                    if head.is_null() {
+                        head = p;
+                    } else {
+                        // SAFETY: `tail` is a retained free block.
+                        unsafe { *(tail as *mut *mut u8) = p };
+                    }
+                    tail = p;
+                }
+                p = next;
+            }
+            if !tail.is_null() {
+                // SAFETY: as above.
+                unsafe { *(tail as *mut *mut u8) = std::ptr::null_mut() };
+            }
+            c.free = head;
+            // Drop the victim chunks (their `Drop` returns the 64 KiB to
+            // the system allocator) and re-point the bump cursor.
+            let cur_dropped = dropf[c.cur];
+            let old_cur = c.cur;
+            let old = std::mem::take(&mut c.chunks);
+            let mut new_cur = 0usize;
+            for (j, ch) in old.into_iter().enumerate() {
+                if dropf[j] {
+                    stats.chunks += 1;
+                    stats.bytes += CHUNK_BYTES;
+                    drop(ch);
+                } else {
+                    if j == old_cur {
+                        new_cur = c.chunks.len();
+                    }
+                    c.chunks.push(ch);
+                }
+            }
+            if cur_dropped {
+                // Every survivor is fully bumped (their free blocks stay
+                // on the list): mark the cursor exhausted so the next
+                // free-list miss opens a fresh chunk.
+                if c.chunks.is_empty() {
+                    c.cur = 0;
+                    c.offset = 0;
+                } else {
+                    c.cur = c.chunks.len() - 1;
+                    c.offset = blocks_per_chunk * c.block;
+                }
+            } else {
+                c.cur = new_cur;
+            }
+        }
+        stats
+    }
+}
+
+/// What one [`SlabAlloc::trim`] pass returned to the system allocator;
+/// the owning heap folds it into `decommitted_chunks` /
+/// `decommitted_bytes` and lowers the committed gauges.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct TrimStats {
+    /// Chunks returned to the system allocator.
+    pub chunks: usize,
+    /// Bytes returned (`chunks` × [`CHUNK_BYTES`]).
+    pub bytes: usize,
+}
+
+/// Accounted raw-bytes allocation context: the slab allocator paired with
+/// the owning heap's metrics, so every memo/label storage operation lands
+/// in the `slab_raw_*` gauges. Built on the fly from `Heap`'s disjoint
+/// fields wherever a slab-resident container needs to grow or free.
+pub(crate) struct RawCtx<'a> {
+    /// The heap's allocator.
+    pub alloc: &'a mut SlabAlloc,
+    /// The heap's metrics, receiving the receipts.
+    pub metrics: &'a mut HeapMetrics,
+}
+
+impl RawCtx<'_> {
+    /// Allocate a raw block, recording the receipt.
+    pub(crate) fn alloc_raw(&mut self, layout: Layout) -> (*mut u8, BlockLoc) {
+        let (p, loc, r) = self.alloc.alloc_raw(layout);
+        self.metrics.note_raw_alloc(&r);
+        (p, loc)
+    }
+
+    /// Free a raw block, recording the receipt.
+    pub(crate) fn free_raw(&mut self, ptr: *mut u8, layout: Layout, loc: BlockLoc) {
+        let r = self.alloc.free_raw(ptr, layout, loc);
+        self.metrics.note_raw_free(&r);
+    }
+}
+
+/// A minimal `Vec<T>` whose backing store lives in the owning heap's
+/// slab allocator (raw path) — the label slot vector's storage. Growth
+/// and explicit teardown go through a [`RawCtx`] so freed backing blocks
+/// re-enter their size-class free list; a plain `Drop` (heap teardown)
+/// runs the element destructors and frees exact-layout memory, while a
+/// slab-resident block stays with its chunk exactly like a dropped
+/// [`PBox`].
+pub(crate) struct SlabVec<T> {
+    ptr: *mut T,
+    cap: usize,
+    len: usize,
+    loc: BlockLoc,
+}
+
+// SAFETY: SlabVec uniquely owns its elements and storage; it only moves
+// between threads together with the Heap that owns both it and the
+// SlabAlloc holding its storage (the PBox discipline).
+unsafe impl<T: Send> Send for SlabVec<T> {}
+
+impl<T> SlabVec<T> {
+    /// An empty vector owning no storage.
+    pub(crate) const fn new() -> SlabVec<T> {
+        SlabVec {
+            ptr: std::ptr::NonNull::dangling().as_ptr(),
+            cap: 0,
+            len: 0,
+            loc: BlockLoc::Zst,
+        }
+    }
+
+    #[inline]
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub(crate) fn as_slice(&self) -> &[T] {
+        // SAFETY: `ptr` is dangling-aligned when cap == 0 and points at
+        // `len` initialized elements otherwise.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    pub(crate) fn as_mut_slice(&mut self) -> &mut [T] {
+        // SAFETY: as above; `&mut self` gives exclusive access.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+
+    #[inline]
+    pub(crate) fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.as_slice().iter()
+    }
+
+    /// Append, growing through the raw slab path when full.
+    pub(crate) fn push(&mut self, ctx: &mut RawCtx<'_>, value: T) {
+        if self.len == self.cap {
+            self.grow(ctx);
+        }
+        // SAFETY: `len < cap` after grow; the slot is uninitialized.
+        unsafe { self.ptr.add(self.len).write(value) };
+        self.len += 1;
+    }
+
+    fn grow(&mut self, ctx: &mut RawCtx<'_>) {
+        let new_cap = (self.cap * 2).max(8);
+        let layout = Layout::array::<T>(new_cap).expect("slab vec layout");
+        let (p, loc) = ctx.alloc_raw(layout);
+        let p = p as *mut T;
+        if self.cap > 0 {
+            // SAFETY: old and new blocks are disjoint; `len` elements are
+            // initialized; the bitwise copy is a move (old storage is
+            // freed without running destructors).
+            unsafe { std::ptr::copy_nonoverlapping(self.ptr, p, self.len) };
+            let old_layout = Layout::array::<T>(self.cap).expect("slab vec layout");
+            ctx.free_raw(self.ptr as *mut u8, old_layout, self.loc);
+        }
+        self.ptr = p;
+        self.cap = new_cap;
+        self.loc = loc;
+    }
+}
+
+impl<T> std::ops::Index<usize> for SlabVec<T> {
+    type Output = T;
+    #[inline]
+    fn index(&self, i: usize) -> &T {
+        &self.as_slice()[i]
+    }
+}
+
+impl<T> std::ops::IndexMut<usize> for SlabVec<T> {
+    #[inline]
+    fn index_mut(&mut self, i: usize) -> &mut T {
+        &mut self.as_mut_slice()[i]
+    }
+}
+
+impl<T> Drop for SlabVec<T> {
+    fn drop(&mut self) {
+        // Teardown fallback (heap drop): run element destructors; free
+        // exact-layout storage; a slab block stays with its chunk, which
+        // the allocator frees wholesale right after (field order in
+        // `Heap`).
+        // SAFETY: `len` initialized elements, uniquely owned.
+        unsafe { std::ptr::drop_in_place(std::ptr::slice_from_raw_parts_mut(self.ptr, self.len)) };
+        if self.loc == BlockLoc::Sys && self.cap > 0 {
+            let layout = Layout::array::<T>(self.cap).expect("slab vec layout");
+            // SAFETY: allocated by the exact-layout path with this layout.
+            unsafe { std::alloc::dealloc(self.ptr as *mut u8, layout) };
+        }
     }
 }

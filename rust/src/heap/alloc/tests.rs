@@ -1,10 +1,11 @@
 //! Allocator unit + property tests: class math, free-list reuse, the
-//! exact-layout fallback, scratch bump/reset, and heap-level fuzz runs
-//! proving random alloc/free/copy/transplant sequences balance to zero
-//! live storage with gauges consistent, on both backends.
+//! exact-layout fallback, the raw (memo/label) path, scratch bump/reset,
+//! the decommit watermark, and heap-level fuzz runs proving random
+//! alloc/free/copy/transplant sequences balance to zero live storage
+//! with gauges consistent, on both backends and with decommit on.
 
 use super::*;
-use crate::heap::{CopyMode, Heap, Lazy};
+use crate::heap::{CopyMode, Heap, HeapMetrics, Lazy, MemoTable, ObjId};
 use crate::lazy_fields;
 use crate::rng::Pcg64;
 
@@ -162,6 +163,211 @@ fn reset_rejects_live_blocks() {
     a.reset();
 }
 
+#[test]
+fn alloc_raw_class_math_and_reuse() {
+    let mut a = SlabAlloc::new(AllocatorKind::Slab);
+    // Class rounding matches the payload path: 100 B → the 128 B class.
+    let l128 = Layout::from_size_align(100, 8).unwrap();
+    let (p1, loc1, r1) = a.alloc_raw(l128);
+    assert!(!r1.reused && !r1.large && r1.new_chunk);
+    assert_eq!(r1.block_bytes, 128);
+    assert_eq!(a.live_blocks(), 1);
+    // Free and re-allocate the same class: the block comes straight back.
+    let f = a.free_raw(p1, l128, loc1);
+    assert_eq!(f.block_bytes, 128);
+    assert_eq!(a.live_blocks(), 0);
+    let (p2, loc2, r2) = a.alloc_raw(Layout::from_size_align(128, 8).unwrap());
+    assert!(r2.reused && !r2.new_chunk);
+    assert_eq!(p1, p2, "raw free list must hand the block back");
+    a.free_raw(p2, l128, loc2);
+    // Over the largest class: exact-layout fallback.
+    let big = Layout::from_size_align(4096, 8).unwrap();
+    let (pb, locb, rb) = a.alloc_raw(big);
+    assert!(rb.large && rb.block_bytes == 0 && !rb.new_chunk);
+    a.free_raw(pb, big, locb);
+    assert_eq!(a.live_blocks(), 0);
+}
+
+#[test]
+fn raw_path_is_exact_layout_for_scratch_and_system() {
+    // Bump-only (scratch) allocators must keep raw blocks out of the
+    // rewindable chunks; the System backend has no chunks at all.
+    for mut a in [
+        SlabAlloc::scratch(AllocatorKind::Slab),
+        SlabAlloc::new(AllocatorKind::System),
+    ] {
+        let l = Layout::from_size_align(64, 8).unwrap();
+        let (p, loc, r) = a.alloc_raw(l);
+        assert!(r.large && r.block_bytes == 0 && !r.new_chunk);
+        assert_eq!(a.live_blocks(), 0, "raw exact-layout blocks are not slab-live");
+        a.free_raw(p, l, loc);
+        if a.is_bump_only() {
+            a.reset(); // raw storage must survive the rewind contract
+        }
+    }
+}
+
+#[test]
+fn memo_rehash_reuses_freed_buckets() {
+    // Growing a memo table frees its outgrown bucket blocks into the
+    // class free lists; the next same-class raw allocation — a rehash of
+    // any other table — reuses them instead of bumping fresh storage.
+    let mut a = SlabAlloc::new(AllocatorKind::Slab);
+    let mut m = HeapMetrics::default();
+    let mut t = MemoTable::new();
+    {
+        let mut ctx = RawCtx {
+            alloc: &mut a,
+            metrics: &mut m,
+        };
+        for i in 0..100u32 {
+            t.insert(&mut ctx, ObjId::new(i, 0), ObjId::new(i + 1000, 0));
+        }
+    }
+    assert!(m.slab_raw_frees > 0, "rehashes must free outgrown blocks");
+    // The table grew 8 → 16 → ... → 256 buckets; the outgrown blocks
+    // (128 B ... 2 KiB) are all back on their free lists. A fresh table
+    // growing through the same sizes reuses every one of them.
+    let chunks_before = m.slab_chunks;
+    let mut t2 = MemoTable::new();
+    {
+        let mut ctx = RawCtx {
+            alloc: &mut a,
+            metrics: &mut m,
+        };
+        for i in 0..100u32 {
+            t2.insert(&mut ctx, ObjId::new(i, 0), ObjId::new(i + 1000, 0));
+        }
+        assert_eq!(
+            ctx.metrics.slab_chunks, chunks_before,
+            "second table must reuse the first table's freed buckets"
+        );
+        t.drain_all(&mut ctx);
+        t2.drain_all(&mut ctx);
+    }
+    assert_eq!(m.slab_raw_bytes, 0);
+    assert_eq!(a.live_blocks(), 0);
+}
+
+#[test]
+fn slab_vec_grows_through_raw_path_and_keeps_values() {
+    let mut a = SlabAlloc::new(AllocatorKind::Slab);
+    let mut m = HeapMetrics::default();
+    let mut v: SlabVec<u64> = SlabVec::new();
+    {
+        let mut ctx = RawCtx {
+            alloc: &mut a,
+            metrics: &mut m,
+        };
+        for i in 0..100u64 {
+            v.push(&mut ctx, i * 3);
+        }
+    }
+    assert_eq!(v.len(), 100);
+    for (i, x) in v.iter().enumerate() {
+        assert_eq!(*x, i as u64 * 3);
+    }
+    v[7] = 99;
+    assert_eq!(v[7], 99);
+    assert!(m.slab_raw_allocs > 1, "growth reallocates");
+    assert_eq!(m.slab_raw_frees, m.slab_raw_allocs - 1, "old stores freed");
+    assert!(m.slab_raw_bytes > 0, "backing store is slab-live");
+}
+
+#[test]
+fn trim_decommits_empty_chunks_past_watermark() {
+    let mut a = SlabAlloc::new(AllocatorKind::Slab);
+    let per_chunk = CHUNK_BYTES / 16;
+    // Fill three chunks of the 16 B class, then free everything.
+    let mut held = Vec::new();
+    for i in 0..per_chunk * 3 {
+        held.push(a.alloc_value(Small { a: i as u64 }).0);
+    }
+    for p in held {
+        a.dealloc(p);
+    }
+    assert_eq!(a.live_blocks(), 0);
+    // keep=1: two of the three fully-empty chunks go back to the OS.
+    let stats = a.trim(1);
+    assert_eq!(stats.chunks, 2);
+    assert_eq!(stats.bytes, 2 * CHUNK_BYTES);
+    // Idempotent at the watermark.
+    let stats = a.trim(1);
+    assert_eq!(stats.chunks, 0);
+    // The retained chunk still serves allocations (free list survived).
+    let (p, r) = a.alloc_value(Small { a: 7 });
+    assert!(r.reused && !r.new_chunk, "retained chunk's free list must survive trim");
+    a.dealloc(p);
+    // keep=0: everything goes.
+    let stats = a.trim(0);
+    assert_eq!(stats.chunks, 1);
+    // And the class still works from scratch afterwards.
+    let (p, r) = a.alloc_value(Small { a: 8 });
+    assert!(!r.reused && r.new_chunk);
+    a.dealloc(p);
+}
+
+#[test]
+fn trim_never_touches_chunks_with_live_blocks() {
+    let mut a = SlabAlloc::new(AllocatorKind::Slab);
+    let per_chunk = CHUNK_BYTES / 16;
+    // Two chunks; keep one block live in the first chunk.
+    let mut held = Vec::new();
+    for i in 0..per_chunk + 10 {
+        held.push(a.alloc_value(Small { a: i as u64 }));
+    }
+    let (keep_alive, _) = held.remove(0);
+    let addr = &*keep_alive as *const dyn Payload as *const u8 as usize;
+    for (p, _) in held {
+        a.dealloc(p);
+    }
+    // Chunk 0 has a live block; only chunk 1 is empty.
+    let stats = a.trim(0);
+    assert_eq!(stats.chunks, 1, "only the fully-empty chunk may go");
+    // The live block is untouched and still frees cleanly.
+    let got = &*keep_alive as *const dyn Payload as *const u8 as usize;
+    assert_eq!(addr, got);
+    assert_eq!(
+        keep_alive.as_any().downcast_ref::<Small>().unwrap().a,
+        0,
+        "live payload intact after decommit"
+    );
+    a.dealloc(keep_alive);
+    assert_eq!(a.live_blocks(), 0);
+    assert_eq!(a.trim(0).chunks, 1);
+}
+
+#[test]
+fn heap_trim_updates_gauges_and_counters() {
+    let mut heap = Heap::new(CopyMode::LazySro);
+    // Churn enough payload to commit several chunks, then drain.
+    let mut roots = Vec::new();
+    for i in 0..2000i64 {
+        roots.push(build_chain(&mut heap, 4, i));
+    }
+    for r in roots {
+        heap.release(r);
+    }
+    heap.sweep_memos();
+    let before = heap.metrics;
+    assert!(before.slab_chunks > 2, "churn should commit several chunks");
+    heap.trim(1);
+    let after = heap.metrics;
+    assert!(after.decommitted_chunks > 0, "trim must return spike chunks");
+    assert_eq!(
+        after.slab_chunks + after.decommitted_chunks,
+        before.slab_chunks + before.decommitted_chunks
+    );
+    assert_eq!(after.slab_committed_bytes, after.slab_chunks * CHUNK_BYTES);
+    assert_eq!(after.decommitted_bytes, after.decommitted_chunks * CHUNK_BYTES);
+    // The heap still works after decommit.
+    let r = build_chain(&mut heap, 8, 1);
+    let vals = chain_values(&mut heap, r);
+    assert_eq!(vals.len(), 8);
+    heap.release(r);
+    heap.sweep_memos();
+}
+
 #[derive(Clone)]
 struct Node {
     value: i64,
@@ -211,6 +417,12 @@ fn assert_gauges_balanced(h: &Heap, label: &str) {
     }
     assert!(m.slab_live_block_bytes <= m.slab_committed_bytes, "{label}");
     assert_eq!(m.slab_committed_bytes, m.slab_chunks * CHUNK_BYTES, "{label}");
+    assert!(
+        m.slab_committed_peak_bytes >= m.slab_committed_bytes,
+        "{label}: committed peak below the current gauge"
+    );
+    let frag = m.slab_fragmentation();
+    assert!((0.0..=1.0).contains(&frag), "{label}: fragmentation {frag} out of [0, 1]");
 }
 
 /// Random alloc/release/deep-copy/mutate/transplant churn on both
@@ -320,6 +532,58 @@ fn pick(rng: &mut Pcg64, len: usize) -> Option<usize> {
     } else {
         Some(rng.below(len as u64) as usize)
     }
+}
+
+/// The decommit differential cell: spiky alloc/copy/mutate churn with
+/// periodic trim barriers computes bit-identical values to the same
+/// churn without them, decommits chunks on the spikes' way down, and
+/// ends with less committed residency than the monotone (off) run.
+#[test]
+fn churn_with_decommit_is_value_identical_and_bounded() {
+    let run = |watermark: Option<usize>| -> (i64, usize, usize) {
+        let mut heap = Heap::new(CopyMode::LazySro);
+        let mut rng = Pcg64::new(0xDEC0);
+        let mut sum = 0i64;
+        for round in 0..8i64 {
+            let mut roots = Vec::new();
+            let spike = if round % 4 == 0 { 600 } else { 30 };
+            for i in 0..spike {
+                let len = 1 + rng.below(8) as usize;
+                roots.push(build_chain(&mut heap, len, round * 1000 + i));
+            }
+            for _ in 0..10 {
+                let i = rng.below(roots.len() as u64) as usize;
+                let mut c = heap.deep_copy(&roots[i]);
+                heap.mutate_root(&mut c, |n| n.value += 7);
+                sum += chain_values(&mut heap, c).iter().sum::<i64>();
+                heap.release(c);
+            }
+            for r in roots {
+                sum += chain_values(&mut heap, r).iter().sum::<i64>();
+                heap.release(r);
+            }
+            heap.sweep_memos();
+            if let Some(w) = watermark {
+                heap.trim(w);
+            }
+        }
+        assert_eq!(heap.live_objects(), 0);
+        assert_gauges_balanced(&heap, "churn");
+        (
+            sum,
+            heap.metrics.slab_committed_bytes,
+            heap.metrics.decommitted_chunks,
+        )
+    };
+    let (sum_off, committed_off, dec_off) = run(None);
+    let (sum_on, committed_on, dec_on) = run(Some(1));
+    assert_eq!(sum_off, sum_on, "decommit changed computed values");
+    assert_eq!(dec_off, 0, "no trim, no decommit");
+    assert!(dec_on > 0, "spiky churn past the watermark must decommit");
+    assert!(
+        committed_on < committed_off,
+        "decommit must shrink committed residency ({committed_on} vs {committed_off})"
+    );
 }
 
 /// The scratch-heap contract end-to-end, following the engine's pooling

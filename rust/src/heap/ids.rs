@@ -24,6 +24,7 @@ impl ObjId {
         gen: u32::MAX,
     };
 
+    /// Whether this is the null sentinel.
     #[inline]
     pub fn is_null(self) -> bool {
         self.idx == u32::MAX
@@ -50,11 +51,13 @@ pub struct LabelId {
 }
 
 impl LabelId {
+    /// Sentinel for "no label" (the label half of a null lazy pointer).
     pub const NULL: LabelId = LabelId {
         idx: u32::MAX,
         gen: u32::MAX,
     };
 
+    /// Whether this is the null sentinel.
     #[inline]
     pub fn is_null(self) -> bool {
         self.idx == u32::MAX

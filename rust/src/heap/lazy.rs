@@ -21,11 +21,13 @@ pub struct RawLazy {
 }
 
 impl RawLazy {
+    /// The null edge (no target, no label).
     pub const NULL: RawLazy = RawLazy {
         obj: ObjId::NULL,
         label: LabelId::NULL,
     };
 
+    /// Whether this edge points nowhere.
     #[inline]
     pub fn is_null(self) -> bool {
         self.obj.is_null()
@@ -55,17 +57,43 @@ impl Default for RawLazy {
 ///   to the edge-diff machinery in `mutate`);
 /// * pointers read out of object fields are *borrowed* and must not outlive
 ///   the owning edge. Generation tags turn violations into panics.
+///
+/// ```
+/// use lazycow::heap::{CopyMode, Heap, Lazy};
+/// use lazycow::lazy_fields;
+///
+/// #[derive(Clone)]
+/// struct Cell { value: i64, next: Lazy<Cell> }
+/// lazy_fields!(Cell: next);
+///
+/// // A null pointer is inert until a heap gives it a target.
+/// let p: Lazy<Cell> = Lazy::NULL;
+/// assert!(p.is_null());
+///
+/// let mut heap = Heap::new(CopyMode::Lazy);
+/// let a = heap.alloc(Cell { value: 7, next: Lazy::NULL });
+/// // `deep_copy` mints a new label: same object, O(1), copy-on-write.
+/// let mut b = heap.deep_copy(&a);
+/// assert_eq!(b.obj(), a.obj(), "no bytes copied yet");
+/// assert_ne!(b.label(), a.label(), "distinct lineages");
+/// heap.mutate_root(&mut b, |c| c.value = 8);
+/// assert_ne!(b.obj(), a.obj(), "write forced the copy");
+/// heap.release(a);
+/// heap.release(b);
+/// ```
 pub struct Lazy<T> {
     pub(crate) raw: RawLazy,
     pub(crate) _ph: PhantomData<fn() -> T>,
 }
 
 impl<T> Lazy<T> {
+    /// The null pointer.
     pub const NULL: Lazy<T> = Lazy {
         raw: RawLazy::NULL,
         _ph: PhantomData,
     };
 
+    /// Wrap an untyped edge (caller asserts the payload type).
     #[inline]
     pub fn from_raw(raw: RawLazy) -> Self {
         Lazy {
@@ -74,21 +102,25 @@ impl<T> Lazy<T> {
         }
     }
 
+    /// The untyped `(object, label)` pair.
     #[inline]
     pub fn raw(&self) -> RawLazy {
         self.raw
     }
 
+    /// Whether this pointer is null.
     #[inline]
     pub fn is_null(&self) -> bool {
         self.raw.is_null()
     }
 
+    /// Target object id `t(e)`.
     #[inline]
     pub fn obj(&self) -> ObjId {
         self.raw.obj
     }
 
+    /// Label id `h(e)`.
     #[inline]
     pub fn label(&self) -> LabelId {
         self.raw.label

@@ -13,20 +13,153 @@
 //! recycled, and generation tags catch violations), sized to a power of two,
 //! with Fibonacci hashing. There are no tombstones: deletion happens only
 //! wholesale during sweeps (rebuild) or when the label dies (drop).
+//!
+//! **Storage.** The bucket arrays live in the owning heap's slab allocator
+//! (the raw path, [`RawCtx`]): one [`SlabBuckets`] block holds the three
+//! parallel arrays (keys, key generations, values) contiguously, so a
+//! rehash frees a single size-class block that the next same-size rehash —
+//! of *any* label in the heap — reuses from the free list. Buckets above
+//! the largest size class take the allocator's exact-layout fallback.
+//! Every operation that can allocate or free (insert, sweep, drain) takes
+//! a [`RawCtx`]; read paths (`get`, `iter`) need none.
 
+use std::alloc::Layout;
+
+use super::alloc::{BlockLoc, RawCtx};
 use super::ids::ObjId;
 
 const EMPTY: u32 = u32::MAX;
 
-/// Open-addressing hash map `ObjId -> ObjId` specialised for memo use.
-#[derive(Clone, Default)]
+/// Bytes per bucket: key (u32) + key generation (u32) + value (`ObjId`).
+const BUCKET_BYTES: usize = 4 + 4 + std::mem::size_of::<ObjId>();
+
+/// One slab block holding a memo table's three parallel bucket arrays:
+/// `cap` keys (u32), then `cap` key generations (u32), then `cap` values
+/// (`ObjId`). Explicit teardown goes through [`SlabBuckets::free`] so the
+/// block re-enters its size-class free list; a plain `Drop` (heap
+/// teardown) frees exact-layout memory and leaves slab blocks to their
+/// chunk, like a dropped `PBox`.
+struct SlabBuckets {
+    ptr: *mut u8,
+    cap: usize,
+    loc: BlockLoc,
+}
+
+// SAFETY: SlabBuckets uniquely owns its storage and only moves between
+// threads together with the Heap owning both it and the allocator.
+unsafe impl Send for SlabBuckets {}
+
+impl SlabBuckets {
+    const fn empty() -> SlabBuckets {
+        SlabBuckets {
+            ptr: std::ptr::NonNull::dangling().as_ptr(),
+            cap: 0,
+            loc: BlockLoc::Zst,
+        }
+    }
+
+    fn layout(cap: usize) -> Layout {
+        Layout::from_size_align(cap * BUCKET_BYTES, 8).expect("memo bucket layout")
+    }
+
+    /// Allocate `cap` buckets (power of two), all marked empty.
+    fn alloc(ctx: &mut RawCtx<'_>, cap: usize) -> SlabBuckets {
+        debug_assert!(cap.is_power_of_two());
+        let (ptr, loc) = ctx.alloc_raw(Self::layout(cap));
+        // All-ones everywhere: keys become EMPTY (u32::MAX); generations
+        // and values of empty buckets are never read before being
+        // written.
+        // SAFETY: the block spans `cap * BUCKET_BYTES` writable bytes.
+        unsafe { std::ptr::write_bytes(ptr, 0xFF, cap * BUCKET_BYTES) };
+        SlabBuckets { ptr, cap, loc }
+    }
+
+    /// Return the block to the allocator (the accounted path).
+    fn free(self, ctx: &mut RawCtx<'_>) {
+        if self.cap > 0 {
+            ctx.free_raw(self.ptr, Self::layout(self.cap), self.loc);
+        }
+        std::mem::forget(self);
+    }
+
+    #[inline]
+    fn keys(&self) -> &[u32] {
+        if self.cap == 0 {
+            return &[];
+        }
+        // SAFETY: `cap` initialized u32s at the block base.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u32, self.cap) }
+    }
+
+    #[inline]
+    fn gens(&self) -> &[u32] {
+        if self.cap == 0 {
+            return &[];
+        }
+        // SAFETY: `cap` u32s at offset 4·cap.
+        unsafe { std::slice::from_raw_parts((self.ptr as *const u32).add(self.cap), self.cap) }
+    }
+
+    #[inline]
+    fn vals(&self) -> &[ObjId] {
+        if self.cap == 0 {
+            return &[];
+        }
+        // SAFETY: `cap` ObjIds at offset 8·cap (8-aligned base keeps the
+        // ObjId alignment).
+        unsafe { std::slice::from_raw_parts(self.ptr.add(self.cap * 8) as *const ObjId, self.cap) }
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize, key: u32, gen: u32, val: ObjId) {
+        debug_assert!(i < self.cap);
+        // SAFETY: `i < cap`; the three arrays are disjoint regions of the
+        // uniquely-owned block.
+        unsafe {
+            *(self.ptr as *mut u32).add(i) = key;
+            *(self.ptr as *mut u32).add(self.cap + i) = gen;
+            *(self.ptr.add(self.cap * 8) as *mut ObjId).add(i) = val;
+        }
+    }
+
+    #[inline]
+    fn set_val(&mut self, i: usize, gen: u32, val: ObjId) {
+        debug_assert!(i < self.cap);
+        // SAFETY: as in `set`.
+        unsafe {
+            *(self.ptr as *mut u32).add(self.cap + i) = gen;
+            *(self.ptr.add(self.cap * 8) as *mut ObjId).add(i) = val;
+        }
+    }
+}
+
+impl Drop for SlabBuckets {
+    fn drop(&mut self) {
+        // Teardown fallback: exact-layout storage goes back to the system
+        // allocator; slab blocks stay with their chunk (freed when the
+        // owning SlabAlloc drops).
+        if self.loc == BlockLoc::Sys && self.cap > 0 {
+            // SAFETY: allocated by the exact-layout path with this layout.
+            unsafe { std::alloc::dealloc(self.ptr, Self::layout(self.cap)) };
+        }
+    }
+}
+
+/// Open-addressing hash map `ObjId -> ObjId` specialised for memo use,
+/// with slab-resident bucket storage (see the module docs). Mutating
+/// operations take a crate-internal `RawCtx` so bucket blocks are
+/// allocated and freed through the owning heap's slab allocator.
+#[derive(Default)]
 pub struct MemoTable {
-    /// Parallel arrays: `keys[i] == EMPTY` marks an empty bucket.
-    keys: Vec<u32>,
-    key_gens: Vec<u32>,
-    vals: Vec<ObjId>,
+    buckets: SlabBuckets,
     len: usize,
     mask: usize,
+}
+
+impl Default for SlabBuckets {
+    fn default() -> Self {
+        SlabBuckets::empty()
+    }
 }
 
 #[inline]
@@ -38,21 +171,22 @@ fn hash(key: u32, mask: usize) -> usize {
 }
 
 impl MemoTable {
+    /// An empty table owning no bucket storage.
     pub fn new() -> Self {
         MemoTable {
-            keys: Vec::new(),
-            key_gens: Vec::new(),
-            vals: Vec::new(),
+            buckets: SlabBuckets::empty(),
             len: 0,
             mask: 0,
         }
     }
 
+    /// Number of entries.
     #[inline]
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// `true` when the table holds no entries.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len == 0
@@ -60,12 +194,12 @@ impl MemoTable {
 
     /// Capacity in buckets (0 if unallocated).
     pub fn capacity(&self) -> usize {
-        self.keys.len()
+        self.buckets.cap
     }
 
     /// Approximate heap bytes used by this table.
     pub fn size_bytes(&self) -> usize {
-        self.keys.len() * (4 + 4 + std::mem::size_of::<ObjId>())
+        self.buckets.cap * BUCKET_BYTES
     }
 
     /// Look up `m_l(v)`.
@@ -74,19 +208,20 @@ impl MemoTable {
         if self.len == 0 {
             return None;
         }
+        let keys = self.buckets.keys();
         let mut i = hash(key.key(), self.mask);
         loop {
-            let k = self.keys[i];
+            let k = keys[i];
             if k == EMPTY {
                 return None;
             }
             if k == key.key() {
                 debug_assert_eq!(
-                    self.key_gens[i],
+                    self.buckets.gens()[i],
                     key.gen,
                     "memo key generation mismatch: slot recycled while keyed"
                 );
-                return Some(self.vals[i]);
+                return Some(self.buckets.vals()[i]);
             }
             i = (i + 1) & self.mask;
         }
@@ -94,88 +229,101 @@ impl MemoTable {
 
     /// Insert `m_l(key) <- val`, replacing any existing entry.
     /// Returns the previous value if the key was present.
-    pub fn insert(&mut self, key: ObjId, val: ObjId) -> Option<ObjId> {
+    pub(crate) fn insert(&mut self, ctx: &mut RawCtx<'_>, key: ObjId, val: ObjId) -> Option<ObjId> {
         debug_assert!(!key.is_null() && !val.is_null());
-        if self.keys.is_empty() || self.len * 4 >= self.keys.len() * 3 {
-            self.grow();
+        if self.buckets.cap == 0 || self.len * 4 >= self.buckets.cap * 3 {
+            self.grow(ctx);
         }
+        self.insert_no_grow(key, val)
+    }
+
+    /// The probe loop, on buckets guaranteed to have a free slot.
+    fn insert_no_grow(&mut self, key: ObjId, val: ObjId) -> Option<ObjId> {
         let mut i = hash(key.key(), self.mask);
         loop {
-            let k = self.keys[i];
+            let k = self.buckets.keys()[i];
             if k == EMPTY {
-                self.keys[i] = key.key();
-                self.key_gens[i] = key.gen;
-                self.vals[i] = val;
+                self.buckets.set(i, key.key(), key.gen, val);
                 self.len += 1;
                 return None;
             }
             if k == key.key() {
-                let old = self.vals[i];
-                self.vals[i] = val;
-                self.key_gens[i] = key.gen;
+                let old = self.buckets.vals()[i];
+                self.buckets.set_val(i, key.gen, val);
                 return Some(old);
             }
             i = (i + 1) & self.mask;
         }
     }
 
-    fn grow(&mut self) {
-        let new_cap = (self.keys.len() * 2).max(8);
-        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY; new_cap]);
-        let old_gens = std::mem::replace(&mut self.key_gens, vec![0; new_cap]);
-        let old_vals = std::mem::replace(&mut self.vals, vec![ObjId::NULL; new_cap]);
+    /// Double the bucket block (rehash): the freed old block re-enters
+    /// its size-class free list for the next rehash anywhere in the heap.
+    fn grow(&mut self, ctx: &mut RawCtx<'_>) {
+        let new_cap = (self.buckets.cap * 2).max(8);
+        let old = std::mem::replace(&mut self.buckets, SlabBuckets::alloc(ctx, new_cap));
         self.mask = new_cap - 1;
         self.len = 0;
-        for (j, k) in old_keys.iter().enumerate() {
+        for (j, k) in old.keys().iter().enumerate() {
             if *k != EMPTY {
-                self.insert(ObjId::new(*k, old_gens[j]), old_vals[j]);
+                self.insert_no_grow(ObjId::new(*k, old.gens()[j]), old.vals()[j]);
             }
         }
+        old.free(ctx);
     }
 
     /// Iterate over `(key, value)` entries.
     pub fn iter(&self) -> impl Iterator<Item = (ObjId, ObjId)> + '_ {
-        self.keys
+        self.buckets
+            .keys()
             .iter()
             .enumerate()
             .filter(|(_, k)| **k != EMPTY)
-            .map(move |(i, k)| (ObjId::new(*k, self.key_gens[i]), self.vals[i]))
+            .map(move |(i, k)| {
+                (
+                    ObjId::new(*k, self.buckets.gens()[i]),
+                    self.buckets.vals()[i],
+                )
+            })
     }
 
     /// Rebuild the table keeping only entries for which `keep(key)` holds.
     /// This is the paper's sweep: entries whose key object has zero shared
     /// and weak counts can never be pulled again and are dropped. Returns
     /// the removed `(key, value)` pairs so the caller can adjust reference
-    /// counts.
-    pub fn sweep(&mut self, mut keep: impl FnMut(ObjId) -> bool) -> Vec<(ObjId, ObjId)> {
+    /// counts. The old bucket block is freed through `ctx`; a fresh
+    /// (smaller, if many entries died) block is allocated on demand.
+    pub(crate) fn sweep(
+        &mut self,
+        ctx: &mut RawCtx<'_>,
+        mut keep: impl FnMut(ObjId) -> bool,
+    ) -> Vec<(ObjId, ObjId)> {
         let mut removed = Vec::new();
         if self.len == 0 {
             return removed;
         }
-        let old_keys = std::mem::take(&mut self.keys);
-        let old_gens = std::mem::take(&mut self.key_gens);
-        let old_vals = std::mem::take(&mut self.vals);
+        let old = std::mem::replace(&mut self.buckets, SlabBuckets::empty());
         self.len = 0;
         self.mask = 0;
-        for (j, k) in old_keys.iter().enumerate() {
+        for (j, k) in old.keys().iter().enumerate() {
             if *k != EMPTY {
-                let key = ObjId::new(*k, old_gens[j]);
+                let key = ObjId::new(*k, old.gens()[j]);
                 if keep(key) {
-                    self.insert(key, old_vals[j]);
+                    self.insert(ctx, key, old.vals()[j]);
                 } else {
-                    removed.push((key, old_vals[j]));
+                    removed.push((key, old.vals()[j]));
                 }
             }
         }
+        old.free(ctx);
         removed
     }
 
-    /// Drain all entries, leaving the table empty.
-    pub fn drain_all(&mut self) -> Vec<(ObjId, ObjId)> {
+    /// Drain all entries, leaving the table empty and its bucket block
+    /// back on the allocator's free list.
+    pub(crate) fn drain_all(&mut self, ctx: &mut RawCtx<'_>) -> Vec<(ObjId, ObjId)> {
         let out: Vec<_> = self.iter().collect();
-        self.keys.clear();
-        self.key_gens.clear();
-        self.vals.clear();
+        let old = std::mem::replace(&mut self.buckets, SlabBuckets::empty());
+        old.free(ctx);
         self.len = 0;
         self.mask = 0;
         out
@@ -184,10 +332,34 @@ impl MemoTable {
 
 #[cfg(test)]
 mod tests {
+    use super::super::alloc::{AllocatorKind, SlabAlloc};
+    use super::super::metrics::HeapMetrics;
     use super::*;
 
     fn o(i: u32) -> ObjId {
         ObjId::new(i, 0)
+    }
+
+    /// Allocator + metrics backing one test's tables.
+    struct Arena {
+        alloc: SlabAlloc,
+        metrics: HeapMetrics,
+    }
+
+    impl Arena {
+        fn new() -> Arena {
+            Arena {
+                alloc: SlabAlloc::new(AllocatorKind::Slab),
+                metrics: HeapMetrics::default(),
+            }
+        }
+
+        fn ctx(&mut self) -> RawCtx<'_> {
+            RawCtx {
+                alloc: &mut self.alloc,
+                metrics: &mut self.metrics,
+            }
+        }
     }
 
     #[test]
@@ -195,79 +367,105 @@ mod tests {
         let t = MemoTable::new();
         assert_eq!(t.get(o(3)), None);
         assert!(t.is_empty());
+        assert_eq!(t.size_bytes(), 0);
     }
 
     #[test]
     fn insert_get_replace() {
+        let mut a = Arena::new();
         let mut t = MemoTable::new();
-        assert_eq!(t.insert(o(1), o(10)), None);
-        assert_eq!(t.insert(o(2), o(20)), None);
+        assert_eq!(t.insert(&mut a.ctx(), o(1), o(10)), None);
+        assert_eq!(t.insert(&mut a.ctx(), o(2), o(20)), None);
         assert_eq!(t.get(o(1)), Some(o(10)));
         assert_eq!(t.get(o(2)), Some(o(20)));
         assert_eq!(t.get(o(3)), None);
-        assert_eq!(t.insert(o(1), o(11)), Some(o(10)));
+        assert_eq!(t.insert(&mut a.ctx(), o(1), o(11)), Some(o(10)));
         assert_eq!(t.get(o(1)), Some(o(11)));
         assert_eq!(t.len(), 2);
+        t.drain_all(&mut a.ctx());
     }
 
     #[test]
     fn many_inserts_grow() {
+        let mut a = Arena::new();
         let mut t = MemoTable::new();
         for i in 0..1000 {
-            t.insert(o(i), o(i + 100_000));
+            t.insert(&mut a.ctx(), o(i), o(i + 100_000));
         }
         assert_eq!(t.len(), 1000);
         for i in 0..1000 {
             assert_eq!(t.get(o(i)), Some(o(i + 100_000)), "key {i}");
         }
         assert_eq!(t.get(o(5000)), None);
+        // Growth went through the raw slab path and freed every
+        // outgrown block.
+        assert!(a.metrics.slab_raw_allocs > 1);
+        assert_eq!(a.metrics.slab_raw_frees, a.metrics.slab_raw_allocs - 1);
+        t.drain_all(&mut a.ctx());
+        assert_eq!(a.metrics.slab_raw_frees, a.metrics.slab_raw_allocs);
     }
 
     #[test]
     fn sweep_removes_dead_keys() {
+        let mut a = Arena::new();
         let mut t = MemoTable::new();
         for i in 0..100 {
-            t.insert(o(i), o(i + 100));
+            t.insert(&mut a.ctx(), o(i), o(i + 100));
         }
-        let removed = t.sweep(|k| k.idx % 2 == 0);
+        let removed = t.sweep(&mut a.ctx(), |k| k.idx % 2 == 0);
         assert_eq!(removed.len(), 50);
         assert_eq!(t.len(), 50);
         assert_eq!(t.get(o(2)), Some(o(102)));
         assert_eq!(t.get(o(3)), None);
+        t.drain_all(&mut a.ctx());
     }
 
     #[test]
-    fn clone_preserves_entries() {
+    fn rebuilt_table_matches_source() {
+        // (The old `Clone` contract, now via explicit rebuild: memo
+        // cloning in `deep_copy` iterates + reinserts through a ctx.)
+        let mut a = Arena::new();
         let mut t = MemoTable::new();
         for i in 0..37 {
-            t.insert(o(i * 3), o(i));
+            t.insert(&mut a.ctx(), o(i * 3), o(i));
         }
-        let u = t.clone();
+        let mut u = MemoTable::new();
+        for (k, v) in t.iter().collect::<Vec<_>>() {
+            u.insert(&mut a.ctx(), k, v);
+        }
         for i in 0..37 {
             assert_eq!(u.get(o(i * 3)), Some(o(i)));
         }
+        t.drain_all(&mut a.ctx());
+        u.drain_all(&mut a.ctx());
     }
 
     #[test]
-    fn drain_all_empties() {
+    fn drain_all_empties_and_frees() {
+        let mut a = Arena::new();
         let mut t = MemoTable::new();
-        t.insert(o(1), o(2));
-        t.insert(o(3), o(4));
-        let all = t.drain_all();
+        t.insert(&mut a.ctx(), o(1), o(2));
+        t.insert(&mut a.ctx(), o(3), o(4));
+        let all = t.drain_all(&mut a.ctx());
         assert_eq!(all.len(), 2);
         assert!(t.is_empty());
         assert_eq!(t.get(o(1)), None);
+        assert_eq!(t.capacity(), 0, "drain returns the bucket block");
+        assert_eq!(a.metrics.slab_raw_bytes, 0);
+        assert_eq!(a.alloc.live_blocks(), 0);
     }
 
     #[test]
     fn colliding_keys_probe() {
         // Keys engineered to collide under the initial mask are still found.
+        let mut a = Arena::new();
         let mut t = MemoTable::new();
         for i in 0..8u32 {
-            t.insert(o(i * 8), o(i));
+            t.insert(&mut a.ctx(), o(i * 8), o(i));
         }
         for i in 0..8u32 {
             assert_eq!(t.get(o(i * 8)), Some(o(i)));
         }
+        t.drain_all(&mut a.ctx());
     }
 }

@@ -2,7 +2,12 @@
 //!
 //! These counters drive the paper's evaluation: peak memory (Figures 5–6),
 //! per-generation memory series (Figure 7), and the copy/sharing behaviour
-//! that explains them (eager vs lazy vs lazy+SRO).
+//! that explains them (eager vs lazy vs lazy+SRO) — plus the slab
+//! allocator's storage gauges (payload blocks, raw memo/label blocks,
+//! committed and decommitted chunks) that make long-run residency
+//! observable.
+
+use super::alloc::{AllocReceipt, FreeReceipt};
 
 /// Counters maintained by the [`Heap`](super::Heap). All sizes are in bytes.
 #[derive(Clone, Copy, Debug, Default)]
@@ -38,14 +43,16 @@ pub struct HeapMetrics {
     /// (Remark 1).
     pub sro_skips: usize,
 
-    /// Memo lookups that hit / missed.
+    /// Memo lookups that found a redirection.
     pub memo_hits: usize,
+    /// Memo lookups that found none (the probe ended the pull chase).
     pub memo_misses: usize,
     /// Entries removed by memo sweeps.
     pub memo_swept: usize,
 
-    /// `Pull` / `Get` operation counts.
+    /// `Pull` operations (Algorithm 4).
     pub pulls: usize,
+    /// `Get` operations (Algorithm 5).
     pub gets: usize,
     /// Objects frozen by `Freeze` traversals.
     pub freezes: usize,
@@ -82,14 +89,21 @@ pub struct HeapMetrics {
     /// Slab chunks committed (gauge).
     pub slab_chunks: usize,
     /// Bytes committed in slab chunks (gauge; `slab_chunks` ×
-    /// [`CHUNK_BYTES`](super::CHUNK_BYTES)).
+    /// [`CHUNK_BYTES`](super::CHUNK_BYTES)). Lowered by decommit
+    /// barriers ([`Heap::trim`](super::Heap::trim)).
     pub slab_committed_bytes: usize,
+    /// High-water mark of `slab_committed_bytes` (gauge). Unlike the
+    /// current committed gauge this never drops at decommit, which is
+    /// what keeps the fragmentation figure well-defined on trimming
+    /// heaps.
+    pub slab_committed_peak_bytes: usize,
     /// Bytes in slab blocks currently handed out, at block granularity
     /// (gauge). Occupancy = this / `slab_committed_bytes`.
     pub slab_live_block_bytes: usize,
-    /// High-water mark of `slab_live_block_bytes` (gauge). Fragmentation
-    /// at the allocator's fullest moment =
-    /// `1 - slab_block_peak_bytes / slab_committed_bytes`.
+    /// High-water mark of `slab_live_block_bytes + slab_raw_bytes` —
+    /// payload *and* memo/label blocks (gauge). Fragmentation at the
+    /// allocator's fullest moment =
+    /// `1 - slab_block_peak_bytes / slab_committed_peak_bytes`.
     pub slab_block_peak_bytes: usize,
     /// Payload allocations served from a class free list — reuse, the
     /// slab's whole point on resampling churn (counter).
@@ -100,6 +114,27 @@ pub struct HeapMetrics {
     /// or over-aligned for any class, and *every* allocation under the
     /// `system` backend (counter).
     pub slab_large_allocs: usize,
+
+    /// Raw-path allocations (memo bucket arrays, label slot storage)
+    /// served by the allocator — every per-heap dynamic structure routes
+    /// through here, on any backend (counter).
+    pub slab_raw_allocs: usize,
+    /// Raw-path blocks returned (memo rehashes/sweeps, label-vector
+    /// growth; counter).
+    pub slab_raw_frees: usize,
+    /// Bytes in live raw (memo/label) slab blocks, at block granularity
+    /// (gauge). Zero under the `system` backend and in scratch heaps,
+    /// whose raw allocations take the exact-layout path.
+    pub slab_raw_bytes: usize,
+
+    /// Slab chunks returned to the system allocator by decommit barriers
+    /// ([`Heap::trim`](super::Heap::trim); counter). Zero with decommit
+    /// off — which is what makes the long-run `alloc` bench contrast
+    /// (bounded vs monotone committed bytes) checkable.
+    pub decommitted_chunks: usize,
+    /// Bytes returned by decommit (`decommitted_chunks` ×
+    /// [`CHUNK_BYTES`](super::CHUNK_BYTES); counter).
+    pub decommitted_bytes: usize,
 }
 
 impl HeapMetrics {
@@ -137,6 +172,32 @@ impl HeapMetrics {
         }
     }
 
+    /// Mirror one raw-path (memo/label storage) allocation receipt into
+    /// the gauges. Raw allocations are counted apart from payload
+    /// allocations so `slab_freelist_hits + slab_fresh_bumps +
+    /// slab_large_allocs == total_allocs` stays a payload-only invariant.
+    pub(crate) fn note_raw_alloc(&mut self, r: &AllocReceipt) {
+        self.slab_raw_allocs += 1;
+        if r.new_chunk {
+            self.slab_chunks += 1;
+            self.slab_committed_bytes += super::CHUNK_BYTES;
+            if self.slab_committed_bytes > self.slab_committed_peak_bytes {
+                self.slab_committed_peak_bytes = self.slab_committed_bytes;
+            }
+        }
+        self.slab_raw_bytes += r.block_bytes;
+        let all = self.slab_live_block_bytes + self.slab_raw_bytes;
+        if all > self.slab_block_peak_bytes {
+            self.slab_block_peak_bytes = all;
+        }
+    }
+
+    /// Mirror one raw-path free receipt into the gauges.
+    pub(crate) fn note_raw_free(&mut self, r: &FreeReceipt) {
+        self.slab_raw_frees += 1;
+        self.slab_raw_bytes -= r.block_bytes;
+    }
+
     /// Exact delta since `earlier` (a [`MetricsScope`] snapshot of the
     /// same heap): monotone counters subtract; gauges (live/peak/memo
     /// footprints, slab occupancy, barrier samples) carry their *current*
@@ -169,11 +230,17 @@ impl HeapMetrics {
             scratch_peak_bytes,
             slab_chunks,
             slab_committed_bytes,
+            slab_committed_peak_bytes,
             slab_live_block_bytes,
             slab_block_peak_bytes,
             slab_freelist_hits,
             slab_fresh_bumps,
             slab_large_allocs,
+            slab_raw_allocs,
+            slab_raw_frees,
+            slab_raw_bytes,
+            decommitted_chunks,
+            decommitted_bytes,
         } = *self;
         HeapMetrics {
             // Gauges: current values.
@@ -186,8 +253,10 @@ impl HeapMetrics {
             scratch_peak_bytes,
             slab_chunks,
             slab_committed_bytes,
+            slab_committed_peak_bytes,
             slab_live_block_bytes,
             slab_block_peak_bytes,
+            slab_raw_bytes,
             // Counters: exact in-scope deltas.
             total_allocs: total_allocs - earlier.total_allocs,
             total_frees: total_frees - earlier.total_frees,
@@ -207,6 +276,10 @@ impl HeapMetrics {
             slab_freelist_hits: slab_freelist_hits - earlier.slab_freelist_hits,
             slab_fresh_bumps: slab_fresh_bumps - earlier.slab_fresh_bumps,
             slab_large_allocs: slab_large_allocs - earlier.slab_large_allocs,
+            slab_raw_allocs: slab_raw_allocs - earlier.slab_raw_allocs,
+            slab_raw_frees: slab_raw_frees - earlier.slab_raw_frees,
+            decommitted_chunks: decommitted_chunks - earlier.decommitted_chunks,
+            decommitted_bytes: decommitted_bytes - earlier.decommitted_bytes,
         }
     }
 
@@ -243,11 +316,17 @@ impl HeapMetrics {
             scratch_peak_bytes,
             slab_chunks,
             slab_committed_bytes,
+            slab_committed_peak_bytes,
             slab_live_block_bytes,
             slab_block_peak_bytes,
             slab_freelist_hits,
             slab_fresh_bumps,
             slab_large_allocs,
+            slab_raw_allocs,
+            slab_raw_frees,
+            slab_raw_bytes,
+            decommitted_chunks,
+            decommitted_bytes,
         } = *o;
         self.live_objects += live_objects;
         self.live_bytes += live_bytes;
@@ -271,11 +350,17 @@ impl HeapMetrics {
         self.transplants += transplants;
         self.slab_chunks += slab_chunks;
         self.slab_committed_bytes += slab_committed_bytes;
+        self.slab_committed_peak_bytes += slab_committed_peak_bytes;
         self.slab_live_block_bytes += slab_live_block_bytes;
         self.slab_block_peak_bytes += slab_block_peak_bytes;
         self.slab_freelist_hits += slab_freelist_hits;
         self.slab_fresh_bumps += slab_fresh_bumps;
         self.slab_large_allocs += slab_large_allocs;
+        self.slab_raw_allocs += slab_raw_allocs;
+        self.slab_raw_frees += slab_raw_frees;
+        self.slab_raw_bytes += slab_raw_bytes;
+        self.decommitted_chunks += decommitted_chunks;
+        self.decommitted_bytes += decommitted_bytes;
         // Barrier samples are global figures, not per-shard counters: the
         // aggregate carries the largest sample seen anywhere.
         self.global_peak_bytes = self.global_peak_bytes.max(global_peak_bytes);
@@ -323,11 +408,20 @@ impl HeapMetrics {
             // residency is accounted by `scratch_peak_bytes` instead.
             slab_chunks: _,
             slab_committed_bytes: _,
+            slab_committed_peak_bytes: _,
             slab_live_block_bytes: _,
             slab_block_peak_bytes: _,
+            slab_raw_bytes: _,
             slab_freelist_hits,
             slab_fresh_bumps,
             slab_large_allocs,
+            slab_raw_allocs,
+            slab_raw_frees,
+            // Scratch heaps never decommit (retain-everything pooling),
+            // but the fields are monotone counters: classify them as
+            // such so a future absorb of a trimming heap stays correct.
+            decommitted_chunks,
+            decommitted_bytes,
         } = *o;
         self.total_allocs += total_allocs;
         self.total_frees += total_frees;
@@ -347,6 +441,10 @@ impl HeapMetrics {
         self.slab_freelist_hits += slab_freelist_hits;
         self.slab_fresh_bumps += slab_fresh_bumps;
         self.slab_large_allocs += slab_large_allocs;
+        self.slab_raw_allocs += slab_raw_allocs;
+        self.slab_raw_frees += slab_raw_frees;
+        self.decommitted_chunks += decommitted_chunks;
+        self.decommitted_bytes += decommitted_bytes;
     }
 
     /// Free-list hit rate of the slab allocator (0.0 when no slab
@@ -361,19 +459,21 @@ impl HeapMetrics {
     }
 
     /// Unused committed-slab fraction at the allocator's fullest moment
-    /// (0.0 when nothing was committed).
+    /// (0.0 when nothing was committed). Both terms are high-water marks
+    /// — the committed *peak*, not the current (possibly decommitted)
+    /// gauge — so the figure stays in [0, 1] on trimming heaps.
     pub fn slab_fragmentation(&self) -> f64 {
-        if self.slab_committed_bytes == 0 {
+        if self.slab_committed_peak_bytes == 0 {
             0.0
         } else {
-            1.0 - self.slab_block_peak_bytes as f64 / self.slab_committed_bytes as f64
+            1.0 - self.slab_block_peak_bytes as f64 / self.slab_committed_peak_bytes as f64
         }
     }
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "live={} objs / {} B (peak {} B), labels={}, copies: lazy={} eager={} thaw={} sro_skips={}, memo: hits={} misses={} swept={}, cross_refs={}, transplants={}, slab: chunks={} hits={} bumps={} large={}",
+            "live={} objs / {} B (peak {} B), labels={}, copies: lazy={} eager={} thaw={} sro_skips={}, memo: hits={} misses={} swept={}, cross_refs={}, transplants={}, slab: chunks={} hits={} bumps={} large={} raw={}/{} decommitted={}",
             self.live_objects,
             self.live_bytes,
             self.peak_bytes,
@@ -391,6 +491,9 @@ impl HeapMetrics {
             self.slab_freelist_hits,
             self.slab_fresh_bumps,
             self.slab_large_allocs,
+            self.slab_raw_allocs,
+            self.slab_raw_frees,
+            self.decommitted_chunks,
         )
     }
 }
@@ -536,11 +639,14 @@ mod tests {
         let m = HeapMetrics {
             slab_freelist_hits: 30,
             slab_fresh_bumps: 10,
-            slab_committed_bytes: 1000,
+            slab_committed_bytes: 400,
+            slab_committed_peak_bytes: 1000,
             slab_block_peak_bytes: 600,
             ..Default::default()
         };
         assert!((m.slab_hit_rate() - 0.75).abs() < 1e-12);
+        // Fragmentation divides by the committed *peak*, so a decommitted
+        // heap (committed < peak) still reports a sane [0, 1] figure.
         assert!((m.slab_fragmentation() - 0.4).abs() < 1e-12);
         let z = HeapMetrics::default();
         assert_eq!(z.slab_hit_rate(), 0.0);
@@ -574,6 +680,64 @@ mod tests {
         assert_eq!(c.slab_large_allocs, 1);
         assert_eq!(c.slab_chunks, 0);
         assert_eq!(c.slab_committed_bytes, 0);
+    }
+
+    #[test]
+    fn raw_and_decommit_fields_classified() {
+        // merge adds everything; merge_counters adds the raw/decommit
+        // counters but skips the raw gauge; delta subtracts counters and
+        // carries the gauge.
+        let src = HeapMetrics {
+            slab_raw_allocs: 5,
+            slab_raw_frees: 3,
+            slab_raw_bytes: 256,
+            decommitted_chunks: 2,
+            decommitted_bytes: 2 * 65536,
+            ..Default::default()
+        };
+        let mut a = HeapMetrics::default();
+        a.merge(&src);
+        assert_eq!(a.slab_raw_allocs, 5);
+        assert_eq!(a.slab_raw_frees, 3);
+        assert_eq!(a.slab_raw_bytes, 256);
+        assert_eq!(a.decommitted_chunks, 2);
+        assert_eq!(a.decommitted_bytes, 2 * 65536);
+        let mut b = HeapMetrics::default();
+        b.merge_counters(&src);
+        assert_eq!(b.slab_raw_allocs, 5);
+        assert_eq!(b.slab_raw_frees, 3);
+        assert_eq!(b.slab_raw_bytes, 0, "raw gauge dies with the scratch");
+        assert_eq!(b.decommitted_chunks, 2);
+        let scope = MetricsScope::open(&src);
+        let mut later = src;
+        later.slab_raw_allocs += 4;
+        later.decommitted_chunks += 1;
+        later.slab_raw_bytes = 512;
+        let d = scope.close(&later);
+        assert_eq!(d.slab_raw_allocs, 4);
+        assert_eq!(d.decommitted_chunks, 1);
+        assert_eq!(d.slab_raw_bytes, 512, "gauges carry current values");
+    }
+
+    #[test]
+    fn note_raw_alloc_free_track_gauges() {
+        let mut m = HeapMetrics::default();
+        m.note_raw_alloc(&AllocReceipt {
+            reused: false,
+            large: false,
+            block_bytes: 128,
+            new_chunk: true,
+        });
+        assert_eq!(m.slab_raw_allocs, 1);
+        assert_eq!(m.slab_raw_bytes, 128);
+        assert_eq!(m.slab_chunks, 1);
+        assert_eq!(m.slab_committed_bytes, super::super::CHUNK_BYTES);
+        assert_eq!(m.slab_committed_peak_bytes, super::super::CHUNK_BYTES);
+        assert_eq!(m.slab_block_peak_bytes, 128, "raw bytes count in the peak");
+        m.note_raw_free(&FreeReceipt { block_bytes: 128 });
+        assert_eq!(m.slab_raw_frees, 1);
+        assert_eq!(m.slab_raw_bytes, 0);
+        assert_eq!(m.slab_block_peak_bytes, 128, "peak is a high-water mark");
     }
 
     #[test]

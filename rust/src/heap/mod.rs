@@ -38,15 +38,19 @@ mod payload;
 mod shard;
 mod slot;
 
-pub use self::alloc::{AllocatorKind, PBox, SlabAlloc, CHUNK_BYTES};
+pub use self::alloc::{
+    AllocatorKind, PBox, SlabAlloc, CHUNK_BYTES, DEFAULT_DECOMMIT_WATERMARK,
+};
 pub use ids::{LabelId, ObjId};
 pub use lazy::{Lazy, RawLazy};
 pub use memo::MemoTable;
 pub use metrics::{HeapMetrics, MetricsScope};
 pub use payload::{EdgeSlot, Payload};
-pub use shard::{aggregate_metrics, sample_global_peak, shard_of, shard_ranges, ShardedHeap};
+pub use shard::{
+    aggregate_metrics, sample_global_peak, shard_of, shard_ranges, trim_shards, ShardedHeap,
+};
 
-use self::alloc::{AllocReceipt, FreeReceipt};
+use self::alloc::{AllocReceipt, FreeReceipt, RawCtx, SlabVec};
 use slot::{Slot, OBJ_OVERHEAD};
 
 /// Copy strategy, corresponding to the paper's three evaluation
@@ -62,10 +66,12 @@ pub enum CopyMode {
 }
 
 impl CopyMode {
+    /// Whether deep copies defer object copying (either lazy mode).
     pub fn is_lazy(self) -> bool {
         !matches!(self, CopyMode::Eager)
     }
 
+    /// Parse a mode name as accepted by `--mode`.
     pub fn parse(s: &str) -> Option<CopyMode> {
         match s {
             "eager" => Some(CopyMode::Eager),
@@ -75,6 +81,7 @@ impl CopyMode {
         }
     }
 
+    /// Canonical name (CLI/bench labels).
     pub fn name(self) -> &'static str {
         match self {
             CopyMode::Eager => "eager",
@@ -83,9 +90,12 @@ impl CopyMode {
         }
     }
 
+    /// Every mode, in the paper's presentation order (test sweeps).
     pub const ALL: [CopyMode; 3] = [CopyMode::Eager, CopyMode::Lazy, CopyMode::LazySro];
 }
 
+/// Per-label record: the memo `m_l` plus the label's shared count and
+/// generation tag. Lives in the slab-resident label vector.
 struct LabelSlot {
     memo: MemoTable,
     shared: u32,
@@ -98,10 +108,17 @@ struct LabelSlot {
 pub struct Heap {
     slots: Vec<Slot>,
     free_slots: Vec<u32>,
-    labels: Vec<LabelSlot>,
+    /// Label records. Slab-resident ([`SlabVec`]): growth allocates
+    /// through the raw path of `alloc`, so label-population churn reuses
+    /// freed same-class blocks. Declared before `alloc` so teardown
+    /// drops the records (and their memo bucket blocks) while the chunks
+    /// they point into are still allocated.
+    labels: SlabVec<LabelSlot>,
     free_labels: Vec<u32>,
     mode: CopyMode,
     context: Vec<LabelId>,
+    /// Live instrumentation (see [`HeapMetrics`]); maintained eagerly by
+    /// every operation.
     pub metrics: HeapMetrics,
     // Deferred reference-count release queues (drained iteratively to avoid
     // unbounded recursion on long death cascades).
@@ -143,7 +160,7 @@ impl Heap {
         let mut h = Heap {
             slots: Vec::new(),
             free_slots: Vec::new(),
-            labels: Vec::new(),
+            labels: SlabVec::new(),
             free_labels: Vec::new(),
             mode,
             context: vec![ROOT_LABEL],
@@ -156,17 +173,26 @@ impl Heap {
             live_cross_edges: 0,
             alloc,
         };
-        // Pinned root label (never collected).
-        h.labels.push(LabelSlot {
-            memo: MemoTable::new(),
-            shared: 1,
-            gen: 0,
-            alive: true,
-        });
+        // Pinned root label (never collected). The push routes the label
+        // vector's first backing block through the slab raw path.
+        let mut ctx = RawCtx {
+            alloc: &mut h.alloc,
+            metrics: &mut h.metrics,
+        };
+        h.labels.push(
+            &mut ctx,
+            LabelSlot {
+                memo: MemoTable::new(),
+                shared: 1,
+                gen: 0,
+                alive: true,
+            },
+        );
         h.metrics.live_labels = 1;
         h
     }
 
+    /// This heap's copy mode.
     #[inline]
     pub fn mode(&self) -> CopyMode {
         self.mode
@@ -187,8 +213,16 @@ impl Heap {
 
     /// Rewind a *drained* scratch heap's payload storage so its chunks
     /// can be reused without touching the system allocator. Requires
-    /// zero live objects.
+    /// zero live objects and a bump-only (scratch) allocator: in a
+    /// reuse-mode heap the label vector and memo buckets live in the
+    /// slabs, so a bump rewind would hand their storage out again.
+    /// (Scratch raw allocations take the exact-layout path precisely so
+    /// this reset stays sound.)
     pub fn reset_storage(&mut self) {
+        assert!(
+            self.alloc.is_bump_only(),
+            "reset_storage is the scratch-heap bulk reclaim"
+        );
         assert_eq!(
             self.metrics.live_objects, 0,
             "reset_storage on a heap with live objects"
@@ -213,10 +247,33 @@ impl Heap {
         self.metrics = HeapMetrics {
             live_labels: 1,
             // Retained storage carries over; everything else starts over.
+            // (`slab_raw_bytes` too: the label vector's backing store —
+            // exact-layout in a scratch heap — survives the recycle.)
             slab_chunks: self.metrics.slab_chunks,
             slab_committed_bytes: self.metrics.slab_committed_bytes,
+            slab_committed_peak_bytes: self.metrics.slab_committed_peak_bytes,
+            slab_raw_bytes: self.metrics.slab_raw_bytes,
             ..HeapMetrics::default()
         };
+    }
+
+    /// Decommit barrier: return fully-empty slab
+    /// chunks beyond `keep` per size class to the system allocator,
+    /// folding the result into the `decommitted_*` counters and lowering
+    /// the committed gauges. Call at generation barriers (the SMC engine
+    /// does, via [`trim_shards`], when `decommit_watermark` is set);
+    /// outputs are bit-identical whether and how often this runs. No-op
+    /// for scratch heaps (retain-everything pooling) and the `system`
+    /// backend.
+    pub fn trim(&mut self, keep: usize) {
+        let stats = self.alloc.trim(keep);
+        if stats.chunks > 0 {
+            let m = &mut self.metrics;
+            m.slab_chunks -= stats.chunks;
+            m.slab_committed_bytes -= stats.bytes;
+            m.decommitted_chunks += stats.chunks;
+            m.decommitted_bytes += stats.bytes;
+        }
     }
 
     // ------------------------------------------------------------------
@@ -254,11 +311,15 @@ impl Heap {
             if r.new_chunk {
                 m.slab_chunks += 1;
                 m.slab_committed_bytes += CHUNK_BYTES;
+                if m.slab_committed_bytes > m.slab_committed_peak_bytes {
+                    m.slab_committed_peak_bytes = m.slab_committed_bytes;
+                }
             }
         }
         m.slab_live_block_bytes += r.block_bytes;
-        if m.slab_live_block_bytes > m.slab_block_peak_bytes {
-            m.slab_block_peak_bytes = m.slab_live_block_bytes;
+        let all = m.slab_live_block_bytes + m.slab_raw_bytes;
+        if all > m.slab_block_peak_bytes {
+            m.slab_block_peak_bytes = all;
         }
     }
 
@@ -273,10 +334,12 @@ impl Heap {
         *self.context.last().expect("context stack never empty")
     }
 
+    /// Push a context label (prefer [`Heap::with_context`]).
     pub fn push_context(&mut self, l: LabelId) {
         self.context.push(l);
     }
 
+    /// Pop the top context label (must not pop the root context).
     pub fn pop_context(&mut self) {
         assert!(self.context.len() > 1, "cannot pop the root context");
         self.context.pop();
@@ -354,17 +417,25 @@ impl Heap {
         let id = if let Some(idx) = self.free_labels.pop() {
             let s = &mut self.labels[idx as usize];
             debug_assert!(!s.alive);
+            debug_assert_eq!(s.memo.capacity(), 0, "dead label kept bucket storage");
             s.memo = memo;
             s.shared = 0;
             s.alive = true;
             LabelId::new(idx, s.gen)
         } else {
-            self.labels.push(LabelSlot {
-                memo,
-                shared: 0,
-                gen: 0,
-                alive: true,
-            });
+            let mut ctx = RawCtx {
+                alloc: &mut self.alloc,
+                metrics: &mut self.metrics,
+            };
+            self.labels.push(
+                &mut ctx,
+                LabelSlot {
+                    memo,
+                    shared: 0,
+                    gen: 0,
+                    alive: true,
+                },
+            );
             LabelId::new((self.labels.len() - 1) as u32, 0)
         };
         self.metrics.note_peak();
@@ -507,13 +578,18 @@ impl Heap {
     }
 
     fn kill_label(&mut self, l: LabelId) {
-        let s = &mut self.labels[l.idx as usize];
-        s.alive = false;
         self.metrics.live_labels -= 1;
-        self.metrics.memo_bytes -= s.memo.size_bytes();
-        let entries = s.memo.drain_all();
-        let gen = s.gen.wrapping_add(1);
-        s.gen = gen;
+        self.metrics.memo_bytes -= self.labels[l.idx as usize].memo.size_bytes();
+        let entries = {
+            let s = &mut self.labels[l.idx as usize];
+            s.alive = false;
+            s.gen = s.gen.wrapping_add(1);
+            let mut ctx = RawCtx {
+                alloc: &mut self.alloc,
+                metrics: &mut self.metrics,
+            };
+            s.memo.drain_all(&mut ctx)
+        };
         self.free_labels.push(l.idx);
         for (k, v) in entries {
             self.dec_memo_count(k);
@@ -530,6 +606,27 @@ impl Heap {
     /// value is placement-written straight into the slab — the typed hot
     /// path never touches the system allocator once its size class is
     /// warm.
+    ///
+    /// ```
+    /// use lazycow::heap::{CopyMode, Heap, Lazy};
+    /// use lazycow::lazy_fields;
+    ///
+    /// #[derive(Clone)]
+    /// struct Node { value: i64, next: Lazy<Node> }
+    /// lazy_fields!(Node: next);
+    ///
+    /// let mut heap = Heap::new(CopyMode::LazySro);
+    /// let tail = heap.alloc(Node { value: 2, next: Lazy::NULL });
+    /// let mut head = heap.alloc(Node { value: 1, next: tail });
+    /// // The stored edge now owns a reference; drop the stack handle.
+    /// heap.release(tail);
+    /// assert_eq!(heap.read(&mut head, |n| n.value), 1);
+    /// let mut next = heap.read_ptr(&mut head, |n| n.next);
+    /// assert_eq!(heap.read(&mut next, |n| n.value), 2);
+    /// heap.release(head);
+    /// heap.sweep_memos();
+    /// assert_eq!(heap.live_objects(), 0);
+    /// ```
     pub fn alloc<T: Payload>(&mut self, value: T) -> Lazy<T> {
         let (payload, receipt) = self.alloc.alloc_value(value);
         self.note_alloc(receipt);
@@ -631,6 +728,7 @@ impl Heap {
         self.release_raw(e.raw);
     }
 
+    /// Release an owning handle by its untyped edge.
     pub fn release_raw(&mut self, e: RawLazy) {
         if e.is_null() {
             return;
@@ -744,7 +842,14 @@ impl Heap {
     fn memo_insert(&mut self, l: LabelId, v: ObjId, u: ObjId) {
         debug_assert!(self.label_alive(l));
         let before = self.labels[l.idx as usize].memo.size_bytes();
-        let prev = self.labels[l.idx as usize].memo.insert(v, u);
+        let prev = {
+            let memo = &mut self.labels[l.idx as usize].memo;
+            let mut ctx = RawCtx {
+                alloc: &mut self.alloc,
+                metrics: &mut self.metrics,
+            };
+            memo.insert(&mut ctx, v, u)
+        };
         debug_assert!(prev.is_none(), "double copy of {v:?} under {l:?}");
         let after = self.labels[l.idx as usize].memo.size_bytes();
         self.metrics.memo_bytes += after - before;
@@ -919,6 +1024,7 @@ impl Heap {
         Lazy::from_raw(self.deep_copy_raw(e.raw))
     }
 
+    /// Untyped [`Heap::deep_copy`].
     pub fn deep_copy_raw(&mut self, e: RawLazy) -> RawLazy {
         if e.obj.is_null() {
             return RawLazy::NULL;
@@ -953,8 +1059,14 @@ impl Heap {
                 }
             }
             self.metrics.memo_swept += swept;
-            for (k, v) in &keep {
-                cloned.insert(*k, *v);
+            {
+                let mut ctx = RawCtx {
+                    alloc: &mut self.alloc,
+                    metrics: &mut self.metrics,
+                };
+                for (k, v) in &keep {
+                    cloned.insert(&mut ctx, *k, *v);
+                }
             }
             for (k, v) in keep {
                 self.slot_mut(k).memo += 1;
@@ -1197,6 +1309,7 @@ impl Heap {
         Lazy::from_raw(self.extract_into_raw(e.raw, dst))
     }
 
+    /// Untyped [`Heap::extract_into`].
     pub fn extract_into_raw(&mut self, root: RawLazy, dst: &mut Heap) -> RawLazy {
         use std::collections::HashMap;
         if root.is_null() {
@@ -1540,10 +1653,17 @@ impl Heap {
                 // Collect liveness of keys first (cannot borrow slots while
                 // sweeping the table in place).
                 let dead: Vec<(ObjId, ObjId)> = {
-                    let slots = &self.slots;
-                    self.labels[i]
+                    let Heap {
+                        labels,
+                        slots,
+                        alloc,
+                        metrics,
+                        ..
+                    } = self;
+                    let mut ctx = RawCtx { alloc, metrics };
+                    labels[i]
                         .memo
-                        .sweep(|k| slots[k.idx as usize].shared > 0)
+                        .sweep(&mut ctx, |k| slots[k.idx as usize].shared > 0)
                 };
                 let after = self.labels[i].memo.size_bytes();
                 self.metrics.memo_bytes = self.metrics.memo_bytes + after - before;
@@ -1567,22 +1687,27 @@ impl Heap {
     // Introspection (tests, metrics, invariant checking)
     // ------------------------------------------------------------------
 
+    /// Whether the object is read-only (`v ∈ R`).
     pub fn is_frozen(&self, o: ObjId) -> bool {
         self.slot(o).frozen
     }
 
+    /// The object's shared (owning-reference) count.
     pub fn shared_count(&self, o: ObjId) -> u32 {
         self.slot(o).shared
     }
 
+    /// The object's creating label `f(v)`.
     pub fn creator_label(&self, o: ObjId) -> LabelId {
         self.slot(o).label
     }
 
+    /// Objects currently live.
     pub fn live_objects(&self) -> usize {
         self.metrics.live_objects
     }
 
+    /// Labels currently live (including the pinned root label).
     pub fn live_labels(&self) -> usize {
         self.metrics.live_labels
     }
@@ -1666,9 +1791,18 @@ impl Heap {
                     continue;
                 }
                 let before = self.labels[i].memo.size_bytes();
-                let dead: Vec<(ObjId, ObjId)> = self.labels[i]
-                    .memo
-                    .sweep(|k| live.contains(&(i as u32, k.idx)));
+                let dead: Vec<(ObjId, ObjId)> = {
+                    let Heap {
+                        labels,
+                        alloc,
+                        metrics,
+                        ..
+                    } = self;
+                    let mut ctx = RawCtx { alloc, metrics };
+                    labels[i]
+                        .memo
+                        .sweep(&mut ctx, |k| live.contains(&(i as u32, k.idx)))
+                };
                 let after = self.labels[i].memo.size_bytes();
                 self.metrics.memo_bytes = self.metrics.memo_bytes + after - before;
                 if !dead.is_empty() {
@@ -1752,7 +1886,7 @@ impl Heap {
                 }
             }
         }
-        for l in &self.labels {
+        for l in self.labels.iter() {
             if !l.alive {
                 continue;
             }

@@ -62,7 +62,9 @@ pub trait Payload: Any + Send {
     /// that layout's alignment.
     unsafe fn move_into(self: Box<Self>, dst: *mut u8) -> *mut dyn Payload;
 
+    /// Upcast for typed reads ([`Heap::read`](super::Heap::read)).
     fn as_any(&self) -> &dyn Any;
+    /// Upcast for typed mutation ([`Heap::mutate`](super::Heap::mutate)).
     fn as_any_mut(&mut self) -> &mut dyn Any;
 }
 
@@ -139,7 +141,9 @@ macro_rules! lazy_fields {
 
 /// A field that stores zero or more lazy pointers.
 pub trait EdgeSlot {
+    /// Append the slot's non-null edges to `out`.
     fn collect(&self, out: &mut Vec<RawLazy>);
+    /// Visit every edge slot mutably (null slots included).
     fn visit_mut(&mut self, f: &mut dyn FnMut(&mut RawLazy));
 }
 

@@ -62,6 +62,17 @@ pub fn aggregate_metrics(shards: &[Heap]) -> HeapMetrics {
     m
 }
 
+/// Decommit barrier over a shard slice (see [`Heap::trim`]): return
+/// fully-empty slab chunks beyond `keep` per size class, per shard, to
+/// the system allocator. The SMC engine calls this at generation
+/// barriers when `RunConfig::decommit_watermark` is set; outputs are
+/// bit-identical whether it runs or not.
+pub fn trim_shards(shards: &mut [Heap], keep: usize) {
+    for h in shards {
+        h.trim(keep);
+    }
+}
+
 /// Barrier sample for the exact global peak: sum the *current* footprint
 /// of every shard at this instant and fold the sum into the running
 /// `global_peak_bytes` (recorded on shard 0; [`HeapMetrics::merge`]
@@ -107,6 +118,7 @@ impl ShardedHeap {
         }
     }
 
+    /// Number of shards K.
     #[inline]
     pub fn k(&self) -> usize {
         self.shards.len()
@@ -118,26 +130,31 @@ impl ShardedHeap {
         self.shards[0].allocator_kind()
     }
 
+    /// Copy mode shared by every shard.
     #[inline]
     pub fn mode(&self) -> CopyMode {
         self.mode
     }
 
+    /// Borrow the shard slice.
     #[inline]
     pub fn shards(&self) -> &[Heap] {
         &self.shards
     }
 
+    /// Borrow the shard slice mutably (what propagation fans out over).
     #[inline]
     pub fn shards_mut(&mut self) -> &mut [Heap] {
         &mut self.shards
     }
 
+    /// Borrow one shard.
     #[inline]
     pub fn shard(&self, s: usize) -> &Heap {
         &self.shards[s]
     }
 
+    /// Borrow one shard mutably.
     #[inline]
     pub fn shard_mut(&mut self, s: usize) -> &mut Heap {
         &mut self.shards[s]
@@ -165,6 +182,14 @@ impl ShardedHeap {
     /// (see [`sample_global_peak`]).
     pub fn sample_global_peak(&mut self) -> usize {
         sample_global_peak(&mut self.shards)
+    }
+
+    /// Decommit barrier over every shard (see [`Heap::trim`]): return
+    /// fully-empty slab chunks beyond `keep` per size class to the
+    /// system allocator. Long-running servers call this at quiescent
+    /// points to bound committed residency.
+    pub fn trim_all(&mut self, keep: usize) {
+        trim_shards(&mut self.shards, keep);
     }
 }
 

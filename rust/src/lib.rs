@@ -2,12 +2,69 @@
 //! probabilistic programming.
 //!
 //! A from-scratch reproduction of Murray (2020), "Lazy object copy as a
-//! platform for population-based probabilistic programming", as a
-//! three-layer Rust + JAX + Pallas stack, extended with a sharded heap
-//! ([`heap::ShardedHeap`]) that runs particle propagation shard-parallel
-//! with cross-shard lineage transplant at resampling. See `DESIGN.md`
-//! (this directory) for the system inventory, the shard/transplant
-//! architecture, and the threading model.
+//! platform for population-based probabilistic programming"
+//! (arXiv:2001.05293), grown into a sharded, work-stealing,
+//! slab-allocated SMC platform. See `DESIGN.md` (this directory) for the
+//! full system inventory; this page is the architecture tour.
+//!
+//! # Architecture tour: graph → heap → alloc → smc → models
+//!
+//! - [`graph`] holds the paper's §2 *formal semantics*: the labeled
+//!   multigraph model of lazy copies, an executable small-step oracle,
+//!   and fuzz tests that pin the production heap against it. Read this
+//!   first to understand *what* the platform promises.
+//! - [`heap`] is the production platform: objects in generation-tagged
+//!   slots, lazy pointers ([`heap::Lazy`]) as (object, label) id pairs,
+//!   and the paper's operations — `Pull`, `Get`, `Copy`, `Freeze`,
+//!   `Finish`, and the O(1) [`deep_copy`](heap::Heap::deep_copy) — plus
+//!   the [`ShardedHeap`](heap::ShardedHeap): K independent heaps with
+//!   cross-shard lineage transplant for lock-free parallel propagation.
+//! - [`heap::alloc`] owns every byte the heap allocates: a size-class
+//!   slab allocator for payloads *and* (via a raw-bytes path) for memo
+//!   tables and label storage, with free-list reuse tuned to resampling
+//!   churn and a watermark decommit pass
+//!   ([`Heap::trim`](heap::Heap::trim)) bounding long-run residency.
+//! - [`smc`] is the population coordinator: bootstrap / auxiliary /
+//!   alive particle filters and particle Gibbs over the (sharded) heap,
+//!   with cost-driven rebalancing ([`smc::rebalance`]) and
+//!   intra-generation work stealing. Outputs are bit-identical across
+//!   every scheduling and storage configuration.
+//! - [`models`] are the paper's §4 evaluation problems (RBPF, PCFG, VBD,
+//!   MOT, CRBD, plus the linked-list microbenchmark), each implementing
+//!   [`smc::SmcModel`].
+//!
+//! Supporting substrate: [`pool`] (scoped static-scheduling executors
+//! and the work-stealing yard), [`rng`] (counter-keyed PCG streams —
+//! the determinism backbone), [`stats`] / [`linalg`] (weight math),
+//! [`ppl`] (delayed-sampling building blocks), [`prop`]
+//! (property-test harness), [`runtime`] (optional PJRT-compiled
+//! kernels), [`config`] / [`cli`] / [`bench`] (the launcher).
+//!
+//! # A taste of the API
+//!
+//! ```
+//! use lazycow::heap::{CopyMode, Heap, Lazy};
+//! use lazycow::lazy_fields;
+//!
+//! #[derive(Clone)]
+//! struct Node {
+//!     value: i64,
+//!     next: Lazy<Node>,
+//! }
+//! lazy_fields!(Node: next);
+//!
+//! let mut heap = Heap::new(CopyMode::LazySro);
+//! let a = heap.alloc(Node { value: 1, next: Lazy::NULL });
+//! // O(1) deep copy; nothing is copied until written through.
+//! let mut b = heap.deep_copy(&a);
+//! heap.mutate_root(&mut b, |n| n.value = 2);
+//! assert_eq!(heap.read(&mut b.clone(), |n| n.value), 2);
+//! assert_eq!(heap.read(&mut a.clone(), |n| n.value), 1, "original intact");
+//! heap.release(a);
+//! heap.release(b);
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod cli;

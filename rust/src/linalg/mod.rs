@@ -9,12 +9,16 @@
 /// Column-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Column-major storage (`data[j * rows + i]` is element (i, j)).
     pub data: Vec<f64>,
 }
 
 impl Mat {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat {
             rows,
@@ -23,6 +27,7 @@ impl Mat {
         }
     }
 
+    /// Identity matrix.
     pub fn eye(n: usize) -> Self {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
@@ -31,6 +36,7 @@ impl Mat {
         m
     }
 
+    /// Build from row slices (all the same length).
     pub fn from_rows(rows: &[&[f64]]) -> Self {
         let r = rows.len();
         let c = rows[0].len();
@@ -44,6 +50,7 @@ impl Mat {
         m
     }
 
+    /// Column vector (n x 1).
     pub fn col_vec(v: &[f64]) -> Self {
         Mat {
             rows: v.len(),
@@ -53,15 +60,18 @@ impl Mat {
     }
 
     #[inline]
+    /// Element (i, j).
     pub fn at(&self, i: usize, j: usize) -> f64 {
         self.data[j * self.rows + i]
     }
 
     #[inline]
+    /// Mutable element (i, j).
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
         &mut self.data[j * self.rows + i]
     }
 
+    /// Transpose.
     pub fn t(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -72,6 +82,7 @@ impl Mat {
         out
     }
 
+    /// Matrix product `self · other`.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "shape mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
@@ -89,6 +100,7 @@ impl Mat {
         out
     }
 
+    /// Elementwise sum.
     pub fn add(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let mut out = self.clone();
@@ -98,6 +110,7 @@ impl Mat {
         out
     }
 
+    /// Elementwise difference.
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let mut out = self.clone();
@@ -107,6 +120,7 @@ impl Mat {
         out
     }
 
+    /// Scalar multiple.
     pub fn scale(&self, s: f64) -> Mat {
         let mut out = self.clone();
         for a in out.data.iter_mut() {

@@ -57,6 +57,12 @@ fn cli() -> Cli {
         "",
         "payload storage backend: system|slab (default slab; output identical either way)",
     )
+    .flag(
+        "decommit-watermark",
+        "",
+        "empty slab chunks kept per size class before decommitting to the OS at generation \
+         barriers (integer, or off to disable; default 2; output identical either way)",
+    )
     .flag("reps", "5", "benchmark repetitions")
     .flag("scale", "default", "scale preset: default|paper")
     .flag("config", "", "config file (key = value lines)")
@@ -128,6 +134,11 @@ fn build_config(args: &lazycow::cli::Args) -> Result<RunConfig, String> {
     }
     if let Some(kind) = parse_allocator(args)? {
         cfg.allocator = kind;
+    }
+    if let Some(w) = args.get("decommit-watermark") {
+        if !w.is_empty() {
+            cfg.apply("decommit-watermark", w)?;
+        }
     }
     cfg.use_xla = !args.get_bool("no-xla");
     cfg.series = args.get_bool("series");
@@ -224,10 +235,15 @@ fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
     println!("heap: {}", m.summary());
     if cfg.allocator == AllocatorKind::Slab {
         println!(
-            "slab: hit_rate={:.3} fragmentation={:.3} committed={}",
+            "slab: hit_rate={:.3} fragmentation={:.3} committed={} decommitted={} ({} chunks, watermark {})",
             m.slab_hit_rate(),
             m.slab_fragmentation(),
-            human_bytes(m.slab_committed_bytes as f64)
+            human_bytes(m.slab_committed_bytes as f64),
+            human_bytes(m.decommitted_bytes as f64),
+            m.decommitted_chunks,
+            cfg.decommit_watermark
+                .map(|w| w.to_string())
+                .unwrap_or_else(|| "off".to_string()),
         );
     }
     if cfg.series {

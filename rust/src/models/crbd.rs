@@ -37,16 +37,21 @@ pub struct TreeEvent {
     pub remaining: f64,
 }
 
+/// A particle's inference state over the tree's event sequence.
 #[derive(Clone)]
 pub struct CrbdState {
     /// Marginalized birth rate: λ ~ Gamma, speciations ~ Poisson(λ·E).
     pub lambda: GammaPoissonNode,
+    /// Branching events processed so far.
     pub events_done: u32,
+    /// Previous event's state (the history chain).
     pub prev: Lazy<CrbdState>,
 }
 lazy_fields!(CrbdState: prev);
 
+/// The constant-rate birth-death model over an observed tree.
 pub struct Crbd {
+    /// The observed tree's branching events, oldest first.
     pub events: Vec<TreeEvent>,
 }
 

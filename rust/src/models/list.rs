@@ -9,21 +9,30 @@ use crate::lazy_fields;
 use crate::rng::{normal_lpdf, Pcg64};
 use crate::smc::SmcModel;
 
+/// One generation of a particle's history: a cons cell of the chain.
 #[derive(Clone)]
 pub struct ListState {
+    /// Latent state value at this generation.
     pub x: f64,
+    /// Previous generation (null at t = 0).
     pub prev: Lazy<ListState>,
 }
 lazy_fields!(ListState: prev);
 
+/// The 1-D linear-Gaussian SSM: x' = a·x + N(0, q), y = x + N(0, r).
 pub struct ListModel {
+    /// Dynamics coefficient a.
     pub a: f64,
+    /// Process-noise variance q.
     pub q: f64,
+    /// Observation-noise variance r.
     pub r: f64,
+    /// Observations, one per generation.
     pub obs: Vec<f64>,
 }
 
 impl ListModel {
+    /// Simulate `t_max` observations from the model itself.
     pub fn synthetic(t_max: usize, seed: u64) -> Self {
         let (a, q, r) = (0.9f64, 0.5f64, 0.8f64);
         let mut rng = Pcg64::stream(seed, 0x7157);

@@ -32,23 +32,29 @@ const Q_VEL: f64 = 0.05;
 /// Association gate (squared distance).
 const GATE: f64 = 9.0;
 
+/// One tracked object's belief and history.
 #[derive(Clone)]
 pub struct Track {
     /// Belief at generation `updated_t` (position/velocity, 4-D CV model).
     pub kalman: KalmanState,
+    /// Generation of the last measurement update.
     pub updated_t: u32,
     /// Previous snapshot of this track (its history chain).
     pub prev: Lazy<Track>,
 }
 lazy_fields!(Track: prev);
 
+/// A particle's hypothesis: the current set of tracks.
 #[derive(Clone, Default)]
 pub struct MotState {
+    /// Live tracks (a ragged array of lazy pointers).
     pub tracks: Vec<Lazy<Track>>,
+    /// Previous generation's hypothesis (the history chain).
     pub prev: Lazy<MotState>,
 }
 lazy_fields!(MotState: tracks, prev);
 
+/// The multi-object tracking model (births, deaths, clutter, gating).
 pub struct Mot {
     /// Observed 2-D points per generation.
     pub obs: Vec<Vec<(f64, f64)>>,

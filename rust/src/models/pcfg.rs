@@ -24,6 +24,7 @@ use crate::lazy_fields;
 use crate::rng::Pcg64;
 use crate::smc::SmcModel;
 
+/// Number of terminal symbols the grammar emits.
 pub const N_TERMINALS: usize = 3;
 
 /// Symbols: 0..N_NT are nonterminals, N_NT..N_NT+N_PT preterminals.
@@ -70,11 +71,13 @@ fn emissions(pt: u8) -> &'static [f64; N_TERMINALS] {
     }
 }
 
+/// A particle's derivation state.
 #[derive(Clone, Default)]
 pub struct PcfgState {
     /// Derivation stack, top at the end. Grows and shrinks in place —
     /// exactly the mutation pattern whose copies the platform defers.
     pub stack: Vec<u8>,
+    /// Terminals emitted so far.
     pub emitted: u64,
     /// Dummy pointer field so the payload exercises the edge machinery
     /// even though PCFG states don't chain.
@@ -82,7 +85,9 @@ pub struct PcfgState {
 }
 lazy_fields!(PcfgState: prev);
 
+/// The PCFG model: infer the derivation of an observed terminal string.
 pub struct Pcfg {
+    /// Observed terminal string.
     pub obs: Vec<u8>,
     /// first_term[sym][terminal]: probability that the next emitted
     /// terminal is `terminal` given `sym` is on top (exact fixed point).
@@ -90,6 +95,7 @@ pub struct Pcfg {
 }
 
 impl Pcfg {
+    /// A model over the given terminal string.
     pub fn new(obs: Vec<u8>) -> Self {
         // Fixed-point computation of first-terminal distributions.
         let mut first = vec![[0.0; N_TERMINALS]; N_SYMBOLS];

@@ -31,13 +31,18 @@ const R_XI: f64 = 0.7;
 /// One generation of a particle's history (chained backwards).
 #[derive(Clone)]
 pub struct RbpfState {
+    /// Nonlinear substate ξ (sampled per particle).
     pub xi: f64,
+    /// Marginalized linear substate belief.
     pub kalman: KalmanState,
+    /// Previous generation (the history chain).
     pub prev: Lazy<RbpfState>,
 }
 lazy_fields!(RbpfState: prev);
 
+/// The Rao-Blackwellized PF model (Lindsten & Schön 2010 mixed SSM).
 pub struct Rbpf {
+    /// Linear-substate parameters (shared with the compiled artifact).
     pub params: KalmanParams,
     /// Observations (y1, y2) per generation.
     pub obs: Vec<(f64, f64)>,

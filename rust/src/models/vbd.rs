@@ -24,13 +24,21 @@ use crate::smc::SmcModel;
 /// Fixed epidemiological parameters (weekly rates).
 #[derive(Clone, Debug)]
 pub struct VbdParams {
+    /// Human population size.
     pub n_h: u64,
+    /// Mosquito population size.
     pub n_m: u64,
+    /// Human-to-mosquito transmission rate.
     pub beta_hm: f64,
+    /// Mosquito-to-human transmission rate.
     pub beta_mh: f64,
+    /// Human incubation probability per week.
     pub p_inc_h: f64,
+    /// Human recovery probability per week.
     pub p_rec_h: f64,
+    /// Mosquito incubation probability per week.
     pub p_inc_m: f64,
+    /// Mosquito death probability per week.
     pub p_death_m: f64,
 }
 
@@ -49,14 +57,22 @@ impl Default for VbdParams {
     }
 }
 
+/// One week's SEIR/SEI compartment counts (humans and mosquitos).
 #[derive(Clone)]
 pub struct VbdState {
+    /// Susceptible humans.
     pub sh: u64,
+    /// Exposed humans.
     pub eh: u64,
+    /// Infectious humans.
     pub ih: u64,
+    /// Recovered humans.
     pub rh: u64,
+    /// Susceptible mosquitos.
     pub sm: u64,
+    /// Exposed mosquitos.
     pub em: u64,
+    /// Infectious mosquitos.
     pub im: u64,
     /// New human infections this week (the observed quantity's base).
     pub new_ih: u64,
@@ -65,12 +81,16 @@ pub struct VbdState {
     /// Observation log-likelihood recorded at step time (used to score the
     /// pinned reference particle in conditional SMC).
     pub obs_ll: f64,
+    /// Previous week's state (the history chain).
     pub prev: Lazy<VbdState>,
 }
 lazy_fields!(VbdState: prev);
 
+/// The VBD model: weekly case counts with a marginalized reporting rate.
 pub struct Vbd {
+    /// Fixed epidemiological parameters.
     pub params: VbdParams,
+    /// Observed weekly case counts.
     pub obs: Vec<u64>,
 }
 

@@ -170,6 +170,7 @@ impl ThreadPool {
         ThreadPool { n_threads }
     }
 
+    /// Number of workers this executor fans out to.
     pub fn n_threads(&self) -> usize {
         self.n_threads
     }

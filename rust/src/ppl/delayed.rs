@@ -13,11 +13,19 @@ use crate::rng::{
 /// μ ~ N(m, v); y | μ ~ N(μ, s²).
 #[derive(Clone, Debug, PartialEq)]
 pub enum GaussianNode {
-    Marginalized { mean: f64, var: f64 },
+    /// Posterior N(mean, var) carried analytically.
+    Marginalized {
+        /// Posterior mean.
+        mean: f64,
+        /// Posterior variance.
+        var: f64,
+    },
+    /// Collapsed to a sampled value.
     Realized(f64),
 }
 
 impl GaussianNode {
+    /// A marginalized node with prior N(mean, var).
     pub fn new(mean: f64, var: f64) -> Self {
         GaussianNode::Marginalized { mean, var }
     }
@@ -58,6 +66,7 @@ impl GaussianNode {
         }
     }
 
+    /// Posterior mean (or the realized value).
     pub fn mean(&self) -> f64 {
         match self {
             GaussianNode::Marginalized { mean, .. } => *mean,
@@ -69,11 +78,19 @@ impl GaussianNode {
 /// Gamma–Poisson: λ ~ Gamma(shape k, rate β); y | λ ~ Poisson(c·λ).
 #[derive(Clone, Debug, PartialEq)]
 pub enum GammaPoissonNode {
-    Marginalized { shape: f64, rate: f64 },
+    /// Posterior Gamma(shape, rate) carried analytically.
+    Marginalized {
+        /// Posterior shape k.
+        shape: f64,
+        /// Posterior rate β.
+        rate: f64,
+    },
+    /// Collapsed to a sampled rate.
     Realized(f64),
 }
 
 impl GammaPoissonNode {
+    /// A marginalized node with prior Gamma(shape, rate).
     pub fn new(shape: f64, rate: f64) -> Self {
         GammaPoissonNode::Marginalized { shape, rate }
     }
@@ -93,6 +110,7 @@ impl GammaPoissonNode {
         }
     }
 
+    /// Draw a rate and pin it.
     pub fn realize(&mut self, rng: &mut Pcg64) -> f64 {
         match self {
             GammaPoissonNode::Marginalized { shape, rate } => {
@@ -104,6 +122,7 @@ impl GammaPoissonNode {
         }
     }
 
+    /// Posterior mean k/β (or the realized value).
     pub fn mean(&self) -> f64 {
         match self {
             GammaPoissonNode::Marginalized { shape, rate } => shape / rate,
@@ -130,11 +149,19 @@ impl GammaPoissonNode {
 /// Beta–Binomial: p ~ Beta(a, b); y | p ~ Binomial(n, p).
 #[derive(Clone, Debug, PartialEq)]
 pub enum BetaBinomialNode {
-    Marginalized { a: f64, b: f64 },
+    /// Posterior Beta(a, b) carried analytically.
+    Marginalized {
+        /// Posterior α.
+        a: f64,
+        /// Posterior β.
+        b: f64,
+    },
+    /// Collapsed to a sampled probability.
     Realized(f64),
 }
 
 impl BetaBinomialNode {
+    /// A marginalized node with prior Beta(a, b).
     pub fn new(a: f64, b: f64) -> Self {
         BetaBinomialNode::Marginalized { a, b }
     }
@@ -153,6 +180,7 @@ impl BetaBinomialNode {
         }
     }
 
+    /// Draw a probability and pin it.
     pub fn realize(&mut self, rng: &mut Pcg64) -> f64 {
         match self {
             BetaBinomialNode::Marginalized { a, b } => {
@@ -164,6 +192,7 @@ impl BetaBinomialNode {
         }
     }
 
+    /// Posterior mean a/(a+b) (or the realized value).
     pub fn mean(&self) -> f64 {
         match self {
             BetaBinomialNode::Marginalized { a, b } => a / (a + b),
@@ -177,14 +206,17 @@ impl BetaBinomialNode {
 pub struct BetaBernoulli(pub BetaBinomialNode);
 
 impl BetaBernoulli {
+    /// A marginalized node with prior Beta(a, b).
     pub fn new(a: f64, b: f64) -> Self {
         BetaBernoulli(BetaBinomialNode::new(a, b))
     }
 
+    /// Observe one Bernoulli outcome; returns the marginal log-pmf.
     pub fn observe(&mut self, y: bool) -> f64 {
         self.0.observe(y as u64, 1)
     }
 
+    /// Draw an outcome from the posterior predictive and observe it.
     pub fn sample_and_observe(&mut self, rng: &mut Pcg64) -> (bool, f64) {
         let p = self.0.mean();
         let y = rng.next_f64() < p;

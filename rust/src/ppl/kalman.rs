@@ -16,17 +16,21 @@ use crate::linalg::{mvn_lpdf, Mat};
 /// Gaussian belief over a linear substate.
 #[derive(Clone, Debug, PartialEq)]
 pub struct KalmanState {
+    /// Belief mean m.
     pub mean: Vec<f64>,
+    /// Belief covariance P.
     pub cov: Mat,
 }
 
 impl KalmanState {
+    /// A belief N(mean, cov); the covariance must be square and match.
     pub fn new(mean: Vec<f64>, cov: Mat) -> Self {
         assert_eq!(mean.len(), cov.rows);
         assert_eq!(cov.rows, cov.cols);
         KalmanState { mean, cov }
     }
 
+    /// Substate dimension.
     pub fn dim(&self) -> usize {
         self.mean.len()
     }

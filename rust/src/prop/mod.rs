@@ -26,6 +26,7 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// A generator for one case, seeded deterministically.
     pub fn new(seed: u64, size: usize) -> Self {
         Gen {
             rng: Pcg64::new(seed),
@@ -44,22 +45,27 @@ impl Gen {
         }
     }
 
+    /// Uniform integer in `lo..=hi`.
     pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
         lo + self.rng.below(hi - lo + 1)
     }
 
+    /// Uniform `usize` in `lo..=hi`.
     pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
         self.u64(lo as u64, hi as u64) as usize
     }
 
+    /// Uniform `i64` in `lo..=hi`.
     pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
         lo + self.rng.below((hi - lo + 1) as u64) as i64
     }
 
+    /// Uniform `f64` in `[lo, hi)`.
     pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.uniform(lo, hi)
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.rng.next_f64() < p
     }
@@ -74,6 +80,7 @@ impl Gen {
         self.rng.categorical(w)
     }
 
+    /// Direct access to the case's RNG (for model-specific draws).
     pub fn rng(&mut self) -> &mut Pcg64 {
         &mut self.rng
     }
@@ -81,6 +88,7 @@ impl Gen {
 
 /// Outcome of a single property case.
 pub enum CaseResult {
+    /// Property held.
     Pass,
     /// Property violated, with a description.
     Fail(String),
@@ -114,6 +122,7 @@ pub fn check<R: Into<CaseResult>>(cases: usize, mut prop: impl FnMut(&mut Gen) -
     check_seeded(0xC0FFEE, cases, &mut prop)
 }
 
+/// [`check`] with an explicit base seed (reproduce a reported failure).
 pub fn check_seeded<R: Into<CaseResult>>(
     base_seed: u64,
     cases: usize,

@@ -8,6 +8,7 @@
 
 use super::Pcg64;
 
+/// ln(2π), the Gaussian log-density constant.
 pub const LN_2PI: f64 = 1.8378770664093453;
 
 /// ln Γ(x) (Lanczos approximation, |err| < 1e-13 for x > 0).
@@ -296,6 +297,7 @@ pub struct AliasTable {
 }
 
 impl AliasTable {
+    /// Build the table from (unnormalized, nonnegative) weights.
     pub fn new(w: &[f64]) -> Self {
         let n = w.len();
         let total: f64 = w.iter().sum();
@@ -319,6 +321,7 @@ impl AliasTable {
         AliasTable { prob, alias }
     }
 
+    /// Draw a category in O(1).
     pub fn sample(&self, rng: &mut Pcg64) -> usize {
         let n = self.prob.len();
         let i = rng.below(n as u64) as usize;

@@ -58,6 +58,7 @@ impl Pcg64 {
         Pcg64::new(mixed)
     }
 
+    /// Next raw 64-bit output (PCG XSL-RR 128/64).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);

@@ -25,9 +25,13 @@ pub const DZ: usize = 3;
 /// `python/compile/kernels/kalman.py`.
 #[derive(Clone, Debug)]
 pub struct KalmanParams {
+    /// Dynamics matrix A.
     pub a: Mat,
+    /// Process-noise covariance Q.
     pub q: Mat,
+    /// Observation row C (scalar observation).
     pub c: Mat,
+    /// Observation-noise variance R.
     pub r: f64,
 }
 

@@ -35,6 +35,7 @@ impl std::fmt::Display for RuntimeError {
 
 impl std::error::Error for RuntimeError {}
 
+/// Runtime result alias.
 pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 #[cfg(feature = "xla")]
@@ -46,6 +47,7 @@ mod pjrt {
     /// A compiled XLA executable loaded from HLO text.
     pub struct Artifact {
         exe: xla::PjRtLoadedExecutable,
+        /// Artifact name (file stem).
         pub name: String,
     }
 
@@ -66,14 +68,17 @@ mod pjrt {
             })
         }
 
+        /// PJRT platform name (e.g. `cpu`).
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
 
+        /// Path the artifact `name` would be loaded from.
         pub fn artifact_path(&self, name: &str) -> PathBuf {
             self.dir.join(format!("{name}.hlo.txt"))
         }
 
+        /// Whether the artifact exists on disk.
         pub fn has_artifact(&self, name: &str) -> bool {
             self.artifact_path(name).exists()
         }
@@ -145,6 +150,7 @@ mod pjrt {
     /// Placeholder for a compiled executable; cannot be constructed
     /// without the `xla` feature.
     pub struct Artifact {
+        /// Artifact name (file stem).
         pub name: String,
     }
 
@@ -154,16 +160,20 @@ mod pjrt {
     }
 
     impl XlaRuntime {
+        /// Create a stub runtime reading artifacts from `dir` (never
+        /// fails; artifacts are simply reported absent).
         pub fn cpu(dir: impl AsRef<Path>) -> Result<Self> {
             Ok(XlaRuntime {
                 dir: dir.as_ref().to_path_buf(),
             })
         }
 
+        /// Stub platform name.
         pub fn platform(&self) -> String {
             "cpu-stub (xla feature disabled)".to_string()
         }
 
+        /// Path the artifact `name` would be loaded from.
         pub fn artifact_path(&self, name: &str) -> PathBuf {
             self.dir.join(format!("{name}.hlo.txt"))
         }
@@ -175,6 +185,7 @@ mod pjrt {
             false
         }
 
+        /// Always an error: nothing can be executed without `xla`.
         pub fn load(&self, name: &str) -> Result<Artifact> {
             Err(RuntimeError(format!(
                 "XLA/PJRT support not compiled in (enable the `xla` feature); \
@@ -184,6 +195,7 @@ mod pjrt {
     }
 
     impl Artifact {
+        /// Always an error: nothing can be executed without `xla`.
         pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
             Err(RuntimeError(
                 "XLA/PJRT support not compiled in (enable the `xla` feature)".into(),

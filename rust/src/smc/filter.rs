@@ -65,8 +65,8 @@ use super::rebalance::{
 use super::resample::Resampler;
 use crate::config::{RunConfig, Task};
 use crate::heap::{
-    aggregate_metrics, sample_global_peak, shard_of, shard_ranges, Heap, HeapMetrics, Lazy,
-    Payload,
+    aggregate_metrics, sample_global_peak, shard_of, shard_ranges, trim_shards, Heap, HeapMetrics,
+    Lazy, Payload,
 };
 use crate::pool::{StealYard, ThreadPool};
 use crate::rng::Pcg64;
@@ -78,6 +78,7 @@ use std::time::Instant;
 /// shards.
 #[derive(Clone, Debug)]
 pub struct StepMetrics {
+    /// Generation index (1-based).
     pub t: usize,
     /// Cumulative wall time since filter start (seconds).
     pub elapsed_s: f64,
@@ -94,19 +95,25 @@ pub struct StepMetrics {
     /// footprint — exact at barrier resolution, never above
     /// `peak_bytes`. The figure to quote for K > 1 runs.
     pub global_peak_bytes: usize,
+    /// Live objects across shards after this generation.
     pub live_objects: usize,
+    /// Cumulative lazy (`Copy`) object copies.
     pub lazy_copies: usize,
+    /// Cumulative eager object copies.
     pub eager_copies: usize,
+    /// Effective sample size of the normalized weights.
     pub ess: f64,
 }
 
 /// Filter output: evidence estimate, posterior summary, and metrics.
 #[derive(Clone, Debug)]
 pub struct FilterResult {
+    /// Log marginal-likelihood estimate (NaN for the simulation task).
     pub log_evidence: f64,
     /// Weighted posterior mean of the model summary at the final
     /// generation (the cross-configuration output check).
     pub posterior_mean: f64,
+    /// Wall-clock seconds for the whole run.
     pub wall_s: f64,
     /// Peak heap bytes; with K > 1 an upper bound (sum of per-shard
     /// peaks — see [`StepMetrics::peak_bytes`]), exact at K = 1.
@@ -137,6 +144,7 @@ pub struct FilterResult {
     /// pure scheduling statistic: output is bit-identical whatever this
     /// counts.
     pub steals: usize,
+    /// Per-generation metrics snapshots (Figure 7).
     pub series: Vec<StepMetrics>,
     /// Alive PF: total propagation attempts (N·T when every particle
     /// survives immediately). Invariant in K under the per-slot retry
@@ -147,8 +155,11 @@ pub struct FilterResult {
 /// Inference method, per §4.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Method {
+    /// Bootstrap particle filter (propose from the dynamics).
     Bootstrap,
+    /// Auxiliary particle filter (lookahead-biased resampling).
     Auxiliary,
+    /// Alive particle filter (retry until a particle survives).
     Alive,
 }
 
@@ -1353,6 +1364,28 @@ fn alive_generation<M: SmcModel + Sync>(
 /// Run a particle filter (or forward simulation) for `cfg` over `model`
 /// on a single heap — the K = 1 specialization of
 /// [`run_filter_shards`].
+///
+/// A small end-to-end run on the linked-list model:
+///
+/// ```
+/// use lazycow::config::{Model, RunConfig, Task};
+/// use lazycow::heap::{CopyMode, Heap};
+/// use lazycow::models::ListModel;
+/// use lazycow::pool::ThreadPool;
+/// use lazycow::smc::{run_filter, Method, StepCtx};
+///
+/// let model = ListModel::synthetic(10, 1);
+/// let mut cfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+/// cfg.n_particles = 32;
+/// cfg.n_steps = 10;
+/// let pool = ThreadPool::new(1);
+/// let ctx = StepCtx { pool: &pool, kalman: None };
+/// let mut heap = Heap::new(CopyMode::LazySro);
+/// let r = run_filter(&model, &cfg, &mut heap, &ctx, Method::Bootstrap);
+/// assert!(r.log_evidence.is_finite());
+/// assert_eq!(r.series.len(), 10);
+/// assert_eq!(heap.live_objects(), 0, "the filter releases everything");
+/// ```
 pub fn run_filter<M: SmcModel + Sync>(
     model: &M,
     cfg: &RunConfig,
@@ -1551,6 +1584,16 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
         sample_global_peak(shards);
         normalize_log_weights(&lw, &mut w);
         series.push(step_snapshot(shards, t, &start, &w));
+
+        // --- Decommit barrier: with a watermark configured, return
+        //     fully-empty slab chunks past it to the system allocator so
+        //     long-running (server) populations stay residency-bounded.
+        //     Runs after the reclaim (parent release + memo sweeps) so a
+        //     resampling spike's chunks are empty by now; bit-identical
+        //     output either way.
+        if let Some(keep) = cfg.decommit_watermark {
+            trim_shards(shards, keep);
+        }
     }
 
     // Final-generation evidence contribution and posterior summary.
@@ -1587,6 +1630,11 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
     }
     for h in shards.iter_mut() {
         h.sweep_memos();
+    }
+    // Final decommit: the population is gone, so everything beyond the
+    // watermark is returnable.
+    if let Some(keep) = cfg.decommit_watermark {
+        trim_shards(shards, keep);
     }
     result
 }
@@ -1736,6 +1784,10 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
             sample_global_peak(shards);
             normalize_log_weights(&lw, &mut w);
             series.push(step_snapshot(shards, t, &start, &w));
+            // Decommit barrier (see `run_filter_shards`).
+            if let Some(keep) = cfg.decommit_watermark {
+                trim_shards(shards, keep);
+            }
         }
         log_z += log_sum_exp(&lw) - (n as f64).ln();
 
@@ -1801,6 +1853,9 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
     }
     for h in shards.iter_mut() {
         h.sweep_memos();
+    }
+    if let Some(keep) = cfg.decommit_watermark {
+        trim_shards(shards, keep);
     }
     results
 }

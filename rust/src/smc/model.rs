@@ -20,8 +20,10 @@ pub struct StepCtx<'a> {
 /// time (`prev` pointers), so the population's ancestry is exactly the
 /// Figure 2 tree and resampling's `deep_copy` exercises the platform.
 pub trait SmcModel {
+    /// Per-particle state payload type (lives on the lazy heap).
     type State: Payload;
 
+    /// Short model name (logs and bench labels).
     fn name(&self) -> &'static str;
 
     /// Number of generations (data length for inference).

@@ -70,6 +70,7 @@ pub enum RebalancePolicy {
 }
 
 impl RebalancePolicy {
+    /// Parse a policy name as accepted by `--rebalance`.
     pub fn parse(s: &str) -> Option<RebalancePolicy> {
         match s.to_ascii_lowercase().as_str() {
             "off" | "static" | "none" => Some(RebalancePolicy::Off),
@@ -79,6 +80,7 @@ impl RebalancePolicy {
         }
     }
 
+    /// Canonical name (CLI/bench labels).
     pub fn name(self) -> &'static str {
         match self {
             RebalancePolicy::Off => "off",
@@ -87,6 +89,7 @@ impl RebalancePolicy {
         }
     }
 
+    /// Every policy (test sweeps).
     pub const ALL: [RebalancePolicy; 3] = [
         RebalancePolicy::Off,
         RebalancePolicy::Greedy,
@@ -117,6 +120,7 @@ pub struct CostTracker {
 }
 
 impl CostTracker {
+    /// A tracker for `n` particle slots with zeroed estimates.
     pub fn new(n: usize) -> Self {
         CostTracker {
             costs: vec![0.0; n],
@@ -207,7 +211,9 @@ impl CostTracker {
 /// the number of distinct (ancestor, destination) transplants the plan
 /// requires beyond the static stickiness baseline.
 pub struct OffspringPlan {
+    /// Destination shard per offspring slot.
     pub assign: Vec<usize>,
+    /// Distinct (ancestor, destination) transplants the plan adds.
     pub transplant_pairs: usize,
 }
 

@@ -7,15 +7,22 @@
 
 use crate::rng::Pcg64;
 
+/// Resampling scheme: how ancestor indices are drawn from the weights.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Resampler {
+    /// Independent draws (highest offspring variance).
     Multinomial,
+    /// One uniform offset, N evenly spaced points (lowest variance; the
+    /// engine's default, per the paper).
     Systematic,
+    /// One uniform draw per stratum.
     Stratified,
+    /// Deterministic integer parts + multinomial remainder.
     Residual,
 }
 
 impl Resampler {
+    /// Parse a resampler name.
     pub fn parse(s: &str) -> Option<Resampler> {
         match s.to_ascii_lowercase().as_str() {
             "multinomial" => Some(Resampler::Multinomial),

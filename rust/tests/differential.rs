@@ -3,12 +3,13 @@
 //! [`assert_bitwise_equiv`] is a reusable runner that sweeps the full
 //! scheduling matrix — K ∈ {1, 2, 4} × rebalance policy × steal on/off ×
 //! copy mode, plus the payload-allocator axis (`system` vs the default
-//! `slab`) — against the K = 1 / steal-off / policy-off oracle and
+//! `slab`) and the decommit axis (watermark off / 0 / the default
+//! keep-2) — against the K = 1 / steal-off / policy-off oracle and
 //! demands *bitwise* equality of `log_evidence` and `posterior_mean`
 //! (plus equal attempt counts, zero leaks, per-shard alloc/free balance,
-//! slab-gauge consistency, and the global-peak ≤ sum-of-peaks invariant)
-//! in every cell. It replaces the ad-hoc matrix that used to live in
-//! `tests/sharded.rs`.
+//! slab- and raw-gauge consistency, decommit accounting, and the
+//! global-peak ≤ sum-of-peaks invariant) in every cell. It replaces the
+//! ad-hoc matrix that used to live in `tests/sharded.rs`.
 //!
 //! Three workloads cover every propagation path: LGSS (bootstrap, the
 //! exact-Kalman oracle model), PCFG (auxiliary PF with lookahead
@@ -69,10 +70,34 @@ fn run_cell<M: SmcModel + Sync>(
             m.slab_chunks * CHUNK_BYTES,
             "{label}: shard {s} committed bytes disagree with chunk count"
         );
+        assert!(
+            m.slab_committed_peak_bytes >= m.slab_committed_bytes,
+            "{label}: shard {s} committed peak below the current gauge"
+        );
+        // Raw-path (memo/label storage) consistency: every shard routes
+        // its label vector (and any memo buckets) through the allocator's
+        // raw path, frees never outnumber allocations, and the label
+        // vector's backing block is still held at the end of the run.
+        assert!(
+            m.slab_raw_allocs > 0,
+            "{label}: shard {s} memo/label storage bypassed the slab raw path"
+        );
+        assert!(
+            m.slab_raw_frees < m.slab_raw_allocs,
+            "{label}: shard {s} raw alloc/free imbalance (label vec must stay live)"
+        );
         match cfg.allocator {
             AllocatorKind::System => {
                 assert_eq!(m.slab_chunks, 0, "{label}: system backend committed chunks");
                 assert_eq!(m.slab_freelist_hits, 0, "{label}: system backend hit a free list");
+                assert_eq!(
+                    m.slab_raw_bytes, 0,
+                    "{label}: system backend put raw blocks in slabs"
+                );
+                assert_eq!(
+                    m.decommitted_chunks, 0,
+                    "{label}: system backend has no chunks to decommit"
+                );
             }
             AllocatorKind::Slab => {
                 assert_eq!(
@@ -80,6 +105,17 @@ fn run_cell<M: SmcModel + Sync>(
                     "{label}: shard {s} model payloads must fit the size classes"
                 );
             }
+        }
+        match cfg.decommit_watermark {
+            None => assert_eq!(
+                m.decommitted_chunks, 0,
+                "{label}: shard {s} decommitted with the watermark off"
+            ),
+            Some(_) => assert_eq!(
+                m.decommitted_bytes,
+                m.decommitted_chunks * CHUNK_BYTES,
+                "{label}: shard {s} decommit byte/chunk accounting disagrees"
+            ),
         }
     }
     assert!(
@@ -177,6 +213,25 @@ fn assert_bitwise_equiv<M: SmcModel + Sync>(
                     );
                     let got = run_cell(model, &cfg, method, &pool, k, &label);
                     assert_eq!(got, oracle, "{label}: allocator changed the output");
+                }
+            }
+            // Decommit axis: the matrix above runs at the default
+            // keep-2 watermark; `off` (never trim) and `0` (trim every
+            // empty chunk, the most aggressive barrier) must reproduce
+            // the oracle bit for bit — decommit only changes where
+            // chunk memory lives, never what is computed.
+            for wm in [None, Some(0usize)] {
+                for k in [1usize, 4] {
+                    let mut cfg = base_cfg.clone();
+                    cfg.mode = mode;
+                    cfg.decommit_watermark = wm;
+                    cfg.rebalance = RebalancePolicy::Greedy;
+                    cfg.steal = true;
+                    cfg.steal_min = 2;
+                    let wm_name = wm.map(|w| w.to_string()).unwrap_or_else(|| "off".into());
+                    let label = format!("{name}/{mode:?}/decommit={wm_name}/K={k}");
+                    let got = run_cell(model, &cfg, method, &pool, k, &label);
+                    assert_eq!(got, oracle, "{label}: decommit changed the output");
                 }
             }
         }
