@@ -17,6 +17,10 @@
 //!              plus the long-run churn cell asserting committed
 //!              residency stays bounded with decommit on (and monotone
 //!              with it off)
+//!   batch      batched SoA numeric path: fused weight reduction vs the
+//!              scalar three-pass sequence, and step_batched propagation
+//!              throughput vs the scalar per-particle reference (LGSS +
+//!              RBPF, K = 1, 2, 4), bitwise identity asserted per cell
 //!
 //! Environment: LAZYCOW_REPS (default 5), LAZYCOW_SCALE=default|paper.
 
@@ -24,10 +28,10 @@ use lazycow::bench::{human_bytes, run_cell, CellResult};
 use lazycow::config::{Model, RunConfig, Task};
 use lazycow::heap::{CopyMode, Heap, Lazy, ShardedHeap};
 use lazycow::lazy_fields;
-use lazycow::models::{run_model, ListModel, DATA_SEED};
+use lazycow::models::{run_model, ListModel, Rbpf, DATA_SEED};
 use lazycow::pool::ThreadPool;
 use lazycow::runtime::{BatchKalman, XlaRuntime};
-use lazycow::smc::{run_filter, Method, StepCtx};
+use lazycow::smc::{particle_rng, run_filter, Method, SmcModel, StepCtx};
 
 fn sections() -> Vec<String> {
     match std::env::var("LAZYCOW_BENCH") {
@@ -44,6 +48,7 @@ fn sections() -> Vec<String> {
             "shards",
             "rebalance",
             "alloc",
+            "batch",
         ]
             .iter()
             .map(|s| s.to_string())
@@ -88,6 +93,7 @@ impl Backend {
         StepCtx {
             pool: &self.pool,
             kalman: self.kalman.as_ref(),
+            batch: true,
         }
     }
 }
@@ -209,6 +215,7 @@ fn bench_treebound() {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut heap = Heap::new(CopyMode::LazySro);
         let r = run_filter(&model, &cfg, &mut heap, &ctx, Method::Bootstrap);
@@ -758,6 +765,189 @@ fn bench_alloc_churn() {
     }
 }
 
+/// Pre-flight for the batch section: `step_batched` must match the
+/// scalar `step_population` reference bit for bit on a small population
+/// (run on the CPU-oracle context — the f32 artifact path is held to
+/// tolerance by the integration suite instead).
+fn assert_batched_matches_scalar<M: SmcModel + Sync>(model: &M, t_max: usize, ctx: &StepCtx) {
+    let n = 96usize;
+    let mut heap_a = Heap::new(CopyMode::LazySro);
+    let mut heap_b = Heap::new(CopyMode::LazySro);
+    let mut sa: Vec<Lazy<M::State>> = (0..n)
+        .map(|i| model.init(&mut heap_a, &mut particle_rng(11, 0, i)))
+        .collect();
+    let mut sb: Vec<Lazy<M::State>> = (0..n)
+        .map(|i| model.init(&mut heap_b, &mut particle_rng(11, 0, i)))
+        .collect();
+    for t in 1..=t_max {
+        let wa = model
+            .step_batched(&mut heap_a, &mut sa, t, 11, true, 0, ctx)
+            .expect("model must batch inference");
+        let wb = model.step_population(&mut heap_b, &mut sb, t, 11, true, 0, ctx);
+        for i in 0..n {
+            assert_eq!(
+                wa[i].to_bits(),
+                wb[i].to_bits(),
+                "{}: batched/scalar diverged at t={t} i={i}",
+                model.name()
+            );
+        }
+    }
+    for h in sa {
+        heap_a.release(h);
+    }
+    for h in sb {
+        heap_b.release(h);
+    }
+}
+
+/// One propagation-throughput rep: K shard-local runs stepped through
+/// `t_max` observed generations on either the batched or the scalar
+/// path (no resampling — pure propagation, the quantity the batch layer
+/// accelerates).
+fn propagation_cell<M: SmcModel + Sync>(
+    name: &str,
+    model: &M,
+    n: usize,
+    t_max: usize,
+    k: usize,
+    batched: bool,
+    ctx: &StepCtx,
+) -> CellResult {
+    run_cell(name, reps(), |_| {
+        let per = n.div_ceil(k);
+        let mut heaps: Vec<Heap> = (0..k).map(|_| Heap::new(CopyMode::LazySro)).collect();
+        let mut runs: Vec<Vec<Lazy<M::State>>> = Vec::with_capacity(k);
+        for (s, heap) in heaps.iter_mut().enumerate() {
+            let (lo, hi) = ((s * per).min(n), ((s + 1) * per).min(n));
+            runs.push(
+                (lo..hi)
+                    .map(|i| model.init(heap, &mut particle_rng(11, 0, i)))
+                    .collect(),
+            );
+        }
+        let mut acc = 0.0f64;
+        for t in 1..=t_max {
+            for s in 0..k {
+                let base = (s * per).min(n);
+                let winc = if batched {
+                    model
+                        .step_batched(&mut heaps[s], &mut runs[s], t, 11, true, base, ctx)
+                        .expect("model must batch inference")
+                } else {
+                    model.step_population(&mut heaps[s], &mut runs[s], t, 11, true, base, ctx)
+                };
+                acc += winc.iter().sum::<f64>();
+            }
+        }
+        std::hint::black_box(acc);
+        for (heap, run) in heaps.iter_mut().zip(runs) {
+            for h in run {
+                heap.release(h);
+            }
+        }
+        None
+    })
+}
+
+/// Batched-numerics sweep (the SoA layer's acceptance benchmark): the
+/// fused weight-reduction kernel vs the two-pass scalar sequence, and
+/// `step_batched` propagation throughput vs the scalar `step_population`
+/// reference per shard-local run at K ∈ {1, 2, 4} on LGSS and RBPF.
+/// Every cell asserts bitwise identity between the paths first (the
+/// `--batch` contract), so the numbers measure pure kernel effect.
+/// Emits one JSON record per cell with a `speedup` field checked by
+/// `tools/bench_check`.
+fn bench_batch(backend: &Backend) {
+    use lazycow::rng::Pcg64;
+    use lazycow::stats::{ess, normalize_log_weights, weight_stats};
+    println!("\n== Batched numeric path: SoA kernels vs scalar reference (JSON per cell) ==");
+    let threads = backend.pool.n_threads();
+
+    // -- weight-reduction: the fused single-pass normalize+ESS vs the
+    //    two-pass sequence the filter trigger used before fusion. --
+    let lanes = 1usize << 16;
+    let mut rng = Pcg64::new(77);
+    let lw: Vec<f64> = (0..lanes).map(|_| rng.gaussian(0.0, 3.0)).collect();
+    let inner = 100usize;
+    let mut w_ref = Vec::new();
+    let mut scalar_out = (0.0f64, 0.0f64);
+    let scalar_cell = run_cell("weight-reduction/scalar", reps(), |_| {
+        for _ in 0..inner {
+            let lmean = normalize_log_weights(&lw, &mut w_ref);
+            scalar_out = (lmean, ess(&w_ref));
+        }
+        std::hint::black_box(&w_ref);
+        None
+    });
+    let mut w_fused = Vec::new();
+    let mut fused_out = (0.0f64, 0.0f64);
+    let fused_cell = run_cell("weight-reduction/fused", reps(), |_| {
+        for _ in 0..inner {
+            fused_out = weight_stats(&lw, &mut w_fused);
+        }
+        std::hint::black_box(&w_fused);
+        None
+    });
+    assert_eq!(scalar_out.0.to_bits(), fused_out.0.to_bits(), "fused lmean diverged");
+    assert_eq!(scalar_out.1.to_bits(), fused_out.1.to_bits(), "fused ESS diverged");
+    for (a, b) in w_ref.iter().zip(&w_fused) {
+        assert_eq!(a.to_bits(), b.to_bits(), "fused weights diverged");
+    }
+    println!(
+        "{{\"section\":\"batch\",\"cell\":\"weight-reduction\",\"lanes\":{},\"threads\":{},\"reps\":{},\"scalar_s\":{:.6},\"fused_s\":{:.6},\"speedup\":{:.4},\"bit_identical\":true}}",
+        lanes,
+        threads,
+        scalar_cell.reps,
+        scalar_cell.time_median,
+        fused_cell.time_median,
+        scalar_cell.time_median / fused_cell.time_median.max(1e-9),
+    );
+
+    // -- propagation throughput: batched vs scalar per shard-local run.
+    //    The bitwise pre-flight runs on the CPU-oracle context; timing
+    //    uses the backend context (compiled artifact when present). --
+    let cpu_ctx = StepCtx {
+        pool: &backend.pool,
+        kalman: None,
+        batch: true,
+    };
+    let t_list = 20usize;
+    let list = ListModel::synthetic(t_list, DATA_SEED);
+    assert_batched_matches_scalar(&list, 5, &cpu_ctx);
+    let t_rbpf = 10usize;
+    let rbpf = Rbpf::synthetic(t_rbpf, DATA_SEED);
+    assert_batched_matches_scalar(&rbpf, 5, &cpu_ctx);
+    let ctx = backend.ctx();
+    for k in [1usize, 2, 4] {
+        for (model_name, n, t) in [("list", 8192usize, t_list), ("rbpf", 1024usize, t_rbpf)] {
+            let (scalar_cell, batched_cell) = if model_name == "list" {
+                (
+                    propagation_cell(&format!("list/K={k}/scalar"), &list, n, t, k, false, &ctx),
+                    propagation_cell(&format!("list/K={k}/batched"), &list, n, t, k, true, &ctx),
+                )
+            } else {
+                (
+                    propagation_cell(&format!("rbpf/K={k}/scalar"), &rbpf, n, t, k, false, &ctx),
+                    propagation_cell(&format!("rbpf/K={k}/batched"), &rbpf, n, t, k, true, &ctx),
+                )
+            };
+            println!(
+                "{{\"section\":\"batch\",\"cell\":\"propagation\",\"model\":\"{}\",\"shards\":{},\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"scalar_s\":{:.6},\"batched_s\":{:.6},\"speedup\":{:.4},\"bit_identical\":true}}",
+                model_name,
+                k,
+                threads,
+                n,
+                t,
+                scalar_cell.reps,
+                scalar_cell.time_median,
+                batched_cell.time_median,
+                scalar_cell.time_median / batched_cell.time_median.max(1e-9),
+            );
+        }
+    }
+}
+
 /// Resampler ablation: the constant c in the t + cN·logN reachable-set
 /// bound depends on offspring variance — systematic < stratified <
 /// multinomial (Jacob et al. 2015's discussion).
@@ -822,6 +1012,7 @@ fn main() {
                 bench_alloc(&backend);
                 bench_alloc_churn();
             }
+            "batch" => bench_batch(&backend),
             other => eprintln!("unknown section {other}"),
         }
     }

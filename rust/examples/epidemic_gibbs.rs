@@ -35,6 +35,7 @@ fn main() {
     let ctx = StepCtx {
         pool: &pool,
         kalman: None,
+        batch: true,
     };
     let mut cfg = RunConfig::for_model(Model::Vbd, Task::Inference, CopyMode::LazySro);
     cfg.n_particles = 256;

@@ -39,6 +39,7 @@ fn main() {
     let ctx = StepCtx {
         pool: &pool,
         kalman: kalman.as_ref(),
+        batch: true,
     };
 
     println!("\nRBPF, N={n}, T={t}, bootstrap filter, resampling every step\n");

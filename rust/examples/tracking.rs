@@ -31,6 +31,7 @@ fn main() {
     let ctx = StepCtx {
         pool: &pool,
         kalman: None,
+        batch: true,
     };
 
     println!(

@@ -128,11 +128,12 @@ pub struct RunConfig {
     /// Worker threads for the numeric phase (0 = all cores).
     pub threads: usize,
     /// Heap shards K for parallel particle propagation (0 = match the
-    /// worker thread count). On the CPU oracle path outputs are
-    /// bit-identical for every K; with a compiled f32 Kalman artifact
-    /// loaded, only K = 1 runs the artifact (K > 1 propagates per shard
-    /// on the f64 oracle), so the launcher's auto mode keeps K = 1 in
-    /// that case. K = 1 is the serialized single-heap platform.
+    /// worker thread count). Outputs are bit-identical for every K: each
+    /// shard-local run takes the batched numeric step over its own SoA
+    /// lanes (the compiled Kalman artifact when loaded, the f64 CPU
+    /// oracle otherwise — both elementwise per particle, so any split of
+    /// the population matches the whole-batch result bitwise). K = 1 is
+    /// the serialized single-heap platform.
     pub shards: usize,
     /// Offspring rebalancing policy applied at each resampling step when
     /// K > 1 (outputs are bit-identical for every policy; only the shard
@@ -180,6 +181,13 @@ pub struct RunConfig {
     /// Use the PJRT-compiled artifacts for batched numeric work when
     /// available (falls back to the CPU oracle path otherwise).
     pub use_xla: bool,
+    /// Batched SoA numeric path (`--batch`): when `true` (the default)
+    /// the coordinator offers each shard-local run to the model's
+    /// [`step_batched`](crate::smc::SmcModel::step_batched) hook; `off`
+    /// forces the scalar per-particle reference path. Outputs are
+    /// bit-identical either way — the toggle is a differential-testing
+    /// and bisection axis, not a semantic switch.
+    pub batch: bool,
     /// Emit a per-generation metrics series (Figure 7).
     pub series: bool,
 }
@@ -205,6 +213,7 @@ impl Default for RunConfig {
             ess_threshold: 1.0,
             pg_iterations: 3,
             use_xla: true,
+            batch: true,
             series: false,
         }
     }
@@ -274,6 +283,13 @@ impl RunConfig {
                 self.pg_iterations = value.parse().map_err(|e| format!("{e}"))?
             }
             "xla" => self.use_xla = matches!(value, "true" | "1" | "yes"),
+            "batch" => {
+                self.batch = match value.to_ascii_lowercase().as_str() {
+                    "on" | "true" | "1" | "yes" => true,
+                    "off" | "false" | "0" | "no" => false,
+                    _ => return Err(format!("bad batch value {value} (on|off)")),
+                }
+            }
             "series" => self.series = matches!(value, "true" | "1" | "yes"),
             _ => return Err(format!("unknown config key {key}")),
         }
@@ -392,6 +408,12 @@ mod tests {
         c.apply("decommit_watermark", "5").unwrap();
         assert_eq!(c.decommit_watermark, Some(5));
         assert!(c.apply("decommit-watermark", "many").is_err());
+        assert!(c.batch, "batched numeric path defaults on");
+        c.apply("batch", "off").unwrap();
+        assert!(!c.batch);
+        c.apply("batch", "on").unwrap();
+        assert!(c.batch);
+        assert!(c.apply("batch", "maybe").is_err());
         assert!(c.apply("allocator", "arena").is_err());
         assert!(c.apply("steal", "maybe").is_err());
         assert!(c.apply("rebalance", "bogus").is_err());

@@ -26,9 +26,11 @@
 //!   ([`Heap::trim`](heap::Heap::trim)) bounding long-run residency.
 //! - [`smc`] is the population coordinator: bootstrap / auxiliary /
 //!   alive particle filters and particle Gibbs over the (sharded) heap,
-//!   with cost-driven rebalancing ([`smc::rebalance`]) and
-//!   intra-generation work stealing. Outputs are bit-identical across
-//!   every scheduling and storage configuration.
+//!   with cost-driven rebalancing ([`smc::rebalance`]),
+//!   intra-generation work stealing, and a batched SoA numeric path
+//!   ([`smc::batch`] plus the [`smc::SmcModel::step_batched`] hook,
+//!   gated by `--batch`). Outputs are bit-identical across every
+//!   scheduling, storage, and numeric-path configuration.
 //! - [`models`] are the paper's §4 evaluation problems (RBPF, PCFG, VBD,
 //!   MOT, CRBD, plus the linked-list microbenchmark), each implementing
 //!   [`smc::SmcModel`].

@@ -58,6 +58,11 @@ fn cli() -> Cli {
         "payload storage backend: system|slab (default slab; output identical either way)",
     )
     .flag(
+        "batch",
+        "",
+        "batched SoA numeric path: on|off (default on; output identical either way)",
+    )
+    .flag(
         "decommit-watermark",
         "",
         "empty slab chunks kept per size class before decommitting to the OS at generation \
@@ -140,6 +145,11 @@ fn build_config(args: &lazycow::cli::Args) -> Result<RunConfig, String> {
             cfg.apply("decommit-watermark", w)?;
         }
     }
+    if let Some(b) = args.get("batch") {
+        if !b.is_empty() {
+            cfg.apply("batch", b)?;
+        }
+    }
     cfg.use_xla = !args.get_bool("no-xla");
     cfg.series = args.get_bool("series");
     Ok(cfg)
@@ -182,26 +192,16 @@ impl Backend {
         StepCtx {
             pool: &self.pool,
             kalman: self.kalman.as_ref(),
+            batch: true,
         }
     }
 
-    /// Resolve the shard count K. Auto mode (`--shards 0`) matches the
-    /// worker thread count — except when a compiled Kalman artifact is
-    /// loaded: the batched XLA path only runs with a single shard (K > 1
-    /// propagates per shard on the CPU oracle), so auto keeps K = 1
-    /// rather than silently disabling the artifact. An explicit
-    /// `--shards K` always wins.
+    /// Resolve the shard count K (`--shards 0` matches the worker thread
+    /// count). The runtime dispatch is shard-aware — each shard-local run
+    /// takes the batched step against the compiled artifact or the CPU
+    /// oracle — so no K is pinned to keep an artifact active.
     fn choose_shards(&self, cfg: &RunConfig) -> usize {
-        let k = cfg.resolved_shards(self.pool.n_threads());
-        if k > 1 && cfg.shards == 0 && self.kalman.is_some() {
-            eprintln!(
-                "[lazycow] kalman artifact active: auto shards -> K=1 \
-                 (pass --shards to shard; K>1 uses the CPU oracle per shard)"
-            );
-            1
-        } else {
-            k
-        }
+        cfg.resolved_shards(self.pool.n_threads())
     }
 }
 
@@ -211,11 +211,12 @@ fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
     let k = backend.choose_shards(&cfg);
     let mut heap = ShardedHeap::with_allocator(cfg.mode, k, cfg.allocator);
     println!(
-        "# {} K={k} rebalance={} steal={} allocator={}",
+        "# {} K={k} rebalance={} steal={} allocator={} batch={}",
         cfg.label(),
         if k > 1 { cfg.rebalance.name() } else { "off" },
         if k > 1 && cfg.steal { "on" } else { "off" },
-        cfg.allocator.name()
+        cfg.allocator.name(),
+        if cfg.batch { "on" } else { "off" }
     );
     let r = run_model(&cfg, &mut heap, &backend.ctx());
     println!(

@@ -214,6 +214,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut out = Vec::new();
         for mode in CopyMode::ALL {
@@ -244,6 +245,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut c = RunConfig::for_model(Model::Crbd, Task::Inference, CopyMode::LazySro);
         c.n_particles = 128;

@@ -7,7 +7,7 @@
 use crate::heap::{Heap, Lazy};
 use crate::lazy_fields;
 use crate::rng::{normal_lpdf, Pcg64};
-use crate::smc::SmcModel;
+use crate::smc::{batch, particle_rng, SmcModel, StepCtx};
 
 /// One generation of a particle's history: a cons cell of the chain.
 #[derive(Clone)]
@@ -102,6 +102,50 @@ impl SmcModel for ListModel {
         }
     }
 
+    /// Batched generation over SoA lanes ([`crate::smc::batch`]): serial
+    /// heap reads → per-lane propagation + batched Gaussian log-pdf →
+    /// serial chain extension. Covers both tasks (simulation draws no
+    /// extra randomness), bit-identical to the scalar [`SmcModel::step`].
+    #[allow(clippy::too_many_arguments)]
+    fn step_batched(
+        &self,
+        heap: &mut Heap,
+        states: &mut [Lazy<ListState>],
+        t: usize,
+        seed: u64,
+        observe: bool,
+        base: usize,
+        _ctx: &StepCtx,
+    ) -> Option<Vec<f64>> {
+        let n = states.len();
+        // Phase 1 (serial, heap): gather the previous latent values.
+        let mut xs = vec![0.0f64; n];
+        for (i, s) in states.iter_mut().enumerate() {
+            xs[i] = heap.read(s, |st| st.x);
+        }
+        // Phase 2 (lanes, no heap): propagate, then weight in one batched
+        // log-pdf sweep. Same RNG stream and expression order per lane as
+        // the scalar step.
+        for (i, x) in xs.iter_mut().enumerate() {
+            let mut rng = particle_rng(seed, t, base + i);
+            *x = self.a * *x + rng.gaussian(0.0, self.q.sqrt());
+        }
+        let mut lw = vec![0.0f64; n];
+        if observe {
+            batch::gaussian_lpdf(self.obs[t - 1], &xs, self.r.sqrt(), &mut lw);
+        }
+        // Phase 3 (serial, heap): extend the chains under each particle's
+        // copy context, exactly as the scalar path does.
+        for (i, s) in states.iter_mut().enumerate() {
+            let old = *s;
+            let label = s.label();
+            let new = heap.with_context(label, |h| h.alloc(ListState { x: xs[i], prev: old }));
+            heap.release(old);
+            *s = new;
+        }
+        Some(lw)
+    }
+
     fn summary(&self, heap: &mut Heap, state: &mut Lazy<ListState>) -> f64 {
         heap.read(state, |s| s.x)
     }
@@ -142,6 +186,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut c = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
         c.n_particles = 1024;
@@ -153,5 +198,48 @@ mod tests {
             "{} vs {exact}",
             r.log_evidence
         );
+    }
+
+    #[test]
+    fn batched_step_equals_sequential_step_bitwise() {
+        // The SoA hook must match the scalar step bit-for-bit — weights
+        // and post-step states — for both tasks.
+        let model = ListModel::synthetic(6, 9);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx {
+            pool: &pool,
+            kalman: None,
+            batch: true,
+        };
+        for observe in [true, false] {
+            let mut heap_a = crate::heap::Heap::new(CopyMode::LazySro);
+            let mut heap_b = crate::heap::Heap::new(CopyMode::LazySro);
+            let n = 13;
+            let mut sa: Vec<_> = (0..n)
+                .map(|i| model.init(&mut heap_a, &mut particle_rng(3, 0, i)))
+                .collect();
+            let mut sb: Vec<_> = (0..n)
+                .map(|i| model.init(&mut heap_b, &mut particle_rng(3, 0, i)))
+                .collect();
+            for t in 1..=6 {
+                let wa = model
+                    .step_batched(&mut heap_a, &mut sa, t, 3, observe, 0, &ctx)
+                    .expect("list model always batches");
+                for (i, s) in sb.iter_mut().enumerate() {
+                    let mut rng = particle_rng(3, t, i);
+                    let wb = model.step(&mut heap_b, s, t, &mut rng, observe);
+                    assert_eq!(wa[i].to_bits(), wb.to_bits(), "t={t} i={i} observe={observe}");
+                    let xa = heap_a.read(&mut sa[i], |st| st.x);
+                    let xb = heap_b.read(s, |st| st.x);
+                    assert_eq!(xa.to_bits(), xb.to_bits(), "t={t} i={i} state");
+                }
+            }
+            for s in sa {
+                heap_a.release(s);
+            }
+            for s in sb {
+                heap_b.release(s);
+            }
+        }
     }
 }

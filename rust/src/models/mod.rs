@@ -115,6 +115,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         for model in Model::EVAL {
             for task in [Task::Inference, Task::Simulation] {
@@ -161,6 +162,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         for model in Model::EVAL {
             let mut outs = Vec::new();

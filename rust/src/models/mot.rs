@@ -312,6 +312,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut out = Vec::new();
         for mode in CopyMode::ALL {
@@ -337,6 +338,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut peaks = Vec::new();
         for mode in [CopyMode::Eager, CopyMode::LazySro] {
@@ -363,6 +365,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut c = RunConfig::for_model(Model::Mot, Task::Simulation, CopyMode::LazySro);
         c.n_particles = 16;

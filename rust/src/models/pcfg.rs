@@ -272,6 +272,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let run = |method, seed| {
             let mut c = RunConfig::for_model(Model::Pcfg, Task::Inference, CopyMode::LazySro);
@@ -301,6 +302,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut out = Vec::new();
         for mode in CopyMode::ALL {
@@ -323,6 +325,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut c = RunConfig::for_model(Model::Pcfg, Task::Simulation, CopyMode::Lazy);
         c.n_particles = 16;

@@ -11,9 +11,10 @@
 //!   y2_t = C z_t + e2,    e2 ~ N(0, R)
 //!
 //! The per-generation Kalman update over the particle batch is the numeric
-//! hot spot: `step_population` splits each generation into a serial heap
-//! phase and a batched phase running the compiled XLA artifact (the L1
-//! Pallas kernel) or the CPU oracle.
+//! hot spot: the `step_batched` hook splits each generation into a serial
+//! heap phase and a batched phase running the compiled XLA artifact (the
+//! L1 Pallas kernel) or the CPU oracle — per shard-local run, so every
+//! shard count takes the batched path.
 //!
 //! Paper scale: N = 2048, T = 500. Data: simulated (as in the paper).
 
@@ -136,9 +137,12 @@ impl SmcModel for Rbpf {
     }
 
     /// Batched generation: serial heap reads → batched Kalman (XLA artifact
-    /// or CPU oracle, parallelized by the pool) → serial heap writes.
+    /// or CPU oracle, parallelized by the pool) → serial heap writes. The
+    /// hook only covers inference: simulation samples pseudo-observations
+    /// from the per-particle RNG stream, which is inherently scalar, so it
+    /// declines (`None`) and the coordinator loops [`SmcModel::step`].
     #[allow(clippy::too_many_arguments)]
-    fn step_population(
+    fn step_batched(
         &self,
         heap: &mut Heap,
         states: &mut [Lazy<RbpfState>],
@@ -147,7 +151,10 @@ impl SmcModel for Rbpf {
         observe: bool,
         base: usize,
         ctx: &StepCtx,
-    ) -> Vec<f64> {
+    ) -> Option<Vec<f64>> {
+        if !observe {
+            return None;
+        }
         let n = states.len();
         // Phase 1 (serial, heap): read previous numeric state.
         let mut xis = vec![0.0f64; n];
@@ -166,7 +173,7 @@ impl SmcModel for Rbpf {
         }
         // Phase 2 (parallel, no heap): nonlinear propagation + y1 weights.
         let mut ll_xi = vec![0.0f64; n];
-        let obs_pair = if observe { Some(self.obs[t - 1]) } else { None };
+        let (y1, y2) = self.obs[t - 1];
         {
             let xis_ptr = &mut xis;
             let ll_ptr = &mut ll_xi;
@@ -176,10 +183,7 @@ impl SmcModel for Rbpf {
             ctx.pool.map_indexed(results, |i| {
                 let mut rng = particle_rng(seed, t, base + i);
                 let xi = xi_dynamics(xi_prev[i], t) + rng.gaussian(0.0, Q_XI.sqrt());
-                let ll = match obs_pair {
-                    Some((y1, _)) => normal_lpdf(y1, xi * xi / 20.0, R_XI.sqrt()),
-                    None => 0.0,
-                };
+                let ll = normal_lpdf(y1, xi * xi / 20.0, R_XI.sqrt());
                 (xi, ll)
             });
             for i in 0..n {
@@ -188,7 +192,6 @@ impl SmcModel for Rbpf {
             }
         }
         // Phase 3 (batched): Kalman predict+update+weight.
-        let y2 = obs_pair.map(|(_, y)| y).unwrap_or(0.0);
         let ll_z = match ctx.kalman {
             Some(bk) => bk
                 .run(&mut means, &mut covs, y2)
@@ -216,9 +219,9 @@ impl SmcModel for Rbpf {
             });
             heap.release(old);
             *s = new;
-            out.push(if observe { ll_xi[i] + ll_z[i] } else { 0.0 });
+            out.push(ll_xi[i] + ll_z[i]);
         }
-        out
+        Some(out)
     }
 
     fn summary(&self, heap: &mut Heap, state: &mut Lazy<RbpfState>) -> f64 {
@@ -249,7 +252,7 @@ mod tests {
     use crate::smc::{run_filter, Method};
 
     fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
-        StepCtx { pool, kalman: None }
+        StepCtx { pool, kalman: None, batch: true }
     }
 
     fn cfg(n: usize, t: usize, mode: CopyMode) -> RunConfig {
@@ -271,8 +274,8 @@ mod tests {
 
     #[test]
     fn batched_step_equals_sequential_step() {
-        // step_population (CPU batch path) must produce bit-identical
-        // weights and states to the per-particle step.
+        // step_batched (CPU batch path) must produce bit-identical weights
+        // and states to the per-particle step — the SmcModel contract.
         let model = Rbpf::synthetic(5, 3);
         let pool = ThreadPool::new(2);
         let n = 16;
@@ -285,19 +288,30 @@ mod tests {
             .map(|i| model.init(&mut heap_b, &mut particle_rng(7, 0, i)))
             .collect();
         for t in 1..=5 {
-            let wa = model.step_population(&mut heap_a, &mut sa, t, 7, true, 0, &ctx(&pool));
+            let wa = model
+                .step_batched(&mut heap_a, &mut sa, t, 7, true, 0, &ctx(&pool))
+                .expect("rbpf batches inference");
             let mut wb = Vec::new();
             for (i, s) in sb.iter_mut().enumerate() {
                 let mut rng = particle_rng(7, t, i);
                 wb.push(model.step(&mut heap_b, s, t, &mut rng, true));
             }
             for i in 0..n {
-                assert!(
-                    (wa[i] - wb[i]).abs() < 1e-10,
+                assert_eq!(
+                    wa[i].to_bits(),
+                    wb[i].to_bits(),
                     "t={t} i={i}: {} vs {}",
                     wa[i],
                     wb[i]
                 );
+            }
+            for i in 0..n {
+                let a = heap_a.read(&mut sa[i], |s| (s.xi, s.kalman.mean.clone()));
+                let b = heap_b.read(&mut sb[i], |s| (s.xi, s.kalman.mean.clone()));
+                assert_eq!(a.0.to_bits(), b.0.to_bits(), "t={t} i={i} xi");
+                for d in 0..DZ {
+                    assert_eq!(a.1[d].to_bits(), b.1[d].to_bits(), "t={t} i={i} mean[{d}]");
+                }
             }
         }
         for s in sa {
@@ -305,6 +319,24 @@ mod tests {
         }
         for s in sb {
             heap_b.release(s);
+        }
+    }
+
+    #[test]
+    fn simulation_declines_batched_hook() {
+        // Pseudo-observation sampling is per-particle RNG work; the hook
+        // must send the coordinator to the scalar path.
+        let model = Rbpf::synthetic(5, 3);
+        let pool = ThreadPool::new(1);
+        let mut heap = crate::heap::Heap::new(CopyMode::LazySro);
+        let mut states: Vec<_> = (0..4)
+            .map(|i| model.init(&mut heap, &mut particle_rng(7, 0, i)))
+            .collect();
+        assert!(model
+            .step_batched(&mut heap, &mut states, 1, 7, false, 0, &ctx(&pool))
+            .is_none());
+        for s in states {
+            heap.release(s);
         }
     }
 

@@ -262,6 +262,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut out = Vec::new();
         for mode in CopyMode::ALL {
@@ -285,6 +286,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut c = RunConfig::for_model(Model::Vbd, Task::Inference, CopyMode::LazySro);
         c.n_particles = 48;

@@ -58,7 +58,26 @@ pub fn batch_kalman_cpu(
     y: f64,
 ) -> Vec<f64> {
     let n = means.len() / DZ;
-    let mut lls = Vec::with_capacity(n);
+    let mut lls = vec![0.0f64; n];
+    batch_kalman_cpu_into(params, means, covs, y, &mut lls);
+    lls
+}
+
+/// [`batch_kalman_cpu`] writing into a caller-provided log-lik window —
+/// the allocation-free form the sharded coordinator uses per shard-local
+/// run: each run hands its own `means`/`covs`/`out` sub-slices, and
+/// because every particle's update is independent, any split of the
+/// population into runs produces bitwise the same states and log-liks as
+/// one whole-population call. `out.len()` must equal `means.len() / DZ`.
+pub fn batch_kalman_cpu_into(
+    params: &KalmanParams,
+    means: &mut [f64],
+    covs: &mut [f64],
+    y: f64,
+    out: &mut [f64],
+) {
+    let n = means.len() / DZ;
+    assert_eq!(out.len(), n, "log-lik window must cover the batch");
     for i in 0..n {
         let mean = means[i * DZ..(i + 1) * DZ].to_vec();
         let mut cov = Mat::zeros(DZ, DZ);
@@ -70,7 +89,7 @@ pub fn batch_kalman_cpu(
         let mut ks = KalmanState::new(mean, cov);
         ks.predict(&params.a, &[0.0; DZ], &params.q);
         let ll = ks.update(&params.c, &Mat::from_rows(&[&[params.r]]), &[y]);
-        lls.push(ll);
+        out[i] = ll;
         means[i * DZ..(i + 1) * DZ].copy_from_slice(&ks.mean);
         for r in 0..DZ {
             for c in 0..DZ {
@@ -78,7 +97,6 @@ pub fn batch_kalman_cpu(
             }
         }
     }
-    lls
 }
 
 /// Chunked executor for the compiled batched-Kalman artifact.
@@ -183,6 +201,47 @@ mod tests {
             assert!((lls[i] - ll).abs() < 1e-12);
             for d in 0..DZ {
                 assert!((means[i * DZ + d] - ks.mean[d]).abs() < 1e-12);
+            }
+        }
+    }
+
+    /// Splitting the population into shard-local windows is bitwise the
+    /// whole-batch call — the property the shard-aware runtime dispatch
+    /// rests on (each shard runs the oracle over its own runs).
+    #[test]
+    fn cpu_batch_shard_split_bitwise_invariant() {
+        let params = KalmanParams::rbpf_default();
+        let n = 23;
+        let (whole_m, whole_c) = init_batch(n);
+        let mut ref_m = whole_m.clone();
+        let mut ref_c = whole_c.clone();
+        let ref_ll = batch_kalman_cpu(&params, &mut ref_m, &mut ref_c, 0.7);
+        for k in [1usize, 2, 3, 5, 23] {
+            let mut m = whole_m.clone();
+            let mut c = whole_c.clone();
+            let mut ll = vec![0.0f64; n];
+            // K contiguous windows, like K shard-local runs.
+            let per = n.div_ceil(k);
+            let mut at = 0;
+            while at < n {
+                let end = (at + per).min(n);
+                batch_kalman_cpu_into(
+                    &params,
+                    &mut m[at * DZ..end * DZ],
+                    &mut c[at * DZ * DZ..end * DZ * DZ],
+                    0.7,
+                    &mut ll[at..end],
+                );
+                at = end;
+            }
+            for i in 0..n {
+                assert_eq!(ll[i].to_bits(), ref_ll[i].to_bits(), "ll[{i}] k={k}");
+            }
+            for (a, b) in m.iter().zip(&ref_m) {
+                assert_eq!(a.to_bits(), b.to_bits(), "means k={k}");
+            }
+            for (a, b) in c.iter().zip(&ref_c) {
+                assert_eq!(a.to_bits(), b.to_bits(), "covs k={k}");
             }
         }
     }

@@ -18,7 +18,7 @@
 
 mod kalman;
 
-pub use kalman::{batch_kalman_cpu, BatchKalman, KalmanParams, DZ};
+pub use kalman::{batch_kalman_cpu, batch_kalman_cpu_into, BatchKalman, KalmanParams, DZ};
 
 /// Batch size artifacts are lowered with (must match `python/compile/aot.py`).
 pub const BATCH: usize = 256;

@@ -1,0 +1,192 @@
+//! Batched structure-of-arrays numeric kernels for the propagation and
+//! weighting hot path.
+//!
+//! The sharded coordinator already materializes each generation as
+//! contiguous global-index runs (one `&mut [Lazy<S>]` slice per shard-local
+//! run), so the numeric phase can operate on plain `&[f64]` lanes gathered
+//! from those runs: log-weight accumulation, observation log-pdfs, and the
+//! per-generation weight reduction all become straight-line loops over
+//! contiguous memory that the compiler autovectorizes.
+//!
+//! **Determinism contract.** Every kernel in this module is elementwise or
+//! reduces in a fixed left-to-right order, and the per-lane arithmetic is
+//! the *same expression sequence* as the scalar path it replaces
+//! ([`normal_lpdf`] / [`poisson_lpmf`] per lane, [`weight_stats`] for the
+//! reduction). Batch width and run fragmentation therefore never change a
+//! single output bit: splitting a population into arbitrary sub-slices and
+//! concatenating the results is bitwise identical to one whole-slice call.
+//! That property is what lets `--batch on|off`, every shard count, and
+//! every rebalance/steal schedule share one differential oracle (see
+//! `tests/differential.rs`).
+
+use crate::rng::{normal_lpdf, poisson_lpmf};
+use crate::stats::weight_stats;
+
+/// Lane-wise log-weight accumulate: `lw[i] += inc[i]`.
+///
+/// The scatter half of the fused accumulate/reduce pair — the coordinator
+/// calls this once per contiguous shard-local run with the run's weight
+/// increments. Panics if the slices disagree in length.
+#[inline]
+pub fn accumulate(lw: &mut [f64], inc: &[f64]) {
+    assert_eq!(lw.len(), inc.len(), "accumulate: lane length mismatch");
+    for (w, d) in lw.iter_mut().zip(inc) {
+        *w += d;
+    }
+}
+
+/// Fused accumulate + normalize + ESS over one population: adds `inc` into
+/// `lw` lane-wise, then reduces with [`weight_stats`] (log mean weight +
+/// normalized weights + effective sample size in a single pass). Returns
+/// `(log mean weight, ess)`.
+pub fn accumulate_weight_stats(lw: &mut [f64], inc: &[f64], out: &mut Vec<f64>) -> (f64, f64) {
+    accumulate(lw, inc);
+    weight_stats(lw, out)
+}
+
+/// Batched Gaussian observation log-density: `out[i] = log N(y; means[i],
+/// sd²)`. One shared observation scored against a lane of per-particle
+/// means — the LGSS/list-model weighting kernel. Each lane evaluates
+/// exactly [`normal_lpdf`], so results are bit-identical to the scalar
+/// path; the loop-invariant `ln sd` term is hoisted by the compiler, not
+/// by algebraic rearrangement.
+#[inline]
+pub fn gaussian_lpdf(y: f64, means: &[f64], sd: f64, out: &mut [f64]) {
+    assert_eq!(means.len(), out.len(), "gaussian_lpdf: lane length mismatch");
+    for (o, m) in out.iter_mut().zip(means) {
+        *o = normal_lpdf(y, *m, sd);
+    }
+}
+
+/// Batched Poisson observation log-mass: `out[i] = log Poisson(y; rates[i])`.
+/// One shared count observation scored against a lane of per-particle
+/// rates. Each lane evaluates exactly [`poisson_lpmf`], so results are
+/// bit-identical to the scalar path.
+#[inline]
+pub fn poisson_lpmf_lanes(y: u64, rates: &[f64], out: &mut [f64]) {
+    assert_eq!(rates.len(), out.len(), "poisson_lpmf_lanes: lane length mismatch");
+    for (o, r) in out.iter_mut().zip(rates) {
+        *o = poisson_lpmf(y, *r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::stats::{ess, normalize_log_weights};
+
+    /// Deterministic pseudo-random lanes for the property tests.
+    fn lanes(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| rng.gaussian(0.0, 3.0)).collect()
+    }
+
+    /// Sub-slice fragmentations exercised by the width/fragmentation
+    /// properties: whole slice, singletons, and uneven runs.
+    fn fragmentations(n: usize) -> Vec<Vec<usize>> {
+        let mut cuts = vec![vec![n], vec![1; n]];
+        let mut uneven = Vec::new();
+        let (mut left, mut w) = (n, 1);
+        while left > 0 {
+            let take = w.min(left);
+            uneven.push(take);
+            left -= take;
+            w = w * 2 + 1;
+        }
+        cuts.push(uneven);
+        cuts
+    }
+
+    #[test]
+    fn accumulate_matches_scalar_any_fragmentation() {
+        for n in [1usize, 7, 64, 255] {
+            let base = lanes(n, 11);
+            let inc = lanes(n, 22);
+            let mut whole = base.clone();
+            accumulate(&mut whole, &inc);
+            for cut in fragmentations(n) {
+                let mut frag = base.clone();
+                let mut at = 0;
+                for len in cut {
+                    accumulate(&mut frag[at..at + len], &inc[at..at + len]);
+                    at += len;
+                }
+                for (a, b) in frag.iter().zip(&whole) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+                }
+                // And against the plainest possible scalar loop.
+                for (i, w) in frag.iter().enumerate() {
+                    assert_eq!(w.to_bits(), (base[i] + inc[i]).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_lanes_match_scalar_oracle_bitwise() {
+        for n in [1usize, 5, 128, 301] {
+            let means = lanes(n, 7);
+            let mut out = vec![0.0; n];
+            gaussian_lpdf(1.25, &means, 0.8f64.sqrt(), &mut out);
+            for (i, o) in out.iter().enumerate() {
+                let want = normal_lpdf(1.25, means[i], 0.8f64.sqrt());
+                assert_eq!(o.to_bits(), want.to_bits(), "lane {i} of {n}");
+            }
+            // Fragmented evaluation is the same lanes.
+            for cut in fragmentations(n) {
+                let mut frag = vec![0.0; n];
+                let mut at = 0;
+                for len in cut {
+                    let sub = &mut frag[at..at + len];
+                    gaussian_lpdf(1.25, &means[at..at + len], 0.8f64.sqrt(), sub);
+                    at += len;
+                }
+                for (a, b) in frag.iter().zip(&out) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_lanes_match_scalar_oracle_bitwise() {
+        let mut rng = Pcg64::new(99);
+        for n in [1usize, 9, 200] {
+            let rates: Vec<f64> = (0..n).map(|_| rng.below(50) as f64 * 0.3).collect();
+            for y in [0u64, 3, 17] {
+                let mut out = vec![0.0; n];
+                poisson_lpmf_lanes(y, &rates, &mut out);
+                for (i, o) in out.iter().enumerate() {
+                    assert_eq!(o.to_bits(), poisson_lpmf(y, rates[i]).to_bits(), "lane {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_accumulate_reduce_matches_unfused_bitwise() {
+        for n in [1usize, 6, 97, 512] {
+            let base = lanes(n, 31);
+            let inc = lanes(n, 32);
+            // Unfused reference: scalar accumulate, then the pre-existing
+            // two-pass normalize + ESS.
+            let mut lw_ref = base.clone();
+            for (w, d) in lw_ref.iter_mut().zip(&inc) {
+                *w += d;
+            }
+            let mut w_ref = Vec::new();
+            let lmean_ref = normalize_log_weights(&lw_ref, &mut w_ref);
+            let ess_ref = ess(&w_ref);
+            // Fused kernel.
+            let mut lw = base.clone();
+            let mut w = Vec::new();
+            let (lmean, e) = accumulate_weight_stats(&mut lw, &inc, &mut w);
+            assert_eq!(lmean.to_bits(), lmean_ref.to_bits(), "n={n}");
+            assert_eq!(e.to_bits(), ess_ref.to_bits(), "n={n}");
+            for (a, b) in w.iter().zip(&w_ref) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+}

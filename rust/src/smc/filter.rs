@@ -54,10 +54,26 @@
 //! attempts shard-parallel. Output and total attempt count are identical
 //! for every K. (Contract v1 chained all slots through one cumulative
 //! attempt counter, which collapsed the population onto shard 0.)
-//! With K > 1 the per-shard `step_population` runs with a serial pool and
-//! without the XLA batch artifact (the batched runtime is not
-//! shard-aware yet); K = 1 keeps the full batched path.
+//! Pending slots are retried in batched rounds: once every pending slot
+//! has failed its first attempt, each round speculatively draws
+//! `ALIVE_ATTEMPTS_PER_ROUND` attempts per slot (the per-slot streams
+//! make extra draws side-effect-free), cutting the serialized
+//! ancestor-import barriers in low-survival regimes; attempts past a
+//! slot's first survivor are discarded uncounted, so output and attempt
+//! totals are identical to one-attempt rounds.
+//!
+//! **Batched numeric path.** Propagation dispatches through `step_run`:
+//! with `StepCtx::batch` set (the `--batch on` default) a model's
+//! [`SmcModel::step_batched`] SoA hook handles each contiguous shard-local
+//! run, falling back to the scalar `step_population` when the model
+//! declines. The per-shard worker contexts forward the compiled Kalman
+//! artifact (`StepCtx::kalman`), so the XLA runtime dispatch is
+//! shard-aware: every K uses the artifact (feature `xla`) or the f64 CPU
+//! batch oracle, not per-particle fallback. Weight scatter/reduce run
+//! through the [`super::batch`] kernels in fixed global-index order, so
+//! output is bit-identical for every K × policy × steal × batch setting.
 
+use super::batch;
 use super::model::{alive_retry_rng, particle_rng, resample_rng, SmcModel, StepCtx};
 use super::rebalance::{
     plan_offspring, CostTracker, RebalancePolicy, HINT_FLOOR, OP_COST_S, TRANSPLANT_COST_S,
@@ -70,7 +86,7 @@ use crate::heap::{
 };
 use crate::pool::{StealYard, ThreadPool};
 use crate::rng::Pcg64;
-use crate::stats::{ess, log_sum_exp, normalize_log_weights};
+use crate::stats::weight_stats;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -272,7 +288,32 @@ fn step_scoped<M: SmcModel + Sync>(
     }
 }
 
-fn step_snapshot(shards: &[Heap], t: usize, start: &Instant, w: &[f64]) -> StepMetrics {
+/// Propagate one contiguous run, preferring the model's batched SoA hook.
+/// With `ctx.batch` set, [`SmcModel::step_batched`] gets first refusal on
+/// the whole run; a `None` (model has no batched core, or the generation
+/// shape doesn't fit it) falls back to the scalar `step_population` loop.
+/// The two paths are bit-identical per particle (the hook's contract), so
+/// callers never need to know which one ran.
+#[allow(clippy::too_many_arguments)]
+fn step_run<M: SmcModel + Sync>(
+    model: &M,
+    heap: &mut Heap,
+    states: &mut [Lazy<M::State>],
+    t: usize,
+    seed: u64,
+    observe: bool,
+    base: usize,
+    ctx: &StepCtx,
+) -> Vec<f64> {
+    if ctx.batch {
+        if let Some(winc) = model.step_batched(heap, states, t, seed, observe, base, ctx) {
+            return winc;
+        }
+    }
+    model.step_population(heap, states, t, seed, observe, base, ctx)
+}
+
+fn step_snapshot(shards: &[Heap], t: usize, start: &Instant, ess: f64) -> StepMetrics {
     let agg = aggregate_metrics(shards);
     StepMetrics {
         t,
@@ -290,7 +331,7 @@ fn step_snapshot(shards: &[Heap], t: usize, start: &Instant, w: &[f64]) -> StepM
         live_objects: agg.live_objects,
         lazy_copies: agg.lazy_copies,
         eager_copies: agg.eager_copies,
-        ess: ess(w),
+        ess,
     }
 }
 
@@ -393,7 +434,8 @@ fn propagate_run<M: SmcModel + Sync>(
             },
         );
     } else {
-        run.winc = model.step_population(
+        run.winc = step_run(
+            model,
             heap,
             &mut run.states,
             t,
@@ -435,10 +477,8 @@ fn propagate_assigned<M: SmcModel + Sync>(
         // Single shard: the pre-sharding path, with the full batched
         // context (XLA artifact + intra-generation numeric parallelism).
         // The rebalancer never runs at K = 1, so no costs are measured.
-        let winc = model.step_population(&mut shards[0], states, t, seed, observe, 0, ctx);
-        for (w, d) in lw.iter_mut().zip(winc) {
-            *w += d;
-        }
+        let winc = step_run(model, &mut shards[0], states, t, seed, observe, 0, ctx);
+        batch::accumulate(lw, &winc);
         return;
     }
     let k = shards.len();
@@ -464,17 +504,20 @@ fn propagate_assigned<M: SmcModel + Sync>(
     // (models like RBPF fan their numeric phase out on the given pool;
     // per-particle RNG streams keep results invariant to the chunking).
     let per_shard_threads = (ctx.pool.n_threads() / k).max(1);
+    let (kalman, use_batch) = (ctx.kalman, ctx.batch);
     ctx.pool.for_shards(&mut tasks, |_, task| {
         if task.runs.is_empty() {
             return;
         }
         // Each worker owns one shard outright; the shard's numeric phase
-        // gets its slice of the thread budget and runs on the CPU oracle
-        // path (the batched XLA runtime is not shard-aware).
+        // gets its slice of the thread budget and the shared compiled
+        // artifact — the batched runtime dispatch is shard-aware, so
+        // every K runs the artifact (or the CPU batch oracle).
         let local = ThreadPool::new(per_shard_threads);
         let shard_ctx = StepCtx {
             pool: &local,
-            kalman: None,
+            kalman,
+            batch: use_batch,
         };
         for run in task.runs.iter_mut() {
             propagate_run(model, task.heap, run, t, seed, observe, &shard_ctx, want_costs);
@@ -484,9 +527,7 @@ fn propagate_assigned<M: SmcModel + Sync>(
     for task in tasks {
         for run in task.runs {
             let base = run.base;
-            for (j, w) in run.winc.iter().enumerate() {
-                lw[base + j] += w;
-            }
+            batch::accumulate(&mut lw[base..base + run.winc.len()], &run.winc);
             if let Some(rc) = raw_cost.as_deref_mut() {
                 for (j, c) in run.costs.iter().enumerate() {
                     rc[base + j] = *c;
@@ -547,6 +588,7 @@ fn propagate_contiguous<M: SmcModel + Sync>(
         })
         .collect();
     let per_shard_threads = (ctx.pool.n_threads() / k).max(1);
+    let (kalman, use_batch) = (ctx.kalman, ctx.batch);
     ctx.pool.for_shards(&mut tasks, |_, task| {
         let chunk = &mut task.chunk;
         if chunk.states.is_empty() {
@@ -555,7 +597,8 @@ fn propagate_contiguous<M: SmcModel + Sync>(
         let local = ThreadPool::new(per_shard_threads);
         let shard_ctx = StepCtx {
             pool: &local,
-            kalman: None,
+            kalman,
+            batch: use_batch,
         };
         if want_costs {
             // Exact per-particle costs via the shared scoped core.
@@ -576,12 +619,10 @@ fn propagate_contiguous<M: SmcModel + Sync>(
                 },
             );
         } else {
-            let winc = model.step_population(
-                chunk.heap, chunk.states, t, seed, observe, chunk.base, &shard_ctx,
+            let winc = step_run(
+                model, chunk.heap, chunk.states, t, seed, observe, chunk.base, &shard_ctx,
             );
-            for (w, d) in chunk.lw.iter_mut().zip(winc) {
-                *w += d;
-            }
+            batch::accumulate(chunk.lw, &winc);
         }
     });
     if let Some(rc) = raw_cost.as_deref_mut() {
@@ -599,6 +640,16 @@ fn propagate_contiguous<M: SmcModel + Sync>(
 /// siblings quickly; large enough that the `wanted` check (two relaxed
 /// atomic loads) is noise.
 const STEAL_CHUNK: usize = 8;
+
+/// Speculative alive-PF attempts drawn per pending slot per retry round.
+/// The per-slot retry streams ([`alive_retry_rng`]) make every attempt's
+/// randomness independent of how many are drawn, so a round can propagate
+/// several attempts per slot and keep only each slot's first survivor —
+/// identical output and attempt totals, a fraction of the serialized
+/// ancestor-import barriers in low-survival regimes. First attempts
+/// (attempt counter 0) still run one per slot: in the common
+/// everyone-survives regime speculation would only waste propagation.
+const ALIVE_ATTEMPTS_PER_ROUND: usize = 4;
 
 /// One shard's work under the work-stealing executor.
 struct StealWork<'a, S> {
@@ -787,7 +838,8 @@ fn drain_own_queue<M: SmcModel + Sync>(
                     },
                 );
             } else {
-                let winc = model.step_population(
+                let winc = step_run(
+                    model,
                     heap,
                     &mut run.states[i..i + len],
                     t,
@@ -872,6 +924,7 @@ fn propagate_stealing<M: SmcModel + Sync>(
     let yard: StealYard<StolenBatch<M::State>> = StealYard::new(n_workers);
     let done: Mutex<Vec<FinishedBatch<M::State>>> = Mutex::new(Vec::new());
     let per_worker_threads = (ctx.pool.n_threads() / n_workers).max(1);
+    let (kalman, use_batch) = (ctx.kalman, ctx.batch);
     ctx.pool.for_shards(&mut groups, |_, group| {
         // Unwind safety: a panicking worker never parks, so without this
         // guard a model panic here would leave parked siblings waiting
@@ -880,7 +933,8 @@ fn propagate_stealing<M: SmcModel + Sync>(
         let local = ThreadPool::new(per_worker_threads);
         let shard_ctx = StepCtx {
             pool: &local,
-            kalman: None,
+            kalman,
+            batch: use_batch,
         };
         for work in group.iter_mut() {
             drain_own_queue(
@@ -898,8 +952,7 @@ fn propagate_stealing<M: SmcModel + Sync>(
             } = b;
             let t0 = Instant::now();
             let scope = heap.begin_scope();
-            let winc =
-                model.step_population(&mut heap, &mut states, t, seed, observe, base, &shard_ctx);
+            let winc = step_run(model, &mut heap, &mut states, t, seed, observe, base, &shard_ctx);
             let hints: Vec<f64> = if want_costs {
                 states.iter_mut().map(|st| model.cost_hint(&mut heap, st)).collect()
             } else {
@@ -995,9 +1048,7 @@ fn propagate_stealing<M: SmcModel + Sync>(
         for run in runs {
             debug_assert_eq!(run.states.len(), run.winc.len());
             let base = run.base;
-            for (j, w) in run.winc.iter().enumerate() {
-                lw[base + j] += w;
-            }
+            batch::accumulate(&mut lw[base..base + run.winc.len()], &run.winc);
             if let Some(rc) = raw_cost.as_deref_mut() {
                 debug_assert_eq!(run.costs.len(), run.states.len());
                 for (j, c) in run.costs.iter().enumerate() {
@@ -1014,9 +1065,7 @@ fn propagate_stealing<M: SmcModel + Sync>(
         scratch_pools[s].append(&mut rc_item.recycled);
         for (base, back, winc, hints, cost) in rc_item.back {
             let hint_sum = clamped_hint_sum(hints.iter());
-            for (j, w) in winc.iter().enumerate() {
-                lw[base + j] += w;
-            }
+            batch::accumulate(&mut lw[base..base + winc.len()], &winc);
             if let Some(rc) = raw_cost.as_deref_mut() {
                 apportion_cost(rc, base, cost, &hints, hint_sum);
             }
@@ -1178,7 +1227,10 @@ fn plan_and_resample<S: Payload>(
 /// deterministic and needs no heap access), imports each foreign retry
 /// ancestor once per distinct (ancestor, destination-shard) pair —
 /// concurrently for disjoint pairs — and the attempts themselves run
-/// shard-parallel, one `&mut Heap` per worker. Because every slot's
+/// shard-parallel, one `&mut Heap` per worker. Retry rounds draw
+/// [`ALIVE_ATTEMPTS_PER_ROUND`] speculative attempts per pending slot
+/// (first-attempt rounds draw one); each slot keeps its first surviving
+/// attempt and discards the rest uncounted. Because every slot's
 /// attempt sequence depends only on its own streams and the (K-invariant)
 /// parent values, the surviving states, weights, and the *total attempt
 /// count* are bit-identical for every K. Same-shard retries keep the O(1)
@@ -1217,6 +1269,9 @@ fn alive_generation<M: SmcModel + Sync>(
     let mut total_attempts = 0usize;
     struct AliveJob<S> {
         slot: usize,
+        /// Attempt offset within this round's speculative window (the
+        /// slot's attempt counter plus `off` names the retry stream).
+        off: usize,
         parent: Lazy<S>,
         rng: Pcg64,
         winc: f64,
@@ -1233,24 +1288,42 @@ fn alive_generation<M: SmcModel + Sync>(
     // tail costs O(pending) per round, not O(n).
     let mut pending: Vec<usize> = (0..n).collect();
     while !pending.is_empty() {
-        // 1. Per-slot streams: ancestor redraw + the attempt's RNG state.
-        let mut draws: Vec<(usize, usize, Pcg64)> = Vec::with_capacity(pending.len());
+        // Slots pend together: a slot leaves the set the round it
+        // survives, and every still-pending slot consumed the whole
+        // window, so pending attempt counters stay uniform — which is
+        // what lets one window size serve the round.
+        debug_assert!(
+            pending.iter().all(|&i| attempt[i] == attempt[pending[0]]),
+            "pending attempt counters diverged"
+        );
+        let window = if attempt[pending[0]] == 0 {
+            1
+        } else {
+            ALIVE_ATTEMPTS_PER_ROUND
+        };
+        // 1. Per-slot streams: ancestor redraw + the attempt's RNG state,
+        //    `window` speculative attempts per pending slot.
+        let mut draws: Vec<(usize, usize, usize, Pcg64)> =
+            Vec::with_capacity(pending.len() * window);
         for &i in &pending {
-            let mut rng = alive_retry_rng(seed, t, i, attempt[i]);
-            let a = if attempt[i] == 0 {
-                i
-            } else {
-                rng.below(n as u64) as usize
-            };
-            draws.push((i, a, rng));
+            for off in 0..window {
+                let att = attempt[i] + off;
+                let mut rng = alive_retry_rng(seed, t, i, att);
+                let a = if att == 0 {
+                    i
+                } else {
+                    rng.below(n as u64) as usize
+                };
+                draws.push((i, off, a, rng));
+            }
         }
         // 2. Import foreign retry ancestors: one transplant per distinct
         //    (ancestor, destination) pair (BTreeSet: deterministic op
         //    order), disjoint pairs concurrently.
         let pair_set: std::collections::BTreeSet<(usize, usize)> = draws
             .iter()
-            .filter(|(i, a, _)| assign[*a] != assign[*i])
-            .map(|(i, a, _)| (*a, assign[*i]))
+            .filter(|(i, _, a, _)| assign[*a] != assign[*i])
+            .map(|(i, _, a, _)| (*a, assign[*i]))
             .collect();
         let mut ops: Vec<TransplantOp<M::State>> = pair_set
             .into_iter()
@@ -1267,7 +1340,7 @@ fn alive_generation<M: SmcModel + Sync>(
             ops.into_iter().map(|(_, dst, (a, h))| ((a, dst), h)).collect();
         // 3. Shard-parallel attempts.
         let mut jobs_by_shard: Vec<Vec<AliveJob<M::State>>> = (0..k).map(|_| Vec::new()).collect();
-        for (i, a, rng) in draws {
+        for (i, off, a, rng) in draws {
             let dst = assign[i];
             let parent = if assign[a] == dst {
                 states[a]
@@ -1276,6 +1349,7 @@ fn alive_generation<M: SmcModel + Sync>(
             };
             jobs_by_shard[dst].push(AliveJob {
                 slot: i,
+                off,
                 parent,
                 rng,
                 winc: 0.0,
@@ -1314,15 +1388,27 @@ fn alive_generation<M: SmcModel + Sync>(
                 }
             }
         });
-        // 4. Apply results in slot order (deterministic 10k bailout);
-        //    every attempt's exact cost accumulates on its slot.
+        // 4. Apply results in (slot, attempt) order — deterministic 10k
+        //    bailout; every *counted* attempt's exact cost accumulates on
+        //    its slot. Per slot, only attempts up to and including the
+        //    first survivor count: later speculative attempts in the
+        //    window are discarded (surviving children released) without
+        //    touching the attempt total, so the totals match one-attempt
+        //    rounds exactly.
         let mut round: Vec<AliveJob<M::State>> = Vec::new();
         for task in tasks {
             round.extend(task.jobs);
         }
-        round.sort_by_key(|job| job.slot);
+        round.sort_by_key(|job| (job.slot, job.off));
         for job in round {
             let i = job.slot;
+            if !survivors[i].is_null() {
+                // Past this slot's first survivor: speculation overshoot.
+                if job.survived {
+                    shards[assign[i]].release(job.child);
+                }
+                continue;
+            }
             total_attempts += 1;
             attempt[i] += 1;
             if let Some(rc) = raw_cost.as_deref_mut() {
@@ -1379,7 +1465,7 @@ fn alive_generation<M: SmcModel + Sync>(
 /// cfg.n_particles = 32;
 /// cfg.n_steps = 10;
 /// let pool = ThreadPool::new(1);
-/// let ctx = StepCtx { pool: &pool, kalman: None };
+/// let ctx = StepCtx { pool: &pool, kalman: None, batch: true };
 /// let mut heap = Heap::new(CopyMode::LazySro);
 /// let r = run_filter(&model, &cfg, &mut heap, &ctx, Method::Bootstrap);
 /// assert!(r.log_evidence.is_finite());
@@ -1411,6 +1497,13 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
     let k = shards.len();
     let t_max = cfg.n_steps.min(model.horizon());
     let observe = cfg.task == Task::Inference;
+    // `--batch off` composes with the caller's context: either side can
+    // force the scalar path for the whole run (bit-identical output).
+    let ctx = &StepCtx {
+        pool: ctx.pool,
+        kalman: ctx.kalman,
+        batch: ctx.batch && cfg.batch,
+    };
     let resampler = Resampler::Systematic;
     let policy = if k > 1 { cfg.rebalance } else { RebalancePolicy::Off };
     let balancing = policy != RebalancePolicy::Off;
@@ -1441,8 +1534,9 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
     for t in 1..=t_max {
         // --- Resample (inference only; simulation performs no copies). ---
         if observe {
-            normalize_log_weights(&lw, &mut w);
-            let cur_ess = ess(&w);
+            // Fused single pass: normalized weights + log mean weight
+            // (the evidence increment, reused below) + ESS.
+            let (lmean, cur_ess) = weight_stats(&lw, &mut w);
             if cur_ess < cfg.ess_threshold * n as f64 {
                 let mut rrng = resample_rng(cfg.seed, t);
                 // Auxiliary stage: bias resampling by lookahead scores.
@@ -1461,10 +1555,10 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
                         let alw: Vec<f64> =
                             lw.iter().zip(&aux).map(|(a, b)| a + b).collect();
                         let mut aw = Vec::new();
-                        normalize_log_weights(&alw, &mut aw);
+                        let (alm, _) = weight_stats(&alw, &mut aw);
                         let anc = resampler.ancestors(&mut rrng, &aw, n);
                         // First-stage correction: w ∝ 1 / lookahead(a).
-                        log_z += log_sum_exp(&alw) - (n as f64).ln();
+                        log_z += alm;
                         migrations += plan_and_resample(
                             policy,
                             cfg.rebalance_threshold,
@@ -1487,7 +1581,7 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
                     Some(resampler.ancestors(&mut rrng, &w, n))
                 };
                 if let Some(anc) = ancestors {
-                    log_z += log_sum_exp(&lw) - (n as f64).ln();
+                    log_z += lmean;
                     migrations += plan_and_resample(
                         policy,
                         cfg.rebalance_threshold,
@@ -1582,8 +1676,8 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
 
         // --- Metrics snapshot (Figure 7). ---
         sample_global_peak(shards);
-        normalize_log_weights(&lw, &mut w);
-        series.push(step_snapshot(shards, t, &start, &w));
+        let (_, snap_ess) = weight_stats(&lw, &mut w);
+        series.push(step_snapshot(shards, t, &start, snap_ess));
 
         // --- Decommit barrier: with a watermark configured, return
         //     fully-empty slab chunks past it to the system allocator so
@@ -1597,8 +1691,8 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
     }
 
     // Final-generation evidence contribution and posterior summary.
-    log_z += log_sum_exp(&lw) - (n as f64).ln();
-    normalize_log_weights(&lw, &mut w);
+    let (final_lmean, _) = weight_stats(&lw, &mut w);
+    log_z += final_lmean;
     let mut post = 0.0;
     for i in 0..n {
         let mut s = states[i];
@@ -1668,6 +1762,13 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
     let n = cfg.n_particles;
     let k = shards.len();
     let t_max = cfg.n_steps.min(model.horizon());
+    // `--batch off` composes with the caller's context (see
+    // `run_filter_shards`).
+    let ctx = &StepCtx {
+        pool: ctx.pool,
+        kalman: ctx.kalman,
+        batch: ctx.batch && cfg.batch,
+    };
     let resampler = Resampler::Systematic;
     let policy = if k > 1 { cfg.rebalance } else { RebalancePolicy::Off };
     let balancing = policy != RebalancePolicy::Off;
@@ -1705,14 +1806,15 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
         let mut series = Vec::new();
 
         for t in 1..=t_max {
-            // Resample all but the conditional slot.
-            normalize_log_weights(&lw, &mut w);
+            // Resample all but the conditional slot (fused normalize +
+            // evidence increment — PG resamples every generation).
+            let (lmean, _) = weight_stats(&lw, &mut w);
             let mut rrng = resample_rng(seed, t);
             let mut anc = resampler.ancestors(&mut rrng, &w, n);
             if reference.is_some() {
                 anc[n - 1] = n - 1;
             }
-            log_z += log_sum_exp(&lw) - (n as f64).ln();
+            log_z += lmean;
             migrations += plan_and_resample(
                 policy,
                 cfg.rebalance_threshold,
@@ -1782,20 +1884,20 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
             }
 
             sample_global_peak(shards);
-            normalize_log_weights(&lw, &mut w);
-            series.push(step_snapshot(shards, t, &start, &w));
+            let (_, snap_ess) = weight_stats(&lw, &mut w);
+            series.push(step_snapshot(shards, t, &start, snap_ess));
             // Decommit barrier (see `run_filter_shards`).
             if let Some(keep) = cfg.decommit_watermark {
                 trim_shards(shards, keep);
             }
         }
-        log_z += log_sum_exp(&lw) - (n as f64).ln();
 
         // Select the next reference trajectory and copy it out EAGERLY
         // (outside the tree pattern — the paper's §4 VBD note). A winner
         // on a foreign shard is transplanted to the reference shard,
         // which is equally eager.
-        normalize_log_weights(&lw, &mut w);
+        let (final_lmean, _) = weight_stats(&lw, &mut w);
+        log_z += final_lmean;
         let mut srng = resample_rng(seed, t_max + 1);
         let winner = srng.categorical(&w);
         let s_win = assign[winner];

@@ -2,6 +2,7 @@
 //! population coordinator (bootstrap / auxiliary / alive particle filters
 //! and particle Gibbs) over the (sharded) lazy copy-on-write heap.
 
+pub mod batch;
 pub mod filter;
 pub mod model;
 pub mod rebalance;
@@ -142,6 +143,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut heap = Heap::new(CopyMode::LazySro);
         let r = run_filter(&model, &cfg(512, 40, CopyMode::LazySro), &mut heap, &ctx, Method::Bootstrap);
@@ -163,6 +165,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut outs = Vec::new();
         for mode in CopyMode::ALL {
@@ -184,6 +187,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut peaks = Vec::new();
         for mode in [CopyMode::Eager, CopyMode::LazySro] {
@@ -206,6 +210,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut c = cfg(64, 30, CopyMode::LazySro);
         c.task = Task::Simulation;
@@ -223,6 +228,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut heap = Heap::new(CopyMode::LazySro);
         let r = run_filter(&model, &cfg(64, 10, CopyMode::LazySro), &mut heap, &ctx, Method::Alive);
@@ -239,6 +245,7 @@ mod tests {
         let ctx = StepCtx {
             pool: &pool,
             kalman: None,
+            batch: true,
         };
         let mut c = cfg(128, 15, CopyMode::LazySro);
         c.pg_iterations = 3;

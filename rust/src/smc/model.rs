@@ -12,6 +12,11 @@ pub struct StepCtx<'a> {
     /// Compiled batched-Kalman artifact, when `make artifacts` has run and
     /// the config enables XLA. Models fall back to the CPU oracle path.
     pub kalman: Option<&'a BatchKalman>,
+    /// Whether the coordinator may take a model's batched SoA step
+    /// ([`SmcModel::step_batched`]). `false` forces the scalar per-particle
+    /// path everywhere; output is bit-identical either way (the batched
+    /// kernels' determinism contract, gated by `tests/differential.rs`).
+    pub batch: bool,
 }
 
 /// A population-based probabilistic program.
@@ -45,11 +50,42 @@ pub trait SmcModel {
         observe: bool,
     ) -> f64;
 
+    /// Batched SoA propagate+weight across (a contiguous slice of) the
+    /// population — the opt-in fast path. Models with a tensorizable
+    /// numeric core (LGSS, RBPF) return `Some(weight increments)` after
+    /// splitting the generation into a serial heap phase and a batched
+    /// numeric phase over gathered `&[f64]` lanes (see [`crate::smc::batch`]
+    /// and, for RBPF, the shard-aware runtime dispatch through
+    /// `ctx.kalman`). The default returns `None`, sending the coordinator
+    /// to [`SmcModel::step_population`].
+    ///
+    /// **Contract:** when `Some` is returned, every slot's weight
+    /// increment and post-step heap state must be *bitwise identical* to
+    /// what the scalar [`SmcModel::step`] would have produced for that
+    /// slot — same RNG streams (`particle_rng(seed, t, base + i)`), same
+    /// floating-point expression order per particle. The coordinator
+    /// freely mixes batched and scalar stepping across shards, schedules,
+    /// and the `--batch` toggle, and the differential harness holds the
+    /// outputs bit-equal.
+    #[allow(clippy::too_many_arguments)]
+    fn step_batched(
+        &self,
+        _heap: &mut Heap,
+        _states: &mut [Lazy<Self::State>],
+        _t: usize,
+        _seed: u64,
+        _observe: bool,
+        _base: usize,
+        _ctx: &StepCtx,
+    ) -> Option<Vec<f64>> {
+        None
+    }
+
     /// Batched propagate+weight across (a contiguous slice of) the
-    /// population. The default loops [`SmcModel::step`]; models with a
-    /// tensorizable numeric core (RBPF) override this to split the
-    /// generation into a serial heap phase and a batched XLA / parallel
-    /// numeric phase.
+    /// population. The default loops [`SmcModel::step`]; the coordinator
+    /// calls this whenever [`SmcModel::step_batched`] declines (or batching
+    /// is disabled), so it is the scalar reference path the batched hook
+    /// must match bitwise.
     ///
     /// `base` is the *global* index of `states[0]` in the population: the
     /// sharded coordinator calls this once per heap shard with that

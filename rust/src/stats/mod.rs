@@ -25,6 +25,30 @@ pub fn normalize_log_weights(lw: &[f64], out: &mut Vec<f64>) -> f64 {
     lse - (lw.len() as f64).ln()
 }
 
+/// Single-pass fusion of [`normalize_log_weights`] and [`ess`]: returns
+/// `(log mean weight, effective sample size)` and fills `out` with the
+/// normalized weights. The squared-weight accumulator runs in the same
+/// left-to-right order as a separate [`ess`] pass over `out`, so the
+/// result is bit-identical to the two-pass sequence while touching the
+/// population once instead of twice per generation.
+pub fn weight_stats(lw: &[f64], out: &mut Vec<f64>) -> (f64, f64) {
+    let lse = log_sum_exp(lw);
+    out.clear();
+    if lse == f64::NEG_INFINITY {
+        out.resize(lw.len(), 1.0 / lw.len() as f64);
+        let s: f64 = out.iter().map(|x| x * x).sum();
+        return (f64::NEG_INFINITY, if s > 0.0 { 1.0 / s } else { 0.0 });
+    }
+    let mut s = 0.0;
+    out.extend(lw.iter().map(|x| {
+        let w = (x - lse).exp();
+        s += w * w;
+        w
+    }));
+    let e = if s > 0.0 { 1.0 / s } else { 0.0 };
+    (lse - (lw.len() as f64).ln(), e)
+}
+
 /// Effective sample size of normalized weights: 1 / Σ w².
 pub fn ess(w: &[f64]) -> f64 {
     let s: f64 = w.iter().map(|x| x * x).sum();
@@ -116,6 +140,31 @@ mod tests {
         let _ = normalize_log_weights(&lw, &mut w);
         assert!((ess(&w) - 1.0).abs() < 1e-6);
         assert!((ess_log(&lw) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weight_stats_matches_two_pass_bitwise() {
+        let cases: Vec<Vec<f64>> = vec![
+            vec![0.0],
+            vec![0.3, -1.7, 2.2, -0.4],
+            vec![-700.0, -701.5, -699.2, -700.1, -702.9],
+            vec![f64::NEG_INFINITY, -1.0, -2.0],
+            vec![f64::NEG_INFINITY; 4],
+            (0..257).map(|i| (i as f64) * 0.013 - 1.0).collect(),
+        ];
+        for lw in &cases {
+            let mut w_ref = Vec::new();
+            let lmean_ref = normalize_log_weights(lw, &mut w_ref);
+            let ess_ref = ess(&w_ref);
+            let mut w = Vec::new();
+            let (lmean, e) = weight_stats(lw, &mut w);
+            assert_eq!(lmean.to_bits(), lmean_ref.to_bits(), "lmean for {lw:?}");
+            assert_eq!(e.to_bits(), ess_ref.to_bits(), "ess for {lw:?}");
+            assert_eq!(w.len(), w_ref.len());
+            for (a, b) in w.iter().zip(&w_ref) {
+                assert_eq!(a.to_bits(), b.to_bits(), "weights for {lw:?}");
+            }
+        }
     }
 
     #[test]

@@ -24,7 +24,7 @@ use lazycow::smc::{alive_retry_rng, run_filter, run_filter_shards, Method, SmcMo
 use lazycow::stats::{log_sum_exp, normalize_log_weights};
 
 fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
-    StepCtx { pool, kalman: None }
+    StepCtx { pool, kalman: None, batch: true }
 }
 
 /// A model whose alive-PF behaviour is a pure function of the retry

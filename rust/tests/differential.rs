@@ -3,8 +3,10 @@
 //! [`assert_bitwise_equiv`] is a reusable runner that sweeps the full
 //! scheduling matrix — K ∈ {1, 2, 4} × rebalance policy × steal on/off ×
 //! copy mode, plus the payload-allocator axis (`system` vs the default
-//! `slab`) and the decommit axis (watermark off / 0 / the default
-//! keep-2) — against the K = 1 / steal-off / policy-off oracle and
+//! `slab`), the decommit axis (watermark off / 0 / the default keep-2),
+//! and the batched-numerics axis (`--batch off`, forcing the scalar
+//! per-particle reference path) — against the K = 1 / steal-off /
+//! policy-off oracle and
 //! demands *bitwise* equality of `log_evidence` and `posterior_mean`
 //! (plus equal attempt counts, zero leaks, per-shard alloc/free balance,
 //! slab- and raw-gauge consistency, decommit accounting, and the
@@ -23,7 +25,7 @@ use lazycow::pool::ThreadPool;
 use lazycow::smc::{run_filter_shards, Method, RebalancePolicy, SmcModel, StepCtx};
 
 fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
-    StepCtx { pool, kalman: None }
+    StepCtx { pool, kalman: None, batch: true }
 }
 
 /// One matrix cell's identity-relevant output.
@@ -215,6 +217,40 @@ fn assert_bitwise_equiv<M: SmcModel + Sync>(
                     assert_eq!(got, oracle, "{label}: allocator changed the output");
                 }
             }
+            // Batched-numerics axis: the matrix above runs with the SoA
+            // batch path on (the default); `--batch off` forces the
+            // scalar per-particle reference path in every cell and must
+            // reproduce the (batch-on) oracle bit for bit — the
+            // `SmcModel::step_batched` contract, swept across the full
+            // scheduling matrix plus a system-allocator cell per K.
+            for k in [1usize, 2, 4] {
+                for policy in RebalancePolicy::ALL {
+                    for steal in [false, true] {
+                        let mut cfg = base_cfg.clone();
+                        cfg.mode = mode;
+                        cfg.batch = false;
+                        cfg.rebalance = policy;
+                        cfg.steal = steal;
+                        cfg.steal_min = 2;
+                        let label = format!(
+                            "{name}/{mode:?}/batch-off/K={k}/{policy:?}/steal={}",
+                            if steal { "on" } else { "off" }
+                        );
+                        let got = run_cell(model, &cfg, method, &pool, k, &label);
+                        assert_eq!(got, oracle, "{label}: batch toggle changed the output");
+                    }
+                }
+                let mut cfg = base_cfg.clone();
+                cfg.mode = mode;
+                cfg.batch = false;
+                cfg.allocator = AllocatorKind::System;
+                cfg.rebalance = RebalancePolicy::Greedy;
+                cfg.steal = true;
+                cfg.steal_min = 2;
+                let label = format!("{name}/{mode:?}/batch-off/system-alloc/K={k}");
+                let got = run_cell(model, &cfg, method, &pool, k, &label);
+                assert_eq!(got, oracle, "{label}: batch toggle changed the output");
+            }
             // Decommit axis: the matrix above runs at the default
             // keep-2 watermark; `off` (never trim) and `0` (trim every
             // empty chunk, the most aggressive barrier) must reproduce
@@ -318,17 +354,20 @@ fn simulation_matrix_bitwise() {
     let mut sh = ShardedHeap::new(CopyMode::LazySro, 1);
     let base = run_filter_shards(&model, &oracle_cfg, sh.shards_mut(), &ctx(&pool), Method::Bootstrap);
     for steal in [false, true] {
-        let mut c = cfg.clone();
-        c.steal = steal;
-        c.steal_min = 2;
-        let mut sh = ShardedHeap::new(CopyMode::LazySro, 4);
-        let r = run_filter_shards(&model, &c, sh.shards_mut(), &ctx(&pool), Method::Bootstrap);
-        assert_eq!(r.posterior_mean.to_bits(), base.posterior_mean.to_bits());
-        assert_eq!(sh.live_objects(), 0);
-        assert_eq!(r.steals, 0, "stealing is gated to inference");
-        let m = sh.metrics();
-        assert_eq!(m.deep_copies, 0, "simulation never deep-copies");
-        assert_eq!(m.eager_copies, 0, "simulation never copies");
-        assert_eq!(m.transplants, 0, "simulation never transplants");
+        for batch in [true, false] {
+            let mut c = cfg.clone();
+            c.steal = steal;
+            c.steal_min = 2;
+            c.batch = batch;
+            let mut sh = ShardedHeap::new(CopyMode::LazySro, 4);
+            let r = run_filter_shards(&model, &c, sh.shards_mut(), &ctx(&pool), Method::Bootstrap);
+            assert_eq!(r.posterior_mean.to_bits(), base.posterior_mean.to_bits());
+            assert_eq!(sh.live_objects(), 0);
+            assert_eq!(r.steals, 0, "stealing is gated to inference");
+            let m = sh.metrics();
+            assert_eq!(m.deep_copies, 0, "simulation never deep-copies");
+            assert_eq!(m.eager_copies, 0, "simulation never copies");
+            assert_eq!(m.transplants, 0, "simulation never transplants");
+        }
     }
 }

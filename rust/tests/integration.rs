@@ -11,7 +11,7 @@ use lazycow::runtime::{BatchKalman, XlaRuntime};
 use lazycow::smc::{run_filter, Method, StepCtx};
 
 fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
-    StepCtx { pool, kalman: None }
+    StepCtx { pool, kalman: None, batch: true }
 }
 
 /// §4: "the output is expected to match regardless of the configuration;
@@ -102,6 +102,7 @@ fn xla_and_cpu_paths_agree() {
     let cpu_ctx = StepCtx {
         pool: &pool,
         kalman: None,
+        batch: true,
     };
     let r_cpu = run_filter(&model, &cfg, &mut heap, &cpu_ctx, Method::Bootstrap);
 
@@ -109,6 +110,7 @@ fn xla_and_cpu_paths_agree() {
     let xla_ctx = StepCtx {
         pool: &pool,
         kalman: Some(&bk),
+        batch: true,
     };
     let r_xla = run_filter(&model, &cfg, &mut heap, &xla_ctx, Method::Bootstrap);
 

@@ -16,7 +16,7 @@ use lazycow::smc::{
 };
 
 fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
-    StepCtx { pool, kalman: None }
+    StepCtx { pool, kalman: None, batch: true }
 }
 
 fn lgss_cfg(n: usize, t: usize) -> RunConfig {
