@@ -21,6 +21,10 @@
 //!              scalar three-pass sequence, and step_batched propagation
 //!              throughput vs the scalar per-particle reference (LGSS +
 //!              RBPF, K = 1, 2, 4), bitwise identity asserted per cell
+//!   session    resumable FilterSession engine: driver-vs-session bitwise
+//!              identity, per-generation step latency, fork cost vs
+//!              stepped history depth (flat — O(particles), not O(heap)),
+//!              and lazy fork vs eager whole-population copy
 //!
 //! Environment: LAZYCOW_REPS (default 5), LAZYCOW_SCALE=default|paper.
 
@@ -31,7 +35,8 @@ use lazycow::lazy_fields;
 use lazycow::models::{run_model, ListModel, Rbpf, DATA_SEED};
 use lazycow::pool::ThreadPool;
 use lazycow::runtime::{BatchKalman, XlaRuntime};
-use lazycow::smc::{particle_rng, run_filter, Method, SmcModel, StepCtx};
+use lazycow::smc::{particle_rng, run_filter, run_filter_shards, FilterSession, Method, SmcModel, StepCtx};
+use lazycow::stats::median_iqr;
 
 fn sections() -> Vec<String> {
     match std::env::var("LAZYCOW_BENCH") {
@@ -49,6 +54,7 @@ fn sections() -> Vec<String> {
             "rebalance",
             "alloc",
             "batch",
+            "session",
         ]
             .iter()
             .map(|s| s.to_string())
@@ -948,6 +954,224 @@ fn bench_batch(backend: &Backend) {
     }
 }
 
+/// Session-engine sweep (the resumable-coordinator acceptance
+/// benchmark): (1) a bitwise identity pre-flight — a `FilterSession`
+/// stepped generation by generation against the `run_filter_shards`
+/// driver it now backs, on LGSS at K = 2; (2) per-generation step
+/// latency through the session surface; (3) fork cost vs stepped
+/// history depth — the platform claim: a fork is one lazy `deep_copy`
+/// per particle, so its cost is flat in history while the ancestry heap
+/// under it grows; (4) lazy fork vs eager whole-population copy on an
+/// equivalent chain population. Emits one JSON record per cell;
+/// `tools/bench_check` gates the identity bit, the fork-scaling ratio,
+/// and the lazy-vs-eager speedup.
+fn bench_session(backend: &Backend) {
+    println!("\n== Session engine: identity, step latency, fork cost (JSON per cell) ==");
+    let threads = backend.pool.n_threads();
+    let ctx = backend.ctx();
+    let n = 256usize;
+
+    // -- identity + step latency: the driver *is* a session loop now;
+    //    assert the bits anyway and measure the stepping overhead. --
+    let t_id = 30usize;
+    let model = ListModel::synthetic(t_id, DATA_SEED);
+    let mut cfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = n;
+    cfg.n_steps = t_id;
+    cfg.shards = 2;
+    cfg.seed = 20200401;
+    let mut driver_bits = (0u64, 0u64);
+    let driver_cell = run_cell("session/driver", reps(), |_| {
+        let mut sh = ShardedHeap::new(cfg.mode, 2);
+        let r = run_filter_shards(&model, &cfg, sh.shards_mut(), &ctx, Method::Bootstrap);
+        driver_bits = (r.log_evidence.to_bits(), r.posterior_mean.to_bits());
+        Some(r.global_peak_bytes as f64)
+    });
+    println!("  {}", driver_cell.pretty_row());
+    let mut session_bits = (0u64, 0u64);
+    let session_cell = run_cell("session/stepped", reps(), |_| {
+        let mut sh = ShardedHeap::new(cfg.mode, 2);
+        let mut s = FilterSession::begin(&model, &cfg, sh.shards_mut(), &ctx, Method::Bootstrap);
+        for _ in 0..t_id {
+            s.step(&model, sh.shards_mut(), &ctx);
+        }
+        let r = s.finish(&model, sh.shards_mut());
+        session_bits = (r.log_evidence.to_bits(), r.posterior_mean.to_bits());
+        Some(r.global_peak_bytes as f64)
+    });
+    println!("  {}", session_cell.pretty_row());
+    assert_eq!(driver_bits, session_bits, "stepped session diverged from the driver");
+    println!(
+        "{{\"section\":\"session\",\"cell\":\"identity\",\"model\":\"list\",\"shards\":2,\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"driver_s\":{:.6},\"session_s\":{:.6},\"speedup\":{:.4},\"bit_identical\":true}}",
+        threads,
+        n,
+        t_id,
+        session_cell.reps,
+        driver_cell.time_median,
+        session_cell.time_median,
+        driver_cell.time_median / session_cell.time_median.max(1e-9),
+    );
+    println!(
+        "{{\"section\":\"session\",\"cell\":\"step\",\"model\":\"list\",\"shards\":2,\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"time_median_s\":{:.6},\"step_median_s\":{:.6}}}",
+        threads,
+        n,
+        t_id,
+        session_cell.reps,
+        session_cell.time_median,
+        session_cell.time_median / t_id as f64,
+    );
+
+    // -- fork cost vs history depth: one long-lived session, measured at
+    //    increasing stepped depths. Only the forks are timed (the
+    //    abandons — release + memo sweep — run between measurements).
+    //    The live-object count shows the heap growing underneath while
+    //    per-fork cost stays flat. --
+    let t_horizon = 80usize;
+    let fork_model = ListModel::synthetic(t_horizon, DATA_SEED);
+    let mut fcfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    fcfg.n_particles = n;
+    fcfg.n_steps = t_horizon;
+    fcfg.shards = 1;
+    fcfg.seed = 20200401;
+    fcfg.decommit_watermark = None;
+    let forks_per_rep = 64usize;
+    let mut sh = ShardedHeap::new(fcfg.mode, 1);
+    let mut session = FilterSession::begin(&fork_model, &fcfg, sh.shards_mut(), &ctx, Method::Bootstrap);
+    let mut depth = 0usize;
+    let mut fork_medians: Vec<(usize, f64)> = Vec::new();
+    for target in [5usize, 40, 80] {
+        while depth < target {
+            session.step(&fork_model, sh.shards_mut(), &ctx);
+            depth += 1;
+        }
+        let mut times = Vec::with_capacity(reps().max(3));
+        for _ in 0..reps().max(3) {
+            let mut forks = Vec::with_capacity(forks_per_rep);
+            let start = std::time::Instant::now();
+            for _ in 0..forks_per_rep {
+                forks.push(session.fork(sh.shards_mut()));
+            }
+            times.push(start.elapsed().as_secs_f64() / forks_per_rep as f64);
+            for f in forks {
+                f.abandon(sh.shards_mut());
+            }
+        }
+        let (med, q1, q3) = median_iqr(&times);
+        let live = sh.live_objects();
+        println!(
+            "  fork at depth {target:>3}: {:>9.1} ns/fork  ({} live objects under the population)",
+            med * 1e9,
+            live
+        );
+        println!(
+            "{{\"section\":\"session\",\"cell\":\"fork\",\"model\":\"list\",\"shards\":1,\"particles\":{},\"depth\":{},\"forks_per_rep\":{},\"reps\":{},\"fork_s\":{:.9},\"fork_q1_s\":{:.9},\"fork_q3_s\":{:.9},\"live_objects\":{}}}",
+            n,
+            target,
+            forks_per_rep,
+            times.len(),
+            med,
+            q1,
+            q3,
+            live,
+        );
+        fork_medians.push((target, med));
+    }
+    session.abandon(sh.shards_mut());
+    assert_eq!(sh.live_objects(), 0, "fork bench leaked");
+    let (d_lo, lo) = fork_medians[0];
+    let (d_hi, hi) = fork_medians[fork_medians.len() - 1];
+    println!(
+        "{{\"section\":\"session\",\"cell\":\"fork_scaling\",\"particles\":{},\"depth_lo\":{},\"depth_hi\":{},\"fork_lo_s\":{:.9},\"fork_hi_s\":{:.9},\"ratio\":{:.4}}}",
+        n,
+        d_lo,
+        d_hi,
+        lo,
+        hi,
+        hi / lo.max(1e-12),
+    );
+
+    // -- lazy fork vs eager whole-population copy, at the heap layer the
+    //    fork reduces to: N chain roots of depth H, copied either by the
+    //    O(1)-per-root lazy deep_copy or by the eager clone that walks
+    //    every reachable node. --
+    let h = 80usize;
+    let mut heap = Heap::new(CopyMode::LazySro);
+    let build = |heap: &mut Heap, len: usize, tag: i64| -> Lazy<Node> {
+        let mut head = heap.alloc(Node {
+            value: tag,
+            next: Lazy::NULL,
+        });
+        for i in 1..len {
+            let new = heap.alloc(Node {
+                value: tag + i as i64,
+                next: head,
+            });
+            heap.release(head);
+            head = new;
+        }
+        head
+    };
+    let roots: Vec<Lazy<Node>> = (0..n).map(|i| build(&mut heap, h, i as i64)).collect();
+    // Value pre-flight: both copy flavors must read back the same chain.
+    {
+        let chain_sum = |heap: &mut Heap, root: Lazy<Node>| -> i64 {
+            let mut sum = 0i64;
+            let mut cur = root;
+            while !cur.is_null() {
+                sum += heap.read(&mut cur, |nd| nd.value);
+                cur = heap.read_ptr(&mut cur, |nd| nd.next);
+            }
+            sum
+        };
+        let lc = heap.deep_copy(&roots[0]);
+        let ec = heap.deep_copy_eager(&roots[0]);
+        let ls = chain_sum(&mut heap, lc);
+        let es = chain_sum(&mut heap, ec);
+        assert_eq!(ls, es, "lazy and eager copies read back differently");
+        heap.release(lc);
+        heap.release(ec);
+        heap.sweep_memos();
+    }
+    let mut times_lazy = Vec::with_capacity(reps().max(3));
+    let mut times_eager = Vec::with_capacity(reps().max(3));
+    for _ in 0..reps().max(3) {
+        let start = std::time::Instant::now();
+        let copies: Vec<Lazy<Node>> = roots.iter().map(|r| heap.deep_copy(r)).collect();
+        times_lazy.push(start.elapsed().as_secs_f64());
+        for c in copies {
+            heap.release(c);
+        }
+        heap.sweep_memos();
+        let start = std::time::Instant::now();
+        let copies: Vec<Lazy<Node>> = roots.iter().map(|r| heap.deep_copy_eager(r)).collect();
+        times_eager.push(start.elapsed().as_secs_f64());
+        for c in copies {
+            heap.release(c);
+        }
+        heap.sweep_memos();
+    }
+    for r in roots {
+        heap.release(r);
+    }
+    let (lm, _, _) = median_iqr(&times_lazy);
+    let (em, _, _) = median_iqr(&times_eager);
+    println!(
+        "  population copy ({n} roots × {h} nodes): lazy {:.1} µs, eager {:.1} µs — x{:.1}",
+        lm * 1e6,
+        em * 1e6,
+        em / lm.max(1e-12),
+    );
+    println!(
+        "{{\"section\":\"session\",\"cell\":\"fork_vs_eager\",\"particles\":{},\"depth\":{},\"reps\":{},\"lazy_s\":{:.9},\"eager_s\":{:.9},\"speedup\":{:.4}}}",
+        n,
+        h,
+        times_lazy.len(),
+        lm,
+        em,
+        em / lm.max(1e-12),
+    );
+}
+
 /// Resampler ablation: the constant c in the t + cN·logN reachable-set
 /// bound depends on offspring variance — systematic < stratified <
 /// multinomial (Jacob et al. 2015's discussion).
@@ -1013,6 +1237,7 @@ fn main() {
                 bench_alloc_churn();
             }
             "batch" => bench_batch(&backend),
+            "session" => bench_session(&backend),
             other => eprintln!("unknown section {other}"),
         }
     }

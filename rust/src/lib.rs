@@ -30,7 +30,11 @@
 //!   intra-generation work stealing, and a batched SoA numeric path
 //!   ([`smc::batch`] plus the [`smc::SmcModel::step_batched`] hook,
 //!   gated by `--batch`). Outputs are bit-identical across every
-//!   scheduling, storage, and numeric-path configuration.
+//!   scheduling, storage, and numeric-path configuration. The engine is
+//!   a resumable state machine — [`smc::FilterSession`] steps one
+//!   generation at a time, forks whole populations in O(particles) via
+//!   the lazy copy, and feeds [`telemetry`]; the `run_*` entry points
+//!   are thin drivers over it.
 //! - [`models`] are the paper's §4 evaluation problems (RBPF, PCFG, VBD,
 //!   MOT, CRBD, plus the linked-list microbenchmark), each implementing
 //!   [`smc::SmcModel`].
@@ -40,7 +44,9 @@
 //! the determinism backbone), [`stats`] / [`linalg`] (weight math),
 //! [`ppl`] (delayed-sampling building blocks), [`prop`]
 //! (property-test harness), [`runtime`] (optional PJRT-compiled
-//! kernels), [`config`] / [`cli`] / [`bench`] (the launcher).
+//! kernels), [`telemetry`] (stable-name session metrics — the
+//! monitoring contract of the `serve` subcommand), [`config`] /
+//! [`cli`] / [`bench`] (the launcher).
 //!
 //! # A taste of the API
 //!
@@ -82,3 +88,4 @@ pub mod rng;
 pub mod smc;
 pub mod runtime;
 pub mod stats;
+pub mod telemetry;

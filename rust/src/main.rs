@@ -3,11 +3,18 @@
 //!
 //! ```text
 //! lazycow run   --model rbpf --task inference --mode lazy-sro --particles 256 --steps 150
+//! lazycow serve --model list [--input obs.txt] # incremental session server
 //! lazycow fig5  [--reps 5] [--scale paper]     # §4 Figure 5 (inference)
 //! lazycow fig6  [--reps 5]                     # §4 Figure 6 (simulation)
 //! lazycow fig7  --model rbpf                   # §4 Figure 7 (series over t)
 //! lazycow tree-bound                           # Jacob et al. (2015) bound
 //! ```
+//!
+//! `serve` drives a [`FilterSession`](lazycow::smc::FilterSession) over a
+//! line protocol (stdin or `--input`): `obs <y>` ingests one observation
+//! and steps a generation, `whatif <y...>` answers a speculative query on
+//! a lazily forked population, `telemetry` dumps the stable-name metric
+//! registry, and `finish` (or EOF) reports the final estimates.
 
 use lazycow::bench::{human_bytes, CellResult};
 use lazycow::cli::{Cli, CliError};
@@ -24,6 +31,10 @@ fn cli() -> Cli {
         "lazy object copy-on-write platform for population-based probabilistic programming",
     )
     .command("run", "run one (model, task, mode) cell")
+    .command(
+        "serve",
+        "incremental inference server: ingest observations, fork for what-ifs",
+    )
     .command("fig5", "regenerate Figure 5 (inference: time + peak memory)")
     .command("fig6", "regenerate Figure 6 (simulation: overhead isolation)")
     .command("fig7", "regenerate Figure 7 (time/memory series over t)")
@@ -67,6 +78,11 @@ fn cli() -> Cli {
         "",
         "empty slab chunks kept per size class before decommitting to the OS at generation \
          barriers (integer, or off to disable; default 2; output identical either way)",
+    )
+    .flag(
+        "input",
+        "",
+        "serve: observation/command file replayed through the line protocol (default: stdin)",
     )
     .flag("reps", "5", "benchmark repetitions")
     .flag("scale", "default", "scale preset: default|paper")
@@ -259,6 +275,112 @@ fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `serve`: a long-running [`FilterSession`] fed by a line protocol.
+///
+/// Lines: `obs <y>` (ingest + step one generation), `whatif <y...>`
+/// (fork the population lazily, score speculative observations, report,
+/// discard the fork), `telemetry` (dump the stable-name registry),
+/// `finish` (final report; EOF is equivalent), `#`-comments and blanks
+/// skipped. Currently LGSS-only (`--model list`): it is the one model
+/// with a streaming constructor, and the shape every other model would
+/// follow.
+///
+/// [`FilterSession`]: lazycow::smc::FilterSession
+fn cmd_serve(args: &lazycow::cli::Args) -> Result<(), String> {
+    use lazycow::models::ListModel;
+    use lazycow::smc::{FilterSession, Method};
+    use std::io::BufRead;
+
+    if args.get_or("model", "list") != "list" {
+        return Err("serve currently supports --model list only".into());
+    }
+    let mut cfg = build_config(args)?;
+    cfg.task = Task::Inference;
+    let backend = Backend::new(cfg.threads, cfg.use_xla, args.get_or("artifacts", "artifacts"));
+    let k = backend.choose_shards(&cfg);
+    let mut heap = ShardedHeap::with_allocator(cfg.mode, k, cfg.allocator);
+    let ctx = backend.ctx();
+    let mut model = ListModel::streaming();
+    let mut session =
+        FilterSession::begin(&model, &cfg, heap.shards_mut(), &ctx, Method::Bootstrap);
+    println!(
+        "# serve N={} K={k} seed={} — obs <y> | whatif <y...> | telemetry | finish",
+        cfg.n_particles, cfg.seed
+    );
+
+    let reader: Box<dyn BufRead> = match args.get("input") {
+        Some(f) if !f.is_empty() => Box::new(std::io::BufReader::new(
+            std::fs::File::open(f).map_err(|e| format!("--input {f}: {e}"))?,
+        )),
+        _ => Box::new(std::io::BufReader::new(std::io::stdin())),
+    };
+    for line in reader.lines() {
+        let line = line.map_err(|e| e.to_string())?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match parts.next().expect("non-empty line") {
+            "obs" => {
+                let y: f64 = parts
+                    .next()
+                    .ok_or("obs needs a value")?
+                    .parse()
+                    .map_err(|e| format!("bad observation: {e}"))?;
+                model.push_obs(y);
+                let m = session.step(&model, heap.shards_mut(), &ctx);
+                println!(
+                    "t={} ess={:.1} log_evidence={:.4} posterior_mean={:.4}",
+                    m.t,
+                    m.ess,
+                    session.evidence_estimate(),
+                    session.posterior_estimate(&model, heap.shards_mut())
+                );
+            }
+            "whatif" => {
+                // Speculative branch: lazy population fork + cloned
+                // model; the live session and observation stream are
+                // untouched.
+                let mut what_model = model.clone();
+                let mut fork = session.fork(heap.shards_mut());
+                let mut steps = 0usize;
+                for tok in parts {
+                    let y: f64 = match tok.parse() {
+                        Ok(y) => y,
+                        Err(e) => {
+                            fork.abandon(heap.shards_mut());
+                            return Err(format!("bad what-if observation: {e}"));
+                        }
+                    };
+                    what_model.push_obs(y);
+                    fork.step(&what_model, heap.shards_mut(), &ctx);
+                    steps += 1;
+                }
+                if steps == 0 {
+                    fork.abandon(heap.shards_mut());
+                    return Err("whatif needs at least one value".into());
+                }
+                let r = fork.finish(&what_model, heap.shards_mut());
+                println!(
+                    "whatif horizon=+{steps} log_evidence={:.4} posterior_mean={:.4}",
+                    r.log_evidence, r.posterior_mean
+                );
+            }
+            "telemetry" => print!("{}", session.telemetry().render()),
+            "finish" => break,
+            other => return Err(format!("unknown serve command {other}")),
+        }
+    }
+    let r = session.finish(&model, heap.shards_mut());
+    println!(
+        "final log_evidence={:.4} posterior_mean={:.4} wall={:.3}s migrations={} steals={}",
+        r.log_evidence, r.posterior_mean, r.wall_s, r.migrations, r.steals
+    );
+    println!("heap: {}", heap.metrics().summary());
+    Ok(())
+}
+
 fn figure_cells(task: Task, args: &lazycow::cli::Args) -> Result<Vec<CellResult>, String> {
     let reps = args.get_usize("reps").unwrap_or(5);
     let backend = Backend::new(
@@ -410,6 +532,7 @@ fn main() {
     };
     let r = match args.command.as_deref() {
         Some("run") | None => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
         Some("fig5") => cmd_figure(Task::Inference, &args),
         Some("fig6") => cmd_figure(Task::Simulation, &args),
         Some("fig7") => cmd_fig7(&args),

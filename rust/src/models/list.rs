@@ -20,6 +20,11 @@ pub struct ListState {
 lazy_fields!(ListState: prev);
 
 /// The 1-D linear-Gaussian SSM: x' = a·x + N(0, q), y = x + N(0, r).
+///
+/// `Clone` supports what-if serving: a speculative branch clones the
+/// model, appends hypothetical observations, and steps a forked session
+/// against the clone without disturbing the live observation stream.
+#[derive(Clone)]
 pub struct ListModel {
     /// Dynamics coefficient a.
     pub a: f64,
@@ -43,6 +48,26 @@ impl ListModel {
             obs.push(x + rng.gaussian(0.0, r.sqrt()));
         }
         ListModel { a, q, r, obs }
+    }
+
+    /// A model with the synthetic dynamics (a, q, r) = (0.9, 0.5, 0.8)
+    /// and **no observations yet** — the incremental-ingest starting
+    /// point for the `serve` subcommand, fed via
+    /// [`push_obs`](ListModel::push_obs).
+    pub fn streaming() -> Self {
+        ListModel {
+            a: 0.9,
+            q: 0.5,
+            r: 0.8,
+            obs: Vec::new(),
+        }
+    }
+
+    /// Append one observation, extending the model horizon by one
+    /// generation. A [`FilterSession`](crate::smc::FilterSession) over
+    /// this model can then step that generation.
+    pub fn push_obs(&mut self, y: f64) {
+        self.obs.push(y);
     }
 
     /// Exact evidence by Kalman filtering (test oracle).

@@ -7,6 +7,14 @@
 //! — the paper's Figure 7 quadratic/linear time contrast), releases dead
 //! lineages, and sweeps memos once per generation.
 //!
+//! **Sessions.** The generation state machine itself lives in
+//! [`super::session::FilterSession`]: one `step()` per generation, with
+//! pause/resume and O(1) lazy population forking. The entry points here —
+//! [`run_filter_shards`] and [`run_particle_gibbs_shards`] — are thin
+//! run-to-completion drivers over a session; this module keeps the
+//! propagation executors (assigned / work-stealing / alive rounds) and
+//! the resampling machinery the session calls into.
+//!
 //! **Sharded execution.** The engine operates on `&mut [Heap]` — K
 //! independent heap shards — with an explicit particle → shard assignment
 //! vector. Per-generation propagation runs shard-parallel on the thread
@@ -44,7 +52,14 @@
 //! generation barrier, with the scratch's op counters absorbed into the
 //! home metrics. Heap ownership stays one `&mut` per worker throughout —
 //! the yard synchronizes only package handoff, never heap operations —
-//! and the output is bit-identical with stealing on or off.
+//! and the output is bit-identical with stealing on or off. Donation
+//! *selection* is shared-ancestor-aware: among the queue-tail runs a
+//! victim may give away, it prefers the runs whose lineage roots are
+//! already private (unshared), because donating a lineage still shared
+//! with same-shard siblings severs that sharing — the transplant
+//! round trip must eagerly duplicate the shared ancestry on both legs.
+//! Results land by global index either way, so the choice moves only
+//! bytes, never the output.
 //!
 //! The alive PF (contract v2) runs shard-parallel in *rounds*: per-slot
 //! retry RNG streams ([`alive_retry_rng`]) make every slot's attempt
@@ -55,12 +70,16 @@
 //! for every K. (Contract v1 chained all slots through one cumulative
 //! attempt counter, which collapsed the population onto shard 0.)
 //! Pending slots are retried in batched rounds: once every pending slot
-//! has failed its first attempt, each round speculatively draws
-//! `ALIVE_ATTEMPTS_PER_ROUND` attempts per slot (the per-slot streams
-//! make extra draws side-effect-free), cutting the serialized
-//! ancestor-import barriers in low-survival regimes; attempts past a
-//! slot's first survivor are discarded uncounted, so output and attempt
-//! totals are identical to one-attempt rounds.
+//! has failed its first attempt, each round speculatively draws a
+//! *window* of attempts per slot (the per-slot streams make extra draws
+//! side-effect-free), cutting the serialized ancestor-import barriers in
+//! low-survival regimes; attempts past a slot's first survivor are
+//! discarded uncounted, so output and attempt totals are identical to
+//! one-attempt rounds for **any** window size. The window adapts to the
+//! observed survival rate within the generation (see
+//! [`ALIVE_WINDOW_INIT`]): high-survival regimes shrink it toward 1 and
+//! waste no speculative propagation, dead zones grow it geometrically up
+//! to [`ALIVE_WINDOW_MAX`] to amortize the round barriers.
 //!
 //! **Batched numeric path.** Propagation dispatches through `step_run`:
 //! with `StepCtx::batch` set (the `--batch on` default) a model's
@@ -74,19 +93,17 @@
 //! output is bit-identical for every K × policy × steal × batch setting.
 
 use super::batch;
-use super::model::{alive_retry_rng, particle_rng, resample_rng, SmcModel, StepCtx};
+use super::model::{alive_retry_rng, particle_rng, SmcModel, StepCtx};
 use super::rebalance::{
     plan_offspring, CostTracker, RebalancePolicy, HINT_FLOOR, OP_COST_S, TRANSPLANT_COST_S,
 };
-use super::resample::Resampler;
-use crate::config::{RunConfig, Task};
+use crate::config::RunConfig;
 use crate::heap::{
     aggregate_metrics, sample_global_peak, shard_of, shard_ranges, trim_shards, Heap, HeapMetrics,
     Lazy, Payload,
 };
 use crate::pool::{StealYard, ThreadPool};
 use crate::rng::Pcg64;
-use crate::stats::weight_stats;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -313,7 +330,7 @@ fn step_run<M: SmcModel + Sync>(
     model.step_population(heap, states, t, seed, observe, base, ctx)
 }
 
-fn step_snapshot(shards: &[Heap], t: usize, start: &Instant, ess: f64) -> StepMetrics {
+pub(crate) fn step_snapshot(shards: &[Heap], t: usize, start: &Instant, ess: f64) -> StepMetrics {
     let agg = aggregate_metrics(shards);
     StepMetrics {
         t,
@@ -338,7 +355,7 @@ fn step_snapshot(shards: &[Heap], t: usize, start: &Instant, ess: f64) -> StepMe
 /// Draw the initial population, shard-parallel over the contiguous
 /// starting partition (per-particle RNG streams make the draw order
 /// immaterial).
-fn init_population<M: SmcModel + Sync>(
+pub(crate) fn init_population<M: SmcModel + Sync>(
     model: &M,
     shards: &mut [Heap],
     pool: &ThreadPool,
@@ -459,7 +476,7 @@ fn propagate_run<M: SmcModel + Sync>(
 /// keeps every particle's RNG stream identical regardless of assignment —
 /// the seeded equivalence guarantee.
 #[allow(clippy::too_many_arguments)]
-fn propagate_assigned<M: SmcModel + Sync>(
+pub(crate) fn propagate_assigned<M: SmcModel + Sync>(
     model: &M,
     shards: &mut [Heap],
     states: &mut [Lazy<M::State>],
@@ -641,15 +658,28 @@ fn propagate_contiguous<M: SmcModel + Sync>(
 /// atomic loads) is noise.
 const STEAL_CHUNK: usize = 8;
 
-/// Speculative alive-PF attempts drawn per pending slot per retry round.
+/// Speculative alive-PF attempts drawn per pending slot on the *first*
+/// retry round of a generation, before any survival-rate evidence exists.
 /// The per-slot retry streams ([`alive_retry_rng`]) make every attempt's
 /// randomness independent of how many are drawn, so a round can propagate
 /// several attempts per slot and keep only each slot's first survivor —
-/// identical output and attempt totals, a fraction of the serialized
-/// ancestor-import barriers in low-survival regimes. First attempts
-/// (attempt counter 0) still run one per slot: in the common
-/// everyone-survives regime speculation would only waste propagation.
-const ALIVE_ATTEMPTS_PER_ROUND: usize = 4;
+/// identical output and attempt totals for **any** window size, a
+/// fraction of the serialized ancestor-import barriers in low-survival
+/// regimes. First attempts (attempt counter 0) still run one per slot: in
+/// the common everyone-survives regime speculation would only waste
+/// propagation. Later retry rounds adapt the window to the generation's
+/// observed retry survival rate: the expected attempts-per-survivor
+/// (`ceil(retry attempts / retry survivors)` so far) is exactly the
+/// window that makes one more round suffice on average, clamped to
+/// [`ALIVE_WINDOW_MAX`]; while no retry has survived yet the window
+/// instead doubles geometrically toward the cap.
+pub(crate) const ALIVE_WINDOW_INIT: usize = 4;
+
+/// Upper clamp on the adaptive speculative window: bounds wasted
+/// overshoot propagation after a slot's first survivor (at most
+/// `ALIVE_WINDOW_MAX - 1` discarded attempts per slot per round) and the
+/// transient per-round job memory.
+pub(crate) const ALIVE_WINDOW_MAX: usize = 32;
 
 /// One shard's work under the work-stealing executor.
 struct StealWork<'a, S> {
@@ -711,12 +741,38 @@ fn donate_segment<S: Payload>(
     });
 }
 
-/// Donate about half of this shard's pending particles, taken from the
-/// very tail of the queue (whole trailing runs first, then the tail of
-/// the farthest run that has spare particles). `r_idx`/`i` locate the
-/// worker's cursor; everything at or before it is already processed and
-/// never donated. The current run always keeps at least one unprocessed
-/// particle so the owner cannot be left spinning on an empty run.
+/// Fraction of `run`'s particles whose lineage root is still *private*
+/// (owning-reference count ≤ 1): a cheap O(run) probe for how little of
+/// the run's ancestry a donation would have to sever. A root that was
+/// written since the last resampling is unshared, so its spine
+/// transplants without duplicating anything a sibling keeps; a root
+/// still shared with same-shard siblings means the donation round trip
+/// eagerly copies the shared ancestry on both legs.
+fn private_fraction<S>(heap: &Heap, run: &ShardRun<S>) -> f64 {
+    if run.states.is_empty() {
+        return 0.0;
+    }
+    let private = run
+        .states
+        .iter()
+        .filter(|st| heap.shared_count(st.raw().obj) <= 1)
+        .count();
+    private as f64 / run.states.len() as f64
+}
+
+/// Donate about half of this shard's pending particles. Candidate runs
+/// are everything strictly after the worker's cursor, ranked
+/// **shared-ancestor-aware**: the run with the highest
+/// [`private_fraction`] goes first (ties keep the old farthest-from-the-
+/// cursor order), so donations prefer lineages that are already private
+/// and cut the eager-copy transplant bill that donating shared ancestry
+/// pays. Oversized picks donate their tail split; if the budget outlives
+/// the later runs, the current run's own tail is split, always keeping
+/// at least one unprocessed particle so the owner cannot be left
+/// spinning on an empty run. `r_idx`/`i` locate the worker's cursor;
+/// everything at or before it is already processed and never donated.
+/// Selection only decides *where* particles propagate — results land by
+/// global index — so output is identical for any donation policy.
 #[allow(clippy::too_many_arguments)]
 fn donate_tail<S: Payload>(
     heap: &mut Heap,
@@ -735,31 +791,42 @@ fn donate_tail<S: Payload>(
         return;
     }
     let mut remaining = pending / 2;
-    while remaining > 0 {
-        let last = runs.len() - 1;
-        if last == r_idx {
-            // Split the current run's own tail, keeping one for the owner.
-            let spare = (runs[r_idx].states.len() - i).saturating_sub(1);
-            let take = remaining.min(spare);
-            if take > 0 {
-                let run = &mut runs[r_idx];
-                let at = run.states.len() - take;
-                let seg = run.states.split_off(at);
-                donate_segment(heap, shard, run.base + at, seg, yard, spares);
+    while remaining > 0 && runs.len() - 1 > r_idx {
+        // Rank the donatable whole runs by lineage privateness; strict
+        // `>` keeps the farthest run on ties (the pre-ranking policy).
+        let mut best = runs.len() - 1;
+        let mut best_score = private_fraction(heap, &runs[best]);
+        for j in (r_idx + 1..runs.len() - 1).rev() {
+            let score = private_fraction(heap, &runs[j]);
+            if score > best_score {
+                best = j;
+                best_score = score;
             }
-            return;
         }
-        let tail_len = runs[last].states.len();
-        if tail_len <= remaining {
-            let run = runs.pop().expect("checked non-empty");
-            remaining -= tail_len;
+        let len = runs[best].states.len();
+        if len <= remaining {
+            let run = runs.remove(best);
+            debug_assert!(run.winc.is_empty(), "donating a propagated run");
+            remaining -= len;
             donate_segment(heap, shard, run.base, run.states, yard, spares);
         } else {
-            let run = &mut runs[last];
-            let at = tail_len - remaining;
+            let run = &mut runs[best];
+            let at = len - remaining;
             let seg = run.states.split_off(at);
             donate_segment(heap, shard, run.base + at, seg, yard, spares);
             return;
+        }
+    }
+    if remaining > 0 {
+        // Only the current run remains: split its own tail, keeping one
+        // particle for the owner.
+        let spare = (runs[r_idx].states.len() - i).saturating_sub(1);
+        let take = remaining.min(spare);
+        if take > 0 {
+            let run = &mut runs[r_idx];
+            let at = run.states.len() - take;
+            let seg = run.states.split_off(at);
+            donate_segment(heap, shard, run.base + at, seg, yard, spares);
         }
     }
 }
@@ -876,7 +943,7 @@ fn drain_own_queue<M: SmcModel + Sync>(
 /// donations reuse storage instead of paying fresh system allocations.
 /// Returns the global indices of stolen particles.
 #[allow(clippy::too_many_arguments)]
-fn propagate_stealing<M: SmcModel + Sync>(
+pub(crate) fn propagate_stealing<M: SmcModel + Sync>(
     model: &M,
     shards: &mut [Heap],
     states: &mut [Lazy<M::State>],
@@ -1175,7 +1242,7 @@ fn resample_population<S: Payload>(
 /// static partition's inherent transplants, counted by
 /// `HeapMetrics::transplants`).
 #[allow(clippy::too_many_arguments)]
-fn plan_and_resample<S: Payload>(
+pub(crate) fn plan_and_resample<S: Payload>(
     policy: RebalancePolicy,
     threshold: f64,
     shards: &mut [Heap],
@@ -1227,8 +1294,10 @@ fn plan_and_resample<S: Payload>(
 /// deterministic and needs no heap access), imports each foreign retry
 /// ancestor once per distinct (ancestor, destination-shard) pair —
 /// concurrently for disjoint pairs — and the attempts themselves run
-/// shard-parallel, one `&mut Heap` per worker. Retry rounds draw
-/// [`ALIVE_ATTEMPTS_PER_ROUND`] speculative attempts per pending slot
+/// shard-parallel, one `&mut Heap` per worker. Retry rounds draw an
+/// adaptive window of speculative attempts per pending slot — seeded at
+/// [`ALIVE_WINDOW_INIT`], re-estimated each round from the generation's
+/// observed retry survival rate, capped at [`ALIVE_WINDOW_MAX`]
 /// (first-attempt rounds draw one); each slot keeps its first surviving
 /// attempt and discards the rest uncounted. Because every slot's
 /// attempt sequence depends only on its own streams and the (K-invariant)
@@ -1249,7 +1318,7 @@ fn plan_and_resample<S: Payload>(
 /// per-particle measurements and can migrate the expensive lineages at
 /// the next resampling barrier.
 #[allow(clippy::too_many_arguments)]
-fn alive_generation<M: SmcModel + Sync>(
+pub(crate) fn alive_generation<M: SmcModel + Sync>(
     model: &M,
     shards: &mut [Heap],
     pool: &ThreadPool,
@@ -1287,6 +1356,15 @@ fn alive_generation<M: SmcModel + Sync>(
     // The pending set shrinks in place across rounds, so a long retry
     // tail costs O(pending) per round, not O(n).
     let mut pending: Vec<usize> = (0..n).collect();
+    // Adaptive speculative window (retry rounds only): seeded at
+    // [`ALIVE_WINDOW_INIT`], then re-estimated from this generation's
+    // observed retry survival. Window choice never reaches the output —
+    // the per-slot streams and the first-survivor rule make any window
+    // produce identical survivors and attempt totals — so adapting it is
+    // purely a scheduling decision.
+    let mut window = ALIVE_WINDOW_INIT;
+    let mut retry_attempts = 0usize;
+    let mut retry_survivors = 0usize;
     while !pending.is_empty() {
         // Slots pend together: a slot leaves the set the round it
         // survives, and every still-pending slot consumed the whole
@@ -1296,17 +1374,14 @@ fn alive_generation<M: SmcModel + Sync>(
             pending.iter().all(|&i| attempt[i] == attempt[pending[0]]),
             "pending attempt counters diverged"
         );
-        let window = if attempt[pending[0]] == 0 {
-            1
-        } else {
-            ALIVE_ATTEMPTS_PER_ROUND
-        };
+        let first_round = attempt[pending[0]] == 0;
+        let window_now = if first_round { 1 } else { window };
         // 1. Per-slot streams: ancestor redraw + the attempt's RNG state,
         //    `window` speculative attempts per pending slot.
         let mut draws: Vec<(usize, usize, usize, Pcg64)> =
-            Vec::with_capacity(pending.len() * window);
+            Vec::with_capacity(pending.len() * window_now);
         for &i in &pending {
-            for off in 0..window {
+            for off in 0..window_now {
                 let att = attempt[i] + off;
                 let mut rng = alive_retry_rng(seed, t, i, att);
                 let a = if att == 0 {
@@ -1400,6 +1475,8 @@ fn alive_generation<M: SmcModel + Sync>(
             round.extend(task.jobs);
         }
         round.sort_by_key(|job| (job.slot, job.off));
+        let attempts_before = total_attempts;
+        let pending_before = pending.len();
         for job in round {
             let i = job.slot;
             if !survivors[i].is_null() {
@@ -1429,6 +1506,24 @@ fn alive_generation<M: SmcModel + Sync>(
             }
         }
         pending.retain(|&i| survivors[i].is_null());
+        // Adapt the next retry round's window to this generation's
+        // observed retry survival (first-attempt evidence says nothing
+        // about retry survival, so it is excluded). With survivors in
+        // hand, the maximum-likelihood attempts-per-survivor is the
+        // window that lets the average pending slot finish next round;
+        // with none yet, double toward the cap so a dead zone costs
+        // O(log) barriers instead of O(attempts).
+        if !first_round {
+            retry_attempts += total_attempts - attempts_before;
+            retry_survivors += pending_before - pending.len();
+            window = if retry_survivors == 0 {
+                (window * 2).min(ALIVE_WINDOW_MAX)
+            } else {
+                retry_attempts
+                    .div_ceil(retry_survivors)
+                    .clamp(1, ALIVE_WINDOW_MAX)
+            };
+        }
         // Imported parent copies were only needed for this round.
         for ((_, dst), h) in imported {
             shards[dst].release(h);
@@ -1485,6 +1580,10 @@ pub fn run_filter<M: SmcModel + Sync>(
 /// Run a particle filter (or forward simulation) over `shards.len()`
 /// heap shards. Output is seed-deterministic and identical for every
 /// shard count and every rebalance policy.
+///
+/// A thin driver over [`FilterSession`](super::FilterSession): begin,
+/// step every generation, finish. The session owns all cross-generation
+/// state; this function only fixes the horizon.
 pub fn run_filter_shards<M: SmcModel + Sync>(
     model: &M,
     cfg: &RunConfig,
@@ -1492,245 +1591,12 @@ pub fn run_filter_shards<M: SmcModel + Sync>(
     ctx: &StepCtx,
     method: Method,
 ) -> FilterResult {
-    assert!(!shards.is_empty(), "at least one heap shard");
-    let n = cfg.n_particles;
-    let k = shards.len();
     let t_max = cfg.n_steps.min(model.horizon());
-    let observe = cfg.task == Task::Inference;
-    // `--batch off` composes with the caller's context: either side can
-    // force the scalar path for the whole run (bit-identical output).
-    let ctx = &StepCtx {
-        pool: ctx.pool,
-        kalman: ctx.kalman,
-        batch: ctx.batch && cfg.batch,
-    };
-    let resampler = Resampler::Systematic;
-    let policy = if k > 1 { cfg.rebalance } else { RebalancePolicy::Off };
-    let balancing = policy != RebalancePolicy::Off;
-    // Stealing applies to inference only: the simulation task's contract
-    // (Figure 6 — zero copies, pure lazy-pointer overhead) must hold by
-    // construction, and a donation's scratch round trip is copy traffic.
-    let stealing = cfg.steal && k > 1 && observe;
-    let start = Instant::now();
-
-    // Initialize: contiguous starting assignment.
-    let mut states = init_population(model, shards, ctx.pool, n, cfg.seed);
-    let mut assign: Vec<usize> = (0..n).map(|i| shard_of(n, k, i)).collect();
-    let mut tracker = CostTracker::new(n);
-    let mut raw_cost = vec![f64::NAN; n];
-    // Per-shard pools of recycled scratch heaps (work stealing): a
-    // reclaimed scratch keeps its chunks, so repeat donations reuse
-    // storage across generations.
-    let mut scratch_pools: Vec<Vec<Heap>> = (0..k).map(|_| Vec::new()).collect();
-    let mut migrations = 0usize;
-    let mut steals = 0usize;
-    let mut lw = vec![0.0f64; n];
-    let mut log_z = 0.0f64;
-    let mut series = Vec::new();
-    let mut w = Vec::with_capacity(n);
-    let mut attempts = 0usize;
-    sample_global_peak(shards);
-
-    for t in 1..=t_max {
-        // --- Resample (inference only; simulation performs no copies). ---
-        if observe {
-            // Fused single pass: normalized weights + log mean weight
-            // (the evidence increment, reused below) + ESS.
-            let (lmean, cur_ess) = weight_stats(&lw, &mut w);
-            if cur_ess < cfg.ess_threshold * n as f64 {
-                let mut rrng = resample_rng(cfg.seed, t);
-                // Auxiliary stage: bias resampling by lookahead scores.
-                let ancestors = if method == Method::Auxiliary {
-                    let mut aux = vec![0.0f64; n];
-                    let mut any = false;
-                    for (i, aux_i) in aux.iter_mut().enumerate() {
-                        let mut s = states[i];
-                        if let Some(la) = model.lookahead(&mut shards[assign[i]], &mut s, t) {
-                            *aux_i = la;
-                            any = true;
-                        }
-                        states[i] = s;
-                    }
-                    if any {
-                        let alw: Vec<f64> =
-                            lw.iter().zip(&aux).map(|(a, b)| a + b).collect();
-                        let mut aw = Vec::new();
-                        let (alm, _) = weight_stats(&alw, &mut aw);
-                        let anc = resampler.ancestors(&mut rrng, &aw, n);
-                        // First-stage correction: w ∝ 1 / lookahead(a).
-                        log_z += alm;
-                        migrations += plan_and_resample(
-                            policy,
-                            cfg.rebalance_threshold,
-                            shards,
-                            ctx.pool,
-                            &mut states,
-                            &anc,
-                            &mut assign,
-                            &mut tracker,
-                            None,
-                        );
-                        for (i, &a) in anc.iter().enumerate() {
-                            lw[i] = -aux[a];
-                        }
-                        None
-                    } else {
-                        Some(resampler.ancestors(&mut rrng, &w, n))
-                    }
-                } else {
-                    Some(resampler.ancestors(&mut rrng, &w, n))
-                };
-                if let Some(anc) = ancestors {
-                    log_z += lmean;
-                    migrations += plan_and_resample(
-                        policy,
-                        cfg.rebalance_threshold,
-                        shards,
-                        ctx.pool,
-                        &mut states,
-                        &anc,
-                        &mut assign,
-                        &mut tracker,
-                        None,
-                    );
-                    lw.iter_mut().for_each(|x| *x = 0.0);
-                }
-            }
-        }
-
-        // --- Propagate + weight. ---
-        match method {
-            Method::Alive if observe => {
-                // Alive PF (contract v2): per-slot retry streams, rounds
-                // of shard-parallel attempts. Resampling above has already
-                // equalized weights. With rebalancing active the rounds'
-                // measured costs feed the tracker, so retry-heavy
-                // lineages migrate at the next barrier.
-                if balancing {
-                    raw_cost.iter_mut().for_each(|c| *c = f64::NAN);
-                }
-                attempts += alive_generation(
-                    model,
-                    shards,
-                    ctx.pool,
-                    &mut states,
-                    &mut lw,
-                    &assign,
-                    t,
-                    cfg.seed,
-                    balancing.then_some(&mut raw_cost[..]),
-                );
-                if balancing {
-                    tracker.fold(&raw_cost);
-                }
-            }
-            _ if stealing => {
-                if balancing {
-                    raw_cost.iter_mut().for_each(|c| *c = f64::NAN);
-                }
-                let stolen = propagate_stealing(
-                    model,
-                    shards,
-                    &mut states,
-                    &mut lw,
-                    &assign,
-                    t,
-                    cfg.seed,
-                    observe,
-                    ctx,
-                    cfg.steal_min,
-                    balancing.then_some(&mut raw_cost[..]),
-                    &mut scratch_pools,
-                );
-                if balancing {
-                    for &i in &stolen {
-                        tracker.note_stolen(i);
-                    }
-                    tracker.fold(&raw_cost);
-                }
-                steals += stolen.len();
-                attempts += n;
-            }
-            _ => {
-                if balancing {
-                    raw_cost.iter_mut().for_each(|c| *c = f64::NAN);
-                }
-                propagate_assigned(
-                    model,
-                    shards,
-                    &mut states,
-                    &mut lw,
-                    &assign,
-                    t,
-                    cfg.seed,
-                    observe,
-                    ctx,
-                    balancing.then_some(&mut raw_cost[..]),
-                );
-                if balancing {
-                    tracker.fold(&raw_cost);
-                }
-                attempts += n;
-            }
-        }
-
-        // --- Metrics snapshot (Figure 7). ---
-        sample_global_peak(shards);
-        let (_, snap_ess) = weight_stats(&lw, &mut w);
-        series.push(step_snapshot(shards, t, &start, snap_ess));
-
-        // --- Decommit barrier: with a watermark configured, return
-        //     fully-empty slab chunks past it to the system allocator so
-        //     long-running (server) populations stay residency-bounded.
-        //     Runs after the reclaim (parent release + memo sweeps) so a
-        //     resampling spike's chunks are empty by now; bit-identical
-        //     output either way.
-        if let Some(keep) = cfg.decommit_watermark {
-            trim_shards(shards, keep);
-        }
+    let mut session = super::FilterSession::begin(model, cfg, shards, ctx, method);
+    for _ in 0..t_max {
+        session.step(model, shards, ctx);
     }
-
-    // Final-generation evidence contribution and posterior summary.
-    let (final_lmean, _) = weight_stats(&lw, &mut w);
-    log_z += final_lmean;
-    let mut post = 0.0;
-    for i in 0..n {
-        let mut s = states[i];
-        post += w[i] * model.summary(&mut shards[assign[i]], &mut s);
-        states[i] = s;
-    }
-
-    let agg = aggregate_metrics(shards);
-    let result = FilterResult {
-        log_evidence: if observe { log_z } else { f64::NAN },
-        posterior_mean: post,
-        wall_s: start.elapsed().as_secs_f64(),
-        peak_bytes: agg.peak_bytes,
-        // K = 1: the continuous high-water mark is the exact global peak.
-        global_peak_bytes: if k == 1 {
-            agg.peak_bytes
-        } else {
-            agg.global_peak_bytes
-        },
-        scratch_peak_bytes: agg.scratch_peak_bytes,
-        migrations,
-        steals,
-        series,
-        attempts,
-    };
-
-    for (i, s) in states.into_iter().enumerate() {
-        shards[assign[i]].release(s);
-    }
-    for h in shards.iter_mut() {
-        h.sweep_memos();
-    }
-    // Final decommit: the population is gone, so everything beyond the
-    // watermark is returnable.
-    if let Some(keep) = cfg.decommit_watermark {
-        trim_shards(shards, keep);
-    }
-    result
+    session.finish(model, shards)
 }
 
 /// Particle Gibbs with reference trajectory (conditional SMC) on a single
@@ -1762,191 +1628,34 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
     let n = cfg.n_particles;
     let k = shards.len();
     let t_max = cfg.n_steps.min(model.horizon());
-    // `--batch off` composes with the caller's context (see
-    // `run_filter_shards`).
-    let ctx = &StepCtx {
-        pool: ctx.pool,
-        kalman: ctx.kalman,
-        batch: ctx.batch && cfg.batch,
-    };
-    let resampler = Resampler::Systematic;
-    let policy = if k > 1 { cfg.rebalance } else { RebalancePolicy::Off };
-    let balancing = policy != RebalancePolicy::Off;
-    let stealing = cfg.steal && k > 1;
-    let mut results = Vec::new();
     // Shard holding the conditional slot — and the reference trajectory.
     let s_ref = shard_of(n, k, n - 1);
     // Reference trajectory: handles for generations 0..=T (oldest first),
     // all owned by shard `s_ref`.
     let mut reference: Option<Vec<Lazy<M::State>>> = None;
-    let mut raw_cost = vec![f64::NAN; n];
-    // Recycled-scratch pools shared across the Gibbs iterations (the
-    // shards — and so the pooled scratches' mode/backend — are fixed).
-    let mut scratch_pools: Vec<Vec<Heap>> = (0..k).map(|_| Vec::new()).collect();
-
-    for iter in 0..cfg.pg_iterations {
-        let seed = cfg.seed.wrapping_add(iter as u64 * 0x9E37);
-        let start = Instant::now();
-        let mut states = init_population(model, shards, ctx.pool, n, seed);
-        let mut assign: Vec<usize> = (0..n).map(|i| shard_of(n, k, i)).collect();
-        // A fresh population every iteration: slot-indexed cost estimates
-        // from the previous iteration's particles are garbage here.
-        let mut tracker = CostTracker::new(n);
-        let mut migrations = 0usize;
-        let mut steals = 0usize;
-        sample_global_peak(shards);
-        // Conditional slot n-1 follows the reference when present.
-        if let Some(r) = &reference {
-            shards[s_ref].release(states[n - 1]);
-            states[n - 1] = shards[s_ref].clone_handle(&r[0]);
-        }
-        let mut lw = vec![0.0f64; n];
-        let mut log_z = 0.0;
-        let mut w = Vec::new();
-        let mut series = Vec::new();
-
-        for t in 1..=t_max {
-            // Resample all but the conditional slot (fused normalize +
-            // evidence increment — PG resamples every generation).
-            let (lmean, _) = weight_stats(&lw, &mut w);
-            let mut rrng = resample_rng(seed, t);
-            let mut anc = resampler.ancestors(&mut rrng, &w, n);
-            if reference.is_some() {
-                anc[n - 1] = n - 1;
+    let mut results = Vec::new();
+    if cfg.pg_iterations > 0 {
+        // One session drives every iteration: `restart` re-initializes
+        // the population under the iteration seed while the recycled
+        // scratch pools carry over (the shards — and so the pooled
+        // scratches' mode/backend — are fixed across iterations).
+        let mut session = super::FilterSession::begin_gibbs(model, cfg, shards, ctx);
+        for iter in 0..cfg.pg_iterations {
+            if iter > 0 {
+                let seed = cfg.seed.wrapping_add(iter as u64 * 0x9E37);
+                session.restart(model, shards, ctx, seed);
             }
-            log_z += lmean;
-            migrations += plan_and_resample(
-                policy,
-                cfg.rebalance_threshold,
-                shards,
-                ctx.pool,
-                &mut states,
-                &anc,
-                &mut assign,
-                &mut tracker,
-                Some(s_ref),
-            );
-            lw.iter_mut().for_each(|x| *x = 0.0);
-
-            // Propagate free particles; pin + score the conditional one.
-            let split = if reference.is_some() { n - 1 } else { n };
-            if stealing {
-                if balancing {
-                    raw_cost[..split].iter_mut().for_each(|c| *c = f64::NAN);
-                }
-                let stolen = propagate_stealing(
-                    model,
-                    shards,
-                    &mut states[..split],
-                    &mut lw[..split],
-                    &assign[..split],
-                    t,
-                    seed,
-                    true,
-                    ctx,
-                    cfg.steal_min,
-                    balancing.then_some(&mut raw_cost[..split]),
-                    &mut scratch_pools,
-                );
-                if balancing {
-                    for &i in &stolen {
-                        tracker.note_stolen(i);
-                    }
-                    tracker.fold(&raw_cost[..split]);
-                }
-                steals += stolen.len();
-            } else {
-                if balancing {
-                    raw_cost[..split].iter_mut().for_each(|c| *c = f64::NAN);
-                }
-                propagate_assigned(
-                    model,
-                    shards,
-                    &mut states[..split],
-                    &mut lw[..split],
-                    &assign[..split],
-                    t,
-                    seed,
-                    true,
-                    ctx,
-                    balancing.then_some(&mut raw_cost[..split]),
-                );
-                if balancing {
-                    tracker.fold(&raw_cost[..split]);
-                }
-            }
+            // Conditional slot n-1 follows the reference when present.
             if let Some(r) = &reference {
-                shards[s_ref].release(states[n - 1]);
-                states[n - 1] = shards[s_ref].clone_handle(&r[t.min(r.len() - 1)]);
-                let mut pinned = states[n - 1];
-                lw[n - 1] += model.ref_weight(&mut shards[s_ref], &mut pinned, t);
-                states[n - 1] = pinned;
+                session.install_reference(shards, r);
             }
-
-            sample_global_peak(shards);
-            let (_, snap_ess) = weight_stats(&lw, &mut w);
-            series.push(step_snapshot(shards, t, &start, snap_ess));
-            // Decommit barrier (see `run_filter_shards`).
-            if let Some(keep) = cfg.decommit_watermark {
-                trim_shards(shards, keep);
+            for _ in 0..t_max {
+                session.step_gibbs(model, shards, ctx, reference.as_deref());
             }
+            let (result, chain) = session.finish_gibbs(model, shards, reference.take());
+            reference = Some(chain);
+            results.push(result);
         }
-
-        // Select the next reference trajectory and copy it out EAGERLY
-        // (outside the tree pattern — the paper's §4 VBD note). A winner
-        // on a foreign shard is transplanted to the reference shard,
-        // which is equally eager.
-        let (final_lmean, _) = weight_stats(&lw, &mut w);
-        log_z += final_lmean;
-        let mut srng = resample_rng(seed, t_max + 1);
-        let winner = srng.categorical(&w);
-        let s_win = assign[winner];
-        let eager_ref = if s_win == s_ref {
-            shards[s_ref].deep_copy_eager(&states[winner])
-        } else {
-            let (src, dst) = pair_mut(shards, s_win, s_ref);
-            src.extract_into(&states[winner], dst)
-        };
-        let mut chain = model.chain(&mut shards[s_ref], &eager_ref);
-        shards[s_ref].release(eager_ref);
-        chain.reverse(); // oldest first
-        if let Some(old) = reference.take() {
-            for h in old {
-                shards[s_ref].release(h);
-            }
-        }
-        reference = Some(chain);
-
-        let mut post = 0.0;
-        for i in 0..n {
-            let mut s = states[i];
-            post += w[i] * model.summary(&mut shards[assign[i]], &mut s);
-            states[i] = s;
-        }
-        for (i, s) in states.into_iter().enumerate() {
-            shards[assign[i]].release(s);
-        }
-        for h in shards.iter_mut() {
-            h.sweep_memos();
-        }
-
-        let agg = aggregate_metrics(shards);
-        results.push(FilterResult {
-            log_evidence: log_z,
-            posterior_mean: post,
-            wall_s: start.elapsed().as_secs_f64(),
-            peak_bytes: agg.peak_bytes,
-            global_peak_bytes: if k == 1 {
-                agg.peak_bytes
-            } else {
-                agg.global_peak_bytes
-            },
-            scratch_peak_bytes: agg.scratch_peak_bytes,
-            migrations,
-            steals,
-            series,
-            attempts: n * t_max,
-        });
     }
     if let Some(old) = reference.take() {
         for h in old {
@@ -1963,7 +1672,7 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
 }
 
 /// Disjoint `&mut` access to two different shards.
-fn pair_mut<T>(xs: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
+pub(crate) fn pair_mut<T>(xs: &mut [T], a: usize, b: usize) -> (&mut T, &mut T) {
     debug_assert_ne!(a, b);
     if a < b {
         let (lo, hi) = xs.split_at_mut(b);

@@ -7,6 +7,7 @@ pub mod filter;
 pub mod model;
 pub mod rebalance;
 pub mod resample;
+pub mod session;
 
 pub use filter::{
     run_filter, run_filter_shards, run_particle_gibbs, run_particle_gibbs_shards,
@@ -15,6 +16,7 @@ pub use filter::{
 pub use model::{alive_retry_rng, particle_rng, resample_rng, SmcModel, StepCtx};
 pub use rebalance::{plan_offspring, CostTracker, OffspringPlan, RebalancePolicy};
 pub use resample::Resampler;
+pub use session::FilterSession;
 
 #[cfg(test)]
 mod tests {

@@ -112,6 +112,12 @@ pub const STEAL_ALPHA: f64 = 0.8;
 /// measurement in with the boosted [`STEAL_ALPHA`] — a steal means the
 /// current estimate under-predicted the particle's (or its shard's) load,
 /// so the fresh, thief-measured cost should dominate the stale prior.
+///
+/// `Clone` supports session forking ([`crate::smc::FilterSession::fork`]):
+/// a forked population inherits the parent's learned cost estimates, so
+/// its first resampling barrier plans from the same evidence the parent
+/// would have used.
+#[derive(Clone)]
 pub struct CostTracker {
     costs: Vec<f64>,
     stolen: Vec<bool>,

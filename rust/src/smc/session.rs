@@ -1,0 +1,961 @@
+//! Resumable filter sessions: the step-at-a-time population engine.
+//!
+//! [`FilterSession`] is the paper's run-to-completion particle filter
+//! (Murray 2020, §4) re-cut as an owning state machine, per the natural
+//! per-generation decomposition of forward SMC (Paige & Wood 2014): it
+//! owns the population handles, the shard assignment vector, the
+//! rebalancer's [`CostTracker`], and the RNG seed/time cursor, while the
+//! heap shards and the model stay with the caller and are lent to every
+//! call. One [`step`](FilterSession::step) call advances exactly one
+//! generation — resample → rebalance → propagate → weight → snapshot →
+//! decommit — and [`finish`](FilterSession::finish) performs the final
+//! evidence/summary reduction and releases the population.
+//!
+//! **Bit-identity.** A session stepped to completion is bitwise-identical
+//! to the monolithic loop it replaced — [`run_filter_shards`] and
+//! [`run_particle_gibbs_shards`] are now thin drivers over sessions —
+//! across the whole K × policy × steal × batch × allocator matrix. That
+//! holds because every random draw is keyed by `(seed, generation,
+//! global index)` and every weight reduction runs in global index order,
+//! so *when* a generation runs (batch loop or interactive server) cannot
+//! reach the output.
+//!
+//! **Forking.** [`fork`](FilterSession::fork) clones the entire
+//! population by lazy deep copy: per particle, one `deep_copy` call that
+//! freezes the lineage and hands back a fresh root handle — O(particles)
+//! handle/label work, **zero payload allocations** in the tree pattern
+//! (asserted by the differential suite via allocator-metric scope
+//! deltas). Parent and fork then share frozen ancestry copy-on-write and
+//! diverge independently; the parent's subsequent outputs are unchanged
+//! by having been forked. This is what makes per-request what-if queries
+//! on a long-running population cheap — the O(1)-per-object lazy copy is
+//! the platform, the session is the serving surface.
+//!
+//! **Telemetry.** Each barrier feeds a [`Registry`] owned by the session
+//! with deltas of the engine's own counters and of the aggregated
+//! [`HeapMetrics`](crate::heap::HeapMetrics) of the backing shards. The
+//! metric *names* are the stable contract — see [`crate::telemetry`].
+//!
+//! [`run_filter_shards`]: super::run_filter_shards
+//! [`run_particle_gibbs_shards`]: super::run_particle_gibbs_shards
+
+use super::filter::{
+    alive_generation, init_population, pair_mut, plan_and_resample, propagate_assigned,
+    propagate_stealing, step_snapshot, FilterResult, Method, StepMetrics,
+};
+use super::model::{resample_rng, SmcModel, StepCtx};
+use super::rebalance::{CostTracker, RebalancePolicy};
+use super::resample::Resampler;
+use crate::config::{RunConfig, Task};
+use crate::heap::{
+    aggregate_metrics, sample_global_peak, shard_of, trim_shards, Heap, Lazy, Payload,
+};
+use crate::stats::weight_stats;
+use crate::telemetry::{self, Registry};
+use std::time::Instant;
+
+/// A paused particle-filter run: the population and every piece of
+/// cross-generation state the coordinator loop used to keep on its
+/// stack, now owned by a value that can stop between generations, fork,
+/// and resume.
+///
+/// The session is generic over the model's *state* type only; the model
+/// itself (and the heap shards, and the thread-pool context) are
+/// borrowed per call, so one long-lived session can serve a model whose
+/// observation horizon grows over time — the incremental-ingest shape of
+/// the `serve` subcommand.
+///
+/// Lifecycle: [`begin`](FilterSession::begin) →
+/// [`step`](FilterSession::step)\* → ([`fork`](FilterSession::fork)\*) →
+/// [`finish`](FilterSession::finish) (or
+/// [`abandon`](FilterSession::abandon)). Conditional SMC (particle
+/// Gibbs) uses the parallel surface [`begin_gibbs`](FilterSession::begin_gibbs) /
+/// [`step_gibbs`](FilterSession::step_gibbs) /
+/// [`finish_gibbs`](FilterSession::finish_gibbs) with
+/// [`restart`](FilterSession::restart) between iterations.
+pub struct FilterSession<S: Payload> {
+    cfg: RunConfig,
+    method: Method,
+    /// Conditional-SMC session (particle Gibbs): resample every
+    /// generation, pin the reference slot.
+    gibbs: bool,
+    observe: bool,
+    policy: RebalancePolicy,
+    balancing: bool,
+    stealing: bool,
+    n: usize,
+    k: usize,
+    /// Shard owning the conditional slot `n - 1` (particle Gibbs).
+    s_ref: usize,
+    /// Seed for this run segment (per-iteration offset under Gibbs).
+    seed: u64,
+    /// Next generation to execute (1-based).
+    t: usize,
+    resampler: Resampler,
+    start: Instant,
+    states: Vec<Lazy<S>>,
+    assign: Vec<usize>,
+    lw: Vec<f64>,
+    w: Vec<f64>,
+    log_z: f64,
+    series: Vec<StepMetrics>,
+    tracker: CostTracker,
+    raw_cost: Vec<f64>,
+    scratch_pools: Vec<Vec<Heap>>,
+    migrations: usize,
+    steals: usize,
+    attempts: usize,
+    telemetry: Registry,
+    // Baselines for delta-feeding the registry from cumulative
+    // shard-lifetime counters (shards outlive sessions).
+    last_transplants: usize,
+    last_lazy: usize,
+    last_eager: usize,
+    last_elapsed: f64,
+}
+
+impl<S: Payload> FilterSession<S> {
+    /// Open a session over `shards` and initialize the generation-0
+    /// population. Mirrors the head of the old monolithic loop exactly:
+    /// the wall clock starts before initialization and the global-peak
+    /// barrier is sampled right after it.
+    pub fn begin<M>(
+        model: &M,
+        cfg: &RunConfig,
+        shards: &mut [Heap],
+        ctx: &StepCtx,
+        method: Method,
+    ) -> Self
+    where
+        M: SmcModel<State = S> + Sync,
+    {
+        let mut s = FilterSession::shell(cfg, shards, method, false);
+        s.restart(model, shards, ctx, cfg.seed);
+        s
+    }
+
+    /// Open a conditional-SMC (particle Gibbs) session: resampling runs
+    /// every generation and slot `n - 1` is reserved for the reference
+    /// trajectory (see [`install_reference`](FilterSession::install_reference)).
+    pub fn begin_gibbs<M>(model: &M, cfg: &RunConfig, shards: &mut [Heap], ctx: &StepCtx) -> Self
+    where
+        M: SmcModel<State = S> + Sync,
+    {
+        let mut s = FilterSession::shell(cfg, shards, Method::Bootstrap, true);
+        s.restart(model, shards, ctx, cfg.seed);
+        s
+    }
+
+    /// Configuration-only construction shared by the entry points; holds
+    /// no population until [`restart`](FilterSession::restart).
+    fn shell(cfg: &RunConfig, shards: &[Heap], method: Method, gibbs: bool) -> Self {
+        assert!(!shards.is_empty(), "at least one heap shard");
+        let n = cfg.n_particles;
+        let k = shards.len();
+        let observe = gibbs || cfg.task == Task::Inference;
+        let policy = if k > 1 { cfg.rebalance } else { RebalancePolicy::Off };
+        // Stealing applies to weighted propagation only: the simulation
+        // task's contract (Figure 6 — zero copies) must hold by
+        // construction, and a donation's scratch round trip is copy
+        // traffic. Gibbs sessions always weight.
+        let stealing = cfg.steal && k > 1 && observe;
+        let mut telemetry = Registry::new();
+        // Pre-register the whole stable-name contract so a render before
+        // the first barrier already lists every series at zero.
+        for name in [
+            telemetry::SESSION_STEPS_TOTAL,
+            telemetry::SESSION_FORK_TOTAL,
+            telemetry::SESSION_RESAMPLES_TOTAL,
+            telemetry::SESSION_ATTEMPTS_TOTAL,
+            telemetry::SESSION_MIGRATIONS_TOTAL,
+            telemetry::SESSION_STEALS_TOTAL,
+            telemetry::TRANSPLANTS_TOTAL,
+            telemetry::LAZY_COPIES_TOTAL,
+            telemetry::EAGER_COPIES_TOTAL,
+        ] {
+            telemetry.inc(name, 0);
+        }
+        FilterSession {
+            cfg: cfg.clone(),
+            method,
+            gibbs,
+            observe,
+            policy,
+            balancing: policy != RebalancePolicy::Off,
+            stealing,
+            n,
+            k,
+            s_ref: shard_of(n, k, n - 1),
+            seed: cfg.seed,
+            t: 1,
+            resampler: Resampler::Systematic,
+            start: Instant::now(),
+            states: Vec::new(),
+            assign: Vec::new(),
+            lw: Vec::new(),
+            w: Vec::with_capacity(n),
+            log_z: 0.0,
+            series: Vec::new(),
+            tracker: CostTracker::new(n),
+            raw_cost: vec![f64::NAN; n],
+            scratch_pools: (0..k).map(|_| Vec::new()).collect(),
+            migrations: 0,
+            steals: 0,
+            attempts: 0,
+            telemetry,
+            last_transplants: 0,
+            last_lazy: 0,
+            last_eager: 0,
+            last_elapsed: 0.0,
+        }
+    }
+
+    /// (Re)initialize the population under `seed` and reset the
+    /// per-run cursors — the inter-iteration reset of particle Gibbs
+    /// (`begin*` call it once with the base seed). The previous
+    /// population must already have been consumed by
+    /// [`finish_gibbs`](FilterSession::finish_gibbs). Recycled scratch
+    /// pools and the telemetry registry survive across restarts: the
+    /// former is pure storage reuse, the latter is lifetime history.
+    pub fn restart<M>(&mut self, model: &M, shards: &mut [Heap], ctx: &StepCtx, seed: u64)
+    where
+        M: SmcModel<State = S> + Sync,
+    {
+        assert!(
+            self.states.is_empty(),
+            "restart on a live population (finish it first)"
+        );
+        self.seed = seed;
+        self.t = 1;
+        self.start = Instant::now();
+        self.states = init_population(model, shards, ctx.pool, self.n, seed);
+        self.assign = (0..self.n).map(|i| shard_of(self.n, self.k, i)).collect();
+        // A fresh population: slot-indexed cost estimates from the
+        // previous run's particles are garbage here.
+        self.tracker = CostTracker::new(self.n);
+        self.lw = vec![0.0; self.n];
+        self.log_z = 0.0;
+        self.series = Vec::new();
+        self.migrations = 0;
+        self.steals = 0;
+        self.attempts = 0;
+        self.last_elapsed = 0.0;
+        let agg = aggregate_metrics(shards);
+        self.last_transplants = agg.transplants;
+        self.last_lazy = agg.lazy_copies;
+        self.last_eager = agg.eager_copies;
+        sample_global_peak(shards);
+    }
+
+    /// Pin the conditional slot `n - 1` to the first generation of a
+    /// reference trajectory (handles owned by the reference shard,
+    /// oldest first) — call between [`restart`](FilterSession::restart)
+    /// and the first [`step_gibbs`](FilterSession::step_gibbs) of a
+    /// conditional iteration.
+    pub fn install_reference(&mut self, shards: &mut [Heap], reference: &[Lazy<S>]) {
+        debug_assert!(self.gibbs, "reference pinning is a Gibbs-session operation");
+        shards[self.s_ref].release(self.states[self.n - 1]);
+        self.states[self.n - 1] = shards[self.s_ref].clone_handle(&reference[0]);
+    }
+
+    /// Advance one generation: resample (below the ESS threshold) →
+    /// rebalance → propagate → weight → metrics snapshot → decommit
+    /// barrier, exactly the body of the old coordinator loop for
+    /// generation [`next_generation`](FilterSession::next_generation).
+    /// The model's horizon must cover that generation — under
+    /// incremental ingest, push the observation first.
+    ///
+    /// Returns this generation's metrics snapshot (also appended to the
+    /// series that [`finish`](FilterSession::finish) returns).
+    pub fn step<M>(&mut self, model: &M, shards: &mut [Heap], ctx: &StepCtx) -> StepMetrics
+    where
+        M: SmcModel<State = S> + Sync,
+    {
+        debug_assert!(!self.gibbs, "use step_gibbs on a Gibbs session");
+        let n = self.n;
+        let t = self.t;
+        debug_assert!(t <= model.horizon(), "stepping past the model horizon");
+        // `--batch off` composes with the caller's context: either side
+        // can force the scalar path (bit-identical output).
+        let ctx = &StepCtx {
+            pool: ctx.pool,
+            kalman: ctx.kalman,
+            batch: ctx.batch && self.cfg.batch,
+        };
+        let attempts_before = self.attempts;
+        let migrations_before = self.migrations;
+        let steals_before = self.steals;
+        let mut resampled = false;
+
+        // --- Resample (inference only; simulation performs no copies). ---
+        if self.observe {
+            // Fused single pass: normalized weights + log mean weight
+            // (the evidence increment, reused below) + ESS.
+            let (lmean, cur_ess) = weight_stats(&self.lw, &mut self.w);
+            if cur_ess < self.cfg.ess_threshold * n as f64 {
+                resampled = true;
+                let mut rrng = resample_rng(self.seed, t);
+                // Auxiliary stage: bias resampling by lookahead scores.
+                let ancestors = if self.method == Method::Auxiliary {
+                    let mut aux = vec![0.0f64; n];
+                    let mut any = false;
+                    for (i, aux_i) in aux.iter_mut().enumerate() {
+                        let mut s = self.states[i];
+                        if let Some(la) = model.lookahead(&mut shards[self.assign[i]], &mut s, t)
+                        {
+                            *aux_i = la;
+                            any = true;
+                        }
+                        self.states[i] = s;
+                    }
+                    if any {
+                        let alw: Vec<f64> =
+                            self.lw.iter().zip(&aux).map(|(a, b)| a + b).collect();
+                        let mut aw = Vec::new();
+                        let (alm, _) = weight_stats(&alw, &mut aw);
+                        let anc = self.resampler.ancestors(&mut rrng, &aw, n);
+                        // First-stage correction: w ∝ 1 / lookahead(a).
+                        self.log_z += alm;
+                        self.migrations += plan_and_resample(
+                            self.policy,
+                            self.cfg.rebalance_threshold,
+                            shards,
+                            ctx.pool,
+                            &mut self.states,
+                            &anc,
+                            &mut self.assign,
+                            &mut self.tracker,
+                            None,
+                        );
+                        for (i, &a) in anc.iter().enumerate() {
+                            self.lw[i] = -aux[a];
+                        }
+                        None
+                    } else {
+                        Some(self.resampler.ancestors(&mut rrng, &self.w, n))
+                    }
+                } else {
+                    Some(self.resampler.ancestors(&mut rrng, &self.w, n))
+                };
+                if let Some(anc) = ancestors {
+                    self.log_z += lmean;
+                    self.migrations += plan_and_resample(
+                        self.policy,
+                        self.cfg.rebalance_threshold,
+                        shards,
+                        ctx.pool,
+                        &mut self.states,
+                        &anc,
+                        &mut self.assign,
+                        &mut self.tracker,
+                        None,
+                    );
+                    self.lw.iter_mut().for_each(|x| *x = 0.0);
+                }
+            }
+        }
+
+        // --- Propagate + weight. ---
+        match self.method {
+            Method::Alive if self.observe => {
+                // Alive PF (contract v2): per-slot retry streams, rounds
+                // of shard-parallel attempts. Resampling above has
+                // already equalized weights. With rebalancing active the
+                // rounds' measured costs feed the tracker, so
+                // retry-heavy lineages migrate at the next barrier.
+                if self.balancing {
+                    self.raw_cost.iter_mut().for_each(|c| *c = f64::NAN);
+                }
+                self.attempts += alive_generation(
+                    model,
+                    shards,
+                    ctx.pool,
+                    &mut self.states,
+                    &mut self.lw,
+                    &self.assign,
+                    t,
+                    self.seed,
+                    self.balancing.then_some(&mut self.raw_cost[..]),
+                );
+                if self.balancing {
+                    self.tracker.fold(&self.raw_cost);
+                }
+            }
+            _ if self.stealing => {
+                if self.balancing {
+                    self.raw_cost.iter_mut().for_each(|c| *c = f64::NAN);
+                }
+                let stolen = propagate_stealing(
+                    model,
+                    shards,
+                    &mut self.states,
+                    &mut self.lw,
+                    &self.assign,
+                    t,
+                    self.seed,
+                    self.observe,
+                    ctx,
+                    self.cfg.steal_min,
+                    self.balancing.then_some(&mut self.raw_cost[..]),
+                    &mut self.scratch_pools,
+                );
+                if self.balancing {
+                    for &i in &stolen {
+                        self.tracker.note_stolen(i);
+                    }
+                    self.tracker.fold(&self.raw_cost);
+                }
+                self.steals += stolen.len();
+                self.attempts += n;
+            }
+            _ => {
+                if self.balancing {
+                    self.raw_cost.iter_mut().for_each(|c| *c = f64::NAN);
+                }
+                propagate_assigned(
+                    model,
+                    shards,
+                    &mut self.states,
+                    &mut self.lw,
+                    &self.assign,
+                    t,
+                    self.seed,
+                    self.observe,
+                    ctx,
+                    self.balancing.then_some(&mut self.raw_cost[..]),
+                );
+                if self.balancing {
+                    self.tracker.fold(&self.raw_cost);
+                }
+                self.attempts += n;
+            }
+        }
+
+        self.close_generation(shards, t);
+        self.note_barrier(
+            shards,
+            resampled,
+            self.attempts - attempts_before,
+            self.migrations - migrations_before,
+            self.steals - steals_before,
+        );
+        self.t = t + 1;
+        self.series.last().expect("snapshot just pushed").clone()
+    }
+
+    /// Advance one conditional-SMC generation: resample everything but
+    /// the pinned slot (every generation — no ESS gate), rebalance with
+    /// the reference slot held on its shard, propagate the free
+    /// particles, then re-pin and score the conditional one. Pass the
+    /// current reference trajectory when conditioning (iterations after
+    /// the first).
+    pub fn step_gibbs<M>(
+        &mut self,
+        model: &M,
+        shards: &mut [Heap],
+        ctx: &StepCtx,
+        reference: Option<&[Lazy<S>]>,
+    ) -> StepMetrics
+    where
+        M: SmcModel<State = S> + Sync,
+    {
+        debug_assert!(self.gibbs, "use step on a non-Gibbs session");
+        let n = self.n;
+        let t = self.t;
+        let ctx = &StepCtx {
+            pool: ctx.pool,
+            kalman: ctx.kalman,
+            batch: ctx.batch && self.cfg.batch,
+        };
+        let attempts_before = self.attempts;
+        let migrations_before = self.migrations;
+        let steals_before = self.steals;
+
+        // Resample all but the conditional slot (fused normalize +
+        // evidence increment — PG resamples every generation).
+        let (lmean, _) = weight_stats(&self.lw, &mut self.w);
+        let mut rrng = resample_rng(self.seed, t);
+        let mut anc = self.resampler.ancestors(&mut rrng, &self.w, n);
+        if reference.is_some() {
+            anc[n - 1] = n - 1;
+        }
+        self.log_z += lmean;
+        self.migrations += plan_and_resample(
+            self.policy,
+            self.cfg.rebalance_threshold,
+            shards,
+            ctx.pool,
+            &mut self.states,
+            &anc,
+            &mut self.assign,
+            &mut self.tracker,
+            Some(self.s_ref),
+        );
+        self.lw.iter_mut().for_each(|x| *x = 0.0);
+
+        // Propagate free particles; pin + score the conditional one.
+        let split = if reference.is_some() { n - 1 } else { n };
+        if self.stealing {
+            if self.balancing {
+                self.raw_cost[..split].iter_mut().for_each(|c| *c = f64::NAN);
+            }
+            let stolen = propagate_stealing(
+                model,
+                shards,
+                &mut self.states[..split],
+                &mut self.lw[..split],
+                &self.assign[..split],
+                t,
+                self.seed,
+                true,
+                ctx,
+                self.cfg.steal_min,
+                self.balancing.then_some(&mut self.raw_cost[..split]),
+                &mut self.scratch_pools,
+            );
+            if self.balancing {
+                for &i in &stolen {
+                    self.tracker.note_stolen(i);
+                }
+                self.tracker.fold(&self.raw_cost[..split]);
+            }
+            self.steals += stolen.len();
+        } else {
+            if self.balancing {
+                self.raw_cost[..split].iter_mut().for_each(|c| *c = f64::NAN);
+            }
+            propagate_assigned(
+                model,
+                shards,
+                &mut self.states[..split],
+                &mut self.lw[..split],
+                &self.assign[..split],
+                t,
+                self.seed,
+                true,
+                ctx,
+                self.balancing.then_some(&mut self.raw_cost[..split]),
+            );
+            if self.balancing {
+                self.tracker.fold(&self.raw_cost[..split]);
+            }
+        }
+        self.attempts += n;
+        if let Some(r) = reference {
+            shards[self.s_ref].release(self.states[n - 1]);
+            self.states[n - 1] = shards[self.s_ref].clone_handle(&r[t.min(r.len() - 1)]);
+            let mut pinned = self.states[n - 1];
+            self.lw[n - 1] += model.ref_weight(&mut shards[self.s_ref], &mut pinned, t);
+            self.states[n - 1] = pinned;
+        }
+
+        self.close_generation(shards, t);
+        self.note_barrier(
+            shards,
+            true,
+            self.attempts - attempts_before,
+            self.migrations - migrations_before,
+            self.steals - steals_before,
+        );
+        self.t = t + 1;
+        self.series.last().expect("snapshot just pushed").clone()
+    }
+
+    /// Generation tail shared by both step flavors: global-peak barrier,
+    /// metrics snapshot (Figure 7), decommit barrier.
+    fn close_generation(&mut self, shards: &mut [Heap], t: usize) {
+        sample_global_peak(shards);
+        let (_, snap_ess) = weight_stats(&self.lw, &mut self.w);
+        self.series.push(step_snapshot(shards, t, &self.start, snap_ess));
+        // Decommit barrier: with a watermark configured, return
+        // fully-empty slab chunks past it to the system allocator so
+        // long-running (server) populations stay residency-bounded.
+        // Runs after the reclaim (parent release + memo sweeps) so a
+        // resampling spike's chunks are empty by now; bit-identical
+        // output either way.
+        if let Some(keep) = self.cfg.decommit_watermark {
+            trim_shards(shards, keep);
+        }
+    }
+
+    /// Feed the telemetry registry from this barrier's deltas. Heap
+    /// counters are cumulative over the shards' lifetime (shards outlive
+    /// sessions and are shared with forks), so the session diffs against
+    /// its own previous barrier — see the attribution note in
+    /// [`crate::telemetry`].
+    fn note_barrier(
+        &mut self,
+        shards: &[Heap],
+        resampled: bool,
+        attempts_d: usize,
+        migrations_d: usize,
+        steals_d: usize,
+    ) {
+        let (elapsed, ess, live_bytes, live_objects, lazy, eager) = {
+            let s = self.series.last().expect("barrier follows a snapshot");
+            (s.elapsed_s, s.ess, s.live_bytes, s.live_objects, s.lazy_copies, s.eager_copies)
+        };
+        let agg = aggregate_metrics(shards);
+        let tele = &mut self.telemetry;
+        tele.inc(telemetry::SESSION_STEPS_TOTAL, 1);
+        tele.inc(telemetry::SESSION_RESAMPLES_TOTAL, resampled as u64);
+        tele.inc(telemetry::SESSION_ATTEMPTS_TOTAL, attempts_d as u64);
+        tele.inc(telemetry::SESSION_MIGRATIONS_TOTAL, migrations_d as u64);
+        tele.inc(telemetry::SESSION_STEALS_TOTAL, steals_d as u64);
+        tele.inc(
+            telemetry::TRANSPLANTS_TOTAL,
+            agg.transplants.saturating_sub(self.last_transplants) as u64,
+        );
+        tele.inc(
+            telemetry::LAZY_COPIES_TOTAL,
+            lazy.saturating_sub(self.last_lazy) as u64,
+        );
+        tele.inc(
+            telemetry::EAGER_COPIES_TOTAL,
+            eager.saturating_sub(self.last_eager) as u64,
+        );
+        tele.set_gauge(telemetry::HEAP_COMMITTED_BYTES, agg.slab_committed_bytes as f64);
+        tele.set_gauge(telemetry::HEAP_LIVE_BYTES, live_bytes as f64);
+        tele.set_gauge(telemetry::HEAP_LIVE_OBJECTS, live_objects as f64);
+        tele.set_gauge(telemetry::ESS_LAST, ess);
+        tele.observe(
+            telemetry::STEP_WALL_SECONDS,
+            (elapsed - self.last_elapsed).max(0.0),
+        );
+        self.last_transplants = agg.transplants;
+        self.last_lazy = lazy;
+        self.last_eager = eager;
+        self.last_elapsed = elapsed;
+    }
+
+    /// Fork the session: lazily deep-copy the whole population and
+    /// return an independent session over the *same* shards. Per
+    /// particle this is one copy-on-write `deep_copy` — a fresh root
+    /// handle over frozen ancestry, O(particles) handle work with **no
+    /// eager payload clones** in the tree pattern — so fork cost scales
+    /// with the population, not the heap. Parent and fork then diverge
+    /// independently: the parent's subsequent outputs are bitwise
+    /// unchanged by the fork, and a fork stepped with the same model is
+    /// bitwise-identical to the unforked run (all draws are keyed by
+    /// `(seed, generation, index)`; freezing never changes values).
+    ///
+    /// The fork inherits the learned cost estimates, the telemetry
+    /// history (`session_fork_total` counts the lineage's forks and is
+    /// incremented on both sides), the parent's wall-clock origin, and
+    /// the seed/time cursor; scratch pools start empty (pure storage,
+    /// never observable in output).
+    pub fn fork(&mut self, shards: &mut [Heap]) -> FilterSession<S> {
+        let states: Vec<Lazy<S>> = self
+            .states
+            .iter()
+            .enumerate()
+            .map(|(i, st)| shards[self.assign[i]].deep_copy(st))
+            .collect();
+        self.telemetry.inc(telemetry::SESSION_FORK_TOTAL, 1);
+        FilterSession {
+            cfg: self.cfg.clone(),
+            method: self.method,
+            gibbs: self.gibbs,
+            observe: self.observe,
+            policy: self.policy,
+            balancing: self.balancing,
+            stealing: self.stealing,
+            n: self.n,
+            k: self.k,
+            s_ref: self.s_ref,
+            seed: self.seed,
+            t: self.t,
+            resampler: self.resampler,
+            start: self.start,
+            states,
+            assign: self.assign.clone(),
+            lw: self.lw.clone(),
+            w: Vec::with_capacity(self.n),
+            log_z: self.log_z,
+            series: self.series.clone(),
+            tracker: self.tracker.clone(),
+            raw_cost: vec![f64::NAN; self.n],
+            scratch_pools: (0..self.k).map(|_| Vec::new()).collect(),
+            migrations: self.migrations,
+            steals: self.steals,
+            attempts: self.attempts,
+            telemetry: self.telemetry.clone(),
+            last_transplants: self.last_transplants,
+            last_lazy: self.last_lazy,
+            last_eager: self.last_eager,
+            last_elapsed: self.last_elapsed,
+        }
+    }
+
+    /// Final reduction: the last generation's evidence contribution, the
+    /// weighted posterior summary, and the aggregate metrics — then
+    /// release the population, sweep memos, and run the final decommit.
+    /// Identical to the old coordinator's epilogue.
+    pub fn finish<M>(mut self, model: &M, shards: &mut [Heap]) -> FilterResult
+    where
+        M: SmcModel<State = S> + Sync,
+    {
+        let (final_lmean, _) = weight_stats(&self.lw, &mut self.w);
+        self.log_z += final_lmean;
+        let mut post = 0.0;
+        for i in 0..self.n {
+            let mut s = self.states[i];
+            post += self.w[i] * model.summary(&mut shards[self.assign[i]], &mut s);
+            self.states[i] = s;
+        }
+
+        let agg = aggregate_metrics(shards);
+        let result = FilterResult {
+            log_evidence: if self.observe { self.log_z } else { f64::NAN },
+            posterior_mean: post,
+            wall_s: self.start.elapsed().as_secs_f64(),
+            peak_bytes: agg.peak_bytes,
+            // K = 1: the continuous high-water mark is the exact global
+            // peak.
+            global_peak_bytes: if self.k == 1 {
+                agg.peak_bytes
+            } else {
+                agg.global_peak_bytes
+            },
+            scratch_peak_bytes: agg.scratch_peak_bytes,
+            migrations: self.migrations,
+            steals: self.steals,
+            series: std::mem::take(&mut self.series),
+            attempts: self.attempts,
+        };
+
+        self.release_population(shards);
+        // Final decommit: the population is gone, so everything beyond
+        // the watermark is returnable.
+        if let Some(keep) = self.cfg.decommit_watermark {
+            trim_shards(shards, keep);
+        }
+        result
+    }
+
+    /// Conditional-SMC epilogue for the iteration just stepped: add the
+    /// final evidence increment, draw the winner, copy its trajectory
+    /// out **eagerly** (outside the tree pattern — the paper's §4 VBD
+    /// note; a winner on a foreign shard is transplanted to the
+    /// reference shard, equally eager), release `old_reference`, reduce
+    /// the posterior, and release the population. Returns this
+    /// iteration's [`FilterResult`] and the next reference trajectory
+    /// (oldest first, owned by the reference shard). The session stays
+    /// usable: [`restart`](FilterSession::restart) begins the next
+    /// iteration.
+    pub fn finish_gibbs<M>(
+        &mut self,
+        model: &M,
+        shards: &mut [Heap],
+        old_reference: Option<Vec<Lazy<S>>>,
+    ) -> (FilterResult, Vec<Lazy<S>>)
+    where
+        M: SmcModel<State = S> + Sync,
+    {
+        let n = self.n;
+        let t_max = self.t - 1;
+        let (final_lmean, _) = weight_stats(&self.lw, &mut self.w);
+        self.log_z += final_lmean;
+        let mut srng = resample_rng(self.seed, t_max + 1);
+        let winner = srng.categorical(&self.w);
+        let s_win = self.assign[winner];
+        let eager_ref = if s_win == self.s_ref {
+            shards[self.s_ref].deep_copy_eager(&self.states[winner])
+        } else {
+            let (src, dst) = pair_mut(shards, s_win, self.s_ref);
+            src.extract_into(&self.states[winner], dst)
+        };
+        let mut chain = model.chain(&mut shards[self.s_ref], &eager_ref);
+        shards[self.s_ref].release(eager_ref);
+        chain.reverse(); // oldest first
+        if let Some(old) = old_reference {
+            for h in old {
+                shards[self.s_ref].release(h);
+            }
+        }
+
+        let mut post = 0.0;
+        for i in 0..n {
+            let mut s = self.states[i];
+            post += self.w[i] * model.summary(&mut shards[self.assign[i]], &mut s);
+            self.states[i] = s;
+        }
+        self.release_population(shards);
+
+        let agg = aggregate_metrics(shards);
+        let result = FilterResult {
+            log_evidence: self.log_z,
+            posterior_mean: post,
+            wall_s: self.start.elapsed().as_secs_f64(),
+            peak_bytes: agg.peak_bytes,
+            global_peak_bytes: if self.k == 1 {
+                agg.peak_bytes
+            } else {
+                agg.global_peak_bytes
+            },
+            scratch_peak_bytes: agg.scratch_peak_bytes,
+            migrations: self.migrations,
+            steals: self.steals,
+            series: std::mem::take(&mut self.series),
+            attempts: n * t_max,
+        };
+        (result, chain)
+    }
+
+    /// Drop the session without producing a result: release the
+    /// population, sweep memos, and run the decommit barrier. For
+    /// abandoned what-if forks.
+    pub fn abandon(mut self, shards: &mut [Heap]) {
+        self.release_population(shards);
+        if let Some(keep) = self.cfg.decommit_watermark {
+            trim_shards(shards, keep);
+        }
+    }
+
+    /// Release every population handle and sweep the memo tables.
+    fn release_population(&mut self, shards: &mut [Heap]) {
+        for (i, s) in std::mem::take(&mut self.states).into_iter().enumerate() {
+            shards[self.assign[i]].release(s);
+        }
+        for h in shards.iter_mut() {
+            h.sweep_memos();
+        }
+    }
+
+    /// The running evidence estimate as of the last completed
+    /// generation: accumulated resampling increments plus the current
+    /// weights' log mean. NaN for simulation-task sessions. Pure — the
+    /// exact value [`finish`](FilterSession::finish) would report now.
+    pub fn evidence_estimate(&mut self) -> f64 {
+        if !self.observe {
+            return f64::NAN;
+        }
+        let (lmean, _) = weight_stats(&self.lw, &mut self.w);
+        self.log_z + lmean
+    }
+
+    /// The weighted posterior mean of the model summary over the current
+    /// population — the mid-run analogue of
+    /// [`FilterResult::posterior_mean`].
+    pub fn posterior_estimate<M>(&mut self, model: &M, shards: &mut [Heap]) -> f64
+    where
+        M: SmcModel<State = S> + Sync,
+    {
+        let _ = weight_stats(&self.lw, &mut self.w);
+        let mut post = 0.0;
+        for i in 0..self.n {
+            let mut s = self.states[i];
+            post += self.w[i] * model.summary(&mut shards[self.assign[i]], &mut s);
+            self.states[i] = s;
+        }
+        post
+    }
+
+    /// The generation the next [`step`](FilterSession::step) will
+    /// execute (1-based).
+    pub fn next_generation(&self) -> usize {
+        self.t
+    }
+
+    /// Population size N.
+    pub fn population(&self) -> usize {
+        self.n
+    }
+
+    /// The latest generation's metrics snapshot, if any generation ran.
+    pub fn last_metrics(&self) -> Option<&StepMetrics> {
+        self.series.last()
+    }
+
+    /// The session's telemetry registry (see [`crate::telemetry`] for
+    /// the stable name contract).
+    pub fn telemetry(&self) -> &Registry {
+        &self.telemetry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Model, RunConfig, Task};
+    use crate::heap::CopyMode;
+    use crate::models::ListModel;
+    use crate::pool::ThreadPool;
+    use crate::smc::run_filter_shards;
+
+    fn cfg(n: usize, t: usize) -> RunConfig {
+        let mut c = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+        c.n_particles = n;
+        c.n_steps = t;
+        c.seed = 1234;
+        c
+    }
+
+    #[test]
+    fn fork_is_lazy_and_both_lineages_exact() {
+        let t_max = 12;
+        let model = ListModel::synthetic(t_max, 5);
+        let c = cfg(32, t_max);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx { pool: &pool, kalman: None, batch: true };
+
+        // Oracle: the plain driver on a fresh heap.
+        let mut oracle_heap = [Heap::new(CopyMode::LazySro)];
+        let full =
+            run_filter_shards(&model, &c, &mut oracle_heap, &ctx, Method::Bootstrap);
+
+        // Session: step halfway, fork, finish both lineages.
+        let mut shards = [Heap::new(CopyMode::LazySro)];
+        let mut parent = FilterSession::begin(&model, &c, &mut shards, &ctx, Method::Bootstrap);
+        for _ in 0..t_max / 2 {
+            parent.step(&model, &mut shards, &ctx);
+        }
+        let scope = shards[0].begin_scope();
+        let mut fork = parent.fork(&mut shards);
+        let delta = shards[0].end_scope(scope);
+        assert_eq!(delta.total_allocs, 0, "fork must not allocate payloads");
+        assert_eq!(delta.eager_copies, 0, "fork must not copy eagerly");
+        assert_eq!(delta.deep_copies, 32, "one lazy deep copy per particle");
+
+        for _ in t_max / 2..t_max {
+            parent.step(&model, &mut shards, &ctx);
+            fork.step(&model, &mut shards, &ctx);
+        }
+        let pr = parent.finish(&model, &mut shards);
+        let fr = fork.finish(&model, &mut shards);
+        assert_eq!(pr.log_evidence.to_bits(), full.log_evidence.to_bits());
+        assert_eq!(pr.posterior_mean.to_bits(), full.posterior_mean.to_bits());
+        assert_eq!(fr.log_evidence.to_bits(), full.log_evidence.to_bits());
+        assert_eq!(fr.posterior_mean.to_bits(), full.posterior_mean.to_bits());
+        assert_eq!(shards[0].live_objects(), 0, "both lineages released");
+    }
+
+    #[test]
+    fn telemetry_tracks_steps_and_forks() {
+        let model = ListModel::synthetic(8, 9);
+        let c = cfg(16, 8);
+        let pool = ThreadPool::new(1);
+        let ctx = StepCtx { pool: &pool, kalman: None, batch: true };
+        let mut shards = [Heap::new(CopyMode::LazySro)];
+        let mut s = FilterSession::begin(&model, &c, &mut shards, &ctx, Method::Bootstrap);
+        assert_eq!(s.telemetry().counter(crate::telemetry::SESSION_STEPS_TOTAL), 0);
+        for _ in 0..8 {
+            s.step(&model, &mut shards, &ctx);
+        }
+        let f = s.fork(&mut shards);
+        let tele = s.telemetry();
+        assert_eq!(tele.counter(crate::telemetry::SESSION_STEPS_TOTAL), 8);
+        assert_eq!(tele.counter(crate::telemetry::SESSION_FORK_TOTAL), 1);
+        assert_eq!(tele.counter(crate::telemetry::SESSION_ATTEMPTS_TOTAL), 16 * 8);
+        assert_eq!(
+            tele.histogram(crate::telemetry::STEP_WALL_SECONDS).unwrap().count(),
+            8
+        );
+        assert!(tele.gauge(crate::telemetry::ESS_LAST).is_some());
+        let render = tele.render();
+        assert!(render.contains("session_steps_total 8"));
+        f.abandon(&mut shards);
+        s.abandon(&mut shards);
+        assert_eq!(shards[0].live_objects(), 0);
+    }
+}

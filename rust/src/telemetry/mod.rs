@@ -1,0 +1,296 @@
+//! Stable operational telemetry for long-running filter sessions.
+//!
+//! A fleet of inference servers is monitored by *name*: dashboards,
+//! alerts, and scrapers key on metric identifiers, so those identifiers
+//! are a public contract — they never change meaning or disappear inside
+//! a major version, and additions are backwards-compatible. The string
+//! constants in this module are that contract; everything else (the
+//! in-process [`Registry`] representation, the render format's layout)
+//! is an implementation detail.
+//!
+//! The registry is dependency-free and deterministic: metrics render in
+//! registration order, counters are monotone `u64`s, gauges are plain
+//! `f64`s, and histograms use a fixed logarithmic bucket ladder so two
+//! runs of the same workload produce structurally identical output.
+//! [`crate::smc::FilterSession`] feeds a registry from
+//! [`HeapMetrics`](crate::heap::HeapMetrics) /
+//! [`StepMetrics`](crate::smc::StepMetrics) deltas at each generation
+//! barrier; nothing here ever influences what the engine computes.
+//!
+//! Heap-level counters (`transplants_total`, copy counters, residency
+//! gauges) aggregate over the *shards backing the session*. Shards are
+//! shared between a session and its forks, so when several sessions
+//! interleave on one `ShardedHeap`, each barrier attributes the delta
+//! since that session's own previous barrier — per-session attribution
+//! is exact while one session steps at a time and approximate under
+//! interleaving, but the sum across sessions is always exact.
+
+/// Generations stepped by this session (counter). One increment per
+/// [`step`](crate::smc::FilterSession::step) barrier.
+pub const SESSION_STEPS_TOTAL: &str = "session_steps_total";
+
+/// Populations forked off this session lineage (counter). Forks inherit
+/// the parent's registry, so a fork's own forks keep accumulating here.
+pub const SESSION_FORK_TOTAL: &str = "session_fork_total";
+
+/// Resampling barriers executed (counter). Bootstrap/auxiliary sessions
+/// resample only below the ESS threshold; conditional (particle Gibbs)
+/// sessions resample every generation.
+pub const SESSION_RESAMPLES_TOTAL: &str = "session_resamples_total";
+
+/// Propagation attempts (counter). Equals particles per generation except
+/// under the alive method, where retries count too.
+pub const SESSION_ATTEMPTS_TOTAL: &str = "session_attempts_total";
+
+/// Rebalancer-executed cross-shard migrations (counter).
+pub const SESSION_MIGRATIONS_TOTAL: &str = "session_migrations_total";
+
+/// Particles donated through the work-stealing yard (counter).
+pub const SESSION_STEALS_TOTAL: &str = "session_steals_total";
+
+/// Per-generation wall seconds (histogram): time between consecutive
+/// step barriers, including resampling and decommit work.
+pub const STEP_WALL_SECONDS: &str = "step_wall_seconds";
+
+/// Cross-shard lineage transplants executed on the session's shards
+/// (counter; delta-fed from [`HeapMetrics`](crate::heap::HeapMetrics)).
+pub const TRANSPLANTS_TOTAL: &str = "transplants_total";
+
+/// O(1) lazy object copies on the session's shards (counter).
+pub const LAZY_COPIES_TOTAL: &str = "lazy_copies_total";
+
+/// Eager object copies on the session's shards (counter).
+pub const EAGER_COPIES_TOTAL: &str = "eager_copies_total";
+
+/// Slab bytes currently committed across the session's shards (gauge;
+/// sampled after the decommit barrier, so it is the figure a
+/// residency-bounded server is held to).
+pub const HEAP_COMMITTED_BYTES: &str = "heap_committed_bytes";
+
+/// Live heap payload bytes across the session's shards (gauge).
+pub const HEAP_LIVE_BYTES: &str = "heap_live_bytes";
+
+/// Live heap objects across the session's shards (gauge).
+pub const HEAP_LIVE_OBJECTS: &str = "heap_live_objects";
+
+/// Effective sample size after the latest generation (gauge).
+pub const ESS_LAST: &str = "ess_last";
+
+/// Upper bounds (seconds) of the fixed [`Histogram`] bucket ladder:
+/// half-decade log steps from 10 µs to 100 s, plus the implicit +Inf
+/// overflow bucket. Fixed so that renders are structurally identical
+/// across runs and hosts.
+pub const HISTOGRAM_BUCKETS_S: [f64; 15] = [
+    1e-5, 3.16e-5, 1e-4, 3.16e-4, 1e-3, 3.16e-3, 1e-2, 3.16e-2, 1e-1, 3.16e-1, 1.0, 3.16, 10.0,
+    31.6, 100.0,
+];
+
+/// A fixed-bucket histogram: cumulative bucket counts over
+/// [`HISTOGRAM_BUCKETS_S`] plus count/sum/max, enough for latency
+/// quantile estimates without storing samples.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Observations falling at or below each ladder bound (non-cumulative
+    /// per-bucket counts; the +Inf overflow lives in `count` minus the
+    /// bucket sum).
+    buckets: [u64; HISTOGRAM_BUCKETS_S.len()],
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram {
+            buckets: [0; HISTOGRAM_BUCKETS_S.len()],
+            count: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        if let Some(b) = HISTOGRAM_BUCKETS_S.iter().position(|&ub| v <= ub) {
+            self.buckets[b] += 1;
+        }
+        self.count += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of recorded observations (seconds).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Largest recorded observation.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Per-bucket (non-cumulative) counts aligned with
+    /// [`HISTOGRAM_BUCKETS_S`].
+    pub fn buckets(&self) -> &[u64] {
+        &self.buckets
+    }
+}
+
+/// A deterministic, dependency-free metric registry: named counters,
+/// gauges, and histograms, rendered in registration order in a
+/// Prometheus-style text format.
+///
+/// `Clone` is deliberate: a forked session clones its parent's registry
+/// so the fork's telemetry continues the lineage's history.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: Vec<(&'static str, u64)>,
+    gauges: Vec<(&'static str, f64)>,
+    histograms: Vec<(&'static str, Histogram)>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Add `by` to the named counter, registering it at zero on first use.
+    pub fn inc(&mut self, name: &'static str, by: u64) {
+        match self.counters.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, v)) => *v += by,
+            None => self.counters.push((name, by)),
+        }
+    }
+
+    /// Set the named gauge, registering it on first use.
+    pub fn set_gauge(&mut self, name: &'static str, v: f64) {
+        match self.gauges.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, g)) => *g = v,
+            None => self.gauges.push((name, v)),
+        }
+    }
+
+    /// Record one observation into the named histogram, registering it on
+    /// first use.
+    pub fn observe(&mut self, name: &'static str, v: f64) {
+        if let Some((_, h)) = self.histograms.iter_mut().find(|(n, _)| *n == name) {
+            h.observe(v);
+            return;
+        }
+        let mut h = Histogram::new();
+        h.observe(v);
+        self.histograms.push((name, h));
+    }
+
+    /// Current value of a counter (0 when never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Current value of a gauge, when set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
+
+    /// The named histogram, when any observation has been recorded.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.iter().find(|(n, _)| *n == name).map(|(_, h)| h)
+    }
+
+    /// Render every metric in registration order, Prometheus text style:
+    /// `name value` lines for counters and gauges, cumulative
+    /// `name_bucket{le="..."}` lines plus `_sum`/`_count` for histograms.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, h) in &self.histograms {
+            let mut cum = 0u64;
+            for (ub, c) in HISTOGRAM_BUCKETS_S.iter().zip(&h.buckets) {
+                cum += c;
+                let _ = writeln!(out, "{name}_bucket{{le=\"{ub}\"}} {cum}");
+            }
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+            let _ = writeln!(out, "{name}_sum {}", h.sum);
+            let _ = writeln!(out, "{name}_count {}", h.count);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_default_to_zero() {
+        let mut r = Registry::new();
+        assert_eq!(r.counter(SESSION_STEPS_TOTAL), 0);
+        r.inc(SESSION_STEPS_TOTAL, 1);
+        r.inc(SESSION_STEPS_TOTAL, 2);
+        assert_eq!(r.counter(SESSION_STEPS_TOTAL), 3);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let mut r = Registry::new();
+        assert_eq!(r.gauge(HEAP_COMMITTED_BYTES), None);
+        r.set_gauge(HEAP_COMMITTED_BYTES, 4096.0);
+        r.set_gauge(HEAP_COMMITTED_BYTES, 1024.0);
+        assert_eq!(r.gauge(HEAP_COMMITTED_BYTES), Some(1024.0));
+    }
+
+    #[test]
+    fn histogram_buckets_and_moments() {
+        let mut r = Registry::new();
+        r.observe(STEP_WALL_SECONDS, 0.5e-3);
+        r.observe(STEP_WALL_SECONDS, 2.0);
+        r.observe(STEP_WALL_SECONDS, 1e9); // lands in +Inf overflow
+        let h = r.histogram(STEP_WALL_SECONDS).unwrap();
+        assert_eq!(h.count(), 3);
+        assert!(h.max() >= 1e9);
+        assert_eq!(h.buckets().iter().sum::<u64>(), 2, "overflow stays out of the ladder");
+    }
+
+    #[test]
+    fn render_is_deterministic_and_complete() {
+        let mut r = Registry::new();
+        r.inc(SESSION_STEPS_TOTAL, 5);
+        r.set_gauge(ESS_LAST, 31.5);
+        r.observe(STEP_WALL_SECONDS, 0.01);
+        let a = r.render();
+        let b = r.render();
+        assert_eq!(a, b);
+        assert!(a.contains("session_steps_total 5"));
+        assert!(a.contains("ess_last 31.5"));
+        assert!(a.contains("step_wall_seconds_count 1"));
+        assert!(a.contains("step_wall_seconds_bucket{le=\"+Inf\"} 1"));
+    }
+
+    #[test]
+    fn clone_preserves_history() {
+        let mut r = Registry::new();
+        r.inc(SESSION_FORK_TOTAL, 1);
+        let mut c = r.clone();
+        c.inc(SESSION_FORK_TOTAL, 1);
+        assert_eq!(r.counter(SESSION_FORK_TOTAL), 1);
+        assert_eq!(c.counter(SESSION_FORK_TOTAL), 2);
+    }
+}

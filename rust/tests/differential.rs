@@ -22,7 +22,9 @@ use lazycow::config::{Model, RunConfig, Task};
 use lazycow::heap::{AllocatorKind, CopyMode, ShardedHeap, CHUNK_BYTES};
 use lazycow::models::{Crbd, ListModel, Pcfg};
 use lazycow::pool::ThreadPool;
-use lazycow::smc::{run_filter_shards, Method, RebalancePolicy, SmcModel, StepCtx};
+use lazycow::smc::{
+    run_filter_shards, FilterSession, Method, RebalancePolicy, SmcModel, StepCtx,
+};
 
 fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
     StepCtx { pool, kalman: None, batch: true }
@@ -335,6 +337,171 @@ fn crbd_matrix_bitwise() {
     cfg.n_steps = model.horizon();
     cfg.seed = 3;
     assert_bitwise_equiv("crbd", &model, &cfg, Method::Alive);
+}
+
+/// Drive a [`FilterSession`] by hand — begin, step every generation,
+/// finish — instead of going through the `run_filter_shards` driver.
+fn run_session_cell<M: SmcModel + Sync>(
+    model: &M,
+    cfg: &RunConfig,
+    method: Method,
+    pool: &ThreadPool,
+    k: usize,
+) -> Fingerprint {
+    let mut sh = ShardedHeap::with_allocator(cfg.mode, k, cfg.allocator);
+    let shards = sh.shards_mut();
+    let c = ctx(pool);
+    let t_max = cfg.n_steps.min(model.horizon());
+    let mut session = FilterSession::begin(model, cfg, shards, &c, method);
+    for _ in 0..t_max {
+        session.step(model, shards, &c);
+    }
+    let r = session.finish(model, shards);
+    assert_eq!(sh.live_objects(), 0, "session leaked live objects");
+    Fingerprint {
+        log_evidence: r.log_evidence.to_bits(),
+        posterior_mean: r.posterior_mean.to_bits(),
+        attempts: r.attempts,
+    }
+}
+
+/// Session axis: a [`FilterSession`] stepped to completion is
+/// bitwise-identical to `run_filter_shards` across K ∈ {1, 2, 4} ×
+/// policy × steal × batch. The driver *is* a session internally, so this
+/// pins the external step-at-a-time surface against it — any divergence
+/// (a session method reordering a barrier, dropping a telemetry-side
+/// effect into the hot path, forgetting the composed batch gate) breaks
+/// here.
+#[test]
+fn lgss_session_axis_bitwise() {
+    let model = ListModel::synthetic(20, 13);
+    let mut base = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    base.n_particles = 96;
+    base.n_steps = 20;
+    base.seed = 2026_0807;
+    let pool = ThreadPool::new(4);
+    for k in [1usize, 2, 4] {
+        for policy in RebalancePolicy::ALL {
+            for steal in [false, true] {
+                for batch in [true, false] {
+                    let mut cfg = base.clone();
+                    cfg.rebalance = policy;
+                    cfg.steal = steal;
+                    cfg.steal_min = 2;
+                    cfg.batch = batch;
+                    let label = format!(
+                        "lgss-session/K={k}/{policy:?}/steal={steal}/batch={batch}"
+                    );
+                    let driver = run_cell(&model, &cfg, Method::Bootstrap, &pool, k, &label);
+                    let session = run_session_cell(&model, &cfg, Method::Bootstrap, &pool, k);
+                    assert_eq!(session, driver, "{label}: session diverged from driver");
+                }
+            }
+        }
+    }
+}
+
+/// Session axis for the alive method: the adaptive speculative window
+/// lives inside `alive_generation`, and both surfaces must agree on
+/// outputs *and* attempt totals.
+#[test]
+fn crbd_session_axis_bitwise() {
+    let model = Crbd::synthetic(25, 2);
+    let mut cfg = RunConfig::for_model(Model::Crbd, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 48;
+    cfg.n_steps = model.horizon();
+    cfg.seed = 3;
+    cfg.rebalance = RebalancePolicy::Greedy;
+    cfg.steal_min = 2;
+    let pool = ThreadPool::new(4);
+    for k in [1usize, 2] {
+        let driver = run_cell(&model, &cfg, Method::Alive, &pool, k, "crbd-session");
+        let session = run_session_cell(&model, &cfg, Method::Alive, &pool, k);
+        assert_eq!(session, driver, "crbd session K={k} diverged from driver");
+    }
+}
+
+/// Fork contract: `fork()` performs **zero payload allocations and zero
+/// eager copies** (pure lazy handle work, one `deep_copy` per particle,
+/// asserted via allocator-metric scope deltas), the parent's outputs are
+/// bitwise unchanged by having been forked, a fork stepped with the same
+/// observations reproduces the unforked run bit for bit, and a fork
+/// stepped with different observations diverges — independently of the
+/// parent, on the same shards.
+#[test]
+fn session_fork_diverges_independently() {
+    let t_max = 24;
+    let split = 12;
+    let n = 64;
+    let model = ListModel::synthetic(t_max, 21);
+    let mut cfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = n;
+    cfg.n_steps = t_max;
+    cfg.seed = 77;
+    cfg.steal_min = 2;
+    let pool = ThreadPool::new(4);
+    let k = 2;
+
+    // Oracle: the unforked run on fresh shards.
+    let full = run_cell(&model, &cfg, Method::Bootstrap, &pool, k, "fork/oracle");
+
+    // A counterfactual observation stream diverging after the fork point.
+    let mut alt_model = model.clone();
+    for y in &mut alt_model.obs[split..] {
+        *y = -*y - 1.0;
+    }
+
+    let mut sh = ShardedHeap::new(CopyMode::LazySro, k);
+    let shards = sh.shards_mut();
+    let c = ctx(&pool);
+    let mut parent = FilterSession::begin(&model, &cfg, shards, &c, Method::Bootstrap);
+    for _ in 0..split {
+        parent.step(&model, shards, &c);
+    }
+
+    // Fork twice under metric scopes: O(particles) lazy handle work only.
+    let scopes: Vec<_> = shards.iter().map(|h| h.begin_scope()).collect();
+    let mut fork_same = parent.fork(shards);
+    let mut fork_diff = parent.fork(shards);
+    let mut allocs = 0usize;
+    let mut eager = 0usize;
+    let mut deep = 0usize;
+    for (h, scope) in shards.iter().zip(scopes) {
+        let d = h.end_scope(scope);
+        allocs += d.total_allocs;
+        eager += d.eager_copies;
+        deep += d.deep_copies;
+    }
+    assert_eq!(allocs, 0, "fork allocated payloads");
+    assert_eq!(eager, 0, "fork copied eagerly");
+    assert_eq!(deep, 2 * n, "fork must lazily deep-copy each particle once");
+
+    // All three lineages run to the horizon on the shared shards.
+    for _ in split..t_max {
+        parent.step(&model, shards, &c);
+        fork_same.step(&model, shards, &c);
+        fork_diff.step(&alt_model, shards, &c);
+    }
+    let pr = parent.finish(&model, shards);
+    let sr = fork_same.finish(&model, shards);
+    let dr = fork_diff.finish(&alt_model, shards);
+
+    assert_eq!(
+        (pr.log_evidence.to_bits(), pr.posterior_mean.to_bits(), pr.attempts),
+        (full.log_evidence, full.posterior_mean, full.attempts),
+        "parent output changed by forking"
+    );
+    assert_eq!(
+        (sr.log_evidence.to_bits(), sr.posterior_mean.to_bits(), sr.attempts),
+        (full.log_evidence, full.posterior_mean, full.attempts),
+        "same-observations fork diverged from the unforked run"
+    );
+    assert_ne!(
+        dr.log_evidence.to_bits(),
+        full.log_evidence,
+        "counterfactual fork failed to diverge"
+    );
+    assert_eq!(sh.live_objects(), 0, "forked lineages leaked");
 }
 
 /// Simulation (no observations, no resampling, no copies): the engine
