@@ -190,6 +190,10 @@ pub struct RunConfig {
     pub batch: bool,
     /// Emit a per-generation metrics series (Figure 7).
     pub series: bool,
+    /// `serve` front-end: TCP listen address (`addr:port`). `None` (the
+    /// default) keeps the stdin line protocol. Settable from a config
+    /// file (`listen = 127.0.0.1:7878`) or the `--listen` flag.
+    pub listen: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -215,6 +219,7 @@ impl Default for RunConfig {
             use_xla: true,
             batch: true,
             series: false,
+            listen: None,
         }
     }
 }
@@ -291,6 +296,12 @@ impl RunConfig {
                 }
             }
             "series" => self.series = matches!(value, "true" | "1" | "yes"),
+            "listen" => {
+                self.listen = match value {
+                    "" | "off" | "none" => None,
+                    addr => Some(addr.to_string()),
+                }
+            }
             _ => return Err(format!("unknown config key {key}")),
         }
         Ok(())

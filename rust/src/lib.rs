@@ -37,7 +37,15 @@
 //!   are thin drivers over it.
 //! - [`models`] are the paper's §4 evaluation problems (RBPF, PCFG, VBD,
 //!   MOT, CRBD, plus the linked-list microbenchmark), each implementing
-//!   [`smc::SmcModel`].
+//!   [`smc::SmcModel`] — including the streaming-ingest hook
+//!   ([`smc::SmcModel::stream_observation`]) that makes every model
+//!   servable.
+//! - [`serve`] is the serving surface (§5): many named sessions over
+//!   one shared sharded heap, driven by a line protocol over stdin or
+//!   TCP ([`serve::ServeEngine`] / [`serve::serve_tcp`]), with
+//!   structured `err` replies and a graceful drain — per session,
+//!   replies stay bit-identical to the batch run however sessions
+//!   interleave.
 //!
 //! Supporting substrate: [`pool`] (scoped static-scheduling executors
 //! and the work-stealing yard), [`rng`] (counter-keyed PCG streams —
@@ -85,6 +93,7 @@ pub mod pool;
 pub mod ppl;
 pub mod prop;
 pub mod rng;
+pub mod serve;
 pub mod smc;
 pub mod runtime;
 pub mod stats;

@@ -3,18 +3,22 @@
 //!
 //! ```text
 //! lazycow run   --model rbpf --task inference --mode lazy-sro --particles 256 --steps 150
-//! lazycow serve --model list [--input obs.txt] # incremental session server
+//! lazycow serve [--listen 127.0.0.1:7878]      # multi-session inference server
 //! lazycow fig5  [--reps 5] [--scale paper]     # §4 Figure 5 (inference)
 //! lazycow fig6  [--reps 5]                     # §4 Figure 6 (simulation)
 //! lazycow fig7  --model rbpf                   # §4 Figure 7 (series over t)
 //! lazycow tree-bound                           # Jacob et al. (2015) bound
 //! ```
 //!
-//! `serve` drives a [`FilterSession`](lazycow::smc::FilterSession) over a
-//! line protocol (stdin or `--input`): `obs <y>` ingests one observation
-//! and steps a generation, `whatif <y...>` answers a speculative query on
-//! a lazily forked population, `telemetry` dumps the stable-name metric
-//! registry, and `finish` (or EOF) reports the final estimates.
+//! `serve` multiplexes named [`FilterSession`](lazycow::smc::FilterSession)s
+//! — any model, any mix — over one shared sharded heap, driven by a line
+//! protocol on stdin/`--input` or, with `--listen addr:port`, over TCP:
+//! `open <name> <model>` starts a session, `obs <name> <tokens>` ingests
+//! one observation and steps a generation, `whatif` answers speculative
+//! queries on a lazily forked population, `fork` branches a session,
+//! `telemetry` dumps the stable-name registry, `finish`/`close` end one
+//! session and `finish-all` (or EOF/SIGTERM) drains them all. See
+//! `DESIGN.md` for the protocol spec.
 
 use lazycow::bench::{human_bytes, CellResult};
 use lazycow::cli::{Cli, CliError};
@@ -83,6 +87,11 @@ fn cli() -> Cli {
         "input",
         "",
         "serve: observation/command file replayed through the line protocol (default: stdin)",
+    )
+    .flag(
+        "listen",
+        "",
+        "serve: TCP listen address (addr:port); default is the stdin line protocol",
     )
     .flag("reps", "5", "benchmark repetitions")
     .flag("scale", "default", "scale preset: default|paper")
@@ -164,6 +173,11 @@ fn build_config(args: &lazycow::cli::Args) -> Result<RunConfig, String> {
     if let Some(b) = args.get("batch") {
         if !b.is_empty() {
             cfg.apply("batch", b)?;
+        }
+    }
+    if let Some(a) = args.get("listen") {
+        if !a.is_empty() {
+            cfg.apply("listen", a)?;
         }
     }
     cfg.use_xla = !args.get_bool("no-xla");
@@ -275,109 +289,66 @@ fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
     Ok(())
 }
 
-/// `serve`: a long-running [`FilterSession`] fed by a line protocol.
+/// `serve`: many named [`FilterSession`]s — any model, any mix — over
+/// one shared sharded heap, fed by the line protocol.
 ///
-/// Lines: `obs <y>` (ingest + step one generation), `whatif <y...>`
-/// (fork the population lazily, score speculative observations, report,
-/// discard the fork), `telemetry` (dump the stable-name registry),
-/// `finish` (final report; EOF is equivalent), `#`-comments and blanks
-/// skipped. Currently LGSS-only (`--model list`): it is the one model
-/// with a streaming constructor, and the shape every other model would
-/// follow.
+/// Verbs: `open <name> <model> [particles=N seed=S ess=X]`, `obs <name>
+/// <tokens>`, `whatif <name> <tokens>[; <tokens>...]`, `fork <name>
+/// <new>`, `telemetry <name>`, `finish <name>`, `close <name>`,
+/// `finish-all`; `#`-comments and blanks are skipped, and every
+/// malformed or unknown line gets a structured `err ...` reply instead
+/// of killing the server. With `--listen addr:port` the same protocol
+/// runs over TCP ([`lazycow::serve::serve_tcp`]); otherwise lines come
+/// from stdin or `--input`, and EOF drains every open session like
+/// `finish-all`. Protocol spec: `DESIGN.md`.
 ///
 /// [`FilterSession`]: lazycow::smc::FilterSession
 fn cmd_serve(args: &lazycow::cli::Args) -> Result<(), String> {
-    use lazycow::models::ListModel;
-    use lazycow::smc::{FilterSession, Method};
+    use lazycow::serve::{serve_tcp, ServeEngine, Verdict};
     use std::io::BufRead;
 
-    if args.get_or("model", "list") != "list" {
-        return Err("serve currently supports --model list only".into());
+    let cfg = build_config(args)?;
+    let Backend { pool, kalman } =
+        Backend::new(cfg.threads, cfg.use_xla, args.get_or("artifacts", "artifacts"));
+    let listen = cfg.listen.clone();
+    let mut engine = ServeEngine::new(cfg, pool, kalman);
+    if let Some(addr) = listen {
+        return serve_tcp(engine, &addr);
     }
-    let mut cfg = build_config(args)?;
-    cfg.task = Task::Inference;
-    let backend = Backend::new(cfg.threads, cfg.use_xla, args.get_or("artifacts", "artifacts"));
-    let k = backend.choose_shards(&cfg);
-    let mut heap = ShardedHeap::with_allocator(cfg.mode, k, cfg.allocator);
-    let ctx = backend.ctx();
-    let mut model = ListModel::streaming();
-    let mut session =
-        FilterSession::begin(&model, &cfg, heap.shards_mut(), &ctx, Method::Bootstrap);
-    println!(
-        "# serve N={} K={k} seed={} — obs <y> | whatif <y...> | telemetry | finish",
-        cfg.n_particles, cfg.seed
-    );
 
+    println!("{}", engine.banner());
     let reader: Box<dyn BufRead> = match args.get("input") {
         Some(f) if !f.is_empty() => Box::new(std::io::BufReader::new(
             std::fs::File::open(f).map_err(|e| format!("--input {f}: {e}"))?,
         )),
         _ => Box::new(std::io::BufReader::new(std::io::stdin())),
     };
+    let mut drained = false;
     for line in reader.lines() {
         let line = line.map_err(|e| e.to_string())?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let mut parts = line.split_whitespace();
-        match parts.next().expect("non-empty line") {
-            "obs" => {
-                let y: f64 = parts
-                    .next()
-                    .ok_or("obs needs a value")?
-                    .parse()
-                    .map_err(|e| format!("bad observation: {e}"))?;
-                model.push_obs(y);
-                let m = session.step(&model, heap.shards_mut(), &ctx);
-                println!(
-                    "t={} ess={:.1} log_evidence={:.4} posterior_mean={:.4}",
-                    m.t,
-                    m.ess,
-                    session.evidence_estimate(),
-                    session.posterior_estimate(&model, heap.shards_mut())
-                );
-            }
-            "whatif" => {
-                // Speculative branch: lazy population fork + cloned
-                // model; the live session and observation stream are
-                // untouched.
-                let mut what_model = model.clone();
-                let mut fork = session.fork(heap.shards_mut());
-                let mut steps = 0usize;
-                for tok in parts {
-                    let y: f64 = match tok.parse() {
-                        Ok(y) => y,
-                        Err(e) => {
-                            fork.abandon(heap.shards_mut());
-                            return Err(format!("bad what-if observation: {e}"));
-                        }
-                    };
-                    what_model.push_obs(y);
-                    fork.step(&what_model, heap.shards_mut(), &ctx);
-                    steps += 1;
+        match engine.execute(&line) {
+            Verdict::Silent => {}
+            Verdict::Reply(lines) => {
+                for l in lines {
+                    println!("{l}");
                 }
-                if steps == 0 {
-                    fork.abandon(heap.shards_mut());
-                    return Err("whatif needs at least one value".into());
-                }
-                let r = fork.finish(&what_model, heap.shards_mut());
-                println!(
-                    "whatif horizon=+{steps} log_evidence={:.4} posterior_mean={:.4}",
-                    r.log_evidence, r.posterior_mean
-                );
             }
-            "telemetry" => print!("{}", session.telemetry().render()),
-            "finish" => break,
-            other => return Err(format!("unknown serve command {other}")),
+            Verdict::Drain(lines) => {
+                for l in lines {
+                    println!("{l}");
+                }
+                drained = true;
+                break;
+            }
         }
     }
-    let r = session.finish(&model, heap.shards_mut());
-    println!(
-        "final log_evidence={:.4} posterior_mean={:.4} wall={:.3}s migrations={} steals={}",
-        r.log_evidence, r.posterior_mean, r.wall_s, r.migrations, r.steals
-    );
-    println!("heap: {}", heap.metrics().summary());
+    if !drained {
+        // EOF without finish-all: drain every open session anyway.
+        for l in engine.finish_all() {
+            println!("{l}");
+        }
+    }
+    println!("heap: {}", engine.heap_summary());
     Ok(())
 }
 
@@ -505,7 +476,12 @@ fn cmd_tree_bound(args: &lazycow::cli::Args) -> Result<(), String> {
     for s in r.series.iter().step_by((t_max / 20).max(1)) {
         println!("{}\t{}\t{:.0}", s.t, s.live_objects, bound(s.t as f64));
     }
-    let last = r.series.last().unwrap();
+    let Some(last) = r.series.last() else {
+        return Err(
+            "tree-bound ran zero generations (--steps 0): nothing to bound; pass --steps >= 1"
+                .into(),
+        );
+    };
     println!(
         "# final: {} live objects, bound {:.0}, dense would be {}",
         last.live_objects,

@@ -50,12 +50,24 @@ pub struct CrbdState {
 lazy_fields!(CrbdState: prev);
 
 /// The constant-rate birth-death model over an observed tree.
+///
+/// `Clone` supports what-if serving: speculative branches clone the
+/// model and append hypothetical branching events without disturbing
+/// the live event sequence.
+#[derive(Clone)]
 pub struct Crbd {
     /// The observed tree's branching events, oldest first.
     pub events: Vec<TreeEvent>,
 }
 
 impl Crbd {
+    /// A model with **no branching events yet** — the incremental-ingest
+    /// starting point for the `serve` subcommand (events arrive via
+    /// [`stream_observation`](SmcModel::stream_observation)).
+    pub fn streaming() -> Self {
+        Crbd { events: Vec::new() }
+    }
+
     /// Generate a synthetic ultrametric tree with `tips` extant species:
     /// the branching-event sequence of a birth–death process conditioned
     /// on survival, approximated by exponential inter-event times at rate
@@ -168,6 +180,41 @@ impl SmcModel for Crbd {
     /// read of the marginal mean; the offset keeps hints positive.
     fn cost_hint(&self, heap: &mut Heap, state: &mut Lazy<CrbdState>) -> f64 {
         1.0 + heap.read(state, |s| s.lambda.mean())
+    }
+
+    /// One branching event per generation: `dt lineages remaining`
+    /// (interval length > 0, extant lineage count ≥ 1, time to the
+    /// present ≥ 0). Validation matters doubly here: the alive PF
+    /// re-proposes until a particle survives, so an event no particle
+    /// can survive would spin the retry loop into its bailout — reject
+    /// malformed shapes at the door.
+    fn stream_observation(&mut self, tokens: &[&str]) -> Result<(), String> {
+        let [t_dt, t_lin, t_rem] = tokens else {
+            return Err(format!(
+                "crbd expects three values per event (dt lineages remaining), got {} tokens",
+                tokens.len()
+            ));
+        };
+        let dt: f64 = t_dt
+            .parse()
+            .map_err(|_| format!("crbd dt '{t_dt}' is not a number"))?;
+        let lineages: u32 = t_lin
+            .parse()
+            .map_err(|_| format!("crbd lineages '{t_lin}' is not a positive integer"))?;
+        let remaining: f64 = t_rem
+            .parse()
+            .map_err(|_| format!("crbd remaining '{t_rem}' is not a number"))?;
+        if !dt.is_finite() || dt <= 0.0 {
+            return Err(format!("crbd dt must be finite and > 0, got {dt}"));
+        }
+        if lineages == 0 {
+            return Err("crbd lineages must be >= 1".to_string());
+        }
+        if !remaining.is_finite() || remaining < 0.0 {
+            return Err(format!("crbd remaining must be finite and >= 0, got {remaining}"));
+        }
+        self.events.push(TreeEvent { dt, lineages, remaining });
+        Ok(())
     }
 }
 

@@ -193,6 +193,24 @@ impl SmcModel for ListModel {
         let x = heap.read(state, |s| s.x);
         normal_lpdf(self.obs[t - 1], x, self.r.sqrt())
     }
+
+    /// One observation per generation: a single finite float `y`.
+    fn stream_observation(&mut self, tokens: &[&str]) -> Result<(), String> {
+        let [tok] = tokens else {
+            return Err(format!(
+                "list expects exactly one observation value per generation, got {} tokens",
+                tokens.len()
+            ));
+        };
+        let y: f64 = tok
+            .parse()
+            .map_err(|_| format!("list observation '{tok}' is not a number"))?;
+        if !y.is_finite() {
+            return Err(format!("list observation '{tok}' must be finite"));
+        }
+        self.push_obs(y);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

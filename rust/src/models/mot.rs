@@ -55,6 +55,11 @@ pub struct MotState {
 lazy_fields!(MotState: tracks, prev);
 
 /// The multi-object tracking model (births, deaths, clutter, gating).
+///
+/// `Clone` supports what-if serving: speculative branches clone the
+/// model and append hypothetical scans without disturbing the live
+/// observation stream.
+#[derive(Clone)]
 pub struct Mot {
     /// Observed 2-D points per generation.
     pub obs: Vec<Vec<(f64, f64)>>,
@@ -109,6 +114,13 @@ fn clutter_ll(k: usize) -> f64 {
 }
 
 impl Mot {
+    /// A model with **no scans yet** — the incremental-ingest starting
+    /// point for the `serve` subcommand (scans arrive via
+    /// [`stream_observation`](SmcModel::stream_observation)).
+    pub fn streaming() -> Self {
+        Mot { obs: Vec::new() }
+    }
+
     /// Simulate ground-truth tracks + clutter into an observation set.
     pub fn synthetic(t_max: usize, seed: u64) -> Self {
         let mut rng = Pcg64::stream(seed, 0x0707);
@@ -272,6 +284,30 @@ impl SmcModel for Mot {
 
     fn summary(&self, heap: &mut Heap, state: &mut Lazy<MotState>) -> f64 {
         heap.read(state, |s| s.tracks.len() as f64)
+    }
+
+    /// One scan per generation: zero or more detections, each a comma
+    /// -joined `x,y` pair. No tokens at all is a legitimate empty scan
+    /// (the sensor saw nothing this generation).
+    fn stream_observation(&mut self, tokens: &[&str]) -> Result<(), String> {
+        let mut pts = Vec::with_capacity(tokens.len());
+        for tok in tokens {
+            let Some((sx, sy)) = tok.split_once(',') else {
+                return Err(format!("mot detection '{tok}' is not an x,y pair"));
+            };
+            let x: f64 = sx
+                .parse()
+                .map_err(|_| format!("mot detection x '{sx}' is not a number"))?;
+            let y: f64 = sy
+                .parse()
+                .map_err(|_| format!("mot detection y '{sy}' is not a number"))?;
+            if !x.is_finite() || !y.is_finite() {
+                return Err(format!("mot detection '{tok}' must be finite"));
+            }
+            pts.push((x, y));
+        }
+        self.obs.push(pts);
+        Ok(())
     }
 }
 

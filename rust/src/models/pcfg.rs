@@ -86,6 +86,11 @@ pub struct PcfgState {
 lazy_fields!(PcfgState: prev);
 
 /// The PCFG model: infer the derivation of an observed terminal string.
+///
+/// `Clone` supports what-if serving: speculative branches clone the
+/// model and append hypothetical terminals without disturbing the live
+/// corpus.
+#[derive(Clone)]
 pub struct Pcfg {
     /// Observed terminal string.
     pub obs: Vec<u8>,
@@ -118,6 +123,14 @@ impl Pcfg {
             obs,
             first_term: first,
         }
+    }
+
+    /// A model with the known grammar and **no corpus yet** — the
+    /// incremental-ingest starting point for the `serve` subcommand
+    /// (terminals arrive via
+    /// [`stream_observation`](SmcModel::stream_observation)).
+    pub fn streaming() -> Self {
+        Pcfg::new(Vec::new())
     }
 
     /// Sample a corpus of `t_max` terminals from the grammar.
@@ -237,6 +250,27 @@ impl SmcModel for Pcfg {
 
     fn summary(&self, heap: &mut Heap, state: &mut Lazy<PcfgState>) -> f64 {
         heap.read(state, |s| s.stack.len() as f64)
+    }
+
+    /// One observation per generation: a terminal-symbol id in
+    /// `0..N_TERMINALS`.
+    fn stream_observation(&mut self, tokens: &[&str]) -> Result<(), String> {
+        let [tok] = tokens else {
+            return Err(format!(
+                "pcfg expects exactly one terminal id per generation, got {} tokens",
+                tokens.len()
+            ));
+        };
+        let y: usize = tok
+            .parse()
+            .map_err(|_| format!("pcfg terminal '{tok}' is not an integer"))?;
+        if y >= N_TERMINALS {
+            return Err(format!(
+                "pcfg terminal {y} out of range (alphabet is 0..{N_TERMINALS})"
+            ));
+        }
+        self.obs.push(y as u8);
+        Ok(())
     }
 }
 

@@ -42,6 +42,11 @@ pub struct RbpfState {
 lazy_fields!(RbpfState: prev);
 
 /// The Rao-Blackwellized PF model (Lindsten & Schön 2010 mixed SSM).
+///
+/// `Clone` supports what-if serving: speculative branches clone the
+/// model and append hypothetical observations without disturbing the
+/// live stream.
+#[derive(Clone)]
 pub struct Rbpf {
     /// Linear-substate parameters (shared with the compiled artifact).
     pub params: KalmanParams,
@@ -74,6 +79,17 @@ impl Rbpf {
             obs.push((y1, y2));
         }
         Rbpf { params, obs }
+    }
+
+    /// Default parameters and **no observations yet** — the
+    /// incremental-ingest starting point for the `serve` subcommand
+    /// (observations arrive via
+    /// [`stream_observation`](SmcModel::stream_observation)).
+    pub fn streaming() -> Self {
+        Rbpf {
+            params: KalmanParams::rbpf_default(),
+            obs: Vec::new(),
+        }
     }
 
     fn initial_state() -> RbpfState {
@@ -240,6 +256,27 @@ impl SmcModel for Rbpf {
             cur = prev;
         }
         out
+    }
+
+    /// One observation per generation: the pair `y1 y2` (both finite).
+    fn stream_observation(&mut self, tokens: &[&str]) -> Result<(), String> {
+        let [t1, t2] = tokens else {
+            return Err(format!(
+                "rbpf expects two observation values per generation (y1 y2), got {} tokens",
+                tokens.len()
+            ));
+        };
+        let y1: f64 = t1
+            .parse()
+            .map_err(|_| format!("rbpf observation y1 '{t1}' is not a number"))?;
+        let y2: f64 = t2
+            .parse()
+            .map_err(|_| format!("rbpf observation y2 '{t2}' is not a number"))?;
+        if !y1.is_finite() || !y2.is_finite() {
+            return Err("rbpf observations must be finite".to_string());
+        }
+        self.obs.push((y1, y2));
+        Ok(())
     }
 }
 

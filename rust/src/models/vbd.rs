@@ -87,6 +87,11 @@ pub struct VbdState {
 lazy_fields!(VbdState: prev);
 
 /// The VBD model: weekly case counts with a marginalized reporting rate.
+///
+/// `Clone` supports what-if serving: speculative branches clone the
+/// model and append hypothetical case counts without disturbing the
+/// live trace.
+#[derive(Clone)]
 pub struct Vbd {
     /// Fixed epidemiological parameters.
     pub params: VbdParams,
@@ -137,6 +142,17 @@ impl Vbd {
         s.im = s.im + new_im - dead_im;
         s.new_ih = new_ih;
         new_ih
+    }
+
+    /// Default parameters and **no case counts yet** — the
+    /// incremental-ingest starting point for the `serve` subcommand
+    /// (weekly counts arrive via
+    /// [`stream_observation`](SmcModel::stream_observation)).
+    pub fn streaming() -> Self {
+        Vbd {
+            params: VbdParams::default(),
+            obs: Vec::new(),
+        }
     }
 
     /// Generate a synthetic weekly case-count trace (one outbreak wave).
@@ -223,6 +239,22 @@ impl SmcModel for Vbd {
 
     fn ref_weight(&self, heap: &mut Heap, state: &mut Lazy<VbdState>, _t: usize) -> f64 {
         heap.read(state, |s| s.obs_ll)
+    }
+
+    /// One observation per generation: a non-negative integer weekly
+    /// case count.
+    fn stream_observation(&mut self, tokens: &[&str]) -> Result<(), String> {
+        let [tok] = tokens else {
+            return Err(format!(
+                "vbd expects exactly one case count per generation, got {} tokens",
+                tokens.len()
+            ));
+        };
+        let y: u64 = tok
+            .parse()
+            .map_err(|_| format!("vbd case count '{tok}' is not a non-negative integer"))?;
+        self.obs.push(y);
+        Ok(())
     }
 }
 

@@ -1,0 +1,495 @@
+//! The transport-agnostic serve core: named sessions over one shared
+//! sharded heap, one protocol line in → reply lines out.
+//!
+//! A [`ServeEngine`] is single-threaded by construction: whichever
+//! front-end drives it (the stdin loop or the TCP request loop) calls
+//! [`execute`](ServeEngine::execute) one line at a time, so sessions on
+//! the shared shards run serially and the per-session telemetry
+//! attribution stays exact (see [`crate::telemetry`]). Parallelism lives
+//! *inside* a step — the engine's thread pool propagates shards
+//! concurrently — not across protocol lines.
+//!
+//! Error handling is the protocol's, not the process's: every malformed
+//! or unknown line becomes an `err ...` reply and the engine stays
+//! consistent (a failed `open` opens nothing, a failed `obs` leaves the
+//! session exactly as it was — observations are validated before any
+//! state changes).
+
+use crate::config::{Model, RunConfig, Task};
+use crate::heap::{Heap, HeapMetrics, ShardedHeap};
+use crate::models::{Crbd, ListModel, Mot, Pcfg, Rbpf, Vbd};
+use crate::pool::ThreadPool;
+use crate::runtime::BatchKalman;
+use crate::smc::{FilterResult, FilterSession, Method, SmcModel, StepCtx};
+use std::collections::BTreeMap;
+
+/// The filter method each model is served with — the same pairing the
+/// batch dispatcher ([`run_model`](crate::models::run_model)) uses for
+/// §4: auxiliary for PCFG, alive for CRBD, bootstrap elsewhere. VBD is
+/// served with the forward bootstrap filter: particle Gibbs is an
+/// offline multi-pass scheme, and the streaming surface is the filter.
+pub fn serve_method(model: Model) -> Method {
+    match model {
+        Model::Pcfg => Method::Auxiliary,
+        Model::Crbd => Method::Alive,
+        _ => Method::Bootstrap,
+    }
+}
+
+fn method_name(m: Method) -> &'static str {
+    match m {
+        Method::Bootstrap => "bootstrap",
+        Method::Auxiliary => "auxiliary",
+        Method::Alive => "alive",
+    }
+}
+
+/// Outcome of executing one protocol line.
+pub enum Verdict {
+    /// Blank line or `#` comment: nothing to send.
+    Silent,
+    /// Reply lines for the issuing client (the last one always starts
+    /// with `ok ` or `err `).
+    Reply(Vec<String>),
+    /// `finish-all`: reply lines, after which the front-end should stop
+    /// accepting input and shut down.
+    Drain(Vec<String>),
+}
+
+fn err(msg: impl Into<String>) -> Verdict {
+    Verdict::Reply(vec![format!("err {}", msg.into())])
+}
+
+/// One `obs` ingest: the generation stepped and the running estimates.
+struct ObsReport {
+    t: usize,
+    ess: f64,
+    log_evidence: f64,
+    posterior_mean: f64,
+}
+
+/// Object-safe adapter erasing the model type of one named session, so
+/// the engine can hold sessions over different models in one map. Each
+/// method mirrors a protocol verb.
+trait Servable {
+    fn model_name(&self) -> &'static str;
+    /// Generations completed so far.
+    fn generations(&self) -> usize;
+    /// Ingest one observation (already tokenized) and step a generation.
+    /// Tokens are validated before the session or model mutates.
+    fn obs(
+        &mut self,
+        shards: &mut [Heap],
+        ctx: &StepCtx,
+        tokens: &[&str],
+    ) -> Result<ObsReport, String>;
+    /// Speculative query: clone the model, stage all observation groups
+    /// (validated before anything forks), fork the population lazily,
+    /// step it through the groups, finish the fork. The live session is
+    /// untouched.
+    fn whatif(
+        &mut self,
+        shards: &mut [Heap],
+        ctx: &StepCtx,
+        groups: &[Vec<&str>],
+    ) -> Result<(usize, FilterResult), String>;
+    /// Fork into an independent named session over the same shards.
+    fn fork(&mut self, shards: &mut [Heap]) -> Box<dyn Servable>;
+    /// Render the session's telemetry registry.
+    fn telemetry(&self) -> String;
+    /// Final reduction; releases the population.
+    fn finish(self: Box<Self>, shards: &mut [Heap]) -> FilterResult;
+    /// Abandon without a result; releases the population.
+    fn close(self: Box<Self>, shards: &mut [Heap]);
+}
+
+/// The one generic impl behind every servable model: the model value
+/// (owning the growing observation stream) plus its filter session.
+struct ModelSession<M: SmcModel> {
+    model: M,
+    session: FilterSession<M::State>,
+}
+
+impl<M> Servable for ModelSession<M>
+where
+    M: SmcModel + Clone + Sync + 'static,
+{
+    fn model_name(&self) -> &'static str {
+        self.model.name()
+    }
+
+    fn generations(&self) -> usize {
+        self.session.next_generation() - 1
+    }
+
+    fn obs(
+        &mut self,
+        shards: &mut [Heap],
+        ctx: &StepCtx,
+        tokens: &[&str],
+    ) -> Result<ObsReport, String> {
+        // stream_observation validates every token before mutating, so a
+        // rejected line leaves model and session untouched.
+        self.model.stream_observation(tokens)?;
+        let m = self.session.step(&self.model, shards, ctx);
+        Ok(ObsReport {
+            t: m.t,
+            ess: m.ess,
+            log_evidence: self.session.evidence_estimate(),
+            posterior_mean: self.session.posterior_estimate(&self.model, shards),
+        })
+    }
+
+    fn whatif(
+        &mut self,
+        shards: &mut [Heap],
+        ctx: &StepCtx,
+        groups: &[Vec<&str>],
+    ) -> Result<(usize, FilterResult), String> {
+        let mut what_model = self.model.clone();
+        // Stage (and validate) every group before forking: a bad token
+        // costs nothing, not an abandoned fork.
+        for g in groups {
+            what_model.stream_observation(g)?;
+        }
+        let mut fork = self.session.fork(shards);
+        for _ in 0..groups.len() {
+            fork.step(&what_model, shards, ctx);
+        }
+        let r = fork.finish(&what_model, shards);
+        Ok((groups.len(), r))
+    }
+
+    fn fork(&mut self, shards: &mut [Heap]) -> Box<dyn Servable> {
+        Box::new(ModelSession {
+            model: self.model.clone(),
+            session: self.session.fork(shards),
+        })
+    }
+
+    fn telemetry(&self) -> String {
+        self.session.telemetry().render()
+    }
+
+    fn finish(self: Box<Self>, shards: &mut [Heap]) -> FilterResult {
+        let ModelSession { model, session } = *self;
+        session.finish(&model, shards)
+    }
+
+    fn close(self: Box<Self>, shards: &mut [Heap]) {
+        let ModelSession { session, .. } = *self;
+        session.abandon(shards);
+    }
+}
+
+/// Open a streaming session for `model`: the model's empty streaming
+/// constructor paired with its serve method.
+fn open_session(
+    model: Model,
+    cfg: &RunConfig,
+    shards: &mut [Heap],
+    ctx: &StepCtx,
+) -> Box<dyn Servable> {
+    fn boxed<M>(
+        model: M,
+        cfg: &RunConfig,
+        shards: &mut [Heap],
+        ctx: &StepCtx,
+        m: Method,
+    ) -> Box<dyn Servable>
+    where
+        M: SmcModel + Clone + Sync + 'static,
+    {
+        let session = FilterSession::begin(&model, cfg, shards, ctx, m);
+        Box::new(ModelSession { model, session })
+    }
+    let m = serve_method(model);
+    match model {
+        Model::Rbpf => boxed(Rbpf::streaming(), cfg, shards, ctx, m),
+        Model::Pcfg => boxed(Pcfg::streaming(), cfg, shards, ctx, m),
+        Model::Vbd => boxed(Vbd::streaming(), cfg, shards, ctx, m),
+        Model::Mot => boxed(Mot::streaming(), cfg, shards, ctx, m),
+        Model::Crbd => boxed(Crbd::streaming(), cfg, shards, ctx, m),
+        Model::List => boxed(ListModel::streaming(), cfg, shards, ctx, m),
+    }
+}
+
+fn finish_line(name: &str, model: &'static str, r: &FilterResult) -> String {
+    format!(
+        "ok finish {name} model={model} steps={} log_evidence={:.4} posterior_mean={:.4} \
+         wall={:.3}s",
+        r.series.len(),
+        r.log_evidence,
+        r.posterior_mean,
+        r.wall_s
+    )
+}
+
+/// The serve core: one shared [`ShardedHeap`], one thread pool, and a
+/// map of named sessions, driven one protocol line at a time by a
+/// front-end (stdin loop or TCP request loop).
+///
+/// The heap's shard count is fixed at construction from the template
+/// config (`--shards 0` matches the worker threads) and shared by every
+/// session; per-session `open` options may override particles, seed, and
+/// the ESS threshold, everything else (mode, allocator, rebalance
+/// policy, ...) comes from the template.
+pub struct ServeEngine {
+    template: RunConfig,
+    pool: ThreadPool,
+    kalman: Option<BatchKalman>,
+    heap: ShardedHeap,
+    sessions: BTreeMap<String, Box<dyn Servable>>,
+}
+
+impl ServeEngine {
+    /// Build an engine from the launch configuration plus the numeric
+    /// backend (thread pool and optional compiled Kalman kernel).
+    pub fn new(template: RunConfig, pool: ThreadPool, kalman: Option<BatchKalman>) -> Self {
+        let k = template.resolved_shards(pool.n_threads());
+        let heap = ShardedHeap::with_allocator(template.mode, k, template.allocator);
+        ServeEngine {
+            template,
+            pool,
+            kalman,
+            heap,
+            sessions: BTreeMap::new(),
+        }
+    }
+
+    /// The greeting line a front-end prints/sends on startup: the shared
+    /// engine parameters and a verb cheat-sheet.
+    pub fn banner(&self) -> String {
+        format!(
+            "# lazycow serve K={} mode={} allocator={} — open <name> <model> [particles=N \
+             seed=S ess=X] | obs <name> <tokens> | whatif <name> <tokens>[; <tokens>] | \
+             fork <name> <new> | telemetry <name> | finish <name> | close <name> | finish-all",
+            self.heap.k(),
+            self.template.mode.name(),
+            self.template.allocator.name()
+        )
+    }
+
+    /// Execute one protocol line. Never panics on input: malformed or
+    /// unknown lines produce an `err ...` reply and leave every session
+    /// untouched.
+    pub fn execute(&mut self, line: &str) -> Verdict {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Verdict::Silent;
+        }
+        let (verb, rest) = match line.split_once(char::is_whitespace) {
+            Some((v, r)) => (v, r.trim()),
+            None => (line, ""),
+        };
+        match verb {
+            "open" => self.cmd_open(rest),
+            "obs" => self.cmd_obs(rest),
+            "whatif" => self.cmd_whatif(rest),
+            "fork" => self.cmd_fork(rest),
+            "telemetry" => self.cmd_telemetry(rest),
+            "finish" => self.cmd_finish(rest),
+            "close" => self.cmd_close(rest),
+            "finish-all" => Verdict::Drain(self.finish_all()),
+            _ => err(format!(
+                "unknown command '{verb}' (open|obs|whatif|fork|telemetry|finish|close|finish-all)"
+            )),
+        }
+    }
+
+    fn ctx<'a>(pool: &'a ThreadPool, kalman: Option<&'a BatchKalman>) -> StepCtx<'a> {
+        StepCtx {
+            pool,
+            kalman,
+            batch: true,
+        }
+    }
+
+    fn cmd_open(&mut self, rest: &str) -> Verdict {
+        let mut it = rest.split_whitespace();
+        let (Some(name), Some(model_s)) = (it.next(), it.next()) else {
+            return err("usage: open <name> <model> [particles=N] [seed=S] [ess=X]");
+        };
+        if self.sessions.contains_key(name) {
+            return err(format!("session '{name}' already open"));
+        }
+        let Some(model) = Model::parse(model_s) else {
+            return err(format!("unknown model '{model_s}' (rbpf|pcfg|vbd|mot|crbd|list)"));
+        };
+        let mut cfg = self.template.clone();
+        cfg.model = model;
+        cfg.task = Task::Inference;
+        cfg.shards = self.heap.k();
+        for opt in it {
+            let Some((key, value)) = opt.split_once('=') else {
+                return err(format!("bad open option '{opt}' (expected key=value)"));
+            };
+            if !matches!(key, "particles" | "n" | "seed" | "ess") {
+                return err(format!("unknown open option '{key}' (particles|seed|ess)"));
+            }
+            if let Err(e) = cfg.apply(key, value) {
+                return err(e);
+            }
+        }
+        if cfg.n_particles == 0 {
+            return err("particles must be >= 1");
+        }
+        let ctx = Self::ctx(&self.pool, self.kalman.as_ref());
+        let sess = open_session(model, &cfg, self.heap.shards_mut(), &ctx);
+        let reply = format!(
+            "ok open {name} model={} method={} n={} seed={}",
+            model.name(),
+            method_name(serve_method(model)),
+            cfg.n_particles,
+            cfg.seed
+        );
+        self.sessions.insert(name.to_string(), sess);
+        Verdict::Reply(vec![reply])
+    }
+
+    fn cmd_obs(&mut self, rest: &str) -> Verdict {
+        let mut it = rest.split_whitespace();
+        let Some(name) = it.next() else {
+            return err("usage: obs <name> <tokens...>");
+        };
+        let tokens: Vec<&str> = it.collect();
+        let Some(sess) = self.sessions.get_mut(name) else {
+            return err(format!("no open session '{name}'"));
+        };
+        let ctx = Self::ctx(&self.pool, self.kalman.as_ref());
+        match sess.obs(self.heap.shards_mut(), &ctx, &tokens) {
+            Ok(r) => Verdict::Reply(vec![format!(
+                "ok obs {name} t={} ess={:.1} log_evidence={:.4} posterior_mean={:.4}",
+                r.t, r.ess, r.log_evidence, r.posterior_mean
+            )]),
+            Err(e) => err(e),
+        }
+    }
+
+    fn cmd_whatif(&mut self, rest: &str) -> Verdict {
+        let (name, spec) = match rest.split_once(char::is_whitespace) {
+            Some((n, s)) => (n, s.trim()),
+            None => (rest, ""),
+        };
+        if name.is_empty() || spec.is_empty() {
+            return err("usage: whatif <name> <tokens>[; <tokens>...]");
+        }
+        let groups: Vec<Vec<&str>> = spec
+            .split(';')
+            .map(|g| g.split_whitespace().collect())
+            .collect();
+        let Some(sess) = self.sessions.get_mut(name) else {
+            return err(format!("no open session '{name}'"));
+        };
+        let ctx = Self::ctx(&self.pool, self.kalman.as_ref());
+        match sess.whatif(self.heap.shards_mut(), &ctx, &groups) {
+            Ok((h, r)) => Verdict::Reply(vec![format!(
+                "ok whatif {name} horizon=+{h} log_evidence={:.4} posterior_mean={:.4}",
+                r.log_evidence, r.posterior_mean
+            )]),
+            Err(e) => err(e),
+        }
+    }
+
+    fn cmd_fork(&mut self, rest: &str) -> Verdict {
+        let mut it = rest.split_whitespace();
+        let (Some(name), Some(new), None) = (it.next(), it.next(), it.next()) else {
+            return err("usage: fork <name> <newname>");
+        };
+        if self.sessions.contains_key(new) {
+            return err(format!("session '{new}' already open"));
+        }
+        let Some(sess) = self.sessions.get_mut(name) else {
+            return err(format!("no open session '{name}'"));
+        };
+        let forked = sess.fork(self.heap.shards_mut());
+        let reply = format!(
+            "ok fork {name} {new} model={} t={}",
+            forked.model_name(),
+            forked.generations()
+        );
+        self.sessions.insert(new.to_string(), forked);
+        Verdict::Reply(vec![reply])
+    }
+
+    fn cmd_telemetry(&mut self, rest: &str) -> Verdict {
+        let name = rest.trim();
+        if name.is_empty() || name.contains(char::is_whitespace) {
+            return err("usage: telemetry <name>");
+        }
+        let Some(sess) = self.sessions.get(name) else {
+            return err(format!("no open session '{name}'"));
+        };
+        let mut lines: Vec<String> = sess.telemetry().lines().map(str::to_string).collect();
+        lines.push(format!("ok telemetry {name}"));
+        Verdict::Reply(lines)
+    }
+
+    fn cmd_finish(&mut self, rest: &str) -> Verdict {
+        let name = rest.trim();
+        if name.is_empty() || name.contains(char::is_whitespace) {
+            return err("usage: finish <name>");
+        }
+        let Some(sess) = self.sessions.remove(name) else {
+            return err(format!("no open session '{name}'"));
+        };
+        let model = sess.model_name();
+        let r = sess.finish(self.heap.shards_mut());
+        Verdict::Reply(vec![finish_line(name, model, &r)])
+    }
+
+    fn cmd_close(&mut self, rest: &str) -> Verdict {
+        let name = rest.trim();
+        if name.is_empty() || name.contains(char::is_whitespace) {
+            return err("usage: close <name>");
+        }
+        let Some(sess) = self.sessions.remove(name) else {
+            return err(format!("no open session '{name}'"));
+        };
+        sess.close(self.heap.shards_mut());
+        Verdict::Reply(vec![format!("ok close {name}")])
+    }
+
+    /// Finish every open session in name order, reporting each final
+    /// estimate — the `finish-all` verb, and the drain path every
+    /// front-end runs on EOF or SIGTERM/SIGINT.
+    pub fn finish_all(&mut self) -> Vec<String> {
+        let sessions = std::mem::take(&mut self.sessions);
+        let n = sessions.len();
+        let mut out = Vec::with_capacity(n + 1);
+        for (name, sess) in sessions {
+            let model = sess.model_name();
+            let r = sess.finish(self.heap.shards_mut());
+            out.push(finish_line(&name, model, &r));
+        }
+        out.push(format!("ok finish-all sessions={n}"));
+        out
+    }
+
+    /// Open sessions right now.
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Shards in the shared heap.
+    pub fn shard_count(&self) -> usize {
+        self.heap.k()
+    }
+
+    /// Live objects across the shared shards (0 once every session is
+    /// finished or closed).
+    pub fn live_objects(&self) -> usize {
+        self.heap.live_objects()
+    }
+
+    /// Aggregate metrics of the shared shards.
+    pub fn heap_metrics(&self) -> HeapMetrics {
+        self.heap.metrics()
+    }
+
+    /// One-line aggregate heap summary (the front-ends print it on
+    /// shutdown).
+    pub fn heap_summary(&self) -> String {
+        self.heap.metrics().summary()
+    }
+}

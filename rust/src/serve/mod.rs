@@ -1,0 +1,43 @@
+//! The inference server: many named [`FilterSession`]s multiplexed over
+//! one shared [`ShardedHeap`], driven by a line protocol.
+//!
+//! The paper's pitch for the lazy-copy platform is *serving*: a
+//! long-running population that ingests observations as they arrive and
+//! answers speculative what-if queries by forking itself in O(particles)
+//! (Murray 2020, §5). This module is that serving surface, split into
+//! two layers:
+//!
+//! - [`engine`] — the transport-agnostic core. A [`ServeEngine`] owns
+//!   the shared sharded heap, the worker thread pool, and a name →
+//!   session map; [`ServeEngine::execute`] runs one protocol line
+//!   (`open` / `obs` / `whatif` / `fork` / `telemetry` / `finish` /
+//!   `close` / `finish-all`) and returns the reply lines. Malformed and
+//!   unknown input produces structured `err ...` replies — a protocol
+//!   line can never panic or kill the server.
+//! - [`net`] — the TCP front-end (`--listen addr:port`): a non-blocking
+//!   accept loop feeding a small worker pool, per-connection line
+//!   framing, and a graceful drain on SIGTERM/SIGINT or a client's
+//!   `finish-all` (every open session is finished and reported before
+//!   exit). The stdin front-end lives in the binary and drives the same
+//!   engine, so both transports speak byte-identical protocol.
+//!
+//! Every model is servable: `open <name> <model>` pairs the model's
+//! empty streaming constructor with its §4 filter method (auxiliary for
+//! PCFG, alive for CRBD, bootstrap elsewhere), and each `obs` line feeds
+//! [`SmcModel::stream_observation`](crate::smc::SmcModel::stream_observation)
+//! before stepping one generation. Because every random draw is keyed by
+//! `(seed, generation, global index)`, a session's replies are
+//! bit-identical to the equivalent batch run no matter how sessions
+//! interleave on the shared heap — the contract the `serve` tests and CI
+//! smoke pin.
+//!
+//! Protocol reference: `DESIGN.md` ("Serving: the network protocol").
+//!
+//! [`FilterSession`]: crate::smc::FilterSession
+//! [`ShardedHeap`]: crate::heap::ShardedHeap
+
+pub mod engine;
+pub mod net;
+
+pub use engine::{serve_method, ServeEngine, Verdict};
+pub use net::{serve_on, serve_tcp};

@@ -1,0 +1,253 @@
+//! TCP front-end for the serve engine: accept loop, connection workers,
+//! and graceful drain.
+//!
+//! Thread shape: one non-blocking acceptor thread queues connections; a
+//! small worker pool owns the per-connection line framing; the *engine
+//! stays on the caller's thread*, consuming one request at a time from a
+//! channel. That keeps the engine single-threaded (exact telemetry
+//! attribution, no locks around the heap) while many clients stay
+//! connected — a client's line is answered before the next queued line
+//! from any client runs, and replies go only to the issuing connection.
+//!
+//! Shutdown: SIGTERM/SIGINT (or any client's `finish-all`) flips a
+//! process-wide flag. Every loop polls it: the acceptor stops accepting,
+//! workers tell their clients `err server draining` and hang up, and the
+//! engine finishes every open session — reporting each final estimate on
+//! the server's stdout — before `serve_tcp` returns. The listener socket
+//! is closed on return, so a drained server can be restarted on the same
+//! address immediately.
+
+use super::engine::{ServeEngine, Verdict};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Process-wide drain flag: set by the signal handlers and by
+/// `finish-all`, polled by every loop. Reset at each `serve_tcp` entry
+/// so a drained server can be restarted in-process.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Connection-handler threads. Each owns one connection at a time;
+/// further connections wait in the accept queue. Engine work is serial
+/// regardless, so more workers would only add idle connections.
+const WORKERS: usize = 4;
+
+/// Poll cadence for the accept loop and the shutdown checks.
+const POLL: Duration = Duration::from_millis(50);
+
+/// One protocol line from a connection, with the channel its reply lines
+/// go back on.
+struct Request {
+    line: String,
+    reply: Sender<Vec<String>>,
+}
+
+/// Flip [`SHUTDOWN`] on SIGTERM/SIGINT so every loop drains gracefully.
+/// Raw `signal(2)` FFI — the crate is dependency-free — with a handler
+/// that only performs an atomic store (async-signal-safe).
+#[cfg(unix)]
+fn install_signal_handlers() {
+    type SigHandler = extern "C" fn(i32);
+    extern "C" {
+        fn signal(signum: i32, handler: SigHandler) -> isize;
+    }
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    unsafe {
+        let _ = signal(2, on_signal); // SIGINT
+        let _ = signal(15, on_signal); // SIGTERM
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// Serve the engine over TCP at `addr` (`host:port`). Blocks until a
+/// client sends `finish-all` or the process receives SIGTERM/SIGINT,
+/// then drains: every open session is finished and reported on stdout,
+/// all threads join, and the listener closes (the address is immediately
+/// reusable). Sessions are server-owned — a client disconnecting leaves
+/// its sessions open for the next connection to pick up by name.
+pub fn serve_tcp(engine: ServeEngine, addr: &str) -> Result<(), String> {
+    let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    serve_on(engine, listener)
+}
+
+/// [`serve_tcp`] over an already-bound listener — bind to port 0 first
+/// to serve on an OS-assigned port (the in-process route the tests
+/// take). One serve loop at a time per process: the drain flag is
+/// process-wide.
+pub fn serve_on(mut engine: ServeEngine, listener: TcpListener) -> Result<(), String> {
+    SHUTDOWN.store(false, Ordering::SeqCst);
+    install_signal_handlers();
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("set_nonblocking: {e}"))?;
+    let local = listener.local_addr().map_err(|e| e.to_string())?;
+    println!("# listening on {local}");
+    let banner = engine.banner();
+
+    let (conn_tx, conn_rx) = channel::<TcpStream>();
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let (req_tx, req_rx) = channel::<Request>();
+
+    let acceptor = std::thread::spawn(move || loop {
+        if SHUTDOWN.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if conn_tx.send(stream).is_err() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(POLL),
+            Err(_) => std::thread::sleep(POLL),
+        }
+    });
+
+    let mut workers = Vec::with_capacity(WORKERS);
+    for _ in 0..WORKERS {
+        let rx = Arc::clone(&conn_rx);
+        let tx = req_tx.clone();
+        let banner = banner.clone();
+        workers.push(std::thread::spawn(move || loop {
+            // Take the lock only to wait for a connection, not while
+            // serving one, so idle workers don't starve the busy ones.
+            let conn = rx
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .recv_timeout(POLL);
+            match conn {
+                Ok(stream) => handle_conn(stream, &tx, &banner),
+                Err(RecvTimeoutError::Timeout) => {
+                    if SHUTDOWN.load(Ordering::SeqCst) {
+                        return;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }));
+    }
+    // The engine loop must see Disconnected once every worker exits.
+    drop(req_tx);
+
+    let mut drained = false;
+    loop {
+        match req_rx.recv_timeout(POLL) {
+            Ok(req) => {
+                let (lines, drain) = match engine.execute(&req.line) {
+                    Verdict::Silent => (Vec::new(), false),
+                    Verdict::Reply(l) => (l, false),
+                    Verdict::Drain(l) => (l, true),
+                };
+                // A send failure means the client hung up mid-reply;
+                // the engine's state change stands either way.
+                let _ = req.reply.send(lines);
+                if drain {
+                    SHUTDOWN.store(true, Ordering::SeqCst);
+                    drained = true;
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if SHUTDOWN.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    SHUTDOWN.store(true, Ordering::SeqCst);
+    // Unprocessed queued requests drop here; their reply channels close
+    // and the owning workers answer `err server draining`.
+    drop(req_rx);
+    if !drained {
+        // Signal-initiated (or accept-loop failure) drain: finish every
+        // session on the server console.
+        for line in engine.finish_all() {
+            println!("{line}");
+        }
+    }
+    println!("heap: {}", engine.heap_summary());
+    for w in workers {
+        let _ = w.join();
+    }
+    let _ = acceptor.join();
+    Ok(())
+}
+
+/// Per-connection framing: read protocol lines, round-trip each through
+/// the engine channel, write the reply lines back. Read timeouts poll
+/// the shutdown flag; partial bytes accumulated before a timeout stay in
+/// the buffer (`read_line` appends), so slow writers are never
+/// corrupted. EOF just closes the connection — sessions are
+/// server-owned and survive for the next connection to address by name.
+fn handle_conn(stream: TcpStream, req_tx: &Sender<Request>, banner: &str) {
+    let mut writer = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    if stream.set_read_timeout(Some(POLL)).is_err() {
+        return;
+    }
+    if writeln!(writer, "{banner}").is_err() {
+        return;
+    }
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    loop {
+        match reader.read_line(&mut buf) {
+            // EOF: drop any partial trailing command (no newline ever
+            // arrived for it) and close.
+            Ok(0) => return,
+            Ok(_) => {
+                // `read_line` returns Ok without a trailing newline only
+                // at EOF: the client hung up mid-command, so the partial
+                // line is dropped, never executed.
+                if !buf.ends_with('\n') {
+                    return;
+                }
+                let line = std::mem::take(&mut buf);
+                let (tx, rx) = channel();
+                let sent = req_tx.send(Request {
+                    line: line.trim().to_string(),
+                    reply: tx,
+                });
+                if sent.is_err() {
+                    let _ = writeln!(writer, "err server draining");
+                    return;
+                }
+                match rx.recv() {
+                    Ok(lines) => {
+                        for l in lines {
+                            if writeln!(writer, "{l}").is_err() {
+                                return;
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        let _ = writeln!(writer, "err server draining");
+                        return;
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                // Timeout poll: partial bytes stay in `buf`.
+                if SHUTDOWN.load(Ordering::SeqCst) {
+                    let _ = writeln!(writer, "err server draining");
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+}

@@ -160,6 +160,30 @@ pub trait SmcModel {
     fn ref_weight(&self, _heap: &mut Heap, _state: &mut Lazy<Self::State>, _t: usize) -> f64 {
         unimplemented!("model does not support conditional SMC")
     }
+
+    /// Append one observation (one generation of data) parsed from the
+    /// serve protocol's whitespace-separated tokens, growing
+    /// [`horizon`](SmcModel::horizon) by exactly one — the incremental
+    /// ingest hook `FilterSession`-based servers drive: push the
+    /// observation, then [`step`](crate::smc::FilterSession::step) the
+    /// session into it.
+    ///
+    /// **Contract:** validate *every* token before mutating, so a
+    /// rejected observation leaves the model untouched (the serve engine
+    /// replies with the error and the session stays consistent), and the
+    /// appended observation must be byte-for-byte what a batch
+    /// construction with the same value would hold — incremental ingest
+    /// is bit-identical to the batch run. The error string is shown to
+    /// the client verbatim; say what shape was expected.
+    ///
+    /// The default declines (models are batch-only until they opt in);
+    /// every built-in model overrides this.
+    fn stream_observation(&mut self, _tokens: &[&str]) -> Result<(), String> {
+        Err(format!(
+            "model '{}' does not accept streamed observations",
+            self.name()
+        ))
+    }
 }
 
 /// Deterministic per-(generation, slot) RNG stream — identical across copy

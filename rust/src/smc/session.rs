@@ -33,8 +33,14 @@
 //!
 //! **Telemetry.** Each barrier feeds a [`Registry`] owned by the session
 //! with deltas of the engine's own counters and of the aggregated
-//! [`HeapMetrics`](crate::heap::HeapMetrics) of the backing shards. The
-//! metric *names* are the stable contract — see [`crate::telemetry`].
+//! [`HeapMetrics`] of the backing shards. Attribution is **exact** even
+//! when many sessions share one shard set: every step snapshots the
+//! aggregate heap counters at entry and diffs at its own barrier, and
+//! [`fork`](FilterSession::fork) attributes its copy work the same way,
+//! so work done by other sessions between this session's operations is
+//! never charged here (sessions on shared shards execute serially — the
+//! `&mut [Heap]` borrow enforces it). The metric *names* are the stable
+//! contract — see [`crate::telemetry`].
 //!
 //! [`run_filter_shards`]: super::run_filter_shards
 //! [`run_particle_gibbs_shards`]: super::run_particle_gibbs_shards
@@ -48,7 +54,7 @@ use super::rebalance::{CostTracker, RebalancePolicy};
 use super::resample::Resampler;
 use crate::config::{RunConfig, Task};
 use crate::heap::{
-    aggregate_metrics, sample_global_peak, shard_of, trim_shards, Heap, Lazy, Payload,
+    aggregate_metrics, sample_global_peak, shard_of, trim_shards, Heap, HeapMetrics, Lazy, Payload,
 };
 use crate::stats::weight_stats;
 use crate::telemetry::{self, Registry};
@@ -106,11 +112,9 @@ pub struct FilterSession<S: Payload> {
     steals: usize,
     attempts: usize,
     telemetry: Registry,
-    // Baselines for delta-feeding the registry from cumulative
-    // shard-lifetime counters (shards outlive sessions).
-    last_transplants: usize,
-    last_lazy: usize,
-    last_eager: usize,
+    // Wall clock of the previous barrier (step-duration histogram).
+    // Heap-counter attribution needs no cross-barrier baseline: each
+    // step diffs the aggregate against its own entry snapshot.
     last_elapsed: f64,
 }
 
@@ -203,9 +207,6 @@ impl<S: Payload> FilterSession<S> {
             steals: 0,
             attempts: 0,
             telemetry,
-            last_transplants: 0,
-            last_lazy: 0,
-            last_eager: 0,
             last_elapsed: 0.0,
         }
     }
@@ -240,10 +241,6 @@ impl<S: Payload> FilterSession<S> {
         self.steals = 0;
         self.attempts = 0;
         self.last_elapsed = 0.0;
-        let agg = aggregate_metrics(shards);
-        self.last_transplants = agg.transplants;
-        self.last_lazy = agg.lazy_copies;
-        self.last_eager = agg.eager_copies;
         sample_global_peak(shards);
     }
 
@@ -282,6 +279,10 @@ impl<S: Payload> FilterSession<S> {
             kalman: ctx.kalman,
             batch: ctx.batch && self.cfg.batch,
         };
+        // Exact attribution: everything the shards do between this
+        // snapshot and this step's barrier is this step's own work (the
+        // exclusive shard borrow serializes sessions).
+        let heap_base = aggregate_metrics(shards);
         let attempts_before = self.attempts;
         let migrations_before = self.migrations;
         let steals_before = self.steals;
@@ -434,6 +435,7 @@ impl<S: Payload> FilterSession<S> {
         self.close_generation(shards, t);
         self.note_barrier(
             shards,
+            &heap_base,
             resampled,
             self.attempts - attempts_before,
             self.migrations - migrations_before,
@@ -467,6 +469,7 @@ impl<S: Payload> FilterSession<S> {
             kalman: ctx.kalman,
             batch: ctx.batch && self.cfg.batch,
         };
+        let heap_base = aggregate_metrics(shards);
         let attempts_before = self.attempts;
         let migrations_before = self.migrations;
         let steals_before = self.steals;
@@ -552,6 +555,7 @@ impl<S: Payload> FilterSession<S> {
         self.close_generation(shards, t);
         self.note_barrier(
             shards,
+            &heap_base,
             true,
             self.attempts - attempts_before,
             self.migrations - migrations_before,
@@ -580,20 +584,25 @@ impl<S: Payload> FilterSession<S> {
 
     /// Feed the telemetry registry from this barrier's deltas. Heap
     /// counters are cumulative over the shards' lifetime (shards outlive
-    /// sessions and are shared with forks), so the session diffs against
-    /// its own previous barrier — see the attribution note in
-    /// [`crate::telemetry`].
+    /// sessions and are shared across sessions), so the step diffs the
+    /// barrier aggregate against `base`, its own entry snapshot —
+    /// attribution is exact under session interleaving because nothing
+    /// else can touch the shards between the snapshot and the barrier
+    /// (the step holds the exclusive borrow throughout). See the
+    /// attribution note in [`crate::telemetry`].
+    #[allow(clippy::too_many_arguments)]
     fn note_barrier(
         &mut self,
         shards: &[Heap],
+        base: &HeapMetrics,
         resampled: bool,
         attempts_d: usize,
         migrations_d: usize,
         steals_d: usize,
     ) {
-        let (elapsed, ess, live_bytes, live_objects, lazy, eager) = {
+        let (elapsed, ess, live_bytes, live_objects) = {
             let s = self.series.last().expect("barrier follows a snapshot");
-            (s.elapsed_s, s.ess, s.live_bytes, s.live_objects, s.lazy_copies, s.eager_copies)
+            (s.elapsed_s, s.ess, s.live_bytes, s.live_objects)
         };
         let agg = aggregate_metrics(shards);
         let tele = &mut self.telemetry;
@@ -604,15 +613,15 @@ impl<S: Payload> FilterSession<S> {
         tele.inc(telemetry::SESSION_STEALS_TOTAL, steals_d as u64);
         tele.inc(
             telemetry::TRANSPLANTS_TOTAL,
-            agg.transplants.saturating_sub(self.last_transplants) as u64,
+            agg.transplants.saturating_sub(base.transplants) as u64,
         );
         tele.inc(
             telemetry::LAZY_COPIES_TOTAL,
-            lazy.saturating_sub(self.last_lazy) as u64,
+            agg.lazy_copies.saturating_sub(base.lazy_copies) as u64,
         );
         tele.inc(
             telemetry::EAGER_COPIES_TOTAL,
-            eager.saturating_sub(self.last_eager) as u64,
+            agg.eager_copies.saturating_sub(base.eager_copies) as u64,
         );
         tele.set_gauge(telemetry::HEAP_COMMITTED_BYTES, agg.slab_committed_bytes as f64);
         tele.set_gauge(telemetry::HEAP_LIVE_BYTES, live_bytes as f64);
@@ -622,9 +631,6 @@ impl<S: Payload> FilterSession<S> {
             telemetry::STEP_WALL_SECONDS,
             (elapsed - self.last_elapsed).max(0.0),
         );
-        self.last_transplants = agg.transplants;
-        self.last_lazy = lazy;
-        self.last_eager = eager;
         self.last_elapsed = elapsed;
     }
 
@@ -645,13 +651,26 @@ impl<S: Payload> FilterSession<S> {
     /// the seed/time cursor; scratch pools start empty (pure storage,
     /// never observable in output).
     pub fn fork(&mut self, shards: &mut [Heap]) -> FilterSession<S> {
+        // Attribute the fork's own copy work (eager modes clone payloads
+        // here; lazy modes only touch handles) to the parent — exactly,
+        // via the same entry-snapshot scheme the steps use.
+        let base = aggregate_metrics(shards);
         let states: Vec<Lazy<S>> = self
             .states
             .iter()
             .enumerate()
             .map(|(i, st)| shards[self.assign[i]].deep_copy(st))
             .collect();
+        let agg = aggregate_metrics(shards);
         self.telemetry.inc(telemetry::SESSION_FORK_TOTAL, 1);
+        self.telemetry.inc(
+            telemetry::LAZY_COPIES_TOTAL,
+            agg.lazy_copies.saturating_sub(base.lazy_copies) as u64,
+        );
+        self.telemetry.inc(
+            telemetry::EAGER_COPIES_TOTAL,
+            agg.eager_copies.saturating_sub(base.eager_copies) as u64,
+        );
         FilterSession {
             cfg: self.cfg.clone(),
             method: self.method,
@@ -680,9 +699,6 @@ impl<S: Payload> FilterSession<S> {
             steals: self.steals,
             attempts: self.attempts,
             telemetry: self.telemetry.clone(),
-            last_transplants: self.last_transplants,
-            last_lazy: self.last_lazy,
-            last_eager: self.last_eager,
             last_elapsed: self.last_elapsed,
         }
     }

@@ -19,11 +19,16 @@
 //!
 //! Heap-level counters (`transplants_total`, copy counters, residency
 //! gauges) aggregate over the *shards backing the session*. Shards are
-//! shared between a session and its forks, so when several sessions
-//! interleave on one `ShardedHeap`, each barrier attributes the delta
-//! since that session's own previous barrier — per-session attribution
-//! is exact while one session steps at a time and approximate under
-//! interleaving, but the sum across sessions is always exact.
+//! shared between sessions and their forks, and sessions on one
+//! `ShardedHeap` execute serially (the exclusive `&mut [Heap]` borrow
+//! enforces it), so each step snapshots the aggregate counters at entry
+//! and attributes exactly the delta to its own barrier; forks attribute
+//! their copy work the same way at fork time. Per-session attribution
+//! is therefore **exact under arbitrary interleaving**: another
+//! session's activity between this session's operations is never
+//! charged here, and the per-session splits sum to the shard totals
+//! (work outside any session operation — e.g. copies forced by ad-hoc
+//! posterior reads between steps — lands in the shard aggregate only).
 
 /// Generations stepped by this session (counter). One increment per
 /// [`step`](crate::smc::FilterSession::step) barrier.

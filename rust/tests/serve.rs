@@ -1,0 +1,530 @@
+//! The serve subsystem's contracts, end to end:
+//!
+//! - **Hostile input**: blank lines, comments, unknown verbs, malformed
+//!   observations, arity errors, double `finish`, commands on closed
+//!   sessions — every one is an `err ...` reply, never a panic, and the
+//!   engine stays consistent and usable afterwards.
+//! - **Streaming = batch, per model**: every model built observation-by-
+//!   observation through `stream_observation` (round-tripped through the
+//!   protocol's string tokens) finishes bit-identical to the batch run
+//!   over the same synthetic data, at K = 1 and K = 3.
+//! - **Interleaving is invisible**: sessions multiplexed over one shared
+//!   sharded heap — through the protocol surface and over real TCP with
+//!   concurrent clients — reply byte-identically to the same scripts run
+//!   solo, and per-session telemetry attribution stays exact.
+
+use lazycow::config::{Model, RunConfig, Task};
+use lazycow::heap::{CopyMode, ShardedHeap};
+use lazycow::models::{Crbd, ListModel, Mot, Pcfg, Rbpf, Vbd, DATA_SEED};
+use lazycow::pool::ThreadPool;
+use lazycow::serve::{serve_method, serve_on, ServeEngine, Verdict};
+use lazycow::smc::{run_filter_shards, FilterSession, Method, RebalancePolicy, SmcModel, StepCtx};
+use lazycow::telemetry;
+
+fn ctx(pool: &ThreadPool) -> StepCtx<'_> {
+    StepCtx { pool, kalman: None, batch: true }
+}
+
+/// A serve template over K = 2 shards (pinned, so tests don't depend on
+/// the host's core count).
+fn template() -> RunConfig {
+    let mut cfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    cfg.shards = 2;
+    cfg
+}
+
+fn engine() -> ServeEngine {
+    ServeEngine::new(template(), ThreadPool::new(2), None)
+}
+
+/// Execute one line, expecting reply lines; returns them.
+fn reply(e: &mut ServeEngine, line: &str) -> Vec<String> {
+    match e.execute(line) {
+        Verdict::Reply(r) | Verdict::Drain(r) => r,
+        Verdict::Silent => panic!("expected a reply to {line:?}, got silence"),
+    }
+}
+
+fn expect_ok(e: &mut ServeEngine, line: &str) -> String {
+    let r = reply(e, line);
+    let last = r.last().expect("non-empty reply").clone();
+    assert!(last.starts_with("ok "), "expected ok for {line:?}, got {last:?}");
+    last
+}
+
+fn expect_err(e: &mut ServeEngine, line: &str) {
+    let r = reply(e, line);
+    assert_eq!(r.len(), 1, "error replies are single lines: {r:?}");
+    assert!(r[0].starts_with("err "), "expected err for {line:?}, got {:?}", r[0]);
+}
+
+/// Run a whole script, collecting every reply line; stops after a drain.
+fn run_script(e: &mut ServeEngine, script: &[String]) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in script {
+        match e.execute(line) {
+            Verdict::Silent => {}
+            Verdict::Reply(r) => out.extend(r),
+            Verdict::Drain(r) => {
+                out.extend(r);
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Drop the ` wall=...s` field (the one nondeterministic reply token).
+fn strip_wall(line: &str) -> String {
+    match line.find(" wall=") {
+        Some(i) => line[..i].to_string(),
+        None => line.to_string(),
+    }
+}
+
+fn strip_walls(lines: &[String]) -> Vec<String> {
+    lines.iter().map(|l| strip_wall(l)).collect()
+}
+
+// ---------------------------------------------------------------------
+// Hostile input (the protocol never kills the process).
+// ---------------------------------------------------------------------
+
+#[test]
+fn hostile_input_yields_errors_not_death() {
+    let mut e = engine();
+
+    // Blank lines and comments are silently skipped.
+    assert!(matches!(e.execute(""), Verdict::Silent));
+    assert!(matches!(e.execute("   \t "), Verdict::Silent));
+    assert!(matches!(e.execute("# a comment"), Verdict::Silent));
+
+    // Unknown verbs and malformed commands are protocol errors.
+    expect_err(&mut e, "bogus");
+    expect_err(&mut e, "obs");
+    expect_err(&mut e, "obs nosession 1.0");
+    expect_err(&mut e, "open");
+    expect_err(&mut e, "open a");
+    expect_err(&mut e, "open a nomodel");
+    expect_err(&mut e, "open a list particles=abc");
+    expect_err(&mut e, "open a list particles=0");
+    expect_err(&mut e, "open a list frobnicate=1");
+    expect_err(&mut e, "open a list particles");
+    assert_eq!(e.session_count(), 0, "failed opens must open nothing");
+
+    // A healthy session, then malformed observations against it.
+    expect_ok(&mut e, "open a list particles=16 seed=7");
+    expect_err(&mut e, "open a list"); // duplicate name
+    expect_err(&mut e, "obs a abc"); // non-numeric
+    expect_err(&mut e, "obs a inf"); // non-finite
+    expect_err(&mut e, "obs a 1.0 2.0"); // wrong arity for list
+    let r = expect_ok(&mut e, "obs a 0.5");
+    assert!(r.contains(" t=1 "), "first accepted obs steps generation 1: {r}");
+    expect_err(&mut e, "whatif a"); // no observation groups
+    expect_err(&mut e, "whatif a oops"); // bad token
+    expect_ok(&mut e, "whatif a 0.1; -0.2");
+    // The failed lines above left the session consistent: the next
+    // accepted observation is generation 2, not something corrupted.
+    let r = expect_ok(&mut e, "obs a -0.25");
+    assert!(r.contains(" t=2 "), "session state survived the errors: {r}");
+    let t = expect_ok(&mut e, "telemetry a");
+    assert_eq!(t, "ok telemetry a");
+
+    // Fork arity and name collisions.
+    expect_err(&mut e, "fork a");
+    expect_err(&mut e, "fork a b c");
+    expect_ok(&mut e, "fork a b");
+    expect_err(&mut e, "fork a b"); // target exists
+    expect_err(&mut e, "fork ghost c"); // source missing
+
+    // Double finish / commands on a closed session.
+    expect_ok(&mut e, "finish b");
+    expect_err(&mut e, "finish b");
+    expect_err(&mut e, "obs b 1.0");
+    expect_err(&mut e, "telemetry b");
+    expect_ok(&mut e, "close a");
+    expect_err(&mut e, "close a");
+    assert_eq!(e.session_count(), 0);
+    assert_eq!(e.live_objects(), 0, "finish/close released every object");
+
+    // The engine is still fully usable.
+    expect_ok(&mut e, "open z vbd particles=8 seed=3");
+    expect_ok(&mut e, "obs z 4");
+    expect_err(&mut e, "obs z -1"); // negative case count
+    let drain = reply(&mut e, "finish-all");
+    assert!(drain.iter().any(|l| l.starts_with("ok finish z ")));
+    assert_eq!(drain.last().unwrap(), "ok finish-all sessions=1");
+    assert_eq!(e.live_objects(), 0);
+}
+
+#[test]
+fn finish_with_zero_steps_reports_instead_of_panicking() {
+    let mut e = engine();
+    expect_ok(&mut e, "open a list particles=8 seed=1");
+    let r = expect_ok(&mut e, "finish a");
+    assert!(r.contains(" steps=0 "), "zero-generation finish is legal: {r}");
+    assert_eq!(e.live_objects(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Streaming construction ≡ batch, for every model, at K = 1 and K = 3.
+// ---------------------------------------------------------------------
+
+/// Feed `streaming` one protocol-token group per generation, stepping a
+/// session each time; the finish must be bit-identical to the batch run
+/// over `synth` (which holds the same observations, built eagerly).
+fn stream_vs_batch<M>(
+    cfg: &RunConfig,
+    synth: &M,
+    mut streaming: M,
+    tokens: &[Vec<String>],
+    k: usize,
+) where
+    M: SmcModel + Sync,
+{
+    let pool = ThreadPool::new(3);
+    let ctx = ctx(&pool);
+    let method = serve_method(cfg.model);
+
+    let mut oracle = ShardedHeap::new(cfg.mode, k);
+    let full = run_filter_shards(synth, cfg, oracle.shards_mut(), &ctx, method);
+
+    let mut heap = ShardedHeap::new(cfg.mode, k);
+    let mut session = FilterSession::begin(&streaming, cfg, heap.shards_mut(), &ctx, method);
+    for group in tokens {
+        let toks: Vec<&str> = group.iter().map(String::as_str).collect();
+        streaming
+            .stream_observation(&toks)
+            .unwrap_or_else(|e| panic!("{} rejected its own tokens: {e}", synth.name()));
+        session.step(&streaming, heap.shards_mut(), &ctx);
+    }
+    let r = session.finish(&streaming, heap.shards_mut());
+    assert_eq!(
+        r.log_evidence.to_bits(),
+        full.log_evidence.to_bits(),
+        "{} K={k}: streamed vs batch evidence",
+        synth.name()
+    );
+    assert_eq!(
+        r.posterior_mean.to_bits(),
+        full.posterior_mean.to_bits(),
+        "{} K={k}: streamed vs batch posterior",
+        synth.name()
+    );
+    assert_eq!(heap.live_objects(), 0, "{} K={k}: leaked", synth.name());
+}
+
+fn small_cfg(model: Model, t: usize) -> RunConfig {
+    let mut cfg = RunConfig::for_model(model, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 24;
+    cfg.n_steps = t;
+    cfg.seed = 77;
+    cfg.shards = 0;
+    cfg
+}
+
+#[test]
+fn every_model_streams_bit_identically_to_batch() {
+    let t = 10;
+    for k in [1usize, 3] {
+        let m = ListModel::synthetic(t, DATA_SEED);
+        let tokens: Vec<Vec<String>> = m.obs.iter().map(|y| vec![y.to_string()]).collect();
+        stream_vs_batch(&small_cfg(Model::List, t), &m, ListModel::streaming(), &tokens, k);
+
+        let m = Rbpf::synthetic(t, DATA_SEED);
+        let tokens: Vec<Vec<String>> = m
+            .obs
+            .iter()
+            .map(|(y1, y2)| vec![y1.to_string(), y2.to_string()])
+            .collect();
+        stream_vs_batch(&small_cfg(Model::Rbpf, t), &m, Rbpf::streaming(), &tokens, k);
+
+        let m = Pcfg::synthetic(t, DATA_SEED);
+        let tokens: Vec<Vec<String>> = m.obs.iter().map(|y| vec![y.to_string()]).collect();
+        stream_vs_batch(&small_cfg(Model::Pcfg, t), &m, Pcfg::streaming(), &tokens, k);
+
+        let m = Vbd::synthetic(t, DATA_SEED);
+        let tokens: Vec<Vec<String>> = m.obs.iter().map(|y| vec![y.to_string()]).collect();
+        stream_vs_batch(&small_cfg(Model::Vbd, t), &m, Vbd::streaming(), &tokens, k);
+
+        let m = Mot::synthetic(t, DATA_SEED);
+        let tokens: Vec<Vec<String>> = m
+            .obs
+            .iter()
+            .map(|scan| scan.iter().map(|(x, y)| format!("{x},{y}")).collect())
+            .collect();
+        stream_vs_batch(&small_cfg(Model::Mot, t), &m, Mot::streaming(), &tokens, k);
+
+        let m = Crbd::synthetic(t + 1, DATA_SEED); // tips → t events
+        let tokens: Vec<Vec<String>> = m
+            .events
+            .iter()
+            .map(|e| vec![e.dt.to_string(), e.lineages.to_string(), e.remaining.to_string()])
+            .collect();
+        stream_vs_batch(&small_cfg(Model::Crbd, t), &m, Crbd::streaming(), &tokens, k);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Interleaving sessions over one shared heap is invisible in replies.
+// ---------------------------------------------------------------------
+
+fn list_script(name: &str, t: usize) -> Vec<String> {
+    let data = ListModel::synthetic(t + 1, DATA_SEED);
+    let mut s = vec![format!("open {name} list particles=32 seed=5")];
+    for y in &data.obs[..t] {
+        s.push(format!("obs {name} {y}"));
+    }
+    s.push(format!("whatif {name} {}", data.obs[t]));
+    s.push(format!("finish {name}"));
+    s
+}
+
+fn vbd_script(name: &str, t: usize) -> Vec<String> {
+    let data = Vbd::synthetic(t, DATA_SEED);
+    let mut s = vec![format!("open {name} vbd particles=24 seed=9")];
+    for y in &data.obs {
+        s.push(format!("obs {name} {y}"));
+    }
+    s.push(format!("finish {name}"));
+    s
+}
+
+/// Reply lines belonging to a session (`ok <verb> <name> ...`).
+fn for_session(lines: &[String], name: &str) -> Vec<String> {
+    lines
+        .iter()
+        .filter(|l| l.split_whitespace().nth(2) == Some(name))
+        .map(|l| strip_wall(l))
+        .collect()
+}
+
+#[test]
+fn interleaved_sessions_reply_identically_to_solo_runs() {
+    let t = 8;
+    let script_a = list_script("a", t);
+    let script_b = vbd_script("b", t);
+
+    let solo_a = run_script(&mut engine(), &script_a);
+    let solo_b = run_script(&mut engine(), &script_b);
+    assert!(solo_a.iter().all(|l| l.starts_with("ok ")), "{solo_a:?}");
+    assert!(solo_b.iter().all(|l| l.starts_with("ok ")), "{solo_b:?}");
+
+    // Interleave the two scripts line by line on one shared heap.
+    let mut mixed = Vec::new();
+    let (mut ia, mut ib) = (script_a.iter(), script_b.iter());
+    loop {
+        let (a, b) = (ia.next(), ib.next());
+        mixed.extend(a.cloned());
+        mixed.extend(b.cloned());
+        if a.is_none() && b.is_none() {
+            break;
+        }
+    }
+    let mut shared = engine();
+    let got = run_script(&mut shared, &mixed);
+    assert_eq!(for_session(&got, "a"), strip_walls(&solo_a));
+    assert_eq!(for_session(&got, "b"), strip_walls(&solo_b));
+    assert_eq!(shared.live_objects(), 0);
+}
+
+#[test]
+fn whatif_and_fork_leave_the_live_session_untouched() {
+    let t = 6;
+    let data = ListModel::synthetic(t, DATA_SEED);
+
+    // Plain run: open + t observations + finish.
+    let mut plain = vec!["open a list particles=32 seed=5".to_string()];
+    for y in &data.obs {
+        plain.push(format!("obs a {y}"));
+    }
+    plain.push("finish a".to_string());
+    let baseline = run_script(&mut engine(), &plain);
+
+    // Same run with speculative traffic injected after every
+    // observation: a what-if and a fork (stepped separately, then
+    // closed). The `a`-session replies must be byte-identical.
+    let mut noisy = vec!["open a list particles=32 seed=5".to_string()];
+    for (i, y) in data.obs.iter().enumerate() {
+        noisy.push(format!("obs a {y}"));
+        noisy.push(format!("whatif a {}; {}", 0.25 * (i as f64 + 1.0), -0.5));
+        noisy.push(format!("fork a spec{i}"));
+        noisy.push(format!("obs spec{i} {}", 1.5 * (i as f64 - 2.0)));
+        noisy.push(format!("close spec{i}"));
+    }
+    noisy.push("finish a".to_string());
+    let mut e = engine();
+    let got = run_script(&mut e, &noisy);
+    assert_eq!(for_session(&got, "a"), strip_walls(&baseline));
+    assert_eq!(e.live_objects(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Telemetry attribution stays exact when sessions share shards.
+// ---------------------------------------------------------------------
+
+#[test]
+fn interleaved_sessions_attribute_telemetry_exactly() {
+    // Deterministic-counter configuration: no rebalancer, no stealing
+    // (steal and greedy-migration counts vary run to run by design).
+    let t_max = 10;
+    let counters = [
+        telemetry::SESSION_STEPS_TOTAL,
+        telemetry::SESSION_RESAMPLES_TOTAL,
+        telemetry::SESSION_ATTEMPTS_TOTAL,
+        telemetry::TRANSPLANTS_TOTAL,
+        telemetry::LAZY_COPIES_TOTAL,
+        telemetry::EAGER_COPIES_TOTAL,
+    ];
+    for k in [1usize, 2] {
+        let model_a = ListModel::synthetic(t_max, 21);
+        let model_b = ListModel::synthetic(t_max, 22);
+        let pool = ThreadPool::new(2);
+        let ctx = ctx(&pool);
+        let mut cfg_a = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+        cfg_a.n_particles = 48;
+        cfg_a.n_steps = t_max;
+        cfg_a.seed = 31;
+        cfg_a.rebalance = RebalancePolicy::Off;
+        cfg_a.steal = false;
+        let mut cfg_b = cfg_a.clone();
+        cfg_b.n_particles = 32;
+        cfg_b.seed = 32;
+
+        // Solo reference: each session alone on a private heap.
+        let solo = |cfg: &RunConfig, model: &ListModel| {
+            let mut heap = ShardedHeap::new(CopyMode::LazySro, k);
+            let mut s =
+                FilterSession::begin(model, cfg, heap.shards_mut(), &ctx, Method::Bootstrap);
+            for _ in 0..t_max {
+                s.step(model, heap.shards_mut(), &ctx);
+            }
+            let c: Vec<u64> = counters.iter().map(|n| s.telemetry().counter(n)).collect();
+            let r = s.finish(model, heap.shards_mut());
+            (c, r)
+        };
+        let (ca_solo, ra_solo) = solo(&cfg_a, &model_a);
+        let (cb_solo, rb_solo) = solo(&cfg_b, &model_b);
+
+        // Interleaved: both sessions alternate steps on one shard set.
+        let mut heap = ShardedHeap::new(CopyMode::LazySro, k);
+        let base = heap.metrics();
+        let mut sa =
+            FilterSession::begin(&model_a, &cfg_a, heap.shards_mut(), &ctx, Method::Bootstrap);
+        let mut sb =
+            FilterSession::begin(&model_b, &cfg_b, heap.shards_mut(), &ctx, Method::Bootstrap);
+        for _ in 0..t_max {
+            sa.step(&model_a, heap.shards_mut(), &ctx);
+            sb.step(&model_b, heap.shards_mut(), &ctx);
+        }
+        let ca: Vec<u64> = counters.iter().map(|n| sa.telemetry().counter(n)).collect();
+        let cb: Vec<u64> = counters.iter().map(|n| sb.telemetry().counter(n)).collect();
+        assert_eq!(ca, ca_solo, "K={k}: session a counters drift under interleaving");
+        assert_eq!(cb, cb_solo, "K={k}: session b counters drift under interleaving");
+
+        // The per-session splits sum to the shared shards' own totals:
+        // nothing double-charged, nothing dropped.
+        let agg = heap.metrics();
+        let tele = |s: &FilterSession<_>, n: &'static str| s.telemetry().counter(n);
+        assert_eq!(
+            tele(&sa, telemetry::TRANSPLANTS_TOTAL) + tele(&sb, telemetry::TRANSPLANTS_TOTAL),
+            (agg.transplants - base.transplants) as u64,
+            "K={k}: transplant split"
+        );
+        assert_eq!(
+            tele(&sa, telemetry::LAZY_COPIES_TOTAL) + tele(&sb, telemetry::LAZY_COPIES_TOTAL),
+            (agg.lazy_copies - base.lazy_copies) as u64,
+            "K={k}: lazy-copy split"
+        );
+        assert_eq!(
+            tele(&sa, telemetry::EAGER_COPIES_TOTAL) + tele(&sb, telemetry::EAGER_COPIES_TOTAL),
+            (agg.eager_copies - base.eager_copies) as u64,
+            "K={k}: eager-copy split"
+        );
+
+        // And interleaving never reaches the outputs.
+        let ra = sa.finish(&model_a, heap.shards_mut());
+        let rb = sb.finish(&model_b, heap.shards_mut());
+        assert_eq!(ra.log_evidence.to_bits(), ra_solo.log_evidence.to_bits());
+        assert_eq!(rb.log_evidence.to_bits(), rb_solo.log_evidence.to_bits());
+        assert_eq!(heap.live_objects(), 0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// The TCP front-end: concurrent clients, one shared heap, clean drain.
+// ---------------------------------------------------------------------
+
+#[test]
+fn tcp_concurrent_clients_match_solo_replies_and_drain_cleanly() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    let t = 8;
+    let script_a = list_script("a", t);
+    let script_b = vbd_script("b", t);
+    let solo_a = run_script(&mut engine(), &script_a);
+    let solo_b = run_script(&mut engine(), &script_b);
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind an OS-assigned port");
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || serve_on(engine(), listener));
+
+    let connect = move || -> (TcpStream, BufReader<TcpStream>) {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut banner = String::new();
+        reader.read_line(&mut banner).expect("banner");
+        assert!(banner.starts_with("# lazycow serve"), "{banner:?}");
+        (stream, reader)
+    };
+
+    // Two concurrent clients, one session each, interleaving at whatever
+    // pace the scheduler gives them.
+    let client = |script: Vec<String>| {
+        std::thread::spawn(move || -> Vec<String> {
+            let (mut w, mut r) = connect();
+            let mut replies = Vec::new();
+            for line in script {
+                writeln!(w, "{line}").expect("send");
+                let mut reply = String::new();
+                r.read_line(&mut reply).expect("reply");
+                replies.push(reply.trim_end().to_string());
+            }
+            replies
+        })
+    };
+    let ha = client(script_a);
+    let hb = client(script_b);
+    let got_a = ha.join().expect("client a");
+    let got_b = hb.join().expect("client b");
+    assert!(got_a.iter().all(|l| l.starts_with("ok ")), "{got_a:?}");
+    assert!(got_b.iter().all(|l| l.starts_with("ok ")), "{got_b:?}");
+    assert_eq!(strip_walls(&got_a), strip_walls(&solo_a));
+    assert_eq!(strip_walls(&got_b), strip_walls(&solo_b));
+
+    // EOF mid-command: a partial line with no newline, then hang up.
+    // The fragment must be dropped, not executed.
+    {
+        let (mut w, _r) = connect();
+        w.write_all(b"open ghost list").expect("partial write");
+    }
+
+    // Drain: both sessions were already finished by their clients, so
+    // finish-all reports zero remaining — proving the ghost fragment
+    // never opened a session — and the server exits cleanly.
+    let (mut w, mut r) = connect();
+    writeln!(w, "finish-all").expect("send finish-all");
+    let last = loop {
+        let mut line = String::new();
+        r.read_line(&mut line).expect("drain reply");
+        let line = line.trim_end().to_string();
+        if line.starts_with("ok finish-all") {
+            break line;
+        }
+    };
+    assert_eq!(last, "ok finish-all sessions=0");
+    server.join().expect("server thread").expect("serve_on result");
+}
