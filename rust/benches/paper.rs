@@ -25,6 +25,10 @@
 //!              identity, per-generation step latency, fork cost vs
 //!              stepped history depth (flat — O(particles), not O(heap)),
 //!              and lazy fork vs eager whole-population copy
+//!   observability  `--trace` span-recorder overhead (LGSS + PCFG at
+//!              K = 4, tracing off vs on, bitwise identity asserted) and
+//!              the cost of rendering a populated telemetry registry
+//!              into the Prometheus exposition format
 //!
 //! Environment: LAZYCOW_REPS (default 5), LAZYCOW_SCALE=default|paper.
 
@@ -55,6 +59,7 @@ fn sections() -> Vec<String> {
             "alloc",
             "batch",
             "session",
+            "observability",
         ]
             .iter()
             .map(|s| s.to_string())
@@ -1172,6 +1177,113 @@ fn bench_session(backend: &Backend) {
     );
 }
 
+/// Observability overhead: the `--trace` span recorder must never change
+/// what is computed and must cost roughly nothing when off. Runs LGSS
+/// and PCFG at K = 4 with tracing off vs on (same seed), asserts the
+/// results bitwise identical, and reports the wall-clock overhead ratio;
+/// then times rendering a populated telemetry registry into the
+/// Prometheus exposition text (the work a `/metrics` scrape amortizes).
+/// `tools/bench_check` gates the identity bit and the overhead ratio.
+fn bench_observability(backend: &Backend) {
+    println!("\n== Observability: trace overhead + exposition render (JSON per cell) ==");
+    let threads = backend.pool.n_threads();
+    for model in [Model::List, Model::Pcfg] {
+        let mut cfg = RunConfig::for_model(model, Task::Inference, CopyMode::LazySro);
+        if paper_scale() {
+            let (n, t_inf, _) = model.paper_scale();
+            cfg.n_particles = n;
+            cfg.n_steps = t_inf;
+        }
+        cfg.shards = 4;
+        cfg.seed = 20200401;
+        let trace_path = std::env::temp_dir().join(format!(
+            "lazycow-bench-trace-{}-{}.jsonl",
+            std::process::id(),
+            model.name()
+        ));
+        let _ = std::fs::remove_file(&trace_path);
+        let mut off_bits = (0u64, 0u64);
+        let off_cell = run_cell(&format!("{}/trace-off", model.name()), reps(), |_| {
+            let mut heap = ShardedHeap::new(cfg.mode, 4);
+            let r = run_model(&cfg, &mut heap, &backend.ctx());
+            off_bits = (r.log_evidence.to_bits(), r.posterior_mean.to_bits());
+            Some(r.global_peak_bytes as f64)
+        });
+        println!("  {}", off_cell.pretty_row());
+        let mut tcfg = cfg.clone();
+        tcfg.trace = Some(trace_path.to_string_lossy().into_owned());
+        let mut on_bits = (0u64, 0u64);
+        let on_cell = run_cell(&format!("{}/trace-on", model.name()), reps(), |_| {
+            let mut heap = ShardedHeap::new(tcfg.mode, 4);
+            let r = run_model(&tcfg, &mut heap, &backend.ctx());
+            on_bits = (r.log_evidence.to_bits(), r.posterior_mean.to_bits());
+            Some(r.global_peak_bytes as f64)
+        });
+        println!("  {}", on_cell.pretty_row());
+        assert_eq!(
+            off_bits,
+            on_bits,
+            "tracing changed the {} output",
+            model.name()
+        );
+        // O_APPEND across reps: total recorded lines, not per-run spans.
+        let trace_lines = std::fs::read_to_string(&trace_path)
+            .map(|s| s.lines().count())
+            .unwrap_or(0);
+        let _ = std::fs::remove_file(&trace_path);
+        println!(
+            "{{\"section\":\"observability\",\"cell\":\"trace\",\"model\":\"{}\",\"shards\":4,\"threads\":{},\"particles\":{},\"steps\":{},\"reps\":{},\"trace_off_s\":{:.6},\"trace_on_s\":{:.6},\"overhead_ratio\":{:.4},\"trace_lines\":{},\"bit_identical\":true}}",
+            model.name(),
+            threads,
+            cfg.n_particles,
+            cfg.n_steps,
+            on_cell.reps,
+            off_cell.time_median,
+            on_cell.time_median,
+            on_cell.time_median / off_cell.time_median.max(1e-9),
+            trace_lines,
+        );
+    }
+
+    // -- exposition render: step a session so every phase histogram and
+    //    counter is populated, then time Registry::render alone. --
+    let t_render = 20usize;
+    let model = ListModel::synthetic(t_render, DATA_SEED);
+    let mut cfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 256;
+    cfg.n_steps = t_render;
+    cfg.shards = 2;
+    cfg.seed = 20200401;
+    let ctx = backend.ctx();
+    let mut sh = ShardedHeap::new(cfg.mode, 2);
+    let mut session = FilterSession::begin(&model, &cfg, sh.shards_mut(), &ctx, Method::Bootstrap);
+    for _ in 0..t_render {
+        session.step(&model, sh.shards_mut(), &ctx);
+    }
+    let mut times = Vec::with_capacity(reps().max(3));
+    let mut series = 0usize;
+    for _ in 0..reps().max(3) {
+        let start = std::time::Instant::now();
+        let text = session.telemetry().render();
+        times.push(start.elapsed().as_secs_f64());
+        series = text.lines().filter(|l| !l.starts_with('#')).count();
+    }
+    let _ = session.finish(&model, sh.shards_mut());
+    let (med, q1, q3) = median_iqr(&times);
+    println!(
+        "  exposition render: {:>7.1} µs for {series} series (one stepped LGSS session)",
+        med * 1e6
+    );
+    println!(
+        "{{\"section\":\"observability\",\"cell\":\"render\",\"series\":{},\"reps\":{},\"render_s\":{:.9},\"render_q1_s\":{:.9},\"render_q3_s\":{:.9}}}",
+        series,
+        times.len(),
+        med,
+        q1,
+        q3,
+    );
+}
+
 /// Resampler ablation: the constant c in the t + cN·logN reachable-set
 /// bound depends on offspring variance — systematic < stratified <
 /// multinomial (Jacob et al. 2015's discussion).
@@ -1238,6 +1350,7 @@ fn main() {
             }
             "batch" => bench_batch(&backend),
             "session" => bench_session(&backend),
+            "observability" => bench_observability(&backend),
             other => eprintln!("unknown section {other}"),
         }
     }

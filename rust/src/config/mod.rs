@@ -194,6 +194,16 @@ pub struct RunConfig {
     /// default) keeps the stdin line protocol. Settable from a config
     /// file (`listen = 127.0.0.1:7878`) or the `--listen` flag.
     pub listen: Option<String>,
+    /// `serve` observability: address (`addr:port`) of the Prometheus
+    /// `GET /metrics` scrape endpoint (`--metrics-addr`). `None` (the
+    /// default) starts no endpoint; the `telemetry` verb still works.
+    pub metrics_addr: Option<String>,
+    /// Per-phase trace sink (`--trace <path>`, config `trace`): every
+    /// generation barrier appends one JSONL span per non-zero phase
+    /// wall. `None` (the default) records nothing. The hard contract:
+    /// tracing never influences computation — outputs are bit-identical
+    /// with the sink on or off (pinned by the differential suite).
+    pub trace: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -220,6 +230,8 @@ impl Default for RunConfig {
             batch: true,
             series: false,
             listen: None,
+            metrics_addr: None,
+            trace: None,
         }
     }
 }
@@ -300,6 +312,18 @@ impl RunConfig {
                 self.listen = match value {
                     "" | "off" | "none" => None,
                     addr => Some(addr.to_string()),
+                }
+            }
+            "metrics-addr" | "metrics_addr" => {
+                self.metrics_addr = match value {
+                    "" | "off" | "none" => None,
+                    addr => Some(addr.to_string()),
+                }
+            }
+            "trace" => {
+                self.trace = match value {
+                    "" | "off" | "none" => None,
+                    path => Some(path.to_string()),
                 }
             }
             _ => return Err(format!("unknown config key {key}")),
@@ -425,6 +449,16 @@ mod tests {
         c.apply("batch", "on").unwrap();
         assert!(c.batch);
         assert!(c.apply("batch", "maybe").is_err());
+        assert_eq!(c.trace, None, "tracing defaults off");
+        c.apply("trace", "/tmp/spans.jsonl").unwrap();
+        assert_eq!(c.trace.as_deref(), Some("/tmp/spans.jsonl"));
+        c.apply("trace", "off").unwrap();
+        assert_eq!(c.trace, None);
+        assert_eq!(c.metrics_addr, None, "metrics endpoint defaults off");
+        c.apply("metrics-addr", "127.0.0.1:9100").unwrap();
+        assert_eq!(c.metrics_addr.as_deref(), Some("127.0.0.1:9100"));
+        c.apply("metrics_addr", "none").unwrap();
+        assert_eq!(c.metrics_addr, None);
         assert!(c.apply("allocator", "arena").is_err());
         assert!(c.apply("steal", "maybe").is_err());
         assert!(c.apply("rebalance", "bogus").is_err());

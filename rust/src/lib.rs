@@ -43,18 +43,20 @@
 //! - [`serve`] is the serving surface (§5): many named sessions over
 //!   one shared sharded heap, driven by a line protocol over stdin or
 //!   TCP ([`serve::ServeEngine`] / [`serve::serve_tcp`]), with
-//!   structured `err` replies and a graceful drain — per session,
-//!   replies stay bit-identical to the batch run however sessions
-//!   interleave.
+//!   structured `err` replies, a graceful drain, and a Prometheus
+//!   `/metrics` scrape endpoint ([`serve::MetricsHub`],
+//!   `--metrics-addr`) — per session, replies stay bit-identical to the
+//!   batch run however sessions interleave.
 //!
 //! Supporting substrate: [`pool`] (scoped static-scheduling executors
 //! and the work-stealing yard), [`rng`] (counter-keyed PCG streams —
 //! the determinism backbone), [`stats`] / [`linalg`] (weight math),
 //! [`ppl`] (delayed-sampling building blocks), [`prop`]
 //! (property-test harness), [`runtime`] (optional PJRT-compiled
-//! kernels), [`telemetry`] (stable-name session metrics — the
-//! monitoring contract of the `serve` subcommand), [`config`] /
-//! [`cli`] / [`bench`] (the launcher).
+//! kernels), [`telemetry`] (stable-name labeled metrics rendered in the
+//! Prometheus exposition format, plus the [`telemetry::trace`] per-phase
+//! span recorder behind `--trace` — the observability contract of the
+//! `serve` subcommand), [`config`] / [`cli`] / [`bench`] (the launcher).
 //!
 //! # A taste of the API
 //!

@@ -3,7 +3,8 @@
 //!
 //! ```text
 //! lazycow run   --model rbpf --task inference --mode lazy-sro --particles 256 --steps 150
-//! lazycow serve [--listen 127.0.0.1:7878]      # multi-session inference server
+//! lazycow serve [--listen 127.0.0.1:7878] [--metrics-addr 127.0.0.1:9100]
+//!               # multi-session inference server (+ Prometheus /metrics)
 //! lazycow fig5  [--reps 5] [--scale paper]     # §4 Figure 5 (inference)
 //! lazycow fig6  [--reps 5]                     # §4 Figure 6 (simulation)
 //! lazycow fig7  --model rbpf                   # §4 Figure 7 (series over t)
@@ -93,6 +94,17 @@ fn cli() -> Cli {
         "",
         "serve: TCP listen address (addr:port); default is the stdin line protocol",
     )
+    .flag(
+        "metrics-addr",
+        "",
+        "serve: Prometheus scrape address (host:port) answering GET /metrics; default off",
+    )
+    .flag(
+        "trace",
+        "",
+        "append per-phase span records (JSONL) to this path; default off (output identical \
+         either way)",
+    )
     .flag("reps", "5", "benchmark repetitions")
     .flag("scale", "default", "scale preset: default|paper")
     .flag("config", "", "config file (key = value lines)")
@@ -178,6 +190,16 @@ fn build_config(args: &lazycow::cli::Args) -> Result<RunConfig, String> {
     if let Some(a) = args.get("listen") {
         if !a.is_empty() {
             cfg.apply("listen", a)?;
+        }
+    }
+    if let Some(a) = args.get("metrics-addr") {
+        if !a.is_empty() {
+            cfg.apply("metrics-addr", a)?;
+        }
+    }
+    if let Some(p) = args.get("trace") {
+        if !p.is_empty() {
+            cfg.apply("trace", p)?;
         }
     }
     cfg.use_xla = !args.get_bool("no-xla");
@@ -300,54 +322,91 @@ fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
 /// of killing the server. With `--listen addr:port` the same protocol
 /// runs over TCP ([`lazycow::serve::serve_tcp`]); otherwise lines come
 /// from stdin or `--input`, and EOF drains every open session like
-/// `finish-all`. Protocol spec: `DESIGN.md`.
+/// `finish-all`. With `--metrics-addr host:port` a scrape responder
+/// answers `GET /metrics` in the Prometheus exposition format for
+/// either front-end. Protocol spec: `DESIGN.md`.
 ///
 /// [`FilterSession`]: lazycow::smc::FilterSession
 fn cmd_serve(args: &lazycow::cli::Args) -> Result<(), String> {
-    use lazycow::serve::{serve_tcp, ServeEngine, Verdict};
-    use std::io::BufRead;
+    use lazycow::serve::{serve_tcp, spawn_metrics, MetricsHub, ServeEngine};
+    use std::sync::Arc;
 
     let cfg = build_config(args)?;
     let Backend { pool, kalman } =
         Backend::new(cfg.threads, cfg.use_xla, args.get_or("artifacts", "artifacts"));
     let listen = cfg.listen.clone();
-    let mut engine = ServeEngine::new(cfg, pool, kalman);
-    if let Some(addr) = listen {
-        return serve_tcp(engine, &addr);
+    let metrics_addr = cfg.metrics_addr.clone();
+    let engine = ServeEngine::new(cfg, pool, kalman);
+    let hub = MetricsHub::new();
+    // Bind the scrape responder before serving so a bad --metrics-addr
+    // fails fast, not after sessions have opened.
+    let responder = match metrics_addr.as_deref() {
+        Some(addr) => Some(spawn_metrics(Arc::clone(&hub), addr)?),
+        None => None,
+    };
+    let input = args.get("input").filter(|f| !f.is_empty());
+    let result = match listen {
+        Some(addr) => serve_tcp(engine, &addr, Arc::clone(&hub)),
+        None => serve_stdin(engine, input, &hub),
+    };
+    hub.shutdown();
+    if let Some(h) = responder {
+        let _ = h.join();
     }
+    result
+}
+
+/// The stdin/`--input` front-end: the same protocol loop as the TCP
+/// server, one line in → reply lines on stdout, feeding the metrics hub
+/// identically (request counters, latency, engine snapshot refresh) so
+/// `/metrics` works over either transport.
+fn serve_stdin(
+    mut engine: lazycow::serve::ServeEngine,
+    input: Option<&str>,
+    hub: &lazycow::serve::MetricsHub,
+) -> Result<(), String> {
+    use lazycow::serve::{error_reason, verb_label, Verdict};
+    use std::io::BufRead;
 
     println!("{}", engine.banner());
-    let reader: Box<dyn BufRead> = match args.get("input") {
-        Some(f) if !f.is_empty() => Box::new(std::io::BufReader::new(
+    hub.set_engine_snapshot(engine.render_metrics());
+    let reader: Box<dyn BufRead> = match input {
+        Some(f) => Box::new(std::io::BufReader::new(
             std::fs::File::open(f).map_err(|e| format!("--input {f}: {e}"))?,
         )),
-        _ => Box::new(std::io::BufReader::new(std::io::stdin())),
+        None => Box::new(std::io::BufReader::new(std::io::stdin())),
     };
     let mut drained = false;
     for line in reader.lines() {
         let line = line.map_err(|e| e.to_string())?;
-        match engine.execute(&line) {
-            Verdict::Silent => {}
-            Verdict::Reply(lines) => {
-                for l in lines {
-                    println!("{l}");
-                }
-            }
-            Verdict::Drain(lines) => {
-                for l in lines {
-                    println!("{l}");
-                }
-                drained = true;
-                break;
-            }
+        let verb = verb_label(&line);
+        let t0 = std::time::Instant::now();
+        let (lines, drain) = match engine.execute(&line) {
+            Verdict::Silent => (Vec::new(), false),
+            Verdict::Reply(l) => (l, false),
+            Verdict::Drain(l) => (l, true),
+        };
+        if verb != "comment" {
+            let reason = lines.last().and_then(|l| error_reason(l));
+            hub.note_request(verb, t0.elapsed().as_secs_f64(), reason);
+        }
+        hub.set_engine_snapshot(engine.render_metrics());
+        for l in lines {
+            println!("{l}");
+        }
+        if drain {
+            drained = true;
+            break;
         }
     }
+    hub.set_draining(true);
     if !drained {
         // EOF without finish-all: drain every open session anyway.
         for l in engine.finish_all() {
             println!("{l}");
         }
     }
+    hub.set_engine_snapshot(engine.render_metrics());
     println!("heap: {}", engine.heap_summary());
     Ok(())
 }

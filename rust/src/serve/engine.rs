@@ -21,6 +21,7 @@ use crate::models::{Crbd, ListModel, Mot, Pcfg, Rbpf, Vbd};
 use crate::pool::ThreadPool;
 use crate::runtime::BatchKalman;
 use crate::smc::{FilterResult, FilterSession, Method, SmcModel, StepCtx};
+use crate::telemetry::{self, Registry};
 use std::collections::BTreeMap;
 
 /// The filter method each model is served with — the same pairing the
@@ -97,6 +98,9 @@ trait Servable {
     fn fork(&mut self, shards: &mut [Heap]) -> Box<dyn Servable>;
     /// Render the session's telemetry registry.
     fn telemetry(&self) -> String;
+    /// Borrow the session's telemetry registry — the `/metrics` scrape
+    /// merges it under `{session,model}` labels.
+    fn registry(&self) -> &Registry;
     /// Final reduction; releases the population.
     fn finish(self: Box<Self>, shards: &mut [Heap]) -> FilterResult;
     /// Abandon without a result; releases the population.
@@ -171,6 +175,10 @@ where
         self.session.telemetry().render()
     }
 
+    fn registry(&self) -> &Registry {
+        self.session.telemetry()
+    }
+
     fn finish(self: Box<Self>, shards: &mut [Heap]) -> FilterResult {
         let ModelSession { model, session } = *self;
         session.finish(&model, shards)
@@ -183,14 +191,18 @@ where
 }
 
 /// Open a streaming session for `model`: the model's empty streaming
-/// constructor paired with its serve method.
+/// constructor paired with its serve method. The session's trace spans
+/// (if `--trace` is live in the template config) are labeled with the
+/// protocol `name` so one JSONL file disentangles interleaved sessions.
 fn open_session(
+    name: &str,
     model: Model,
     cfg: &RunConfig,
     shards: &mut [Heap],
     ctx: &StepCtx,
 ) -> Box<dyn Servable> {
     fn boxed<M>(
+        name: &str,
         model: M,
         cfg: &RunConfig,
         shards: &mut [Heap],
@@ -200,29 +212,83 @@ fn open_session(
     where
         M: SmcModel + Clone + Sync + 'static,
     {
-        let session = FilterSession::begin(&model, cfg, shards, ctx, m);
+        let mut session = FilterSession::begin(&model, cfg, shards, ctx, m);
+        session.trace_label(name);
         Box::new(ModelSession { model, session })
     }
     let m = serve_method(model);
     match model {
-        Model::Rbpf => boxed(Rbpf::streaming(), cfg, shards, ctx, m),
-        Model::Pcfg => boxed(Pcfg::streaming(), cfg, shards, ctx, m),
-        Model::Vbd => boxed(Vbd::streaming(), cfg, shards, ctx, m),
-        Model::Mot => boxed(Mot::streaming(), cfg, shards, ctx, m),
-        Model::Crbd => boxed(Crbd::streaming(), cfg, shards, ctx, m),
-        Model::List => boxed(ListModel::streaming(), cfg, shards, ctx, m),
+        Model::Rbpf => boxed(name, Rbpf::streaming(), cfg, shards, ctx, m),
+        Model::Pcfg => boxed(name, Pcfg::streaming(), cfg, shards, ctx, m),
+        Model::Vbd => boxed(name, Vbd::streaming(), cfg, shards, ctx, m),
+        Model::Mot => boxed(name, Mot::streaming(), cfg, shards, ctx, m),
+        Model::Crbd => boxed(name, Crbd::streaming(), cfg, shards, ctx, m),
+        Model::List => boxed(name, ListModel::streaming(), cfg, shards, ctx, m),
     }
+}
+
+/// Format a wall-clock duration as the stable `wall=<s>` reply token.
+///
+/// Every serve reply that reports elapsed time goes through this one
+/// helper and keeps the token last on its line, so CI strips the only
+/// nondeterministic field with a single `sed 's/ wall=[^ ]*//'`.
+pub fn fmt_wall(s: f64) -> String {
+    format!("wall={s:.3}")
 }
 
 fn finish_line(name: &str, model: &'static str, r: &FilterResult) -> String {
     format!(
-        "ok finish {name} model={model} steps={} log_evidence={:.4} posterior_mean={:.4} \
-         wall={:.3}s",
+        "ok finish {name} model={model} steps={} log_evidence={:.4} posterior_mean={:.4} {}",
         r.series.len(),
         r.log_evidence,
         r.posterior_mean,
-        r.wall_s
+        fmt_wall(r.wall_s)
     )
+}
+
+/// The `{verb=..}` label for [`telemetry::SERVE_REQUESTS_TOTAL`]: the
+/// line's first token when it is a known protocol verb, `"other"`
+/// otherwise — label cardinality is bounded by this fixed list, never by
+/// client input. Blank and `#` comment lines map to `"comment"` (the
+/// front-ends do not count them).
+pub fn verb_label(line: &str) -> &'static str {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return "comment";
+    }
+    match line.split_whitespace().next().unwrap_or("") {
+        "open" => "open",
+        "obs" => "obs",
+        "whatif" => "whatif",
+        "fork" => "fork",
+        "telemetry" => "telemetry",
+        "finish" => "finish",
+        "close" => "close",
+        "finish-all" => "finish-all",
+        _ => "other",
+    }
+}
+
+/// Classify a reply line into the `{reason=..}` label for
+/// [`telemetry::SERVE_ERRORS_TOTAL`], or `None` for non-error replies.
+/// Reasons come from this fixed list (bounded cardinality); anything
+/// unrecognized is `"bad-input"`, the catch-all for model/option
+/// validation errors.
+pub fn error_reason(reply: &str) -> Option<&'static str> {
+    let msg = reply.strip_prefix("err ")?;
+    Some(if msg.starts_with("unknown command") {
+        "unknown-verb"
+    } else if msg.starts_with("no open session") {
+        "no-session"
+    } else if msg.starts_with("session '") {
+        "name-taken"
+    } else if msg.starts_with("usage:") {
+        "usage"
+    } else if msg.starts_with("server draining") {
+        "draining"
+    } else {
+        "bad-input"
+    })
 }
 
 /// The serve core: one shared [`ShardedHeap`], one thread pool, and a
@@ -335,7 +401,7 @@ impl ServeEngine {
             return err("particles must be >= 1");
         }
         let ctx = Self::ctx(&self.pool, self.kalman.as_ref());
-        let sess = open_session(model, &cfg, self.heap.shards_mut(), &ctx);
+        let sess = open_session(name, model, &cfg, self.heap.shards_mut(), &ctx);
         let reply = format!(
             "ok open {name} model={} method={} n={} seed={}",
             model.name(),
@@ -491,5 +557,37 @@ impl ServeEngine {
     /// shutdown).
     pub fn heap_summary(&self) -> String {
         self.heap.metrics().summary()
+    }
+
+    /// Render the engine's fragment of the `/metrics` exposition: every
+    /// open session's registry merged under `{session,model}` labels
+    /// (sessions iterate in `BTreeMap` name order, so renders are
+    /// deterministic for a given engine state) plus per-shard residency
+    /// gauges labeled `{shard="k"}` from the shared heap.
+    ///
+    /// A fresh [`Registry`] is rebuilt per call — sessions keep sole
+    /// ownership of their live registries, and a session that finishes
+    /// or closes simply stops appearing in the next render.
+    pub fn render_metrics(&self) -> String {
+        let mut reg = Registry::new();
+        for (name, sess) in &self.sessions {
+            reg.merge_labeled(
+                sess.registry(),
+                &[("session", name.as_str()), ("model", sess.model_name())],
+            );
+        }
+        for (s, shard) in self.heap.shards().iter().enumerate() {
+            let idx = s.to_string();
+            let labels: [(&'static str, &str); 1] = [("shard", idx.as_str())];
+            let m = &shard.metrics;
+            reg.set_gauge_with(telemetry::SHARD_LIVE_BYTES, &labels, m.live_bytes as f64);
+            reg.set_gauge_with(telemetry::SHARD_LIVE_OBJECTS, &labels, m.live_objects as f64);
+            reg.set_gauge_with(
+                telemetry::SHARD_COMMITTED_BYTES,
+                &labels,
+                m.slab_committed_bytes as f64,
+            );
+        }
+        reg.render()
     }
 }

@@ -1,0 +1,207 @@
+//! Prometheus scrape endpoint for the serve front-ends
+//! (`--metrics-addr host:port`): a dependency-free HTTP/1.1 responder
+//! answering `GET /metrics` with the text exposition format 0.0.4.
+//!
+//! The split mirrors the protocol front-end in [`super::net`]: a
+//! [`MetricsHub`] is the shared state, the responder thread is a
+//! non-blocking accept loop polling a stop flag. The hub holds two
+//! halves of the exposition:
+//!
+//! - the **serve-level registry** (connections, requests by verb, error
+//!   replies by reason, request latency histogram, draining gauge),
+//!   updated by the front-end threads through `note_*` calls; and
+//! - the **engine snapshot**: the engine loop re-renders
+//!   [`ServeEngine::render_metrics`](super::ServeEngine::render_metrics)
+//!   after every executed protocol line and stores the string here, so a
+//!   scrape never touches the engine (no lock around the heap, no
+//!   blocking behind a long `obs` step — a scrape returns the state as
+//!   of the last completed line, which is the only consistent state a
+//!   single-threaded engine has to offer).
+//!
+//! The two halves render disjoint metric families (`serve_*` vs the
+//! session/heap/shard names), so concatenating them is a spec-valid
+//! exposition with one `# HELP`/`# TYPE` header per family. Scrape
+//! connections are deliberately *not* counted in
+//! `serve_connections_total` — that counter tracks protocol clients, and
+//! a monitoring fleet polling `/metrics` every few seconds would drown
+//! the signal.
+
+use crate::telemetry::{self, Registry};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Poll cadence for the responder's non-blocking accept loop and its
+/// stop checks (matches the protocol front-end's).
+const POLL: Duration = Duration::from_millis(50);
+
+/// Shared observability state between the protocol front-ends, the
+/// engine loop, and the `/metrics` responder thread. Cheap to share
+/// (`Arc`), internally locked; every lock section is a few metric
+/// updates or a snapshot swap — never engine work.
+pub struct MetricsHub {
+    /// Serve-level metrics owned by the front-ends.
+    serve: Mutex<Registry>,
+    /// Latest engine render (sessions + shard gauges).
+    engine: Mutex<String>,
+    /// Tells the responder thread to exit its accept loop.
+    stop: AtomicBool,
+}
+
+impl MetricsHub {
+    /// A fresh hub with the draining gauge pre-registered at 0, so the
+    /// gauge is present from the very first scrape.
+    pub fn new() -> Arc<MetricsHub> {
+        let mut serve = Registry::new();
+        serve.set_gauge(telemetry::SERVE_DRAINING, 0.0);
+        Arc::new(MetricsHub {
+            serve: Mutex::new(serve),
+            engine: Mutex::new(String::new()),
+            stop: AtomicBool::new(false),
+        })
+    }
+
+    fn serve_reg(&self) -> std::sync::MutexGuard<'_, Registry> {
+        self.serve.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Count one accepted protocol (line-protocol, not scrape) connection.
+    pub fn note_connection(&self) {
+        self.serve_reg().inc(telemetry::SERVE_CONNECTIONS_TOTAL, 1);
+    }
+
+    /// Count one executed protocol line: the verb-labeled request
+    /// counter, the latency histogram, and — when the reply was an
+    /// error — the reason-labeled error counter. `verb` and `reason`
+    /// come from [`verb_label`](super::verb_label) /
+    /// [`error_reason`](super::error_reason), so label cardinality stays
+    /// bounded.
+    pub fn note_request(&self, verb: &'static str, dur_s: f64, reason: Option<&'static str>) {
+        let mut reg = self.serve_reg();
+        reg.inc_with(telemetry::SERVE_REQUESTS_TOTAL, &[("verb", verb)], 1);
+        reg.observe(telemetry::SERVE_REQUEST_SECONDS, dur_s);
+        if let Some(reason) = reason {
+            reg.inc_with(telemetry::SERVE_ERRORS_TOTAL, &[("reason", reason)], 1);
+        }
+    }
+
+    /// Count one error reply issued outside the engine — the connection
+    /// workers' `err server draining` hang-up lines, which never pass
+    /// through [`note_request`](MetricsHub::note_request).
+    pub fn note_error(&self, reason: &'static str) {
+        self.serve_reg()
+            .inc_with(telemetry::SERVE_ERRORS_TOTAL, &[("reason", reason)], 1);
+    }
+
+    /// Flip the `serve_draining` gauge (1 while sessions are being
+    /// finished after `finish-all`/SIGTERM/SIGINT).
+    pub fn set_draining(&self, on: bool) {
+        self.serve_reg()
+            .set_gauge(telemetry::SERVE_DRAINING, if on { 1.0 } else { 0.0 });
+    }
+
+    /// Store the engine's latest exposition fragment (called by the
+    /// engine loop after each executed line).
+    pub fn set_engine_snapshot(&self, rendered: String) {
+        *self.engine.lock().unwrap_or_else(|e| e.into_inner()) = rendered;
+    }
+
+    /// The full `/metrics` body: serve-level registry render followed by
+    /// the engine snapshot. The two halves use disjoint family names, so
+    /// the concatenation keeps one header per family.
+    pub fn scrape(&self) -> String {
+        let mut out = self.serve_reg().render();
+        out.push_str(&self.engine.lock().unwrap_or_else(|e| e.into_inner()));
+        out
+    }
+
+    /// Ask the responder thread to exit (join its handle afterwards).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+/// Bind `addr` and spawn the `/metrics` responder thread over `hub`.
+/// Returns the join handle; the thread exits after
+/// [`MetricsHub::shutdown`]. Binding errors are reported here, before
+/// any thread exists, so a bad `--metrics-addr` fails fast at startup.
+pub fn spawn_metrics(hub: Arc<MetricsHub>, addr: &str) -> Result<JoinHandle<()>, String> {
+    let listener = TcpListener::bind(addr).map_err(|e| format!("bind metrics {addr}: {e}"))?;
+    serve_metrics_on(hub, listener)
+}
+
+/// [`spawn_metrics`] over an already-bound listener (bind port 0 first
+/// for an OS-assigned port — the route the tests take). Prints the
+/// resolved address as a `# metrics on ...` console line.
+pub fn serve_metrics_on(
+    hub: Arc<MetricsHub>,
+    listener: TcpListener,
+) -> Result<JoinHandle<()>, String> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("metrics set_nonblocking: {e}"))?;
+    let local = listener.local_addr().map_err(|e| e.to_string())?;
+    println!("# metrics on http://{local}/metrics");
+    Ok(std::thread::spawn(move || loop {
+        if hub.stopped() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => handle_scrape(stream, &hub),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(POLL),
+            Err(_) => std::thread::sleep(POLL),
+        }
+    }))
+}
+
+/// Answer one HTTP connection: parse the request line, serve
+/// `GET /metrics` (200, `text/plain; version=0.0.4`), 404 any other
+/// path, 405 any other method. Always `Connection: close` — scrapers
+/// reconnect per poll, and one-shot connections keep the responder a
+/// single accept loop with no keep-alive bookkeeping.
+fn handle_scrape(stream: TcpStream, hub: &MetricsHub) {
+    // A stuck scraper must not wedge the responder thread.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut reader = BufReader::new(stream);
+    let mut request = String::new();
+    if reader.read_line(&mut request).is_err() {
+        return;
+    }
+    // Drain the header block so the peer never sees a reset while still
+    // sending; tolerate EOF/timeout mid-headers.
+    let mut header = String::new();
+    loop {
+        header.clear();
+        match reader.read_line(&mut header) {
+            Ok(0) => break,
+            Ok(_) if header == "\r\n" || header == "\n" => break,
+            Ok(_) => continue,
+            Err(_) => break,
+        }
+    }
+    let mut stream = reader.into_inner();
+    let mut parts = request.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, body) = if method != "GET" {
+        ("405 Method Not Allowed", String::from("method not allowed\n"))
+    } else if path != "/metrics" {
+        ("404 Not Found", String::from("not found; try /metrics\n"))
+    } else {
+        ("200 OK", hub.scrape())
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(response.as_bytes());
+    let _ = stream.flush();
+}

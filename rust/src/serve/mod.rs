@@ -20,6 +20,13 @@
 //!   `finish-all` (every open session is finished and reported before
 //!   exit). The stdin front-end lives in the binary and drives the same
 //!   engine, so both transports speak byte-identical protocol.
+//! - [`metrics_http`] — the Prometheus scrape endpoint
+//!   (`--metrics-addr host:port`): a [`MetricsHub`] shared by the
+//!   front-ends collects serve-level counters (connections, requests by
+//!   verb, errors by reason, request latency, draining) and caches the
+//!   engine's per-session/per-shard exposition fragment after every
+//!   executed line; a dependency-free HTTP/1.1 responder thread answers
+//!   `GET /metrics` from the hub without ever touching the engine.
 //!
 //! Every model is servable: `open <name> <model>` pairs the model's
 //! empty streaming constructor with its §4 filter method (auxiliary for
@@ -37,7 +44,9 @@
 //! [`ShardedHeap`]: crate::heap::ShardedHeap
 
 pub mod engine;
+pub mod metrics_http;
 pub mod net;
 
-pub use engine::{serve_method, ServeEngine, Verdict};
+pub use engine::{error_reason, fmt_wall, serve_method, verb_label, ServeEngine, Verdict};
+pub use metrics_http::{serve_metrics_on, spawn_metrics, MetricsHub};
 pub use net::{serve_on, serve_tcp};

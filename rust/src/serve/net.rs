@@ -17,13 +17,14 @@
 //! is closed on return, so a drained server can be restarted on the same
 //! address immediately.
 
-use super::engine::{ServeEngine, Verdict};
+use super::engine::{error_reason, verb_label, ServeEngine, Verdict};
+use super::metrics_http::MetricsHub;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Process-wide drain flag: set by the signal handlers and by
 /// `finish-all`, polled by every loop. Reset at each `serve_tcp` entry
@@ -72,16 +73,27 @@ fn install_signal_handlers() {}
 /// all threads join, and the listener closes (the address is immediately
 /// reusable). Sessions are server-owned — a client disconnecting leaves
 /// its sessions open for the next connection to pick up by name.
-pub fn serve_tcp(engine: ServeEngine, addr: &str) -> Result<(), String> {
+pub fn serve_tcp(engine: ServeEngine, addr: &str, hub: Arc<MetricsHub>) -> Result<(), String> {
     let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
-    serve_on(engine, listener)
+    serve_on(engine, listener, hub)
 }
 
 /// [`serve_tcp`] over an already-bound listener — bind to port 0 first
 /// to serve on an OS-assigned port (the in-process route the tests
 /// take). One serve loop at a time per process: the drain flag is
 /// process-wide.
-pub fn serve_on(mut engine: ServeEngine, listener: TcpListener) -> Result<(), String> {
+///
+/// The `hub` is the observability side-channel: connections, executed
+/// lines (verb/latency/error labels), and the draining gauge go in, and
+/// the engine's metrics render is re-snapshotted after every executed
+/// line so a concurrent `/metrics` scrape sees the latest completed
+/// state. The hub is always maintained; whether a scrape responder is
+/// actually listening is the caller's business (`--metrics-addr`).
+pub fn serve_on(
+    mut engine: ServeEngine,
+    listener: TcpListener,
+    hub: Arc<MetricsHub>,
+) -> Result<(), String> {
     SHUTDOWN.store(false, Ordering::SeqCst);
     install_signal_handlers();
     listener
@@ -90,6 +102,9 @@ pub fn serve_on(mut engine: ServeEngine, listener: TcpListener) -> Result<(), St
     let local = listener.local_addr().map_err(|e| e.to_string())?;
     println!("# listening on {local}");
     let banner = engine.banner();
+    // Seed the scrape snapshot so a scrape before the first protocol
+    // line sees the (empty-session, all-shard) baseline, not nothing.
+    hub.set_engine_snapshot(engine.render_metrics());
 
     let (conn_tx, conn_rx) = channel::<TcpStream>();
     let conn_rx = Arc::new(Mutex::new(conn_rx));
@@ -115,6 +130,7 @@ pub fn serve_on(mut engine: ServeEngine, listener: TcpListener) -> Result<(), St
         let rx = Arc::clone(&conn_rx);
         let tx = req_tx.clone();
         let banner = banner.clone();
+        let hub = Arc::clone(&hub);
         workers.push(std::thread::spawn(move || loop {
             // Take the lock only to wait for a connection, not while
             // serving one, so idle workers don't starve the busy ones.
@@ -123,7 +139,10 @@ pub fn serve_on(mut engine: ServeEngine, listener: TcpListener) -> Result<(), St
                 .unwrap_or_else(|e| e.into_inner())
                 .recv_timeout(POLL);
             match conn {
-                Ok(stream) => handle_conn(stream, &tx, &banner),
+                Ok(stream) => {
+                    hub.note_connection();
+                    handle_conn(stream, &tx, &banner, &hub)
+                }
                 Err(RecvTimeoutError::Timeout) => {
                     if SHUTDOWN.load(Ordering::SeqCst) {
                         return;
@@ -140,11 +159,18 @@ pub fn serve_on(mut engine: ServeEngine, listener: TcpListener) -> Result<(), St
     loop {
         match req_rx.recv_timeout(POLL) {
             Ok(req) => {
+                let verb = verb_label(&req.line);
+                let t0 = Instant::now();
                 let (lines, drain) = match engine.execute(&req.line) {
                     Verdict::Silent => (Vec::new(), false),
                     Verdict::Reply(l) => (l, false),
                     Verdict::Drain(l) => (l, true),
                 };
+                if verb != "comment" {
+                    let reason = lines.last().and_then(|l| error_reason(l));
+                    hub.note_request(verb, t0.elapsed().as_secs_f64(), reason);
+                }
+                hub.set_engine_snapshot(engine.render_metrics());
                 // A send failure means the client hung up mid-reply;
                 // the engine's state change stands either way.
                 let _ = req.reply.send(lines);
@@ -163,6 +189,7 @@ pub fn serve_on(mut engine: ServeEngine, listener: TcpListener) -> Result<(), St
         }
     }
     SHUTDOWN.store(true, Ordering::SeqCst);
+    hub.set_draining(true);
     // Unprocessed queued requests drop here; their reply channels close
     // and the owning workers answer `err server draining`.
     drop(req_rx);
@@ -173,6 +200,8 @@ pub fn serve_on(mut engine: ServeEngine, listener: TcpListener) -> Result<(), St
             println!("{line}");
         }
     }
+    // Final snapshot: a scrape during teardown sees zero sessions.
+    hub.set_engine_snapshot(engine.render_metrics());
     println!("heap: {}", engine.heap_summary());
     for w in workers {
         let _ = w.join();
@@ -187,7 +216,7 @@ pub fn serve_on(mut engine: ServeEngine, listener: TcpListener) -> Result<(), St
 /// the buffer (`read_line` appends), so slow writers are never
 /// corrupted. EOF just closes the connection — sessions are
 /// server-owned and survive for the next connection to address by name.
-fn handle_conn(stream: TcpStream, req_tx: &Sender<Request>, banner: &str) {
+fn handle_conn(stream: TcpStream, req_tx: &Sender<Request>, banner: &str, hub: &MetricsHub) {
     let mut writer = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -219,6 +248,7 @@ fn handle_conn(stream: TcpStream, req_tx: &Sender<Request>, banner: &str) {
                     reply: tx,
                 });
                 if sent.is_err() {
+                    hub.note_error("draining");
                     let _ = writeln!(writer, "err server draining");
                     return;
                 }
@@ -231,6 +261,7 @@ fn handle_conn(stream: TcpStream, req_tx: &Sender<Request>, banner: &str) {
                         }
                     }
                     Err(_) => {
+                        hub.note_error("draining");
                         let _ = writeln!(writer, "err server draining");
                         return;
                     }
@@ -243,6 +274,7 @@ fn handle_conn(stream: TcpStream, req_tx: &Sender<Request>, banner: &str) {
             {
                 // Timeout poll: partial bytes stay in `buf`.
                 if SHUTDOWN.load(Ordering::SeqCst) {
+                    hub.note_error("draining");
                     let _ = writeln!(writer, "err server draining");
                     return;
                 }

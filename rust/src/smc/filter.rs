@@ -104,6 +104,7 @@ use crate::heap::{
 };
 use crate::pool::{StealYard, ThreadPool};
 use crate::rng::Pcg64;
+use crate::telemetry::trace::{Phase, PhaseWalls};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -414,6 +415,8 @@ fn gather_runs<S>(states: &[Lazy<S>], assign: &[usize], k: usize) -> Vec<Vec<Sha
 struct AssignedTask<'a, S> {
     heap: &'a mut Heap,
     runs: Vec<ShardRun<S>>,
+    /// Worker-clocked wall seconds this shard spent propagating (out).
+    wall_s: f64,
 }
 
 /// Propagate one run of particles on its shard, appending weight
@@ -474,7 +477,10 @@ fn propagate_run<M: SmcModel + Sync>(
 /// [`scoped_cost`]). Each shard splits its work into maximal runs of
 /// consecutive global indices, so `step_population`'s `base` argument
 /// keeps every particle's RNG stream identical regardless of assignment —
-/// the seeded equivalence guarantee.
+/// the seeded equivalence guarantee. `walls` accumulates per-shard
+/// propagate wall time (each worker clocks its own task struct — no
+/// shared state — and the coordinator folds after the join; pure
+/// measurement, never an input to computation).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn propagate_assigned<M: SmcModel + Sync>(
     model: &M,
@@ -487,6 +493,7 @@ pub(crate) fn propagate_assigned<M: SmcModel + Sync>(
     observe: bool,
     ctx: &StepCtx,
     mut raw_cost: Option<&mut [f64]>,
+    walls: &mut PhaseWalls,
 ) {
     debug_assert_eq!(states.len(), lw.len());
     debug_assert_eq!(states.len(), assign.len());
@@ -494,8 +501,10 @@ pub(crate) fn propagate_assigned<M: SmcModel + Sync>(
         // Single shard: the pre-sharding path, with the full batched
         // context (XLA artifact + intra-generation numeric parallelism).
         // The rebalancer never runs at K = 1, so no costs are measured.
+        let t0 = Instant::now();
         let winc = step_run(model, &mut shards[0], states, t, seed, observe, 0, ctx);
         batch::accumulate(lw, &winc);
+        walls.add_shard(Phase::Propagate, 0, t0.elapsed().as_secs_f64());
         return;
     }
     let k = shards.len();
@@ -506,7 +515,9 @@ pub(crate) fn propagate_assigned<M: SmcModel + Sync>(
     // `split_at_mut` of the state/weight slices — no gather/scatter of
     // handles or weights, exactly the pre-rebalancing layout.
     if assign.windows(2).all(|p| p[0] <= p[1]) {
-        propagate_contiguous(model, shards, states, lw, assign, t, seed, observe, ctx, raw_cost);
+        propagate_contiguous(
+            model, shards, states, lw, assign, t, seed, observe, ctx, raw_cost, walls,
+        );
         return;
     }
     // Gather each shard's particles as runs of consecutive indices.
@@ -514,7 +525,7 @@ pub(crate) fn propagate_assigned<M: SmcModel + Sync>(
     let mut tasks: Vec<AssignedTask<'_, M::State>> = shards
         .iter_mut()
         .zip(runs_by_shard)
-        .map(|(heap, runs)| AssignedTask { heap, runs })
+        .map(|(heap, runs)| AssignedTask { heap, runs, wall_s: 0.0 })
         .collect();
     // Split the worker budget across shards so a shard count below the
     // thread count does not shrink total numeric-phase parallelism
@@ -526,6 +537,7 @@ pub(crate) fn propagate_assigned<M: SmcModel + Sync>(
         if task.runs.is_empty() {
             return;
         }
+        let t0 = Instant::now();
         // Each worker owns one shard outright; the shard's numeric phase
         // gets its slice of the thread budget and the shared compiled
         // artifact — the batched runtime dispatch is shard-aware, so
@@ -539,7 +551,11 @@ pub(crate) fn propagate_assigned<M: SmcModel + Sync>(
         for run in task.runs.iter_mut() {
             propagate_run(model, task.heap, run, t, seed, observe, &shard_ctx, want_costs);
         }
+        task.wall_s = t0.elapsed().as_secs_f64();
     });
+    for (s, task) in tasks.iter().enumerate() {
+        walls.add_shard(Phase::Propagate, s, task.wall_s);
+    }
     // Scatter results back in global index order.
     for task in tasks {
         for run in task.runs {
@@ -563,6 +579,8 @@ struct ContigTask<'a, S> {
     chunk: ShardTask<'a, S>,
     /// Exact per-particle measured costs (out; empty unless asked).
     costs: Vec<f64>,
+    /// Worker-clocked wall seconds this shard spent propagating (out).
+    wall_s: f64,
 }
 
 /// The zero-copy specialization of [`propagate_assigned`] for monotone
@@ -580,6 +598,7 @@ fn propagate_contiguous<M: SmcModel + Sync>(
     observe: bool,
     ctx: &StepCtx,
     mut raw_cost: Option<&mut [f64]>,
+    walls: &mut PhaseWalls,
 ) {
     let k = shards.len();
     let want_costs = raw_cost.is_some();
@@ -602,6 +621,7 @@ fn propagate_contiguous<M: SmcModel + Sync>(
         .map(|chunk| ContigTask {
             chunk,
             costs: Vec::new(),
+            wall_s: 0.0,
         })
         .collect();
     let per_shard_threads = (ctx.pool.n_threads() / k).max(1);
@@ -611,6 +631,7 @@ fn propagate_contiguous<M: SmcModel + Sync>(
         if chunk.states.is_empty() {
             return;
         }
+        let t0 = Instant::now();
         let local = ThreadPool::new(per_shard_threads);
         let shard_ctx = StepCtx {
             pool: &local,
@@ -641,7 +662,11 @@ fn propagate_contiguous<M: SmcModel + Sync>(
             );
             batch::accumulate(chunk.lw, &winc);
         }
+        task.wall_s = t0.elapsed().as_secs_f64();
     });
+    for (s, task) in tasks.iter().enumerate() {
+        walls.add_shard(Phase::Propagate, s, task.wall_s);
+    }
     if let Some(rc) = raw_cost.as_deref_mut() {
         for task in tasks {
             let base = task.chunk.base;
@@ -689,6 +714,13 @@ struct StealWork<'a, S> {
     /// Recycled scratch heaps available for this shard's donations
     /// (chunks, slots, and labels retained from earlier generations).
     spares: Vec<Heap>,
+    /// Worker-clocked propagate wall seconds for this shard's own queue,
+    /// donation extraction time excluded (out). A worker's thieving time
+    /// after its queues run dry is added to its group's first shard.
+    wall_s: f64,
+    /// Worker-clocked wall seconds spent extracting donations into
+    /// scratch heaps — the steal-donate phase (out).
+    donate_s: f64,
 }
 
 /// A donated package: tail particles extracted into a scratch heap by the
@@ -836,7 +868,9 @@ fn donate_tail<S: Payload>(
 /// `want_costs`, particles are propagated one scoped call at a time so
 /// every kept particle gets an *exact* measured cost in `run.costs`
 /// (donation extractions are scheduling overhead and deliberately
-/// excluded from any particle's cost).
+/// excluded from any particle's cost). Donation extraction wall time
+/// accumulates into `donate_s` so the caller can report the drain's
+/// propagate wall net of the steal-donate phase.
 #[allow(clippy::too_many_arguments)]
 fn drain_own_queue<M: SmcModel + Sync>(
     model: &M,
@@ -851,6 +885,7 @@ fn drain_own_queue<M: SmcModel + Sync>(
     shard_ctx: &StepCtx,
     want_costs: bool,
     spares: &mut Vec<Heap>,
+    donate_s: &mut f64,
 ) {
     if runs.is_empty() {
         return;
@@ -868,7 +903,9 @@ fn drain_own_queue<M: SmcModel + Sync>(
         loop {
             if yard.wanted() {
                 hungry = true;
+                let d0 = Instant::now();
                 donate_tail(heap, runs, r_idx, i, steal_min, shard, yard, spares);
+                *donate_s += d0.elapsed().as_secs_f64();
             }
             let len_now = runs[r_idx].states.len();
             if i >= len_now {
@@ -956,6 +993,7 @@ pub(crate) fn propagate_stealing<M: SmcModel + Sync>(
     steal_min: usize,
     mut raw_cost: Option<&mut [f64]>,
     scratch_pools: &mut [Vec<Heap>],
+    walls: &mut PhaseWalls,
 ) -> Vec<usize> {
     let k = shards.len();
     debug_assert!(k > 1, "stealing requires multiple shards");
@@ -979,6 +1017,8 @@ pub(crate) fn propagate_stealing<M: SmcModel + Sync>(
             heap,
             runs,
             spares: std::mem::take(&mut scratch_pools[s]),
+            wall_s: 0.0,
+            donate_s: 0.0,
         })
         .collect();
     let per = flat.len().div_ceil(w);
@@ -1004,12 +1044,23 @@ pub(crate) fn propagate_stealing<M: SmcModel + Sync>(
             batch: use_batch,
         };
         for work in group.iter_mut() {
+            let t0 = Instant::now();
+            let mut donate_s = 0.0;
             drain_own_queue(
                 model, work.shard, work.heap, &mut work.runs, &yard, steal_min, t, seed,
-                observe, &shard_ctx, want_costs, &mut work.spares,
+                observe, &shard_ctx, want_costs, &mut work.spares, &mut donate_s,
             );
+            // The drain's wall net of donation extraction is propagate
+            // time; the extraction itself is the steal-donate phase.
+            work.wall_s = (t0.elapsed().as_secs_f64() - donate_s).max(0.0);
+            work.donate_s = donate_s;
         }
         // Own queues drained: turn thief until the generation completes.
+        // Thieved-batch propagation is clocked per batch (park time in
+        // the yard is idle, not work) and attributed to the thief
+        // worker's first shard — stolen work runs wherever a worker is
+        // idle; per-home attribution would misstate who was busy.
+        let mut thief_s = 0.0;
         while let Some(b) = yard.take() {
             let StolenBatch {
                 home,
@@ -1026,7 +1077,9 @@ pub(crate) fn propagate_stealing<M: SmcModel + Sync>(
                 Vec::new()
             };
             let delta = heap.end_scope(scope);
-            let cost = scoped_cost(t0.elapsed().as_secs_f64(), &delta);
+            let batch_wall = t0.elapsed().as_secs_f64();
+            thief_s += batch_wall;
+            let cost = scoped_cost(batch_wall, &delta);
             done.lock().unwrap().push(FinishedBatch {
                 home,
                 base,
@@ -1037,12 +1090,15 @@ pub(crate) fn propagate_stealing<M: SmcModel + Sync>(
                 heap,
             });
         }
+        group[0].wall_s += thief_s;
     });
     // Collect home-side results (and return unused spares to the pools);
     // this also drops the shard borrows.
     let mut home_runs: Vec<Vec<ShardRun<M::State>>> = (0..k).map(|_| Vec::new()).collect();
     for group in groups {
         for mut work in group {
+            walls.add_shard(Phase::Propagate, work.shard, work.wall_s);
+            walls.add_shard(Phase::StealDonate, work.shard, work.donate_s);
             home_runs[work.shard].extend(work.runs);
             scratch_pools[work.shard].append(&mut work.spares);
         }
@@ -1062,6 +1118,8 @@ pub(crate) fn propagate_stealing<M: SmcModel + Sync>(
         /// Drained scratch heaps, recycled for the shard's next
         /// donations.
         recycled: Vec<Heap>,
+        /// Worker-clocked wall seconds draining scratches back (out).
+        wall_s: f64,
     }
     let mut finished = done.into_inner().unwrap();
     finished.sort_by_key(|b| (b.home, b.base));
@@ -1078,9 +1136,14 @@ pub(crate) fn propagate_stealing<M: SmcModel + Sync>(
             back: Vec::new(),
             scratch_peak_sum: 0,
             recycled: Vec::new(),
+            wall_s: 0.0,
         })
         .collect();
     ctx.pool.for_shards(&mut reclaims, |_, rc| {
+        if rc.batches.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
         for b in std::mem::take(&mut rc.batches) {
             let FinishedBatch {
                 base,
@@ -1105,6 +1168,7 @@ pub(crate) fn propagate_stealing<M: SmcModel + Sync>(
             rc.recycled.push(scratch);
             rc.back.push((base, back, winc, hints, cost));
         }
+        rc.wall_s = t0.elapsed().as_secs_f64();
     });
     // Scatter everything in global index order; home-kept particles carry
     // exact scoped costs, stolen batches apportion the thief's batch
@@ -1128,6 +1192,7 @@ pub(crate) fn propagate_stealing<M: SmcModel + Sync>(
         }
     }
     for (s, mut rc_item) in reclaims.into_iter().enumerate() {
+        walls.add_shard(Phase::ScratchReclaim, s, rc_item.wall_s);
         gen_scratch += rc_item.scratch_peak_sum;
         scratch_pools[s].append(&mut rc_item.recycled);
         for (base, back, winc, hints, cost) in rc_item.back {
@@ -1172,7 +1237,9 @@ fn resample_population<S: Payload>(
     anc: &[usize],
     assign: &mut Vec<usize>,
     new_assign: Vec<usize>,
+    walls: &mut PhaseWalls,
 ) -> usize {
+    let t_all = Instant::now();
     let n = states.len();
     debug_assert_eq!(anc.len(), n);
     debug_assert_eq!(new_assign.len(), n);
@@ -1192,6 +1259,7 @@ fn resample_population<S: Payload>(
         .map(|(a, dst)| (assign[a], dst, (a, Lazy::NULL)))
         .collect();
     let n_ops = ops.len();
+    let t_tr = Instant::now();
     {
         let states_ref: &[Lazy<S>] = states.as_slice();
         pool.for_pairs(shards, &mut ops, |op, src, dst| {
@@ -1199,6 +1267,7 @@ fn resample_population<S: Payload>(
             op.1 = src.extract_into(&parent, dst);
         });
     }
+    let transplant_s = t_tr.elapsed().as_secs_f64();
     let transplanted: std::collections::BTreeMap<(usize, usize), Lazy<S>> = ops
         .into_iter()
         .map(|(_, dst, (a, h))| ((a, dst), h))
@@ -1229,6 +1298,11 @@ fn resample_population<S: Payload>(
     for h in shards.iter_mut() {
         h.sweep_memos();
     }
+    // Coordinator spans: the cross-shard transplant round versus
+    // everything else resampling does (offspring copies, releases,
+    // memo sweeps).
+    walls.add(Phase::Transplant, transplant_s);
+    walls.add(Phase::Resample, t_all.elapsed().as_secs_f64() - transplant_s);
     n_ops
 }
 
@@ -1252,8 +1326,10 @@ pub(crate) fn plan_and_resample<S: Payload>(
     assign: &mut Vec<usize>,
     tracker: &mut CostTracker,
     pin_last: Option<usize>,
+    walls: &mut PhaseWalls,
 ) -> usize {
     let k = shards.len();
+    let t_plan = Instant::now();
     let plan = {
         // Migration cost model: the ancestor's reachable-subgraph size —
         // the very set `extract_into` would walk — times a per-object
@@ -1277,8 +1353,9 @@ pub(crate) fn plan_and_resample<S: Payload>(
             *last = s_ref;
         }
     }
+    walls.add(Phase::RebalancePlan, t_plan.elapsed().as_secs_f64());
     tracker.inherit(anc);
-    let executed = resample_population(shards, pool, states, anc, assign, new_assign);
+    let executed = resample_population(shards, pool, states, anc, assign, new_assign, walls);
     if policy == RebalancePolicy::Off {
         0
     } else {
@@ -1328,6 +1405,7 @@ pub(crate) fn alive_generation<M: SmcModel + Sync>(
     t: usize,
     seed: u64,
     mut raw_cost: Option<&mut [f64]>,
+    walls: &mut PhaseWalls,
 ) -> usize {
     let n = states.len();
     let k = shards.len();
@@ -1350,8 +1428,11 @@ pub(crate) fn alive_generation<M: SmcModel + Sync>(
         cost: f64,
     }
     struct AliveTask<'a, S> {
+        shard: usize,
         heap: &'a mut Heap,
         jobs: Vec<AliveJob<S>>,
+        /// Worker-clocked wall seconds for this shard's attempts (out).
+        wall_s: f64,
     }
     // The pending set shrinks in place across rounds, so a long retry
     // tail costs O(pending) per round, not O(n).
@@ -1404,6 +1485,7 @@ pub(crate) fn alive_generation<M: SmcModel + Sync>(
             .into_iter()
             .map(|(a, dst)| (assign[a], dst, (a, Lazy::NULL)))
             .collect();
+        let t_tr = Instant::now();
         {
             let states_ref: &[Lazy<M::State>] = states;
             pool.for_pairs(shards, &mut ops, |op, src, dst| {
@@ -1411,6 +1493,7 @@ pub(crate) fn alive_generation<M: SmcModel + Sync>(
                 op.1 = src.extract_into(&parent, dst);
             });
         }
+        walls.add(Phase::Transplant, t_tr.elapsed().as_secs_f64());
         let imported: std::collections::BTreeMap<(usize, usize), Lazy<M::State>> =
             ops.into_iter().map(|(_, dst, (a, h))| ((a, dst), h)).collect();
         // 3. Shard-parallel attempts.
@@ -1439,10 +1522,17 @@ pub(crate) fn alive_generation<M: SmcModel + Sync>(
         let mut tasks: Vec<AliveTask<'_, M::State>> = shards
             .iter_mut()
             .zip(jobs_by_shard)
-            .filter(|(_, jobs)| !jobs.is_empty())
-            .map(|(heap, jobs)| AliveTask { heap, jobs })
+            .enumerate()
+            .filter(|(_, (_, jobs))| !jobs.is_empty())
+            .map(|(s, (heap, jobs))| AliveTask {
+                shard: s,
+                heap,
+                jobs,
+                wall_s: 0.0,
+            })
             .collect();
         pool.for_shards(&mut tasks, |_, task| {
+            let t0 = Instant::now();
             for job in task.jobs.iter_mut() {
                 let scope = want_costs.then(|| (Instant::now(), task.heap.begin_scope()));
                 let mut child = task.heap.deep_copy(&job.parent);
@@ -1462,7 +1552,11 @@ pub(crate) fn alive_generation<M: SmcModel + Sync>(
                     job.cost = scoped_cost(t0.elapsed().as_secs_f64(), &delta);
                 }
             }
+            task.wall_s = t0.elapsed().as_secs_f64();
         });
+        for task in tasks.iter() {
+            walls.add_shard(Phase::Propagate, task.shard, task.wall_s);
+        }
         // 4. Apply results in (slot, attempt) order — deterministic 10k
         //    bailout; every *counted* attempt's exact cost accumulates on
         //    its slot. Per slot, only attempts up to and including the
@@ -1530,7 +1624,10 @@ pub(crate) fn alive_generation<M: SmcModel + Sync>(
         }
     }
     // Replace the population: install survivors (same assignment), release
-    // parents on their shards, accumulate weights in slot order.
+    // parents on their shards, accumulate weights in slot order. This is
+    // the alive PF's population-replacement step, so it lands in the
+    // resample span.
+    let t_rep = Instant::now();
     for i in 0..n {
         lw[i] += winc_out[i];
         let parent = std::mem::replace(&mut states[i], survivors[i]);
@@ -1539,6 +1636,7 @@ pub(crate) fn alive_generation<M: SmcModel + Sync>(
     for h in shards.iter_mut() {
         h.sweep_memos();
     }
+    walls.add(Phase::Resample, t_rep.elapsed().as_secs_f64());
     total_attempts
 }
 

@@ -57,6 +57,7 @@ use crate::heap::{
     aggregate_metrics, sample_global_peak, shard_of, trim_shards, Heap, HeapMetrics, Lazy, Payload,
 };
 use crate::stats::weight_stats;
+use crate::telemetry::trace::{Phase, PhaseWalls, TraceLog};
 use crate::telemetry::{self, Registry};
 use std::time::Instant;
 
@@ -116,6 +117,16 @@ pub struct FilterSession<S: Payload> {
     // Heap-counter attribution needs no cross-barrier baseline: each
     // step diffs the aggregate against its own entry snapshot.
     last_elapsed: f64,
+    /// Per-phase wall accumulator, reset at the top of every step and
+    /// flushed at the barrier into the `phase_wall_seconds` histograms
+    /// and (when tracing) the trace log. Pure measurement: the clocks
+    /// are read on a single code path whether or not a trace sink is
+    /// attached, so tracing can never reach the output.
+    phase_walls: PhaseWalls,
+    /// Structured trace sink (`--trace`): one JSONL span per non-zero
+    /// phase wall per barrier. `None` (the default, and always on
+    /// forks) records nothing; spans are measured either way.
+    trace: Option<TraceLog>,
 }
 
 impl<S: Payload> FilterSession<S> {
@@ -179,6 +190,15 @@ impl<S: Payload> FilterSession<S> {
         ] {
             telemetry.inc(name, 0);
         }
+        // Trace sink: opening failures are reported, never fatal — a
+        // filter must not die because an observability path is bad.
+        let trace = cfg.trace.as_deref().and_then(|path| match TraceLog::open(path, "run") {
+            Ok(log) => Some(log),
+            Err(e) => {
+                eprintln!("# trace: cannot open {path}: {e}");
+                None
+            }
+        });
         FilterSession {
             cfg: cfg.clone(),
             method,
@@ -208,6 +228,8 @@ impl<S: Payload> FilterSession<S> {
             attempts: 0,
             telemetry,
             last_elapsed: 0.0,
+            phase_walls: PhaseWalls::new(k),
+            trace,
         }
     }
 
@@ -287,17 +309,23 @@ impl<S: Payload> FilterSession<S> {
         let migrations_before = self.migrations;
         let steals_before = self.steals;
         let mut resampled = false;
+        self.phase_walls.reset(self.k);
 
         // --- Resample (inference only; simulation performs no copies). ---
         if self.observe {
             // Fused single pass: normalized weights + log mean weight
             // (the evidence increment, reused below) + ESS.
+            let t_w = Instant::now();
             let (lmean, cur_ess) = weight_stats(&self.lw, &mut self.w);
+            self.phase_walls.add(Phase::Weight, t_w.elapsed().as_secs_f64());
             if cur_ess < self.cfg.ess_threshold * n as f64 {
                 resampled = true;
                 let mut rrng = resample_rng(self.seed, t);
                 // Auxiliary stage: bias resampling by lookahead scores.
                 let ancestors = if self.method == Method::Auxiliary {
+                    // Lookahead scoring is weighting work: it reads the
+                    // model to bias the resampling weights.
+                    let t_la = Instant::now();
                     let mut aux = vec![0.0f64; n];
                     let mut any = false;
                     for (i, aux_i) in aux.iter_mut().enumerate() {
@@ -309,6 +337,7 @@ impl<S: Payload> FilterSession<S> {
                         }
                         self.states[i] = s;
                     }
+                    self.phase_walls.add(Phase::Weight, t_la.elapsed().as_secs_f64());
                     if any {
                         let alw: Vec<f64> =
                             self.lw.iter().zip(&aux).map(|(a, b)| a + b).collect();
@@ -327,6 +356,7 @@ impl<S: Payload> FilterSession<S> {
                             &mut self.assign,
                             &mut self.tracker,
                             None,
+                            &mut self.phase_walls,
                         );
                         for (i, &a) in anc.iter().enumerate() {
                             self.lw[i] = -aux[a];
@@ -350,6 +380,7 @@ impl<S: Payload> FilterSession<S> {
                         &mut self.assign,
                         &mut self.tracker,
                         None,
+                        &mut self.phase_walls,
                     );
                     self.lw.iter_mut().for_each(|x| *x = 0.0);
                 }
@@ -377,6 +408,7 @@ impl<S: Payload> FilterSession<S> {
                     t,
                     self.seed,
                     self.balancing.then_some(&mut self.raw_cost[..]),
+                    &mut self.phase_walls,
                 );
                 if self.balancing {
                     self.tracker.fold(&self.raw_cost);
@@ -399,6 +431,7 @@ impl<S: Payload> FilterSession<S> {
                     self.cfg.steal_min,
                     self.balancing.then_some(&mut self.raw_cost[..]),
                     &mut self.scratch_pools,
+                    &mut self.phase_walls,
                 );
                 if self.balancing {
                     for &i in &stolen {
@@ -424,6 +457,7 @@ impl<S: Payload> FilterSession<S> {
                     self.observe,
                     ctx,
                     self.balancing.then_some(&mut self.raw_cost[..]),
+                    &mut self.phase_walls,
                 );
                 if self.balancing {
                     self.tracker.fold(&self.raw_cost);
@@ -436,6 +470,7 @@ impl<S: Payload> FilterSession<S> {
         self.note_barrier(
             shards,
             &heap_base,
+            t,
             resampled,
             self.attempts - attempts_before,
             self.migrations - migrations_before,
@@ -473,10 +508,13 @@ impl<S: Payload> FilterSession<S> {
         let attempts_before = self.attempts;
         let migrations_before = self.migrations;
         let steals_before = self.steals;
+        self.phase_walls.reset(self.k);
 
         // Resample all but the conditional slot (fused normalize +
         // evidence increment — PG resamples every generation).
+        let t_w = Instant::now();
         let (lmean, _) = weight_stats(&self.lw, &mut self.w);
+        self.phase_walls.add(Phase::Weight, t_w.elapsed().as_secs_f64());
         let mut rrng = resample_rng(self.seed, t);
         let mut anc = self.resampler.ancestors(&mut rrng, &self.w, n);
         if reference.is_some() {
@@ -493,6 +531,7 @@ impl<S: Payload> FilterSession<S> {
             &mut self.assign,
             &mut self.tracker,
             Some(self.s_ref),
+            &mut self.phase_walls,
         );
         self.lw.iter_mut().for_each(|x| *x = 0.0);
 
@@ -515,6 +554,7 @@ impl<S: Payload> FilterSession<S> {
                 self.cfg.steal_min,
                 self.balancing.then_some(&mut self.raw_cost[..split]),
                 &mut self.scratch_pools,
+                &mut self.phase_walls,
             );
             if self.balancing {
                 for &i in &stolen {
@@ -538,6 +578,7 @@ impl<S: Payload> FilterSession<S> {
                 true,
                 ctx,
                 self.balancing.then_some(&mut self.raw_cost[..split]),
+                &mut self.phase_walls,
             );
             if self.balancing {
                 self.tracker.fold(&self.raw_cost[..split]);
@@ -556,6 +597,7 @@ impl<S: Payload> FilterSession<S> {
         self.note_barrier(
             shards,
             &heap_base,
+            t,
             true,
             self.attempts - attempts_before,
             self.migrations - migrations_before,
@@ -569,7 +611,9 @@ impl<S: Payload> FilterSession<S> {
     /// metrics snapshot (Figure 7), decommit barrier.
     fn close_generation(&mut self, shards: &mut [Heap], t: usize) {
         sample_global_peak(shards);
+        let t_w = Instant::now();
         let (_, snap_ess) = weight_stats(&self.lw, &mut self.w);
+        self.phase_walls.add(Phase::Weight, t_w.elapsed().as_secs_f64());
         self.series.push(step_snapshot(shards, t, &self.start, snap_ess));
         // Decommit barrier: with a watermark configured, return
         // fully-empty slab chunks past it to the system allocator so
@@ -578,7 +622,9 @@ impl<S: Payload> FilterSession<S> {
         // resampling spike's chunks are empty by now; bit-identical
         // output either way.
         if let Some(keep) = self.cfg.decommit_watermark {
+            let t_trim = Instant::now();
             trim_shards(shards, keep);
+            self.phase_walls.add(Phase::Trim, t_trim.elapsed().as_secs_f64());
         }
     }
 
@@ -589,12 +635,16 @@ impl<S: Payload> FilterSession<S> {
     /// attribution is exact under session interleaving because nothing
     /// else can touch the shards between the snapshot and the barrier
     /// (the step holds the exclusive borrow throughout). See the
-    /// attribution note in [`crate::telemetry`].
+    /// attribution note in [`crate::telemetry`]. The generation's phase
+    /// walls flush here too — into the `phase_wall_seconds{phase=..}`
+    /// histograms and, when tracing, the JSONL span log, from the *same*
+    /// accumulator, so the two always agree.
     #[allow(clippy::too_many_arguments)]
     fn note_barrier(
         &mut self,
         shards: &[Heap],
         base: &HeapMetrics,
+        t: usize,
         resampled: bool,
         attempts_d: usize,
         migrations_d: usize,
@@ -627,11 +677,41 @@ impl<S: Payload> FilterSession<S> {
         tele.set_gauge(telemetry::HEAP_LIVE_BYTES, live_bytes as f64);
         tele.set_gauge(telemetry::HEAP_LIVE_OBJECTS, live_objects as f64);
         tele.set_gauge(telemetry::ESS_LAST, ess);
+        // Allocator health: committed high-water mark, peak-time
+        // fragmentation, and decommit traffic (deltas — the trim barrier
+        // ran inside this step, so the entry snapshot excludes it).
+        tele.set_gauge(
+            telemetry::HEAP_COMMITTED_PEAK_BYTES,
+            agg.slab_committed_peak_bytes as f64,
+        );
+        tele.set_gauge(telemetry::HEAP_FRAGMENTATION_RATIO, agg.slab_fragmentation());
+        tele.inc(
+            telemetry::HEAP_DECOMMITTED_CHUNKS_TOTAL,
+            agg.decommitted_chunks.saturating_sub(base.decommitted_chunks) as u64,
+        );
+        tele.inc(
+            telemetry::HEAP_DECOMMITTED_BYTES_TOTAL,
+            agg.decommitted_bytes.saturating_sub(base.decommitted_bytes) as u64,
+        );
         tele.observe(
             telemetry::STEP_WALL_SECONDS,
             (elapsed - self.last_elapsed).max(0.0),
         );
         self.last_elapsed = elapsed;
+        // Flush the generation's phase walls: one histogram observation
+        // per non-zero span, and — when a trace sink is attached — one
+        // JSONL line per span from the very same values.
+        let walls = &self.phase_walls;
+        walls.for_each_span(|phase, _, dur| {
+            tele.observe_with(
+                telemetry::PHASE_WALL_SECONDS,
+                &[("phase", phase.name())],
+                dur,
+            );
+        });
+        if let Some(log) = self.trace.as_mut() {
+            log.record_walls(t, walls);
+        }
     }
 
     /// Fork the session: lazily deep-copy the whole population and
@@ -649,7 +729,11 @@ impl<S: Payload> FilterSession<S> {
     /// history (`session_fork_total` counts the lineage's forks and is
     /// incremented on both sides), the parent's wall-clock origin, and
     /// the seed/time cursor; scratch pools start empty (pure storage,
-    /// never observable in output).
+    /// never observable in output). The trace sink is **not** inherited:
+    /// a what-if fork re-executing generations would duplicate spans in
+    /// the parent's log (attach one explicitly with
+    /// [`trace_label`](FilterSession::trace_label) semantics via a fresh
+    /// session if fork traces are wanted).
     pub fn fork(&mut self, shards: &mut [Heap]) -> FilterSession<S> {
         // Attribute the fork's own copy work (eager modes clone payloads
         // here; lazy modes only touch handles) to the parent — exactly,
@@ -700,6 +784,8 @@ impl<S: Payload> FilterSession<S> {
             attempts: self.attempts,
             telemetry: self.telemetry.clone(),
             last_elapsed: self.last_elapsed,
+            phase_walls: PhaseWalls::new(self.k),
+            trace: None,
         }
     }
 
@@ -887,6 +973,15 @@ impl<S: Payload> FilterSession<S> {
     /// the stable name contract).
     pub fn telemetry(&self) -> &Registry {
         &self.telemetry
+    }
+
+    /// Relabel the trace sink's `session` field (the serve engine names
+    /// each session's spans after the open-session name; standalone runs
+    /// keep the default `"run"`). No-op without a sink.
+    pub fn trace_label(&mut self, label: &str) {
+        if let Some(log) = self.trace.as_mut() {
+            log.set_session(label);
+        }
     }
 }
 

@@ -12,6 +12,11 @@
 //! registration order, counters are monotone `u64`s, gauges are plain
 //! `f64`s, and histograms use a fixed logarithmic bucket ladder so two
 //! runs of the same workload produce structurally identical output.
+//! Series may carry label sets (`{session="a",model="list"}`); the
+//! [`Registry::render`] output is the Prometheus text exposition format
+//! 0.0.4 (`# HELP`/`# TYPE` per family, escaped label values, cumulative
+//! `_bucket{le=..}` triplets), so a real Prometheus can scrape it —
+//! the serve subcommand exposes it at `GET /metrics` (`--metrics-addr`).
 //! [`crate::smc::FilterSession`] feeds a registry from
 //! [`HeapMetrics`](crate::heap::HeapMetrics) /
 //! [`StepMetrics`](crate::smc::StepMetrics) deltas at each generation
@@ -29,6 +34,8 @@
 //! charged here, and the per-session splits sum to the shard totals
 //! (work outside any session operation — e.g. copies forced by ad-hoc
 //! posterior reads between steps — lands in the shard aggregate only).
+
+pub mod trace;
 
 /// Generations stepped by this session (counter). One increment per
 /// [`step`](crate::smc::FilterSession::step) barrier.
@@ -57,6 +64,12 @@ pub const SESSION_STEALS_TOTAL: &str = "session_steals_total";
 /// step barriers, including resampling and decommit work.
 pub const STEP_WALL_SECONDS: &str = "step_wall_seconds";
 
+/// Wall seconds per generation-barrier phase (histogram, labeled
+/// `{phase="propagate"|"weight"|"resample"|...}` — the
+/// [`trace::Phase`] names). Fed from the same clock reads the `--trace`
+/// recorder flushes, so trace totals and histogram sums agree.
+pub const PHASE_WALL_SECONDS: &str = "phase_wall_seconds";
+
 /// Cross-shard lineage transplants executed on the session's shards
 /// (counter; delta-fed from [`HeapMetrics`](crate::heap::HeapMetrics)).
 pub const TRANSPLANTS_TOTAL: &str = "transplants_total";
@@ -72,6 +85,19 @@ pub const EAGER_COPIES_TOTAL: &str = "eager_copies_total";
 /// residency-bounded server is held to).
 pub const HEAP_COMMITTED_BYTES: &str = "heap_committed_bytes";
 
+/// High-water committed slab bytes across the session's shards (gauge).
+pub const HEAP_COMMITTED_PEAK_BYTES: &str = "heap_committed_peak_bytes";
+
+/// Slab fragmentation at the committed high-water mark (gauge in
+/// `[0, 1]`): 1 − live-block bytes / committed-peak bytes.
+pub const HEAP_FRAGMENTATION_RATIO: &str = "heap_fragmentation_ratio";
+
+/// Empty slab chunks returned to the OS at decommit barriers (counter).
+pub const HEAP_DECOMMITTED_CHUNKS_TOTAL: &str = "heap_decommitted_chunks_total";
+
+/// Slab bytes returned to the OS at decommit barriers (counter).
+pub const HEAP_DECOMMITTED_BYTES_TOTAL: &str = "heap_decommitted_bytes_total";
+
 /// Live heap payload bytes across the session's shards (gauge).
 pub const HEAP_LIVE_BYTES: &str = "heap_live_bytes";
 
@@ -80,6 +106,70 @@ pub const HEAP_LIVE_OBJECTS: &str = "heap_live_objects";
 
 /// Effective sample size after the latest generation (gauge).
 pub const ESS_LAST: &str = "ess_last";
+
+/// Live payload bytes resident on one shard (gauge, labeled
+/// `{shard="k"}`; rendered by the serve metrics endpoint).
+pub const SHARD_LIVE_BYTES: &str = "shard_live_bytes";
+
+/// Live objects resident on one shard (gauge, labeled `{shard="k"}`).
+pub const SHARD_LIVE_OBJECTS: &str = "shard_live_objects";
+
+/// Slab bytes committed on one shard (gauge, labeled `{shard="k"}`).
+pub const SHARD_COMMITTED_BYTES: &str = "shard_committed_bytes";
+
+/// TCP connections accepted by the serve front-end (counter).
+pub const SERVE_CONNECTIONS_TOTAL: &str = "serve_connections_total";
+
+/// Protocol lines executed by the serve engine (counter, labeled
+/// `{verb="obs"|"open"|...}`; blank/comment lines are not counted).
+pub const SERVE_REQUESTS_TOTAL: &str = "serve_requests_total";
+
+/// Error replies issued by the serve engine (counter, labeled
+/// `{reason="unknown-verb"|"no-session"|...}`).
+pub const SERVE_ERRORS_TOTAL: &str = "serve_errors_total";
+
+/// Engine wall seconds per executed protocol line (histogram).
+pub const SERVE_REQUEST_SECONDS: &str = "serve_request_seconds";
+
+/// 1 while the server is draining (finishing sessions after
+/// `finish-all`/SIGTERM/SIGINT), else 0 (gauge).
+pub const SERVE_DRAINING: &str = "serve_draining";
+
+/// One-line help text for every stable metric name (the `# HELP` line of
+/// the exposition format). Unknown names get a generic line so renders
+/// never fail.
+pub fn help_for(name: &str) -> &'static str {
+    match name {
+        "session_steps_total" => "Generations stepped by this session.",
+        "session_fork_total" => "Populations forked off this session lineage.",
+        "session_resamples_total" => "Resampling barriers executed.",
+        "session_attempts_total" => "Propagation attempts, alive-method retries included.",
+        "session_migrations_total" => "Rebalancer-executed cross-shard migrations.",
+        "session_steals_total" => "Particles donated through the work-stealing yard.",
+        "step_wall_seconds" => "Wall seconds between consecutive step barriers.",
+        "phase_wall_seconds" => "Wall seconds per generation-barrier phase.",
+        "transplants_total" => "Cross-shard lineage transplants executed.",
+        "lazy_copies_total" => "O(1) lazy object copies.",
+        "eager_copies_total" => "Eager object copies.",
+        "heap_committed_bytes" => "Slab bytes committed across the session's shards.",
+        "heap_committed_peak_bytes" => "High-water committed slab bytes.",
+        "heap_fragmentation_ratio" => "1 - live/committed-peak slab bytes.",
+        "heap_decommitted_chunks_total" => "Empty slab chunks returned to the OS.",
+        "heap_decommitted_bytes_total" => "Slab bytes returned to the OS.",
+        "heap_live_bytes" => "Live heap payload bytes.",
+        "heap_live_objects" => "Live heap objects.",
+        "ess_last" => "Effective sample size after the latest generation.",
+        "shard_live_bytes" => "Live payload bytes resident on one shard.",
+        "shard_live_objects" => "Live objects resident on one shard.",
+        "shard_committed_bytes" => "Slab bytes committed on one shard.",
+        "serve_connections_total" => "TCP connections accepted by the serve front-end.",
+        "serve_requests_total" => "Protocol lines executed, by verb.",
+        "serve_errors_total" => "Error replies issued, by reason.",
+        "serve_request_seconds" => "Engine wall seconds per executed protocol line.",
+        "serve_draining" => "1 while the server is draining, else 0.",
+        _ => "lazycow metric.",
+    }
+}
 
 /// Upper bounds (seconds) of the fixed [`Histogram`] bucket ladder:
 /// half-decade log steps from 10 µs to 100 s, plus the implicit +Inf
@@ -126,6 +216,19 @@ impl Histogram {
         }
     }
 
+    /// Fold another histogram into this one: buckets and counts add, the
+    /// max carries. Counter-monotone — merging never decreases anything.
+    fn merge(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
     /// Observations recorded.
     pub fn count(&self) -> u64 {
         self.count
@@ -148,17 +251,77 @@ impl Histogram {
     }
 }
 
+/// One metric series: a stable family name plus an optional label set.
+/// The empty label set is the plain `name value` series.
+#[derive(Clone, Debug)]
+struct Series<T> {
+    name: &'static str,
+    labels: Vec<(&'static str, String)>,
+    value: T,
+}
+
+fn labels_eq(a: &[(&'static str, String)], b: &[(&'static str, &str)]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|((ak, av), (bk, bv))| ak == bk && av == bv)
+}
+
+fn own_labels(labels: &[(&'static str, &str)]) -> Vec<(&'static str, String)> {
+    labels.iter().map(|(k, v)| (*k, (*v).to_string())).collect()
+}
+
+/// Escape a label value per the Prometheus text exposition format:
+/// backslash, double quote, and newline are backslash-escaped.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a label set as `{k="v",...}` (empty string for no labels);
+/// `extra` appends one final pre-escaped pair (the histogram `le`).
+fn render_labels(labels: &[(&'static str, String)], extra: Option<(&str, &str)>) -> String {
+    use std::fmt::Write as _;
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    let mut first = true;
+    for (k, v) in labels {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(out, "{k}=\"{}\"", escape_label(v));
+    }
+    if let Some((k, v)) = extra {
+        if !first {
+            out.push(',');
+        }
+        let _ = write!(out, "{k}=\"{v}\"");
+    }
+    out.push('}');
+    out
+}
+
 /// A deterministic, dependency-free metric registry: named counters,
-/// gauges, and histograms, rendered in registration order in a
-/// Prometheus-style text format.
+/// gauges, and histograms — optionally labeled — rendered in
+/// registration order in the Prometheus text exposition format
+/// (`# HELP`/`# TYPE` per family, label escaping, cumulative
+/// `_bucket`/`_sum`/`_count` triplets).
 ///
 /// `Clone` is deliberate: a forked session clones its parent's registry
 /// so the fork's telemetry continues the lineage's history.
 #[derive(Clone, Debug, Default)]
 pub struct Registry {
-    counters: Vec<(&'static str, u64)>,
-    gauges: Vec<(&'static str, f64)>,
-    histograms: Vec<(&'static str, Histogram)>,
+    counters: Vec<Series<u64>>,
+    gauges: Vec<Series<f64>>,
+    histograms: Vec<Series<Histogram>>,
 }
 
 impl Registry {
@@ -169,75 +332,229 @@ impl Registry {
 
     /// Add `by` to the named counter, registering it at zero on first use.
     pub fn inc(&mut self, name: &'static str, by: u64) {
-        match self.counters.iter_mut().find(|(n, _)| *n == name) {
-            Some((_, v)) => *v += by,
-            None => self.counters.push((name, by)),
+        self.inc_with(name, &[], by);
+    }
+
+    /// Add `by` to the named counter series with this label set.
+    pub fn inc_with(&mut self, name: &'static str, labels: &[(&'static str, &str)], by: u64) {
+        match self
+            .counters
+            .iter_mut()
+            .find(|s| s.name == name && labels_eq(&s.labels, labels))
+        {
+            Some(s) => s.value += by,
+            None => self.counters.push(Series {
+                name,
+                labels: own_labels(labels),
+                value: by,
+            }),
         }
     }
 
     /// Set the named gauge, registering it on first use.
     pub fn set_gauge(&mut self, name: &'static str, v: f64) {
-        match self.gauges.iter_mut().find(|(n, _)| *n == name) {
-            Some((_, g)) => *g = v,
-            None => self.gauges.push((name, v)),
+        self.set_gauge_with(name, &[], v);
+    }
+
+    /// Set the named gauge series with this label set.
+    pub fn set_gauge_with(&mut self, name: &'static str, labels: &[(&'static str, &str)], v: f64) {
+        match self
+            .gauges
+            .iter_mut()
+            .find(|s| s.name == name && labels_eq(&s.labels, labels))
+        {
+            Some(s) => s.value = v,
+            None => self.gauges.push(Series {
+                name,
+                labels: own_labels(labels),
+                value: v,
+            }),
         }
     }
 
     /// Record one observation into the named histogram, registering it on
     /// first use.
     pub fn observe(&mut self, name: &'static str, v: f64) {
-        if let Some((_, h)) = self.histograms.iter_mut().find(|(n, _)| *n == name) {
-            h.observe(v);
+        self.observe_with(name, &[], v);
+    }
+
+    /// Record one observation into the named histogram series with this
+    /// label set.
+    pub fn observe_with(&mut self, name: &'static str, labels: &[(&'static str, &str)], v: f64) {
+        if let Some(s) = self
+            .histograms
+            .iter_mut()
+            .find(|s| s.name == name && labels_eq(&s.labels, labels))
+        {
+            s.value.observe(v);
             return;
         }
         let mut h = Histogram::new();
         h.observe(v);
-        self.histograms.push((name, h));
+        self.histograms.push(Series {
+            name,
+            labels: own_labels(labels),
+            value: h,
+        });
     }
 
-    /// Current value of a counter (0 when never incremented).
+    /// Current value of an unlabeled counter (0 when never incremented).
     pub fn counter(&self, name: &str) -> u64 {
+        self.counter_with(name, &[])
+    }
+
+    /// Current value of a labeled counter series (0 when absent).
+    pub fn counter_with(&self, name: &str, labels: &[(&'static str, &str)]) -> u64 {
         self.counters
             .iter()
-            .find(|(n, _)| *n == name)
-            .map(|(_, v)| *v)
+            .find(|s| s.name == name && labels_eq(&s.labels, labels))
+            .map(|s| s.value)
             .unwrap_or(0)
     }
 
-    /// Current value of a gauge, when set.
+    /// Current value of an unlabeled gauge, when set.
     pub fn gauge(&self, name: &str) -> Option<f64> {
-        self.gauges.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+        self.gauge_with(name, &[])
     }
 
-    /// The named histogram, when any observation has been recorded.
+    /// Current value of a labeled gauge series, when set.
+    pub fn gauge_with(&self, name: &str, labels: &[(&'static str, &str)]) -> Option<f64> {
+        self.gauges
+            .iter()
+            .find(|s| s.name == name && labels_eq(&s.labels, labels))
+            .map(|s| s.value)
+    }
+
+    /// The named unlabeled histogram, when any observation exists.
     pub fn histogram(&self, name: &str) -> Option<&Histogram> {
-        self.histograms.iter().find(|(n, _)| *n == name).map(|(_, h)| h)
+        self.histogram_with(name, &[])
     }
 
-    /// Render every metric in registration order, Prometheus text style:
-    /// `name value` lines for counters and gauges, cumulative
-    /// `name_bucket{le="..."}` lines plus `_sum`/`_count` for histograms.
+    /// The named labeled histogram series, when any observation exists.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        labels: &[(&'static str, &str)],
+    ) -> Option<&Histogram> {
+        self.histograms
+            .iter()
+            .find(|s| s.name == name && labels_eq(&s.labels, labels))
+            .map(|s| &s.value)
+    }
+
+    /// Fold `other` into this registry series-by-series: counters add,
+    /// gauges take `other`'s value, histograms merge bucket-wise. Merging
+    /// never decreases a counter (monotonicity is pinned by a test).
+    pub fn merge(&mut self, other: &Registry) {
+        self.merge_labeled(other, &[]);
+    }
+
+    /// Fold `other` into this registry with `extra` labels appended to
+    /// every incoming series — how the serve scrape endpoint aggregates
+    /// per-session registries under `{session=..,model=..}`.
+    pub fn merge_labeled(&mut self, other: &Registry, extra: &[(&'static str, &str)]) {
+        let compose = |labels: &[(&'static str, String)]| -> Vec<(&'static str, &str)> {
+            let mut all: Vec<(&'static str, &str)> =
+                labels.iter().map(|(k, v)| (*k, v.as_str())).collect();
+            all.extend(extra.iter().copied());
+            all
+        };
+        for s in &other.counters {
+            self.inc_with(s.name, &compose(&s.labels), s.value);
+        }
+        for s in &other.gauges {
+            self.set_gauge_with(s.name, &compose(&s.labels), s.value);
+        }
+        for s in &other.histograms {
+            let labels = compose(&s.labels);
+            if let Some(t) = self
+                .histograms
+                .iter_mut()
+                .find(|t| t.name == s.name && labels_eq(&t.labels, &labels))
+            {
+                t.value.merge(&s.value);
+            } else {
+                self.histograms.push(Series {
+                    name: s.name,
+                    labels: own_labels(&labels),
+                    value: s.value.clone(),
+                });
+            }
+        }
+    }
+
+    /// Render every metric in the Prometheus text exposition format
+    /// (0.0.4): one `# HELP`/`# TYPE` header per family in
+    /// first-registration order, then its series in registration order —
+    /// plain `name value` lines for unlabeled counters and gauges,
+    /// `name{k="v"} value` for labeled ones, cumulative
+    /// `name_bucket{..,le="..."}` plus `_sum`/`_count` per histogram
+    /// series. Byte-deterministic for a given registry state.
     pub fn render(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
-        for (name, v) in &self.counters {
-            let _ = writeln!(out, "{name} {v}");
-        }
-        for (name, v) in &self.gauges {
-            let _ = writeln!(out, "{name} {v}");
-        }
-        for (name, h) in &self.histograms {
-            let mut cum = 0u64;
-            for (ub, c) in HISTOGRAM_BUCKETS_S.iter().zip(&h.buckets) {
-                cum += c;
-                let _ = writeln!(out, "{name}_bucket{{le=\"{ub}\"}} {cum}");
+        let mut seen: Vec<&'static str> = Vec::new();
+        let mut header = |out: &mut String, name: &'static str, kind: &str| {
+            if !seen.contains(&name) {
+                seen.push(name);
+                let _ = writeln!(out, "# HELP {name} {}", help_for(name));
+                let _ = writeln!(out, "# TYPE {name} {kind}");
             }
-            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", h.count);
-            let _ = writeln!(out, "{name}_sum {}", h.sum);
-            let _ = writeln!(out, "{name}_count {}", h.count);
+        };
+        for name in family_order(&self.counters) {
+            header(&mut out, name, "counter");
+            for s in self.counters.iter().filter(|s| s.name == name) {
+                let _ = writeln!(out, "{name}{} {}", render_labels(&s.labels, None), s.value);
+            }
+        }
+        for name in family_order(&self.gauges) {
+            header(&mut out, name, "gauge");
+            for s in self.gauges.iter().filter(|s| s.name == name) {
+                let _ = writeln!(out, "{name}{} {}", render_labels(&s.labels, None), s.value);
+            }
+        }
+        for name in family_order(&self.histograms) {
+            header(&mut out, name, "histogram");
+            for s in self.histograms.iter().filter(|s| s.name == name) {
+                let h = &s.value;
+                let mut cum = 0u64;
+                for (ub, c) in HISTOGRAM_BUCKETS_S.iter().zip(&h.buckets) {
+                    cum += c;
+                    let le = format!("{ub}");
+                    let _ = writeln!(
+                        out,
+                        "{name}_bucket{} {cum}",
+                        render_labels(&s.labels, Some(("le", &le)))
+                    );
+                }
+                let _ = writeln!(
+                    out,
+                    "{name}_bucket{} {}",
+                    render_labels(&s.labels, Some(("le", "+Inf"))),
+                    h.count
+                );
+                let _ = writeln!(out, "{name}_sum{} {}", render_labels(&s.labels, None), h.sum);
+                let _ = writeln!(
+                    out,
+                    "{name}_count{} {}",
+                    render_labels(&s.labels, None),
+                    h.count
+                );
+            }
         }
         out
     }
+}
+
+/// Unique family names in first-registration order.
+fn family_order<T>(series: &[Series<T>]) -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = Vec::new();
+    for s in series {
+        if !names.contains(&s.name) {
+            names.push(s.name);
+        }
+    }
+    names
 }
 
 #[cfg(test)]
@@ -275,6 +592,23 @@ mod tests {
     }
 
     #[test]
+    fn histogram_bucket_edges_land_in_their_le_bucket() {
+        // An observation exactly on a ladder bound belongs to that
+        // bucket (`le` is inclusive), and the cumulative render counts it
+        // there and in every wider bucket.
+        let mut r = Registry::new();
+        r.observe(STEP_WALL_SECONDS, 1e-3); // exactly bucket index 4
+        r.observe(STEP_WALL_SECONDS, 1e-3 + 1e-9); // just over: index 5
+        let h = r.histogram(STEP_WALL_SECONDS).unwrap();
+        assert_eq!(h.buckets()[4], 1, "edge observation is inclusive");
+        assert_eq!(h.buckets()[5], 1);
+        let text = r.render();
+        assert!(text.contains("step_wall_seconds_bucket{le=\"0.001\"} 1"));
+        assert!(text.contains("step_wall_seconds_bucket{le=\"0.00316\"} 2"));
+        assert!(text.contains("step_wall_seconds_bucket{le=\"+Inf\"} 2"));
+    }
+
+    #[test]
     fn render_is_deterministic_and_complete() {
         let mut r = Registry::new();
         r.inc(SESSION_STEPS_TOTAL, 5);
@@ -287,6 +621,85 @@ mod tests {
         assert!(a.contains("ess_last 31.5"));
         assert!(a.contains("step_wall_seconds_count 1"));
         assert!(a.contains("step_wall_seconds_bucket{le=\"+Inf\"} 1"));
+    }
+
+    #[test]
+    fn render_emits_exposition_headers_once_per_family() {
+        let mut r = Registry::new();
+        r.inc_with(SERVE_REQUESTS_TOTAL, &[("verb", "obs")], 2);
+        r.inc_with(SERVE_REQUESTS_TOTAL, &[("verb", "open")], 1);
+        r.set_gauge(SERVE_DRAINING, 0.0);
+        r.observe(SERVE_REQUEST_SECONDS, 0.002);
+        let text = r.render();
+        assert_eq!(text.matches("# HELP serve_requests_total").count(), 1);
+        assert_eq!(text.matches("# TYPE serve_requests_total counter").count(), 1);
+        assert!(text.contains("serve_requests_total{verb=\"obs\"} 2"));
+        assert!(text.contains("serve_requests_total{verb=\"open\"} 1"));
+        assert!(text.contains("# TYPE serve_draining gauge"));
+        assert!(text.contains("# TYPE serve_request_seconds histogram"));
+        // HELP precedes TYPE precedes the series.
+        let help = text.find("# HELP serve_requests_total").unwrap();
+        let ty = text.find("# TYPE serve_requests_total").unwrap();
+        let series = text.find("serve_requests_total{").unwrap();
+        assert!(help < ty && ty < series);
+    }
+
+    #[test]
+    fn labeled_renders_are_byte_identical_across_runs() {
+        let build = || {
+            let mut r = Registry::new();
+            r.inc_with(SESSION_STEPS_TOTAL, &[("session", "a"), ("model", "list")], 3);
+            r.inc_with(SESSION_STEPS_TOTAL, &[("session", "b"), ("model", "rbpf")], 7);
+            r.set_gauge_with(SHARD_LIVE_BYTES, &[("shard", "0")], 128.0);
+            r.set_gauge_with(SHARD_LIVE_BYTES, &[("shard", "1")], 256.0);
+            r.observe_with(PHASE_WALL_SECONDS, &[("phase", "propagate")], 0.02);
+            r.render()
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a, b, "same registrations must render byte-identically");
+        assert!(a.contains("session_steps_total{session=\"a\",model=\"list\"} 3"));
+        assert!(a.contains("shard_live_bytes{shard=\"1\"} 256"));
+        assert!(a.contains("phase_wall_seconds_bucket{phase=\"propagate\",le=\"+Inf\"} 1"));
+        assert!(a.contains("phase_wall_seconds_sum{phase=\"propagate\"} 0.02"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut r = Registry::new();
+        r.inc_with(SERVE_ERRORS_TOTAL, &[("reason", "a\"b\\c\nd")], 1);
+        let text = r.render();
+        assert!(text.contains("serve_errors_total{reason=\"a\\\"b\\\\c\\nd\"} 1"));
+    }
+
+    #[test]
+    fn merge_is_counter_monotone_and_histogram_additive() {
+        let mut a = Registry::new();
+        a.inc(SESSION_STEPS_TOTAL, 5);
+        a.observe(STEP_WALL_SECONDS, 0.01);
+        a.set_gauge(ESS_LAST, 10.0);
+        let mut b = Registry::new();
+        b.inc(SESSION_STEPS_TOTAL, 2);
+        b.inc(SESSION_FORK_TOTAL, 1);
+        b.observe(STEP_WALL_SECONDS, 1.0);
+        b.set_gauge(ESS_LAST, 20.0);
+        let before = a.counter(SESSION_STEPS_TOTAL);
+        a.merge(&b);
+        assert!(a.counter(SESSION_STEPS_TOTAL) >= before, "merge never decreases a counter");
+        assert_eq!(a.counter(SESSION_STEPS_TOTAL), 7);
+        assert_eq!(a.counter(SESSION_FORK_TOTAL), 1);
+        assert_eq!(a.gauge(ESS_LAST), Some(20.0), "gauges take the incoming value");
+        let h = a.histogram(STEP_WALL_SECONDS).unwrap();
+        assert_eq!(h.count(), 2);
+        assert!((h.sum() - 1.01).abs() < 1e-12);
+        // Merging under extra labels lands in a distinct labeled series.
+        let mut scrape = Registry::new();
+        scrape.merge_labeled(&b, &[("session", "s1"), ("model", "list")]);
+        assert_eq!(
+            scrape.counter_with(SESSION_STEPS_TOTAL, &[("session", "s1"), ("model", "list")]),
+            2
+        );
+        assert_eq!(scrape.counter(SESSION_STEPS_TOTAL), 0);
     }
 
     #[test]

@@ -1,0 +1,327 @@
+//! Per-phase structured tracing of the generation barrier.
+//!
+//! Every [`FilterSession::step`](crate::smc::FilterSession::step) is a
+//! fixed pipeline of phases — propagate, weight, resample, and their
+//! scheduling satellites — and diagnosing shard imbalance, steal
+//! behaviour, or allocator churn requires knowing where inside that
+//! pipeline the wall time went, per shard. This module provides:
+//!
+//! - [`Phase`]: the closed set of barrier phases, with stable names that
+//!   are part of the telemetry contract (they label the
+//!   `phase_wall_seconds` histogram and the trace JSONL records);
+//! - [`PhaseWalls`]: a per-generation wall recorder. The shard-parallel
+//!   phases are measured *inside* the worker tasks — each worker clocks
+//!   its own slot, no locks, no atomics — and folded in by the
+//!   coordinator at the barrier; coordinator phases are clocked in
+//!   place. The engine always measures (two monotonic clock reads per
+//!   phase — noise against a propagation phase) and only *recording*
+//!   is conditional, so the measured path is identical with tracing on
+//!   or off;
+//! - [`TraceLog`]: the `--trace <path>` JSONL sink. One record per
+//!   nonzero phase span:
+//!   `{"session":"a","t":3,"phase":"propagate","shard":0,"dur_s":0.000512}`
+//!   (`shard` is omitted on coordinator phases). Records append line-at-
+//!   a-time so several sessions of one server may share a sink.
+//!
+//! **The tracing-never-computes contract:** nothing in this module
+//! touches RNG streams, weights, heap state, or scheduling decisions —
+//! it reads clocks and writes bytes. Filter outputs are bit-identical
+//! with tracing on or off; `tests/differential.rs` pins that axis.
+
+use std::io::Write as _;
+
+/// One phase of the generation barrier. The set is closed and the names
+/// are stable: scrapers key `phase_wall_seconds{phase=..}` on them and
+/// `tools/trace_report` groups JSONL records by them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Particle propagation (per shard; a stealing worker's thieved
+    /// batches count toward the *thief's* wall).
+    Propagate,
+    /// Weight normalization + ESS (fused reduction, plus the auxiliary
+    /// method's lookahead weights when applicable).
+    Weight,
+    /// Resampling: offspring deep-copies, parent release, memo sweep.
+    Resample,
+    /// Rebalance planning (cost-model update + LPT offspring placement).
+    RebalancePlan,
+    /// Cross-shard lineage transplants executed at resampling.
+    Transplant,
+    /// Work-stealing donation: extracting pending runs into scratch
+    /// heaps (per victim shard).
+    StealDonate,
+    /// Reclaiming scratch heaps at the barrier: transplant-back + counter
+    /// absorption + scratch recycle (per home shard).
+    ScratchReclaim,
+    /// Slab decommit barrier (`--decommit-watermark`).
+    Trim,
+}
+
+impl Phase {
+    /// Every phase, in pipeline order.
+    pub const ALL: [Phase; 8] = [
+        Phase::Propagate,
+        Phase::Weight,
+        Phase::Resample,
+        Phase::RebalancePlan,
+        Phase::Transplant,
+        Phase::StealDonate,
+        Phase::ScratchReclaim,
+        Phase::Trim,
+    ];
+
+    /// Stable label value (`phase_wall_seconds{phase="<name>"}` and the
+    /// JSONL `"phase"` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Propagate => "propagate",
+            Phase::Weight => "weight",
+            Phase::Resample => "resample",
+            Phase::RebalancePlan => "rebalance-plan",
+            Phase::Transplant => "transplant",
+            Phase::StealDonate => "steal-donate",
+            Phase::ScratchReclaim => "scratch-reclaim",
+            Phase::Trim => "trim",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Slot of a shard-parallel phase in the per-shard wall array, if it
+    /// is one (propagate / steal-donate / scratch-reclaim).
+    fn shard_slot(self) -> Option<usize> {
+        match self {
+            Phase::Propagate => Some(0),
+            Phase::StealDonate => Some(1),
+            Phase::ScratchReclaim => Some(2),
+            _ => None,
+        }
+    }
+}
+
+/// The shard-parallel phases, in [`PhaseWalls`] slot order.
+const SHARD_PHASES: [Phase; 3] = [Phase::Propagate, Phase::StealDonate, Phase::ScratchReclaim];
+
+/// Per-generation phase wall recorder. The coordinator owns it and
+/// resets it each step; shard-parallel walls are measured inside the
+/// worker tasks (each task clocks itself into its own struct field) and
+/// folded in with [`add_shard`](PhaseWalls::add_shard) once the workers
+/// have joined, so no synchronization is ever involved.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseWalls {
+    coord: [f64; Phase::ALL.len()],
+    shard: Vec<[f64; SHARD_PHASES.len()]>,
+}
+
+impl PhaseWalls {
+    /// A recorder for `k` shards.
+    pub fn new(k: usize) -> Self {
+        PhaseWalls {
+            coord: [0.0; Phase::ALL.len()],
+            shard: vec![[0.0; SHARD_PHASES.len()]; k],
+        }
+    }
+
+    /// Zero every slot for the next generation, resizing to `k` shards.
+    pub fn reset(&mut self, k: usize) {
+        self.coord = [0.0; Phase::ALL.len()];
+        self.shard.clear();
+        self.shard.resize(k, [0.0; SHARD_PHASES.len()]);
+    }
+
+    /// Accumulate wall seconds into a coordinator-level phase.
+    pub fn add(&mut self, phase: Phase, s: f64) {
+        debug_assert!(phase.shard_slot().is_none(), "{} is per-shard", phase.name());
+        self.coord[phase.index()] += s.max(0.0);
+    }
+
+    /// Accumulate wall seconds into a shard-parallel phase slot.
+    pub fn add_shard(&mut self, phase: Phase, shard: usize, s: f64) {
+        let slot = phase
+            .shard_slot()
+            .unwrap_or_else(|| panic!("{} is not a per-shard phase", phase.name()));
+        self.shard[shard][slot] += s.max(0.0);
+    }
+
+    /// Total recorded wall for one phase (all shards for the parallel
+    /// phases).
+    pub fn total(&self, phase: Phase) -> f64 {
+        match phase.shard_slot() {
+            Some(slot) => self.shard.iter().map(|w| w[slot]).sum(),
+            None => self.coord[phase.index()],
+        }
+    }
+
+    /// Visit every nonzero span as `(phase, shard, dur_s)` — shard spans
+    /// first (per shard, in phase-slot order), then coordinator spans in
+    /// pipeline order. Zero-length spans (phases that did not run this
+    /// generation) are elided. The same visit feeds the
+    /// `phase_wall_seconds` histogram and the trace sink, so their
+    /// totals agree by construction.
+    pub fn for_each_span(&self, mut f: impl FnMut(Phase, Option<usize>, f64)) {
+        for (s, walls) in self.shard.iter().enumerate() {
+            for (slot, phase) in SHARD_PHASES.iter().enumerate() {
+                if walls[slot] > 0.0 {
+                    f(*phase, Some(s), walls[slot]);
+                }
+            }
+        }
+        for phase in Phase::ALL {
+            if phase.shard_slot().is_none() && self.coord[phase.index()] > 0.0 {
+                f(phase, None, self.coord[phase.index()]);
+            }
+        }
+    }
+}
+
+/// A JSONL trace sink (`--trace <path>`, config key `trace`). Each
+/// nonzero phase span of each stepped generation appends one record:
+///
+/// ```json
+/// {"session":"run","t":3,"phase":"propagate","shard":0,"dur_s":0.000512}
+/// ```
+///
+/// `shard` is omitted on coordinator-level spans. Lines are appended one
+/// `write` at a time, so multiple sessions of one server can share a
+/// sink file; `tools/trace_report` summarizes the result. Recording
+/// never influences computation — see the module docs.
+#[derive(Debug)]
+pub struct TraceLog {
+    session: String,
+    file: std::fs::File,
+    buf: String,
+}
+
+impl TraceLog {
+    /// Open (append/create) the sink at `path`, labeling records with
+    /// `session`.
+    pub fn open(path: &str, session: &str) -> std::io::Result<TraceLog> {
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(TraceLog {
+            session: session.to_string(),
+            file,
+            buf: String::new(),
+        })
+    }
+
+    /// Relabel subsequent records (the serve engine names sessions after
+    /// the trace sink is opened).
+    pub fn set_session(&mut self, session: &str) {
+        self.session = session.to_string();
+    }
+
+    /// Append one span record for generation `t`. Write errors are
+    /// reported once to stderr and otherwise ignored — a full disk must
+    /// not kill inference.
+    pub fn record(&mut self, t: usize, phase: Phase, shard: Option<usize>, dur_s: f64) {
+        use std::fmt::Write as _;
+        self.buf.clear();
+        let _ = write!(
+            self.buf,
+            "{{\"session\":\"{}\",\"t\":{},\"phase\":\"{}\"",
+            json_escape(&self.session),
+            t,
+            phase.name()
+        );
+        if let Some(s) = shard {
+            let _ = write!(self.buf, ",\"shard\":{s}");
+        }
+        let _ = writeln!(self.buf, ",\"dur_s\":{dur_s:.9}}}");
+        if let Err(e) = self.file.write_all(self.buf.as_bytes()) {
+            eprintln!("# trace write failed: {e} (tracing continues best-effort)");
+        }
+    }
+
+    /// Record every nonzero span of one generation's [`PhaseWalls`].
+    pub fn record_walls(&mut self, t: usize, walls: &PhaseWalls) {
+        let mut spans: Vec<(Phase, Option<usize>, f64)> = Vec::new();
+        walls.for_each_span(|p, s, d| spans.push((p, s, d)));
+        for (p, s, d) in spans {
+            self.record(t, p, s, d);
+        }
+    }
+}
+
+fn json_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write as _;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walls_accumulate_and_elide_zero_spans() {
+        let mut w = PhaseWalls::new(2);
+        w.add_shard(Phase::Propagate, 0, 0.5);
+        w.add_shard(Phase::Propagate, 1, 0.25);
+        w.add_shard(Phase::StealDonate, 1, 0.1);
+        w.add(Phase::Weight, 0.05);
+        w.add(Phase::Weight, 0.05);
+        assert_eq!(w.total(Phase::Propagate), 0.75);
+        assert_eq!(w.total(Phase::Weight), 0.1);
+        assert_eq!(w.total(Phase::Trim), 0.0);
+        let mut spans = Vec::new();
+        w.for_each_span(|p, s, d| spans.push((p.name(), s, d)));
+        assert_eq!(
+            spans,
+            vec![
+                ("propagate", Some(0), 0.5),
+                ("propagate", Some(1), 0.25),
+                ("steal-donate", Some(1), 0.1),
+                ("weight", None, 0.1),
+            ]
+        );
+    }
+
+    #[test]
+    fn reset_zeroes_and_resizes() {
+        let mut w = PhaseWalls::new(1);
+        w.add_shard(Phase::Propagate, 0, 1.0);
+        w.reset(3);
+        assert_eq!(w.total(Phase::Propagate), 0.0);
+        w.add_shard(Phase::ScratchReclaim, 2, 0.2);
+        assert_eq!(w.total(Phase::ScratchReclaim), 0.2);
+    }
+
+    #[test]
+    fn trace_log_writes_schema_lines() {
+        let path = std::env::temp_dir().join(format!("lazycow-trace-{}.jsonl", std::process::id()));
+        let path_s = path.to_str().unwrap();
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut log = TraceLog::open(path_s, "t\"x").unwrap();
+            let mut w = PhaseWalls::new(1);
+            w.add_shard(Phase::Propagate, 0, 0.001);
+            w.add(Phase::Weight, 0.002);
+            log.record_walls(7, &w);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0],
+            "{\"session\":\"t\\\"x\",\"t\":7,\"phase\":\"propagate\",\"shard\":0,\"dur_s\":0.001000000}"
+        );
+        assert_eq!(
+            lines[1],
+            "{\"session\":\"t\\\"x\",\"t\":7,\"phase\":\"weight\",\"dur_s\":0.002000000}"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -4,9 +4,10 @@
 //! scheduling matrix — K ∈ {1, 2, 4} × rebalance policy × steal on/off ×
 //! copy mode, plus the payload-allocator axis (`system` vs the default
 //! `slab`), the decommit axis (watermark off / 0 / the default keep-2),
-//! and the batched-numerics axis (`--batch off`, forcing the scalar
-//! per-particle reference path) — against the K = 1 / steal-off /
-//! policy-off oracle and
+//! the batched-numerics axis (`--batch off`, forcing the scalar
+//! per-particle reference path), and the tracing axis (`--trace` on vs
+//! off — spans are pure measurement and may never reach the output) —
+//! against the K = 1 / steal-off / policy-off oracle and
 //! demands *bitwise* equality of `log_evidence` and `posterior_mean`
 //! (plus equal attempt counts, zero leaks, per-shard alloc/free balance,
 //! slab- and raw-gauge consistency, decommit accounting, and the
@@ -502,6 +503,154 @@ fn session_fork_diverges_independently() {
         "counterfactual fork failed to diverge"
     );
     assert_eq!(sh.live_objects(), 0, "forked lineages leaked");
+}
+
+/// Every stable phase name the tracer can emit (the `trace::Phase`
+/// contract, mirrored here so a rename breaks a test).
+const TRACE_PHASES: [&str; 8] = [
+    "propagate",
+    "weight",
+    "resample",
+    "rebalance-plan",
+    "transplant",
+    "steal-donate",
+    "scratch-reclaim",
+    "trim",
+];
+
+/// Tracing axis: `--trace` must never influence computation. Every cell
+/// of K ∈ {1, 2, 4} × policy × steal × batch run with a trace sink
+/// attached is bitwise-identical to the untraced run, and the emitted
+/// JSONL is well-formed — every line a span record carrying a known
+/// phase name, a generation index, and a duration.
+#[test]
+fn lgss_trace_axis_bitwise() {
+    let model = ListModel::synthetic(18, 17);
+    let mut base = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    base.n_particles = 96;
+    base.n_steps = 18;
+    base.seed = 2026_0807;
+    let pool = ThreadPool::new(4);
+    let dir = std::env::temp_dir();
+    for k in [1usize, 2, 4] {
+        for policy in RebalancePolicy::ALL {
+            for steal in [false, true] {
+                for batch in [true, false] {
+                    let mut cfg = base.clone();
+                    cfg.rebalance = policy;
+                    cfg.steal = steal;
+                    cfg.steal_min = 2;
+                    cfg.batch = batch;
+                    let off = run_session_cell(&model, &cfg, Method::Bootstrap, &pool, k);
+
+                    let path = dir.join(format!(
+                        "lazycow-trace-{}-{k}-{policy:?}-{steal}-{batch}.jsonl",
+                        std::process::id()
+                    ));
+                    let _ = std::fs::remove_file(&path);
+                    cfg.trace = Some(path.to_string_lossy().into_owned());
+                    let on = run_session_cell(&model, &cfg, Method::Bootstrap, &pool, k);
+                    assert_eq!(
+                        on, off,
+                        "K={k}/{policy:?}/steal={steal}/batch={batch}: tracing changed the output"
+                    );
+
+                    let text = std::fs::read_to_string(&path).expect("trace file written");
+                    assert!(!text.is_empty(), "trace file empty");
+                    for line in text.lines() {
+                        assert!(line.starts_with("{\"session\":"), "bad span line: {line}");
+                        assert!(line.ends_with('}'), "bad span line: {line}");
+                        assert!(line.contains("\"t\":"), "span missing t: {line}");
+                        assert!(line.contains("\"dur_s\":"), "span missing dur_s: {line}");
+                        let phase = line
+                            .split("\"phase\":\"")
+                            .nth(1)
+                            .and_then(|rest| rest.split('"').next())
+                            .expect("span missing phase");
+                        assert!(
+                            TRACE_PHASES.contains(&phase),
+                            "unknown phase {phase:?} in {line}"
+                        );
+                    }
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+    }
+}
+
+/// Trace/metrics agreement: the spans flushed to the JSONL file and the
+/// `phase_wall_seconds{phase=..}` histograms are fed from the same
+/// clock reads, so per-phase file totals must equal the histogram sums
+/// up to the span format's 1 ns rounding.
+#[test]
+fn trace_totals_match_phase_histograms() {
+    let t_max = 15;
+    let model = ListModel::synthetic(t_max, 23);
+    let mut cfg = RunConfig::for_model(Model::List, Task::Inference, CopyMode::LazySro);
+    cfg.n_particles = 64;
+    cfg.n_steps = t_max;
+    cfg.seed = 5;
+    cfg.rebalance = RebalancePolicy::Greedy;
+    cfg.steal = true;
+    cfg.steal_min = 2;
+    let path = std::env::temp_dir().join(format!(
+        "lazycow-trace-agree-{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    cfg.trace = Some(path.to_string_lossy().into_owned());
+    let pool = ThreadPool::new(4);
+    let mut sh = ShardedHeap::new(cfg.mode, 2);
+    let shards = sh.shards_mut();
+    let c = ctx(&pool);
+    let mut session = FilterSession::begin(&model, &cfg, shards, &c, Method::Bootstrap);
+    for _ in 0..t_max {
+        session.step(&model, shards, &c);
+    }
+    let hist_sum = |phase: &str| -> f64 {
+        session
+            .telemetry()
+            .histogram_with(lazycow::telemetry::PHASE_WALL_SECONDS, &[("phase", phase)])
+            .map(|h| h.sum())
+            .unwrap_or(0.0)
+    };
+    let hist: Vec<(String, f64)> = TRACE_PHASES
+        .iter()
+        .map(|p| (p.to_string(), hist_sum(p)))
+        .collect();
+    session.finish(&model, shards);
+
+    let text = std::fs::read_to_string(&path).expect("trace file written");
+    let mut file_sum = vec![0.0f64; TRACE_PHASES.len()];
+    let mut spans = 0usize;
+    for line in text.lines() {
+        let phase = line
+            .split("\"phase\":\"")
+            .nth(1)
+            .and_then(|rest| rest.split('"').next())
+            .expect("phase field");
+        let dur: f64 = line
+            .split("\"dur_s\":")
+            .nth(1)
+            .map(|rest| rest.trim_end_matches('}'))
+            .expect("dur_s field")
+            .parse()
+            .expect("dur_s parses");
+        let i = TRACE_PHASES.iter().position(|p| *p == phase).expect("known phase");
+        file_sum[i] += dur;
+        spans += 1;
+    }
+    assert!(spans > 0, "no spans recorded");
+    for (i, (phase, h)) in hist.iter().enumerate() {
+        let tolerance = 1e-9 * (spans as f64) + 1e-9;
+        assert!(
+            (file_sum[i] - h).abs() <= tolerance,
+            "phase {phase}: trace total {} vs histogram sum {h}",
+            file_sum[i]
+        );
+    }
+    let _ = std::fs::remove_file(&path);
 }
 
 /// Simulation (no observations, no resampling, no copies): the engine

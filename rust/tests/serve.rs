@@ -12,12 +12,17 @@
 //!   sharded heap — through the protocol surface and over real TCP with
 //!   concurrent clients — reply byte-identically to the same scripts run
 //!   solo, and per-session telemetry attribution stays exact.
+//! - **Observability**: `render_metrics` aggregates per-session
+//!   registries under `{session,model}` labels and per-shard residency
+//!   under `{shard}`; the `/metrics` HTTP responder serves it with
+//!   serve-level counters; the `wall=` reply token stays stable and
+//!   final; request/error labels are bounded.
 
 use lazycow::config::{Model, RunConfig, Task};
 use lazycow::heap::{CopyMode, ShardedHeap};
 use lazycow::models::{Crbd, ListModel, Mot, Pcfg, Rbpf, Vbd, DATA_SEED};
 use lazycow::pool::ThreadPool;
-use lazycow::serve::{serve_method, serve_on, ServeEngine, Verdict};
+use lazycow::serve::{serve_method, serve_on, MetricsHub, ServeEngine, Verdict};
 use lazycow::smc::{run_filter_shards, FilterSession, Method, RebalancePolicy, SmcModel, StepCtx};
 use lazycow::telemetry;
 
@@ -74,7 +79,8 @@ fn run_script(e: &mut ServeEngine, script: &[String]) -> Vec<String> {
     out
 }
 
-/// Drop the ` wall=...s` field (the one nondeterministic reply token).
+/// Drop the ` wall=...` field (the one nondeterministic reply token —
+/// always the final token of its line, see `serve::fmt_wall`).
 fn strip_wall(line: &str) -> String {
     match line.find(" wall=") {
         Some(i) => line[..i].to_string(),
@@ -469,7 +475,9 @@ fn tcp_concurrent_clients_match_solo_replies_and_drain_cleanly() {
 
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind an OS-assigned port");
     let addr = listener.local_addr().unwrap();
-    let server = std::thread::spawn(move || serve_on(engine(), listener));
+    let hub = MetricsHub::new();
+    let server_hub = std::sync::Arc::clone(&hub);
+    let server = std::thread::spawn(move || serve_on(engine(), listener, server_hub));
 
     let connect = move || -> (TcpStream, BufReader<TcpStream>) {
         let stream = TcpStream::connect(addr).expect("connect");
@@ -527,4 +535,139 @@ fn tcp_concurrent_clients_match_solo_replies_and_drain_cleanly() {
     };
     assert_eq!(last, "ok finish-all sessions=0");
     server.join().expect("server thread").expect("serve_on result");
+
+    // The hub observed the traffic: connections counted, requests
+    // labeled by verb, and the draining gauge flipped on drain.
+    let text = hub.scrape();
+    assert!(text.contains("serve_connections_total 4"), "{text}");
+    assert!(text.contains("serve_requests_total{verb=\"obs\"}"), "{text}");
+    assert!(text.contains("serve_requests_total{verb=\"finish-all\"} 1"), "{text}");
+    assert!(text.contains("serve_draining 1"), "{text}");
+}
+
+// ---------------------------------------------------------------------
+// Observability: /metrics aggregation, the HTTP responder, the wall
+// token, and bounded request/error labels.
+// ---------------------------------------------------------------------
+
+#[test]
+fn metrics_render_merges_sessions_and_shards_with_labels() {
+    let mut e = engine();
+    expect_ok(&mut e, "open alpha list particles=16 seed=7");
+    expect_ok(&mut e, "open beta vbd particles=8 seed=3");
+    expect_ok(&mut e, "obs alpha 0.5");
+    expect_ok(&mut e, "obs beta 4");
+    let text = e.render_metrics();
+
+    // Per-session series under {session,model} labels.
+    assert!(
+        text.contains("session_steps_total{session=\"alpha\",model=\"list\"} 1"),
+        "{text}"
+    );
+    assert!(
+        text.contains("session_steps_total{session=\"beta\",model=\"vbd\"} 1"),
+        "{text}"
+    );
+    // Per-phase wall histograms keep their phase label and gain the
+    // session labels.
+    assert!(
+        text.contains("phase_wall_seconds_count{phase=\"propagate\",session=\"alpha\",model=\"list\"}"),
+        "{text}"
+    );
+    // Per-shard residency gauges for every shard of the K=2 heap.
+    assert!(text.contains("shard_live_bytes{shard=\"0\"}"), "{text}");
+    assert!(text.contains("shard_live_bytes{shard=\"1\"}"), "{text}");
+    assert!(text.contains("shard_live_objects{shard=\"0\"}"), "{text}");
+    assert!(text.contains("shard_committed_bytes{shard=\"1\"}"), "{text}");
+    // Spec shape: exactly one HELP/TYPE header per family.
+    assert_eq!(text.matches("# TYPE session_steps_total counter").count(), 1);
+    assert_eq!(text.matches("# HELP shard_live_bytes").count(), 1);
+    // Deterministic: the same engine state renders byte-identically.
+    assert_eq!(text, e.render_metrics());
+
+    // Finished sessions drop out of the next render; shard gauges stay.
+    reply(&mut e, "finish-all");
+    let after = e.render_metrics();
+    assert!(!after.contains("session=\"alpha\""), "{after}");
+    assert!(after.contains("shard_live_bytes{shard=\"0\"}"), "{after}");
+}
+
+#[test]
+fn metrics_http_answers_scrapes_and_rejects_other_requests() {
+    use lazycow::serve::{error_reason, serve_metrics_on, verb_label};
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    let hub = MetricsHub::new();
+    hub.note_connection();
+    hub.note_request(verb_label("obs a 0.5"), 0.002, None);
+    hub.note_request(
+        verb_label("frobnicate x"),
+        0.001,
+        error_reason("err unknown command 'frobnicate' (open|obs)"),
+    );
+    hub.set_engine_snapshot(engine().render_metrics());
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind metrics port");
+    let addr = listener.local_addr().unwrap();
+    let responder = serve_metrics_on(std::sync::Arc::clone(&hub), listener).expect("responder");
+
+    let roundtrip = |request: &str| -> String {
+        let mut s = TcpStream::connect(addr).expect("connect scrape");
+        s.write_all(request.as_bytes()).expect("send request");
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("read response");
+        out
+    };
+    let ok = roundtrip("GET /metrics HTTP/1.1\r\nHost: t\r\nAccept: */*\r\n\r\n");
+    assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+    assert!(ok.contains("Content-Type: text/plain; version=0.0.4"), "{ok}");
+    assert!(ok.contains("serve_connections_total 1"), "{ok}");
+    assert!(ok.contains("serve_requests_total{verb=\"obs\"} 1"), "{ok}");
+    assert!(ok.contains("serve_requests_total{verb=\"other\"} 1"), "{ok}");
+    assert!(ok.contains("serve_errors_total{reason=\"unknown-verb\"} 1"), "{ok}");
+    assert!(ok.contains("serve_request_seconds_count 2"), "{ok}");
+    assert!(ok.contains("serve_draining 0"), "{ok}");
+    // The engine snapshot rides along in the same exposition.
+    assert!(ok.contains("shard_live_bytes{shard=\"0\"}"), "{ok}");
+
+    let not_found = roundtrip("GET /other HTTP/1.1\r\n\r\n");
+    assert!(not_found.starts_with("HTTP/1.1 404 "), "{not_found}");
+    let bad_method = roundtrip("POST /metrics HTTP/1.1\r\n\r\n");
+    assert!(bad_method.starts_with("HTTP/1.1 405 "), "{bad_method}");
+
+    hub.shutdown();
+    responder.join().expect("responder joins");
+}
+
+#[test]
+fn wall_token_is_stable_and_final() {
+    use lazycow::serve::fmt_wall;
+    assert_eq!(fmt_wall(0.1234567), "wall=0.123");
+    assert_eq!(fmt_wall(0.0), "wall=0.000");
+    let mut e = engine();
+    expect_ok(&mut e, "open a list particles=8 seed=1");
+    expect_ok(&mut e, "obs a 0.5");
+    let r = expect_ok(&mut e, "finish a");
+    let last = r.split_whitespace().last().unwrap();
+    let val = last.strip_prefix("wall=").expect("wall= is the final token");
+    val.parse::<f64>().expect("bare seconds, no unit suffix");
+}
+
+#[test]
+fn request_and_error_labels_are_bounded() {
+    use lazycow::serve::{error_reason, verb_label};
+    assert_eq!(verb_label("obs a 0.5"), "obs");
+    assert_eq!(verb_label("  open a list"), "open");
+    assert_eq!(verb_label("finish-all"), "finish-all");
+    assert_eq!(verb_label(""), "comment");
+    assert_eq!(verb_label("  # note"), "comment");
+    assert_eq!(verb_label("frobnicate x y"), "other");
+    assert_eq!(error_reason("ok obs a t=1"), None);
+    assert_eq!(error_reason("err unknown command 'x' (...)"), Some("unknown-verb"));
+    assert_eq!(error_reason("err no open session 'a'"), Some("no-session"));
+    assert_eq!(error_reason("err session 'a' already open"), Some("name-taken"));
+    assert_eq!(error_reason("err usage: obs <name> <tokens...>"), Some("usage"));
+    assert_eq!(error_reason("err server draining"), Some("draining"));
+    assert_eq!(error_reason("err particles must be >= 1"), Some("bad-input"));
 }
