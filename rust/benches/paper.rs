@@ -29,6 +29,12 @@
 //!              K = 4, tracing off vs on, bitwise identity asserted) and
 //!              the cost of rendering a populated telemetry registry
 //!              into the Prometheus exposition format
+//!   heapev     heap-evolution cells: per-barrier trim cost must be flat
+//!              in the number of free-list blocks (the per-chunk live
+//!              counters make the empty-chunk scan O(chunks)), and the
+//!              evacuating-defrag cell — a sparse allocation spike whose
+//!              survivors compact into bump space with bit-identical
+//!              values and strictly lower committed residency
 //!
 //! Environment: LAZYCOW_REPS (default 5), LAZYCOW_SCALE=default|paper.
 
@@ -60,6 +66,7 @@ fn sections() -> Vec<String> {
             "batch",
             "session",
             "observability",
+            "heapev",
         ]
             .iter()
             .map(|s| s.to_string())
@@ -776,6 +783,172 @@ fn bench_alloc_churn() {
     }
 }
 
+/// `heapev` cell 1: per-barrier trim cost versus free-list population.
+/// Two identical 64-chunk heaps are loaded with the same allocation
+/// spike; one then frees 10% of its blocks, the other 90% (spread so no
+/// chunk ever empties — every barrier is a pure liveness scan). The
+/// per-chunk live counters make the empty-chunk scan O(chunks), so the
+/// per-barrier cost must not grow with the free-block count: the 90%/10%
+/// cost ratio is asserted ≤ 3× here and gated again by
+/// tools/bench_check on the emitted `trim-flat` record.
+fn bench_heapev_trim() {
+    use lazycow::heap::{CHUNK_BYTES, DEFAULT_DECOMMIT_WATERMARK};
+    println!("\n== Heap evolution: trim cost vs free-list population ==");
+    let chunks = 64usize;
+    let per_chunk = CHUNK_BYTES / 16; // Node is a 16-byte payload
+    let total = chunks * per_chunk;
+    let barriers = 4000usize;
+    let mut per_barrier_us = Vec::new();
+    for freed_tenths in [1usize, 9] {
+        let mut heap = Heap::new(CopyMode::LazySro);
+        let mut roots = Vec::with_capacity(total);
+        for i in 0..total {
+            roots.push(heap.alloc(Node {
+                value: i as i64,
+                next: Lazy::NULL,
+            }));
+        }
+        // Free the fraction only after the whole spike is allocated, so
+        // the free lists really hold `freed` blocks at every barrier
+        // (freeing inline would let the allocator recycle them and keep
+        // the lists near-empty).
+        let mut freed = 0usize;
+        let mut keep = Vec::new();
+        for (i, r) in roots.into_iter().enumerate() {
+            if i % 10 < freed_tenths {
+                heap.release(r);
+                freed += 1;
+            } else {
+                keep.push(r);
+            }
+        }
+        heap.sweep_memos();
+        // One warmup barrier absorbs any one-off reclamation (transient
+        // raw chunks, LOS free-list trim) before the timed pure scans.
+        heap.trim(DEFAULT_DECOMMIT_WATERMARK);
+        let committed = heap.metrics.slab_committed_bytes;
+        let start = std::time::Instant::now();
+        for _ in 0..barriers {
+            heap.trim(DEFAULT_DECOMMIT_WATERMARK);
+        }
+        let us = start.elapsed().as_secs_f64() * 1e6 / barriers as f64;
+        per_barrier_us.push(us);
+        // The freed pattern is spread evenly, so no chunk emptied and no
+        // barrier decommitted anything: the loop timed scans only.
+        assert_eq!(
+            heap.metrics.slab_committed_bytes, committed,
+            "trim-cost barriers must be pure scans"
+        );
+        heap.validate_storage();
+        println!(
+            "{{\"section\":\"heapev\",\"cell\":\"trim-cost\",\"freed_fraction\":0.{},\"free_blocks\":{},\"chunks\":{},\"barriers\":{},\"per_barrier_us\":{:.4}}}",
+            freed_tenths,
+            freed,
+            committed / CHUNK_BYTES,
+            barriers,
+            us,
+        );
+        for r in keep {
+            heap.release(r);
+        }
+    }
+    let ratio = per_barrier_us[1] / per_barrier_us[0];
+    assert!(
+        ratio <= 3.0,
+        "trim must be flat in free blocks: 90%-freed barrier cost {:.3}us \
+         vs 10%-freed {:.3}us (ratio {ratio:.2})",
+        per_barrier_us[1],
+        per_barrier_us[0],
+    );
+    println!("{{\"section\":\"heapev\",\"cell\":\"trim-flat\",\"ratio\":{ratio:.4}}}");
+}
+
+/// `heapev` cell 2: evacuating defrag on an engineered sparse heap. A
+/// 64-chunk allocation spike keeps one node in every 512 — eight
+/// survivors per chunk, enough to pin every chunk committed forever
+/// without evacuation. With `evacuate(0.5)` at the barrier the
+/// survivors placement-move into shared bump space, the emptied chunks
+/// decommit, and the survivors' values must still read back
+/// bit-identical to the no-evacuation run.
+fn bench_heapev_evacuate() {
+    use lazycow::heap::{CHUNK_BYTES, DEFAULT_DECOMMIT_WATERMARK};
+    println!("\n== Heap evolution: evacuating defrag on a sparse spike ==");
+    let chunks = 64usize;
+    let per_chunk = CHUNK_BYTES / 16;
+    let total = chunks * per_chunk;
+    let mut sums = Vec::new();
+    let mut committed = Vec::new();
+    let mut records = Vec::new();
+    for evacuate in [false, true] {
+        let mut heap = Heap::new(CopyMode::LazySro);
+        let start = std::time::Instant::now();
+        let mut roots = Vec::with_capacity(total);
+        for i in 0..total {
+            roots.push(heap.alloc(Node {
+                value: i as i64,
+                next: Lazy::NULL,
+            }));
+        }
+        let mut survivors = Vec::new();
+        for (i, r) in roots.into_iter().enumerate() {
+            if i % 512 == 0 {
+                survivors.push(r);
+            } else {
+                heap.release(r);
+            }
+        }
+        heap.sweep_memos();
+        let moved = if evacuate { heap.evacuate(0.5) } else { 0 };
+        heap.trim(DEFAULT_DECOMMIT_WATERMARK);
+        let wall = start.elapsed().as_secs_f64();
+        let mut sum = 0i64;
+        for s in survivors.iter_mut() {
+            sum = sum.wrapping_add(heap.read(s, |n| n.value));
+        }
+        heap.validate_storage();
+        let m = heap.metrics;
+        if evacuate {
+            assert!(moved > 0, "the sparse spike must trigger evacuation");
+            assert_eq!(m.evacuated_objects, moved);
+            assert!(
+                m.evacuated_chunks >= 1,
+                "evacuation must recycle at least one chunk"
+            );
+        } else {
+            assert_eq!(m.evacuated_objects, 0);
+            assert_eq!(m.evacuated_chunks, 0);
+        }
+        sums.push(sum);
+        committed.push(m.slab_committed_bytes);
+        records.push(format!(
+            "{{\"section\":\"heapev\",\"cell\":\"evacuate\",\"evacuate\":\"{}\",\"survivors\":{},\"wall_s\":{:.4},\"evacuated_objects\":{},\"evacuated_chunks\":{},\"committed_bytes\":{},\"bit_identical\":BIT}}",
+            if evacuate { "on" } else { "off" },
+            survivors.len(),
+            wall,
+            m.evacuated_objects,
+            m.evacuated_chunks,
+            m.slab_committed_bytes,
+        ));
+        for s in survivors {
+            heap.release(s);
+        }
+    }
+    assert_eq!(
+        sums[0], sums[1],
+        "evacuation changed a survivor value: off-sum {} vs on-sum {}",
+        sums[0], sums[1]
+    );
+    assert!(
+        committed[1] < committed[0],
+        "evacuation must lower committed residency ({} vs {})",
+        committed[1],
+        committed[0]
+    );
+    for rec in records {
+        println!("{}", rec.replace("BIT", "true"));
+    }
+}
+
 /// Pre-flight for the batch section: `step_batched` must match the
 /// scalar `step_population` reference bit for bit on a small population
 /// (run on the CPU-oracle context — the f32 artifact path is held to
@@ -1351,6 +1524,10 @@ fn main() {
             "batch" => bench_batch(&backend),
             "session" => bench_session(&backend),
             "observability" => bench_observability(&backend),
+            "heapev" => {
+                bench_heapev_trim();
+                bench_heapev_evacuate();
+            }
             other => eprintln!("unknown section {other}"),
         }
     }

@@ -173,6 +173,15 @@ pub struct RunConfig {
     /// [`DEFAULT_DECOMMIT_WATERMARK`](crate::heap::DEFAULT_DECOMMIT_WATERMARK)
     /// chunks.
     pub decommit_watermark: Option<usize>,
+    /// Evacuation sparsity threshold (`--evacuate-threshold`, in
+    /// `[0, 1]`): at each generation barrier, slab chunks whose live
+    /// payload bytes are at or below this fraction of the chunk are
+    /// compacted — survivors placement-moved into same-class bump space,
+    /// the emptied chunk decommitted
+    /// ([`Heap::evacuate`](crate::heap::Heap::evacuate)). `None` (flag
+    /// value `off`, the default) disables evacuation. Outputs are
+    /// bit-identical either way; only where payload bytes live changes.
+    pub evacuate_threshold: Option<f64>,
     /// ESS-fraction resampling trigger (1.0 = always resample, the paper's
     /// setting for the memory-pattern evaluation).
     pub ess_threshold: f64,
@@ -224,6 +233,7 @@ impl Default for RunConfig {
             steal_min: 4,
             allocator: AllocatorKind::Slab,
             decommit_watermark: Some(crate::heap::DEFAULT_DECOMMIT_WATERMARK),
+            evacuate_threshold: None,
             ess_threshold: 1.0,
             pg_iterations: 3,
             use_xla: true,
@@ -293,6 +303,22 @@ impl RunConfig {
                     v => Some(v.parse().map_err(|e| {
                         format!("bad decommit watermark {value} (integer or off): {e}")
                     })?),
+                }
+            }
+            "evacuate-threshold" | "evacuate_threshold" => {
+                self.evacuate_threshold = match value.to_ascii_lowercase().as_str() {
+                    "off" | "none" | "never" => None,
+                    v => {
+                        let f: f64 = v.parse().map_err(|e| {
+                            format!("bad evacuate threshold {value} (fraction or off): {e}")
+                        })?;
+                        if !(0.0..=1.0).contains(&f) {
+                            return Err(format!(
+                                "bad evacuate threshold {value} (must be in [0, 1])"
+                            ));
+                        }
+                        Some(f)
+                    }
                 }
             }
             "ess" => self.ess_threshold = value.parse().map_err(|e| format!("{e}"))?,
@@ -443,6 +469,14 @@ mod tests {
         c.apply("decommit_watermark", "5").unwrap();
         assert_eq!(c.decommit_watermark, Some(5));
         assert!(c.apply("decommit-watermark", "many").is_err());
+        assert_eq!(c.evacuate_threshold, None, "evacuation defaults off");
+        c.apply("evacuate-threshold", "0.5").unwrap();
+        assert_eq!(c.evacuate_threshold, Some(0.5));
+        c.apply("evacuate_threshold", "off").unwrap();
+        assert_eq!(c.evacuate_threshold, None);
+        assert!(c.apply("evacuate-threshold", "1.5").is_err());
+        assert!(c.apply("evacuate-threshold", "-0.1").is_err());
+        assert!(c.apply("evacuate-threshold", "sparse").is_err());
         assert!(c.batch, "batched numeric path defaults on");
         c.apply("batch", "off").unwrap();
         assert!(!c.batch);

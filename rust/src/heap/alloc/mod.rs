@@ -1,5 +1,5 @@
-//! Payload storage: the size-class slab allocator behind every
-//! [`Heap`](super::Heap).
+//! Payload storage: the size-class slab allocator (plus large-object
+//! space) behind every [`Heap`](super::Heap).
 //!
 //! The paper's contribution is dynamic memory management for the
 //! allocate/copy/mutate/free churn of particle populations, yet a naive
@@ -12,16 +12,27 @@
 //!
 //! [`SlabAlloc`] exploits that: payload storage is segregated into size
 //! classes; each class bump-allocates out of fixed 64 KiB chunks and
-//! recycles freed blocks through an intrusive free list (the freed block's
-//! first word is the list link, so free blocks cost no side storage).
-//! Payloads whose layout does not fit a class (over 2 KiB, or
-//! over-aligned) fall back to the system allocator with their exact
-//! layout. The `System` backend ([`AllocatorKind::System`]) bypasses the
-//! slabs entirely — every payload takes the exact-layout path — which is
-//! the differential baseline: the allocator must never change what is
+//! recycles freed blocks through *per-chunk* intrusive free lists (the
+//! freed block's first word is the list link, so free blocks cost no side
+//! storage). Payloads whose layout does not fit a class (over 2 KiB, or
+//! over-aligned) go to the [large-object space](#large-object-space). The
+//! `System` backend ([`AllocatorKind::System`]) bypasses both entirely —
+//! every payload takes the exact-layout system path — which is the
+//! differential baseline: the allocator must never change what is
 //! computed, only where payload bytes live.
 //!
-//! **Ownership.** A payload lives in slab (or system) memory as its
+//! **Per-chunk liveness.** Every chunk carries live/free/bump counters
+//! maintained on every alloc, free and `free_raw` (the block's
+//! [`BlockLoc`] names its chunk, so the free-time update is O(1)). The
+//! counters buy three things: the empty-chunk scan behind
+//! [`SlabAlloc::trim`] is O(chunks) instead of O(free blocks), so decommit
+//! can run at *every* generation barrier on huge heaps for free; sparsity
+//! is known per chunk, which is what evacuation victims are selected by;
+//! and the whole structure is checkable — [`SlabAlloc::validate_counters`]
+//! recounts every free list and cross-checks every counter, and the fuzz
+//! battery in `tests.rs` runs it after every operation.
+//!
+//! **Ownership.** A payload lives in slab (or LOS/system) memory as its
 //! concrete type, reached through a [`PBox`]: a fat `*mut dyn Payload`
 //! plus the block's location tag. The heap's `Slot` stores `Option<PBox>`
 //! where it used to store `Option<Box<dyn Payload>>`; the vtable travels
@@ -30,25 +41,39 @@
 //! from a `Box`, or direct placement-write of a typed value — see the
 //! [`Payload`] trait's placement methods), and all deallocation returns
 //! through `SlabAlloc::dealloc`, which runs the payload's destructor in
-//! place and pushes the block onto its class's free list. Dropping a
+//! place and pushes the block onto its chunk's free list. Dropping a
 //! `PBox` outside the allocator (heap teardown) still runs the destructor
-//! and frees exact-layout memory; a slab block simply stays with its
-//! chunk, which the allocator frees wholesale on drop.
+//! and frees exact-layout and LOS memory; a slab block simply stays with
+//! its chunk, which the allocator frees wholesale on drop.
 //!
 //! **Raw (metadata) storage.** Payloads are not the only per-heap
 //! structures that churn every generation: memo-table bucket arrays
 //! rehash on growth and are freed wholesale on label death, and the label
 //! slot vector grows with the lineage population. `SlabAlloc::alloc_raw`
 //! / `SlabAlloc::free_raw` serve plain byte blocks from the *same* size
-//! classes (exact-layout fallback for buckets over the largest class), and
-//! `SlabVec` plus the memo module's bucket store route those structures
-//! through them — so a memo rehash frees a 1 KiB block and the next 1 KiB
-//! rehash anywhere in the heap reuses it, closing the last per-generation
-//! system-allocator traffic. Raw allocations are accounted separately from
-//! payload allocations (see the `slab_raw_*` fields of
+//! classes (LOS for buckets over the largest class), and `SlabVec` plus
+//! the memo module's bucket store route those structures through them —
+//! so a memo rehash frees a 1 KiB block and the next 1 KiB rehash
+//! anywhere in the heap reuses it, closing the last per-generation
+//! system-allocator traffic. Raw allocations are accounted separately
+//! from payload allocations (see the `slab_raw_*` fields of
 //! [`HeapMetrics`](super::HeapMetrics)), through the crate-internal
 //! `RawCtx` handle that pairs the allocator with the owning heap's
-//! metrics.
+//! metrics. Chunks holding raw blocks are *pinned* against evacuation
+//! (`live_raw` counter): raw blocks are reachable only from their owning
+//! containers, not from heap slots, so the evacuation slot-walk cannot
+//! move them.
+//!
+//! **Large-object space.** Requests that fit no size class (payload or
+//! raw, over 2 KiB or over-aligned on the `Slab` backend) are served by
+//! [`Los`]: each block is a single system allocation with a small header
+//! (total size, alignment, free-list link) in front of the payload.
+//! Freed blocks go on a LIFO free list and are reused first-fit with a
+//! 2× waste bound, so the memo table's largest bucket arrays and big
+//! model payloads stop round-tripping through the system allocator on
+//! every churn cycle. [`SlabAlloc::trim`] returns free LOS blocks beyond
+//! the watermark; the owning heap accounts the space through the
+//! `los_*` fields of [`HeapMetrics`](super::HeapMetrics).
 //!
 //! **Scratch heaps** (work-stealing donations) get a *bump-only*
 //! allocator ([`SlabAlloc::scratch`]): they drain completely at every
@@ -56,22 +81,37 @@
 //! about to be released en masse is wasted work — frees only run the
 //! destructor, and the storage is reclaimed in bulk when the scratch heap
 //! drops (or recycled with [`SlabAlloc::reset`], which rewinds every
-//! class's bump cursor while keeping the chunks). Raw allocations in a
-//! bump-only allocator take the exact-layout path regardless of size:
-//! metadata blocks must survive `reset` (which rewinds every bump
-//! cursor), so they cannot live in the rewindable chunks.
+//! chunk's bump cursor while keeping the chunks). Raw allocations in a
+//! bump-only allocator go to the LOS regardless of size: metadata blocks
+//! must survive `reset` (which rewinds every bump cursor), so they cannot
+//! live in the rewindable chunks — and the LOS free list means a recycled
+//! scratch heap reuses its old metadata blocks instead of paying fresh
+//! system allocations.
 //!
 //! **Decommit.** A reuse-mode allocator never shrinks on its own: chunks
 //! committed for one load spike stay committed for the life of the heap.
 //! `SlabAlloc::trim` (surfaced as [`Heap::trim`](super::Heap::trim)) is
-//! the watermark decommit pass for long-running
-//! servers: at a generation barrier it finds fully-empty chunks (every
-//! handed-out block returned to the free list) per size class and returns
-//! the ones beyond a configurable watermark to the system allocator,
-//! rebuilding the class free list without the dropped chunks' blocks.
-//! Live blocks pin their chunk by definition, so decommit never moves or
-//! invalidates storage — outputs are bit-identical with decommit on or
-//! off.
+//! the watermark decommit pass for long-running servers: at a generation
+//! barrier it finds fully-empty chunks — the per-chunk live counter is
+//! zero — per size class and returns the ones beyond a configurable
+//! watermark to the system allocator, discarding their free lists
+//! wholesale (no rebuild: each chunk owns its own list). Live blocks pin
+//! their chunk by definition, so decommit never moves or invalidates
+//! storage — outputs are bit-identical with decommit on or off.
+//!
+//! **Evacuation.** Decommit only helps when churn happens to empty a
+//! chunk completely; resampling instead scatters survivors thinly across
+//! many chunks. [`SlabAlloc::begin_evacuation`] marks chunks whose live
+//! bytes fall below a sparsity threshold (and which hold no raw blocks
+//! and are not the bump chunk) as victims and detaches their free lists;
+//! the owning heap then walks its slots and placement-moves every
+//! surviving payload out of a victim with [`SlabAlloc::evacuate_block`]
+//! (a bitwise [`Payload::relocate`] into a fresh block of the same
+//! class); [`SlabAlloc::finish_evacuation`] decommits the now-empty
+//! victims. `Lazy` handles and memo entries are index-based — only the
+//! slot's `PBox` fat pointer is re-pointed — so evacuation relocates
+//! storage without changing a single output bit. Opt-in via
+//! `--evacuate-threshold`.
 
 use std::alloc::Layout;
 use std::ops::{Deref, DerefMut};
@@ -88,7 +128,8 @@ pub enum AllocatorKind {
     /// Every payload through the system allocator with its exact layout
     /// (the pre-slab behaviour; the differential baseline).
     System,
-    /// Size-class slabs with free-list reuse (the default).
+    /// Size-class slabs with free-list reuse plus the large-object space
+    /// (the default).
     Slab,
 }
 
@@ -115,15 +156,15 @@ impl AllocatorKind {
 }
 
 /// Block sizes served from slabs. Multiples of [`BLOCK_ALIGN`]; requests
-/// above the last class (or over-aligned) take the exact-layout path.
+/// above the last class (or over-aligned) take the large-object space.
 /// The classes are dense at the bottom — every evaluation model's payload
 /// struct lands in 16..384 — and quarter-spaced above.
 pub(crate) const SIZE_CLASSES: [usize; 14] = [
     16, 32, 48, 64, 96, 128, 192, 256, 384, 512, 768, 1024, 1536, 2048,
 ];
 
-/// Alignment of every slab block (and chunk). Payloads needing more fall
-/// back to the exact-layout path.
+/// Alignment of every slab block (and chunk). Payloads needing more go to
+/// the large-object space.
 pub(crate) const BLOCK_ALIGN: usize = 16;
 
 /// Bytes per slab chunk. Small enough that a scratch heap costs little,
@@ -140,7 +181,7 @@ pub const CHUNK_BYTES: usize = 64 * 1024;
 pub const DEFAULT_DECOMMIT_WATERMARK: usize = 2;
 
 /// Smallest class index whose block fits `size`, or `None` for the
-/// exact-layout path.
+/// large-object space.
 #[inline]
 fn class_for(layout: Layout) -> Option<usize> {
     if layout.align() > BLOCK_ALIGN || layout.size() > SIZE_CLASSES[SIZE_CLASSES.len() - 1] {
@@ -187,22 +228,32 @@ impl Drop for Chunk {
 /// containers ([`SlabVec`], the memo bucket store) for raw blocks.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub(crate) enum BlockLoc {
-    /// A slab block of the given size class.
-    Slab(u8),
-    /// Exact-layout system allocation (large/over-aligned payloads, and
-    /// everything under the `System` backend).
+    /// A slab block: size class plus the owning chunk's slot index, so
+    /// the free-time counter update is O(1).
+    Slab {
+        /// Size-class index into [`SIZE_CLASSES`].
+        class: u8,
+        /// Chunk slot index within the class (stable across trim —
+        /// vacated slots are recycled, never compacted away).
+        chunk: u32,
+    },
+    /// A large-object-space block (over 2 KiB or over-aligned on the
+    /// `Slab` backend).
+    Los,
+    /// Exact-layout system allocation (everything under the `System`
+    /// backend).
     Sys,
     /// Zero-sized payload: no storage at all.
     Zst,
 }
 
-/// Owning handle to a payload stored in a [`SlabAlloc`] (or system
+/// Owning handle to a payload stored in a [`SlabAlloc`] (or LOS/system
 /// memory). Behaves like `Box<dyn Payload>` for access (`Deref`), but
 /// deallocation belongs to the allocator: return it through
-/// `SlabAlloc::dealloc` so the block re-enters its free list. Dropping
-/// a `PBox` directly (heap teardown, unwind paths) is safe — the payload
-/// destructor runs and exact-layout memory is freed — but a slab block
-/// then stays with its chunk until the allocator drops.
+/// `SlabAlloc::dealloc` so the block re-enters its chunk's free list.
+/// Dropping a `PBox` directly (heap teardown, unwind paths) is safe — the
+/// payload destructor runs and exact-layout/LOS memory is freed — but a
+/// slab block then stays with its chunk until the allocator drops.
 pub struct PBox {
     ptr: *mut dyn Payload,
     loc: BlockLoc,
@@ -249,11 +300,15 @@ impl Drop for PBox {
         unsafe {
             let layout = Layout::for_value(&*self.ptr);
             std::ptr::drop_in_place(self.ptr);
-            if self.loc == BlockLoc::Sys && layout.size() > 0 {
-                std::alloc::dealloc(self.ptr as *mut u8, layout);
+            match self.loc {
+                BlockLoc::Sys if layout.size() > 0 => {
+                    std::alloc::dealloc(self.ptr as *mut u8, layout);
+                }
+                BlockLoc::Los => los_teardown_free(self.ptr as *mut u8, layout),
+                // Slab blocks stay with their chunk (freed when the
+                // SlabAlloc drops); Zst owns no memory.
+                _ => {}
             }
-            // Slab blocks stay with their chunk (freed when the
-            // SlabAlloc drops); Zst owns no memory.
         }
     }
 }
@@ -261,35 +316,90 @@ impl Drop for PBox {
 /// What one allocation did — the heap mirrors this into `HeapMetrics`.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct AllocReceipt {
-    /// Served from a class free list (reuse — the whole point).
+    /// Served from a free list (slab chunk or LOS — reuse, the whole
+    /// point).
     pub reused: bool,
-    /// Exact-layout path (large/over-aligned payload or System backend).
+    /// Off-slab path (LOS block or System-backend exact layout).
     pub large: bool,
-    /// Slab block size handed out (0 on the exact-layout/ZST paths).
+    /// Slab block size handed out (0 on the LOS/exact-layout/ZST paths).
     pub block_bytes: usize,
     /// The allocation grew the slab by one chunk.
     pub new_chunk: bool,
+    /// Total LOS bytes of the block handed out, header included (0 off
+    /// the LOS path).
+    pub los_bytes: usize,
 }
 
 /// What one deallocation returned.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct FreeReceipt {
-    /// Slab block size returned (0 on the exact-layout/ZST paths).
+    /// Slab block size returned (0 on the LOS/exact-layout/ZST paths).
     pub block_bytes: usize,
+    /// Total LOS bytes returned to the LOS free list (0 off the LOS
+    /// path).
+    pub los_bytes: usize,
 }
 
-/// Per-size-class state: chunks, a bump cursor, and the intrusive free
-/// list.
-struct ClassState {
-    block: usize,
-    chunks: Vec<Chunk>,
-    /// Chunk currently being bumped (`== chunks.len()` only when empty).
-    cur: usize,
-    /// Bump offset within `chunks[cur]`.
-    offset: usize,
-    /// Intrusive free-list head (null = empty). Each free block's first
-    /// word links to the next free block of the class.
+/// One chunk slot of a [`ClassState`]: the committed memory (if any) plus
+/// the per-chunk liveness counters and intrusive free list. Slots are
+/// stable — a decommitted chunk leaves its slot behind (`chunk: None`,
+/// recorded in the class's vacant list) so every outstanding
+/// [`BlockLoc::Slab`] index stays valid.
+struct ChunkState {
+    /// The 64 KiB allocation, `None` while the slot is vacant.
+    chunk: Option<Chunk>,
+    /// This chunk's intrusive free-list head (null = empty). Each free
+    /// block's first word links to the next free block *of this chunk*.
     free: *mut u8,
+    /// Blocks on `free` (kept exact so `trim` never walks a list).
+    free_count: u32,
+    /// Blocks handed out and not yet freed — the liveness counter.
+    live: u32,
+    /// Live blocks that are raw (metadata) allocations. Raw blocks are
+    /// unreachable from heap slots, so `live_raw > 0` pins the chunk
+    /// against evacuation.
+    live_raw: u32,
+    /// Blocks ever bumped out of this chunk since commit/reset.
+    bumped: u32,
+    /// Whether this chunk is on the class's avail stack (has free
+    /// blocks to pop). Kept in lockstep with membership.
+    in_avail: bool,
+    /// Marked as an evacuation victim between `begin_evacuation` and
+    /// `finish_evacuation`.
+    evacuating: bool,
+}
+
+impl ChunkState {
+    /// A freshly committed chunk (one new 64 KiB system allocation).
+    fn committed() -> ChunkState {
+        ChunkState {
+            chunk: Some(Chunk::new()),
+            free: std::ptr::null_mut(),
+            free_count: 0,
+            live: 0,
+            live_raw: 0,
+            bumped: 0,
+            in_avail: false,
+            evacuating: false,
+        }
+    }
+}
+
+/// Per-size-class state: chunk slots, the avail stack of chunks with
+/// free blocks, the vacant slot list, and the current bump chunk.
+struct ClassState {
+    /// Block size of this class.
+    block: usize,
+    /// Chunk slots; indices are stable (see [`ChunkState`]).
+    chunks: Vec<ChunkState>,
+    /// Slot indices with `chunk: None`, reusable by the next commit.
+    vacant: Vec<u32>,
+    /// LIFO stack of chunk slots with non-empty free lists. Invariant:
+    /// a committed, non-evacuating chunk is on the stack iff
+    /// `free_count > 0` (and `in_avail` mirrors membership).
+    avail: Vec<u32>,
+    /// Chunk currently being bump-allocated, if any.
+    bump: Option<u32>,
 }
 
 impl ClassState {
@@ -297,24 +407,28 @@ impl ClassState {
         ClassState {
             block,
             chunks: Vec::new(),
-            cur: 0,
-            offset: 0,
-            free: std::ptr::null_mut(),
+            vacant: Vec::new(),
+            avail: Vec::new(),
+            bump: None,
         }
     }
 }
 
-/// The size-class slab allocator owning one heap's payload storage. See
-/// the module docs for the design; see `HeapMetrics`' `slab_*` fields for
-/// the gauges the owning heap maintains from the receipts.
+/// The size-class slab allocator (plus large-object space) owning one
+/// heap's payload storage. See the module docs for the design; see
+/// `HeapMetrics`' `slab_*` and `los_*` fields for the gauges the owning
+/// heap maintains from the receipts.
 pub struct SlabAlloc {
     kind: AllocatorKind,
     /// Scratch mode: frees run destructors but build no free lists; the
     /// storage is reclaimed in bulk by [`SlabAlloc::reset`] or drop.
     bump_only: bool,
     classes: Vec<ClassState>,
-    /// Slab blocks currently handed out (the reset-safety gauge).
+    /// Slab blocks currently handed out (the reset-safety gauge; LOS
+    /// blocks are tracked inside [`Los`]).
     live_blocks: usize,
+    /// The large-object space shared by all classes' misfits.
+    los: Los,
 }
 
 // SAFETY: the raw free-list pointers and chunk pointers all point into
@@ -330,6 +444,7 @@ impl SlabAlloc {
             bump_only: false,
             classes: SIZE_CLASSES.iter().map(|&b| ClassState::new(b)).collect(),
             live_blocks: 0,
+            los: Los::new(),
         }
     }
 
@@ -363,21 +478,32 @@ impl SlabAlloc {
 
     /// Rewind every class to empty — the scratch heap's bulk reclaim.
     /// Chunks are kept, so a recycled scratch allocates without touching
-    /// the system allocator at all. Every block must have been freed
+    /// the system allocator at all (the next bump pass finds the retained
+    /// chunks virgin again). Every block must have been freed
     /// (destructors run on free in bump-only mode too); resetting with
-    /// live blocks would hand their storage out again.
+    /// live blocks would hand their storage out again. The LOS is
+    /// deliberately untouched: its blocks (scratch metadata) survive
+    /// reset on the free list for the next incarnation to reuse.
     pub fn reset(&mut self) {
         assert_eq!(self.live_blocks, 0, "reset with live slab blocks");
         for c in &mut self.classes {
-            c.cur = 0;
-            c.offset = 0;
-            c.free = std::ptr::null_mut();
+            c.avail.clear();
+            c.bump = None;
+            for ch in &mut c.chunks {
+                debug_assert!(!ch.evacuating, "reset during evacuation");
+                ch.free = std::ptr::null_mut();
+                ch.free_count = 0;
+                ch.live = 0;
+                ch.live_raw = 0;
+                ch.bumped = 0;
+                ch.in_avail = false;
+            }
         }
     }
 
     /// Place `value` (placement-write; the typed hot path — no `Box`).
     pub(crate) fn alloc_value<T: Payload>(&mut self, value: T) -> (PBox, AllocReceipt) {
-        let (mem, loc, r) = self.alloc_block(Layout::new::<T>());
+        let (mem, loc, r) = self.alloc_block(Layout::new::<T>(), false);
         // SAFETY: `mem` has the size/align of `T` and is uniquely ours.
         let ptr = unsafe {
             std::ptr::write(mem as *mut T, value);
@@ -389,7 +515,7 @@ impl SlabAlloc {
     /// Placement-clone `src` (the `Copy`/transplant hot path — no
     /// intermediate `Box`).
     pub(crate) fn alloc_clone(&mut self, src: &dyn Payload) -> (PBox, AllocReceipt) {
-        let (mem, loc, r) = self.alloc_block(src.layout());
+        let (mem, loc, r) = self.alloc_block(src.layout(), false);
         // SAFETY: `mem` matches `src.layout()` and is uniquely ours.
         let ptr = unsafe { src.clone_into(mem) };
         (PBox { ptr, loc }, r)
@@ -398,72 +524,103 @@ impl SlabAlloc {
     /// Move a boxed payload into owned storage, freeing the box's
     /// allocation without running the destructor.
     pub(crate) fn adopt_box(&mut self, payload: Box<dyn Payload>) -> (PBox, AllocReceipt) {
-        let (mem, loc, r) = self.alloc_block(Layout::for_value(&*payload));
+        let (mem, loc, r) = self.alloc_block(Layout::for_value(&*payload), false);
         // SAFETY: `mem` matches the payload's concrete layout.
         let ptr = unsafe { payload.move_into(mem) };
         (PBox { ptr, loc }, r)
     }
 
     /// Destroy a payload and return its block: destructor in place, then
-    /// the block re-enters its class free list (reuse mode) or merely
-    /// stops counting as live (bump-only mode); exact-layout memory goes
-    /// back to the system allocator.
+    /// the block re-enters its chunk's free list (reuse mode) or merely
+    /// stops counting as live (bump-only mode); LOS blocks go on the LOS
+    /// free list, exact-layout memory back to the system allocator.
     pub(crate) fn dealloc(&mut self, payload: PBox) -> FreeReceipt {
         let (ptr, loc) = payload.into_parts();
         // SAFETY: live uniquely-owned payload; layout read before drop.
         let layout = unsafe { Layout::for_value(&*ptr) };
         unsafe { std::ptr::drop_in_place(ptr) };
-        self.free_raw(ptr as *mut u8, layout, loc)
+        self.release(ptr as *mut u8, layout, loc, false)
     }
 
     /// Raw-bytes allocation over the same size classes as payloads — the
     /// storage path of memo bucket arrays and label slot vectors. Three
     /// deviations from the payload path: bump-only (scratch) allocators
-    /// route *every* raw request through the exact-layout path, because
-    /// metadata must survive [`SlabAlloc::reset`]'s bump rewind; the
-    /// `System` backend likewise takes exact layout (its contract — no
-    /// slab storage at all); oversized/over-aligned requests fall back to
-    /// exact layout just like large payloads. Callers go through
-    /// [`RawCtx`] so the receipt lands in the owning heap's metrics.
+    /// route *every* raw request through the LOS, because metadata must
+    /// survive [`SlabAlloc::reset`]'s bump rewind (and the LOS free list
+    /// lets a recycled scratch reuse its old blocks); the `System`
+    /// backend takes exact layout (its contract — no slab storage at
+    /// all); oversized/over-aligned requests go to the LOS just like
+    /// large payloads. Callers go through [`RawCtx`] so the receipt lands
+    /// in the owning heap's metrics.
     pub(crate) fn alloc_raw(&mut self, layout: Layout) -> (*mut u8, BlockLoc, AllocReceipt) {
-        if self.bump_only {
+        if layout.size() == 0 || self.kind != AllocatorKind::Slab {
             return Self::alloc_exact(layout);
         }
-        self.alloc_block(layout)
+        if self.bump_only {
+            return self.los.alloc(layout);
+        }
+        self.alloc_block(layout, true)
     }
 
     /// Return a raw block obtained from [`SlabAlloc::alloc_raw`]. No
     /// destructor runs — the caller owns the contents; slab blocks
-    /// re-enter their class free list, exact-layout memory goes back to
-    /// the system allocator.
+    /// re-enter their chunk's free list, LOS blocks the LOS free list,
+    /// exact-layout memory goes back to the system allocator.
     pub(crate) fn free_raw(&mut self, ptr: *mut u8, layout: Layout, loc: BlockLoc) -> FreeReceipt {
+        self.release(ptr, layout, loc, true)
+    }
+
+    /// The shared free path behind [`SlabAlloc::dealloc`] (`raw: false`)
+    /// and [`SlabAlloc::free_raw`] (`raw: true`): route the block back to
+    /// wherever it came from and keep the per-chunk counters exact.
+    fn release(&mut self, ptr: *mut u8, layout: Layout, loc: BlockLoc, raw: bool) -> FreeReceipt {
         match loc {
-            BlockLoc::Zst => FreeReceipt { block_bytes: 0 },
+            BlockLoc::Zst => FreeReceipt {
+                block_bytes: 0,
+                los_bytes: 0,
+            },
             BlockLoc::Sys => {
                 debug_assert!(layout.size() > 0);
                 // SAFETY: allocated by the exact-layout path with this
                 // layout.
                 unsafe { std::alloc::dealloc(ptr, layout) };
-                FreeReceipt { block_bytes: 0 }
+                FreeReceipt {
+                    block_bytes: 0,
+                    los_bytes: 0,
+                }
             }
-            BlockLoc::Slab(ci) => {
+            BlockLoc::Los => self.los.free(ptr, layout),
+            BlockLoc::Slab { class, chunk } => {
                 self.live_blocks -= 1;
-                let c = &mut self.classes[ci as usize];
+                let c = &mut self.classes[class as usize];
+                let ch = &mut c.chunks[chunk as usize];
+                debug_assert!(ch.chunk.is_some(), "free into a vacant chunk slot");
+                debug_assert!(!ch.evacuating, "free into an evacuating chunk");
+                ch.live -= 1;
+                if raw {
+                    ch.live_raw -= 1;
+                }
                 if !self.bump_only {
                     // SAFETY: the block is ≥ 16 bytes, 16-aligned, and
                     // dead — its first word becomes the free-list link.
-                    unsafe { *(ptr as *mut *mut u8) = c.free };
-                    c.free = ptr;
+                    unsafe { *(ptr as *mut *mut u8) = ch.free };
+                    ch.free = ptr;
+                    ch.free_count += 1;
+                    if !ch.in_avail {
+                        ch.in_avail = true;
+                        c.avail.push(chunk);
+                    }
                 }
                 FreeReceipt {
                     block_bytes: c.block,
+                    los_bytes: 0,
                 }
             }
         }
     }
 
-    /// The exact-layout path shared by large payloads, the `System`
-    /// backend, and bump-only raw allocations.
+    /// The exact-layout path: ZSTs, and everything under the `System`
+    /// backend.
     fn alloc_exact(layout: Layout) -> (*mut u8, BlockLoc, AllocReceipt) {
         if layout.size() == 0 {
             return (
@@ -474,6 +631,7 @@ impl SlabAlloc {
                     large: false,
                     block_bytes: 0,
                     new_chunk: false,
+                    los_bytes: 0,
                 },
             );
         }
@@ -490,237 +648,640 @@ impl SlabAlloc {
                 large: true,
                 block_bytes: 0,
                 new_chunk: false,
+                los_bytes: 0,
             },
         )
     }
 
-    fn alloc_block(&mut self, layout: Layout) -> (*mut u8, BlockLoc, AllocReceipt) {
-        if layout.size() == 0 {
+    /// The block allocation path shared by payloads (`raw: false`) and
+    /// reuse-mode raw requests (`raw: true`): pop from the avail stack's
+    /// top chunk, else bump — advancing through retained virgin chunks (a
+    /// reset scratch walks its old chunks again) and committing a fresh
+    /// chunk (into a vacant slot if one exists) when all are full.
+    fn alloc_block(&mut self, layout: Layout, raw: bool) -> (*mut u8, BlockLoc, AllocReceipt) {
+        if layout.size() == 0 || self.kind != AllocatorKind::Slab {
             return Self::alloc_exact(layout);
         }
-        let class = if self.kind == AllocatorKind::Slab {
-            class_for(layout)
-        } else {
-            None
-        };
-        let Some(ci) = class else {
-            return Self::alloc_exact(layout);
+        let Some(ci) = class_for(layout) else {
+            return self.los.alloc(layout);
         };
         let c = &mut self.classes[ci];
         self.live_blocks += 1;
-        if !c.free.is_null() {
-            let p = c.free;
+        if let Some(&j) = c.avail.last() {
+            let block = c.block;
+            let ch = &mut c.chunks[j as usize];
+            let p = ch.free;
+            debug_assert!(!p.is_null(), "avail chunk with empty free list");
             // SAFETY: `p` is a free block whose first word is the link.
-            c.free = unsafe { *(p as *const *mut u8) };
+            ch.free = unsafe { *(p as *const *mut u8) };
+            ch.free_count -= 1;
+            ch.live += 1;
+            ch.live_raw += u32::from(raw);
+            if ch.free_count == 0 {
+                ch.in_avail = false;
+                c.avail.pop();
+            }
             return (
                 p,
-                BlockLoc::Slab(ci as u8),
+                BlockLoc::Slab {
+                    class: ci as u8,
+                    chunk: j,
+                },
                 AllocReceipt {
                     reused: true,
                     large: false,
-                    block_bytes: c.block,
+                    block_bytes: block,
                     new_chunk: false,
+                    los_bytes: 0,
                 },
             );
         }
-        // Bump, advancing through retained chunks (a reset scratch walks
-        // its old chunks again) and growing by one chunk when all are
-        // full.
+        // Bump path.
         let mut new_chunk = false;
-        let p = loop {
-            if c.cur < c.chunks.len() && c.offset + c.block <= CHUNK_BYTES {
-                // SAFETY: offset + block ≤ CHUNK_BYTES keeps the pointer
-                // inside the chunk allocation.
-                let p = unsafe { c.chunks[c.cur].ptr.add(c.offset) };
-                c.offset += c.block;
-                break p;
+        let j = loop {
+            if let Some(j) = c.bump {
+                if (c.chunks[j as usize].bumped as usize + 1) * c.block <= CHUNK_BYTES {
+                    break j;
+                }
+                c.bump = None;
             }
-            if c.cur + 1 < c.chunks.len() {
-                c.cur += 1;
-                c.offset = 0;
+            // A retained virgin chunk (reset scratch, or decommit-spared
+            // spare)? O(chunks), and runs at most once per chunk-fill.
+            if let Some(v) = c
+                .chunks
+                .iter()
+                .position(|ch| ch.chunk.is_some() && ch.bumped == 0)
+            {
+                c.bump = Some(v as u32);
                 continue;
             }
-            c.chunks.push(Chunk::new());
+            // Commit a fresh chunk, reusing a vacant slot if any (keeps
+            // outstanding BlockLoc chunk indices stable and the slot
+            // vector from growing without bound under trim churn).
+            let j = if let Some(j) = c.vacant.pop() {
+                c.chunks[j as usize].chunk = Some(Chunk::new());
+                j
+            } else {
+                c.chunks.push(ChunkState::committed());
+                (c.chunks.len() - 1) as u32
+            };
             new_chunk = true;
-            c.cur = c.chunks.len() - 1;
-            c.offset = 0;
+            c.bump = Some(j);
+            break j;
         };
+        let block = c.block;
+        let ch = &mut c.chunks[j as usize];
+        let off = ch.bumped as usize * block;
+        // SAFETY: `(bumped + 1) * block <= CHUNK_BYTES` (checked above;
+        // trivially true for a fresh chunk) keeps the pointer inside the
+        // chunk allocation.
+        let p = unsafe { ch.chunk.as_ref().expect("bump chunk committed").ptr.add(off) };
+        ch.bumped += 1;
+        ch.live += 1;
+        ch.live_raw += u32::from(raw);
         (
             p,
-            BlockLoc::Slab(ci as u8),
+            BlockLoc::Slab {
+                class: ci as u8,
+                chunk: j,
+            },
             AllocReceipt {
                 reused: false,
                 large: false,
-                block_bytes: c.block,
+                block_bytes: block,
                 new_chunk,
+                los_bytes: 0,
             },
         )
     }
 
     /// Watermark decommit pass (`Heap::trim` calls this at generation
-    /// barriers): per size class, find *fully-empty* chunks — every block
-    /// ever bumped out of the chunk is back on the free list — and return
-    /// the ones beyond `keep` to the system allocator, rebuilding the
-    /// free list without their blocks. Chunks holding any live block are
-    /// never touched, so no pointer is invalidated. The current bump
-    /// chunk is kept preferentially (it holds the class's only virgin
-    /// space). O(free blocks + chunks·log chunks) — a cold barrier pass,
-    /// not hot-path work. No-op for bump-only (scratch) allocators, whose
-    /// retain-everything pooling contract this deliberately preserves,
-    /// and for the `System` backend (no chunks exist).
+    /// barriers): per size class, find *fully-empty* chunks — the live
+    /// counter is zero — and return the ones beyond `keep` to the system
+    /// allocator, discarding their free lists wholesale. O(chunks): the
+    /// per-chunk counters make the scan independent of how many free
+    /// blocks exist, which is what lets trim run at every barrier on huge
+    /// heaps. Chunks holding any live block are never touched, so no
+    /// pointer is invalidated; the current bump chunk is kept
+    /// preferentially (it holds the class's only virgin space). Also
+    /// trims the LOS free list beyond `keep` blocks. No-op for bump-only
+    /// (scratch) allocators, whose retain-everything pooling contract
+    /// this deliberately preserves, and for the `System` backend (no
+    /// chunks exist).
     pub(crate) fn trim(&mut self, keep: usize) -> TrimStats {
         let mut stats = TrimStats {
             chunks: 0,
             bytes: 0,
+            los_blocks: 0,
+            los_bytes: 0,
         };
         if self.bump_only || self.kind != AllocatorKind::Slab {
             return stats;
         }
         for c in &mut self.classes {
-            // Fewer chunks than the watermark keeps: nothing can be
-            // freed, so skip the free-list walk entirely — this is what
-            // keeps the per-generation barrier cheap in steady state.
-            if c.chunks.len() <= keep {
+            let mut empties: Vec<u32> = Vec::new();
+            for (j, ch) in c.chunks.iter().enumerate() {
+                if ch.chunk.is_some() && ch.live == 0 {
+                    debug_assert!(!ch.evacuating);
+                    empties.push(j as u32);
+                }
+            }
+            if empties.len() <= keep {
                 continue;
             }
-            let blocks_per_chunk = CHUNK_BYTES / c.block;
-            // Locate each free block's chunk by address (chunks are not
-            // address-ordered, so sort the bases once).
-            let mut bases: Vec<(usize, usize)> = c
-                .chunks
-                .iter()
-                .enumerate()
-                .map(|(j, ch)| (ch.ptr as usize, j))
-                .collect();
-            bases.sort_unstable();
-            let chunk_of = |addr: usize| -> usize {
-                let i = match bases.binary_search_by(|&(b, _)| b.cmp(&addr)) {
-                    Ok(i) => i,
-                    Err(i) => i - 1,
-                };
-                debug_assert!(addr >= bases[i].0 && addr - bases[i].0 < CHUNK_BYTES);
-                bases[i].1
-            };
-            let mut free_in = vec![0usize; c.chunks.len()];
-            let mut p = c.free;
-            while !p.is_null() {
-                free_in[chunk_of(p as usize)] += 1;
-                // SAFETY: `p` is a free block; its first word is the link.
-                p = unsafe { *(p as *const *mut u8) };
-            }
-            // Blocks ever bumped out of chunk j. Reuse mode keeps `cur`
-            // at the last chunk: earlier chunks are fully bumped, later
-            // ones do not exist.
-            debug_assert_eq!(c.cur, c.chunks.len() - 1, "reuse-mode bump invariant");
-            let bumped = |j: usize| {
-                if j < c.cur {
-                    blocks_per_chunk
-                } else {
-                    c.offset / c.block
-                }
-            };
-            let empty: Vec<bool> = (0..c.chunks.len())
-                .map(|j| free_in[j] == bumped(j))
-                .collect();
-            let n_empty = empty.iter().filter(|e| **e).count();
-            if n_empty <= keep {
-                continue;
-            }
-            // Choose victims: lowest-index empties first, the bump chunk
-            // last (its virgin space is the cheapest storage the class
-            // has).
-            let mut to_free = n_empty - keep;
-            let mut dropf = vec![false; c.chunks.len()];
-            for j in 0..c.chunks.len() {
-                if to_free == 0 {
-                    break;
-                }
-                if empty[j] && j != c.cur {
-                    dropf[j] = true;
-                    to_free -= 1;
+            // Keep the bump chunk preferentially — its virgin space is
+            // the cheapest storage the class has. Moving it to the back
+            // puts it among the survivors (the last `keep` entries).
+            if let Some(b) = c.bump {
+                if let Some(pos) = empties.iter().position(|&j| j == b) {
+                    empties.remove(pos);
+                    empties.push(b);
                 }
             }
-            if to_free > 0 && empty[c.cur] {
-                dropf[c.cur] = true;
-                to_free -= 1;
-            }
-            debug_assert_eq!(to_free, 0);
-            // Rebuild the free list without blocks in dropped chunks
-            // (order preserved — decommit must not perturb reuse order).
-            let mut head: *mut u8 = std::ptr::null_mut();
-            let mut tail: *mut u8 = std::ptr::null_mut();
-            let mut p = c.free;
-            while !p.is_null() {
-                // SAFETY: free-list walk as above.
-                let next = unsafe { *(p as *const *mut u8) };
-                if !dropf[chunk_of(p as usize)] {
-                    if head.is_null() {
-                        head = p;
-                    } else {
-                        // SAFETY: `tail` is a retained free block.
-                        unsafe { *(tail as *mut *mut u8) = p };
-                    }
-                    tail = p;
+            let n_drop = empties.len() - keep;
+            for &j in &empties[..n_drop] {
+                let ch = &mut c.chunks[j as usize];
+                // Dropping the Option's Chunk returns the 64 KiB to the
+                // system allocator; the free list dies with it (each
+                // chunk owns its own list — nothing to rebuild).
+                ch.chunk = None;
+                ch.free = std::ptr::null_mut();
+                ch.free_count = 0;
+                ch.bumped = 0;
+                ch.in_avail = false;
+                c.vacant.push(j);
+                if c.bump == Some(j) {
+                    c.bump = None;
                 }
-                p = next;
+                stats.chunks += 1;
+                stats.bytes += CHUNK_BYTES;
             }
-            if !tail.is_null() {
-                // SAFETY: as above.
-                unsafe { *(tail as *mut *mut u8) = std::ptr::null_mut() };
-            }
-            c.free = head;
-            // Drop the victim chunks (their `Drop` returns the 64 KiB to
-            // the system allocator) and re-point the bump cursor.
-            let cur_dropped = dropf[c.cur];
-            let old_cur = c.cur;
-            let old = std::mem::take(&mut c.chunks);
-            let mut new_cur = 0usize;
-            for (j, ch) in old.into_iter().enumerate() {
-                if dropf[j] {
-                    stats.chunks += 1;
-                    stats.bytes += CHUNK_BYTES;
-                    drop(ch);
-                } else {
-                    if j == old_cur {
-                        new_cur = c.chunks.len();
-                    }
-                    c.chunks.push(ch);
+            let chunks = &c.chunks;
+            c.avail.retain(|&j| chunks[j as usize].in_avail);
+        }
+        let (lb, lbytes) = self.los.trim(keep);
+        stats.los_blocks = lb;
+        stats.los_bytes = lbytes;
+        stats
+    }
+
+    /// Mark evacuation victims: committed chunks whose live payload bytes
+    /// are at or below `threshold × CHUNK_BYTES`, hold at least one live
+    /// block (fully-empty chunks are `trim`'s business), hold *no* raw
+    /// blocks (raw blocks are unreachable from heap slots, so they pin
+    /// the chunk), and are not the current bump chunk. Victims leave the
+    /// avail stack and their free lists are discarded — the survivors are
+    /// about to be moved out and the chunk decommitted by
+    /// [`SlabAlloc::finish_evacuation`]. Returns whether any victim was
+    /// marked; `false` (bump-only or `System` backend, or nothing sparse
+    /// enough) means the heap can skip the slot walk. A threshold of 0.0
+    /// never selects (a victim needs `live > 0`); 1.0 compacts every
+    /// non-pinned chunk.
+    pub(crate) fn begin_evacuation(&mut self, threshold: f64) -> bool {
+        if self.bump_only || self.kind != AllocatorKind::Slab {
+            return false;
+        }
+        let mut any = false;
+        for c in &mut self.classes {
+            let limit = threshold * CHUNK_BYTES as f64;
+            let bump = c.bump;
+            let block = c.block;
+            let mut marked = false;
+            for (j, ch) in c.chunks.iter_mut().enumerate() {
+                if ch.chunk.is_none() || ch.live == 0 || ch.live_raw > 0 {
+                    continue;
                 }
-            }
-            if cur_dropped {
-                // Every survivor is fully bumped (their free blocks stay
-                // on the list): mark the cursor exhausted so the next
-                // free-list miss opens a fresh chunk.
-                if c.chunks.is_empty() {
-                    c.cur = 0;
-                    c.offset = 0;
-                } else {
-                    c.cur = c.chunks.len() - 1;
-                    c.offset = blocks_per_chunk * c.block;
+                if bump == Some(j as u32) {
+                    continue;
                 }
-            } else {
-                c.cur = new_cur;
+                if (ch.live as usize * block) as f64 > limit {
+                    continue;
+                }
+                ch.evacuating = true;
+                ch.free = std::ptr::null_mut();
+                ch.free_count = 0;
+                ch.in_avail = false;
+                marked = true;
+            }
+            if marked {
+                let chunks = &c.chunks;
+                c.avail.retain(|&j| !chunks[j as usize].evacuating);
+                any = true;
+            }
+        }
+        any
+    }
+
+    /// Placement-move one payload out of an evacuating chunk: allocate a
+    /// fresh block of the same class (victims are detached from the avail
+    /// stack and never the bump chunk, so the destination is always a
+    /// non-victim), bitwise-relocate the payload, and re-point the `PBox`
+    /// in place. Returns `None` if the payload is not in an evacuating
+    /// chunk (the common case on the slot walk). The vacated block is
+    /// simply forgotten — its chunk is decommitted wholesale by
+    /// [`SlabAlloc::finish_evacuation`].
+    pub(crate) fn evacuate_block(&mut self, pb: &mut PBox) -> Option<EvacMove> {
+        let BlockLoc::Slab { class, chunk } = pb.loc else {
+            return None;
+        };
+        if !self.classes[class as usize].chunks[chunk as usize].evacuating {
+            return None;
+        }
+        // SAFETY: live payload; layout read from the vtable.
+        let layout = unsafe { Layout::for_value(&*pb.ptr) };
+        let (mem, loc, r) = self.alloc_block(layout, false);
+        debug_assert!(
+            matches!(loc, BlockLoc::Slab { .. }),
+            "evacuation destination off-slab"
+        );
+        // SAFETY: `mem` matches the payload's layout and is a fresh
+        // disjoint block; the source is treated as moved-out (its chunk
+        // is dropped without running destructors).
+        let new_ptr = unsafe { pb.relocate(mem) };
+        let c = &mut self.classes[class as usize];
+        let ch = &mut c.chunks[chunk as usize];
+        ch.live -= 1;
+        // Net zero with the destination alloc above: evacuation moves a
+        // block, it does not create one.
+        self.live_blocks -= 1;
+        pb.ptr = new_ptr;
+        pb.loc = loc;
+        Some(EvacMove {
+            bytes: c.block,
+            new_chunk: r.new_chunk,
+        })
+    }
+
+    /// Decommit the (now empty) evacuation victims and clear the marks.
+    /// Call after the owning heap has walked every slot through
+    /// [`SlabAlloc::evacuate_block`]. Returns the freed chunks as
+    /// [`TrimStats`] (LOS fields zero) for the heap's committed gauges.
+    pub(crate) fn finish_evacuation(&mut self) -> TrimStats {
+        let mut stats = TrimStats {
+            chunks: 0,
+            bytes: 0,
+            los_blocks: 0,
+            los_bytes: 0,
+        };
+        for c in &mut self.classes {
+            for (j, ch) in c.chunks.iter_mut().enumerate() {
+                if !ch.evacuating {
+                    continue;
+                }
+                debug_assert_eq!(ch.live, 0, "evacuation left a live block behind");
+                ch.evacuating = false;
+                if ch.live > 0 {
+                    // Defensive (unreachable by construction: every
+                    // payload block is reachable from a slot, and raw
+                    // blocks pin their chunk): keep the chunk committed
+                    // rather than free storage under a live pointer. Its
+                    // discarded free blocks leak until the chunk empties.
+                    continue;
+                }
+                ch.chunk = None;
+                ch.free = std::ptr::null_mut();
+                ch.free_count = 0;
+                ch.live_raw = 0;
+                ch.bumped = 0;
+                ch.in_avail = false;
+                c.vacant.push(j as u32);
+                stats.chunks += 1;
+                stats.bytes += CHUNK_BYTES;
             }
         }
         stats
     }
+
+    /// Recount-and-cross-check every per-chunk counter against ground
+    /// truth — the heap-invariant oracle behind the fuzz battery (and
+    /// the differential suite's post-run sweep). Walks each chunk's free
+    /// list and asserts: the recount equals `free_count`; every link
+    /// stays inside its chunk on a block boundary; reuse-mode chunks
+    /// satisfy `live + free_count == bumped` (bump-only chunks build no
+    /// free lists, so only `live <= bumped`); `live_raw <= live`;
+    /// `in_avail` mirrors avail-stack membership exactly (no duplicates)
+    /// and holds iff `free_count > 0`; vacant slots are truly vacant; and
+    /// the per-chunk live counters sum to [`SlabAlloc::live_blocks`].
+    /// O(blocks) — test/debug only, never on a hot path.
+    pub fn validate_counters(&self) {
+        let mut live_sum = 0usize;
+        for (ci, c) in self.classes.iter().enumerate() {
+            let mut avail_set = vec![false; c.chunks.len()];
+            for &j in &c.avail {
+                let j = j as usize;
+                assert!(j < c.chunks.len(), "class {ci}: avail index {j} out of range");
+                assert!(!avail_set[j], "class {ci}: duplicate avail entry {j}");
+                avail_set[j] = true;
+            }
+            for &j in &c.vacant {
+                assert!(
+                    c.chunks[j as usize].chunk.is_none(),
+                    "class {ci}: vacant slot {j} still committed"
+                );
+            }
+            for (j, ch) in c.chunks.iter().enumerate() {
+                let Some(chunk) = &ch.chunk else {
+                    assert_eq!(ch.free_count, 0, "class {ci} slot {j}: vacant with free blocks");
+                    assert_eq!(ch.live, 0, "class {ci} slot {j}: vacant with live blocks");
+                    assert_eq!(ch.live_raw, 0, "class {ci} slot {j}: vacant with raw blocks");
+                    assert_eq!(ch.bumped, 0, "class {ci} slot {j}: vacant with bumped blocks");
+                    assert!(!ch.in_avail && !avail_set[j], "class {ci} slot {j}: vacant on avail");
+                    assert!(!ch.evacuating, "class {ci} slot {j}: vacant evacuating");
+                    continue;
+                };
+                let base = chunk.ptr as usize;
+                assert!(
+                    ch.bumped as usize * c.block <= CHUNK_BYTES,
+                    "class {ci} chunk {j}: bumped past chunk end"
+                );
+                let mut n = 0u32;
+                let mut p = ch.free;
+                while !p.is_null() {
+                    let addr = p as usize;
+                    assert!(
+                        addr >= base && addr < base + CHUNK_BYTES,
+                        "class {ci} chunk {j}: free link outside chunk"
+                    );
+                    assert_eq!(
+                        (addr - base) % c.block,
+                        0,
+                        "class {ci} chunk {j}: misaligned free link"
+                    );
+                    n += 1;
+                    assert!(
+                        n <= ch.bumped,
+                        "class {ci} chunk {j}: free list longer than bumped blocks"
+                    );
+                    // SAFETY: `p` is a free block; its first word is the
+                    // link.
+                    p = unsafe { *(p as *const *mut u8) };
+                }
+                assert_eq!(n, ch.free_count, "class {ci} chunk {j}: free_count drift");
+                assert!(
+                    ch.live_raw <= ch.live,
+                    "class {ci} chunk {j}: live_raw exceeds live"
+                );
+                if self.bump_only {
+                    assert_eq!(ch.free_count, 0, "class {ci} chunk {j}: scratch free list");
+                    assert!(!ch.in_avail, "class {ci} chunk {j}: scratch on avail");
+                    assert!(ch.live <= ch.bumped, "class {ci} chunk {j}: live past bumped");
+                } else if ch.evacuating {
+                    assert_eq!(ch.free_count, 0, "class {ci} chunk {j}: victim free list");
+                    assert!(!ch.in_avail, "class {ci} chunk {j}: victim on avail");
+                } else {
+                    assert_eq!(
+                        ch.live + ch.free_count,
+                        ch.bumped,
+                        "class {ci} chunk {j}: liveness drift"
+                    );
+                    assert_eq!(
+                        ch.in_avail,
+                        ch.free_count > 0,
+                        "class {ci} chunk {j}: avail membership drift"
+                    );
+                }
+                assert_eq!(
+                    ch.in_avail, avail_set[j],
+                    "class {ci} chunk {j}: in_avail / avail stack mismatch"
+                );
+                live_sum += ch.live as usize;
+            }
+        }
+        assert_eq!(live_sum, self.live_blocks, "live_blocks drift");
+    }
+
+    /// Per-class snapshot of every committed chunk's
+    /// `(slot index, live, live_raw)` counters — the fuzz oracle compares
+    /// this against its ground-truth shadow recount and predicts exactly
+    /// which chunks `trim` will free.
+    pub fn chunk_live_counts(&self) -> Vec<Vec<(u32, u32, u32)>> {
+        self.classes
+            .iter()
+            .map(|c| {
+                c.chunks
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, ch)| ch.chunk.is_some())
+                    .map(|(j, ch)| (j as u32, ch.live, ch.live_raw))
+                    .collect()
+            })
+            .collect()
+    }
 }
 
-/// What one [`SlabAlloc::trim`] pass returned to the system allocator;
-/// the owning heap folds it into `decommitted_chunks` /
-/// `decommitted_bytes` and lowers the committed gauges.
+/// What one payload move during evacuation did — the heap folds these
+/// into the `evacuated_*` metrics.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct EvacMove {
+    /// Slab block size of the moved payload.
+    pub bytes: usize,
+    /// The destination allocation committed a fresh chunk.
+    pub new_chunk: bool,
+}
+
+/// What one [`SlabAlloc::trim`] (or [`SlabAlloc::finish_evacuation`])
+/// pass returned to the system allocator; the owning heap folds it into
+/// the decommit/evacuation counters and lowers the committed gauges.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct TrimStats {
     /// Chunks returned to the system allocator.
     pub chunks: usize,
-    /// Bytes returned (`chunks` × [`CHUNK_BYTES`]).
+    /// Chunk bytes returned (`chunks` × [`CHUNK_BYTES`]).
     pub bytes: usize,
+    /// LOS free blocks returned to the system allocator.
+    pub los_blocks: usize,
+    /// LOS bytes returned (headers included).
+    pub los_bytes: usize,
+}
+
+/// Header in front of every large-object-space block: the free-list
+/// link, the block's total size (header + padding + payload capacity),
+/// and the alignment it was allocated with (needed to rebuild the
+/// `Layout` at dealloc).
+#[repr(C)]
+struct LosHeader {
+    next: *mut LosHeader,
+    total: usize,
+    align: usize,
+}
+
+/// Payload offset and effective alignment for a LOS block serving
+/// `align`-aligned data: the header is at the block base, the payload at
+/// the next `max(align, BLOCK_ALIGN)` boundary past it. Deterministic in
+/// the request layout alone, so the free path recovers the header without
+/// any side table.
+#[inline]
+fn los_offset(align: usize) -> (usize, usize) {
+    let eff = align.max(BLOCK_ALIGN);
+    let off = (std::mem::size_of::<LosHeader>() + eff - 1) & !(eff - 1);
+    (off, eff)
+}
+
+/// Free a LOS block outside the allocator — the teardown path of `PBox`,
+/// `SlabVec`, and the memo bucket store `Drop` impls (heap teardown,
+/// where no `&mut SlabAlloc` is reachable). The block leaves no trace in
+/// any free list, so this is safe while the owning [`Los`] still exists.
+///
+/// # Safety
+/// `ptr`/`layout` must be the pointer and request layout of a live block
+/// obtained from [`Los::alloc`] (directly or via the allocator), and the
+/// block must not be freed again.
+pub(crate) unsafe fn los_teardown_free(ptr: *mut u8, layout: Layout) {
+    let (off, _) = los_offset(layout.align());
+    let h = ptr.sub(off) as *mut LosHeader;
+    let l = Layout::from_size_align((*h).total, (*h).align).expect("los layout");
+    std::alloc::dealloc(h as *mut u8, l);
+}
+
+/// The large-object space: one system allocation per block, fronted by a
+/// [`LosHeader`], with a LIFO free list reused first-fit under a 2×
+/// waste bound. See the module docs.
+struct Los {
+    /// Free-list head (most recently freed first).
+    free: *mut LosHeader,
+    /// Blocks on the free list.
+    free_blocks: usize,
+    /// Total bytes on the free list (headers included).
+    free_bytes: usize,
+}
+
+impl Los {
+    fn new() -> Los {
+        Los {
+            free: std::ptr::null_mut(),
+            free_blocks: 0,
+            free_bytes: 0,
+        }
+    }
+
+    /// Serve `layout`: first fit from the free list if a block's total
+    /// size covers the need without more than 2× waste and its alignment
+    /// suffices; otherwise one fresh system allocation.
+    fn alloc(&mut self, layout: Layout) -> (*mut u8, BlockLoc, AllocReceipt) {
+        let (off, eff) = los_offset(layout.align());
+        let need = off + layout.size();
+        // SAFETY: the free list links only blocks this Los owns; headers
+        // stay initialized while listed.
+        unsafe {
+            let mut prev: *mut *mut LosHeader = &mut self.free;
+            let mut h = self.free;
+            while !h.is_null() {
+                let total = (*h).total;
+                if total >= need && total <= 2 * need && (*h).align >= eff {
+                    *prev = (*h).next;
+                    (*h).next = std::ptr::null_mut();
+                    self.free_blocks -= 1;
+                    self.free_bytes -= total;
+                    return (
+                        (h as *mut u8).add(off),
+                        BlockLoc::Los,
+                        AllocReceipt {
+                            reused: true,
+                            large: true,
+                            block_bytes: 0,
+                            new_chunk: false,
+                            los_bytes: total,
+                        },
+                    );
+                }
+                prev = &mut (*h).next;
+                h = *prev;
+            }
+        }
+        let bl = Layout::from_size_align(need, eff).expect("los layout");
+        // SAFETY: nonzero size (`need` includes the header).
+        let base = unsafe { std::alloc::alloc(bl) };
+        if base.is_null() {
+            std::alloc::handle_alloc_error(bl);
+        }
+        let h = base as *mut LosHeader;
+        // SAFETY: `base` is a fresh block large enough for the header.
+        unsafe {
+            h.write(LosHeader {
+                next: std::ptr::null_mut(),
+                total: need,
+                align: eff,
+            });
+        }
+        (
+            // SAFETY: `off < need` keeps the pointer in bounds.
+            unsafe { base.add(off) },
+            BlockLoc::Los,
+            AllocReceipt {
+                reused: false,
+                large: true,
+                block_bytes: 0,
+                new_chunk: false,
+                los_bytes: need,
+            },
+        )
+    }
+
+    /// Push a block back on the free list. `layout` must be the request
+    /// layout the block was allocated with (the header offset is
+    /// recomputed from it).
+    fn free(&mut self, ptr: *mut u8, layout: Layout) -> FreeReceipt {
+        let (off, _) = los_offset(layout.align());
+        // SAFETY: `ptr` came from `Los::alloc` with this layout, so the
+        // header sits `off` bytes below it.
+        unsafe {
+            let h = ptr.sub(off) as *mut LosHeader;
+            let total = (*h).total;
+            (*h).next = self.free;
+            self.free = h;
+            self.free_blocks += 1;
+            self.free_bytes += total;
+            FreeReceipt {
+                block_bytes: 0,
+                los_bytes: total,
+            }
+        }
+    }
+
+    /// Return every free block beyond the first `keep` (most recently
+    /// freed — the warmest) to the system allocator. Returns
+    /// `(blocks, bytes)` freed.
+    fn trim(&mut self, keep: usize) -> (usize, usize) {
+        let mut blocks = 0usize;
+        let mut bytes = 0usize;
+        // SAFETY: free-list walk over owned blocks, as in `alloc`.
+        unsafe {
+            let mut prev: *mut *mut LosHeader = &mut self.free;
+            let mut h = self.free;
+            let mut kept = 0usize;
+            while !h.is_null() && kept < keep {
+                prev = &mut (*h).next;
+                h = *prev;
+                kept += 1;
+            }
+            *prev = std::ptr::null_mut();
+            while !h.is_null() {
+                let next = (*h).next;
+                let total = (*h).total;
+                let l = Layout::from_size_align(total, (*h).align).expect("los layout");
+                std::alloc::dealloc(h as *mut u8, l);
+                blocks += 1;
+                bytes += total;
+                h = next;
+            }
+        }
+        self.free_blocks -= blocks;
+        self.free_bytes -= bytes;
+        (blocks, bytes)
+    }
+}
+
+impl Drop for Los {
+    fn drop(&mut self) {
+        self.trim(0);
+    }
 }
 
 /// Accounted raw-bytes allocation context: the slab allocator paired with
 /// the owning heap's metrics, so every memo/label storage operation lands
-/// in the `slab_raw_*` gauges. Built on the fly from `Heap`'s disjoint
-/// fields wherever a slab-resident container needs to grow or free.
+/// in the `slab_raw_*` (and `los_*`) gauges. Built on the fly from
+/// `Heap`'s disjoint fields wherever a slab-resident container needs to
+/// grow or free.
 pub(crate) struct RawCtx<'a> {
     /// The heap's allocator.
     pub alloc: &'a mut SlabAlloc,
@@ -746,10 +1307,10 @@ impl RawCtx<'_> {
 /// A minimal `Vec<T>` whose backing store lives in the owning heap's
 /// slab allocator (raw path) — the label slot vector's storage. Growth
 /// and explicit teardown go through a [`RawCtx`] so freed backing blocks
-/// re-enter their size-class free list; a plain `Drop` (heap teardown)
-/// runs the element destructors and frees exact-layout memory, while a
-/// slab-resident block stays with its chunk exactly like a dropped
-/// [`PBox`].
+/// re-enter their size-class (or LOS) free list; a plain `Drop` (heap
+/// teardown) runs the element destructors and frees exact-layout/LOS
+/// memory, while a slab-resident block stays with its chunk exactly like
+/// a dropped [`PBox`].
 pub(crate) struct SlabVec<T> {
     ptr: *mut T,
     cap: usize,
@@ -843,15 +1404,21 @@ impl<T> std::ops::IndexMut<usize> for SlabVec<T> {
 impl<T> Drop for SlabVec<T> {
     fn drop(&mut self) {
         // Teardown fallback (heap drop): run element destructors; free
-        // exact-layout storage; a slab block stays with its chunk, which
-        // the allocator frees wholesale right after (field order in
+        // exact-layout/LOS storage; a slab block stays with its chunk,
+        // which the allocator frees wholesale right after (field order in
         // `Heap`).
         // SAFETY: `len` initialized elements, uniquely owned.
         unsafe { std::ptr::drop_in_place(std::ptr::slice_from_raw_parts_mut(self.ptr, self.len)) };
-        if self.loc == BlockLoc::Sys && self.cap > 0 {
+        if self.cap > 0 {
             let layout = Layout::array::<T>(self.cap).expect("slab vec layout");
-            // SAFETY: allocated by the exact-layout path with this layout.
-            unsafe { std::alloc::dealloc(self.ptr as *mut u8, layout) };
+            match self.loc {
+                // SAFETY: allocated by the exact-layout path with this
+                // layout.
+                BlockLoc::Sys => unsafe { std::alloc::dealloc(self.ptr as *mut u8, layout) },
+                // SAFETY: allocated by the LOS with this request layout.
+                BlockLoc::Los => unsafe { los_teardown_free(self.ptr as *mut u8, layout) },
+                _ => {}
+            }
         }
     }
 }

@@ -1,13 +1,29 @@
 //! Allocator unit + property tests: class math, free-list reuse, the
-//! exact-layout fallback, the raw (memo/label) path, scratch bump/reset,
-//! the decommit watermark, and heap-level fuzz runs proving random
+//! large-object space (round-trips, first-fit reuse, the 2× waste bound,
+//! scratch reset immunity), the raw (memo/label) path, scratch
+//! bump/reset, the decommit watermark, evacuation (victim selection,
+//! pinning, value preservation), and fuzz runs proving random
 //! alloc/free/copy/transplant sequences balance to zero live storage
-//! with gauges consistent, on both backends and with decommit on.
+//! with gauges consistent, on both backends and with decommit on. The
+//! chunk-liveness oracle fuzz keeps a ground-truth shadow recount of
+//! every per-chunk counter and cross-checks it after every single
+//! operation; `LAZYCOW_FUZZ_ITERS` elevates the iteration count (the
+//! CI heap-stress job does).
 
 use super::*;
 use crate::heap::{CopyMode, Heap, HeapMetrics, Lazy, MemoTable, ObjId};
 use crate::lazy_fields;
 use crate::rng::Pcg64;
+use std::collections::HashMap;
+
+/// Fuzz iteration budget: the default, unless `LAZYCOW_FUZZ_ITERS` asks
+/// for a longer run (the CI heap-stress job sets it).
+fn fuzz_iters(default: usize) -> usize {
+    std::env::var("LAZYCOW_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
 
 #[derive(Clone)]
 struct Small {
@@ -26,6 +42,13 @@ struct Huge {
     a: [u64; 300], // 2400 B > largest class: exact-layout path
 }
 lazy_fields!(Huge);
+
+#[derive(Clone)]
+#[repr(align(64))]
+struct Aligned {
+    a: [u64; 8], // fits the 64 B class by size, but over-aligned: LOS
+}
+lazy_fields!(Aligned);
 
 #[derive(Clone)]
 struct Unit;
@@ -91,19 +114,25 @@ fn bump_fills_chunks_then_grows() {
 }
 
 #[test]
-fn exact_layout_paths() {
-    // Large payloads bypass the slabs on both backends; the System
-    // backend sends everything that way.
+fn large_payloads_take_the_off_slab_path() {
+    // Large payloads bypass the slabs on both backends — the LOS under
+    // `Slab`, exact layout under `System` (which sends everything that
+    // way and owns no LOS).
     for kind in AllocatorKind::ALL {
         let mut a = SlabAlloc::new(kind);
         let (h, rh) = a.alloc_value(Huge { a: [1; 300] });
         assert!(rh.large && !rh.reused && rh.block_bytes == 0);
+        assert_eq!(rh.los_bytes > 2400, kind == AllocatorKind::Slab);
         let (s, rs) = a.alloc_value(Small { a: 2 });
         assert_eq!(rs.large, kind == AllocatorKind::System);
-        assert_eq!(a.dealloc(h).block_bytes, 0);
+        assert_eq!(rs.los_bytes, 0, "small payloads never touch the LOS");
+        let fh = a.dealloc(h);
+        assert_eq!(fh.block_bytes, 0);
+        assert_eq!(fh.los_bytes, rh.los_bytes, "LOS free returns the full block");
         let fs = a.dealloc(s);
         assert_eq!(fs.block_bytes != 0, kind == AllocatorKind::Slab);
         assert_eq!(a.live_blocks(), 0);
+        a.validate_counters();
     }
 }
 
@@ -180,18 +209,20 @@ fn alloc_raw_class_math_and_reuse() {
     assert!(r2.reused && !r2.new_chunk);
     assert_eq!(p1, p2, "raw free list must hand the block back");
     a.free_raw(p2, l128, loc2);
-    // Over the largest class: exact-layout fallback.
+    // Over the largest class: the large-object space takes it.
     let big = Layout::from_size_align(4096, 8).unwrap();
     let (pb, locb, rb) = a.alloc_raw(big);
     assert!(rb.large && rb.block_bytes == 0 && !rb.new_chunk);
+    assert!(matches!(locb, BlockLoc::Los) && rb.los_bytes > 4096);
     a.free_raw(pb, big, locb);
     assert_eq!(a.live_blocks(), 0);
 }
 
 #[test]
-fn raw_path_is_exact_layout_for_scratch_and_system() {
+fn raw_path_is_off_slab_for_scratch_and_system() {
     // Bump-only (scratch) allocators must keep raw blocks out of the
-    // rewindable chunks; the System backend has no chunks at all.
+    // rewindable chunks — every scratch raw request goes to the LOS; the
+    // System backend has no chunks at all and takes exact layout.
     for mut a in [
         SlabAlloc::scratch(AllocatorKind::Slab),
         SlabAlloc::new(AllocatorKind::System),
@@ -199,12 +230,31 @@ fn raw_path_is_exact_layout_for_scratch_and_system() {
         let l = Layout::from_size_align(64, 8).unwrap();
         let (p, loc, r) = a.alloc_raw(l);
         assert!(r.large && r.block_bytes == 0 && !r.new_chunk);
-        assert_eq!(a.live_blocks(), 0, "raw exact-layout blocks are not slab-live");
+        assert!(!matches!(loc, BlockLoc::Slab { .. }));
+        assert_eq!(a.live_blocks(), 0, "off-slab raw blocks are not slab-live");
         a.free_raw(p, l, loc);
         if a.is_bump_only() {
             a.reset(); // raw storage must survive the rewind contract
         }
     }
+}
+
+#[test]
+fn scratch_raw_storage_lives_in_los_and_survives_reset() {
+    let mut a = SlabAlloc::scratch(AllocatorKind::Slab);
+    let l = Layout::from_size_align(64, 8).unwrap();
+    let (p, loc, r) = a.alloc_raw(l);
+    assert!(matches!(loc, BlockLoc::Los), "scratch raw storage must be reset-immune");
+    assert!(r.los_bytes > 64, "header accounted");
+    a.free_raw(p, l, loc);
+    a.reset();
+    // The freed block sat out the rewind on the LOS free list; a
+    // recycled scratch gets it straight back.
+    let (p2, loc2, r2) = a.alloc_raw(l);
+    assert!(r2.reused, "recycled scratch must reuse its old LOS block");
+    assert_eq!(p, p2, "first fit must return the previously freed block");
+    a.free_raw(p2, l, loc2);
+    a.validate_counters();
 }
 
 #[test]
@@ -423,6 +473,14 @@ fn assert_gauges_balanced(h: &Heap, label: &str) {
     );
     let frag = m.slab_fragmentation();
     assert!((0.0..=1.0).contains(&frag), "{label}: fragmentation {frag} out of [0, 1]");
+    assert!(m.los_reuses <= m.los_allocs, "{label}: LOS reuses outnumber allocs");
+    assert!(m.los_frees <= m.los_allocs, "{label}: LOS frees outnumber allocs");
+    if m.los_allocs == m.los_frees {
+        assert_eq!(m.los_live_bytes, 0, "{label}: LOS gauge drift at balance");
+    }
+    // And the allocator's own invariant sweep: free-list recounts,
+    // per-chunk liveness, avail-stack membership.
+    h.validate_storage();
 }
 
 /// Random alloc/release/deep-copy/mutate/transplant churn on both
@@ -628,4 +686,368 @@ fn scratch_heap_roundtrip_with_recycling() {
         home.metrics.total_allocs,
         "absorbed per-use counters keep the source invariant"
     );
+}
+
+// --- Large-object space ---------------------------------------------------
+
+#[test]
+fn los_round_trips_large_and_overaligned_payloads() {
+    for kind in AllocatorKind::ALL {
+        let mut a = SlabAlloc::new(kind);
+        let (h, rh) = a.alloc_value(Huge { a: [9; 300] });
+        let (al, ra) = a.alloc_value(Aligned { a: [7; 8] });
+        let pa = &*al as *const dyn Payload as *const u8 as usize;
+        assert_eq!(pa % 64, 0, "over-aligned payload must honour its alignment");
+        if kind == AllocatorKind::Slab {
+            assert!(rh.los_bytes > 2400, "header + payload accounted");
+            assert!(ra.los_bytes >= 64 + 64, "aligned header slot + payload");
+            assert!(ra.large, "over-aligned payloads are LOS misfits");
+        } else {
+            assert_eq!(rh.los_bytes + ra.los_bytes, 0, "system backend has no LOS");
+        }
+        assert_eq!(h.as_any().downcast_ref::<Huge>().unwrap().a, [9; 300]);
+        assert_eq!(al.as_any().downcast_ref::<Aligned>().unwrap().a, [7; 8]);
+        let fh = a.dealloc(h);
+        assert_eq!(fh.los_bytes, rh.los_bytes);
+        let fa = a.dealloc(al);
+        assert_eq!(fa.los_bytes, ra.los_bytes);
+        assert_eq!(a.live_blocks(), 0);
+        a.validate_counters();
+    }
+}
+
+#[test]
+fn los_first_fit_reuse_respects_the_waste_bound() {
+    let mut a = SlabAlloc::new(AllocatorKind::Slab);
+    let big = Layout::from_size_align(8192, 8).unwrap();
+    let (p1, loc1, r1) = a.alloc_raw(big);
+    assert!(r1.large && !r1.reused && r1.los_bytes > 8192);
+    a.free_raw(p1, big, loc1);
+    // A far smaller request must not squat in the 8 KiB block (the 2×
+    // waste bound rejects it) — fresh storage instead.
+    let small = Layout::from_size_align(3000, 8).unwrap();
+    let (p2, loc2, r2) = a.alloc_raw(small);
+    assert!(!r2.reused, "2x waste bound must reject the oversized free block");
+    // A near-size request gets the freed block straight back.
+    let near = Layout::from_size_align(8000, 8).unwrap();
+    let (p3, loc3, r3) = a.alloc_raw(near);
+    assert!(r3.reused, "first fit must reuse the freed block");
+    assert_eq!(p1, p3, "reuse must return the previously freed block");
+    assert_eq!(r3.los_bytes, r1.los_bytes, "a reused block keeps its total size");
+    a.free_raw(p2, small, loc2);
+    a.free_raw(p3, near, loc3);
+    // Trim keeps the warmest `keep` free blocks and decommits the rest.
+    let stats = a.trim(1);
+    assert_eq!(stats.los_blocks, 1);
+    assert!(stats.los_bytes > 0);
+    let stats = a.trim(0);
+    assert_eq!(stats.los_blocks, 1);
+    assert_eq!(a.trim(0).los_blocks, 0, "LOS trim is idempotent when drained");
+    a.validate_counters();
+}
+
+#[test]
+fn scratch_heap_los_blocks_survive_recycling() {
+    // Heap-level recycle_scratch interaction: a scratch heap's large
+    // payload storage is LOS, so its freed block and the LOS gauges must
+    // both survive the bump rewind, and the next incarnation reuses it.
+    let mut home = Heap::new(CopyMode::LazySro);
+    let mut scratch = home.scratch();
+    for round in 0..3u64 {
+        let mut h = scratch.alloc(Huge { a: [round; 300] });
+        assert_eq!(scratch.read(&mut h, |p| p.a[7]), round);
+        scratch.release(h);
+        scratch.sweep_memos();
+        assert_eq!(scratch.live_objects(), 0);
+        if round > 0 {
+            assert!(
+                scratch.metrics.los_reuses >= 1,
+                "round {round}: recycled scratch must reuse its freed LOS block"
+            );
+        }
+        assert!(scratch.metrics.los_free_bytes > 0, "freed block parked for reuse");
+        home.absorb_counters(&scratch);
+        scratch.recycle_scratch();
+        assert!(
+            scratch.metrics.los_free_bytes > 0,
+            "LOS gauge must be carried across the rewind"
+        );
+        assert_eq!(scratch.metrics.los_allocs, 0, "per-use counters zeroed");
+        scratch.validate_storage();
+    }
+    assert!(home.metrics.los_allocs >= 3, "absorbed counters keep the LOS history");
+}
+
+#[test]
+fn los_cross_backend_value_identity_under_churn() {
+    let run = |kind: AllocatorKind| -> u64 {
+        let mut heap = Heap::with_allocator(CopyMode::LazySro, kind);
+        let mut rng = Pcg64::new(0x105);
+        let mut roots: Vec<Lazy<Huge>> = Vec::new();
+        let mut sum = 0u64;
+        for step in 0..120u64 {
+            if rng.below(2) == 0 || roots.is_empty() {
+                let mut v = [0u64; 300];
+                v[0] = step;
+                v[299] = step.wrapping_mul(7);
+                roots.push(heap.alloc(Huge { a: v }));
+            } else {
+                let i = rng.below(roots.len() as u64) as usize;
+                let mut r = roots.swap_remove(i);
+                sum = sum.wrapping_add(heap.read(&mut r, |p| p.a[0] + p.a[299]));
+                heap.release(r);
+            }
+        }
+        for mut r in roots {
+            sum = sum.wrapping_add(heap.read(&mut r, |p| p.a[0] + p.a[299]));
+            heap.release(r);
+        }
+        heap.sweep_memos();
+        assert_eq!(heap.live_objects(), 0);
+        if kind == AllocatorKind::Slab {
+            assert!(heap.metrics.los_allocs > 0, "Huge churn must exercise the LOS");
+            assert!(heap.metrics.los_frees > 0);
+        }
+        assert_gauges_balanced(&heap, "los churn");
+        sum
+    };
+    assert_eq!(
+        run(AllocatorKind::System),
+        run(AllocatorKind::Slab),
+        "the LOS changed computed values"
+    );
+}
+
+// --- Evacuation -----------------------------------------------------------
+
+#[test]
+fn evacuation_compacts_sparse_chunks_preserving_values() {
+    let mut heap = Heap::new(CopyMode::LazySro);
+    // ~3 chunks of the 64 B Node class, then free all but every 100th:
+    // each chunk keeps a thin scatter of survivors.
+    let mut kept = Vec::new();
+    for i in 0..3000i64 {
+        let r = build_chain(&mut heap, 1, i);
+        if i % 100 == 0 {
+            kept.push(r);
+        } else {
+            heap.release(r);
+        }
+    }
+    heap.sweep_memos();
+    let before: Vec<i64> = kept.iter().map(|&r| chain_values(&mut heap, r)[0]).collect();
+    let chunks_before = heap.metrics.slab_chunks;
+    assert!(chunks_before >= 3, "churn should commit several chunks");
+    // Threshold 0 never selects a victim (a victim needs live > 0).
+    assert_eq!(heap.evacuate(0.0), 0);
+    assert_eq!(heap.metrics.slab_chunks, chunks_before);
+    assert_eq!(heap.metrics.evacuated_objects, 0);
+    let moved = heap.evacuate(0.5);
+    assert!(moved > 0, "sparse chunks must evacuate");
+    assert_eq!(heap.metrics.evacuated_objects, moved);
+    assert!(heap.metrics.evacuated_chunks >= 1, "an emptied victim must decommit");
+    assert!(
+        heap.metrics.slab_chunks < chunks_before,
+        "evacuation must shrink committed residency"
+    );
+    assert_eq!(heap.metrics.slab_committed_bytes, heap.metrics.slab_chunks * CHUNK_BYTES);
+    assert!(heap.metrics.evacuated_bytes >= moved * 64, "block bytes recorded");
+    heap.validate_storage();
+    // The absolute contract: relocation changes storage, never a value.
+    let after: Vec<i64> = kept.iter().map(|&r| chain_values(&mut heap, r)[0]).collect();
+    assert_eq!(before, after, "evacuation must not change one value");
+    for r in kept {
+        heap.release(r);
+    }
+    heap.sweep_memos();
+    assert_eq!(heap.live_objects(), 0);
+    assert_gauges_balanced(&heap, "evacuate");
+}
+
+#[test]
+fn evacuation_skips_raw_pinned_and_bump_chunks() {
+    let mut a = SlabAlloc::new(AllocatorKind::Slab);
+    let l96 = Layout::from_size_align(96, 8).unwrap();
+    // A raw block takes the first slot of chunk 0 (96 B class)...
+    let (p, loc, _) = a.alloc_raw(l96);
+    // ...payloads fill the rest of chunk 0 and spill into chunk 1.
+    let per_chunk = CHUNK_BYTES / 96;
+    let mut held = Vec::new();
+    for i in 0..per_chunk as u64 {
+        held.push(a.alloc_value(Mid { a: [i; 12] }).0);
+    }
+    let spill = held.pop().expect("spill block in chunk 1");
+    for pb in held.drain(..) {
+        a.dealloc(pb);
+    }
+    a.validate_counters();
+    // Chunk 0 is maximally sparse but raw-pinned; chunk 1 is the bump
+    // chunk. Even at threshold 1.0 neither is a victim.
+    assert!(
+        !a.begin_evacuation(1.0),
+        "raw-pinned and bump chunks are never victims"
+    );
+    a.validate_counters();
+    a.free_raw(p, l96, loc);
+    a.dealloc(spill);
+    assert_eq!(a.live_blocks(), 0);
+    a.validate_counters();
+}
+
+// --- Chunk-liveness fuzz oracle -------------------------------------------
+
+/// Ground-truth shadow of the per-chunk liveness counters, keyed on the
+/// `BlockLoc` every allocation returns. `check` cross-checks the
+/// allocator's own counters (and full invariant sweep) against it.
+#[derive(Default)]
+struct ShadowCounts {
+    counts: HashMap<(u8, u32), (u32, u32)>, // (class, chunk) -> (live, live_raw)
+}
+
+impl ShadowCounts {
+    fn alloc(&mut self, loc: BlockLoc, raw: bool) {
+        if let BlockLoc::Slab { class, chunk } = loc {
+            let e = self.counts.entry((class, chunk)).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += u32::from(raw);
+        }
+    }
+
+    fn free(&mut self, loc: BlockLoc, raw: bool) {
+        if let BlockLoc::Slab { class, chunk } = loc {
+            let e = self
+                .counts
+                .get_mut(&(class, chunk))
+                .expect("free of a block the shadow never saw");
+            e.0 -= 1;
+            e.1 -= u32::from(raw);
+        }
+    }
+
+    fn check(&self, a: &SlabAlloc) {
+        a.validate_counters();
+        let mut seen = 0usize;
+        for (ci, chunks) in a.chunk_live_counts().iter().enumerate() {
+            for &(j, live, live_raw) in chunks {
+                let &(want, want_raw) = self.counts.get(&(ci as u8, j)).unwrap_or(&(0, 0));
+                assert_eq!(live, want, "class {ci} chunk {j}: live counter drift");
+                assert_eq!(live_raw, want_raw, "class {ci} chunk {j}: live_raw drift");
+                seen += usize::from(live > 0);
+            }
+        }
+        let nonzero = self.counts.values().filter(|&&(l, _)| l > 0).count();
+        assert_eq!(seen, nonzero, "a live block sits in a decommitted chunk");
+    }
+}
+
+/// The tentpole's pin: random payload/raw churn with interleaved trim
+/// and evacuation barriers, where after *every single operation* each
+/// chunk's live counters must equal a ground-truth recount, and every
+/// trim must free exactly the counter-empty chunks beyond its watermark.
+#[test]
+fn fuzz_chunk_liveness_oracle() {
+    const RAW_LAYOUTS: [(usize, usize); 5] = [(16, 8), (100, 8), (256, 16), (1024, 8), (3000, 8)];
+    let iters = fuzz_iters(400);
+    for kind in AllocatorKind::ALL {
+        for seed in 0..2u64 {
+            let mut a = SlabAlloc::new(kind);
+            let mut shadow = ShadowCounts::default();
+            let mut rng = Pcg64::new(0x11FE ^ seed);
+            let mut payloads: Vec<PBox> = Vec::new();
+            let mut raws: Vec<(*mut u8, Layout, BlockLoc)> = Vec::new();
+            for _ in 0..iters {
+                match rng.below(8) {
+                    0 | 1 | 2 => {
+                        let (pb, _) = match rng.below(3) {
+                            0 => a.alloc_value(Small { a: 1 }),
+                            1 => a.alloc_value(Mid { a: [2; 12] }),
+                            _ => a.alloc_value(Huge { a: [3; 300] }),
+                        };
+                        shadow.alloc(pb.loc, false);
+                        payloads.push(pb);
+                    }
+                    3 => {
+                        let (s, al) = RAW_LAYOUTS[rng.below(RAW_LAYOUTS.len() as u64) as usize];
+                        let l = Layout::from_size_align(s, al).unwrap();
+                        let (p, loc, _) = a.alloc_raw(l);
+                        shadow.alloc(loc, true);
+                        raws.push((p, l, loc));
+                    }
+                    4 => {
+                        if let Some(i) = pick(&mut rng, payloads.len()) {
+                            let pb = payloads.swap_remove(i);
+                            let loc = pb.loc;
+                            a.dealloc(pb);
+                            shadow.free(loc, false);
+                        }
+                    }
+                    5 => {
+                        if let Some(i) = pick(&mut rng, raws.len()) {
+                            let (p, l, loc) = raws.swap_remove(i);
+                            a.free_raw(p, l, loc);
+                            shadow.free(loc, true);
+                        }
+                    }
+                    6 => {
+                        // Trim barrier: predict the exact chunk count it
+                        // frees from the liveness counters alone.
+                        let keep = rng.below(3) as usize;
+                        let predicted: usize = a
+                            .chunk_live_counts()
+                            .iter()
+                            .map(|chunks| {
+                                let empties =
+                                    chunks.iter().filter(|&&(_, live, _)| live == 0).count();
+                                empties.saturating_sub(keep)
+                            })
+                            .sum();
+                        let stats = a.trim(keep);
+                        assert_eq!(
+                            stats.chunks, predicted,
+                            "trim must free exactly the counter-empty chunks past keep={keep}"
+                        );
+                    }
+                    _ => {
+                        // Evacuation barrier: walk the held payloads as
+                        // the heap's slot walk would, shadowing each
+                        // relocation as free(old) + alloc(new).
+                        if a.begin_evacuation(0.5) {
+                            for pb in payloads.iter_mut() {
+                                let old = pb.loc;
+                                if a.evacuate_block(pb).is_some() {
+                                    shadow.free(old, false);
+                                    shadow.alloc(pb.loc, false);
+                                }
+                            }
+                            a.finish_evacuation();
+                        }
+                    }
+                }
+                shadow.check(&a);
+            }
+            // Drain everything: the counters must come back to zero and
+            // trim(0) must then decommit every remaining chunk.
+            for pb in payloads.drain(..) {
+                let loc = pb.loc;
+                a.dealloc(pb);
+                shadow.free(loc, false);
+            }
+            for (p, l, loc) in raws.drain(..) {
+                a.free_raw(p, l, loc);
+                shadow.free(loc, true);
+            }
+            shadow.check(&a);
+            assert_eq!(a.live_blocks(), 0, "{kind:?}/{seed}: leaked slab blocks");
+            assert!(
+                a.chunk_live_counts().iter().flatten().all(|&(_, live, _)| live == 0),
+                "{kind:?}/{seed}: drained allocator with a live counter"
+            );
+            a.trim(0);
+            assert!(
+                a.chunk_live_counts().iter().all(|c| c.is_empty()),
+                "{kind:?}/{seed}: trim(0) must decommit every empty chunk"
+            );
+            a.validate_counters();
+        }
+    }
 }

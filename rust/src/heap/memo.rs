@@ -135,12 +135,20 @@ impl SlabBuckets {
 
 impl Drop for SlabBuckets {
     fn drop(&mut self) {
-        // Teardown fallback: exact-layout storage goes back to the system
-        // allocator; slab blocks stay with their chunk (freed when the
-        // owning SlabAlloc drops).
-        if self.loc == BlockLoc::Sys && self.cap > 0 {
-            // SAFETY: allocated by the exact-layout path with this layout.
-            unsafe { std::alloc::dealloc(self.ptr, Self::layout(self.cap)) };
+        // Teardown fallback: exact-layout and LOS storage go back to the
+        // system allocator; slab blocks stay with their chunk (freed when
+        // the owning SlabAlloc drops).
+        if self.cap > 0 {
+            match self.loc {
+                // SAFETY: allocated by the exact-layout path with this
+                // layout.
+                BlockLoc::Sys => unsafe { std::alloc::dealloc(self.ptr, Self::layout(self.cap)) },
+                // SAFETY: allocated by the LOS with this request layout.
+                BlockLoc::Los => unsafe {
+                    super::alloc::los_teardown_free(self.ptr, Self::layout(self.cap))
+                },
+                _ => {}
+            }
         }
     }
 }

@@ -135,6 +135,38 @@ pub struct HeapMetrics {
     /// Bytes returned by decommit (`decommitted_chunks` ×
     /// [`CHUNK_BYTES`](super::CHUNK_BYTES); counter).
     pub decommitted_bytes: usize,
+
+    // --- Large-object space (see `heap::alloc`'s module docs). ---
+    /// Large-object-space blocks handed out (payload or raw; counter).
+    /// Zero under the `system` backend, whose large allocations stay on
+    /// the exact-layout path.
+    pub los_allocs: usize,
+    /// Large-object-space blocks returned to the LOS free list (counter).
+    pub los_frees: usize,
+    /// LOS allocations served by reusing a free block instead of a fresh
+    /// system allocation (counter; a subset of `los_allocs`).
+    pub los_reuses: usize,
+    /// Bytes in live LOS blocks, headers included (gauge).
+    pub los_live_bytes: usize,
+    /// Bytes parked on the LOS free list, headers included (gauge).
+    /// Lowered when [`Heap::trim`](super::Heap::trim) returns free LOS
+    /// blocks to the system allocator.
+    pub los_free_bytes: usize,
+    /// LOS bytes returned to the system allocator by trim barriers
+    /// (counter; accounted apart from `decommitted_bytes`, which stays
+    /// chunk-granular).
+    pub los_decommitted_bytes: usize,
+
+    // --- Evacuation (opportunistic defrag; `--evacuate-threshold`). ---
+    /// Payloads placement-moved out of sparse chunks at evacuation
+    /// barriers (counter). Zero with evacuation off.
+    pub evacuated_objects: usize,
+    /// Slab block bytes those moves relocated (counter).
+    pub evacuated_bytes: usize,
+    /// Chunks emptied and decommitted by evacuation (counter; accounted
+    /// apart from `decommitted_chunks`, which counts only watermark-trim
+    /// decommits).
+    pub evacuated_chunks: usize,
 }
 
 impl HeapMetrics {
@@ -190,12 +222,39 @@ impl HeapMetrics {
         if all > self.slab_block_peak_bytes {
             self.slab_block_peak_bytes = all;
         }
+        self.note_los_alloc(r);
     }
 
     /// Mirror one raw-path free receipt into the gauges.
     pub(crate) fn note_raw_free(&mut self, r: &FreeReceipt) {
         self.slab_raw_frees += 1;
         self.slab_raw_bytes -= r.block_bytes;
+        self.note_los_free(r);
+    }
+
+    /// Mirror the LOS half of an allocation receipt (payload or raw) into
+    /// the `los_*` counters and gauges. No-op off the LOS path.
+    pub(crate) fn note_los_alloc(&mut self, r: &AllocReceipt) {
+        if r.los_bytes == 0 {
+            return;
+        }
+        self.los_allocs += 1;
+        self.los_live_bytes += r.los_bytes;
+        if r.reused {
+            self.los_reuses += 1;
+            self.los_free_bytes -= r.los_bytes;
+        }
+    }
+
+    /// Mirror the LOS half of a free receipt into the `los_*` counters
+    /// and gauges. No-op off the LOS path.
+    pub(crate) fn note_los_free(&mut self, r: &FreeReceipt) {
+        if r.los_bytes == 0 {
+            return;
+        }
+        self.los_frees += 1;
+        self.los_live_bytes -= r.los_bytes;
+        self.los_free_bytes += r.los_bytes;
     }
 
     /// Exact delta since `earlier` (a [`MetricsScope`] snapshot of the
@@ -241,6 +300,15 @@ impl HeapMetrics {
             slab_raw_bytes,
             decommitted_chunks,
             decommitted_bytes,
+            los_allocs,
+            los_frees,
+            los_reuses,
+            los_live_bytes,
+            los_free_bytes,
+            los_decommitted_bytes,
+            evacuated_objects,
+            evacuated_bytes,
+            evacuated_chunks,
         } = *self;
         HeapMetrics {
             // Gauges: current values.
@@ -257,6 +325,8 @@ impl HeapMetrics {
             slab_live_block_bytes,
             slab_block_peak_bytes,
             slab_raw_bytes,
+            los_live_bytes,
+            los_free_bytes,
             // Counters: exact in-scope deltas.
             total_allocs: total_allocs - earlier.total_allocs,
             total_frees: total_frees - earlier.total_frees,
@@ -280,6 +350,13 @@ impl HeapMetrics {
             slab_raw_frees: slab_raw_frees - earlier.slab_raw_frees,
             decommitted_chunks: decommitted_chunks - earlier.decommitted_chunks,
             decommitted_bytes: decommitted_bytes - earlier.decommitted_bytes,
+            los_allocs: los_allocs - earlier.los_allocs,
+            los_frees: los_frees - earlier.los_frees,
+            los_reuses: los_reuses - earlier.los_reuses,
+            los_decommitted_bytes: los_decommitted_bytes - earlier.los_decommitted_bytes,
+            evacuated_objects: evacuated_objects - earlier.evacuated_objects,
+            evacuated_bytes: evacuated_bytes - earlier.evacuated_bytes,
+            evacuated_chunks: evacuated_chunks - earlier.evacuated_chunks,
         }
     }
 
@@ -327,6 +404,15 @@ impl HeapMetrics {
             slab_raw_bytes,
             decommitted_chunks,
             decommitted_bytes,
+            los_allocs,
+            los_frees,
+            los_reuses,
+            los_live_bytes,
+            los_free_bytes,
+            los_decommitted_bytes,
+            evacuated_objects,
+            evacuated_bytes,
+            evacuated_chunks,
         } = *o;
         self.live_objects += live_objects;
         self.live_bytes += live_bytes;
@@ -361,6 +447,15 @@ impl HeapMetrics {
         self.slab_raw_bytes += slab_raw_bytes;
         self.decommitted_chunks += decommitted_chunks;
         self.decommitted_bytes += decommitted_bytes;
+        self.los_allocs += los_allocs;
+        self.los_frees += los_frees;
+        self.los_reuses += los_reuses;
+        self.los_live_bytes += los_live_bytes;
+        self.los_free_bytes += los_free_bytes;
+        self.los_decommitted_bytes += los_decommitted_bytes;
+        self.evacuated_objects += evacuated_objects;
+        self.evacuated_bytes += evacuated_bytes;
+        self.evacuated_chunks += evacuated_chunks;
         // Barrier samples are global figures, not per-shard counters: the
         // aggregate carries the largest sample seen anywhere.
         self.global_peak_bytes = self.global_peak_bytes.max(global_peak_bytes);
@@ -422,6 +517,19 @@ impl HeapMetrics {
             // such so a future absorb of a trimming heap stays correct.
             decommitted_chunks,
             decommitted_bytes,
+            los_allocs,
+            los_frees,
+            los_reuses,
+            // LOS storage gauges die with the scratch heap's own LOS,
+            // like the slab gauges above.
+            los_live_bytes: _,
+            los_free_bytes: _,
+            los_decommitted_bytes,
+            // Scratch heaps never evacuate (bump-only), but these are
+            // monotone counters: classify them as such.
+            evacuated_objects,
+            evacuated_bytes,
+            evacuated_chunks,
         } = *o;
         self.total_allocs += total_allocs;
         self.total_frees += total_frees;
@@ -445,6 +553,13 @@ impl HeapMetrics {
         self.slab_raw_frees += slab_raw_frees;
         self.decommitted_chunks += decommitted_chunks;
         self.decommitted_bytes += decommitted_bytes;
+        self.los_allocs += los_allocs;
+        self.los_frees += los_frees;
+        self.los_reuses += los_reuses;
+        self.los_decommitted_bytes += los_decommitted_bytes;
+        self.evacuated_objects += evacuated_objects;
+        self.evacuated_bytes += evacuated_bytes;
+        self.evacuated_chunks += evacuated_chunks;
     }
 
     /// Free-list hit rate of the slab allocator (0.0 when no slab
@@ -727,6 +842,7 @@ mod tests {
             large: false,
             block_bytes: 128,
             new_chunk: true,
+            los_bytes: 0,
         });
         assert_eq!(m.slab_raw_allocs, 1);
         assert_eq!(m.slab_raw_bytes, 128);
@@ -734,10 +850,102 @@ mod tests {
         assert_eq!(m.slab_committed_bytes, super::super::CHUNK_BYTES);
         assert_eq!(m.slab_committed_peak_bytes, super::super::CHUNK_BYTES);
         assert_eq!(m.slab_block_peak_bytes, 128, "raw bytes count in the peak");
-        m.note_raw_free(&FreeReceipt { block_bytes: 128 });
+        assert_eq!(m.los_allocs, 0, "slab raw path leaves LOS untouched");
+        m.note_raw_free(&FreeReceipt {
+            block_bytes: 128,
+            los_bytes: 0,
+        });
         assert_eq!(m.slab_raw_frees, 1);
         assert_eq!(m.slab_raw_bytes, 0);
         assert_eq!(m.slab_block_peak_bytes, 128, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn note_los_receipts_track_live_and_free_gauges() {
+        let mut m = HeapMetrics::default();
+        // Fresh LOS alloc (raw path, e.g. a 4 KiB memo bucket array).
+        m.note_raw_alloc(&AllocReceipt {
+            reused: false,
+            large: true,
+            block_bytes: 0,
+            new_chunk: false,
+            los_bytes: 4096 + 32,
+        });
+        assert_eq!(m.los_allocs, 1);
+        assert_eq!(m.los_reuses, 0);
+        assert_eq!(m.los_live_bytes, 4096 + 32);
+        assert_eq!(m.los_free_bytes, 0);
+        assert_eq!(m.slab_raw_allocs, 1, "LOS raw allocs still count as raw");
+        assert_eq!(m.slab_raw_bytes, 0, "but not as slab block bytes");
+        // Free it: live → free list.
+        m.note_raw_free(&FreeReceipt {
+            block_bytes: 0,
+            los_bytes: 4096 + 32,
+        });
+        assert_eq!(m.los_frees, 1);
+        assert_eq!(m.los_live_bytes, 0);
+        assert_eq!(m.los_free_bytes, 4096 + 32);
+        // Reuse it: free list → live, counted as a reuse.
+        m.note_los_alloc(&AllocReceipt {
+            reused: true,
+            large: true,
+            block_bytes: 0,
+            new_chunk: false,
+            los_bytes: 4096 + 32,
+        });
+        assert_eq!(m.los_allocs, 2);
+        assert_eq!(m.los_reuses, 1);
+        assert_eq!(m.los_live_bytes, 4096 + 32);
+        assert_eq!(m.los_free_bytes, 0);
+    }
+
+    #[test]
+    fn los_and_evacuation_fields_classified() {
+        // merge adds everything; merge_counters adds the counters but
+        // skips the storage gauges; delta subtracts counters and carries
+        // the gauges.
+        let src = HeapMetrics {
+            los_allocs: 6,
+            los_frees: 4,
+            los_reuses: 2,
+            los_live_bytes: 8192,
+            los_free_bytes: 4096,
+            los_decommitted_bytes: 2048,
+            evacuated_objects: 10,
+            evacuated_bytes: 640,
+            evacuated_chunks: 1,
+            ..Default::default()
+        };
+        let mut a = HeapMetrics::default();
+        a.merge(&src);
+        assert_eq!(a.los_allocs, 6);
+        assert_eq!(a.los_frees, 4);
+        assert_eq!(a.los_reuses, 2);
+        assert_eq!(a.los_live_bytes, 8192);
+        assert_eq!(a.los_free_bytes, 4096);
+        assert_eq!(a.los_decommitted_bytes, 2048);
+        assert_eq!(a.evacuated_objects, 10);
+        assert_eq!(a.evacuated_bytes, 640);
+        assert_eq!(a.evacuated_chunks, 1);
+        let mut b = HeapMetrics::default();
+        b.merge_counters(&src);
+        assert_eq!(b.los_allocs, 6);
+        assert_eq!(b.los_frees, 4);
+        assert_eq!(b.los_reuses, 2);
+        assert_eq!(b.los_live_bytes, 0, "LOS gauges die with the scratch");
+        assert_eq!(b.los_free_bytes, 0, "LOS gauges die with the scratch");
+        assert_eq!(b.los_decommitted_bytes, 2048);
+        assert_eq!(b.evacuated_objects, 10);
+        let scope = MetricsScope::open(&src);
+        let mut later = src;
+        later.los_allocs += 3;
+        later.evacuated_objects += 5;
+        later.los_live_bytes = 16384;
+        let d = scope.close(&later);
+        assert_eq!(d.los_allocs, 3);
+        assert_eq!(d.evacuated_objects, 5);
+        assert_eq!(d.los_live_bytes, 16384, "gauges carry current values");
+        assert_eq!(d.los_free_bytes, 4096, "gauges carry current values");
     }
 
     #[test]

@@ -47,7 +47,8 @@ pub use memo::MemoTable;
 pub use metrics::{HeapMetrics, MetricsScope};
 pub use payload::{EdgeSlot, Payload};
 pub use shard::{
-    aggregate_metrics, sample_global_peak, shard_of, shard_ranges, trim_shards, ShardedHeap,
+    aggregate_metrics, evacuate_shards, sample_global_peak, shard_of, shard_ranges, trim_shards,
+    ShardedHeap,
 };
 
 use self::alloc::{AllocReceipt, FreeReceipt, RawCtx, SlabVec};
@@ -247,12 +248,15 @@ impl Heap {
         self.metrics = HeapMetrics {
             live_labels: 1,
             // Retained storage carries over; everything else starts over.
-            // (`slab_raw_bytes` too: the label vector's backing store —
-            // exact-layout in a scratch heap — survives the recycle.)
+            // (The LOS gauges too: scratch metadata — the label vector's
+            // backing store and any retained free blocks — lives in the
+            // LOS precisely so it survives the bump rewind.)
             slab_chunks: self.metrics.slab_chunks,
             slab_committed_bytes: self.metrics.slab_committed_bytes,
             slab_committed_peak_bytes: self.metrics.slab_committed_peak_bytes,
             slab_raw_bytes: self.metrics.slab_raw_bytes,
+            los_live_bytes: self.metrics.los_live_bytes,
+            los_free_bytes: self.metrics.los_free_bytes,
             ..HeapMetrics::default()
         };
     }
@@ -267,12 +271,19 @@ impl Heap {
     /// backend.
     pub fn trim(&mut self, keep: usize) {
         let stats = self.alloc.trim(keep);
+        let m = &mut self.metrics;
         if stats.chunks > 0 {
-            let m = &mut self.metrics;
             m.slab_chunks -= stats.chunks;
             m.slab_committed_bytes -= stats.bytes;
             m.decommitted_chunks += stats.chunks;
             m.decommitted_bytes += stats.bytes;
+        }
+        if stats.los_bytes > 0 {
+            // LOS blocks are not chunks: account them separately so the
+            // chunk-granularity invariant
+            // `decommitted_bytes == decommitted_chunks * CHUNK_BYTES` holds.
+            m.los_free_bytes -= stats.los_bytes;
+            m.los_decommitted_bytes += stats.los_bytes;
         }
     }
 
@@ -321,11 +332,13 @@ impl Heap {
         if all > m.slab_block_peak_bytes {
             m.slab_block_peak_bytes = all;
         }
+        m.note_los_alloc(&r);
     }
 
     #[inline]
     fn note_free(&mut self, r: FreeReceipt) {
         self.metrics.slab_live_block_bytes -= r.block_bytes;
+        self.metrics.note_los_free(&r);
     }
 
     /// Current context label (top of the context stack, Def. 4).
@@ -1916,6 +1929,74 @@ impl Heap {
                 l.shared, expect
             );
         }
+    }
+
+    /// Cross-check every per-chunk liveness counter of the payload
+    /// allocator against a ground-truth recount (free-list walks, avail
+    /// membership, `live + free == bumped` per chunk — see
+    /// [`SlabAlloc::validate_counters`]). Panics on the first drift.
+    /// O(blocks); used by the differential suite's post-run sweep and the
+    /// fuzz battery, never on a hot path.
+    pub fn validate_storage(&self) {
+        self.alloc.validate_counters();
+    }
+
+    /// The payload allocator (tests: chunk-liveness snapshots).
+    pub fn allocator(&self) -> &SlabAlloc {
+        &self.alloc
+    }
+
+    /// Opportunistic evacuation pass — Immix-style defragmentation at a
+    /// generation barrier (opt-in via `--evacuate-threshold`). Chunks
+    /// whose live payload bytes are at or below `threshold × CHUNK_BYTES`
+    /// (and which hold no raw metadata blocks and are not the bump chunk)
+    /// are victims: every surviving payload is placement-moved
+    /// ([`Payload::relocate`]) into same-class bump/free space, its
+    /// slot's `PBox` re-pointed in place, and the emptied chunks are
+    /// decommitted. `Lazy` handles and memo entries address objects by
+    /// slot index, not by address, so no handle or memo repointing is
+    /// needed and outputs are bit-identical with evacuation on or off —
+    /// only the `evacuated_*` metrics and committed-space gauges move.
+    /// Returns the number of payloads relocated.
+    pub fn evacuate(&mut self, threshold: f64) -> usize {
+        if !self.alloc.begin_evacuation(threshold) {
+            return 0;
+        }
+        let mut objects = 0usize;
+        let mut bytes = 0usize;
+        let mut new_chunks = 0usize;
+        {
+            let Heap { slots, alloc, .. } = self;
+            for s in slots.iter_mut() {
+                if let Some(pb) = s.payload.as_mut() {
+                    if let Some(mv) = alloc.evacuate_block(pb) {
+                        objects += 1;
+                        bytes += mv.bytes;
+                        new_chunks += usize::from(mv.new_chunk);
+                    }
+                }
+            }
+        }
+        let freed = self.alloc.finish_evacuation();
+        let m = &mut self.metrics;
+        // Destination chunks committed during the walk coexisted with the
+        // still-committed victims, so fold them in (and take the peak)
+        // before subtracting the decommits. Evacuation moves blocks, it
+        // does not allocate or free payloads: the payload alloc/free
+        // counters and `decommitted_*` (reserved for `trim`) stay put.
+        if new_chunks > 0 {
+            m.slab_chunks += new_chunks;
+            m.slab_committed_bytes += new_chunks * CHUNK_BYTES;
+            if m.slab_committed_bytes > m.slab_committed_peak_bytes {
+                m.slab_committed_peak_bytes = m.slab_committed_bytes;
+            }
+        }
+        m.slab_chunks -= freed.chunks;
+        m.slab_committed_bytes -= freed.bytes;
+        m.evacuated_objects += objects;
+        m.evacuated_bytes += bytes;
+        m.evacuated_chunks += freed.chunks;
+        objects
     }
 }
 

@@ -62,6 +62,18 @@ pub trait Payload: Any + Send {
     /// that layout's alignment.
     unsafe fn move_into(self: Box<Self>, dst: *mut u8) -> *mut dyn Payload;
 
+    /// Placement-relocate: bitwise-copy `self` into `dst` and return the
+    /// fat pointer to the copy — the evacuation move. Unlike
+    /// [`Payload::move_into`], the source storage is not freed here (the
+    /// allocator decommits the whole evacuated chunk afterwards).
+    ///
+    /// # Safety
+    /// `dst` must be valid for writes of [`Payload::layout`] bytes at
+    /// that layout's alignment and must not overlap `self`. The copy is a
+    /// *move*: the caller must treat the source as moved-out afterwards —
+    /// never read it, drop it, or run its destructor again.
+    unsafe fn relocate(&self, dst: *mut u8) -> *mut dyn Payload;
+
     /// Upcast for typed reads ([`Heap::read`](super::Heap::read)).
     fn as_any(&self) -> &dyn Any;
     /// Upcast for typed mutation ([`Heap::mutate`](super::Heap::mutate)).
@@ -130,6 +142,19 @@ macro_rules! lazy_fields {
                             std::alloc::Layout::new::<$ty>(),
                         );
                     }
+                }
+                dst as *mut $ty as *mut dyn $crate::heap::Payload
+            }
+            unsafe fn relocate(&self, dst: *mut u8) -> *mut dyn $crate::heap::Payload {
+                // SAFETY: caller provides `layout()`-sized, -aligned,
+                // non-overlapping storage and treats the source as
+                // moved-out (no destructor runs on it).
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        self as *const $ty as *const u8,
+                        dst,
+                        std::mem::size_of::<$ty>(),
+                    );
                 }
                 dst as *mut $ty as *mut dyn $crate::heap::Payload
             }

@@ -73,6 +73,17 @@ pub fn trim_shards(shards: &mut [Heap], keep: usize) {
     }
 }
 
+/// Evacuation pass over a shard slice (see [`Heap::evacuate`]): per
+/// shard, placement-move the survivors of sparse chunks into same-class
+/// bump space and decommit the emptied chunks. The SMC engine calls this
+/// at generation barriers (before the trim pass, so evacuation-emptied
+/// chunks never linger) when `RunConfig::evacuate_threshold` is set;
+/// outputs are bit-identical whether it runs or not. Returns the total
+/// number of payloads relocated.
+pub fn evacuate_shards(shards: &mut [Heap], threshold: f64) -> usize {
+    shards.iter_mut().map(|h| h.evacuate(threshold)).sum()
+}
+
 /// Barrier sample for the exact global peak: sum the *current* footprint
 /// of every shard at this instant and fold the sum into the running
 /// `global_peak_bytes` (recorded on shard 0; [`HeapMetrics::merge`]
@@ -190,6 +201,12 @@ impl ShardedHeap {
     /// points to bound committed residency.
     pub fn trim_all(&mut self, keep: usize) {
         trim_shards(&mut self.shards, keep);
+    }
+
+    /// Evacuation pass over every shard (see [`Heap::evacuate`]).
+    /// Returns the total number of payloads relocated.
+    pub fn evacuate_all(&mut self, threshold: f64) -> usize {
+        evacuate_shards(&mut self.shards, threshold)
     }
 }
 

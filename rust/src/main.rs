@@ -85,6 +85,12 @@ fn cli() -> Cli {
          barriers (integer, or off to disable; default 2; output identical either way)",
     )
     .flag(
+        "evacuate-threshold",
+        "",
+        "evacuate slab chunks whose live fraction is at or below this value at generation \
+         barriers (fraction in [0,1], or off; default off; output identical either way)",
+    )
+    .flag(
         "input",
         "",
         "serve: observation/command file replayed through the line protocol (default: stdin)",
@@ -180,6 +186,11 @@ fn build_config(args: &lazycow::cli::Args) -> Result<RunConfig, String> {
     if let Some(w) = args.get("decommit-watermark") {
         if !w.is_empty() {
             cfg.apply("decommit-watermark", w)?;
+        }
+    }
+    if let Some(e) = args.get("evacuate-threshold") {
+        if !e.is_empty() {
+            cfg.apply("evacuate-threshold", e)?;
         }
     }
     if let Some(b) = args.get("batch") {
@@ -296,6 +307,16 @@ fn cmd_run(args: &lazycow::cli::Args) -> Result<(), String> {
             m.decommitted_chunks,
             cfg.decommit_watermark
                 .map(|w| w.to_string())
+                .unwrap_or_else(|| "off".to_string()),
+        );
+        println!(
+            "slab: los_live={} los_free={} evacuated={} objects ({} chunks, threshold {})",
+            human_bytes(m.los_live_bytes as f64),
+            human_bytes(m.los_free_bytes as f64),
+            m.evacuated_objects,
+            m.evacuated_chunks,
+            cfg.evacuate_threshold
+                .map(|t| format!("{t}"))
                 .unwrap_or_else(|| "off".to_string()),
         );
     }

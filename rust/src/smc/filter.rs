@@ -1763,6 +1763,10 @@ pub fn run_particle_gibbs_shards<M: SmcModel + Sync>(
     for h in shards.iter_mut() {
         h.sweep_memos();
     }
+    // No evacuation here: the populations are released, so there are no
+    // survivors to relocate — trim alone reclaims the emptied chunks.
+    // (Per-generation evacuation runs inside the session's barrier when
+    // `evacuate_threshold` is set.)
     if let Some(keep) = cfg.decommit_watermark {
         trim_shards(shards, keep);
     }

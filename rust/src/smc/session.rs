@@ -54,7 +54,8 @@ use super::rebalance::{CostTracker, RebalancePolicy};
 use super::resample::Resampler;
 use crate::config::{RunConfig, Task};
 use crate::heap::{
-    aggregate_metrics, sample_global_peak, shard_of, trim_shards, Heap, HeapMetrics, Lazy, Payload,
+    aggregate_metrics, evacuate_shards, sample_global_peak, shard_of, trim_shards, Heap,
+    HeapMetrics, Lazy, Payload,
 };
 use crate::stats::weight_stats;
 use crate::telemetry::trace::{Phase, PhaseWalls, TraceLog};
@@ -615,6 +616,16 @@ impl<S: Payload> FilterSession<S> {
         let (_, snap_ess) = weight_stats(&self.lw, &mut self.w);
         self.phase_walls.add(Phase::Weight, t_w.elapsed().as_secs_f64());
         self.series.push(step_snapshot(shards, t, &self.start, snap_ess));
+        // Evacuation barrier: with a threshold configured, placement-move
+        // the survivors of sparse chunks into same-class bump space and
+        // decommit the emptied chunks. Runs before the trim pass so
+        // evacuation-emptied chunks never linger; handles are index-based
+        // so output is bit-identical either way.
+        if let Some(threshold) = self.cfg.evacuate_threshold {
+            let t_evac = Instant::now();
+            evacuate_shards(shards, threshold);
+            self.phase_walls.add(Phase::Evacuate, t_evac.elapsed().as_secs_f64());
+        }
         // Decommit barrier: with a watermark configured, return
         // fully-empty slab chunks past it to the system allocator so
         // long-running (server) populations stay residency-bounded.
@@ -692,6 +703,14 @@ impl<S: Payload> FilterSession<S> {
         tele.inc(
             telemetry::HEAP_DECOMMITTED_BYTES_TOTAL,
             agg.decommitted_bytes.saturating_sub(base.decommitted_bytes) as u64,
+        );
+        tele.inc(
+            telemetry::HEAP_EVACUATIONS_TOTAL,
+            agg.evacuated_objects.saturating_sub(base.evacuated_objects) as u64,
+        );
+        tele.set_gauge(
+            telemetry::HEAP_LOS_BYTES,
+            (agg.los_live_bytes + agg.los_free_bytes) as f64,
         );
         tele.observe(
             telemetry::STEP_WALL_SECONDS,
@@ -828,7 +847,8 @@ impl<S: Payload> FilterSession<S> {
 
         self.release_population(shards);
         // Final decommit: the population is gone, so everything beyond
-        // the watermark is returnable.
+        // the watermark is returnable. (No evacuation here — with no
+        // survivors there is nothing to relocate; trim alone reclaims.)
         if let Some(keep) = self.cfg.decommit_watermark {
             trim_shards(shards, keep);
         }
@@ -909,6 +929,8 @@ impl<S: Payload> FilterSession<S> {
     /// abandoned what-if forks.
     pub fn abandon(mut self, shards: &mut [Heap]) {
         self.release_population(shards);
+        // No evacuation: the abandoned population left no survivors to
+        // relocate; the trim pass reclaims its emptied chunks.
         if let Some(keep) = self.cfg.decommit_watermark {
             trim_shards(shards, keep);
         }

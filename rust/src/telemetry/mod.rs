@@ -98,6 +98,14 @@ pub const HEAP_DECOMMITTED_CHUNKS_TOTAL: &str = "heap_decommitted_chunks_total";
 /// Slab bytes returned to the OS at decommit barriers (counter).
 pub const HEAP_DECOMMITTED_BYTES_TOTAL: &str = "heap_decommitted_bytes_total";
 
+/// Payloads relocated by evacuation barriers (`--evacuate-threshold`)
+/// across the session's shards (counter).
+pub const HEAP_EVACUATIONS_TOTAL: &str = "heap_evacuations_total";
+
+/// Large-object-space bytes resident (live + free-listed, headers
+/// included) across the session's shards (gauge).
+pub const HEAP_LOS_BYTES: &str = "heap_los_bytes";
+
 /// Live heap payload bytes across the session's shards (gauge).
 pub const HEAP_LIVE_BYTES: &str = "heap_live_bytes";
 
@@ -156,6 +164,8 @@ pub fn help_for(name: &str) -> &'static str {
         "heap_fragmentation_ratio" => "1 - live/committed-peak slab bytes.",
         "heap_decommitted_chunks_total" => "Empty slab chunks returned to the OS.",
         "heap_decommitted_bytes_total" => "Slab bytes returned to the OS.",
+        "heap_evacuations_total" => "Payloads relocated by evacuation barriers.",
+        "heap_los_bytes" => "Large-object-space bytes resident (live + free).",
         "heap_live_bytes" => "Live heap payload bytes.",
         "heap_live_objects" => "Live heap objects.",
         "ess_last" => "Effective sample size after the latest generation.",

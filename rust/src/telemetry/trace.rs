@@ -53,13 +53,16 @@ pub enum Phase {
     /// Reclaiming scratch heaps at the barrier: transplant-back + counter
     /// absorption + scratch recycle (per home shard).
     ScratchReclaim,
+    /// Opportunistic evacuation of sparse slab chunks
+    /// (`--evacuate-threshold`).
+    Evacuate,
     /// Slab decommit barrier (`--decommit-watermark`).
     Trim,
 }
 
 impl Phase {
     /// Every phase, in pipeline order.
-    pub const ALL: [Phase; 8] = [
+    pub const ALL: [Phase; 9] = [
         Phase::Propagate,
         Phase::Weight,
         Phase::Resample,
@@ -67,6 +70,7 @@ impl Phase {
         Phase::Transplant,
         Phase::StealDonate,
         Phase::ScratchReclaim,
+        Phase::Evacuate,
         Phase::Trim,
     ];
 
@@ -81,6 +85,7 @@ impl Phase {
             Phase::Transplant => "transplant",
             Phase::StealDonate => "steal-donate",
             Phase::ScratchReclaim => "scratch-reclaim",
+            Phase::Evacuate => "evacuate",
             Phase::Trim => "trim",
         }
     }

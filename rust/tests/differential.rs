@@ -5,8 +5,11 @@
 //! copy mode, plus the payload-allocator axis (`system` vs the default
 //! `slab`), the decommit axis (watermark off / 0 / the default keep-2),
 //! the batched-numerics axis (`--batch off`, forcing the scalar
-//! per-particle reference path), and the tracing axis (`--trace` on vs
-//! off — spans are pure measurement and may never reach the output) —
+//! per-particle reference path), the evacuation axis
+//! (`--evacuate-threshold` 0 / 0.5 — opportunistic defrag relocates
+//! storage and may never change one output bit), and the tracing axis
+//! (`--trace` on vs off — spans are pure measurement and may never
+//! reach the output) —
 //! against the K = 1 / steal-off / policy-off oracle and
 //! demands *bitwise* equality of `log_evidence` and `posterior_mean`
 //! (plus equal attempt counts, zero leaks, per-shard alloc/free balance,
@@ -122,6 +125,37 @@ fn run_cell<M: SmcModel + Sync>(
                 "{label}: shard {s} decommit byte/chunk accounting disagrees"
             ),
         }
+        // Large-object-space balance: reuses and frees can never outrun
+        // allocations, and a fully-freed LOS carries no live bytes.
+        assert!(
+            m.los_reuses <= m.los_allocs,
+            "{label}: shard {s} LOS reuses outnumber allocs"
+        );
+        assert!(
+            m.los_frees <= m.los_allocs,
+            "{label}: shard {s} LOS frees outnumber allocs"
+        );
+        if m.los_allocs == m.los_frees {
+            assert_eq!(
+                m.los_live_bytes, 0,
+                "{label}: shard {s} LOS live-byte gauge drift at balance"
+            );
+        }
+        match cfg.evacuate_threshold {
+            None => assert_eq!(
+                m.evacuated_objects + m.evacuated_chunks,
+                0,
+                "{label}: shard {s} evacuated with the barrier off"
+            ),
+            Some(_) => assert!(
+                m.evacuated_bytes >= m.evacuated_objects * 16,
+                "{label}: shard {s} evacuated objects without block bytes"
+            ),
+        }
+        // And the allocator's own invariant sweep — per-chunk liveness
+        // recounts, free-list integrity, avail-stack membership — in
+        // every cell, not just the dedicated heap tests.
+        h.validate_storage();
     }
     assert!(
         r.global_peak_bytes <= r.peak_bytes,
@@ -271,6 +305,31 @@ fn assert_bitwise_equiv<M: SmcModel + Sync>(
                     let label = format!("{name}/{mode:?}/decommit={wm_name}/K={k}");
                     let got = run_cell(model, &cfg, method, &pool, k, &label);
                     assert_eq!(got, oracle, "{label}: decommit changed the output");
+                }
+            }
+            // Evacuation axis: the matrix above runs with the barrier
+            // off (the default); threshold 0 (arms the barrier but never
+            // selects a victim) and 0.5 (placement-moves every sparse
+            // chunk's survivors at every generation) relocate payload
+            // storage mid-run and must still reproduce the no-evacuation
+            // oracle bit for bit — relocation may never change one bit
+            // of output.
+            for evac in [0.0f64, 0.5] {
+                for k in [1usize, 4] {
+                    for steal in [false, true] {
+                        let mut cfg = base_cfg.clone();
+                        cfg.mode = mode;
+                        cfg.evacuate_threshold = Some(evac);
+                        cfg.rebalance = RebalancePolicy::Greedy;
+                        cfg.steal = steal;
+                        cfg.steal_min = 2;
+                        let label = format!(
+                            "{name}/{mode:?}/evacuate={evac}/K={k}/steal={}",
+                            if steal { "on" } else { "off" }
+                        );
+                        let got = run_cell(model, &cfg, method, &pool, k, &label);
+                        assert_eq!(got, oracle, "{label}: evacuation changed the output");
+                    }
                 }
             }
         }
@@ -507,7 +566,7 @@ fn session_fork_diverges_independently() {
 
 /// Every stable phase name the tracer can emit (the `trace::Phase`
 /// contract, mirrored here so a rename breaks a test).
-const TRACE_PHASES: [&str; 8] = [
+const TRACE_PHASES: [&str; 9] = [
     "propagate",
     "weight",
     "resample",
@@ -515,6 +574,7 @@ const TRACE_PHASES: [&str; 8] = [
     "transplant",
     "steal-donate",
     "scratch-reclaim",
+    "evacuate",
     "trim",
 ];
 
